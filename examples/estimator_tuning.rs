@@ -1,0 +1,85 @@
+//! Algorithm-1 tuning console: sweep (α, ξ) and see the γ each pair
+//! demands, its abandon rate, and the *measured* gradient error coverage
+//! on a real problem — how an operator would pick the accuracy/speed
+//! trade-off before a production run.
+//!
+//!     cargo run --release --example estimator_tuning
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::coordinator::estimator::{estimate_gamma, estimate_sample_size, EstimatorParams};
+use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::math::vec_ops;
+use hybriditer::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    hybriditer::util::logger::init();
+    let spec = KrrProblemSpec::default_config().with_machines(32);
+    let problem = KrrProblem::generate(&spec)?;
+    let (n, zeta, m) = (spec.total_examples(), spec.zeta, spec.machines);
+    println!("N = {n} examples, zeta = {zeta}, M = {m}\n");
+
+    let mut pool = problem.native_pool();
+
+    // Full gradient at a random-but-fixed θ for measuring relative error.
+    let mut rng = Pcg64::seeded(7);
+    let mut theta = vec![0.0f32; problem.dim()];
+    rng.fill_normal(&mut theta, 0.0, 1.0);
+    let mut full = vec![0.0f32; problem.dim()];
+    let mut grads = Vec::new();
+    for w in 0..m {
+        let g = pool.grad(w, &theta, 0)?.grad;
+        vec_ops::add_assign(&mut full, &g);
+        grads.push(g);
+    }
+    vec_ops::scale(&mut full, 1.0 / m as f32);
+    let full_norm = vec_ops::norm2(&full);
+
+    let mut table = Table::new(
+        "Algorithm 1 sweep: gamma / abandon rate / measured coverage",
+        &["alpha", "xi", "n_examples", "gamma", "abandon_%", "mean_rel_err", "coverage_%"],
+    );
+
+    for &alpha in &[0.01, 0.05, 0.10] {
+        for &xi in &[0.01, 0.05, 0.10, 0.25] {
+            let p = EstimatorParams { alpha, xi };
+            let n_est = estimate_sample_size(n, p)?;
+            let gamma = estimate_gamma(n, zeta, m, p)?;
+
+            // Measure: random γ-subsets of workers, relative gradient error.
+            let trials = 300;
+            let mut hits = 0;
+            let mut rel_sum = 0.0;
+            let mut sub = vec![0.0f32; problem.dim()];
+            for _ in 0..trials {
+                let idx = rng.sample_indices(m, gamma);
+                sub.fill(0.0);
+                for &w in &idx {
+                    vec_ops::add_assign(&mut sub, &grads[w]);
+                }
+                vec_ops::scale(&mut sub, 1.0 / gamma as f32);
+                let rel = vec_ops::dist2(&sub, &full) / full_norm;
+                rel_sum += rel;
+                if rel <= xi {
+                    hits += 1;
+                }
+            }
+            table.row(vec![
+                f(alpha, 2),
+                f(xi, 2),
+                f(n_est, 0),
+                format!("{gamma}"),
+                f(100.0 * (1.0 - gamma as f64 / m as f64), 1),
+                format!("{:.4}", rel_sum / trials as f64),
+                f(100.0 * hits as f64 / trials as f64, 1),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("example_estimator_tuning")?;
+    println!(
+        "\nReading: the distribution-free bound (Algorithm 1) is conservative —\n\
+         measured coverage should sit at or above the requested confidence\n\
+         (1-alpha) whenever gamma isn't clamped at 1."
+    );
+    Ok(())
+}

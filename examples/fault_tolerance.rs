@@ -1,0 +1,95 @@
+//! Fault-tolerance demo (the abstract's "high fault tolerance"): kill
+//! workers mid-training and watch each barrier policy cope.
+//!
+//! * BSP without recovery → stalls the moment a node dies;
+//! * BSP with Hadoop-style retry → survives but pays detect+recompute;
+//! * HYBRID γ-of-M → doesn't even flinch until fewer than γ nodes remain.
+//!
+//!     cargo run --release --example fault_tolerance
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{BspRecovery, LossForm, RunConfig, RunStatus, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim;
+use hybriditer::straggler::FailureModel;
+
+fn main() -> anyhow::Result<()> {
+    hybriditer::util::logger::init();
+    let m = 12;
+    let spec = KrrProblemSpec::small().with_machines(m);
+    let problem = KrrProblem::generate(&spec)?;
+
+    // A third of the cluster is flaky: each flaky node has 2%/iteration
+    // crash probability (no rejoin) plus 5% transient message loss.
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.01,
+        failure: FailureModel {
+            crash_prob: 0.02,
+            transient_prob: 0.05,
+            rejoin_after: None,
+        },
+        failure_only: (m - m / 3..m).collect(),
+        seed: 2024,
+        ..ClusterSpec::default()
+    };
+    let base = |mode, recovery| RunConfig {
+        mode,
+        optimizer: OptimizerKind::sgd(1.0),
+        loss_form: LossForm::krr(spec.lambda),
+        bsp_recovery: recovery,
+        eval_every: 50,
+        ..RunConfig::default()
+    }
+    .with_iters(400);
+
+    let mut table = Table::new(
+        format!("fault tolerance: {m}-node cluster, {} flaky nodes", m / 3),
+        &["policy", "status", "iters_done", "virt_secs", "theta_err", "crashes"],
+    );
+
+    let runs = vec![
+        ("bsp (no recovery)", base(SyncMode::Bsp, BspRecovery::Stall)),
+        (
+            "bsp (detect+retry)",
+            base(SyncMode::Bsp, BspRecovery::Retry { detect_timeout: 0.05 }),
+        ),
+        (
+            "hybrid gamma=6",
+            base(SyncMode::Hybrid { gamma: 6 }, BspRecovery::Stall),
+        ),
+    ];
+
+    for (name, cfg) in runs {
+        let mut pool = problem.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &problem)?;
+        let status = match &rep.status {
+            RunStatus::Completed => "completed".to_string(),
+            RunStatus::Converged { iter, .. } => format!("converged@{iter}"),
+            RunStatus::Stalled { iter } => format!("STALLED@{iter}"),
+            RunStatus::ClusterDead { iter } => format!("DEAD@{iter}"),
+        };
+        println!("{}", rep.summary());
+        table.row(vec![
+            name.to_string(),
+            status,
+            rep.recorder.len().to_string(),
+            f(rep.total_time(), 2),
+            rep.final_theta_err()
+                .map(|e| format!("{e:.3e}"))
+                .unwrap_or_else(|| "-".into()),
+            rep.crashes.to_string(),
+        ]);
+    }
+    table.print();
+    table.save_csv("example_fault_tolerance")?;
+    println!(
+        "\nReading: BSP without a recovery protocol stalls at the first crash;\n\
+         BSP-with-retry survives but pays a detection+recompute penalty each\n\
+         failed iteration; the hybrid barrier simply keeps iterating on the\n\
+         fastest gamma nodes (the paper's fault-tolerance claim)."
+    );
+    Ok(())
+}

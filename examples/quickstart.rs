@@ -1,0 +1,98 @@
+//! Quickstart: train kernel ridge regression with the hybrid barrier.
+//!
+//! Generates a synthetic KRR problem (the paper's eq. 2 workload), runs the
+//! Algorithm-1 estimator to pick γ, and trains with the first-γ-of-M hybrid
+//! master through the AOT pallas-kernel artifacts (falling back to the
+//! pure-rust mirror if artifacts are missing).
+//!
+//!     cargo run --release --example quickstart
+
+use hybriditer::coordinator::estimator::{estimate_gamma, EstimatorParams};
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::metrics::csv;
+use hybriditer::optim::OptimizerKind;
+use hybriditer::runtime::{ArtifactSet, Engine};
+use hybriditer::sim;
+use hybriditer::straggler::DelayModel;
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::worker::compute::XlaKrrPool;
+
+fn main() -> anyhow::Result<()> {
+    hybriditer::util::logger::init();
+
+    // 1. The problem: N = M·ζ examples of kernel-feature regression.
+    let spec = KrrProblemSpec::default_config().with_machines(16);
+    println!(
+        "problem: N={} examples on M={} machines (zeta={}), l={} features",
+        spec.total_examples(),
+        spec.machines,
+        spec.zeta,
+        spec.l
+    );
+    let problem = KrrProblem::generate(&spec)?;
+
+    // 2. Algorithm 1: how many slaves must the master wait for?
+    let params = EstimatorParams { alpha: 0.05, xi: 0.05 };
+    let gamma = estimate_gamma(spec.total_examples(), spec.zeta, spec.machines, params)?;
+    println!(
+        "Algorithm 1: confidence {:.0}%, relative error {:.0}% -> gamma = {gamma} of {}",
+        (1.0 - params.alpha) * 100.0,
+        params.xi * 100.0,
+        spec.machines
+    );
+    // The distribution-free bound is loose; γ floor of M/2 keeps the demo
+    // gradient honest while still abandoning half the cluster.
+    let gamma = gamma.max(spec.machines / 2);
+
+    // 3. A straggler-ridden cluster.
+    let cluster = ClusterSpec {
+        workers: spec.machines,
+        base_compute: 0.010,
+        delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
+        ..ClusterSpec::default()
+    }
+    .with_slow_tail(2, 8.0);
+
+    // 4. Train with the hybrid barrier.
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma },
+        optimizer: OptimizerKind::sgd(1.0),
+        loss_form: LossForm::krr(spec.lambda),
+        eval_every: 20,
+        ..RunConfig::default()
+    }
+    .with_iters(300);
+
+    let report = match ArtifactSet::discover() {
+        Ok(artifacts) => {
+            println!("backend: XLA (AOT pallas kernel artifacts)");
+            let engine = Engine::cpu()?;
+            let mut pool = XlaKrrPool::new(
+                &artifacts,
+                &engine,
+                &spec.config,
+                &problem.shards,
+                spec.lambda as f32,
+            )?;
+            sim::run_virtual(&mut pool, &cluster, &cfg, &problem)?
+        }
+        Err(e) => {
+            println!("backend: native rust mirror ({e})");
+            let mut pool = problem.native_pool();
+            sim::run_virtual(&mut pool, &cluster, &cfg, &problem)?
+        }
+    };
+
+    // 5. Report.
+    println!("\n{}", report.summary());
+    println!(
+        "exact optimum reference: loss* = {:.6}, final ‖theta−theta*‖ = {:.4e}",
+        problem.loss_star,
+        problem.theta_err(&report.theta)
+    );
+    let path = std::path::Path::new("results/quickstart_loss_curve.csv");
+    csv::write_recorder(&report.recorder, path)?;
+    println!("loss curve -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile package: L1 pallas kernels + L2 jax models + AOT."""

@@ -1,0 +1,170 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest.json.
+
+This is the ONLY place python touches the artifacts the rust runtime
+consumes; it runs once per `make artifacts` and never on the training path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).  Lowering goes stablehlo -> XlaComputation with
+``return_tuple=True``; the rust side unwraps the result tuple.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--lm-medium]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+from .shapes import DEFAULT_KRR, DEFAULT_LM, KRR_CONFIGS, LM_CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+class Builder:
+    """Collects lowered artifacts + their manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, arg_specs, meta: dict | None = None):
+        """Lower ``fn`` at ``arg_specs`` and record inputs/outputs."""
+        specs = [s for _, s in arg_specs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+
+        out_shapes = jax.eval_shape(fn, *specs)
+        outputs = [
+            {"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+            for s in jax.tree_util.tree_leaves(out_shapes)
+        ]
+        self.entries[name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                for n, s in arg_specs
+            ],
+            "outputs": outputs,
+            "meta": meta or {},
+        }
+        print(f"  {name:40s} {len(text):>9d} chars  "
+              f"{len(arg_specs)} in / {len(outputs)} out")
+
+    def finish(self):
+        manifest = {
+            "format_version": 1,
+            "jax_version": jax.__version__,
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_krr(b: Builder, names) -> None:
+    for cname in names:
+        c = KRR_CONFIGS[cname]
+        l, zeta, d = c.l, c.zeta, c.d
+        meta = {"config": cname, "d": d, "l": l, "zeta": zeta}
+        sfx = f"_{cname}"
+
+        b.add(f"krr_worker_grad{sfx}", model.worker_grad,
+              [("theta", f32(l)), ("phi", f32(zeta, l)), ("y", f32(zeta)),
+               ("lam", f32())], meta)
+        b.add(f"krr_worker_grad_ref{sfx}", model.worker_grad_ref,
+              [("theta", f32(l)), ("phi", f32(zeta, l)), ("y", f32(zeta)),
+               ("lam", f32())], meta)
+        b.add(f"krr_worker_grad_loss{sfx}", model.worker_grad_loss,
+              [("theta", f32(l)), ("phi", f32(zeta, l)), ("y", f32(zeta)),
+               ("lam", f32())], meta)
+        b.add(f"krr_full_loss{sfx}", model.full_loss,
+              [("theta", f32(l)), ("phi", f32(zeta, l)), ("y", f32(zeta)),
+               ("lam", f32())], meta)
+        b.add(f"krr_predict{sfx}", model.predict,
+              [("theta", f32(l)), ("phi", f32(zeta, l))], meta)
+        b.add(f"rbf_features{sfx}", model.features,
+              [("x", f32(zeta, d)), ("w", f32(d, l)), ("b", f32(l))], meta)
+        b.add(f"master_update_sgd{sfx}", model.master_update_sgd,
+              [("theta", f32(l)), ("gsum", f32(l)),
+               ("eta_over_gamma", f32())], meta)
+        b.add(f"master_update_momentum{sfx}", model.master_update_momentum,
+              [("theta", f32(l)), ("vel", f32(l)), ("gbar", f32(l)),
+               ("eta", f32()), ("mu", f32())], meta)
+        b.add(f"master_update_adam{sfx}", model.master_update_adam,
+              [("theta", f32(l)), ("m", f32(l)), ("v", f32(l)),
+               ("gbar", f32(l)), ("eta", f32()), ("beta1", f32()),
+               ("beta2", f32()), ("eps", f32()), ("t", f32())], meta)
+
+
+def build_lm(b: Builder, names) -> None:
+    for cname in names:
+        c = LM_CONFIGS[cname]
+        specs = transformer.param_specs(c)
+        toks = jax.ShapeDtypeStruct((c.batch, c.seq + 1), jnp.int32)
+        args = [("tokens", toks)] + [
+            (n, jax.ShapeDtypeStruct(s, jnp.float32)) for n, s in specs
+        ]
+        meta = {
+            "config": cname, "vocab": c.vocab, "d_model": c.d_model,
+            "n_head": c.n_head, "n_layer": c.n_layer, "seq": c.seq,
+            "batch": c.batch, "d_ff": c.ff, "n_params": c.n_params(),
+            "param_names": [n for n, _ in specs],
+        }
+        b.add(f"lm_step_{cname}", transformer.lm_step(c), args, meta)
+        b.add(f"lm_loss_{cname}", transformer.lm_loss(c), args, meta)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with `--out <manifest-or-hlo path>`: derive the directory.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--lm-medium", action="store_true",
+                    help="also lower the ~19M-param LM (slow)")
+    args = ap.parse_args()
+    out_dir = args.out_dir if args.out is None else (os.path.dirname(args.out) or ".")
+
+    b = Builder(out_dir)
+    print("== KRR artifacts ==")
+    build_krr(b, DEFAULT_KRR)
+    print("== LM artifacts ==")
+    lm = list(DEFAULT_LM) + (["lm_medium"] if args.lm_medium else [])
+    build_lm(b, lm)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

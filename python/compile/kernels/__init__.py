@@ -1,0 +1,1 @@
+"""L1 pallas kernels (interpret=True) and their pure-jnp oracle (ref)."""

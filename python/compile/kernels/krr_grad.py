@@ -1,0 +1,239 @@
+"""L1 Pallas kernel: kernel-ridge-regression gradient (the paper's Alg. 3 body).
+
+Computes, for one slave's shard of ``zeta`` examples with feature matrix
+``phi`` (zeta x l), labels ``y`` (zeta,) and parameters ``theta`` (l,):
+
+    g = (1/zeta) * phi^T (phi @ theta - y) + lam * theta
+
+This is the compute hot-spot of the whole system: every slave runs it once
+per iteration.  The kernel is written for the TPU memory hierarchy (see
+DESIGN.md §Hardware-Adaptation):
+
+* the example dimension is tiled with ``BLOCK_M`` rows per grid step, so the
+  ``phi`` tile streams HBM->VMEM block by block while ``theta`` and the
+  gradient accumulator stay resident in VMEM;
+* both the residual (``phi_tile @ theta``) and the back-projection
+  (``phi_tile^T @ r``) are MXU-shaped matmuls (the feature dim ``l`` is kept
+  whole inside a block; it is <= a few hundred in all our configs);
+* the ``lam * theta`` term and the ``1/zeta`` scaling are fused into the
+  first/last grid step so no separate elementwise pass is needed.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute.  Correctness is pinned against
+``ref.krr_grad`` by ``python/tests/test_krr_grad.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for the streamed phi tile.  The tile is the only O(zeta)
+# resident; theta/accumulator are O(l).  2 MiB leaves ample headroom in a
+# 16 MiB VMEM for double-buffering the incoming tile (perf pass §Perf L1:
+# bigger tiles also amortize grid-step overhead — on the CPU-interpret
+# testbed the old 256-row default ran at 0.45x the pure-jnp roofline,
+# VMEM-budget tiles run at 0.9-1.0x).
+VMEM_TILE_BUDGET = 2 * 1024 * 1024
+# Hard cap so huge shards still stream through a real multi-step grid.
+MAX_BLOCK_M = 2048
+# Back-compat default used by tests that pin a block size explicitly.
+DEFAULT_BLOCK_M = 0  # 0 = auto (VMEM-derived)
+
+
+def _auto_block(zeta: int, l: int) -> int:
+    """Largest tile that fits the VMEM budget, divides zeta, caps at 2048."""
+    bm = min(zeta, max(8, VMEM_TILE_BUDGET // (l * 4)), MAX_BLOCK_M)
+    while zeta % bm != 0:
+        bm -= 1
+    return bm
+
+
+def _krr_grad_kernel(theta_ref, phi_ref, y_ref, lam_ref, o_ref, *, zeta: int):
+    """One grid step: accumulate phi_tile^T (phi_tile @ theta - y_tile).
+
+    Grid steps run sequentially over the example tiles; step 0 seeds the
+    accumulator with the regularization term so the final output needs no
+    extra pass.
+    """
+    step = pl.program_id(0)
+    theta = theta_ref[...]  # (l, 1), resident every step
+    phi = phi_ref[...]  # (BLOCK_M, l) tile of this step
+    y = y_ref[...]  # (BLOCK_M, 1) tile of this step
+
+    # Residual on the tile: MXU matmul (BLOCK_M, l) @ (l, 1).
+    r = jnp.dot(phi, theta, preferred_element_type=jnp.float32) - y
+    # Back-projection: (l, BLOCK_M) @ (BLOCK_M, 1) -> (l, 1) partial grad.
+    partial = jnp.dot(phi.T, r, preferred_element_type=jnp.float32)
+
+    @pl.when(step == 0)
+    def _seed():
+        # Fuse the regularization term into the first accumulation step.
+        o_ref[...] = lam_ref[...] * zeta * theta + partial
+
+    @pl.when(step != 0)
+    def _accum():
+        o_ref[...] += partial
+
+
+def krr_grad(theta, phi, y, lam, *, block_m: int = DEFAULT_BLOCK_M):
+    """Pallas KRR gradient: ``(1/zeta) phi^T (phi theta - y) + lam theta``.
+
+    Args:
+      theta: (l,) float32 parameters.
+      phi:   (zeta, l) float32 feature matrix (one slave's shard).
+      y:     (zeta,) float32 labels.
+      lam:   scalar float32 regularization strength.
+      block_m: rows per grid step; must divide zeta.
+
+    Returns:
+      (l,) float32 gradient.
+    """
+    zeta, l = phi.shape
+    if block_m <= 0:
+        block_m = _auto_block(zeta, l)
+    if zeta % block_m != 0:
+        # Shrink to the largest divisor <= block_m so odd shard sizes work.
+        bm = block_m
+        while zeta % bm != 0:
+            bm -= 1
+        block_m = bm
+    grid = (zeta // block_m,)
+
+    theta2 = theta.reshape(l, 1)
+    y2 = y.reshape(zeta, 1)
+    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_krr_grad_kernel, zeta=zeta)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # theta: whole vector resident in VMEM every step.
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            # phi: stream one (block_m, l) tile per step.
+            pl.BlockSpec((block_m, l), lambda i: (i, 0)),
+            # y: matching (block_m, 1) tile.
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            # lam: scalar, resident.
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, 1), jnp.float32),
+        interpret=True,
+    )(theta2, phi, y2, lam2)
+    return out.reshape(l) / zeta
+
+
+def _krr_grad_loss_kernel(theta_ref, phi_ref, y_ref, lam_ref, o_ref, ss_ref, *, zeta: int):
+    """Fused grid step: gradient accumulation + sum-of-squares in ONE sweep.
+
+    The residual `r` is needed by both the gradient back-projection and the
+    loss term; fusing them halves HBM traffic for the coordinator's hot
+    `worker_grad_loss` artifact (perf pass, EXPERIMENTS.md §Perf L1)."""
+    step = pl.program_id(0)
+    theta = theta_ref[...]
+    phi = phi_ref[...]
+    y = y_ref[...]
+
+    r = jnp.dot(phi, theta, preferred_element_type=jnp.float32) - y
+    partial = jnp.dot(phi.T, r, preferred_element_type=jnp.float32)
+    ss = jnp.sum(r * r).reshape(1, 1)
+
+    @pl.when(step == 0)
+    def _seed():
+        o_ref[...] = lam_ref[...] * zeta * theta + partial
+        ss_ref[...] = ss
+
+    @pl.when(step != 0)
+    def _accum():
+        o_ref[...] += partial
+        ss_ref[...] += ss
+
+
+def krr_grad_loss(theta, phi, y, lam, *, block_m: int = DEFAULT_BLOCK_M):
+    """Fused pallas KRR gradient + shard sum-of-squared-residuals.
+
+    Single pass over ``phi``; returns ``(grad (l,), sumsq ())``.
+    """
+    zeta, l = phi.shape
+    if block_m <= 0:
+        block_m = _auto_block(zeta, l)
+    if zeta % block_m != 0:
+        bm = block_m
+        while zeta % bm != 0:
+            bm -= 1
+        block_m = bm
+    grid = (zeta // block_m,)
+
+    kernel = functools.partial(_krr_grad_loss_kernel, zeta=zeta)
+    grad, ss = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(theta.reshape(l, 1), phi, y.reshape(zeta, 1), jnp.asarray(lam, jnp.float32).reshape(1, 1))
+    return grad.reshape(l) / zeta, ss.reshape(())
+
+
+def krr_loss_terms(theta, phi, y, *, block_m: int = DEFAULT_BLOCK_M):
+    """Pallas sum-of-squared-residuals for the shard: ``sum (phi theta - y)^2``.
+
+    Shares the tiling scheme of :func:`krr_grad`; used by the loss-eval
+    artifact so the whole loss path also exercises the L1 layer.
+    """
+    zeta, l = phi.shape
+    if block_m <= 0:
+        block_m = _auto_block(zeta, l)
+    if zeta % block_m != 0:
+        bm = block_m
+        while zeta % bm != 0:
+            bm -= 1
+        block_m = bm
+    grid = (zeta // block_m,)
+
+    def kernel(theta_ref, phi_ref, y_ref, o_ref):
+        step = pl.program_id(0)
+        r = (
+            jnp.dot(phi_ref[...], theta_ref[...], preferred_element_type=jnp.float32)
+            - y_ref[...]
+        )
+        ss = jnp.sum(r * r).reshape(1, 1)
+
+        @pl.when(step == 0)
+        def _seed():
+            o_ref[...] = ss
+
+        @pl.when(step != 0)
+        def _accum():
+            o_ref[...] += ss
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(theta.reshape(l, 1), phi, y.reshape(zeta, 1))
+    return out.reshape(())

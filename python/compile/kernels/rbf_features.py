@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: random-Fourier-feature map (the paper's ``K[x]``).
+
+The paper treats ``K`` as an abstract kernel feature map.  We instantiate it
+with random Fourier features for the RBF kernel (Rahimi & Recht 2007):
+
+    phi(x) = cos(x @ W + b) * sqrt(2/l)
+
+with ``W ~ N(0, 1/sigma^2)`` and ``b ~ U[0, 2pi)`` drawn once and shared by
+all machines, so ``E[phi(x)^T phi(x')] = exp(-||x-x'||^2 / 2 sigma^2)``.
+
+Tiling: rows (examples) stream through VMEM ``BLOCK_M`` at a time; ``W``
+(d x l) and ``b`` stay resident.  The matmul hits the MXU, the ``cos`` and
+scale fuse into the same block visit (single HBM round-trip per row tile).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 256
+
+
+def _rbf_kernel(x_ref, w_ref, b_ref, o_ref, *, scale: float):
+    z = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    o_ref[...] = jnp.cos(z) * scale
+
+
+def rbf_features(x, w, b, *, block_m: int = DEFAULT_BLOCK_M):
+    """Pallas random-Fourier feature map.
+
+    Args:
+      x: (m, d) float32 inputs.
+      w: (d, l) float32 projection (shared across the cluster).
+      b: (l,) float32 phases.
+      block_m: rows per grid step; auto-shrunk to divide m.
+
+    Returns:
+      (m, l) float32 features phi with E[phi phi^T] = RBF kernel.
+    """
+    m, d = x.shape
+    l = w.shape[1]
+    if m % block_m != 0:
+        bm = min(block_m, m)
+        while m % bm != 0:
+            bm -= 1
+        block_m = bm
+    grid = (m // block_m,)
+    import math
+
+    scale = math.sqrt(2.0 / l)
+
+    import functools
+
+    kernel = functools.partial(_rbf_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, l), lambda i: (0, 0)),
+            pl.BlockSpec((1, l), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, l), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, l))

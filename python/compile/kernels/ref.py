@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every L1 pallas kernel.
+
+These are the correctness ground truth: no pallas, no tiling, just the
+textbook formulas.  ``python/tests`` asserts each kernel against its oracle
+across shapes/dtypes/seeds (hypothesis sweeps), and the oracles are also
+lowered to HLO as ``*_ref`` artifacts so the rust integration tests can
+cross-check the kernel artifacts end to end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def krr_grad(theta, phi, y, lam):
+    """(1/zeta) phi^T (phi theta - y) + lam theta  — Alg. 3 body."""
+    zeta = phi.shape[0]
+    r = phi @ theta - y
+    return phi.T @ r / zeta + lam * theta
+
+
+def krr_loss(theta, phi, y, lam):
+    """(1/(2 zeta)) sum (phi theta - y)^2 + (lam/2) ||theta||^2."""
+    zeta = phi.shape[0]
+    r = phi @ theta - y
+    return 0.5 * jnp.sum(r * r) / zeta + 0.5 * lam * jnp.sum(theta * theta)
+
+
+def krr_sumsq(theta, phi, y):
+    """sum (phi theta - y)^2 (the kernel's raw accumulator)."""
+    r = phi @ theta - y
+    return jnp.sum(r * r)
+
+
+def rbf_features(x, w, b):
+    """Random Fourier features: cos(x @ w + b) * sqrt(2/l)."""
+    l = w.shape[1]
+    return jnp.cos(x @ w + b) * jnp.sqrt(2.0 / l)
+
+
+def sgd_update(theta, grad, eta):
+    return theta - eta * grad
+
+
+def momentum_update(theta, vel, grad, eta, mu):
+    v = mu * vel + grad
+    return theta - eta * v, v
+
+
+def adam_update(theta, m, v, grad, eta, beta1, beta2, eps, t):
+    m2 = beta1 * m + (1.0 - beta1) * grad
+    v2 = beta2 * v + (1.0 - beta2) * grad * grad
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    return theta - eta * mhat / (jnp.sqrt(vhat) + eps), m2, v2

@@ -1,0 +1,153 @@
+"""L1 Pallas kernels: fused master-side parameter updates (Alg. 2 line 3).
+
+The master's update ``theta <- theta - (eta/gamma) sum_j g_j`` and its
+momentum/Adam generalizations are pure element-wise streams; each kernel
+fuses the whole update into one VMEM pass so the parameter vector makes a
+single HBM round-trip per iteration.
+
+These back the ``master_update_*`` HLO artifacts used by the
+"update-on-XLA" ablation (DESIGN.md §6); the rust default applies the same
+formulas natively (`optim/`), and the python tests pin both paths to
+``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(l: int, want: int = 4096) -> int:
+    bm = min(want, l)
+    while l % bm != 0:
+        bm -= 1
+    return bm
+
+
+def sgd_update(theta, grad, eta):
+    """theta - eta * grad, eta a (1,1)-broadcast scalar."""
+    (l,) = theta.shape
+    bm = _block(l)
+
+    def kernel(t_ref, g_ref, e_ref, o_ref):
+        o_ref[...] = t_ref[...] - e_ref[...] * g_ref[...]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(l // bm,),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, l), jnp.float32),
+        interpret=True,
+    )(
+        theta.reshape(1, l),
+        grad.reshape(1, l),
+        jnp.asarray(eta, jnp.float32).reshape(1, 1),
+    )
+    return out.reshape(l)
+
+
+def momentum_update(theta, vel, grad, eta, mu):
+    """v <- mu v + g;  theta <- theta - eta v.  Returns (theta', v')."""
+    (l,) = theta.shape
+    bm = _block(l)
+
+    def kernel(t_ref, v_ref, g_ref, e_ref, m_ref, ot_ref, ov_ref):
+        v2 = m_ref[...] * v_ref[...] + g_ref[...]
+        ov_ref[...] = v2
+        ot_ref[...] = t_ref[...] - e_ref[...] * v2
+
+    out_t, out_v = pl.pallas_call(
+        kernel,
+        grid=(l // bm,),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, l), jnp.float32),
+            jax.ShapeDtypeStruct((1, l), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        theta.reshape(1, l),
+        vel.reshape(1, l),
+        grad.reshape(1, l),
+        jnp.asarray(eta, jnp.float32).reshape(1, 1),
+        jnp.asarray(mu, jnp.float32).reshape(1, 1),
+    )
+    return out_t.reshape(l), out_v.reshape(l)
+
+
+def adam_update(theta, m, v, grad, eta, beta1, beta2, eps, t):
+    """Bias-corrected Adam step, fully fused.  Returns (theta', m', v')."""
+    (l,) = theta.shape
+    bm = _block(l)
+
+    def kernel(t_ref, m_ref, v_ref, g_ref, s_ref, ot_ref, om_ref, ov_ref):
+        # s_ref packs the five scalars [eta, beta1, beta2, eps, t].
+        eta_ = s_ref[0, 0]
+        b1 = s_ref[0, 1]
+        b2 = s_ref[0, 2]
+        eps_ = s_ref[0, 3]
+        tt = s_ref[0, 4]
+        g = g_ref[...]
+        m2 = b1 * m_ref[...] + (1.0 - b1) * g
+        v2 = b2 * v_ref[...] + (1.0 - b2) * g * g
+        om_ref[...] = m2
+        ov_ref[...] = v2
+        mhat = m2 / (1.0 - b1**tt)
+        vhat = v2 / (1.0 - b2**tt)
+        ot_ref[...] = t_ref[...] - eta_ * mhat / (jnp.sqrt(vhat) + eps_)
+
+    scalars = jnp.stack(
+        [
+            jnp.asarray(eta, jnp.float32),
+            jnp.asarray(beta1, jnp.float32),
+            jnp.asarray(beta2, jnp.float32),
+            jnp.asarray(eps, jnp.float32),
+            jnp.asarray(t, jnp.float32),
+        ]
+    ).reshape(1, 5)
+
+    out_t, out_m, out_v = pl.pallas_call(
+        kernel,
+        grid=(l // bm,),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, 5), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, l), jnp.float32),
+            jax.ShapeDtypeStruct((1, l), jnp.float32),
+            jax.ShapeDtypeStruct((1, l), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        theta.reshape(1, l),
+        m.reshape(1, l),
+        v.reshape(1, l),
+        grad.reshape(1, l),
+        scalars,
+    )
+    return out_t.reshape(l), out_m.reshape(l), out_v.reshape(l)

@@ -1,0 +1,89 @@
+"""L2: the paper's model — kernel ridge regression fwd/grad — in jax.
+
+Every public function here is an AOT entry point lowered by ``aot.py``.
+They are thin jax compositions over the L1 pallas kernels in ``kernels/``:
+the pallas calls lower (interpret=True) into the same HLO module, so the
+rust runtime executes kernel + glue as one PJRT executable.
+
+Paper mapping:
+  * ``worker_grad``     — Algorithm 3 line 2 (one slave's local gradient)
+  * ``master_update_*`` — Algorithm 2 line 3 (and momentum/adam variants)
+  * ``full_loss``       — the objective of eq. (2), used for convergence
+                          tracking and T1/T2 reporting
+  * ``features``        — the kernel feature map K[x] (RBF random features)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import krr_grad as _kg
+from .kernels import rbf_features as _rf
+from .kernels import updates as _up
+from .kernels import ref as _ref
+
+
+# --- worker side (Algorithm 3) -----------------------------------------
+
+
+def worker_grad(theta, phi, y, lam):
+    """One slave's regularized gradient over its shard (pallas hot path)."""
+    return (_kg.krr_grad(theta, phi, y, lam),)
+
+
+def worker_grad_ref(theta, phi, y, lam):
+    """Oracle twin of ``worker_grad`` (pure jnp) for rust cross-checks."""
+    return (_ref.krr_grad(theta, phi, y, lam),)
+
+
+def worker_grad_loss(theta, phi, y, lam):
+    """Gradient + shard sum-of-squares in one executable.
+
+    Uses the fused single-sweep pallas kernel: the residual feeds both the
+    back-projection and the loss accumulator, halving HBM traffic vs the
+    naive grad-kernel + loss-kernel pair (perf pass §Perf L1).
+    """
+    g, ss = _kg.krr_grad_loss(theta, phi, y, lam)
+    return (g, ss)
+
+
+# --- loss / evaluation ---------------------------------------------------
+
+
+def full_loss(theta, phi, y, lam):
+    """Objective of eq. (2): (1/(2 zeta)) sum r^2 + (lam/2)||theta||^2."""
+    ss = _kg.krr_loss_terms(theta, phi, y)
+    zeta = phi.shape[0]
+    reg = 0.5 * lam * jnp.sum(theta * theta)
+    return (0.5 * ss / zeta + reg,)
+
+
+def predict(theta, phi):
+    """Model predictions theta^T K[x] for an evaluation shard."""
+    return (phi @ theta,)
+
+
+# --- feature map (K[x]) --------------------------------------------------
+
+
+def features(x, w, b):
+    """RBF random-Fourier feature map phi = K[x] (pallas kernel)."""
+    return (_rf.rbf_features(x, w, b),)
+
+
+# --- master side (Algorithm 2) -------------------------------------------
+
+
+def master_update_sgd(theta, gsum, eta_over_gamma):
+    """theta - (eta/gamma) * sum_j g_j — Algorithm 2 line 3 (pallas)."""
+    return (_up.sgd_update(theta, gsum, eta_over_gamma),)
+
+
+def master_update_momentum(theta, vel, gbar, eta, mu):
+    t, v = _up.momentum_update(theta, vel, gbar, eta, mu)
+    return (t, v)
+
+
+def master_update_adam(theta, m, v, gbar, eta, beta1, beta2, eps, t):
+    t2, m2, v2 = _up.adam_update(theta, m, v, gbar, eta, beta1, beta2, eps, t)
+    return (t2, m2, v2)

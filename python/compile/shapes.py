@@ -1,0 +1,80 @@
+"""Static shape configurations for every AOT artifact.
+
+The rust runtime executes fixed-shape PJRT executables, so every entry
+point is lowered at the concrete shapes listed here.  ``aot.py`` iterates
+these configs; ``manifest.json`` records them for the rust side
+(`runtime/manifest.rs`), and the rust config files refer to configs by name.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class KrrConfig:
+    """One KRR problem size: d raw input dims -> l kernel features,
+    zeta examples per machine (the paper's notation)."""
+
+    name: str
+    d: int  # raw input dimension
+    l: int  # kernel feature dimension (paper's l)
+    zeta: int  # examples per machine (paper's zeta)
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    """One decoder-only LM size for the end-to-end training example."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_head: int
+    n_layer: int
+    seq: int  # tokens per example fed to the model
+    batch: int  # per-worker microbatch
+    d_ff: int = 0  # 0 -> 4 * d_model
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+    def n_params(self) -> int:
+        D, F, V, T = self.d_model, self.ff, self.vocab, self.seq
+        per_layer = 2 * D + 4 * D * D + 2 * D + D * F + F + F * D + D
+        return V * D + T * D + self.n_layer * per_layer + 2 * D
+
+
+# --- KRR problem sizes -------------------------------------------------
+# "small" keeps python tests and rust unit tests fast; "default" is the
+# experiment workhorse (T1..T4, F1..F3); "wide" stresses the kernel tiling
+# and is the perf-pass target.
+KRR_CONFIGS: dict[str, KrrConfig] = {
+    c.name: c
+    for c in [
+        KrrConfig("small", d=8, l=32, zeta=256),
+        KrrConfig("default", d=8, l=64, zeta=2048),
+        KrrConfig("wide", d=16, l=256, zeta=1024),
+    ]
+}
+
+# --- LM sizes ----------------------------------------------------------
+# "lm_tiny" is for tests; "lm_small" (~1.6M params) is the end-to-end
+# example's default; "lm_medium" (~19M params) is the larger e2e target
+# (lowered only with --lm-medium: compile time on the CPU PJRT client is
+# noticeable).  The paper's setting is a 2014 CPU cluster; DESIGN.md §3
+# documents scaling the mandated ~100M e2e transformer down to what the
+# CPU-interpret testbed trains in minutes.
+LM_CONFIGS: dict[str, LmConfig] = {
+    c.name: c
+    for c in [
+        LmConfig("lm_tiny", vocab=256, d_model=64, n_head=4, n_layer=2, seq=64, batch=4),
+        LmConfig("lm_small", vocab=512, d_model=128, n_head=4, n_layer=4, seq=128, batch=8),
+        LmConfig("lm_medium", vocab=4096, d_model=384, n_head=6, n_layer=8, seq=256, batch=8),
+    ]
+}
+
+# KRR configs whose artifacts are always built.
+DEFAULT_KRR = ["small", "default", "wide"]
+# LM configs whose artifacts are always built.
+DEFAULT_LM = ["lm_tiny", "lm_small"]

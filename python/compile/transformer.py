@@ -1,0 +1,165 @@
+"""L2: decoder-only transformer LM for the end-to-end training example.
+
+A GPT-style pre-LN decoder with learned positional embeddings and a weight-
+tied output head, written against a *flat ordered parameter list* so the
+rust coordinator can treat the model as an opaque ``Vec<Vec<f32>>``:
+
+  * ``param_specs(cfg)`` gives the canonical (name, shape) order;
+  * ``init_params(cfg, seed)`` initializes that list;
+  * ``lm_step(cfg)(tokens, *params)`` returns ``(loss, *grads)`` in the
+    same order — one PJRT executable per LM config, executed by every
+    data-parallel worker on its own microbatch.
+
+The hybrid coordinator then aggregates the first-``gamma`` workers' grads
+exactly as it does for KRR — the paper's technique is model-agnostic, and
+this module is the "real workload" demonstration of that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .shapes import LmConfig
+
+
+def param_specs(cfg: LmConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Canonical flat parameter order: (name, shape) pairs.
+
+    The rust side mirrors this order (it reads it from the manifest), so
+    NEVER reorder — append only.
+    """
+    D, F, V, T = cfg.d_model, cfg.ff, cfg.vocab, cfg.seq
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (V, D)),
+        ("pos", (T, D)),
+    ]
+    for i in range(cfg.n_layer):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_scale", (D,)),
+            (p + "ln1_bias", (D,)),
+            (p + "wq", (D, D)),
+            (p + "wk", (D, D)),
+            (p + "wv", (D, D)),
+            (p + "wo", (D, D)),
+            (p + "ln2_scale", (D,)),
+            (p + "ln2_bias", (D,)),
+            (p + "w1", (D, F)),
+            (p + "b1", (F,)),
+            (p + "w2", (F, D)),
+            (p + "b2", (D,)),
+        ]
+    specs += [("lnf_scale", (D,)), ("lnf_bias", (D,))]
+    return specs
+
+
+def init_params(cfg: LmConfig, seed: int = 0) -> list[np.ndarray]:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    rng = np.random.default_rng(seed)
+    out: list[np.ndarray] = []
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layer)
+    for name, shape in param_specs(cfg):
+        base = name.split(".")[-1]
+        if base.endswith(("_scale",)):
+            arr = np.ones(shape, np.float32)
+        elif base.endswith(("_bias",)) or base in ("b1", "b2"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+            if base in ("wo", "w2"):
+                arr *= resid_scale
+        out.append(arr)
+    return out
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, wq, wk, wv, wo, n_head: int):
+    B, T, D = x.shape
+    H = n_head
+    hd = D // H
+
+    def split(w):
+        return (x @ w).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ wo
+
+
+def _forward(cfg: LmConfig, tokens, params):
+    """tokens: (B, T) int32 inputs. Returns (B, T, V) logits."""
+    it = iter(params)
+    embed = next(it)
+    pos = next(it)
+    x = embed[tokens] + pos[None, :, :]
+    for _ in range(cfg.n_layer):
+        ln1_s, ln1_b = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+        h = _layer_norm(x, ln1_s, ln1_b)
+        x = x + _attention(h, wq, wk, wv, wo, cfg.n_head)
+        h = _layer_norm(x, ln2_s, ln2_b)
+        x = x + jax.nn.gelu(h @ w1 + b1) @ w2 + b2
+    lnf_s, lnf_b = next(it), next(it)
+    x = _layer_norm(x, lnf_s, lnf_b)
+    return x @ embed.T  # weight-tied head
+
+
+def loss_fn(cfg: LmConfig, tokens, params):
+    """Next-token cross-entropy. tokens: (B, T+1) int32."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = _forward(cfg, inputs, params)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_step(cfg: LmConfig):
+    """AOT entry point: (tokens, *params) -> (loss, *grads)."""
+
+    def step(tokens, *params):
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, tokens, list(ps))
+        )(tuple(params))
+        return (loss,) + tuple(grads)
+
+    return step
+
+
+def lm_loss(cfg: LmConfig):
+    """AOT entry point: (tokens, *params) -> (loss,) — eval only."""
+
+    def ev(tokens, *params):
+        return (loss_fn(cfg, tokens, list(params)),)
+
+    return ev
+
+
+def example_args(cfg: LmConfig):
+    """ShapeDtypeStructs matching lm_step's signature, for jax.jit().lower."""
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_specs(cfg)
+    ]
+    return [toks] + params
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_loss(cfg: LmConfig):
+    return jax.jit(lm_loss(cfg))

@@ -1,0 +1,90 @@
+"""AOT sanity: manifest.json and the HLO artifacts it indexes are mutually
+consistent and match shapes.py.  Skips (rather than fails) when artifacts
+haven't been built yet — `make artifacts` is the builder."""
+
+import json
+import os
+
+import pytest
+
+from compile.shapes import DEFAULT_KRR, DEFAULT_LM, KRR_CONFIGS, LM_CONFIGS
+from compile import transformer as tf
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_format_version(manifest):
+    assert manifest["format_version"] == 1
+
+
+def test_all_files_exist_and_nonempty(manifest):
+    for name, e in manifest["artifacts"].items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_expected_krr_artifacts_present(manifest):
+    arts = manifest["artifacts"]
+    for cname in DEFAULT_KRR:
+        for stem in (
+            "krr_worker_grad", "krr_worker_grad_ref", "krr_worker_grad_loss",
+            "krr_full_loss", "krr_predict", "rbf_features",
+            "master_update_sgd", "master_update_momentum", "master_update_adam",
+        ):
+            assert f"{stem}_{cname}" in arts
+
+
+def test_krr_shapes_match_config(manifest):
+    arts = manifest["artifacts"]
+    for cname in DEFAULT_KRR:
+        c = KRR_CONFIGS[cname]
+        e = arts[f"krr_worker_grad_{cname}"]
+        ins = {i["name"]: i for i in e["inputs"]}
+        assert ins["theta"]["shape"] == [c.l]
+        assert ins["phi"]["shape"] == [c.zeta, c.l]
+        assert ins["y"]["shape"] == [c.zeta]
+        assert ins["lam"]["shape"] == []
+        assert e["outputs"][0]["shape"] == [c.l]
+
+
+def test_lm_step_io_arity(manifest):
+    arts = manifest["artifacts"]
+    for cname in DEFAULT_LM:
+        c = LM_CONFIGS[cname]
+        n_params = len(tf.param_specs(c))
+        e = arts[f"lm_step_{cname}"]
+        assert len(e["inputs"]) == 1 + n_params
+        assert len(e["outputs"]) == 1 + n_params
+        assert e["inputs"][0]["dtype"] == "i32"
+        assert e["inputs"][0]["shape"] == [c.batch, c.seq + 1]
+        assert e["meta"]["param_names"] == [n for n, _ in tf.param_specs(c)]
+
+
+def test_lm_param_shapes_roundtrip(manifest):
+    arts = manifest["artifacts"]
+    for cname in DEFAULT_LM:
+        c = LM_CONFIGS[cname]
+        e = arts[f"lm_step_{cname}"]
+        specs = dict(tf.param_specs(c))
+        for i in e["inputs"][1:]:
+            assert tuple(i["shape"]) == specs[i["name"]], i["name"]
+
+
+def test_hlo_text_is_parseable_header(manifest):
+    """Every artifact must start with an HloModule header (text format)."""
+    for name, e in manifest["artifacts"].items():
+        with open(os.path.join(ART, e["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), name

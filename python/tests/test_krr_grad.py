@@ -1,0 +1,141 @@
+"""L1 correctness: pallas KRR gradient kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute hot-spot (Alg. 3 body).
+hypothesis sweeps shard sizes, feature dims, tile sizes and value scales.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import krr_grad as kg
+from compile.kernels import ref
+
+
+def _mk(zeta, l, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(0, scale, l), jnp.float32)
+    phi = jnp.asarray(rng.normal(0, scale, (zeta, l)), jnp.float32)
+    y = jnp.asarray(rng.normal(0, scale, zeta), jnp.float32)
+    return theta, phi, y
+
+
+def _assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+class TestKrrGradBasic:
+    def test_matches_ref_default_shape(self):
+        theta, phi, y = _mk(2048, 64, 0)
+        _assert_close(kg.krr_grad(theta, phi, y, 0.1), ref.krr_grad(theta, phi, y, 0.1))
+
+    def test_matches_ref_wide_shape(self):
+        theta, phi, y = _mk(1024, 256, 1)
+        _assert_close(kg.krr_grad(theta, phi, y, 0.01), ref.krr_grad(theta, phi, y, 0.01))
+
+    def test_zero_lambda(self):
+        theta, phi, y = _mk(512, 32, 2)
+        _assert_close(kg.krr_grad(theta, phi, y, 0.0), ref.krr_grad(theta, phi, y, 0.0))
+
+    def test_zero_theta_gradient_is_data_term(self):
+        _, phi, y = _mk(256, 32, 3)
+        theta = jnp.zeros(32, jnp.float32)
+        g = kg.krr_grad(theta, phi, y, 0.5)
+        expect = -(phi.T @ y) / 256
+        _assert_close(g, expect)
+
+    def test_perfect_fit_grad_is_reg_only(self):
+        rng = np.random.default_rng(4)
+        theta = jnp.asarray(rng.normal(0, 1, 16), jnp.float32)
+        phi = jnp.asarray(rng.normal(0, 1, (128, 16)), jnp.float32)
+        y = phi @ theta  # zero residual
+        g = kg.krr_grad(theta, phi, y, 0.3)
+        _assert_close(g, 0.3 * theta, rtol=1e-3, atol=1e-4)
+
+    def test_single_block(self):
+        # zeta <= block_m: grid has exactly one step, seed path only.
+        theta, phi, y = _mk(128, 16, 5)
+        _assert_close(
+            kg.krr_grad(theta, phi, y, 0.1, block_m=256),
+            ref.krr_grad(theta, phi, y, 0.1),
+        )
+
+    def test_odd_zeta_block_shrink(self):
+        # 300 is not divisible by 256 -> kernel must shrink the tile.
+        theta, phi, y = _mk(300, 16, 6)
+        _assert_close(kg.krr_grad(theta, phi, y, 0.1), ref.krr_grad(theta, phi, y, 0.1))
+
+    def test_prime_zeta(self):
+        theta, phi, y = _mk(509, 8, 7)  # prime -> block shrinks to 1
+        _assert_close(kg.krr_grad(theta, phi, y, 0.1), ref.krr_grad(theta, phi, y, 0.1))
+
+
+class TestKrrGradHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        zeta=st.integers(8, 768),
+        l=st.sampled_from([4, 8, 16, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+        lam=st.floats(0.0, 2.0),
+        block_m=st.sampled_from([32, 64, 128, 256]),
+    )
+    def test_matches_ref(self, zeta, l, seed, lam, block_m):
+        theta, phi, y = _mk(zeta, l, seed)
+        g1 = kg.krr_grad(theta, phi, y, lam, block_m=block_m)
+        g2 = ref.krr_grad(theta, phi, y, lam)
+        _assert_close(g1, g2, rtol=5e-4, atol=5e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        zeta=st.integers(16, 256),
+        l=st.sampled_from([8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.floats(0.01, 10.0),
+    )
+    def test_value_scales(self, zeta, l, seed, scale):
+        theta, phi, y = _mk(zeta, l, seed, scale)
+        g1 = kg.krr_grad(theta, phi, y, 0.1)
+        g2 = ref.krr_grad(theta, phi, y, 0.1)
+        denom = max(1.0, float(np.abs(np.asarray(g2)).max()))
+        assert float(np.abs(np.asarray(g1 - g2)).max()) / denom < 1e-3
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        zeta=st.integers(8, 512),
+        l=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_block_size_invariance(self, zeta, l, seed):
+        """Tiling must not change the math: all block sizes agree."""
+        theta, phi, y = _mk(zeta, l, seed)
+        outs = [
+            np.asarray(kg.krr_grad(theta, phi, y, 0.2, block_m=bm))
+            for bm in (16, 128, 512)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=3e-4, atol=3e-4)
+
+
+class TestKrrLossTerms:
+    def test_matches_ref(self):
+        theta, phi, y = _mk(512, 64, 8)
+        s1 = kg.krr_loss_terms(theta, phi, y)
+        s2 = ref.krr_sumsq(theta, phi, y)
+        assert abs(float(s1) - float(s2)) / max(1.0, abs(float(s2))) < 1e-5
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        zeta=st.integers(8, 512),
+        l=st.sampled_from([4, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, zeta, l, seed):
+        theta, phi, y = _mk(zeta, l, seed)
+        s1 = float(kg.krr_loss_terms(theta, phi, y))
+        s2 = float(ref.krr_sumsq(theta, phi, y))
+        assert abs(s1 - s2) / max(1.0, abs(s2)) < 1e-4
+
+    def test_nonnegative(self):
+        theta, phi, y = _mk(256, 16, 9)
+        assert float(kg.krr_loss_terms(theta, phi, y)) >= 0.0

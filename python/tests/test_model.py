@@ -1,0 +1,93 @@
+"""L2 correctness: the KRR model entry points.
+
+Key cross-check: the pallas ``worker_grad`` must equal jax autodiff of the
+objective — an independent derivation of Alg. 3's formula."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _mk(zeta, l, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(0, 1, l), jnp.float32)
+    phi = jnp.asarray(rng.normal(0, 1, (zeta, l)), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, zeta), jnp.float32)
+    return theta, phi, y
+
+
+class TestWorkerGrad:
+    def test_equals_autodiff_of_objective(self):
+        theta, phi, y = _mk(256, 32, 0)
+        lam = 0.2
+        (g,) = model.worker_grad(theta, phi, y, lam)
+        auto = jax.grad(lambda t: ref.krr_loss(t, phi, y, lam))(theta)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(auto), rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(zeta=st.integers(16, 256), l=st.sampled_from([8, 32]),
+           seed=st.integers(0, 2**31 - 1), lam=st.floats(0.0, 1.0))
+    def test_equals_autodiff_hypothesis(self, zeta, l, seed, lam):
+        theta, phi, y = _mk(zeta, l, seed)
+        (g,) = model.worker_grad(theta, phi, y, lam)
+        auto = jax.grad(lambda t: ref.krr_loss(t, phi, y, lam))(theta)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(auto), rtol=1e-3, atol=1e-3)
+
+    def test_grad_and_loss_variant_consistent(self):
+        theta, phi, y = _mk(512, 64, 1)
+        g1, ss = model.worker_grad_loss(theta, phi, y, 0.1)
+        (g2,) = model.worker_grad(theta, phi, y, 0.1)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
+        assert abs(float(ss) - float(ref.krr_sumsq(theta, phi, y))) < 1e-1
+
+    def test_ref_twin_matches(self):
+        theta, phi, y = _mk(256, 32, 2)
+        (g1,) = model.worker_grad(theta, phi, y, 0.1)
+        (g2,) = model.worker_grad_ref(theta, phi, y, 0.1)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-4)
+
+
+class TestLossAndPredict:
+    def test_full_loss_matches_ref(self):
+        theta, phi, y = _mk(256, 32, 3)
+        (loss,) = model.full_loss(theta, phi, y, 0.1)
+        want = float(ref.krr_loss(theta, phi, y, 0.1))
+        assert abs(float(loss) - want) / max(1.0, abs(want)) < 1e-4
+
+    def test_predict(self):
+        theta, phi, _ = _mk(128, 16, 4)
+        (pred,) = model.predict(theta, phi)
+        np.testing.assert_allclose(
+            np.asarray(pred), np.asarray(phi @ theta), rtol=1e-5, atol=1e-5
+        )
+
+    def test_loss_minimized_at_exact_solution(self):
+        """Closed-form ridge solution has smaller loss than perturbations."""
+        _, phi, y = _mk(512, 16, 5)
+        lam = 0.1
+        zeta = phi.shape[0]
+        A = np.asarray(phi.T @ phi) / zeta + lam * np.eye(16)
+        b = np.asarray(phi.T @ y) / zeta
+        theta_star = jnp.asarray(np.linalg.solve(A, b), jnp.float32)
+        (l0,) = model.full_loss(theta_star, phi, y, lam)
+        rng = np.random.default_rng(6)
+        for _ in range(5):
+            pert = theta_star + jnp.asarray(rng.normal(0, 0.1, 16), jnp.float32)
+            (lp,) = model.full_loss(pert, phi, y, lam)
+            assert float(lp) > float(l0)
+
+
+class TestMasterUpdates:
+    def test_sgd_is_alg2_line3(self):
+        rng = np.random.default_rng(7)
+        theta = jnp.asarray(rng.normal(0, 1, 64), jnp.float32)
+        grads = [jnp.asarray(rng.normal(0, 1, 64), jnp.float32) for _ in range(5)]
+        gamma, eta = 5, 0.3
+        gsum = sum(grads)
+        (t2,) = model.master_update_sgd(theta, gsum, eta / gamma)
+        want = theta - (eta / gamma) * gsum
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,66 @@
+"""L1 correctness: pallas RBF random-feature kernel vs oracle, plus the
+statistical property that makes it the paper's K[x]: the feature inner
+product approximates the RBF kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rbf_features as rf
+from compile.kernels import ref
+
+
+def _mk(m, d, l, seed, sigma=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (m, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1.0 / sigma, (d, l)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 2 * np.pi, l), jnp.float32)
+    return x, w, b
+
+
+class TestRbfFeatures:
+    def test_matches_ref(self):
+        x, w, b = _mk(300, 8, 64, 0)
+        np.testing.assert_allclose(
+            np.asarray(rf.rbf_features(x, w, b)),
+            np.asarray(ref.rbf_features(x, w, b)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 400),
+        d=st.integers(1, 16),
+        l=st.sampled_from([8, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, d, l, seed):
+        x, w, b = _mk(m, d, l, seed)
+        got = np.asarray(rf.rbf_features(x, w, b))
+        want = np.asarray(ref.rbf_features(x, w, b))
+        assert got.shape == (m, l)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bounded(self):
+        x, w, b = _mk(100, 4, 32, 1)
+        phi = np.asarray(rf.rbf_features(x, w, b))
+        bound = np.sqrt(2.0 / 32) + 1e-6
+        assert np.all(np.abs(phi) <= bound)
+
+    def test_kernel_approximation(self):
+        """phi(x)^T phi(x') -> exp(-||x-x'||^2 / 2 sigma^2) as l grows."""
+        sigma = 1.5
+        m, d, l = 24, 4, 8192
+        x, w, b = _mk(m, d, l, 2, sigma=sigma)
+        phi = np.asarray(ref.rbf_features(x, w, b))
+        approx = phi @ phi.T
+        xs = np.asarray(x)
+        d2 = ((xs[:, None, :] - xs[None, :, :]) ** 2).sum(-1)
+        exact = np.exp(-d2 / (2 * sigma * sigma))
+        assert np.abs(approx - exact).max() < 0.08
+
+    def test_block_size_invariance(self):
+        x, w, b = _mk(384, 8, 32, 3)
+        a = np.asarray(rf.rbf_features(x, w, b, block_m=32))
+        c = np.asarray(rf.rbf_features(x, w, b, block_m=384))
+        np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)

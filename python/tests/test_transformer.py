@@ -1,0 +1,116 @@
+"""L2 correctness: the decoder-only LM used by the end-to-end example."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import transformer as tf
+from compile.shapes import LM_CONFIGS
+
+CFG = LM_CONFIGS["lm_tiny"]
+
+
+def _params(seed=0):
+    return [jnp.asarray(p) for p in tf.init_params(CFG, seed)]
+
+
+def _tokens(seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or CFG.batch
+    return jnp.asarray(rng.integers(0, CFG.vocab, (b, CFG.seq + 1)), jnp.int32)
+
+
+class TestParams:
+    def test_spec_count_matches_meta(self):
+        specs = tf.param_specs(CFG)
+        n = sum(int(np.prod(s)) for _, s in specs)
+        assert n == CFG.n_params()
+
+    def test_init_shapes(self):
+        ps = tf.init_params(CFG, 0)
+        for p, (name, shape) in zip(ps, tf.param_specs(CFG)):
+            assert p.shape == shape, name
+            assert p.dtype == np.float32
+
+    def test_init_deterministic(self):
+        a = tf.init_params(CFG, 42)
+        b = tf.init_params(CFG, 42)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_ln_scales_ones(self):
+        for p, (name, _) in zip(tf.init_params(CFG, 0), tf.param_specs(CFG)):
+            if name.endswith("_scale"):
+                assert np.all(p == 1.0)
+
+
+class TestForward:
+    def test_loss_near_uniform_at_init(self):
+        """At init the model is near-uniform: loss ~ log(vocab)."""
+        loss = float(tf.loss_fn(CFG, _tokens(), _params()))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        ps = _params()
+        toks = np.asarray(_tokens(1))
+        logits1 = np.asarray(tf._forward(CFG, jnp.asarray(toks[:, :-1]), ps))
+        toks2 = toks.copy()
+        toks2[:, CFG.seq // 2 :] = (toks2[:, CFG.seq // 2 :] + 1) % CFG.vocab
+        logits2 = np.asarray(tf._forward(CFG, jnp.asarray(toks2[:, :-1]), ps))
+        cut = CFG.seq // 2
+        np.testing.assert_allclose(
+            logits1[:, :cut, :], logits2[:, :cut, :], rtol=1e-4, atol=1e-4
+        )
+
+    def test_grads_shapes_match_params(self):
+        step = tf.lm_step(CFG)
+        out = step(_tokens(), *_params())
+        loss, grads = out[0], out[1:]
+        assert loss.shape == ()
+        specs = tf.param_specs(CFG)
+        assert len(grads) == len(specs)
+        for g, (name, shape) in zip(grads, specs):
+            assert g.shape == shape, name
+
+    def test_lm_loss_equals_lm_step_loss(self):
+        step = tf.lm_step(CFG)
+        ev = tf.lm_loss(CFG)
+        toks, ps = _tokens(2), _params()
+        l1 = float(step(toks, *ps)[0])
+        l2 = float(ev(toks, *ps)[0])
+        assert abs(l1 - l2) < 1e-5
+
+
+class TestTraining:
+    def test_sgd_steps_reduce_loss(self):
+        """A few full-batch SGD steps on one repeated batch must fit it."""
+        step = jax.jit(tf.lm_step(CFG))
+        ps = _params()
+        toks = _tokens(3)
+        losses = []
+        for _ in range(8):
+            out = step(toks, *ps)
+            losses.append(float(out[0]))
+            ps = [p - 0.5 * g for p, g in zip(ps, out[1:])]
+        assert losses[-1] < losses[0] - 0.1, losses
+
+    def test_grad_matches_finite_difference(self):
+        """Spot-check autodiff on a handful of coordinates."""
+        ps = _params()
+        toks = _tokens(4)
+        step = tf.lm_step(CFG)
+        out = step(toks, *ps)
+        g_lnf = np.asarray(out[-2])  # lnf_scale gradient
+        idx = len(ps) - 2
+        eps = 1e-2
+        for coord in (0, CFG.d_model // 2):
+            plus = [p for p in ps]
+            plus[idx] = ps[idx].at[coord].add(eps)
+            minus = [p for p in ps]
+            minus[idx] = ps[idx].at[coord].add(-eps)
+            fd = (
+                float(tf.loss_fn(CFG, toks, plus)) - float(tf.loss_fn(CFG, toks, minus))
+            ) / (2 * eps)
+            assert abs(fd - g_lnf[coord]) < 5e-3, (coord, fd, g_lnf[coord])

@@ -1,0 +1,114 @@
+"""L1 correctness: fused optimizer-update kernels vs oracles (Alg. 2 line 3
+and its momentum/adam generalizations)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import updates as up
+from compile.kernels import ref
+
+
+def _vecs(l, seed, n=2):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(0, 1, l), jnp.float32) for _ in range(n)]
+
+
+def _close(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+class TestSgdUpdate:
+    def test_matches_ref(self):
+        theta, grad = _vecs(64, 0)
+        _close(up.sgd_update(theta, grad, 0.05), ref.sgd_update(theta, grad, 0.05))
+
+    def test_zero_eta_identity(self):
+        theta, grad = _vecs(32, 1)
+        _close(up.sgd_update(theta, grad, 0.0), theta)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        l=st.integers(1, 5000),
+        seed=st.integers(0, 2**31 - 1),
+        eta=st.floats(0.0, 10.0),
+    )
+    def test_hypothesis(self, l, seed, eta):
+        theta, grad = _vecs(l, seed)
+        _close(up.sgd_update(theta, grad, eta), ref.sgd_update(theta, grad, eta))
+
+
+class TestMomentumUpdate:
+    def test_matches_ref(self):
+        theta, vel, grad = _vecs(64, 2, 3)
+        a = up.momentum_update(theta, vel, grad, 0.05, 0.9)
+        b = ref.momentum_update(theta, vel, grad, 0.05, 0.9)
+        _close(a[0], b[0])
+        _close(a[1], b[1])
+
+    def test_zero_mu_is_sgd(self):
+        theta, vel, grad = _vecs(32, 3, 3)
+        t2, _ = up.momentum_update(theta, vel, grad, 0.1, 0.0)
+        _close(t2, ref.sgd_update(theta, grad, 0.1))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        l=st.integers(1, 2048),
+        seed=st.integers(0, 2**31 - 1),
+        mu=st.floats(0.0, 0.999),
+    )
+    def test_hypothesis(self, l, seed, mu):
+        theta, vel, grad = _vecs(l, seed, 3)
+        a = up.momentum_update(theta, vel, grad, 0.01, mu)
+        b = ref.momentum_update(theta, vel, grad, 0.01, mu)
+        _close(a[0], b[0])
+        _close(a[1], b[1])
+
+    def test_multi_step_composition(self):
+        theta, vel, grad1 = _vecs(128, 4, 3)
+        (grad2,) = _vecs(128, 5, 1)
+        ka, kb = (theta, vel), (theta, vel)
+        for g in (grad1, grad2, grad1):
+            ka = up.momentum_update(ka[0], ka[1], g, 0.05, 0.9)
+            kb = ref.momentum_update(kb[0], kb[1], g, 0.05, 0.9)
+        _close(ka[0], kb[0])
+        _close(ka[1], kb[1])
+
+
+class TestAdamUpdate:
+    def test_matches_ref(self):
+        theta, m, v, grad = _vecs(64, 6, 4)
+        v = jnp.abs(v)
+        a = up.adam_update(theta, m, v, grad, 1e-3, 0.9, 0.999, 1e-8, 3.0)
+        b = ref.adam_update(theta, m, v, grad, 1e-3, 0.9, 0.999, 1e-8, 3.0)
+        for x, y in zip(a, b):
+            _close(x, y)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        l=st.integers(1, 2048),
+        seed=st.integers(0, 2**31 - 1),
+        t=st.integers(1, 1000),
+    )
+    def test_hypothesis(self, l, seed, t):
+        theta, m, v, grad = _vecs(l, seed, 4)
+        v = jnp.abs(v)
+        a = up.adam_update(theta, m, v, grad, 1e-3, 0.9, 0.999, 1e-8, float(t))
+        b = ref.adam_update(theta, m, v, grad, 1e-3, 0.9, 0.999, 1e-8, float(t))
+        for x, y in zip(a, b):
+            _close(x, y, tol=1e-4)
+
+    def test_multi_step_training_descends(self):
+        """3 adam steps on a quadratic reduce the objective."""
+        rng = np.random.default_rng(7)
+        target = jnp.asarray(rng.normal(0, 1, 64), jnp.float32)
+        theta = jnp.zeros(64, jnp.float32)
+        m = jnp.zeros(64, jnp.float32)
+        v = jnp.zeros(64, jnp.float32)
+        loss0 = float(jnp.sum((theta - target) ** 2))
+        for t in range(1, 4):
+            grad = 2.0 * (theta - target)
+            theta, m, v = up.adam_update(
+                theta, m, v, grad, 0.1, 0.9, 0.999, 1e-8, float(t)
+            )
+        assert float(jnp.sum((theta - target) ** 2)) < loss0

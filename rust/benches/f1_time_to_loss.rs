@@ -1,0 +1,98 @@
+//! F1 — loss vs (virtual) wall-clock, BSP vs ASYNC vs HYBRID under
+//! stragglers: the abstract's headline "dramatically reduce calculation
+//! time" figure.
+//!
+//! Cluster: lognormal delays (σ=1) + two chronically slow nodes (10×).
+//! Emits the three loss-vs-time series (CSV for plotting) plus a
+//! time-to-target crossover table.  Expected shape: hybrid reaches every
+//! loss target first; BSP is latest (tail-latency bound); async sits
+//! between (no barrier, but stale gradients slow convergence per update).
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::metrics::csv;
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim;
+use hybriditer::straggler::DelayModel;
+
+fn main() {
+    let m = 16;
+    let spec = KrrProblemSpec::small().with_machines(m);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let loss_star = problem.loss_star;
+    println!("F1: time-to-loss — M={m}, lognormal(σ=1) + 2 slow nodes @10x");
+    println!("optimal training loss (exact solver): {loss_star:.6}\n");
+
+    let cluster = || {
+        ClusterSpec {
+            workers: m,
+            base_compute: 0.01,
+            delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        }
+        .with_slow_tail(2, 10.0)
+    };
+    let run = |mode: SyncMode, iters: u64, eta: f64| -> RunReport {
+        let cfg = RunConfig {
+            mode,
+            optimizer: OptimizerKind::sgd(eta),
+            loss_form: LossForm::krr(spec.lambda),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(iters);
+        let mut pool = problem.native_pool();
+        sim::run_virtual(&mut pool, &cluster(), &cfg, &sim::NoEval).unwrap()
+    };
+
+    let iters = 400;
+    let gamma = m * 3 / 4;
+    let reports = vec![
+        ("bsp", run(SyncMode::Bsp, iters, 1.0)),
+        ("async", run(SyncMode::Async { damping: 0.0 }, iters * m as u64, 0.35)),
+        ("hybrid", run(SyncMode::Hybrid { gamma }, iters, 1.0)),
+    ];
+
+    // Series CSVs (downsampled print).
+    for (name, rep) in &reports {
+        let path = std::path::Path::new("results").join(format!("f1_curve_{name}.csv"));
+        csv::write_recorder(&rep.recorder, &path).unwrap();
+        println!("{name:7} series -> {} ({} rows)", path.display(), rep.recorder.len());
+    }
+
+    // Crossover table: first time each mode reaches loss* multiples.
+    let mut table = Table::new(
+        format!("F1 time to reach loss targets (gamma={gamma})"),
+        &["target_loss", "bsp_s", "async_s", "hybrid_s", "hybrid_speedup_vs_bsp"],
+    );
+    for &mult in &[3.0, 2.0, 1.5, 1.2, 1.1, 1.05] {
+        let target = loss_star * mult;
+        let times: Vec<Option<f64>> = reports
+            .iter()
+            .map(|(_, r)| r.recorder.time_to_loss(target))
+            .collect();
+        let cell = |t: &Option<f64>| t.map(|v| f(v, 3)).unwrap_or_else(|| "-".into());
+        let speedup = match (times[0], times[2]) {
+            (Some(b), Some(h)) => f(b / h, 2),
+            _ => "-".into(),
+        };
+        table.row(vec![
+            format!("{target:.4} ({mult}x)"),
+            cell(&times[0]),
+            cell(&times[1]),
+            cell(&times[2]),
+            speedup,
+        ]);
+    }
+    table.print();
+    table.save_csv("f1_time_to_loss").unwrap();
+
+    println!();
+    for (name, rep) in &reports {
+        println!("{}", rep.summary());
+        let _ = name;
+    }
+}

@@ -1,0 +1,121 @@
+//! Microbenchmarks of the L3 hot path — the profiling substrate for the
+//! performance pass (EXPERIMENTS.md §Perf).
+//!
+//! Times each stage of one coordinator iteration in isolation:
+//! native shard gradient, XLA shard gradient (PJRT dispatch + pallas
+//! kernel), aggregation, optimizer step, barrier bookkeeping, and one
+//! whole virtual iteration — so regressions in any stage are visible
+//! without a profiler.
+
+use std::hint::black_box;
+
+use hybriditer::bench_harness::Bench;
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::aggregator::{aggregate, AggregatorKind, Contribution};
+use hybriditer::coordinator::barrier::PartialBarrier;
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::runtime::{ArtifactSet, Engine};
+use hybriditer::sim::{self, NoEval};
+use hybriditer::util::rng::Pcg64;
+use hybriditer::worker::compute::XlaKrrPool;
+
+fn main() {
+    println!("micro_hotpath: per-stage latencies of one coordinator iteration\n");
+    let mut rng = Pcg64::seeded(1);
+
+    // --- shard gradient: native vs XLA, small & default configs --------
+    for (cfg_name, spec) in [
+        ("small (zeta=256, l=32)", KrrProblemSpec::small().with_machines(2)),
+        ("default (zeta=2048, l=64)", KrrProblemSpec::default_config().with_machines(2)),
+        ("wide (zeta=1024, l=256)", KrrProblemSpec::wide().with_machines(2)),
+    ] {
+        let problem = KrrProblem::generate(&spec).unwrap();
+        let mut theta = vec![0.0f32; problem.dim()];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+
+        let mut native = problem.native_pool();
+        Bench::new(format!("grad/native/{cfg_name}")).run(|| {
+            black_box(native.grad(0, black_box(&theta), 0).unwrap());
+        });
+
+        if let Ok(artifacts) = ArtifactSet::discover() {
+            let engine = Engine::cpu().unwrap();
+            let mut xla_pool = XlaKrrPool::new(
+                &artifacts,
+                &engine,
+                &spec.config,
+                &problem.shards,
+                spec.lambda as f32,
+            )
+            .unwrap();
+            Bench::new(format!("grad/xla/{cfg_name}")).run(|| {
+                black_box(xla_pool.grad(0, black_box(&theta), 0).unwrap());
+            });
+        }
+    }
+
+    // --- aggregation ----------------------------------------------------
+    for &(k, dim) in &[(12usize, 64usize), (24, 64), (12, 4096)] {
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let mut g = vec![0.0f32; dim];
+                rng.fill_normal(&mut g, 0.0, 1.0);
+                g
+            })
+            .collect();
+        let contribs: Vec<Contribution<'_>> = grads
+            .iter()
+            .map(|g| Contribution { grad: g, examples: 256, staleness: 0 })
+            .collect();
+        let mut out = vec![0.0f32; dim];
+        Bench::new(format!("aggregate/mean/k={k},dim={dim}")).run(|| {
+            black_box(aggregate(AggregatorKind::Mean, black_box(&contribs), &mut out));
+        });
+    }
+
+    // --- optimizer steps --------------------------------------------------
+    let dim = 4096;
+    let mut theta = vec![0.0f32; dim];
+    let mut grad = vec![0.0f32; dim];
+    rng.fill_normal(&mut grad, 0.0, 1.0);
+    for kind in [
+        OptimizerKind::sgd(0.1),
+        OptimizerKind::Adam { eta: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        OptimizerKind::Lbfgs { eta: 0.1, history: 10 },
+    ] {
+        let mut opt = kind.build();
+        let mut it = 0u64;
+        Bench::new(format!("optim/{}/dim={dim}", kind.name())).run(|| {
+            opt.step(black_box(&mut theta), black_box(&grad), it);
+            it += 1;
+        });
+    }
+
+    // --- barrier bookkeeping ---------------------------------------------
+    Bench::new("barrier/offer x32").run(|| {
+        let mut b = PartialBarrier::new(0, 32, 24);
+        for w in 0..32 {
+            black_box(b.offer(w, 0));
+        }
+    });
+
+    // --- one whole virtual iteration (native, M=16) -----------------------
+    let spec = KrrProblemSpec::small().with_machines(16);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let cluster = ClusterSpec { workers: 16, ..ClusterSpec::default() };
+    Bench::new("sim/whole-run-100-iters/M=16,small").run(|| {
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma: 12 },
+            optimizer: OptimizerKind::sgd(1.0),
+            loss_form: LossForm::krr(spec.lambda),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(100);
+        let mut pool = problem.native_pool();
+        black_box(sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap());
+    });
+}

@@ -1,0 +1,121 @@
+//! T1 — accuracy vs abandon rate (paper §1/§3.2: "the relationship between
+//! accuracy and abandon rate").
+//!
+//! Sweep γ over M=32 machines (abandon rate 1−γ/M from 0 to ~97%), train to
+//! a fixed iteration budget, report final relative parameter error
+//! ‖θ−θ*‖/‖θ*‖, holdout loss gap to the exact optimum, and total virtual
+//! time.  5 seeds per point.  Also includes the DESIGN.md §6 "hybrid-reuse"
+//! ablation row (staleness-damped inclusion of late gradients).
+//!
+//! Expected shape (paper claim): accuracy degrades *gracefully* as the
+//! abandon rate rises — large speedups cost little accuracy until γζ drops
+//! below the Lemma-3.2 sample size.
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{AggregatorKind, LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::math::{stats::Summary, vec_ops};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+
+const M: usize = 32;
+const SEEDS: u64 = 5;
+const ITERS: u64 = 250;
+
+fn run_point(
+    gamma: usize,
+    aggregator: AggregatorKind,
+    seeds: u64,
+) -> (Summary, Summary, Summary) {
+    let mut rel_errs = Vec::new();
+    let mut loss_gaps = Vec::new();
+    let mut times = Vec::new();
+    for seed in 0..seeds {
+        let spec = KrrProblemSpec::small().with_machines(M).with_seed(100 + seed);
+        let problem = KrrProblem::generate(&spec).unwrap();
+        let cluster = ClusterSpec {
+            workers: M,
+            delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
+            seed: 7000 + seed,
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: if gamma == M {
+                SyncMode::Bsp
+            } else {
+                SyncMode::Hybrid { gamma }
+            },
+            optimizer: OptimizerKind::Sgd {
+                eta: hybriditer::optim::EtaSchedule { eta0: 1.0, decay: 0.005 },
+            },
+            aggregator,
+            loss_form: LossForm::krr(spec.lambda),
+            eval_every: 0,
+            record_every: ITERS, // only need the final state
+            seed,
+            ..RunConfig::default()
+        }
+        .with_iters(ITERS);
+        let mut pool = problem.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        let rel = problem.theta_err(&rep.theta) / vec_ops::norm2(&problem.theta_star);
+        rel_errs.push(rel);
+        loss_gaps.push(problem.eval_loss(&rep.theta) - problem.eval_loss(&problem.theta_star));
+        times.push(rep.total_time());
+    }
+    (
+        Summary::of(&rel_errs),
+        Summary::of(&loss_gaps),
+        Summary::of(&times),
+    )
+}
+
+fn main() {
+    println!("T1: accuracy vs abandon rate — M={M}, {ITERS} iters, {SEEDS} seeds/point");
+    println!("paper claim: accuracy degrades gracefully as abandon rate rises\n");
+
+    let mut table = Table::new(
+        "T1 accuracy vs abandon rate",
+        &["gamma", "abandon_%", "rel_err_mean", "rel_err_std", "eval_gap", "virt_time_s", "speedup"],
+    );
+    let gammas = [32usize, 28, 24, 20, 16, 12, 8, 4, 2, 1];
+    let mut bsp_time = None;
+    for &g in &gammas {
+        let (rel, gap, time) = run_point(g, AggregatorKind::Mean, SEEDS);
+        if g == M {
+            bsp_time = Some(time.mean);
+        }
+        table.row(vec![
+            g.to_string(),
+            f(100.0 * (1.0 - g as f64 / M as f64), 1),
+            format!("{:.4e}", rel.mean),
+            format!("{:.1e}", rel.std),
+            format!("{:.3e}", gap.mean),
+            f(time.mean, 2),
+            f(bsp_time.unwrap() / time.mean, 2),
+        ]);
+    }
+    table.print();
+    table.save_csv("t1_accuracy_vs_abandon").unwrap();
+
+    // Ablation: abandon (paper) vs staleness-damped reuse of late grads.
+    let mut ab = Table::new(
+        "T1 ablation: abandon vs hybrid-reuse (gamma=8, rho=0.5)",
+        &["policy", "rel_err_mean", "virt_time_s"],
+    );
+    for (name, agg) in [
+        ("abandon (paper)", AggregatorKind::Mean),
+        ("reuse rho=0.5", AggregatorKind::StalenessDamped { rho: 0.5 }),
+    ] {
+        let (rel, _, time) = run_point(8, agg, SEEDS);
+        ab.row(vec![
+            name.to_string(),
+            format!("{:.4e}", rel.mean),
+            f(time.mean, 2),
+        ]);
+    }
+    ab.print();
+    ab.save_csv("t1_ablation_reuse").unwrap();
+}

@@ -1,0 +1,176 @@
+//! T3 — Algorithm-1 estimator validation (Lemmas 3.1/3.2).
+//!
+//! Three parts:
+//!  (a) the finite-population-correction variance formula of Lemma 3.1,
+//!      checked against Monte-Carlo resampling;
+//!  (b) Lemma 3.2 coverage on a scalar population where its assumptions
+//!      hold exactly (known s², Δ = ξ·|Z̄|): coverage ≈ 1−α;
+//!  (c) the paper's distribution-free Algorithm-1 bound applied to real
+//!      KRR *gradients*, vs the variance-aware adaptive estimator —
+//!      exposing where the worst-case step (s² vs (ξZ̄)², §3.2) is and
+//!      isn't conservative.
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::coordinator::estimator::{
+    estimate_gamma, estimate_sample_size, AdaptiveEstimator, EstimatorParams,
+};
+use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::math::vec_ops;
+use hybriditer::util::rng::Pcg64;
+
+fn part_a_fpc() {
+    let mut rng = Pcg64::seeded(1);
+    let n_pop = 5000usize;
+    let pop: Vec<f64> = (0..n_pop).map(|_| rng.normal() * 2.0 + 1.0).collect();
+    let pop_mean = pop.iter().sum::<f64>() / n_pop as f64;
+    let pop_var = pop.iter().map(|x| (x - pop_mean).powi(2)).sum::<f64>() / n_pop as f64;
+
+    let mut table = Table::new(
+        "T3a Lemma 3.1: Var(sample mean) with finite-population correction",
+        &["n", "predicted_var", "measured_var", "ratio"],
+    );
+    for &n in &[10usize, 100, 1000, 4000] {
+        let predicted = pop_var / n as f64 * (n_pop - n) as f64 / (n_pop - 1) as f64;
+        let trials = 4000;
+        let mut means = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let idx = rng.sample_indices(n_pop, n);
+            means.push(idx.iter().map(|&i| pop[i]).sum::<f64>() / n as f64);
+        }
+        let mm = means.iter().sum::<f64>() / trials as f64;
+        let mv = means.iter().map(|x| (x - mm).powi(2)).sum::<f64>() / trials as f64;
+        table.row(vec![
+            n.to_string(),
+            format!("{predicted:.5e}"),
+            format!("{mv:.5e}"),
+            f(mv / predicted, 3),
+        ]);
+    }
+    table.print();
+    table.save_csv("t3a_fpc_variance").unwrap();
+}
+
+fn part_b_coverage() {
+    let mut rng = Pcg64::seeded(2);
+    let n_pop = 30_000usize;
+    let pop: Vec<f64> = (0..n_pop).map(|_| 4.0 + rng.normal()).collect();
+    let pop_mean = pop.iter().sum::<f64>() / n_pop as f64;
+    let s2 = pop.iter().map(|x| (x - pop_mean).powi(2)).sum::<f64>() / (n_pop - 1) as f64;
+
+    let mut table = Table::new(
+        "T3b Lemma 3.2 coverage on a population satisfying its assumptions",
+        &["alpha", "xi", "n_lemma", "coverage_%", "target_%"],
+    );
+    for &alpha in &[0.01, 0.05, 0.10] {
+        for &xi in &[0.01, 0.02, 0.05] {
+            let p = EstimatorParams { alpha, xi };
+            let u = p.u_half_alpha();
+            let delta = xi * pop_mean.abs();
+            let n = ((n_pop as f64) * u * u * s2
+                / (delta * delta * n_pop as f64 + u * u * s2))
+                .ceil() as usize;
+            let trials = 1500;
+            let mut hits = 0;
+            for _ in 0..trials {
+                let idx = rng.sample_indices(n_pop, n);
+                let mean = idx.iter().map(|&i| pop[i]).sum::<f64>() / n as f64;
+                if (mean - pop_mean).abs() < delta {
+                    hits += 1;
+                }
+            }
+            table.row(vec![
+                f(alpha, 2),
+                f(xi, 2),
+                n.to_string(),
+                f(100.0 * hits as f64 / trials as f64, 1),
+                f(100.0 * (1.0 - alpha), 1),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("t3b_lemma32_coverage").unwrap();
+}
+
+fn part_c_gradients() {
+    let spec = KrrProblemSpec::default_config().with_machines(32);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let (n, zeta, m) = (spec.total_examples(), spec.zeta, spec.machines);
+    let mut pool = problem.native_pool();
+
+    let mut rng = Pcg64::seeded(3);
+    let mut theta = vec![0.0f32; problem.dim()];
+    rng.fill_normal(&mut theta, 0.0, 1.0);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|w| pool.grad(w, &theta, 0).unwrap().grad)
+        .collect();
+    let mut full = vec![0.0f32; problem.dim()];
+    for g in &grads {
+        vec_ops::add_assign(&mut full, g);
+    }
+    vec_ops::scale(&mut full, 1.0 / m as f32);
+    let full_norm = vec_ops::norm2(&full);
+
+    let mut table = Table::new(
+        "T3c Algorithm-1 (distribution-free) vs variance-aware gamma on real gradients",
+        &["alpha", "xi", "g_alg1", "cov_alg1_%", "g_adaptive", "cov_adapt_%"],
+    );
+    for &alpha in &[0.05, 0.10] {
+        for &xi in &[0.05, 0.10, 0.25] {
+            let p = EstimatorParams { alpha, xi };
+            let g1 = estimate_gamma(n, zeta, m, p).unwrap();
+
+            let mut adaptive = AdaptiveEstimator::new(n, zeta, m, p);
+            let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            adaptive.observe(&views);
+            adaptive.observe(&views);
+            let g2 = adaptive.gamma().unwrap();
+
+            let coverage = |gamma: usize, rng: &mut Pcg64| {
+                let trials = 400;
+                let mut hits = 0;
+                let mut sub = vec![0.0f32; problem.dim()];
+                for _ in 0..trials {
+                    let idx = rng.sample_indices(m, gamma);
+                    sub.fill(0.0);
+                    for &w in &idx {
+                        vec_ops::add_assign(&mut sub, &grads[w]);
+                    }
+                    vec_ops::scale(&mut sub, 1.0 / gamma as f32);
+                    if vec_ops::dist2(&sub, &full) / full_norm <= xi {
+                        hits += 1;
+                    }
+                }
+                100.0 * hits as f64 / trials as f64
+            };
+            let c1 = coverage(g1, &mut rng);
+            let c2 = coverage(g2, &mut rng);
+            table.row(vec![
+                f(alpha, 2),
+                f(xi, 2),
+                g1.to_string(),
+                f(c1, 1),
+                g2.to_string(),
+                f(c2, 1),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("t3c_estimator_on_gradients").unwrap();
+    println!(
+        "\nReading: Lemma 3.2 holds exactly on populations satisfying its\n\
+         assumptions (T3b ≈ target).  On real gradients the paper's final\n\
+         distribution-free step (dropping s² against (ξZ̄)²) is NOT always\n\
+         conservative — per-coordinate scatter can exceed the mean gradient\n\
+         magnitude, so Algorithm 1 under-provisions γ where the variance-\n\
+         aware (adaptive) estimator provisions correctly.  This matches the\n\
+         paper's soundness assessment and motivates the DESIGN.md §6\n\
+         adaptive-γ ablation."
+    );
+}
+
+fn main() {
+    println!("T3: estimator validation (Lemmas 3.1, 3.2, Algorithm 1)\n");
+    part_a_fpc();
+    part_b_coverage();
+    part_c_gradients();
+}

@@ -1,0 +1,199 @@
+//! Benchmark harness (criterion is not in the vendor set).
+//!
+//! Two layers:
+//! * [`Bench`] — microbenchmark timing: warmup, fixed-duration sampling,
+//!   mean/p50/p99 reporting (used by `micro_hotpath`);
+//! * [`Table`] — aligned experiment-table printing + CSV mirror, used by
+//!   every T*/F* bench to emit the rows the paper's tables/figures would
+//!   hold.
+
+use std::time::{Duration, Instant};
+
+use crate::math::stats::Summary;
+
+/// Microbenchmark runner.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+}
+
+/// One microbenchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub throughput_hz: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Time `f` repeatedly; returns timing summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() > 2_000_000 {
+                break;
+            }
+        }
+        let s = Summary::of(&samples);
+        let res = BenchResult {
+            name: self.name.clone(),
+            samples: samples.len(),
+            mean: s.mean,
+            p50: s.p50,
+            p99: s.p99,
+            throughput_hz: if s.mean > 0.0 { 1.0 / s.mean } else { f64::INFINITY },
+        };
+        println!(
+            "{:40} {:>8} samples  mean {:>10}  p50 {:>10}  p99 {:>10}  ({:.1}/s)",
+            res.name,
+            res.samples,
+            crate::util::fmt_secs(res.mean),
+            crate::util::fmt_secs(res.p50),
+            crate::util::fmt_secs(res.p99),
+            res.throughput_hz
+        );
+        res
+    }
+}
+
+/// Aligned experiment table: collects rows, prints, optionally mirrors to CSV.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Print with per-column alignment.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("\n=== {} ===", self.title);
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Mirror to `results/<slug>.csv`.
+    pub fn save_csv(&self, slug: &str) -> crate::Result<std::path::PathBuf> {
+        let path = std::path::Path::new("results").join(format!("{slug}.csv"));
+        let header: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        crate::metrics::csv::write_table(&header, &self.rows, &path)?;
+        Ok(path)
+    }
+}
+
+/// Format helper: fixed-precision float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format helper: scientific float cell.
+pub fn sci(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_closure() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(20))
+            .run(|| {
+                std::hint::black_box(1 + 1);
+            });
+        assert!(r.samples >= 10);
+        assert!(r.mean >= 0.0);
+        assert!(r.p99 >= r.p50);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        t.row(vec!["2".into(), "y".into()]);
+        t.print();
+        assert_eq!(t.rows().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert!(sci(1234.5).contains('e'));
+    }
+}

@@ -1,0 +1,303 @@
+//! Minimal declarative flag parser: `--key value`, `--flag`, positionals.
+//!
+//! Supports exactly what the `hybriditer` binary and the examples need:
+//! long options with values, boolean flags, required/optional args with
+//! defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument specification.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &'static str, about: &'static str) -> ArgSpec {
+        ArgSpec {
+            program,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument (all required, in order).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("  --{} <v> (default {d})", o.name)
+            } else {
+                format!("  --{} <v> (required)", o.name)
+            };
+            s.push_str(&format!("{head:40} {}\n", o.help));
+        }
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("  <{p}>{:34} {h}\n", ""));
+        }
+        s.push_str("  --help                                 print this help\n");
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Config(self.usage()));
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                // Support --key=value too.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Config(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!("--{name} takes no value")));
+                    }
+                    flags.push(name.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+
+        // Defaults + required checks.
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        values.insert(o.name.to_string(), d.clone());
+                    }
+                    None => {
+                        return Err(Error::Config(format!(
+                            "missing required --{}\n\n{}",
+                            o.name,
+                            self.usage()
+                        )))
+                    }
+                }
+            }
+        }
+        if positionals.len() != self.positionals.len() {
+            return Err(Error::Config(format!(
+                "expected {} positional arg(s), got {}\n\n{}",
+                self.positionals.len(),
+                positionals.len(),
+                self.usage()
+            )));
+        }
+
+        Ok(Parsed {
+            values,
+            flags,
+            positionals,
+        })
+    }
+
+    /// Parse `std::env::args().skip(1)`; on `--help` or error, print + exit.
+    pub fn parse_or_exit(&self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(p) => p,
+            Err(Error::Config(msg)) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.program) { 0 } else { 2 });
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected float, got '{}'", self.get(name))))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn positional(&self, i: usize) -> &str {
+        &self.positionals[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("prog", "test program")
+            .opt("workers", "8", "number of workers")
+            .opt("eta", "0.5", "step size")
+            .req("mode", "sync mode")
+            .flag("verbose", "chatty")
+            .positional("config", "config file")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let p = spec()
+            .parse(&sv(&["--workers", "16", "--mode=hybrid", "--verbose", "conf.toml"]))
+            .unwrap();
+        assert_eq!(p.get_usize("workers").unwrap(), 16);
+        assert_eq!(p.get("mode"), "hybrid");
+        assert_eq!(p.get_f64("eta").unwrap(), 0.5); // default
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional(0), "conf.toml");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = spec().parse(&sv(&["conf.toml"])).unwrap_err();
+        assert!(format!("{e}").contains("--mode"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = spec()
+            .parse(&sv(&["--nope", "1", "--mode", "bsp", "c"]))
+            .unwrap_err();
+        assert!(format!("{e}").contains("--nope"));
+    }
+
+    #[test]
+    fn positional_count_checked() {
+        assert!(spec().parse(&sv(&["--mode", "bsp"])).is_err());
+        assert!(spec().parse(&sv(&["--mode", "bsp", "a", "b"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let p = spec()
+            .parse(&sv(&["--workers", "abc", "--mode", "bsp", "c"]))
+            .unwrap();
+        assert!(p.get_usize("workers").is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = spec().parse(&sv(&["--help"])).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("USAGE"));
+        assert!(msg.contains("--workers"));
+    }
+}

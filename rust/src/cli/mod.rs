@@ -1,0 +1,5 @@
+//! Command-line argument parsing (clap is not in the vendor set).
+
+pub mod args;
+
+pub use args::{ArgSpec, Parsed};

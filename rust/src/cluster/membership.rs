@@ -1,0 +1,152 @@
+//! Master-side membership view: which workers are alive, crashed, or late.
+//!
+//! The hybrid barrier needs this to (a) size `γ` against *alive* workers and
+//! (b) detect the BSP stall condition when a worker dies.
+
+use crate::straggler::FailureEvent;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    Alive,
+    Down,
+}
+
+/// Tracks per-worker liveness plus abandon accounting.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    states: Vec<WorkerState>,
+    /// Results abandoned per worker (arrived after the barrier closed).
+    abandoned: Vec<u64>,
+    /// Results contributed per worker.
+    contributed: Vec<u64>,
+    crashes: u64,
+    rejoins: u64,
+}
+
+impl Membership {
+    pub fn new(workers: usize) -> Membership {
+        Membership {
+            states: vec![WorkerState::Alive; workers],
+            abandoned: vec![0; workers],
+            contributed: vec![0; workers],
+            crashes: 0,
+            rejoins: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn alive(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| **s == WorkerState::Alive)
+            .count()
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.states[w] == WorkerState::Alive
+    }
+
+    /// Record a failure-model event observed for worker `w`.
+    pub fn observe(&mut self, w: usize, ev: FailureEvent) {
+        match ev {
+            FailureEvent::Crashed => {
+                self.states[w] = WorkerState::Down;
+                self.crashes += 1;
+            }
+            FailureEvent::Rejoined => {
+                self.states[w] = WorkerState::Alive;
+                self.rejoins += 1;
+            }
+            FailureEvent::Down => self.states[w] = WorkerState::Down,
+            FailureEvent::Healthy | FailureEvent::TransientDrop => {
+                self.states[w] = WorkerState::Alive;
+            }
+        }
+    }
+
+    pub fn mark_down(&mut self, w: usize) {
+        if self.states[w] == WorkerState::Alive {
+            self.states[w] = WorkerState::Down;
+            self.crashes += 1;
+        }
+    }
+
+    pub fn record_contribution(&mut self, w: usize) {
+        self.contributed[w] += 1;
+    }
+
+    pub fn record_abandoned(&mut self, w: usize) {
+        self.abandoned[w] += 1;
+    }
+
+    pub fn total_abandoned(&self) -> u64 {
+        self.abandoned.iter().sum()
+    }
+
+    pub fn total_contributed(&self) -> u64 {
+        self.contributed.iter().sum()
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Per-worker (contributed, abandoned) counters, for fairness reports.
+    pub fn per_worker(&self) -> Vec<(u64, u64)> {
+        self.contributed
+            .iter()
+            .zip(&self.abandoned)
+            .map(|(&c, &a)| (c, a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_and_rejoin_counts() {
+        let mut m = Membership::new(3);
+        assert_eq!(m.alive(), 3);
+        m.observe(1, FailureEvent::Crashed);
+        assert_eq!(m.alive(), 2);
+        assert!(!m.is_alive(1));
+        m.observe(1, FailureEvent::Down);
+        assert_eq!(m.crashes(), 1);
+        m.observe(1, FailureEvent::Rejoined);
+        assert_eq!(m.alive(), 3);
+        assert_eq!(m.rejoins(), 1);
+    }
+
+    #[test]
+    fn abandon_accounting() {
+        let mut m = Membership::new(2);
+        m.record_contribution(0);
+        m.record_contribution(0);
+        m.record_abandoned(1);
+        assert_eq!(m.total_contributed(), 2);
+        assert_eq!(m.total_abandoned(), 1);
+        assert_eq!(m.per_worker(), vec![(2, 0), (0, 1)]);
+    }
+
+    #[test]
+    fn mark_down_idempotent_on_crash_count() {
+        let mut m = Membership::new(2);
+        m.mark_down(0);
+        m.mark_down(0);
+        assert_eq!(m.crashes(), 1);
+        assert_eq!(m.alive(), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Typed master <-> worker messages for the threaded ("real") runtime.
+
+use std::sync::Arc;
+
+/// Master -> worker.
+#[derive(Clone, Debug)]
+pub enum MasterMsg {
+    /// Compute a gradient at `theta` for iteration `iter`.
+    /// `theta` is shared (Arc) so a broadcast does not clone M times.
+    Work { iter: u64, theta: Arc<Vec<f32>> },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+/// Worker -> master.
+#[derive(Debug)]
+pub enum WorkerMsg {
+    /// A finished gradient.
+    Grad {
+        worker: usize,
+        iter: u64,
+        grad: Vec<f32>,
+        /// Shard loss contribution (sum of squared residuals for KRR,
+        /// summed NLL for the LM), if the executable provides it.
+        loss_sum: Option<f64>,
+        /// Examples that contributed (the paper's ζ).
+        examples: usize,
+        /// Pure compute time (excludes injected delay), seconds.
+        compute_secs: f64,
+    },
+    /// Worker hit an unrecoverable error and is exiting.
+    Fatal { worker: usize, error: String },
+    /// Worker simulated a crash (fault injection) and stops responding.
+    SimulatedCrash { worker: usize, iter: u64 },
+}
+
+impl WorkerMsg {
+    pub fn worker(&self) -> usize {
+        match self {
+            WorkerMsg::Grad { worker, .. }
+            | WorkerMsg::Fatal { worker, .. }
+            | WorkerMsg::SimulatedCrash { worker, .. } => *worker,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_shares_theta() {
+        let theta = Arc::new(vec![1.0f32; 1024]);
+        let msgs: Vec<MasterMsg> = (0..8)
+            .map(|_| MasterMsg::Work {
+                iter: 1,
+                theta: Arc::clone(&theta),
+            })
+            .collect();
+        assert_eq!(Arc::strong_count(&theta), 9);
+        drop(msgs);
+        assert_eq!(Arc::strong_count(&theta), 1);
+    }
+
+    #[test]
+    fn worker_accessor() {
+        let m = WorkerMsg::Fatal {
+            worker: 3,
+            error: "x".into(),
+        };
+        assert_eq!(m.worker(), 3);
+    }
+}

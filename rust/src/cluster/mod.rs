@@ -1,0 +1,131 @@
+//! Cluster model: topology spec, typed messages, membership tracking.
+//!
+//! The paper ran on a physical master/slave cluster; here the cluster is
+//! simulated in-process (DESIGN.md §3): workers are OS threads in
+//! [`crate::worker`] ("real" timing mode) or discrete-event entities in
+//! [`crate::sim`] ("virtual" timing mode).  Both share this module's
+//! specification, message, and membership types.
+
+pub mod membership;
+pub mod message;
+
+pub use membership::Membership;
+pub use message::{MasterMsg, WorkerMsg};
+
+use crate::straggler::{DelayModel, FailureModel, StragglerProfile};
+
+/// How iteration latency is realized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimingMode {
+    /// Worker threads actually sleep their injected delays; the master
+    /// measures wall-clock.  Used by the examples that demonstrate real
+    /// time savings.
+    Real,
+    /// Discrete-event simulation: latencies are bookkept, nothing sleeps.
+    /// Deterministic and fast — the default for benches.
+    Virtual,
+}
+
+/// The cluster an experiment runs on.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Number of slave machines `M`.
+    pub workers: usize,
+    /// Baseline per-iteration compute time (virtual seconds) of a healthy
+    /// worker.  In `Real` mode this also scales the injected sleeps.
+    pub base_compute: f64,
+    /// Stochastic extra delay, applied to every worker.
+    pub delay: DelayModel,
+    /// Chronically slow nodes: `(worker index, multiplier)`.
+    pub slow_nodes: Vec<(usize, f64)>,
+    /// Failure behaviour, applied to every worker (unless `failure_only`
+    /// narrows it).
+    pub failure: FailureModel,
+    /// If non-empty, only these workers get the failure model (the rest are
+    /// failure-free) — lets experiments kill *specific* nodes.
+    pub failure_only: Vec<usize>,
+    /// Master-side per-iteration overhead (aggregate + update), seconds.
+    pub master_overhead: f64,
+    /// RNG seed for all injected randomness (delays, failures).
+    pub seed: u64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            workers: 8,
+            base_compute: 0.010,
+            delay: DelayModel::None,
+            slow_nodes: vec![],
+            failure: FailureModel::none(),
+            failure_only: vec![],
+            master_overhead: 0.0005,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl ClusterSpec {
+    /// Build each worker's [`StragglerProfile`].
+    pub fn profiles(&self) -> Vec<StragglerProfile> {
+        (0..self.workers)
+            .map(|w| {
+                let slow_factor = self
+                    .slow_nodes
+                    .iter()
+                    .find(|(idx, _)| *idx == w)
+                    .map(|(_, f)| *f)
+                    .unwrap_or(1.0);
+                let failure = if self.failure_only.is_empty() || self.failure_only.contains(&w)
+                {
+                    self.failure.clone()
+                } else {
+                    FailureModel::none()
+                };
+                StragglerProfile {
+                    base_compute: self.base_compute,
+                    slow_factor,
+                    delay: self.delay.clone(),
+                    failure,
+                }
+            })
+            .collect()
+    }
+
+    /// Convenience: mark the last `n` workers as chronically `factor`× slow.
+    pub fn with_slow_tail(mut self, n: usize, factor: f64) -> Self {
+        assert!(n <= self.workers);
+        self.slow_nodes = ((self.workers - n)..self.workers)
+            .map(|w| (w, factor))
+            .collect();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_apply_slow_nodes() {
+        let spec = ClusterSpec {
+            workers: 4,
+            slow_nodes: vec![(1, 8.0)],
+            ..ClusterSpec::default()
+        };
+        let ps = spec.profiles();
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].slow_factor, 1.0);
+        assert_eq!(ps[1].slow_factor, 8.0);
+    }
+
+    #[test]
+    fn slow_tail_marks_last_workers() {
+        let spec = ClusterSpec {
+            workers: 6,
+            ..ClusterSpec::default()
+        }
+        .with_slow_tail(2, 4.0);
+        assert_eq!(spec.slow_nodes, vec![(4, 4.0), (5, 4.0)]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Configuration substrate: a shared dynamic [`Value`] tree with TOML-subset
+//! and JSON parsers, plus the typed experiment schema.
+//!
+//! `serde`/`toml`/`serde_json` are not in the offline vendor set, so both
+//! parsers are implemented here (DESIGN.md §3).  The TOML subset covers what
+//! experiment configs need: comments, `[section]` / `[a.b]` tables, strings,
+//! ints, floats, bools, and flat arrays.  The JSON parser is complete
+//! (minus `\u` surrogate pairs folding to replacement chars) and is what
+//! `runtime::manifest` uses to read `artifacts/manifest.json`.
+
+pub mod json;
+pub mod schema;
+pub mod toml;
+pub mod value;
+
+pub use schema::ExperimentConfig;
+pub use value::Value;

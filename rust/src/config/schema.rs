@@ -1,0 +1,345 @@
+//! Typed experiment schema: TOML [`Value`] → problem/cluster/run configs.
+//!
+//! An experiment file looks like:
+//!
+//! ```toml
+//! [problem]
+//! kind = "krr"          # or "lm"
+//! config = "default"    # AOT artifact config name
+//! machines = 16
+//! noise = 0.1
+//! lambda = 0.01
+//! seed = 42
+//!
+//! [mode]
+//! kind = "hybrid"       # bsp | hybrid | hybrid-auto | hybrid-adaptive | async
+//! gamma = 12
+//! alpha = 0.05          # hybrid-auto / hybrid-adaptive
+//! xi = 0.05
+//!
+//! [straggler]
+//! delay = "lognormal"   # none|constant|uniform|lognormal|pareto|bimodal|exponential
+//! mu = -4.0
+//! sigma = 1.0
+//! base_compute = 0.01
+//! slow_nodes = 2
+//! slow_factor = 8.0
+//! crash_prob = 0.0
+//! transient_prob = 0.0
+//! rejoin_after = 0      # 0 = never
+//!
+//! [optimizer]
+//! kind = "sgd"          # sgd | momentum | nesterov | adam | lbfgs | cg
+//! eta = 0.5
+//! decay = 0.0
+//!
+//! [run]
+//! iters = 500
+//! eval_every = 10
+//! record_every = 1
+//! timing = "virtual"    # virtual | real
+//! backend = "xla"       # xla | native
+//! seed = 1
+//! ```
+
+use crate::cluster::{ClusterSpec, TimingMode};
+use crate::coordinator::{AggregatorKind, LossForm, RunConfig, StopRule, SyncMode};
+use crate::data::KrrProblemSpec;
+use crate::optim::{EtaSchedule, OptimizerKind};
+use crate::straggler::{DelayModel, FailureModel};
+use crate::{Error, Result};
+
+use super::value::Value;
+
+/// What computes the gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT PJRT artifacts (the production path).
+    Xla,
+    /// Pure-rust mirror (tests / simulation-heavy benches).
+    Native,
+}
+
+/// Which workload to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemKind {
+    Krr,
+    Lm { config: String },
+}
+
+/// A fully parsed experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub problem_kind: ProblemKind,
+    pub krr: KrrProblemSpec,
+    pub cluster: ClusterSpec,
+    pub run: RunConfig,
+    pub timing: TimingMode,
+    pub backend: Backend,
+    pub out_csv: Option<String>,
+}
+
+impl ExperimentConfig {
+    /// Parse from a TOML document.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        Self::from_value(&super::toml::parse(text)?)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<ExperimentConfig> {
+        Self::from_value(&super::toml::load(path)?)
+    }
+
+    pub fn from_value(v: &Value) -> Result<ExperimentConfig> {
+        // --- [problem] -------------------------------------------------
+        let pkind = v.opt_str("problem.kind", "krr");
+        let config = v.opt_str("problem.config", "default").to_string();
+        let machines = v.opt_usize("problem.machines", 8);
+        let mut krr = match config.as_str() {
+            "small" => KrrProblemSpec::small(),
+            "default" => KrrProblemSpec::default_config(),
+            "wide" => KrrProblemSpec::wide(),
+            other if pkind == "krr" => {
+                return Err(Error::Config(format!("unknown krr config '{other}'")))
+            }
+            _ => KrrProblemSpec::default_config(),
+        };
+        krr.machines = machines;
+        krr.noise = v.opt_f64("problem.noise", krr.noise);
+        krr.lambda = v.opt_f64("problem.lambda", krr.lambda);
+        krr.seed = v.opt_u64("problem.seed", krr.seed);
+        let problem_kind = match pkind {
+            "krr" => ProblemKind::Krr,
+            "lm" => ProblemKind::Lm {
+                config: v.opt_str("problem.config", "lm_tiny").to_string(),
+            },
+            other => return Err(Error::Config(format!("unknown problem kind '{other}'"))),
+        };
+
+        // --- [mode] ----------------------------------------------------
+        let mode = parse_mode(v, machines)?;
+
+        // --- [straggler] -> ClusterSpec ---------------------------------
+        let delay_kind = v.opt_str("straggler.delay", "none");
+        let sub = v
+            .get("straggler")
+            .cloned()
+            .unwrap_or_else(Value::empty_table);
+        let delay = DelayModel::from_kind(delay_kind, &sub)?;
+        let rejoin = v.opt_u64("straggler.rejoin_after", 0);
+        let failure = FailureModel {
+            crash_prob: v.opt_f64("straggler.crash_prob", 0.0),
+            transient_prob: v.opt_f64("straggler.transient_prob", 0.0),
+            rejoin_after: if rejoin > 0 { Some(rejoin) } else { None },
+        };
+        let slow_n = v.opt_usize("straggler.slow_nodes", 0);
+        let slow_factor = v.opt_f64("straggler.slow_factor", 4.0);
+        let cluster = ClusterSpec {
+            workers: machines,
+            base_compute: v.opt_f64("straggler.base_compute", 0.01),
+            delay,
+            slow_nodes: vec![],
+            failure,
+            failure_only: v
+                .get("straggler.failure_only")
+                .and_then(Value::as_array)
+                .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                .unwrap_or_default(),
+            master_overhead: v.opt_f64("straggler.master_overhead", 0.0005),
+            seed: v.opt_u64("straggler.seed", 0x5eed),
+        }
+        .with_slow_tail(slow_n.min(machines), slow_factor);
+
+        // --- [optimizer] -------------------------------------------------
+        let optimizer = parse_optimizer(v)?;
+
+        // --- [run] -------------------------------------------------------
+        let run = RunConfig {
+            mode,
+            optimizer,
+            aggregator: match v.opt_str("run.aggregator", "mean") {
+                "mean" => AggregatorKind::Mean,
+                "example-weighted" => AggregatorKind::ExampleWeighted,
+                "staleness-damped" => AggregatorKind::StalenessDamped {
+                    rho: v.opt_f64("run.rho", 0.5),
+                },
+                other => return Err(Error::Config(format!("unknown aggregator '{other}'"))),
+            },
+            stop: StopRule {
+                max_iters: v.opt_u64("run.iters", 500),
+                loss_tol: v.opt_f64("run.loss_tol", 0.0),
+                patience: v.opt_u64("run.patience", 20),
+                grad_tol: v.opt_f64("run.grad_tol", 0.0),
+            },
+            loss_form: if matches!(problem_kind, ProblemKind::Krr) {
+                LossForm::krr(krr.lambda)
+            } else {
+                LossForm::plain()
+            },
+            bsp_recovery: crate::coordinator::BspRecovery::Retry {
+                detect_timeout: v.opt_f64("run.bsp_detect_timeout", 0.05),
+            },
+            eval_every: v.opt_u64("run.eval_every", 10),
+            record_every: v.opt_u64("run.record_every", 1),
+            init_theta: None,
+            seed: v.opt_u64("run.seed", 1),
+        };
+
+        let timing = match v.opt_str("run.timing", "virtual") {
+            "virtual" => TimingMode::Virtual,
+            "real" => TimingMode::Real,
+            other => return Err(Error::Config(format!("unknown timing '{other}'"))),
+        };
+        let backend = match v.opt_str("run.backend", "xla") {
+            "xla" => Backend::Xla,
+            "native" => Backend::Native,
+            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+        };
+
+        Ok(ExperimentConfig {
+            problem_kind,
+            krr,
+            cluster,
+            run,
+            timing,
+            backend,
+            out_csv: v.get("run.out_csv").and_then(Value::as_str).map(String::from),
+        })
+    }
+}
+
+fn parse_mode(v: &Value, machines: usize) -> Result<SyncMode> {
+    Ok(match v.opt_str("mode.kind", "hybrid") {
+        "bsp" => SyncMode::Bsp,
+        "hybrid" => SyncMode::Hybrid {
+            gamma: v.opt_usize("mode.gamma", machines.max(2) * 3 / 4),
+        },
+        "hybrid-auto" => SyncMode::HybridAuto {
+            alpha: v.opt_f64("mode.alpha", 0.05),
+            xi: v.opt_f64("mode.xi", 0.05),
+        },
+        "hybrid-adaptive" => SyncMode::HybridAdaptive {
+            alpha: v.opt_f64("mode.alpha", 0.05),
+            xi: v.opt_f64("mode.xi", 0.05),
+            window: v.opt_u64("mode.window", 20),
+        },
+        "async" => SyncMode::Async {
+            damping: v.opt_f64("mode.damping", 0.0),
+        },
+        other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+    })
+}
+
+fn parse_optimizer(v: &Value) -> Result<OptimizerKind> {
+    let eta = v.opt_f64("optimizer.eta", 0.5);
+    let decay = v.opt_f64("optimizer.decay", 0.0);
+    let sched = EtaSchedule { eta0: eta, decay };
+    Ok(match v.opt_str("optimizer.kind", "sgd") {
+        "sgd" => OptimizerKind::Sgd { eta: sched },
+        "momentum" => OptimizerKind::Momentum {
+            eta: sched,
+            mu: v.opt_f64("optimizer.mu", 0.9),
+            nesterov: false,
+        },
+        "nesterov" => OptimizerKind::Momentum {
+            eta: sched,
+            mu: v.opt_f64("optimizer.mu", 0.9),
+            nesterov: true,
+        },
+        "adam" => OptimizerKind::Adam {
+            eta,
+            beta1: v.opt_f64("optimizer.beta1", 0.9),
+            beta2: v.opt_f64("optimizer.beta2", 0.999),
+            eps: v.opt_f64("optimizer.eps", 1e-8),
+        },
+        "lbfgs" => OptimizerKind::Lbfgs {
+            eta,
+            history: v.opt_usize("optimizer.history", 10),
+        },
+        "cg" => OptimizerKind::Cg {
+            eta,
+            restart: v.opt_usize("optimizer.restart", 20),
+        },
+        other => return Err(Error::Config(format!("unknown optimizer '{other}'"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+[problem]
+kind = "krr"
+config = "small"
+machines = 12
+lambda = 0.02
+
+[mode]
+kind = "hybrid"
+gamma = 9
+
+[straggler]
+delay = "lognormal"
+mu = -4.0
+sigma = 1.5
+slow_nodes = 2
+slow_factor = 6.0
+crash_prob = 0.01
+
+[optimizer]
+kind = "momentum"
+eta = 0.3
+mu = 0.95
+
+[run]
+iters = 123
+timing = "virtual"
+backend = "native"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.krr.machines, 12);
+        assert_eq!(cfg.krr.lambda, 0.02);
+        assert_eq!(cfg.run.mode, SyncMode::Hybrid { gamma: 9 });
+        assert_eq!(cfg.cluster.slow_nodes.len(), 2);
+        assert_eq!(cfg.cluster.failure.crash_prob, 0.01);
+        assert_eq!(cfg.run.stop.max_iters, 123);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(
+            cfg.run.optimizer,
+            OptimizerKind::Momentum {
+                eta: EtaSchedule { eta0: 0.3, decay: 0.0 },
+                mu: 0.95,
+                nesterov: false
+            }
+        );
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert_eq!(cfg.krr.machines, 4);
+        assert!(matches!(cfg.run.mode, SyncMode::Hybrid { .. }));
+        assert_eq!(cfg.timing, TimingMode::Virtual);
+    }
+
+    #[test]
+    fn rejects_unknown_enum_values() {
+        assert!(ExperimentConfig::from_toml("[mode]\nkind = \"warp\"").is_err());
+        assert!(ExperimentConfig::from_toml("[optimizer]\nkind = \"qp\"").is_err());
+        assert!(ExperimentConfig::from_toml("[run]\ntiming = \"half\"").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").is_err());
+    }
+
+    #[test]
+    fn lm_problem_kind() {
+        let cfg =
+            ExperimentConfig::from_toml("[problem]\nkind = \"lm\"\nconfig = \"lm_tiny\"").unwrap();
+        assert_eq!(cfg.problem_kind, ProblemKind::Lm { config: "lm_tiny".into() });
+        assert_eq!(cfg.run.loss_form, LossForm::plain());
+    }
+}

@@ -1,0 +1,260 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supported: `#` comments, `[table]` / `[a.b]` headers, `key = value` with
+//! basic strings, integers, floats, booleans, and flat arrays.  This covers
+//! every config under `configs/`; anything fancier (multiline strings,
+//! datetimes, inline tables) is rejected with a line-numbered error.
+
+use super::value::Value;
+use crate::{Error, Result};
+
+/// Parse TOML text into a [`Value::Table`].
+pub fn parse(input: &str) -> Result<Value> {
+    let mut root = Value::empty_table();
+    let mut prefix = String::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated table header"))?
+                .trim();
+            if header.is_empty() || header.starts_with('[') {
+                return Err(err(lineno, "bad table header (arrays-of-tables unsupported)"));
+            }
+            validate_key_path(header).map_err(|m| err(lineno, &m))?;
+            prefix = header.to_string();
+            // Materialize the table even if empty.
+            root.set(&prefix, root.get(&prefix).cloned().unwrap_or_else(Value::empty_table))?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        validate_key_path(key).map_err(|m| err(lineno, &m))?;
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(lineno, &m))?;
+        let path = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        if root.get(&path).is_some() {
+            return Err(err(lineno, &format!("duplicate key '{path}'")));
+        }
+        root.set(&path, value)?;
+    }
+    Ok(root)
+}
+
+/// Load and parse a TOML file.
+pub fn load(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text).map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("toml line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> std::result::Result<(), String> {
+    for part in path.split('.') {
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("invalid key '{path}'"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        // Basic escapes only.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('\\') => out.push('\\'),
+                    Some(other) => return Err(format!("bad escape '\\{other}'")),
+                    None => return Err("dangling backslash".into()),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for piece in split_array_items(inner)? {
+            items.push(parse_value(piece.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // numbers (underscore separators allowed)
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains(['.', 'e', 'E']) || cleaned == "inf" || cleaned == "-inf" {
+        return cleaned
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("bad value '{text}'"));
+    }
+    cleaned
+        .parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| format!("bad value '{text}'"))
+}
+
+/// Split a flat array body on commas, respecting quoted strings.
+fn split_array_items(inner: &str) -> std::result::Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if depth != 0 {
+        return Err("nested arrays unsupported".into());
+    }
+    items.push(&inner[start..]);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = r#"
+# experiment config
+title = "demo"
+
+[problem]
+kind = "krr"
+machines = 16
+lambda = 0.01
+seed = 42
+
+[mode]
+kind = "hybrid"
+gamma = 12
+
+[straggler]
+delay = "lognormal"
+sigma = 1.5
+factors = [1.0, 2.0, 4.0]
+enabled = true
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.req_str("title").unwrap(), "demo");
+        assert_eq!(v.req_usize("problem.machines").unwrap(), 16);
+        assert_eq!(v.req_f64("problem.lambda").unwrap(), 0.01);
+        assert_eq!(v.req_str("mode.kind").unwrap(), "hybrid");
+        assert!(v.opt_bool("straggler.enabled", false));
+        let arr = v.get("straggler.factors").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn nested_table_headers() {
+        let v = parse("[a.b]\nc = 1\n[a.d]\ne = 2").unwrap();
+        assert_eq!(v.req_usize("a.b.c").unwrap(), 1);
+        assert_eq!(v.req_usize("a.d.e").unwrap(), 2);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let v = parse("x = \"a#b\" # trailing\ny = 2 # another").unwrap();
+        assert_eq!(v.req_str("x").unwrap(), "a#b");
+        assert_eq!(v.req_usize("y").unwrap(), 2);
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_floats() {
+        let v = parse("big = 1_000_000\nsci = 1.5e-3\nneg = -7").unwrap();
+        assert_eq!(v.req_usize("big").unwrap(), 1_000_000);
+        assert!((v.req_f64("sci").unwrap() - 0.0015).abs() < 1e-12);
+        assert_eq!(v.get("neg").unwrap().as_i64(), Some(-7));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bad key = 1").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn error_mentions_line() {
+        let e = parse("good = 1\nbad =").unwrap_err();
+        assert!(format!("{e}").contains("line 2"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\nb\tc""#).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "a\nb\tc");
+    }
+}

@@ -1,0 +1,190 @@
+//! Dynamic value tree shared by the TOML and JSON parsers.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed configuration/manifest value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn empty_table() -> Value {
+        Value::Table(BTreeMap::new())
+    }
+
+    /// Navigate a dotted path (`"mode.gamma"`). Returns None if absent.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            match cur {
+                Value::Table(map) => cur = map.get(part)?,
+                _ => return None,
+            }
+        }
+        Some(cur)
+    }
+
+    /// Insert at a dotted path, creating intermediate tables.
+    pub fn set(&mut self, path: &str, v: Value) -> Result<()> {
+        let mut cur = self;
+        let parts: Vec<&str> = path.split('.').collect();
+        for (i, part) in parts.iter().enumerate() {
+            let map = match cur {
+                Value::Table(map) => map,
+                _ => {
+                    return Err(Error::Config(format!(
+                        "set '{path}': '{}' is not a table",
+                        parts[..i].join(".")
+                    )))
+                }
+            };
+            if i == parts.len() - 1 {
+                map.insert((*part).to_string(), v);
+                return Ok(());
+            }
+            cur = map
+                .entry((*part).to_string())
+                .or_insert_with(Value::empty_table);
+        }
+        unreachable!()
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    // --- "required" accessors with config-flavored errors ---------------
+
+    pub fn req_str(&self, path: &str) -> Result<&str> {
+        self.get(path)
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Config(format!("missing string key '{path}'")))
+    }
+
+    pub fn req_usize(&self, path: &str) -> Result<usize> {
+        self.get(path)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::Config(format!("missing integer key '{path}'")))
+    }
+
+    pub fn req_f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::Config(format!("missing float key '{path}'")))
+    }
+
+    // --- "optional with default" accessors -------------------------------
+
+    pub fn opt_str<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, path: &str, default: u64) -> u64 {
+        self.get(path)
+            .and_then(Value::as_i64)
+            .map(|i| i as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dotted_get_set() {
+        let mut v = Value::empty_table();
+        v.set("a.b.c", Value::Int(3)).unwrap();
+        assert_eq!(v.get("a.b.c"), Some(&Value::Int(3)));
+        assert!(v.get("a.b.d").is_none());
+        assert!(v.get("a.b.c.e").is_none());
+    }
+
+    #[test]
+    fn set_through_scalar_fails() {
+        let mut v = Value::empty_table();
+        v.set("a", Value::Int(1)).unwrap();
+        assert!(v.set("a.b", Value::Int(2)).is_err());
+    }
+
+    #[test]
+    fn coercions() {
+        assert_eq!(Value::Float(3.0).as_i64(), Some(3));
+        assert_eq!(Value::Float(3.5).as_i64(), None);
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Str("x".into()).as_bool(), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let v = Value::empty_table();
+        assert_eq!(v.opt_usize("nope", 7), 7);
+        assert_eq!(v.opt_str("nope", "d"), "d");
+        assert!(v.req_f64("nope").is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Gradient aggregation policies (Algorithm 2 line 3 and ablations).
+
+use crate::math::vec_ops;
+
+/// How included gradients combine into the master's update direction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggregatorKind {
+    /// Paper default: plain mean of the γ included gradients.
+    Mean,
+    /// Weight by shard example counts (relevant when shards are uneven or a
+    /// rejoined worker carries a partial shard).
+    ExampleWeighted,
+    /// DESIGN.md §6 "hybrid-reuse" ablation: also fold in gradients that
+    /// arrived after the previous barrier closed, damped by
+    /// `rho^staleness` (staleness in iterations).
+    StalenessDamped { rho: f64 },
+}
+
+/// One gradient contribution.
+pub struct Contribution<'a> {
+    pub grad: &'a [f32],
+    pub examples: usize,
+    /// 0 = computed for this iteration, k = k iterations old.
+    pub staleness: u64,
+}
+
+/// Aggregate contributions into `out`. Returns the effective weight sum.
+pub fn aggregate(kind: AggregatorKind, contribs: &[Contribution<'_>], out: &mut [f32]) -> f64 {
+    assert!(!contribs.is_empty(), "aggregate with no contributions");
+    out.fill(0.0);
+    let mut wsum = 0.0f64;
+    for c in contribs {
+        let w = match kind {
+            AggregatorKind::Mean => {
+                if c.staleness > 0 {
+                    0.0 // fresh-only: late results are abandoned
+                } else {
+                    1.0
+                }
+            }
+            AggregatorKind::ExampleWeighted => {
+                if c.staleness > 0 {
+                    0.0
+                } else {
+                    c.examples as f64
+                }
+            }
+            AggregatorKind::StalenessDamped { rho } => rho.powi(c.staleness as i32),
+        };
+        if w > 0.0 {
+            vec_ops::axpy(w as f32, c.grad, out);
+            wsum += w;
+        }
+    }
+    if wsum > 0.0 {
+        vec_ops::scale(out, (1.0 / wsum) as f32);
+    }
+    wsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(grad: &[f32], staleness: u64) -> Contribution<'_> {
+        Contribution {
+            grad,
+            examples: 10,
+            staleness,
+        }
+    }
+
+    #[test]
+    fn mean_ignores_stale() {
+        let g1 = vec![2.0, 0.0];
+        let g2 = vec![0.0, 2.0];
+        let stale = vec![100.0, 100.0];
+        let mut out = vec![0.0; 2];
+        let w = aggregate(
+            AggregatorKind::Mean,
+            &[c(&g1, 0), c(&g2, 0), c(&stale, 1)],
+            &mut out,
+        );
+        assert_eq!(w, 2.0);
+        assert_eq!(out, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn example_weighted() {
+        let g1 = vec![1.0];
+        let g2 = vec![4.0];
+        let contribs = [
+            Contribution { grad: &g1, examples: 30, staleness: 0 },
+            Contribution { grad: &g2, examples: 10, staleness: 0 },
+        ];
+        let mut out = vec![0.0];
+        aggregate(AggregatorKind::ExampleWeighted, &contribs, &mut out);
+        // (30*1 + 10*4)/40 = 1.75
+        assert!((out[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staleness_damped_includes_late() {
+        let fresh = vec![1.0];
+        let late = vec![3.0];
+        let mut out = vec![0.0];
+        let w = aggregate(
+            AggregatorKind::StalenessDamped { rho: 0.5 },
+            &[c(&fresh, 0), c(&late, 1)],
+            &mut out,
+        );
+        // (1*1 + 0.5*3) / 1.5 = 5/3
+        assert!((w - 1.5).abs() < 1e-12);
+        assert!((out[0] - 5.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_contribution_passthrough() {
+        let g = vec![0.5, -0.5];
+        let mut out = vec![0.0; 2];
+        aggregate(AggregatorKind::Mean, &[c(&g, 0)], &mut out);
+        assert_eq!(out, g);
+    }
+}

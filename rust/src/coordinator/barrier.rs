@@ -1,0 +1,142 @@
+//! The partial synchronization barrier — the mechanism at the heart of
+//! Algorithm 2: "if received γ slave nodes, update".
+//!
+//! [`PartialBarrier`] tracks one iteration's arrivals for the threaded
+//! runtime: it answers "is the barrier closed?" after each arrival and
+//! classifies everything after closure as abandoned.  The virtual simulator
+//! uses the same type so barrier semantics are tested once.
+
+/// Outcome of offering an arrival to the barrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Counted toward γ; barrier still open.
+    Included,
+    /// Counted toward γ and γ reached: barrier closes now.
+    IncludedAndClosed,
+    /// Arrived after closure (or duplicate): abandoned.
+    Abandoned,
+    /// Arrival for a different iteration: abandoned as stale.
+    Stale,
+}
+
+/// One iteration's barrier state.
+#[derive(Clone, Debug)]
+pub struct PartialBarrier {
+    iter: u64,
+    gamma: usize,
+    arrived: Vec<bool>,
+    included: usize,
+    closed: bool,
+}
+
+impl PartialBarrier {
+    /// Barrier for `iter` over `workers` workers closing after `gamma`
+    /// distinct arrivals (BSP: `gamma = alive workers`).
+    pub fn new(iter: u64, workers: usize, gamma: usize) -> PartialBarrier {
+        assert!(gamma >= 1 && gamma <= workers, "gamma {gamma} of {workers}");
+        PartialBarrier {
+            iter,
+            gamma,
+            arrived: vec![false; workers],
+            included: 0,
+            closed: false,
+        }
+    }
+
+    pub fn iter(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    pub fn included(&self) -> usize {
+        self.included
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Offer worker `w`'s result for iteration `msg_iter`.
+    pub fn offer(&mut self, w: usize, msg_iter: u64) -> Admission {
+        if msg_iter != self.iter {
+            return Admission::Stale;
+        }
+        if self.closed || self.arrived[w] {
+            return Admission::Abandoned;
+        }
+        self.arrived[w] = true;
+        self.included += 1;
+        if self.included >= self.gamma {
+            self.closed = true;
+            Admission::IncludedAndClosed
+        } else {
+            Admission::Included
+        }
+    }
+
+    /// Shrink γ when workers die mid-iteration (barrier can then close on
+    /// fewer arrivals).  No-op if already satisfied.
+    pub fn shrink_gamma(&mut self, new_gamma: usize) {
+        self.gamma = new_gamma.max(1).min(self.gamma);
+        if self.included >= self.gamma {
+            self.closed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closes_exactly_at_gamma() {
+        let mut b = PartialBarrier::new(7, 4, 2);
+        assert_eq!(b.offer(0, 7), Admission::Included);
+        assert!(!b.is_closed());
+        assert_eq!(b.offer(2, 7), Admission::IncludedAndClosed);
+        assert!(b.is_closed());
+        assert_eq!(b.offer(1, 7), Admission::Abandoned);
+        assert_eq!(b.included(), 2);
+    }
+
+    #[test]
+    fn duplicate_arrivals_abandoned() {
+        let mut b = PartialBarrier::new(0, 3, 3);
+        assert_eq!(b.offer(1, 0), Admission::Included);
+        assert_eq!(b.offer(1, 0), Admission::Abandoned);
+        assert_eq!(b.included(), 1);
+    }
+
+    #[test]
+    fn stale_iteration_rejected() {
+        let mut b = PartialBarrier::new(5, 2, 1);
+        assert_eq!(b.offer(0, 4), Admission::Stale);
+        assert_eq!(b.offer(0, 6), Admission::Stale);
+        assert_eq!(b.offer(0, 5), Admission::IncludedAndClosed);
+    }
+
+    #[test]
+    fn shrink_gamma_closes_when_satisfied() {
+        let mut b = PartialBarrier::new(0, 4, 3);
+        b.offer(0, 0);
+        b.offer(1, 0);
+        assert!(!b.is_closed());
+        b.shrink_gamma(2);
+        assert!(b.is_closed());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_gamma_zero() {
+        PartialBarrier::new(0, 4, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_gamma_above_workers() {
+        PartialBarrier::new(0, 4, 5);
+    }
+}

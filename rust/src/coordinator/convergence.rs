@@ -1,0 +1,167 @@
+//! Convergence detection (the master's `IsConvergence` of Algorithm 2).
+
+/// Stop rules checked after every iteration.
+#[derive(Clone, Debug)]
+pub struct StopRule {
+    /// Hard iteration cap.
+    pub max_iters: u64,
+    /// Stop when the best observed loss improves less than this over
+    /// `patience` consecutive iterations (0 disables).
+    pub loss_tol: f64,
+    pub patience: u64,
+    /// Stop when the aggregated gradient norm falls below this (0 disables).
+    pub grad_tol: f64,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        StopRule {
+            max_iters: 1000,
+            loss_tol: 0.0,
+            patience: 20,
+            grad_tol: 0.0,
+        }
+    }
+}
+
+/// Why a run ended.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunStatus {
+    /// Hit max_iters.
+    Completed,
+    /// A stop rule fired at `iter`.
+    Converged { iter: u64, reason: String },
+    /// BSP waiting on a dead worker with no recovery (fault-tolerance demo).
+    Stalled { iter: u64 },
+    /// Every worker is down.
+    ClusterDead { iter: u64 },
+}
+
+impl RunStatus {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, RunStatus::Completed | RunStatus::Converged { .. })
+    }
+}
+
+/// Stateful convergence tracker.
+#[derive(Clone, Debug)]
+pub struct ConvergenceTracker {
+    rule: StopRule,
+    best_loss: f64,
+    since_improvement: u64,
+}
+
+impl ConvergenceTracker {
+    pub fn new(rule: StopRule) -> ConvergenceTracker {
+        ConvergenceTracker {
+            rule,
+            best_loss: f64::INFINITY,
+            since_improvement: 0,
+        }
+    }
+
+    pub fn rule(&self) -> &StopRule {
+        &self.rule
+    }
+
+    /// Observe one iteration. Returns `Some(status)` when the run should stop.
+    pub fn observe(&mut self, iter: u64, loss: f64, grad_norm: f64) -> Option<RunStatus> {
+        if self.rule.grad_tol > 0.0 && grad_norm < self.rule.grad_tol {
+            return Some(RunStatus::Converged {
+                iter,
+                reason: format!("grad_norm {grad_norm:.3e} < {:.3e}", self.rule.grad_tol),
+            });
+        }
+        if self.rule.loss_tol > 0.0 {
+            if loss < self.best_loss - self.rule.loss_tol {
+                self.best_loss = loss;
+                self.since_improvement = 0;
+            } else {
+                self.best_loss = self.best_loss.min(loss);
+                self.since_improvement += 1;
+                if self.since_improvement >= self.rule.patience {
+                    return Some(RunStatus::Converged {
+                        iter,
+                        reason: format!(
+                            "loss plateau: < {:.1e} improvement for {} iters",
+                            self.rule.loss_tol, self.rule.patience
+                        ),
+                    });
+                }
+            }
+        }
+        if iter + 1 >= self.rule.max_iters {
+            return Some(RunStatus::Completed);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_iters_completes() {
+        let mut t = ConvergenceTracker::new(StopRule {
+            max_iters: 3,
+            ..StopRule::default()
+        });
+        assert!(t.observe(0, 1.0, 1.0).is_none());
+        assert!(t.observe(1, 0.9, 1.0).is_none());
+        assert_eq!(t.observe(2, 0.8, 1.0), Some(RunStatus::Completed));
+    }
+
+    #[test]
+    fn grad_tol_fires() {
+        let mut t = ConvergenceTracker::new(StopRule {
+            max_iters: 100,
+            grad_tol: 1e-3,
+            ..StopRule::default()
+        });
+        assert!(t.observe(0, 1.0, 0.1).is_none());
+        match t.observe(1, 1.0, 1e-4) {
+            Some(RunStatus::Converged { iter: 1, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn plateau_fires_after_patience() {
+        let mut t = ConvergenceTracker::new(StopRule {
+            max_iters: 1000,
+            loss_tol: 1e-6,
+            patience: 3,
+            grad_tol: 0.0,
+        });
+        assert!(t.observe(0, 1.0, 1.0).is_none());
+        assert!(t.observe(1, 1.0, 1.0).is_none());
+        assert!(t.observe(2, 1.0, 1.0).is_none());
+        assert!(matches!(
+            t.observe(3, 1.0, 1.0),
+            Some(RunStatus::Converged { .. })
+        ));
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut t = ConvergenceTracker::new(StopRule {
+            max_iters: 1000,
+            loss_tol: 1e-6,
+            patience: 2,
+            grad_tol: 0.0,
+        });
+        assert!(t.observe(0, 1.0, 1.0).is_none());
+        assert!(t.observe(1, 1.0, 1.0).is_none());
+        assert!(t.observe(2, 0.5, 1.0).is_none()); // improved, reset
+        assert!(t.observe(3, 0.5, 1.0).is_none());
+        assert!(t.observe(4, 0.5, 1.0).is_some());
+    }
+
+    #[test]
+    fn status_health() {
+        assert!(RunStatus::Completed.is_healthy());
+        assert!(!RunStatus::Stalled { iter: 5 }.is_healthy());
+        assert!(!RunStatus::ClusterDead { iter: 5 }.is_healthy());
+    }
+}

@@ -1,0 +1,236 @@
+//! Algorithm 1: the least number of slave machines the master must wait for.
+//!
+//! Lemma 3.1 (finite-population correction) + Lemma 3.2 (normal
+//! approximation) give the sample size needed for the partial gradient's
+//! mean to sit within relative error ξ of the full-gradient mean with
+//! confidence 1−α:
+//!
+//! ```text
+//!   n = N·u²_{α/2}·s² / (Δ²·N + u²_{α/2}·s²),   Δ = |ξ·Z̄|
+//! ```
+//!
+//! which the paper upper-bounds (worst case s² vs (ξZ̄)², §3.2) by the
+//! distribution-free
+//!
+//! ```text
+//!   n ≤ N·u² / (ξ²·N + u²)        ⇒   γ = ⌈ n / ζ ⌉.
+//! ```
+//!
+//! [`estimate_gamma`] implements the distribution-free form (Algorithm 1);
+//! [`AdaptiveEstimator`] implements the sharper variance-aware form as the
+//! DESIGN.md §6 ablation, feeding it the observed per-worker gradient
+//! scatter.
+
+use crate::math::quantile::normal_quantile;
+use crate::math::stats::OnlineStats;
+use crate::{Error, Result};
+
+/// Confidence/accuracy parameters of Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct EstimatorParams {
+    /// Significance level α (confidence = 1−α).
+    pub alpha: f64,
+    /// Relative error bound ξ.
+    pub xi: f64,
+}
+
+impl EstimatorParams {
+    pub fn u_half_alpha(&self) -> f64 {
+        normal_quantile(1.0 - self.alpha / 2.0)
+    }
+}
+
+/// Algorithm 1: minimal sample size `n` (examples).
+pub fn estimate_sample_size(n_total: usize, p: EstimatorParams) -> Result<f64> {
+    if !(0.0 < p.alpha && p.alpha < 1.0) {
+        return Err(Error::Config(format!("alpha must be in (0,1), got {}", p.alpha)));
+    }
+    if p.xi <= 0.0 {
+        return Err(Error::Config(format!("xi must be > 0, got {}", p.xi)));
+    }
+    let u = p.u_half_alpha();
+    let n = n_total as f64;
+    Ok(n * u * u / (p.xi * p.xi * n + u * u))
+}
+
+/// Algorithm 1: minimal machines `γ = ⌈n/ζ⌉`, clamped to `[1, m]`.
+pub fn estimate_gamma(n_total: usize, zeta: usize, m: usize, p: EstimatorParams) -> Result<usize> {
+    if zeta == 0 || m == 0 {
+        return Err(Error::Config("zeta and m must be positive".into()));
+    }
+    let n = estimate_sample_size(n_total, p)?;
+    let gamma = (n / zeta as f64).ceil() as usize;
+    Ok(gamma.clamp(1, m))
+}
+
+/// Variance-aware re-estimation (DESIGN.md §6 ablation).
+///
+/// Feeds on per-worker gradient snapshots each iteration: treats each
+/// worker's gradient as a sample mean of ζ per-example gradients and
+/// estimates the per-example scatter `s²` and overall mean magnitude `Z̄`
+/// from the cross-worker scatter, then applies Lemma 3.2's exact form.
+#[derive(Debug)]
+pub struct AdaptiveEstimator {
+    params: EstimatorParams,
+    n_total: usize,
+    zeta: usize,
+    m: usize,
+    /// Per-coordinate-norm statistics across workers this window.
+    scatter: OnlineStats,
+    mean_norm: OnlineStats,
+}
+
+impl AdaptiveEstimator {
+    pub fn new(n_total: usize, zeta: usize, m: usize, params: EstimatorParams) -> Self {
+        AdaptiveEstimator {
+            params,
+            n_total,
+            zeta,
+            m,
+            scatter: OnlineStats::new(),
+            mean_norm: OnlineStats::new(),
+        }
+    }
+
+    /// Observe one iteration's included worker gradients.
+    pub fn observe(&mut self, grads: &[&[f32]]) {
+        if grads.len() < 2 {
+            return;
+        }
+        let dim = grads[0].len();
+        // Mean gradient.
+        let mut mean = vec![0.0f64; dim];
+        for g in grads {
+            for (m, &v) in mean.iter_mut().zip(g.iter()) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= grads.len() as f64;
+        }
+        let mean_sq: f64 = mean.iter().map(|v| v * v).sum::<f64>() / dim as f64;
+        self.mean_norm.push(mean_sq.sqrt());
+
+        // Cross-worker variance of the shard means, averaged over coords.
+        let mut var = 0.0f64;
+        for g in grads {
+            let mut d2 = 0.0;
+            for (m, &v) in mean.iter().zip(g.iter()) {
+                let d = v as f64 - m;
+                d2 += d * d;
+            }
+            var += d2 / dim as f64;
+        }
+        var /= (grads.len() - 1).max(1) as f64;
+        // Worker mean over ζ examples with FPC: Var(mean) = s²/ζ · (N−ζ)/(N−1)
+        // ⇒ s² ≈ var · ζ · (N−1)/(N−ζ).
+        let n = self.n_total as f64;
+        let fpc = (n - self.zeta as f64).max(1.0) / (n - 1.0);
+        self.scatter.push(var * self.zeta as f64 / fpc);
+    }
+
+    /// Current γ estimate from the observed statistics (falls back to the
+    /// distribution-free bound until enough windows are seen).
+    pub fn gamma(&self) -> Result<usize> {
+        if self.scatter.count() < 2 || self.mean_norm.mean() <= 0.0 {
+            return estimate_gamma(self.n_total, self.zeta, self.m, self.params);
+        }
+        let u = self.params.u_half_alpha();
+        let s2 = self.scatter.mean();
+        let delta = (self.params.xi * self.mean_norm.mean()).max(1e-12);
+        let n_tot = self.n_total as f64;
+        let n = n_tot * u * u * s2 / (delta * delta * n_tot + u * u * s2);
+        Ok(((n / self.zeta as f64).ceil() as usize).clamp(1, self.m))
+    }
+
+    /// Reset window statistics (called every `window` iterations).
+    pub fn reset_window(&mut self) {
+        self.scatter = OnlineStats::new();
+        self.mean_norm = OnlineStats::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_formula() {
+        // Hand-computed: N = 32768, α = 0.05 (u ≈ 1.95996), ξ = 0.05.
+        // n = N u² / (ξ² N + u²) = 32768·3.8415 / (0.0025·32768 + 3.8415)
+        //   ≈ 125888.5 / 85.76 ≈ 1467.9  ⇒ ζ=2048 → γ = 1.
+        let p = EstimatorParams { alpha: 0.05, xi: 0.05 };
+        let n = estimate_sample_size(32768, p).unwrap();
+        assert!((n - 1467.9).abs() < 1.0, "n={n}");
+        assert_eq!(estimate_gamma(32768, 2048, 16, p).unwrap(), 1);
+        // Tighter ξ needs more machines.
+        let tight = EstimatorParams { alpha: 0.05, xi: 0.01 };
+        let n2 = estimate_sample_size(32768, tight).unwrap();
+        assert!(n2 > n);
+        let g2 = estimate_gamma(32768, 2048, 16, tight).unwrap();
+        assert!(g2 > 1);
+    }
+
+    #[test]
+    fn monotone_in_alpha_and_xi() {
+        let base = EstimatorParams { alpha: 0.05, xi: 0.05 };
+        let stricter_alpha = EstimatorParams { alpha: 0.01, xi: 0.05 };
+        let looser_xi = EstimatorParams { alpha: 0.05, xi: 0.10 };
+        let n_total = 1_000_000;
+        let n0 = estimate_sample_size(n_total, base).unwrap();
+        assert!(estimate_sample_size(n_total, stricter_alpha).unwrap() > n0);
+        assert!(estimate_sample_size(n_total, looser_xi).unwrap() < n0);
+    }
+
+    #[test]
+    fn sample_size_below_population() {
+        for &n_total in &[100usize, 10_000, 10_000_000] {
+            let p = EstimatorParams { alpha: 0.05, xi: 0.01 };
+            let n = estimate_sample_size(n_total, p).unwrap();
+            assert!(n <= n_total as f64);
+            assert!(n > 0.0);
+        }
+    }
+
+    #[test]
+    fn gamma_clamped_to_machines() {
+        // Absurdly tight requirements cap at m.
+        let p = EstimatorParams { alpha: 1e-6, xi: 1e-6 };
+        assert_eq!(estimate_gamma(100_000, 10, 8, p).unwrap(), 8);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(estimate_sample_size(100, EstimatorParams { alpha: 0.0, xi: 0.1 }).is_err());
+        assert!(estimate_sample_size(100, EstimatorParams { alpha: 0.1, xi: 0.0 }).is_err());
+        assert!(estimate_gamma(100, 0, 4, EstimatorParams { alpha: 0.1, xi: 0.1 }).is_err());
+    }
+
+    #[test]
+    fn adaptive_tracks_low_variance() {
+        // Identical worker gradients ⇒ zero scatter ⇒ γ collapses to 1.
+        let p = EstimatorParams { alpha: 0.05, xi: 0.05 };
+        let mut est = AdaptiveEstimator::new(4096, 256, 16, p);
+        let g = vec![1.0f32; 32];
+        for _ in 0..5 {
+            est.observe(&[&g, &g, &g, &g]);
+        }
+        assert_eq!(est.gamma().unwrap(), 1);
+    }
+
+    #[test]
+    fn adaptive_grows_with_scatter() {
+        let p = EstimatorParams { alpha: 0.05, xi: 0.02 };
+        let mut est = AdaptiveEstimator::new(4096, 256, 16, p);
+        // Wildly different worker gradients around a small mean.
+        let g1 = vec![5.0f32; 32];
+        let g2 = vec![-4.8f32; 32];
+        let g3 = vec![4.9f32; 32];
+        let g4 = vec![-5.1f32; 32];
+        for _ in 0..5 {
+            est.observe(&[&g1, &g2, &g3, &g4]);
+        }
+        let g = est.gamma().unwrap();
+        assert!(g > 4, "gamma={g}");
+    }
+}

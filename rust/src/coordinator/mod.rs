@@ -1,0 +1,270 @@
+//! The master (Algorithm 2): run configuration, run reports, and the
+//! threaded real-time coordinator.
+//!
+//! Two interchangeable drivers share everything in this module:
+//!
+//! * [`crate::sim::run_virtual`] — discrete-event simulation (deterministic,
+//!   fast; the default for benches/experiments);
+//! * [`Coordinator::run_real`] — worker OS-threads with real sleeps,
+//!   measuring wall-clock (the "production" runtime and the demo of actual
+//!   time savings).
+//!
+//! Both close each iteration with [`barrier::PartialBarrier`], aggregate via
+//! [`aggregator`], update via [`crate::optim`], and stop via
+//! [`convergence`].
+
+pub mod aggregator;
+pub mod barrier;
+pub mod convergence;
+pub mod estimator;
+pub mod modes;
+
+pub use aggregator::AggregatorKind;
+pub use convergence::{RunStatus, StopRule};
+pub use modes::SyncMode;
+
+use crate::cluster::ClusterSpec;
+use crate::metrics::Recorder;
+use crate::optim::OptimizerKind;
+use crate::{Error, Result};
+
+/// How per-shard loss sums assemble into the reported training loss.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossForm {
+    /// Multiply the per-example average by this (KRR objective carries ½).
+    pub scale: f64,
+    /// Ridge term `+ ½·λ·‖θ‖²` (0 for the LM).
+    pub lambda: f64,
+}
+
+impl LossForm {
+    pub fn krr(lambda: f64) -> LossForm {
+        LossForm { scale: 0.5, lambda }
+    }
+
+    pub fn plain() -> LossForm {
+        LossForm { scale: 1.0, lambda: 0.0 }
+    }
+
+    /// Assemble: `scale · (Σ loss_sum / Σ examples) + ½λ‖θ‖²`.
+    pub fn assemble(&self, loss_sum: f64, examples: usize, theta: &[f32]) -> f64 {
+        let data = if examples > 0 {
+            self.scale * loss_sum / examples as f64
+        } else {
+            f64::NAN
+        };
+        let reg = if self.lambda != 0.0 {
+            0.5 * self.lambda * crate::math::vec_ops::dot(theta, theta)
+        } else {
+            0.0
+        };
+        data + reg
+    }
+}
+
+/// What BSP does when a worker fails (the paper's "traditional solutions
+/// have to calculate it again when failure occurs").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BspRecovery {
+    /// No recovery protocol: the barrier never closes → run reports
+    /// [`RunStatus::Stalled`].  (The fault-tolerance contrast case.)
+    Stall,
+    /// Hadoop-style: detect after `detect_timeout` (virtual seconds),
+    /// re-execute the missing shard on a healthy node (permanently
+    /// reassigning it if the owner crashed for good).
+    Retry { detect_timeout: f64 },
+}
+
+/// One experiment run's configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub mode: SyncMode,
+    pub optimizer: OptimizerKind,
+    pub aggregator: AggregatorKind,
+    pub stop: StopRule,
+    pub loss_form: LossForm,
+    pub bsp_recovery: BspRecovery,
+    /// Evaluate the eval hooks every k iterations (0 = only at the end).
+    pub eval_every: u64,
+    /// Record an [`crate::metrics::IterRow`] every k iterations.
+    pub record_every: u64,
+    /// Initial parameters (None = zeros).
+    pub init_theta: Option<Vec<f32>>,
+    /// Adaptive-γ re-estimation window (iterations), for HybridAdaptive.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            mode: SyncMode::Bsp,
+            optimizer: OptimizerKind::sgd(0.5),
+            aggregator: AggregatorKind::Mean,
+            stop: StopRule::default(),
+            loss_form: LossForm::krr(0.01),
+            bsp_recovery: BspRecovery::Retry { detect_timeout: 0.05 },
+            eval_every: 10,
+            record_every: 1,
+            init_theta: None,
+            seed: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn with_mode(mut self, mode: SyncMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_iters(mut self, iters: u64) -> Self {
+        self.stop.max_iters = iters;
+        self
+    }
+}
+
+/// Everything a finished run reports.
+#[derive(Debug)]
+pub struct RunReport {
+    pub recorder: Recorder,
+    pub theta: Vec<f32>,
+    pub status: RunStatus,
+    /// γ in effect at the end (None for BSP/async).
+    pub gamma: Option<usize>,
+    pub mode_name: &'static str,
+    /// Totals from membership accounting.
+    pub total_contributions: u64,
+    pub total_abandoned: u64,
+    pub crashes: u64,
+    /// Async only: mean staleness of applied gradients.
+    pub mean_staleness: Option<f64>,
+    /// Wall-clock of the driver itself (not virtual time), seconds.
+    pub driver_secs: f64,
+}
+
+impl RunReport {
+    pub fn final_loss(&self) -> f64 {
+        self.recorder.final_loss()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.recorder.total_time()
+    }
+
+    pub fn final_theta_err(&self) -> Option<f64> {
+        self.recorder.rows().iter().rev().find_map(|r| r.theta_err)
+    }
+
+    /// Abandon rate over the whole run: abandoned / (abandoned+contributed).
+    pub fn abandon_rate(&self) -> f64 {
+        let total = self.total_abandoned + self.total_contributions;
+        if total == 0 {
+            0.0
+        } else {
+            self.total_abandoned as f64 / total as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "[{}] status={:?} iters={} time={:.3}s loss={:.6} theta_err={} abandon={:.1}% crashes={}",
+            self.mode_name,
+            self.status,
+            self.recorder.len(),
+            self.total_time(),
+            self.final_loss(),
+            self.final_theta_err()
+                .map(|e| format!("{e:.3e}"))
+                .unwrap_or_else(|| "-".into()),
+            self.abandon_rate() * 100.0,
+            self.crashes,
+        )
+    }
+}
+
+/// The threaded real-time coordinator (see [`crate::worker`] for the slave
+/// side).  Construction validates the cluster/mode combination; `run_real`
+/// consumes compute factories so each worker thread can build its own
+/// non-`Send` PJRT engine.
+pub struct Coordinator {
+    pub cluster: ClusterSpec,
+    pub cfg: RunConfig,
+}
+
+impl Coordinator {
+    pub fn new(cluster: ClusterSpec, cfg: RunConfig) -> Result<Coordinator> {
+        if cluster.workers == 0 {
+            return Err(Error::Cluster("cluster needs at least one worker".into()));
+        }
+        if let SyncMode::Hybrid { gamma } = cfg.mode {
+            if gamma == 0 || gamma > cluster.workers {
+                return Err(Error::Cluster(format!(
+                    "gamma {gamma} invalid for {} workers",
+                    cluster.workers
+                )));
+            }
+        }
+        Ok(Coordinator { cluster, cfg })
+    }
+
+    /// Run with real worker threads; implementation lives in
+    /// [`crate::worker::run_real`].
+    pub fn run_real(
+        &self,
+        factory: &dyn crate::worker::ComputeFactory,
+        hooks: &dyn crate::sim::EvalHooks,
+    ) -> Result<RunReport> {
+        crate::worker::run_real(&self.cluster, &self.cfg, factory, hooks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_form_krr() {
+        let f = LossForm::krr(0.0);
+        let theta = vec![0.0f32; 2];
+        // 0.5 * 10/5 = 1.0
+        assert!((f.assemble(10.0, 5, &theta) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_form_reg_term() {
+        let f = LossForm::krr(2.0);
+        let theta = vec![1.0f32, 1.0];
+        // 0.5*0 + 0.5*2*2 = 2
+        assert!((f.assemble(0.0, 5, &theta) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coordinator_validates_gamma() {
+        let cluster = ClusterSpec {
+            workers: 4,
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig::default().with_mode(SyncMode::Hybrid { gamma: 5 });
+        assert!(Coordinator::new(cluster.clone(), cfg).is_err());
+        let ok = RunConfig::default().with_mode(SyncMode::Hybrid { gamma: 4 });
+        assert!(Coordinator::new(cluster, ok).is_ok());
+    }
+
+    #[test]
+    fn report_abandon_rate() {
+        let rep = RunReport {
+            recorder: Recorder::new(),
+            theta: vec![],
+            status: RunStatus::Completed,
+            gamma: Some(3),
+            mode_name: "hybrid",
+            total_contributions: 75,
+            total_abandoned: 25,
+            crashes: 0,
+            mean_staleness: None,
+            driver_secs: 0.0,
+        };
+        assert!((rep.abandon_rate() - 0.25).abs() < 1e-12);
+    }
+}

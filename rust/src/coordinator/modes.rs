@@ -1,0 +1,100 @@
+//! Synchronization modes: the policy axis the paper explores.
+
+use crate::coordinator::estimator::{estimate_gamma, EstimatorParams};
+use crate::{Error, Result};
+
+/// How the master closes each iteration's barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncMode {
+    /// Bulk-synchronous: wait for every alive worker (the Hadoop/Spark
+    /// baseline the paper argues against).
+    Bsp,
+    /// The paper's contribution: wait for the first `gamma` results and
+    /// abandon the rest (Algorithm 2).
+    Hybrid { gamma: usize },
+    /// Hybrid with `gamma` derived from Algorithm 1 at startup:
+    /// `γ = ⌈N·u²/( (ξ²N + u²)·ζ )⌉` for confidence `1-α`, relative error ξ.
+    HybridAuto { alpha: f64, xi: f64 },
+    /// Ablation (DESIGN.md §6): like `HybridAuto`, but γ is re-estimated
+    /// every `window` iterations from the *observed* gradient variance
+    /// rather than the worst-case bound.
+    HybridAdaptive { alpha: f64, xi: f64, window: u64 },
+    /// Fully asynchronous parameter-server baseline: apply every gradient
+    /// the moment it arrives; `damping` scales stale gradients by
+    /// `1/(1+staleness)^damping` (0 = plain async).
+    Async { damping: f64 },
+}
+
+impl SyncMode {
+    /// Resolve the γ in effect at startup (None for BSP/async; adaptive
+    /// starts from the Algorithm-1 value).
+    pub fn initial_gamma(&self, n_total: usize, zeta: usize, m: usize) -> Result<Option<usize>> {
+        match self {
+            SyncMode::Bsp | SyncMode::Async { .. } => Ok(None),
+            SyncMode::Hybrid { gamma } => {
+                if *gamma == 0 || *gamma > m {
+                    return Err(Error::Config(format!(
+                        "hybrid gamma {gamma} out of range 1..={m}"
+                    )));
+                }
+                Ok(Some(*gamma))
+            }
+            SyncMode::HybridAuto { alpha, xi } | SyncMode::HybridAdaptive { alpha, xi, .. } => {
+                let p = EstimatorParams {
+                    alpha: *alpha,
+                    xi: *xi,
+                };
+                Ok(Some(estimate_gamma(n_total, zeta, m, p)?))
+            }
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, SyncMode::Async { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::Bsp => "bsp",
+            SyncMode::Hybrid { .. } => "hybrid",
+            SyncMode::HybridAuto { .. } => "hybrid-auto",
+            SyncMode::HybridAdaptive { .. } => "hybrid-adaptive",
+            SyncMode::Async { .. } => "async",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_has_no_gamma() {
+        assert_eq!(SyncMode::Bsp.initial_gamma(1000, 100, 10).unwrap(), None);
+    }
+
+    #[test]
+    fn fixed_gamma_validated() {
+        assert_eq!(
+            SyncMode::Hybrid { gamma: 3 }.initial_gamma(1000, 100, 10).unwrap(),
+            Some(3)
+        );
+        assert!(SyncMode::Hybrid { gamma: 0 }.initial_gamma(1000, 100, 10).is_err());
+        assert!(SyncMode::Hybrid { gamma: 11 }.initial_gamma(1000, 100, 10).is_err());
+    }
+
+    #[test]
+    fn auto_gamma_uses_estimator() {
+        let g = SyncMode::HybridAuto { alpha: 0.05, xi: 0.05 }
+            .initial_gamma(32768, 2048, 16)
+            .unwrap()
+            .unwrap();
+        assert!(g >= 1 && g <= 16);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(SyncMode::Bsp.name(), "bsp");
+        assert_eq!(SyncMode::Async { damping: 0.0 }.name(), "async");
+    }
+}

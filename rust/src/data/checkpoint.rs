@@ -1,0 +1,177 @@
+//! Checkpointing: save/restore parameters + run metadata.
+//!
+//! Own binary format (no serde offline): magic, version, a small JSON
+//! metadata blob (reuses `config::json`), then the raw f32 parameters.
+//! Used by long e2e runs (`lm_pretrain --save/--resume`) and by operators
+//! who want to warm-start a hybrid run from a BSP checkpoint or vice versa.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::config::{json, Value};
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"HYBRCKP1";
+
+/// A parameter checkpoint with free-form metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub theta: Vec<f32>,
+    /// Iteration the checkpoint was taken at.
+    pub iter: u64,
+    /// Free-form metadata (mode, loss, config name, ...).
+    pub meta: Value,
+}
+
+impl Checkpoint {
+    pub fn new(theta: Vec<f32>, iter: u64) -> Checkpoint {
+        Checkpoint {
+            theta,
+            iter,
+            meta: Value::empty_table(),
+        }
+    }
+
+    pub fn with_meta(mut self, key: &str, v: Value) -> Checkpoint {
+        self.meta.set(key, v).expect("meta is a table");
+        self
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&self.iter.to_le_bytes())?;
+        let meta = json::to_string(&self.meta);
+        w.write_all(&(meta.len() as u64).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        w.write_all(&(self.theta.len() as u64).to_le_bytes())?;
+        // f32 slab, little-endian.
+        let mut buf = Vec::with_capacity(self.theta.len() * 4);
+        for v in &self.theta {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(r: &mut impl Read) -> Result<Checkpoint> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::other("not a hybriditer checkpoint (bad magic)"));
+        }
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u64buf)?;
+        let iter = u64::from_le_bytes(u64buf);
+        r.read_exact(&mut u64buf)?;
+        let meta_len = u64::from_le_bytes(u64buf) as usize;
+        if meta_len > 64 << 20 {
+            return Err(Error::other("checkpoint metadata unreasonably large"));
+        }
+        let mut meta_bytes = vec![0u8; meta_len];
+        r.read_exact(&mut meta_bytes)?;
+        let meta = json::parse(
+            std::str::from_utf8(&meta_bytes)
+                .map_err(|_| Error::other("checkpoint metadata is not UTF-8"))?,
+        )?;
+        r.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        if n > (8usize << 30) / 4 {
+            return Err(Error::other("checkpoint parameter count unreasonably large"));
+        }
+        let mut slab = vec![0u8; n * 4];
+        r.read_exact(&mut slab)?;
+        let theta = slab
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { theta, iter, meta })
+    }
+
+    /// Save to a file (creating parent dirs).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Checkpoint::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join("hybriditer_ckpt_test")
+            .join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Pcg64::seeded(1);
+        let mut theta = vec![0.0f32; 1000];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        let ckpt = Checkpoint::new(theta.clone(), 42)
+            .with_meta("mode", Value::Str("hybrid".into()))
+            .with_meta("loss", Value::Float(0.125));
+        let path = tmp("a.ckpt");
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ckpt);
+        assert_eq!(back.iter, 42);
+        assert_eq!(back.meta.req_str("mode").unwrap(), "hybrid");
+        assert_eq!(back.theta, theta);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn exact_bit_preservation_of_specials() {
+        let theta = vec![0.0f32, -0.0, f32::MIN_POSITIVE, 1e-45, 3.4e38, -1.5];
+        let ckpt = Checkpoint::new(theta.clone(), 0);
+        let path = tmp("b.ckpt");
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        for (a, b) in back.theta.iter().zip(&theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("c.ckpt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let ckpt = Checkpoint::new(vec![1.0; 100], 7);
+        let mut buf = Vec::new();
+        ckpt.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 10);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(Checkpoint::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn empty_theta_ok() {
+        let ckpt = Checkpoint::new(vec![], 0);
+        let mut buf = Vec::new();
+        ckpt.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&mut std::io::Cursor::new(buf)).unwrap();
+        assert!(back.theta.is_empty());
+    }
+}

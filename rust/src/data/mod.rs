@@ -1,0 +1,46 @@
+//! Data substrate: synthetic problem generation, sharding, the pure-rust
+//! compute mirror, the exact ridge solver, and the LM token corpus.
+//!
+//! The paper's experiments need a dataset with a *known* optimum so the
+//! convergence theory (§3.3) can be validated exactly; [`KrrProblem`]
+//! generates kernel-feature regression data with a planted parameter vector
+//! and solves the normal equations for `θ*` (DESIGN.md §3).
+
+pub mod checkpoint;
+pub mod corpus;
+pub mod native;
+pub mod shard;
+pub mod solver;
+pub mod synth;
+
+pub use checkpoint::Checkpoint;
+
+pub use shard::Shard;
+pub use synth::{KrrProblem, KrrProblemSpec};
+
+/// Result of one worker-side gradient computation.
+#[derive(Clone, Debug)]
+pub struct GradResult {
+    /// Flat gradient (KRR: length `l`; LM: all parameter tensors flattened).
+    pub grad: Vec<f32>,
+    /// Shard loss contribution: KRR sum of squared residuals, LM summed NLL.
+    pub loss_sum: Option<f64>,
+    /// Number of examples that contributed (the paper's ζ).
+    pub examples: usize,
+}
+
+/// Anything that can compute per-worker gradients for the coordinator.
+///
+/// Implementations: [`native::NativeKrrPool`] (pure rust, used by tests and
+/// the straggler benches), [`crate::worker::compute::XlaKrrPool`] (PJRT
+/// artifacts — the production path), [`crate::lm::LmPool`] (transformer).
+pub trait ComputePool {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+    /// Number of workers (the paper's M).
+    fn n_workers(&self) -> usize;
+    /// Compute worker `w`'s gradient at `theta` for iteration `iter`.
+    fn grad(&mut self, w: usize, theta: &[f32], iter: u64) -> crate::Result<GradResult>;
+    /// Examples per worker (the paper's ζ).
+    fn shard_examples(&self, w: usize) -> usize;
+}

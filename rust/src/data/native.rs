@@ -1,0 +1,180 @@
+//! Pure-rust mirror of the L1/L2 compute: the same math as the pallas
+//! kernel (`(1/ζ)Φᵀ(Φθ−y) + λθ`), used
+//!
+//! * as the reference the XLA path is integration-tested against,
+//! * by benches that sweep thousands of virtual iterations where PJRT
+//!   dispatch overhead would dominate the thing being measured (straggler
+//!   policy behaviour, not kernel speed).
+
+use crate::data::shard::Shard;
+use crate::data::{ComputePool, GradResult};
+use crate::math::vec_ops;
+use crate::Result;
+
+/// Native KRR gradient pool over per-worker shards.
+pub struct NativeKrrPool {
+    shards: Vec<Shard>,
+    lambda: f32,
+    /// Scratch residual buffer (reused across calls; sized to max shard).
+    resid: Vec<f32>,
+}
+
+impl NativeKrrPool {
+    pub fn new(shards: Vec<Shard>, lambda: f32) -> NativeKrrPool {
+        let max_rows = shards.iter().map(|s| s.rows).max().unwrap_or(0);
+        NativeKrrPool {
+            shards,
+            lambda,
+            resid: vec![0.0; max_rows],
+        }
+    }
+
+    pub fn lambda(&self) -> f32 {
+        self.lambda
+    }
+}
+
+impl ComputePool for NativeKrrPool {
+    fn dim(&self) -> usize {
+        self.shards.first().map(|s| s.l).unwrap_or(0)
+    }
+
+    fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_examples(&self, w: usize) -> usize {
+        self.shards[w].rows
+    }
+
+    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        let s = &self.shards[w];
+        let (rows, l) = (s.rows, s.l);
+        debug_assert_eq!(theta.len(), l);
+        let resid = &mut self.resid[..rows];
+
+        // r = Φθ − y
+        vec_ops::matvec(&s.phi, rows, l, theta, resid);
+        let mut ss = 0.0f64;
+        for (r, &yi) in resid.iter_mut().zip(s.y.iter()) {
+            *r -= yi;
+            ss += (*r as f64) * (*r as f64);
+        }
+
+        // g = Φᵀ r / ζ + λθ
+        let mut grad = vec![0.0f32; l];
+        vec_ops::matvec_t(&s.phi, rows, l, resid, &mut grad);
+        let inv = 1.0 / rows as f32;
+        for (g, &t) in grad.iter_mut().zip(theta.iter()) {
+            *g = *g * inv + self.lambda * t;
+        }
+
+        Ok(GradResult {
+            grad,
+            loss_sum: Some(ss),
+            examples: rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{KrrProblem, KrrProblemSpec};
+    use crate::util::rng::Pcg64;
+
+    fn tiny() -> KrrProblem {
+        let spec = KrrProblemSpec {
+            config: "test".into(),
+            d: 4,
+            l: 8,
+            zeta: 32,
+            machines: 4,
+            noise: 0.05,
+            lambda: 0.05,
+            bandwidth: 1.0,
+            eval_rows: 64,
+            seed: 3,
+        };
+        KrrProblem::generate(&spec).unwrap()
+    }
+
+    #[test]
+    fn zero_gradient_at_shardwise_optimum() {
+        // The mean of all shard gradients at θ* must vanish (first-order
+        // optimality of eq. 2 over the full training set).
+        let p = tiny();
+        let mut pool = p.native_pool();
+        let m = pool.n_workers();
+        let mut mean = vec![0.0f32; p.dim()];
+        for w in 0..m {
+            let g = pool.grad(w, &p.theta_star, 0).unwrap();
+            vec_ops::add_assign(&mut mean, &g.grad);
+        }
+        vec_ops::scale(&mut mean, 1.0 / m as f32);
+        assert!(
+            vec_ops::norm2(&mean) < 1e-4,
+            "grad at optimum = {}",
+            vec_ops::norm2(&mean)
+        );
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = tiny();
+        let mut pool = p.native_pool();
+        let mut rng = Pcg64::seeded(5);
+        let mut theta = vec![0.0f32; p.dim()];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        let g = pool.grad(0, &theta, 0).unwrap().grad;
+
+        let s = &p.shards[0];
+        let f = |t: &[f32]| crate::data::synth::objective(t, &s.phi, &s.y, s.l, p.spec.lambda);
+        let eps = 1e-3f32;
+        for coord in [0, p.dim() / 2, p.dim() - 1] {
+            let mut tp = theta.clone();
+            tp[coord] += eps;
+            let mut tm = theta.clone();
+            tm[coord] -= eps;
+            let fd = (f(&tp) - f(&tm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[coord] as f64).abs() < 2e-3,
+                "coord {coord}: fd {fd} vs g {}",
+                g[coord]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_sum_matches_direct() {
+        let p = tiny();
+        let mut pool = p.native_pool();
+        let g = pool.grad(1, &p.theta_true, 0).unwrap();
+        let s = &p.shards[1];
+        let direct = crate::data::synth::sumsq_residual(&p.theta_true, &s.phi, &s.y, s.l);
+        assert!((g.loss_sum.unwrap() - direct).abs() < 1e-6);
+        assert_eq!(g.examples, 32);
+    }
+
+    #[test]
+    fn full_gd_converges_to_theta_star() {
+        // Plain full-batch GD with all shards must approach θ* — sanity
+        // that data, gradient, and solver agree with each other.
+        let p = tiny();
+        let mut pool = p.native_pool();
+        let m = pool.n_workers();
+        let mut theta = vec![0.0f32; p.dim()];
+        let mut mean = vec![0.0f32; p.dim()];
+        for it in 0..400 {
+            mean.fill(0.0);
+            for w in 0..m {
+                let g = pool.grad(w, &theta, it).unwrap();
+                vec_ops::add_assign(&mut mean, &g.grad);
+            }
+            vec_ops::scale(&mut mean, 1.0 / m as f32);
+            vec_ops::axpy(-1.5, &mean, &mut theta);
+        }
+        let err = p.theta_err(&theta);
+        assert!(err < 1e-3, "theta_err={err}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Row-sharding of a feature matrix across M workers.
+
+/// One worker's slice of the dataset: `phi` is row-major (rows, l).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub phi: Vec<f32>,
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub l: usize,
+}
+
+impl Shard {
+    pub fn new(phi: Vec<f32>, y: Vec<f32>, rows: usize, l: usize) -> Shard {
+        assert_eq!(phi.len(), rows * l);
+        assert_eq!(y.len(), rows);
+        Shard { phi, y, rows, l }
+    }
+}
+
+/// Split `(phi, y)` into `m` equal shards of `zeta` rows each.
+/// Panics unless `rows == m * zeta` (the AOT artifacts are fixed-shape, so
+/// the generator always produces exactly `m * zeta` rows).
+pub fn split_even(phi: &[f32], y: &[f32], l: usize, m: usize, zeta: usize) -> Vec<Shard> {
+    let rows = y.len();
+    assert_eq!(phi.len(), rows * l);
+    assert_eq!(rows, m * zeta, "rows {rows} != m {m} * zeta {zeta}");
+    (0..m)
+        .map(|w| {
+            let lo = w * zeta;
+            let hi = lo + zeta;
+            Shard::new(
+                phi[lo * l..hi * l].to_vec(),
+                y[lo..hi].to_vec(),
+                zeta,
+                l,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_evenly_preserving_rows() {
+        let l = 2;
+        let rows = 6;
+        let phi: Vec<f32> = (0..rows * l).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..rows).map(|i| i as f32 * 10.0).collect();
+        let shards = split_even(&phi, &y, l, 3, 2);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[1].phi, vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(shards[1].y, vec![20.0, 30.0]);
+        assert_eq!(shards[2].rows, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_uneven() {
+        split_even(&[0.0; 10], &[0.0; 5], 2, 2, 2);
+    }
+}

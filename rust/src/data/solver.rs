@@ -1,0 +1,98 @@
+//! Exact ridge solver: `θ* = (Φ^T Φ / n + λ I)^{-1} Φ^T y / n`.
+//!
+//! This is the ground truth for the paper's convergence experiments (the
+//! optimum of eq. 2).  `l ≤` a few hundred, so dense Cholesky is instant.
+
+use crate::math::cholesky::cholesky_solve;
+use crate::math::vec_ops;
+use crate::Result;
+
+/// Solve the regularized normal equations for row-major `phi` (n × l).
+pub fn ridge_solve(phi: &[f32], y: &[f32], l: usize, lambda: f64) -> Result<Vec<f32>> {
+    let n = y.len();
+    assert_eq!(phi.len(), n * l);
+
+    // A = Φ^T Φ / n + λ I  (f64 accumulation).
+    let mut a = vec![0.0f64; l * l];
+    vec_ops::gram(phi, n, l, &mut a);
+    for v in a.iter_mut() {
+        *v /= n as f64;
+    }
+    for i in 0..l {
+        a[i * l + i] += lambda;
+    }
+
+    // b = Φ^T y / n.
+    let mut bt = vec![0.0f32; l];
+    vec_ops::matvec_t(phi, n, l, y, &mut bt);
+    let b: Vec<f64> = bt.iter().map(|&v| v as f64 / n as f64).collect();
+
+    let x = cholesky_solve(&a, l, &b)?;
+    Ok(x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Residual of the normal equations at `theta` (diagnostic):
+/// `‖(Φ^TΦ/n + λI) θ − Φ^T y/n‖₂`.
+pub fn normal_eq_residual(phi: &[f32], y: &[f32], l: usize, lambda: f64, theta: &[f32]) -> f64 {
+    let n = y.len();
+    let mut tmp = vec![0.0f32; n];
+    vec_ops::matvec(phi, n, l, theta, &mut tmp);
+    let mut at = vec![0.0f32; l];
+    vec_ops::matvec_t(phi, n, l, &tmp, &mut at);
+    let mut bt = vec![0.0f32; l];
+    vec_ops::matvec_t(phi, n, l, y, &mut bt);
+    let mut r2 = 0.0f64;
+    for i in 0..l {
+        let r = at[i] as f64 / n as f64 + lambda * theta[i] as f64 - bt[i] as f64 / n as f64;
+        r2 += r * r;
+    }
+    r2.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_noiseless_parameters_with_tiny_reg() {
+        let mut rng = Pcg64::seeded(1);
+        let (n, l) = (400, 12);
+        let mut phi = vec![0.0f32; n * l];
+        rng.fill_normal(&mut phi, 0.0, 1.0);
+        let mut theta = vec![0.0f32; l];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        let mut y = vec![0.0f32; n];
+        vec_ops::matvec(&phi, n, l, &theta, &mut y);
+        let got = ridge_solve(&phi, &y, l, 1e-9).unwrap();
+        for (g, t) in got.iter().zip(&theta) {
+            assert!((g - t).abs() < 1e-3, "{g} vs {t}");
+        }
+    }
+
+    #[test]
+    fn solution_satisfies_normal_equations() {
+        let mut rng = Pcg64::seeded(2);
+        let (n, l) = (300, 8);
+        let mut phi = vec![0.0f32; n * l];
+        rng.fill_normal(&mut phi, 0.0, 1.0);
+        let mut y = vec![0.0f32; n];
+        rng.fill_normal(&mut y, 0.0, 1.0);
+        let theta = ridge_solve(&phi, &y, l, 0.1).unwrap();
+        let res = normal_eq_residual(&phi, &y, l, 0.1, &theta);
+        assert!(res < 1e-5, "residual {res}");
+    }
+
+    #[test]
+    fn larger_lambda_shrinks_solution() {
+        let mut rng = Pcg64::seeded(3);
+        let (n, l) = (200, 6);
+        let mut phi = vec![0.0f32; n * l];
+        rng.fill_normal(&mut phi, 0.0, 1.0);
+        let mut y = vec![0.0f32; n];
+        rng.fill_normal(&mut y, 0.0, 1.0);
+        let t1 = ridge_solve(&phi, &y, l, 0.001).unwrap();
+        let t2 = ridge_solve(&phi, &y, l, 10.0).unwrap();
+        assert!(vec_ops::norm2(&t2) < vec_ops::norm2(&t1));
+    }
+}

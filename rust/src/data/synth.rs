@@ -1,0 +1,329 @@
+//! Synthetic kernel-ridge-regression problem with a planted optimum.
+//!
+//! Generation mirrors the paper's setting (eq. 2): draw raw inputs `x`,
+//! map them through the RBF random-Fourier feature map `K[x]` (the same
+//! `W`, `b` the L1 kernel uses), produce labels `y = K[x]·θ_true + noise`,
+//! shard rows across M machines, and solve the normal equations for the
+//! exact regularized optimum `θ*` so experiments can report `‖θ_t − θ*‖`.
+
+use crate::data::shard::{split_even, Shard};
+use crate::data::solver;
+use crate::math::vec_ops;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Specification of a synthetic KRR problem.
+#[derive(Clone, Debug)]
+pub struct KrrProblemSpec {
+    /// Artifact config name ("small" | "default" | "wide") — must match an
+    /// AOT artifact when the XLA backend is used.
+    pub config: String,
+    /// Raw input dimension `d`.
+    pub d: usize,
+    /// Kernel feature dimension `l`.
+    pub l: usize,
+    /// Examples per machine `ζ`.
+    pub zeta: usize,
+    /// Number of machines `M` (total N = M·ζ).
+    pub machines: usize,
+    /// Label noise std.
+    pub noise: f64,
+    /// Regularization λ.
+    pub lambda: f64,
+    /// RBF bandwidth σ (W ~ N(0, 1/σ²)).
+    pub bandwidth: f64,
+    /// Holdout evaluation rows.
+    pub eval_rows: usize,
+    pub seed: u64,
+}
+
+impl KrrProblemSpec {
+    /// The "small" artifact config (fast tests).
+    pub fn small() -> KrrProblemSpec {
+        KrrProblemSpec {
+            config: "small".into(),
+            d: 8,
+            l: 32,
+            zeta: 256,
+            machines: 8,
+            noise: 0.1,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 512,
+            seed: 42,
+        }
+    }
+
+    /// The "default" artifact config (experiment workhorse).
+    pub fn default_config() -> KrrProblemSpec {
+        KrrProblemSpec {
+            config: "default".into(),
+            d: 8,
+            l: 64,
+            zeta: 2048,
+            machines: 16,
+            noise: 0.1,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 4096,
+            seed: 42,
+        }
+    }
+
+    /// The "wide" artifact config (perf stress).
+    pub fn wide() -> KrrProblemSpec {
+        KrrProblemSpec {
+            config: "wide".into(),
+            d: 16,
+            l: 256,
+            zeta: 1024,
+            machines: 8,
+            noise: 0.1,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 2048,
+            seed: 42,
+        }
+    }
+
+    pub fn with_machines(mut self, m: usize) -> Self {
+        self.machines = m;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Total examples N = M·ζ.
+    pub fn total_examples(&self) -> usize {
+        self.machines * self.zeta
+    }
+}
+
+/// A fully materialized problem instance.
+pub struct KrrProblem {
+    pub spec: KrrProblemSpec,
+    /// Per-machine shards of (Φ, y).
+    pub shards: Vec<Shard>,
+    /// Holdout shard for unbiased loss evaluation.
+    pub eval: Shard,
+    /// The planted generating parameters (NOT θ*; noise + reg shift it).
+    pub theta_true: Vec<f32>,
+    /// Exact solution of eq. 2's normal equations over the training set.
+    pub theta_star: Vec<f32>,
+    /// Loss (eq. 2 objective over training set) at θ*.
+    pub loss_star: f64,
+    /// RBF projection (kept for feature-map reuse / artifact cross-checks).
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl KrrProblem {
+    /// Generate a problem instance (pure rust; the XLA feature-map path is
+    /// exercised separately by `runtime` integration tests).
+    pub fn generate(spec: &KrrProblemSpec) -> Result<KrrProblem> {
+        if spec.machines == 0 || spec.zeta == 0 || spec.l == 0 {
+            return Err(Error::Config("KrrProblemSpec must be non-degenerate".into()));
+        }
+        let mut rng = Pcg64::new(spec.seed, 0xDA7A);
+        let n = spec.total_examples();
+        let (d, l) = (spec.d, spec.l);
+
+        // Shared feature map: W ~ N(0, 1/bandwidth²), b ~ U[0, 2π).
+        let mut w = vec![0.0f32; d * l];
+        rng.fill_normal(&mut w, 0.0, (1.0 / spec.bandwidth) as f32);
+        let mut b = vec![0.0f32; l];
+        rng.fill_uniform(&mut b, 0.0, (2.0 * std::f64::consts::PI) as f32);
+
+        // Planted parameters.
+        let mut theta_true = vec![0.0f32; l];
+        rng.fill_normal(&mut theta_true, 0.0, 1.0);
+
+        // Training set.
+        let (phi, y) = gen_rows(n, spec, &w, &b, &theta_true, &mut rng);
+        let shards = split_even(&phi, &y, l, spec.machines, spec.zeta);
+
+        // Holdout.
+        let (phi_e, y_e) = gen_rows(spec.eval_rows.max(1), spec, &w, &b, &theta_true, &mut rng);
+        let eval = Shard::new(phi_e, y_e, spec.eval_rows.max(1), l);
+
+        // Exact solution + optimal loss.
+        let theta_star = solver::ridge_solve(&phi, &y, l, spec.lambda)?;
+        let loss_star = objective(&theta_star, &phi, &y, l, spec.lambda);
+
+        Ok(KrrProblem {
+            spec: spec.clone(),
+            shards,
+            eval,
+            theta_true,
+            theta_star,
+            loss_star,
+            w,
+            b,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.spec.l
+    }
+
+    /// Objective of eq. 2 over the full training set.
+    pub fn train_loss(&self, theta: &[f32]) -> f64 {
+        let mut num = 0.0;
+        let mut rows = 0usize;
+        for s in &self.shards {
+            num += sumsq_residual(theta, &s.phi, &s.y, s.l);
+            rows += s.rows;
+        }
+        0.5 * num / rows as f64 + 0.5 * self.spec.lambda * vec_ops::dot(theta, theta)
+    }
+
+    /// Objective over the holdout shard.
+    pub fn eval_loss(&self, theta: &[f32]) -> f64 {
+        let s = &self.eval;
+        0.5 * sumsq_residual(theta, &s.phi, &s.y, s.l) / s.rows as f64
+            + 0.5 * self.spec.lambda * vec_ops::dot(theta, theta)
+    }
+
+    /// `‖θ − θ*‖₂`.
+    pub fn theta_err(&self, theta: &[f32]) -> f64 {
+        vec_ops::dist2(theta, &self.theta_star)
+    }
+
+    /// Pure-rust compute pool over this problem's shards.
+    pub fn native_pool(&self) -> crate::data::native::NativeKrrPool {
+        crate::data::native::NativeKrrPool::new(
+            self.shards.clone(),
+            self.spec.lambda as f32,
+        )
+    }
+}
+
+fn gen_rows(
+    rows: usize,
+    spec: &KrrProblemSpec,
+    w: &[f32],
+    b: &[f32],
+    theta_true: &[f32],
+    rng: &mut Pcg64,
+) -> (Vec<f32>, Vec<f32>) {
+    let (d, l) = (spec.d, spec.l);
+    let scale = (2.0f64 / l as f64).sqrt() as f32;
+    let mut phi = vec![0.0f32; rows * l];
+    let mut y = vec![0.0f32; rows];
+    let mut x = vec![0.0f32; d];
+    for r in 0..rows {
+        rng.fill_uniform(&mut x, -1.0, 1.0);
+        let row = &mut phi[r * l..(r + 1) * l];
+        // phi_j = cos(x·W[:,j] + b_j) * sqrt(2/l)   (W stored row-major d×l)
+        for j in 0..l {
+            let mut z = b[j];
+            for (k, &xk) in x.iter().enumerate() {
+                z += xk * w[k * l + j];
+            }
+            row[j] = z.cos() * scale;
+        }
+        y[r] = vec_ops::dot(row, theta_true) as f32 + rng.normal_ms(0.0, spec.noise) as f32;
+    }
+    (phi, y)
+}
+
+/// Sum of squared residuals of a row-major shard.
+pub fn sumsq_residual(theta: &[f32], phi: &[f32], y: &[f32], l: usize) -> f64 {
+    let mut s = 0.0f64;
+    for (row, &yi) in phi.chunks_exact(l).zip(y.iter()) {
+        let r = vec_ops::dot(row, theta) - yi as f64;
+        s += r * r;
+    }
+    s
+}
+
+/// The eq. 2 objective for an arbitrary (phi, y) matrix.
+pub fn objective(theta: &[f32], phi: &[f32], y: &[f32], l: usize, lambda: f64) -> f64 {
+    0.5 * sumsq_residual(theta, phi, y, l) / y.len() as f64
+        + 0.5 * lambda * vec_ops::dot(theta, theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> KrrProblemSpec {
+        KrrProblemSpec {
+            config: "test".into(),
+            d: 4,
+            l: 16,
+            zeta: 64,
+            machines: 4,
+            noise: 0.05,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 128,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn generates_consistent_shapes() {
+        let p = KrrProblem::generate(&tiny_spec()).unwrap();
+        assert_eq!(p.shards.len(), 4);
+        for s in &p.shards {
+            assert_eq!(s.rows, 64);
+            assert_eq!(s.l, 16);
+        }
+        assert_eq!(p.theta_star.len(), 16);
+        assert_eq!(p.eval.rows, 128);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = KrrProblem::generate(&tiny_spec()).unwrap();
+        let b = KrrProblem::generate(&tiny_spec()).unwrap();
+        assert_eq!(a.shards[0].phi, b.shards[0].phi);
+        assert_eq!(a.theta_star, b.theta_star);
+    }
+
+    #[test]
+    fn theta_star_is_a_minimum() {
+        let p = KrrProblem::generate(&tiny_spec()).unwrap();
+        let base = p.train_loss(&p.theta_star);
+        assert!((base - p.loss_star).abs() < 1e-9);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10 {
+            let mut pert = p.theta_star.clone();
+            for v in pert.iter_mut() {
+                *v += rng.normal_ms(0.0, 0.05) as f32;
+            }
+            assert!(p.train_loss(&pert) > base);
+        }
+    }
+
+    #[test]
+    fn theta_star_close_to_truth_with_low_noise() {
+        let mut spec = tiny_spec();
+        spec.noise = 0.01;
+        spec.lambda = 1e-4;
+        spec.machines = 8; // more data
+        let p = KrrProblem::generate(&spec).unwrap();
+        let rel = vec_ops::dist2(&p.theta_star, &p.theta_true) / vec_ops::norm2(&p.theta_true);
+        assert!(rel < 0.2, "rel={rel}");
+    }
+
+    #[test]
+    fn features_bounded() {
+        let p = KrrProblem::generate(&tiny_spec()).unwrap();
+        let bound = (2.0f64 / 16.0).sqrt() as f32 + 1e-6;
+        for s in &p.shards {
+            assert!(s.phi.iter().all(|v| v.abs() <= bound));
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_spec() {
+        let mut spec = tiny_spec();
+        spec.machines = 0;
+        assert!(KrrProblem::generate(&spec).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! # hybriditer
+//!
+//! Reproduction of *"A Hybrid Solution to improve Iteration Efficiency in
+//! the Distributed Learning"* (Wang, Wang & Zhao, 2014) as a three-layer
+//! rust + JAX + Pallas system.
+//!
+//! The paper's idea: in master/slave iterative learning, the master waits
+//! only for the **first `γ` of `M`** slave gradients each iteration and
+//! abandons the stragglers' results, with `γ` chosen by sampling statistics
+//! (Algorithm 1) so the partial gradient stays within relative error `ξ`
+//! of the full gradient with confidence `1 − α`.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — the coordination contribution: partial
+//!   synchronization barrier, BSP/ASYNC/HYBRID modes, straggler & fault
+//!   injection, the Algorithm-1 estimator, optimizers, metrics.
+//! * **L2 (python/compile)** — jax programs (KRR gradient/loss, decoder-only
+//!   LM step) AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels)** — pallas kernels called by L2.
+//!
+//! Python never runs on the training path: [`runtime`] loads the HLO
+//! artifacts through PJRT and every gradient is computed by an AOT
+//! executable (or by the pure-rust mirror in [`data::native`], used for
+//! tests and XLA-free benches).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hybriditer::prelude::*;
+//!
+//! let spec = KrrProblemSpec::default_config().with_machines(8);
+//! let problem = KrrProblem::generate(&spec).unwrap();
+//! let cluster = ClusterSpec { workers: 8, ..ClusterSpec::default() };
+//! let mut cfg = RunConfig::default();
+//! cfg.mode = SyncMode::Hybrid { gamma: 6 };
+//! let mut pool = problem.native_pool();
+//! let report = sim::run_virtual(&mut pool, &cluster, &cfg, &problem).unwrap();
+//! println!("final loss = {}", report.final_loss());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod lm;
+pub mod math;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod straggler;
+pub mod util;
+pub mod worker;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("cluster error: {0}")]
+    Cluster(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{ClusterSpec, TimingMode};
+    pub use crate::coordinator::estimator::{estimate_gamma, EstimatorParams};
+    pub use crate::coordinator::modes::SyncMode;
+    pub use crate::coordinator::{Coordinator, RunConfig, RunReport};
+    pub use crate::data::{KrrProblem, KrrProblemSpec};
+    pub use crate::metrics::Recorder;
+    pub use crate::optim::OptimizerKind;
+    pub use crate::runtime::{ArtifactSet, Engine};
+    pub use crate::sim;
+    pub use crate::straggler::{DelayModel, FailureModel, StragglerProfile};
+    pub use crate::util::rng::Pcg64;
+    pub use crate::Error;
+    pub use crate::Result;
+}

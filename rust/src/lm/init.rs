@@ -1,0 +1,92 @@
+//! GPT-2-style parameter initialization, mirroring
+//! `python/compile/transformer.py::init_params` semantics:
+//! N(0, 0.02) weights, residual projections (`wo`, `w2`) scaled by
+//! `1/sqrt(2·n_layer)`, zero biases, unit LN scales.
+//!
+//! (Numerically independent of the python init — different RNG — but the
+//! same distribution family; the e2e loss trajectories match in shape.)
+
+use crate::lm::LmTask;
+use crate::util::rng::Pcg64;
+
+/// Initialize the flat parameter vector for a task.
+pub fn init_params(task: &LmTask, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0x1217);
+    let mut out = vec![0.0f32; task.n_params];
+    let resid_scale = 1.0 / (2.0 * task.n_layer.max(1) as f64).sqrt();
+    let mut off = 0usize;
+    for spec in &task.params {
+        let n = spec.elements();
+        let dst = &mut out[off..off + n];
+        let base = spec.name.rsplit('.').next().unwrap_or(&spec.name);
+        if base.ends_with("_scale") {
+            dst.fill(1.0);
+        } else if base.ends_with("_bias") || base == "b1" || base == "b2" {
+            // zeros (already)
+        } else {
+            let std = if base == "wo" || base == "w2" {
+                0.02 * resid_scale
+            } else {
+                0.02
+            };
+            rng.fill_normal(dst, 0.0, std as f32);
+        }
+        off += n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, TensorSpec};
+
+    fn task() -> LmTask {
+        let params = vec![
+            TensorSpec { name: "embed".into(), shape: vec![32, 8], dtype: Dtype::F32 },
+            TensorSpec { name: "layer0.ln1_scale".into(), shape: vec![8], dtype: Dtype::F32 },
+            TensorSpec { name: "layer0.ln1_bias".into(), shape: vec![8], dtype: Dtype::F32 },
+            TensorSpec { name: "layer0.wo".into(), shape: vec![8, 8], dtype: Dtype::F32 },
+            TensorSpec { name: "layer0.b1".into(), shape: vec![8], dtype: Dtype::F32 },
+        ];
+        let n_params = 32 * 8 + 8 + 8 + 64 + 8;
+        LmTask {
+            config: "t".into(),
+            vocab: 32,
+            d_model: 8,
+            n_head: 2,
+            n_layer: 1,
+            seq: 4,
+            batch: 2,
+            d_ff: 32,
+            params,
+            n_params,
+        }
+    }
+
+    #[test]
+    fn sections_follow_init_rules() {
+        let t = task();
+        let p = init_params(&t, 0);
+        // embed: nonzero normals
+        assert!(p[..256].iter().any(|&v| v != 0.0));
+        assert!(p[..256].iter().all(|&v| v.abs() < 0.2));
+        // ln1_scale: ones
+        assert!(p[256..264].iter().all(|&v| v == 1.0));
+        // ln1_bias: zeros
+        assert!(p[264..272].iter().all(|&v| v == 0.0));
+        // wo: scaled down vs embed
+        let wo = &p[272..336];
+        let std = (wo.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 64.0).sqrt();
+        assert!(std < 0.02, "wo std={std}");
+        // b1: zeros
+        assert!(p[336..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = task();
+        assert_eq!(init_params(&t, 9), init_params(&t, 9));
+        assert_ne!(init_params(&t, 9), init_params(&t, 10));
+    }
+}

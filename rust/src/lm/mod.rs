@@ -1,0 +1,120 @@
+//! Data-parallel transformer LM training on the hybrid coordinator — the
+//! end-to-end demonstration that the paper's barrier is model-agnostic.
+//!
+//! The `lm_step_<config>` artifact (L2 jax fwd/bwd, AOT-lowered) takes
+//! `(tokens, *params)` and returns `(loss, *grads)`.  Rust treats the whole
+//! parameter set as one flat `Vec<f32>`; [`LmTask`] knows the per-tensor
+//! split from the manifest and re-packs at the PJRT boundary.  Each
+//! simulated worker samples its own microbatches from its shard of the
+//! synthetic bigram corpus ([`crate::data::corpus`]), so the hybrid
+//! coordinator drives *stochastic* data-parallel SGD exactly like a
+//! production data-parallel trainer.
+
+pub mod init;
+pub mod pool;
+
+pub use pool::LmPool;
+
+use crate::runtime::{ArtifactSet, TensorSpec};
+use crate::{Error, Result};
+
+/// Static description of one LM configuration (from the manifest).
+#[derive(Clone, Debug)]
+pub struct LmTask {
+    pub config: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub d_ff: usize,
+    /// Parameter tensors in artifact input order (tokens excluded).
+    pub params: Vec<TensorSpec>,
+    pub n_params: usize,
+}
+
+impl LmTask {
+    /// Read the task description from `lm_step_<config>`'s manifest entry.
+    pub fn from_manifest(artifacts: &ArtifactSet, config: &str) -> Result<LmTask> {
+        let info = artifacts.info(&format!("lm_step_{config}"))?;
+        let params: Vec<TensorSpec> = info.inputs[1..].to_vec();
+        let n_params = params.iter().map(|t| t.elements()).sum();
+        let meta_n = info.meta_usize("n_params")?;
+        if n_params != meta_n {
+            return Err(Error::Manifest(format!(
+                "lm_step_{config}: manifest n_params {meta_n} != summed {n_params}"
+            )));
+        }
+        Ok(LmTask {
+            config: config.to_string(),
+            vocab: info.meta_usize("vocab")?,
+            d_model: info.meta_usize("d_model")?,
+            n_head: info.meta_usize("n_head")?,
+            n_layer: info.meta_usize("n_layer")?,
+            seq: info.meta_usize("seq")?,
+            batch: info.meta_usize("batch")?,
+            d_ff: info.meta_usize("d_ff")?,
+            params,
+            n_params,
+        })
+    }
+
+    /// Tokens consumed per microbatch (loss positions = batch·seq).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// Byte offsets of each tensor in the flat parameter vector.
+    pub fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for t in &self.params {
+            let n = t.elements();
+            out.push((off, n));
+            off += n;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_task() -> LmTask {
+        use crate::runtime::manifest::Dtype;
+        let params = vec![
+            TensorSpec { name: "embed".into(), shape: vec![16, 4], dtype: Dtype::F32 },
+            TensorSpec { name: "pos".into(), shape: vec![8, 4], dtype: Dtype::F32 },
+            TensorSpec { name: "lnf_scale".into(), shape: vec![4], dtype: Dtype::F32 },
+        ];
+        let n_params = 16 * 4 + 8 * 4 + 4;
+        LmTask {
+            config: "fake".into(),
+            vocab: 16,
+            d_model: 4,
+            n_head: 2,
+            n_layer: 0,
+            seq: 8,
+            batch: 2,
+            d_ff: 16,
+            params,
+            n_params,
+        }
+    }
+
+    #[test]
+    fn offsets_partition_flat_vector() {
+        let t = fake_task();
+        let offs = t.offsets();
+        assert_eq!(offs, vec![(0, 64), (64, 32), (96, 4)]);
+        let total: usize = offs.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, t.n_params);
+    }
+
+    #[test]
+    fn tokens_per_batch() {
+        assert_eq!(fake_task().tokens_per_batch(), 16);
+    }
+}

@@ -1,0 +1,118 @@
+//! XLA-backed LM compute pool: each simulated worker runs `lm_step` on its
+//! own corpus shard's microbatches.
+
+use crate::data::corpus::BigramCorpus;
+use crate::data::{ComputePool, GradResult};
+use crate::lm::LmTask;
+use crate::runtime::{literal, ArtifactSet, Engine, Executable};
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Data-parallel LM pool for the virtual simulator (single engine).
+pub struct LmPool {
+    task: LmTask,
+    engine: Engine,
+    exe: Executable,
+    corpus: BigramCorpus,
+    /// Per-worker batch RNGs (disjoint streams = disjoint data shards).
+    rngs: Vec<Pcg64>,
+    offsets: Vec<(usize, usize)>,
+}
+
+impl LmPool {
+    pub fn new(
+        artifacts: &ArtifactSet,
+        engine: &Engine,
+        config: &str,
+        workers: usize,
+        corpus_branching: usize,
+        seed: u64,
+    ) -> Result<LmPool> {
+        let task = LmTask::from_manifest(artifacts, config)?;
+        let exe = artifacts.load(engine, &format!("lm_step_{config}"))?;
+        let corpus = BigramCorpus::new(task.vocab, corpus_branching, seed);
+        let mut root = Pcg64::new(seed, 0x70_01);
+        let rngs = (0..workers).map(|w| root.split(w as u64)).collect();
+        let offsets = task.offsets();
+        Ok(LmPool {
+            task,
+            engine: engine.clone(),
+            exe,
+            corpus,
+            rngs,
+            offsets,
+        })
+    }
+
+    pub fn task(&self) -> &LmTask {
+        &self.task
+    }
+
+    /// The corpus' exact conditional entropy: the achievable loss floor.
+    pub fn loss_floor(&self) -> f64 {
+        self.corpus.conditional_entropy()
+    }
+
+    /// Evaluate mean NLL on a fresh batch (eval hook helper).
+    pub fn eval_loss(&mut self, theta: &[f32], seed: u64) -> Result<f64> {
+        let mut rng = Pcg64::new(seed, 0xE7A1);
+        let res = self.step(theta, &mut rng)?;
+        Ok(res.loss_sum.unwrap() / res.examples as f64)
+    }
+
+    fn step(&mut self, theta: &[f32], rng: &mut Pcg64) -> Result<GradResult> {
+        let t = &self.task;
+        debug_assert_eq!(theta.len(), t.n_params);
+        let tokens = self.corpus.sample_batch(t.batch, t.seq, rng);
+
+        // Pack inputs: tokens + every parameter tensor sliced from flat θ.
+        // Device buffers are built straight from the host slices (single
+        // copy; the literal path would copy twice — §Perf L3).
+        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(1 + t.params.len());
+        inputs.push(self.engine.buffer_i32(&tokens, &[t.batch, t.seq + 1])?);
+        for (spec, &(off, n)) in t.params.iter().zip(&self.offsets) {
+            inputs.push(self.engine.buffer_f32(&theta[off..off + n], &spec.shape)?);
+        }
+
+        let outs = self.exe.run_b(&inputs)?;
+        let loss = literal::to_scalar_f32(&outs[0])? as f64;
+
+        // Flatten grads back into one vector (outs[1..] in param order).
+        let mut grad = vec![0.0f32; t.n_params];
+        for (out, &(off, n)) in outs[1..].iter().zip(&self.offsets) {
+            let v = literal::to_vec_f32(out)?;
+            debug_assert_eq!(v.len(), n);
+            grad[off..off + n].copy_from_slice(&v);
+        }
+
+        let examples = t.tokens_per_batch();
+        Ok(GradResult {
+            grad,
+            // lm_step returns *mean* NLL; convert to a sum so the shared
+            // loss assembly (Σ/Σ) recovers the mean across workers.
+            loss_sum: Some(loss * examples as f64),
+            examples,
+        })
+    }
+}
+
+impl ComputePool for LmPool {
+    fn dim(&self) -> usize {
+        self.task.n_params
+    }
+
+    fn n_workers(&self) -> usize {
+        self.rngs.len()
+    }
+
+    fn shard_examples(&self, _w: usize) -> usize {
+        self.task.tokens_per_batch()
+    }
+
+    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        let mut rng = self.rngs[w].clone();
+        let res = self.step(theta, &mut rng)?;
+        self.rngs[w] = rng;
+        Ok(res)
+    }
+}

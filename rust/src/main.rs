@@ -1,0 +1,240 @@
+//! `hybriditer` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   train <config.toml>   run an experiment from a TOML config
+//!   estimate              Algorithm-1 γ estimation for given (N, ζ, M, α, ξ)
+//!   inspect               list AOT artifacts and their shapes
+//!
+//! Examples live in `examples/` (cargo run --example ...).
+
+use hybriditer::cli::ArgSpec;
+use hybriditer::config::schema::{Backend, ExperimentConfig, ProblemKind};
+use hybriditer::coordinator::estimator::{estimate_gamma, estimate_sample_size, EstimatorParams};
+use hybriditer::data::KrrProblem;
+use hybriditer::metrics::csv;
+use hybriditer::prelude::*;
+use hybriditer::runtime::{ArtifactSet, Engine};
+use hybriditer::util::logger;
+use hybriditer::worker::{NativeKrrFactory, XlaKrrFactory};
+use hybriditer::{cluster::TimingMode, sim::NoEval};
+
+fn main() {
+    logger::init();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if args.is_empty() {
+        usage_and_exit()
+    } else {
+        args.remove(0)
+    };
+    let code = match sub.as_str() {
+        "train" => cmd_train(&args),
+        "estimate" => cmd_estimate(&args),
+        "inspect" => cmd_inspect(&args),
+        "--help" | "-h" | "help" => {
+            usage_and_exit();
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            usage_and_exit();
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage_and_exit() -> ! {
+    eprintln!(
+        "hybriditer — hybrid partial-synchronization distributed learning\n\n\
+         USAGE:\n  hybriditer train <config.toml> [--csv out.csv]\n  \
+         hybriditer estimate [--n N] [--zeta Z] [--machines M] [--alpha A] [--xi X]\n  \
+         hybriditer inspect [--artifacts DIR]\n"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new("hybriditer train", "run an experiment from a TOML config")
+        .positional("config", "experiment TOML file")
+        .opt("csv", "", "write the loss curve CSV here (overrides config)");
+    let parsed = match spec.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match run_train(parsed.positional(0), parsed.get("csv")) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+fn run_train(config_path: &str, csv_override: &str) -> hybriditer::Result<()> {
+    let cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    log::info!(
+        "experiment: {:?} mode={} workers={} timing={:?} backend={:?}",
+        cfg.problem_kind,
+        cfg.run.mode.name(),
+        cfg.cluster.workers,
+        cfg.timing,
+        cfg.backend
+    );
+
+    let report = match (&cfg.problem_kind, cfg.timing) {
+        (ProblemKind::Krr, TimingMode::Virtual) => {
+            let problem = KrrProblem::generate(&cfg.krr)?;
+            match cfg.backend {
+                Backend::Native => {
+                    let mut pool = problem.native_pool();
+                    sim::run_virtual(&mut pool, &cfg.cluster, &cfg.run, &problem)?
+                }
+                Backend::Xla => {
+                    let artifacts = ArtifactSet::discover()?;
+                    let engine = Engine::cpu()?;
+                    let mut pool = hybriditer::worker::compute::XlaKrrPool::new(
+                        &artifacts,
+                        &engine,
+                        &problem.spec.config,
+                        &problem.shards,
+                        problem.spec.lambda as f32,
+                    )?;
+                    sim::run_virtual(&mut pool, &cfg.cluster, &cfg.run, &problem)?
+                }
+            }
+        }
+        (ProblemKind::Krr, TimingMode::Real) => {
+            let problem = KrrProblem::generate(&cfg.krr)?;
+            let coord = Coordinator::new(cfg.cluster.clone(), cfg.run.clone())?;
+            match cfg.backend {
+                Backend::Native => {
+                    let factory = NativeKrrFactory::for_problem(&problem);
+                    coord.run_real(&factory, &problem)?
+                }
+                Backend::Xla => {
+                    let artifacts = ArtifactSet::discover()?;
+                    let factory = XlaKrrFactory::new(
+                        &artifacts,
+                        &problem.spec.config,
+                        problem.shards.clone(),
+                        problem.spec.lambda as f32,
+                    )?;
+                    coord.run_real(&factory, &problem)?
+                }
+            }
+        }
+        (ProblemKind::Lm { config }, _) => {
+            // LM training always runs the virtual driver (one engine).
+            let artifacts = ArtifactSet::discover()?;
+            let engine = Engine::cpu()?;
+            let mut pool = hybriditer::lm::LmPool::new(
+                &artifacts,
+                &engine,
+                config,
+                cfg.cluster.workers,
+                4,
+                cfg.krr.seed,
+            )?;
+            let mut run = cfg.run.clone();
+            run.init_theta = Some(hybriditer::lm::init::init_params(pool.task(), cfg.krr.seed));
+            sim::run_virtual(&mut pool, &cfg.cluster, &run, &NoEval)?
+        }
+    };
+
+    println!("{}", report.summary());
+    let out = if !csv_override.is_empty() {
+        Some(csv_override.to_string())
+    } else {
+        cfg.out_csv.clone()
+    };
+    if let Some(path) = out {
+        csv::write_recorder(&report.recorder, std::path::Path::new(&path))?;
+        log::info!("loss curve -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_estimate(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new("hybriditer estimate", "Algorithm-1 sample/machine estimation")
+        .opt("n", "32768", "total examples N")
+        .opt("zeta", "2048", "examples per machine ζ")
+        .opt("machines", "16", "machines M")
+        .opt("alpha", "0.05", "significance α (confidence 1-α)")
+        .opt("xi", "0.05", "relative error ξ");
+    let p = match spec.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let go = || -> hybriditer::Result<()> {
+        let n = p.get_usize("n")?;
+        let zeta = p.get_usize("zeta")?;
+        let m = p.get_usize("machines")?;
+        let params = EstimatorParams {
+            alpha: p.get_f64("alpha")?,
+            xi: p.get_f64("xi")?,
+        };
+        let sample = estimate_sample_size(n, params)?;
+        let gamma = estimate_gamma(n, zeta, m, params)?;
+        println!("u_(alpha/2)      = {:.6}", params.u_half_alpha());
+        println!("sample size n    = {sample:.1} examples");
+        println!("machines gamma   = {gamma} of {m}  (zeta = {zeta})");
+        println!("abandon rate     = {:.1}%", 100.0 * (1.0 - gamma as f64 / m as f64));
+        Ok(())
+    };
+    match go() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("estimate failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_inspect(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new("hybriditer inspect", "list AOT artifacts")
+        .opt("artifacts", "", "artifact directory (default: discover)");
+    let p = match spec.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let go = || -> hybriditer::Result<()> {
+        let set = if p.get("artifacts").is_empty() {
+            ArtifactSet::discover()?
+        } else {
+            ArtifactSet::open(p.get("artifacts"))?
+        };
+        println!(
+            "artifacts at {} (jax {}):",
+            set.dir().display(),
+            set.manifest().jax_version
+        );
+        for (name, info) in set.manifest().iter() {
+            let ins: Vec<String> = info
+                .inputs
+                .iter()
+                .map(|t| format!("{}{:?}", t.name, t.shape))
+                .collect();
+            println!(
+                "  {name:42} {:2} in / {:2} out   [{}]",
+                info.inputs.len(),
+                info.outputs.len(),
+                ins.join(", ")
+            );
+        }
+        Ok(())
+    };
+    match go() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("inspect failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Dense Cholesky factorization/solve for the exact ridge solution.
+//!
+//! The T1/T2 experiments report `‖θ_t − θ*‖`; `θ*` solves the l×l system
+//! `(Φ^T Φ / m + λ I) θ = Φ^T y / m` (eq. 2's normal equations).  `l` is at
+//! most a few hundred, so an O(l³) dense factorization is instant.
+
+use crate::{Error, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix (row-major, n×n, f64).
+pub struct CholeskyFactor {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl CholeskyFactor {
+    /// Factor `a` (row-major n×n, symmetric positive definite).
+    pub fn new(a: &[f64], n: usize) -> Result<CholeskyFactor> {
+        if a.len() != n * n {
+            return Err(Error::Shape(format!(
+                "cholesky: expected {}x{} = {} elements, got {}",
+                n,
+                n,
+                n * n,
+                a.len()
+            )));
+        }
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::other(format!(
+                            "cholesky: matrix not positive definite at pivot {i} (s={s})"
+                        )));
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(CholeskyFactor { l, n })
+    }
+
+    /// Solve `A x = b` via forward+back substitution.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n {
+            return Err(Error::Shape(format!(
+                "cholesky solve: rhs has {} elements, want {}",
+                b.len(),
+                self.n
+            )));
+        }
+        let n = self.n;
+        // L z = b
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * z[k];
+            }
+            z[i] = s / self.l[i * n + i];
+        }
+        // L^T x = z
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = z[i];
+            for k in (i + 1)..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        Ok(x)
+    }
+}
+
+/// One-shot solve of an SPD system.
+pub fn cholesky_solve(a: &[f64], n: usize, b: &[f64]) -> Result<Vec<f64>> {
+    CholeskyFactor::new(a, n)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn solves_small_system() {
+        // A = [[4,2],[2,3]], b = [2,1] -> x = [0.5, 0]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let x = cholesky_solve(&a, 2, &[2.0, 1.0]).unwrap();
+        assert!((x[0] - 0.5).abs() < 1e-12);
+        assert!(x[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let x = cholesky_solve(&a, n, &b).unwrap();
+        for (xi, bi) in x.iter().zip(&b) {
+            assert!((xi - bi).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 32;
+        // A = B B^T + n*I is SPD.
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut rhs = vec![0.0; n];
+        for i in 0..n {
+            rhs[i] = (0..n).map(|j| a[i * n + j] * x_true[j]).sum();
+        }
+        let x = cholesky_solve(&a, n, &rhs).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(CholeskyFactor::new(&a, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shape() {
+        assert!(CholeskyFactor::new(&[1.0, 2.0, 3.0], 2).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Numeric substrates: vector ops, statistics, normal quantile, Cholesky.
+//!
+//! Everything the coordinator needs that would normally come from a
+//! linear-algebra or stats crate, implemented from scratch (DESIGN.md §3).
+
+pub mod cholesky;
+pub mod quantile;
+pub mod stats;
+pub mod vec_ops;
+
+pub use cholesky::{cholesky_solve, CholeskyFactor};
+pub use quantile::normal_quantile;
+pub use stats::{OnlineStats, Summary};

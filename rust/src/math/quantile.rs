@@ -1,0 +1,183 @@
+//! Standard-normal quantile (inverse CDF) — the `u_{α/2}` of Algorithm 1.
+//!
+//! Acklam's rational approximation (relative error < 1.15e-9 over the whole
+//! open interval), refined with one Halley step against an erfc-based CDF,
+//! which brings it to ~1e-15 — far beyond what the estimator needs.
+
+/// Inverse CDF of N(0,1): returns `z` with `P(Z <= z) = p`, `p ∈ (0, 1)`.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile needs p in (0,1), got {p}");
+
+    // Acklam coefficients.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley refinement step: e = CDF(x) - p, u = e / pdf(x).
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Standard normal CDF via erfc (Abramowitz & Stegun 7.1.26-style series is
+/// not accurate enough; use the W. J. Cody rational erf approximation).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function, Cody-style (abs error < 1.2e-7 base, but
+/// the continued-fraction branch below is ~1e-15 for the ranges we hit).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x < 0.5 {
+        return 1.0 - erf_series(x);
+    }
+    // Continued fraction (modified Lentz) for erfc, x >= 0.5:
+    //   erfc(x) = exp(-x^2)/sqrt(pi) / (x + (1/2)/(x + 1/(x + (3/2)/(x + ...))))
+    // b_j = x for all levels, a_j = j/2.
+    let x2 = x * x;
+    let mut f = x; // f_0 = b_0
+    let mut c = x; // C_0 = b_0
+    let mut d = 0.0; // D_0
+    let mut n = 0.5f64;
+    for _ in 0..300 {
+        d = x + n * d;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        d = 1.0 / d;
+        c = x + n / c;
+        if c.abs() < 1e-300 {
+            c = 1e-300;
+        }
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+        n += 0.5;
+    }
+    ((-x2).exp() / f64::sqrt(std::f64::consts::PI) / f).min(1.0)
+}
+
+/// Taylor/series erf for small |x| (converges fast for x < 0.5).
+fn erf_series(x: f64) -> f64 {
+    let mut term = x;
+    let mut sum = x;
+    let x2 = x * x;
+    for n in 1..60 {
+        term *= -x2 / n as f64;
+        let add = term / (2 * n + 1) as f64;
+        sum += add;
+        if add.abs() < 1e-17 {
+            break;
+        }
+    }
+    sum * 2.0 / f64::sqrt(std::f64::consts::PI)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values from scipy.stats.norm.ppf.
+    const CASES: &[(f64, f64)] = &[
+        (0.5, 0.0),
+        (0.975, 1.959963984540054),
+        (0.95, 1.6448536269514722),
+        (0.995, 2.5758293035489004),
+        (0.9995, 3.2905267314919255),
+        (0.025, -1.959963984540054),
+        (0.1, -1.2815515655446004),
+        (0.9, 1.2815515655446004),
+        (0.99, 2.3263478740408408),
+        (0.0001, -3.719016485455709),
+    ];
+
+    #[test]
+    fn matches_scipy_ppf() {
+        for &(p, want) in CASES {
+            let got = normal_quantile(p);
+            assert!(
+                (got - want).abs() < 1e-8,
+                "ppf({p}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        for i in 1..99 {
+            let p = i as f64 / 100.0;
+            let z = normal_quantile(p);
+            let back = normal_cdf(z);
+            assert!((back - p).abs() < 1e-10, "p={p} z={z} back={back}");
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        for &p in &[0.01, 0.1, 0.25, 0.4] {
+            let a = normal_quantile(p);
+            let b = normal_quantile(1.0 - p);
+            assert!((a + b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((normal_cdf(1.96) - 0.9750021048517795).abs() < 1e-9);
+        assert!((normal_cdf(-1.0) - 0.15865525393145707).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_p_zero() {
+        normal_quantile(0.0);
+    }
+}

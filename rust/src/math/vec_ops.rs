@@ -1,0 +1,193 @@
+//! Flat f32 vector operations used on the coordinator hot path.
+//!
+//! These run once per iteration on the parameter vector; for KRR `l` is a
+//! few hundred, for the LM a few million, so they are written as simple
+//! slice loops the compiler auto-vectorizes (verified in the perf pass:
+//! `axpy`/`scale_add` compile to packed AVX on this target).
+
+/// `y += a * x` (axpy).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// `y = x` (copy).
+#[inline]
+pub fn assign(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// Element-wise sum accumulation: `acc += x`.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x.iter()) {
+        *a += *b;
+    }
+}
+
+/// `x *= a`.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Dot product (f64 accumulation for stability).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        s += *a as f64 * *b as f64;
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `||x - y||_2`.
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        let d = *a as f64 - *b as f64;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Mean of `k` gradient slices accumulated into `out` (out = sum(gs)/k).
+pub fn mean_into(gs: &[&[f32]], out: &mut [f32]) {
+    assert!(!gs.is_empty());
+    out.fill(0.0);
+    for g in gs {
+        add_assign(out, g);
+    }
+    scale(out, 1.0 / gs.len() as f32);
+}
+
+/// Weighted mean: `out = sum(w_i g_i) / sum(w_i)`.
+pub fn weighted_mean_into(gs: &[&[f32]], ws: &[f32], out: &mut [f32]) {
+    assert_eq!(gs.len(), ws.len());
+    assert!(!gs.is_empty());
+    out.fill(0.0);
+    let mut wsum = 0.0f32;
+    for (g, &w) in gs.iter().zip(ws.iter()) {
+        axpy(w, g, out);
+        wsum += w;
+    }
+    assert!(wsum > 0.0, "weights must not all be zero");
+    scale(out, 1.0 / wsum);
+}
+
+/// Dense row-major matvec: `out = A x`, A is (m, n).
+pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(out.len(), m);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&a[i * n..(i + 1) * n], x) as f32;
+    }
+}
+
+/// Transposed matvec: `out = A^T x`, A is (m, n), x is (m), out is (n).
+pub fn matvec_t(a: &[f32], m: usize, n: usize, x: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        axpy(xi, &a[i * n..(i + 1) * n], out);
+    }
+}
+
+/// `A^T A` into a dense (n, n) row-major buffer (used by the exact solver).
+pub fn gram(a: &[f32], m: usize, n: usize, out: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(out.len(), n * n);
+    out.fill(0.0);
+    for row in a.chunks_exact(n) {
+        for i in 0..n {
+            let ri = row[i] as f64;
+            // symmetric: fill upper triangle, mirror later
+            for j in i..n {
+                out[i * n + j] += ri * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            out[i * n + j] = out[j * n + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_dot() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_of_grads() {
+        let g1 = vec![1.0, 2.0];
+        let g2 = vec![3.0, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&[&g1, &g2], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let g1 = vec![1.0, 0.0];
+        let g2 = vec![0.0, 1.0];
+        let mut out = vec![0.0; 2];
+        weighted_mean_into(&[&g1, &g2], &[3.0, 1.0], &mut out);
+        assert_eq!(out, vec![0.75, 0.25]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        // A = [[1,2],[3,4],[5,6]]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = vec![1.0, -1.0];
+        let mut out = vec![0.0; 3];
+        matvec(&a, 3, 2, &x, &mut out);
+        assert_eq!(out, vec![-1.0, -1.0, -1.0]);
+
+        let xt = vec![1.0, 1.0, 1.0];
+        let mut out_t = vec![0.0; 2];
+        matvec_t(&a, 3, 2, &xt, &mut out_t);
+        assert_eq!(out_t, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn gram_is_ata() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let mut g = vec![0.0f64; 4];
+        gram(&a, 2, 2, &mut g);
+        assert_eq!(g, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+}

@@ -1,0 +1,106 @@
+//! CSV export for loss curves and experiment tables (no csv crate offline).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::metrics::recorder::Recorder;
+use crate::Result;
+
+/// Write a recorder's rows as CSV (one line per iteration).
+pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(
+        f,
+        "iter,time,loss,eval_loss,theta_err,included,abandoned,alive,gamma,grad_norm"
+    )?;
+    for r in rec.rows() {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{},{},{},{}",
+            r.iter,
+            r.time,
+            r.loss,
+            opt(r.eval_loss),
+            opt(r.theta_err),
+            r.included,
+            r.abandoned,
+            r.alive,
+            r.gamma.map(|g| g.to_string()).unwrap_or_default(),
+            r.grad_norm
+        )?;
+    }
+    Ok(())
+}
+
+/// Write a generic table: header + stringified rows.
+pub fn write_table(header: &[&str], rows: &[Vec<String>], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.iter().map(escape).collect::<Vec<_>>().join(","))?;
+    }
+    Ok(())
+}
+
+fn opt(v: Option<f64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_default()
+}
+
+fn escape(s: &String) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::IterRow;
+
+    #[test]
+    fn writes_and_reads_back() {
+        let mut rec = Recorder::new();
+        rec.push(IterRow {
+            iter: 0,
+            time: 0.5,
+            loss: 2.0,
+            eval_loss: Some(2.1),
+            theta_err: None,
+            included: 3,
+            abandoned: 1,
+            alive: 4,
+            gamma: Some(3),
+            grad_norm: 0.7,
+        });
+        let path = std::env::temp_dir().join("hybriditer_csv_test/x.csv");
+        write_recorder(&rec, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert!(lines.next().unwrap().starts_with("iter,time,loss"));
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("0,0.5,2,2.1,,3,1,4,3,0.7"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn table_escaping() {
+        let path = std::env::temp_dir().join("hybriditer_csv_test/t.csv");
+        write_table(
+            &["a", "b"],
+            &[vec!["x,y".to_string(), "plain".to_string()]],
+            &path,
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"x,y\",plain"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

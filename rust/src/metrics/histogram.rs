@@ -1,0 +1,144 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+
+/// Histogram with logarithmically spaced buckets over `[min_val, max_val]`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    min_val: f64,
+    ratio: f64, // log-width per bucket
+    count: u64,
+    sum: f64,
+    overflow: u64,
+    underflow: u64,
+}
+
+impl Histogram {
+    /// `n_buckets` log-spaced buckets spanning `[min_val, max_val]`.
+    pub fn new(min_val: f64, max_val: f64, n_buckets: usize) -> Histogram {
+        assert!(min_val > 0.0 && max_val > min_val && n_buckets > 0);
+        Histogram {
+            buckets: vec![0; n_buckets],
+            min_val,
+            ratio: (max_val / min_val).ln() / n_buckets as f64,
+            count: 0,
+            sum: 0.0,
+            overflow: 0,
+            underflow: 0,
+        }
+    }
+
+    /// Default latency histogram: 1µs .. 100s.
+    pub fn latency() -> Histogram {
+        Histogram::new(1e-6, 100.0, 180)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if v < self.min_val {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((v / self.min_val).ln() / self.ratio) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.min_val;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.min_val * ((i + 1) as f64 * self.ratio).exp();
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        assert_eq!(self.min_val, other.min_val);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.overflow += other.overflow;
+        self.underflow += other.underflow;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn quantiles_bracket_distribution() {
+        let mut h = Histogram::latency();
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..100_000 {
+            h.record(rng.lognormal(-5.0, 1.0));
+        }
+        // true median = exp(-5) ≈ 6.74ms
+        let p50 = h.quantile(0.5);
+        assert!(
+            (p50 / (-5.0f64).exp() - 1.0).abs() < 0.1,
+            "p50={p50} want≈{}",
+            (-5.0f64).exp()
+        );
+        assert!(h.quantile(0.99) > p50);
+        assert!((h.mean() / (-5.0f64 + 0.5).exp() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn overflow_underflow() {
+        let mut h = Histogram::new(1.0, 10.0, 10);
+        h.record(0.5);
+        h.record(50.0);
+        h.record(5.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.01), 1.0); // underflow clamps to min
+        assert!(h.quantile(1.0).is_infinite()); // overflow above range
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new(1.0, 100.0, 20);
+        let mut b = Histogram::new(1.0, 100.0, 20);
+        for i in 1..=50 {
+            a.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        let p50 = a.quantile(0.5);
+        assert!(p50 > 40.0 && p50 < 65.0, "p50={p50}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: per-iteration recording, histograms, CSV/JSON export.
+
+pub mod csv;
+pub mod histogram;
+pub mod recorder;
+
+pub use histogram::Histogram;
+pub use recorder::{IterRow, Recorder};

@@ -1,0 +1,178 @@
+//! Per-iteration training metrics.
+
+use crate::math::stats::Summary;
+
+/// One coordinator iteration's record.
+#[derive(Clone, Debug)]
+pub struct IterRow {
+    pub iter: u64,
+    /// Elapsed time at the end of the iteration (virtual or wall seconds).
+    pub time: f64,
+    /// Training-loss estimate from the included shards (objective of eq. 2).
+    pub loss: f64,
+    /// Exact holdout/eval loss if evaluated this iteration.
+    pub eval_loss: Option<f64>,
+    /// `‖θ_t − θ*‖₂` when the exact solution is known (KRR).
+    pub theta_err: Option<f64>,
+    /// Gradient contributions aggregated this iteration.
+    pub included: usize,
+    /// Results abandoned (arrived late) this iteration.
+    pub abandoned: usize,
+    /// Workers alive at the end of the iteration.
+    pub alive: usize,
+    /// γ in effect this iteration (None for BSP/async).
+    pub gamma: Option<usize>,
+    /// L2 norm of the aggregated gradient.
+    pub grad_norm: f64,
+}
+
+/// Collects [`IterRow`]s and computes run-level summaries.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    rows: Vec<IterRow>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: IterRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[IterRow] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&IterRow> {
+        self.rows.last()
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rows.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.rows.last().map(|r| r.time).unwrap_or(0.0)
+    }
+
+    /// First time the loss estimate drops below `target`, if ever.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.rows.iter().find(|r| r.loss <= target).map(|r| r.time)
+    }
+
+    /// First iteration the loss estimate drops below `target`.
+    pub fn iters_to_loss(&self, target: f64) -> Option<u64> {
+        self.rows.iter().find(|r| r.loss <= target).map(|r| r.iter)
+    }
+
+    /// Summary of per-iteration durations.
+    pub fn iter_time_summary(&self) -> Option<Summary> {
+        if self.rows.len() < 2 {
+            return None;
+        }
+        let mut durs = Vec::with_capacity(self.rows.len() - 1);
+        for w in self.rows.windows(2) {
+            durs.push(w[1].time - w[0].time);
+        }
+        Some(Summary::of(&durs))
+    }
+
+    /// Fit the empirical Q-linear rate: slope of `ln ‖θ_t − θ*‖` vs `t`
+    /// gives `ln q` (§3.3).  Returns `(q, r²)`.
+    ///
+    /// Partial-gradient noise gives the error a floor (`η²C²` in eq. 30);
+    /// fitting through the floor would bias q̂ upward, so only the decay
+    /// phase (rows with error > 2× the minimum achieved) enters the fit.
+    pub fn qlinear_rate(&self) -> Option<(f64, f64)> {
+        let errs: Vec<(u64, f64)> = self
+            .rows
+            .iter()
+            .filter_map(|r| r.theta_err.filter(|e| *e > 1e-12).map(|e| (r.iter, e)))
+            .collect();
+        let min_err = errs
+            .iter()
+            .map(|(_, e)| *e)
+            .fold(f64::INFINITY, f64::min);
+        let cutoff = min_err * 2.0;
+        let pts: Vec<(f64, f64)> = errs
+            .iter()
+            .take_while(|(_, e)| *e > cutoff)
+            .map(|(it, e)| (*it as f64, e.ln()))
+            .collect();
+        if pts.len() < 4 {
+            return None;
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope, r2) = crate::math::stats::linfit(&xs, &ys);
+        Some((slope.exp(), r2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(iter: u64, time: f64, loss: f64, err: Option<f64>) -> IterRow {
+        IterRow {
+            iter,
+            time,
+            loss,
+            eval_loss: None,
+            theta_err: err,
+            included: 4,
+            abandoned: 0,
+            alive: 4,
+            gamma: Some(4),
+            grad_norm: 1.0,
+        }
+    }
+
+    #[test]
+    fn time_to_loss() {
+        let mut rec = Recorder::new();
+        rec.push(row(0, 0.1, 10.0, None));
+        rec.push(row(1, 0.2, 5.0, None));
+        rec.push(row(2, 0.3, 1.0, None));
+        assert_eq!(rec.time_to_loss(5.0), Some(0.2));
+        assert_eq!(rec.iters_to_loss(0.5), None);
+        assert_eq!(rec.final_loss(), 1.0);
+    }
+
+    #[test]
+    fn qlinear_rate_recovers_geometric_decay() {
+        let mut rec = Recorder::new();
+        let q = 0.9;
+        for t in 0..50 {
+            rec.push(row(t, t as f64, 1.0, Some(q_pow(q, t))));
+        }
+        let (qhat, r2) = rec.qlinear_rate().unwrap();
+        assert!((qhat - q).abs() < 1e-6, "qhat={qhat}");
+        assert!(r2 > 0.999);
+    }
+
+    fn q_pow(q: f64, t: u64) -> f64 {
+        q.powi(t as i32)
+    }
+
+    #[test]
+    fn iter_time_summary() {
+        let mut rec = Recorder::new();
+        for t in 0..11 {
+            rec.push(row(t, t as f64 * 0.5, 1.0, None));
+        }
+        let s = rec.iter_time_summary().unwrap();
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,98 @@
+//! Adam (bias-corrected first/second moments).
+
+use super::Optimizer;
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    eta: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(eta: f64, beta1: f64, beta2: f64, eps: f64) -> Adam {
+        Adam {
+            eta,
+            beta1,
+            beta2,
+            eps,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn default_params(eta: f64) -> Adam {
+        Adam::new(eta, 0.9, 0.999, 1e-8)
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], _iter: u64) {
+        if self.m.len() != theta.len() {
+            self.m = vec![0.0; theta.len()];
+            self.v = vec![0.0; theta.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1).powi(self.t as i32);
+        let bc2 = 1.0 - (self.beta2).powi(self.t as i32);
+        let eta = self.eta as f32;
+        let eps = self.eps as f32;
+        for i in 0..theta.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1 as f32;
+            let vhat = self.v[i] / bc2 as f32;
+            theta[i] -= eta * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn reset(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_eta_sized() {
+        // With bias correction the first step is ≈ η·sign(g).
+        let mut a = Adam::default_params(0.1);
+        let mut theta = vec![0.0f32];
+        a.step(&mut theta, &[3.0], 0);
+        assert!((theta[0] + 0.1).abs() < 1e-4, "{}", theta[0]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut a = Adam::default_params(0.2);
+        let err = crate::optim::test_util::run_quadratic(&mut a, 400);
+        assert!(err < 1e-2, "err={err}");
+    }
+
+    #[test]
+    fn state_resizes_with_dim_change() {
+        let mut a = Adam::default_params(0.1);
+        let mut t1 = vec![0.0f32; 2];
+        a.step(&mut t1, &[1.0, 1.0], 0);
+        let mut t2 = vec![0.0f32; 3];
+        a.step(&mut t2, &[1.0, 1.0, 1.0], 1); // must not panic
+        assert_eq!(t2.len(), 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! Nonlinear conjugate gradient (Fletcher–Reeves with periodic restart).
+//!
+//! Same caveat as L-BFGS: a proper line search would add synchronization
+//! rounds, so the master takes fixed-η steps along conjugate directions and
+//! restarts every `restart` iterations (or on a non-descent direction),
+//! which is the standard stochastic compromise.
+
+use super::Optimizer;
+use crate::math::vec_ops;
+
+#[derive(Clone, Debug)]
+pub struct ConjugateGradient {
+    eta: f64,
+    restart: usize,
+    dir: Vec<f32>,
+    prev_gg: f64,
+    since_restart: usize,
+}
+
+impl ConjugateGradient {
+    pub fn new(eta: f64, restart: usize) -> ConjugateGradient {
+        ConjugateGradient {
+            eta,
+            restart: restart.max(1),
+            dir: Vec::new(),
+            prev_gg: 0.0,
+            since_restart: 0,
+        }
+    }
+}
+
+impl Optimizer for ConjugateGradient {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], _iter: u64) {
+        let gg = vec_ops::dot(grad, grad);
+        let fresh = self.dir.len() != theta.len()
+            || self.since_restart >= self.restart
+            || self.prev_gg <= 0.0;
+        if fresh {
+            self.dir = grad.iter().map(|g| -g).collect();
+            self.since_restart = 0;
+        } else {
+            // Fletcher–Reeves: β = g_t·g_t / g_{t-1}·g_{t-1}.
+            let beta = (gg / self.prev_gg) as f32;
+            for (d, &g) in self.dir.iter_mut().zip(grad.iter()) {
+                *d = -g + beta * *d;
+            }
+            // Restart on non-descent direction.
+            if vec_ops::dot(&self.dir, grad) >= 0.0 {
+                for (d, &g) in self.dir.iter_mut().zip(grad.iter()) {
+                    *d = -g;
+                }
+                self.since_restart = 0;
+            }
+        }
+        self.prev_gg = gg;
+        self.since_restart += 1;
+        vec_ops::axpy(self.eta as f32, &self.dir, theta);
+    }
+
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn reset(&mut self) {
+        self.dir.clear();
+        self.prev_gg = 0.0;
+        self.since_restart = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_steepest_descent() {
+        let mut o = ConjugateGradient::new(0.1, 10);
+        let mut theta = vec![0.0f32, 0.0];
+        o.step(&mut theta, &[1.0, -2.0], 0);
+        assert!((theta[0] + 0.1).abs() < 1e-6);
+        assert!((theta[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn directions_become_conjugate_ish() {
+        // On a quadratic the second direction must not be parallel to the
+        // first (β mixes in history).
+        let mut o = ConjugateGradient::new(0.3, 10);
+        let curv = [4.0f32, 1.0];
+        let mut x = vec![1.0f32, 1.0];
+        let g0: Vec<f32> = x.iter().zip(&curv).map(|(xi, c)| c * xi).collect();
+        o.step(&mut x, &g0, 0);
+        let d0 = o.dir.clone();
+        let g1: Vec<f32> = x.iter().zip(&curv).map(|(xi, c)| c * xi).collect();
+        o.step(&mut x, &g1, 1);
+        let d1 = o.dir.clone();
+        let cos = vec_ops::dot(&d0, &d1) / (vec_ops::norm2(&d0) * vec_ops::norm2(&d1));
+        assert!(cos.abs() < 0.999, "directions degenerate: cos={cos}");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut o = ConjugateGradient::new(0.3, 6);
+        let err = crate::optim::test_util::run_quadratic(&mut o, 300);
+        assert!(err < 1e-2, "err={err}");
+    }
+
+    #[test]
+    fn reset_behaves() {
+        let mut o = ConjugateGradient::new(0.1, 5);
+        let mut theta = vec![1.0f32];
+        o.step(&mut theta, &[1.0], 0);
+        o.reset();
+        assert!(o.dir.is_empty());
+    }
+}

@@ -1,0 +1,60 @@
+//! Plain (stochastic) gradient descent — Algorithm 2's update.
+
+use super::{EtaSchedule, Optimizer};
+use crate::math::vec_ops;
+
+/// `θ ← θ − η_t · ḡ`.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    eta: EtaSchedule,
+}
+
+impl Sgd {
+    pub fn new(eta: EtaSchedule) -> Sgd {
+        Sgd { eta }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], iter: u64) {
+        vec_ops::axpy(-(self.eta.at(iter) as f32), grad, theta);
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_matches_formula() {
+        let mut opt = Sgd::new(EtaSchedule::constant(0.1));
+        let mut theta = vec![1.0f32, 2.0];
+        opt.step(&mut theta, &[10.0, -10.0], 0);
+        assert_eq!(theta, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn decaying_eta_shrinks_steps() {
+        let mut opt = Sgd::new(EtaSchedule { eta0: 1.0, decay: 1.0 });
+        let mut a = vec![0.0f32];
+        opt.step(&mut a, &[1.0], 0); // step 1.0
+        let first = a[0];
+        let mut b = vec![0.0f32];
+        opt.step(&mut b, &[1.0], 9); // step 0.1
+        assert!((first + 1.0).abs() < 1e-6);
+        assert!((b[0] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Sgd::new(EtaSchedule::constant(0.5));
+        let err = crate::optim::test_util::run_quadratic(&mut opt, 200);
+        assert!(err < 1e-3, "err={err}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Master-side optimizers over aggregated gradients.
+//!
+//! The paper (§1) claims the hybrid barrier applies to "a list of algorithms
+//! including iterations such as Stochastic Gradient Descent, Conjugate
+//! Gradient Descent, L-BFGS and so on" — T4 validates exactly that by
+//! driving the same problem with each of these masters.  All operate on the
+//! flat parameter vector; the KRR default (plain SGD with the `η_t/γ`
+//! scaling of Algorithm 2) is [`Sgd`].
+
+pub mod adam;
+pub mod cg;
+pub mod gd;
+pub mod lbfgs;
+pub mod momentum;
+
+pub use adam::Adam;
+pub use cg::ConjugateGradient;
+pub use gd::Sgd;
+pub use lbfgs::Lbfgs;
+pub use momentum::Momentum;
+
+/// A first-order optimizer consuming one aggregated gradient per iteration.
+pub trait Optimizer {
+    /// Apply one update in place.
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], iter: u64);
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+    /// Reset internal state (used when a run restarts).
+    fn reset(&mut self);
+}
+
+/// Step-size schedule `η_t = η₀ / (1 + decay·t)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EtaSchedule {
+    pub eta0: f64,
+    pub decay: f64,
+}
+
+impl EtaSchedule {
+    pub fn constant(eta0: f64) -> EtaSchedule {
+        EtaSchedule { eta0, decay: 0.0 }
+    }
+
+    #[inline]
+    pub fn at(&self, iter: u64) -> f64 {
+        self.eta0 / (1.0 + self.decay * iter as f64)
+    }
+}
+
+/// Config-friendly optimizer selector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerKind {
+    Sgd { eta: EtaSchedule },
+    Momentum { eta: EtaSchedule, mu: f64, nesterov: bool },
+    Adam { eta: f64, beta1: f64, beta2: f64, eps: f64 },
+    Lbfgs { eta: f64, history: usize },
+    Cg { eta: f64, restart: usize },
+}
+
+impl OptimizerKind {
+    pub fn sgd(eta0: f64) -> OptimizerKind {
+        OptimizerKind::Sgd {
+            eta: EtaSchedule::constant(eta0),
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Optimizer + Send> {
+        match self {
+            OptimizerKind::Sgd { eta } => Box::new(Sgd::new(*eta)),
+            OptimizerKind::Momentum { eta, mu, nesterov } => {
+                Box::new(Momentum::new(*eta, *mu, *nesterov))
+            }
+            OptimizerKind::Adam { eta, beta1, beta2, eps } => {
+                Box::new(Adam::new(*eta, *beta1, *beta2, *eps))
+            }
+            OptimizerKind::Lbfgs { eta, history } => Box::new(Lbfgs::new(*eta, *history)),
+            OptimizerKind::Cg { eta, restart } => Box::new(ConjugateGradient::new(*eta, *restart)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd { .. } => "sgd",
+            OptimizerKind::Momentum { nesterov: false, .. } => "momentum",
+            OptimizerKind::Momentum { nesterov: true, .. } => "nesterov",
+            OptimizerKind::Adam { .. } => "adam",
+            OptimizerKind::Lbfgs { .. } => "lbfgs",
+            OptimizerKind::Cg { .. } => "cg",
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    //! Shared optimizer test harness: minimize a known quadratic.
+
+    use super::Optimizer;
+
+    /// Minimize f(x) = 0.5 Σ c_i (x_i − t_i)² from zero; returns final error.
+    pub fn run_quadratic(opt: &mut dyn Optimizer, iters: u64) -> f64 {
+        let targets = [1.0f32, -2.0, 0.5, 3.0, -0.25, 1.5];
+        let curv = [1.0f32, 0.5, 2.0, 0.8, 1.5, 1.0];
+        let mut x = vec![0.0f32; targets.len()];
+        let mut g = vec![0.0f32; targets.len()];
+        for it in 0..iters {
+            for i in 0..x.len() {
+                g[i] = curv[i] * (x[i] - targets[i]);
+            }
+            opt.step(&mut x, &g, it);
+        }
+        x.iter()
+            .zip(&targets)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_schedule_decays() {
+        let s = EtaSchedule { eta0: 1.0, decay: 0.1 };
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(10) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kinds_build_and_name() {
+        for kind in [
+            OptimizerKind::sgd(0.1),
+            OptimizerKind::Momentum { eta: EtaSchedule::constant(0.1), mu: 0.9, nesterov: false },
+            OptimizerKind::Momentum { eta: EtaSchedule::constant(0.1), mu: 0.9, nesterov: true },
+            OptimizerKind::Adam { eta: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            OptimizerKind::Lbfgs { eta: 0.5, history: 5 },
+            OptimizerKind::Cg { eta: 0.1, restart: 10 },
+        ] {
+            let opt = kind.build();
+            assert_eq!(opt.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn every_kind_minimizes_quadratic() {
+        let kinds = [
+            OptimizerKind::sgd(0.5),
+            OptimizerKind::Momentum { eta: EtaSchedule::constant(0.2), mu: 0.9, nesterov: false },
+            OptimizerKind::Momentum { eta: EtaSchedule::constant(0.2), mu: 0.9, nesterov: true },
+            OptimizerKind::Adam { eta: 0.2, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            OptimizerKind::Lbfgs { eta: 0.5, history: 7 },
+            OptimizerKind::Cg { eta: 0.3, restart: 6 },
+        ];
+        for kind in kinds {
+            let mut opt = kind.build();
+            let err = test_util::run_quadratic(opt.as_mut(), 300);
+            assert!(err < 1e-2, "{} err={err}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Heavy-ball and Nesterov momentum.
+
+use super::{EtaSchedule, Optimizer};
+
+/// `v ← μv + g;  θ ← θ − η(v)` (heavy ball) or the Nesterov look-ahead
+/// variant `θ ← θ − η(g + μv)`.
+#[derive(Clone, Debug)]
+pub struct Momentum {
+    eta: EtaSchedule,
+    mu: f64,
+    nesterov: bool,
+    vel: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(eta: EtaSchedule, mu: f64, nesterov: bool) -> Momentum {
+        Momentum {
+            eta,
+            mu,
+            nesterov,
+            vel: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], iter: u64) {
+        if self.vel.len() != theta.len() {
+            self.vel = vec![0.0; theta.len()];
+        }
+        let eta = self.eta.at(iter) as f32;
+        let mu = self.mu as f32;
+        for i in 0..theta.len() {
+            let v = mu * self.vel[i] + grad[i];
+            self.vel[i] = v;
+            let dir = if self.nesterov { grad[i] + mu * v } else { v };
+            theta[i] -= eta * dir;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.nesterov {
+            "nesterov"
+        } else {
+            "momentum"
+        }
+    }
+
+    fn reset(&mut self) {
+        self.vel.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_mu_equals_sgd() {
+        let mut m = Momentum::new(EtaSchedule::constant(0.1), 0.0, false);
+        let mut theta = vec![1.0f32];
+        m.step(&mut theta, &[1.0], 0);
+        assert!((theta[0] - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut m = Momentum::new(EtaSchedule::constant(0.1), 0.9, false);
+        let mut theta = vec![0.0f32];
+        m.step(&mut theta, &[1.0], 0); // v=1, θ=-0.1
+        m.step(&mut theta, &[1.0], 1); // v=1.9, θ=-0.29
+        assert!((theta[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_velocity() {
+        let mut m = Momentum::new(EtaSchedule::constant(0.1), 0.9, false);
+        let mut theta = vec![0.0f32];
+        m.step(&mut theta, &[1.0], 0);
+        m.reset();
+        let mut theta2 = vec![0.0f32];
+        m.step(&mut theta2, &[1.0], 0);
+        assert!((theta2[0] + 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn both_variants_converge() {
+        for nesterov in [false, true] {
+            let mut m = Momentum::new(EtaSchedule::constant(0.15), 0.9, nesterov);
+            let err = crate::optim::test_util::run_quadratic(&mut m, 300);
+            assert!(err < 1e-3, "nesterov={nesterov} err={err}");
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT engine: compile HLO text, execute with validation.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::runtime::manifest::ArtifactInfo;
+#[cfg(debug_assertions)]
+use crate::runtime::manifest::Dtype;
+use crate::{Error, Result};
+
+/// A PJRT client bound to one device (CPU here).  **Not `Send`** — build
+/// one per thread (see module docs on [`crate::runtime`]).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Clone for Engine {
+    fn clone(&self) -> Self {
+        // PjRtClient is an Rc handle; cloning shares the underlying client.
+        Engine {
+            client: self.client.clone(),
+        }
+    }
+}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Upload an f32 tensor to a device buffer (perf path: static inputs
+    /// like a worker's Φ shard upload once, skipping the per-call
+    /// host→device copy that `execute` on literals performs).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to a device buffer.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file into an [`Executable`].
+    pub fn compile_hlo_file(&self, path: &Path, info: ArtifactInfo) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::other("non-UTF-8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::debug!(
+            "compiled {} in {:.1}ms",
+            info.name,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        Ok(Executable { exe, info })
+    }
+
+    /// Compile HLO text from a string (used by tests).
+    pub fn compile_hlo_text(&self, text: &str, info: ArtifactInfo) -> Result<Executable> {
+        let dir = std::env::temp_dir().join("hybriditer_hlo");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}_{}.hlo.txt", info.name, std::process::id()));
+        std::fs::write(&path, text)?;
+        let out = self.compile_hlo_file(&path, info);
+        let _ = std::fs::remove_file(&path);
+        out
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    info: ArtifactInfo,
+}
+
+impl Executable {
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Execute with the given input literals (order = manifest order).
+    /// Accepts owned literals or references (`Borrow<Literal>`), so static
+    /// inputs like a worker's Φ shard upload once and are passed by ref.
+    /// Returns the flattened output tuple as individual literals.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(Error::Shape(format!(
+                "artifact '{}': {} inputs given, manifest wants {}",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len()
+            )));
+        }
+        #[cfg(debug_assertions)]
+        self.validate_inputs(inputs)?;
+
+        let result = self.exe.execute::<L>(inputs)?;
+        let tuple = result
+            .first()
+            .and_then(|bufs| bufs.first())
+            .ok_or_else(|| Error::other("PJRT returned no output buffers"))?
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: a single tuple of outputs.
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.info.outputs.len() {
+            return Err(Error::Shape(format!(
+                "artifact '{}': {} outputs returned, manifest says {}",
+                self.info.name,
+                outs.len(),
+                self.info.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Execute with device-resident input buffers (see [`Engine::buffer_f32`]).
+    /// Skips the host→device transfer `run` performs on every literal input.
+    pub fn run_b<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(Error::Shape(format!(
+                "artifact '{}': {} inputs given, manifest wants {}",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len()
+            )));
+        }
+        let result = self.exe.execute_b::<B>(inputs)?;
+        let tuple = result
+            .first()
+            .and_then(|bufs| bufs.first())
+            .ok_or_else(|| Error::other("PJRT returned no output buffers"))?
+            .to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.info.outputs.len() {
+            return Err(Error::Shape(format!(
+                "artifact '{}': {} outputs returned, manifest says {}",
+                self.info.name,
+                outs.len(),
+                self.info.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    #[cfg(debug_assertions)]
+    fn validate_inputs<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<()> {
+        for (lit, spec) in inputs.iter().map(|l| l.borrow()).zip(&self.info.inputs) {
+            let n = lit.element_count();
+            if n != spec.elements() {
+                return Err(Error::Shape(format!(
+                    "artifact '{}': input '{}' has {} elements, want {} ({:?})",
+                    self.info.name,
+                    spec.name,
+                    n,
+                    spec.elements(),
+                    spec.shape
+                )));
+            }
+            let ty = lit.ty()?;
+            let ok = matches!(
+                (spec.dtype, ty),
+                (Dtype::F32, xla::ElementType::F32)
+                    | (Dtype::I32, xla::ElementType::S32)
+                    | (Dtype::U32, xla::ElementType::U32)
+            );
+            if !ok {
+                return Err(Error::Shape(format!(
+                    "artifact '{}': input '{}' dtype mismatch (manifest {:?}, literal {:?})",
+                    self.info.name, spec.name, spec.dtype, ty
+                )));
+            }
+        }
+        Ok(())
+    }
+}

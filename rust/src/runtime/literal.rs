@@ -1,0 +1,98 @@
+//! Literal construction/extraction helpers for the PJRT boundary.
+
+use crate::runtime::manifest::{Dtype, TensorSpec};
+use crate::{Error, Result};
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        return Err(Error::Shape(format!(
+            "lit_f32: {} elements for shape {shape:?} (want {n})",
+            data.len()
+        )));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        return Err(Error::Shape(format!(
+            "lit_i32: {} elements for shape {shape:?} (want {n})",
+            data.len()
+        )));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Rank-0 f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Build a literal matching a manifest [`TensorSpec`] from raw f32 data
+/// (i32 specs are converted elementwise).
+pub fn lit_for_spec_f32(spec: &TensorSpec, data: &[f32]) -> Result<xla::Literal> {
+    match spec.dtype {
+        Dtype::F32 => lit_f32(data, &spec.shape),
+        other => Err(Error::Shape(format!(
+            "input '{}' wants {other:?}, got f32 data",
+            spec.name
+        ))),
+    }
+}
+
+/// Extract a flat f32 vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a single f32 scalar (rank-0 or single-element).
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error::Shape("empty literal where scalar expected".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_2d() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_f32(&[7.5], &[]).unwrap();
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3, 4];
+        let lit = lit_i32(&data, &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! `artifacts/manifest.json` parsing and shape metadata.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::json;
+use crate::config::Value;
+use crate::{Error, Result};
+
+/// Element dtype of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(tag: &str) -> Result<Dtype> {
+        match tag {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(Error::Manifest(format!("unknown dtype '{other}'"))),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Input name from the python signature (outputs have "").
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (KRR config dims, LM hyperparameters, ...).
+    pub meta: Value,
+}
+
+impl ArtifactInfo {
+    /// Look up an input position by name.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| {
+                Error::Manifest(format!("artifact '{}' has no input '{name}'", self.name))
+            })
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| {
+                Error::Manifest(format!("artifact '{}' missing meta '{key}'", self.name))
+            })
+    }
+}
+
+/// The whole parsed manifest.
+pub struct Manifest {
+    pub format_version: u64,
+    pub jax_version: String,
+    artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text).map_err(|e| Error::Manifest(format!("{}: {e}", path.display())))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let format_version = root.opt_u64("format_version", 0);
+        if format_version != 1 {
+            return Err(Error::Manifest(format!(
+                "unsupported manifest format_version {format_version}"
+            )));
+        }
+        let jax_version = root.opt_str("jax_version", "?").to_string();
+        let table = root
+            .get("artifacts")
+            .and_then(Value::as_table)
+            .ok_or_else(|| Error::Manifest("missing 'artifacts' table".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in table {
+            artifacts.insert(name.clone(), parse_entry(name, entry)?);
+        }
+        Ok(Manifest {
+            format_version,
+            jax_version,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &ArtifactInfo)> {
+        self.artifacts.iter()
+    }
+}
+
+fn parse_entry(name: &str, entry: &Value) -> Result<ArtifactInfo> {
+    let file = entry.req_str("file")?.to_string();
+    let inputs = parse_tensors(name, entry, "inputs")?;
+    let outputs = parse_tensors(name, entry, "outputs")?;
+    Ok(ArtifactInfo {
+        name: name.to_string(),
+        file,
+        inputs,
+        outputs,
+        meta: entry.get("meta").cloned().unwrap_or_else(Value::empty_table),
+    })
+}
+
+fn parse_tensors(name: &str, entry: &Value, key: &str) -> Result<Vec<TensorSpec>> {
+    let arr = entry
+        .get(key)
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::Manifest(format!("artifact '{name}' missing '{key}'")))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(Value::as_array)
+                .ok_or_else(|| Error::Manifest(format!("artifact '{name}': tensor missing shape")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        Error::Manifest(format!("artifact '{name}': bad shape element"))
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let dtype = Dtype::parse(t.opt_str("dtype", "f32"))?;
+            Ok(TensorSpec {
+                name: t.opt_str("name", "").to_string(),
+                shape,
+                dtype,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format_version": 1,
+      "jax_version": "0.8.2",
+      "artifacts": {
+        "krr_worker_grad_small": {
+          "file": "krr_worker_grad_small.hlo.txt",
+          "inputs": [
+            {"name": "theta", "shape": [32], "dtype": "f32"},
+            {"name": "phi", "shape": [256, 32], "dtype": "f32"},
+            {"name": "y", "shape": [256], "dtype": "f32"},
+            {"name": "lam", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [32], "dtype": "f32"}],
+          "meta": {"config": "small", "l": 32, "zeta": 256}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_entry() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("krr_worker_grad_small").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].shape, vec![256, 32]);
+        assert_eq!(a.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[3].elements(), 1);
+        assert_eq!(a.outputs[0].dtype, Dtype::F32);
+        assert_eq!(a.meta_usize("zeta").unwrap(), 256);
+        assert_eq!(a.input_index("y").unwrap(), 2);
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(DOC).unwrap();
+        let e = m.get("nope").unwrap_err();
+        assert!(format!("{e}").contains("krr_worker_grad_small"));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let doc = r#"{"format_version": 2, "artifacts": {}}"#;
+        assert!(Manifest::parse(doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let doc = DOC.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+}

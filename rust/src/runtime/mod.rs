@@ -1,0 +1,91 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them natively.
+//!
+//! This is the only module that touches the `xla` crate.  The interchange
+//! contract with `python/compile/aot.py`:
+//!
+//! * artifacts are HLO **text** (`*.hlo.txt`) — serialized protos from
+//!   jax ≥ 0.5 carry 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects, text re-parses cleanly;
+//! * every entry point was lowered with `return_tuple=True`, so execution
+//!   returns a single tuple literal that [`Executable::run`] decomposes;
+//! * `artifacts/manifest.json` records each artifact's input/output
+//!   shapes+dtypes, parsed by [`manifest`] and validated on load.
+//!
+//! **Thread model**: `xla::PjRtClient` is `Rc`-based (not `Send`), so each
+//! worker thread builds its own [`Engine`].  In virtual-timing mode a single
+//! engine on the driver thread serves all simulated workers.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// An artifact directory + its parsed manifest: the handle everything else
+/// uses to load executables by name.
+pub struct ArtifactSet {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Open `dir` (usually `artifacts/`) and parse its manifest.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(Error::Manifest(format!(
+                "{} not found — run `make artifacts` first",
+                manifest_path.display()
+            )));
+        }
+        let manifest = Manifest::load(&manifest_path)?;
+        Ok(ArtifactSet { dir, manifest })
+    }
+
+    /// Locate the repo's `artifacts/` directory: `$HYBRIDITER_ARTIFACTS`,
+    /// else `./artifacts`, else `../artifacts` (for tests running deeper).
+    pub fn discover() -> Result<ArtifactSet> {
+        if let Ok(dir) = std::env::var("HYBRIDITER_ARTIFACTS") {
+            return ArtifactSet::open(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return ArtifactSet::open(cand);
+            }
+        }
+        Err(Error::Manifest(
+            "artifacts/manifest.json not found (run `make artifacts` or set HYBRIDITER_ARTIFACTS)"
+                .into(),
+        ))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn info(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.manifest.get(name)
+    }
+
+    /// Full path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.info(name)?.file))
+    }
+
+    /// Compile an artifact on the given engine.
+    pub fn load(&self, engine: &Engine, name: &str) -> Result<Executable> {
+        let info = self.info(name)?.clone();
+        let path = self.dir.join(&info.file);
+        engine.compile_hlo_file(&path, info)
+    }
+}

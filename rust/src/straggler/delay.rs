@@ -1,0 +1,196 @@
+//! Per-iteration stochastic delay distributions.
+//!
+//! Parameters follow the straggler literature: lognormal bodies with
+//! occasional Pareto tails reproduce the MapReduce outlier measurements;
+//! `Bimodal` captures "mostly fine, sometimes 10× slow" nodes; `Trace`
+//! replays a recorded latency series (see [`super::trace`]).
+
+use crate::util::rng::Pcg64;
+
+/// Extra latency (seconds) added to a worker's compute time each iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelayModel {
+    /// No injected delay.
+    None,
+    /// Fixed extra delay.
+    Constant { secs: f64 },
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// `exp(N(mu, sigma))` seconds — the canonical straggler body.
+    LogNormal { mu: f64, sigma: f64 },
+    /// Pareto with minimum `scale` and tail index `alpha` (heavy tail).
+    Pareto { scale: f64, alpha: f64 },
+    /// With probability `p_slow`, a `slow` delay; otherwise `fast`.
+    Bimodal { p_slow: f64, fast: f64, slow: f64 },
+    /// Exponential with the given rate (mean = 1/rate).
+    Exponential { rate: f64 },
+    /// Replay recorded samples, cycling.
+    Trace { samples: std::sync::Arc<Vec<f64>>, cursor_seed: u64 },
+}
+
+impl DelayModel {
+    /// Sample one delay.  `Trace` uses the RNG only to de-phase workers.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            DelayModel::None => 0.0,
+            DelayModel::Constant { secs } => *secs,
+            DelayModel::Uniform { lo, hi } => rng.uniform(*lo, *hi),
+            DelayModel::LogNormal { mu, sigma } => rng.lognormal(*mu, *sigma),
+            DelayModel::Pareto { scale, alpha } => rng.pareto(*scale, *alpha),
+            DelayModel::Bimodal { p_slow, fast, slow } => {
+                if rng.next_f64() < *p_slow {
+                    *slow
+                } else {
+                    *fast
+                }
+            }
+            DelayModel::Exponential { rate } => rng.exponential(*rate),
+            DelayModel::Trace { samples, .. } => {
+                if samples.is_empty() {
+                    0.0
+                } else {
+                    samples[rng.below(samples.len() as u64) as usize]
+                }
+            }
+        }
+    }
+
+    /// Analytic (or sampled) mean of the distribution, for reporting.
+    pub fn mean(&self) -> f64 {
+        match self {
+            DelayModel::None => 0.0,
+            DelayModel::Constant { secs } => *secs,
+            DelayModel::Uniform { lo, hi } => 0.5 * (lo + hi),
+            DelayModel::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            DelayModel::Pareto { scale, alpha } => {
+                if *alpha > 1.0 {
+                    alpha * scale / (alpha - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            DelayModel::Bimodal { p_slow, fast, slow } => {
+                p_slow * slow + (1.0 - p_slow) * fast
+            }
+            DelayModel::Exponential { rate } => 1.0 / rate,
+            DelayModel::Trace { samples, .. } => {
+                if samples.is_empty() {
+                    0.0
+                } else {
+                    samples.iter().sum::<f64>() / samples.len() as f64
+                }
+            }
+        }
+    }
+
+    /// Parse from config strings (see `config::schema`).
+    pub fn from_kind(kind: &str, cfg: &crate::config::Value) -> crate::Result<DelayModel> {
+        use crate::Error;
+        Ok(match kind {
+            "none" => DelayModel::None,
+            "constant" => DelayModel::Constant {
+                secs: cfg.opt_f64("secs", 0.01),
+            },
+            "uniform" => DelayModel::Uniform {
+                lo: cfg.opt_f64("lo", 0.0),
+                hi: cfg.opt_f64("hi", 0.02),
+            },
+            "lognormal" => DelayModel::LogNormal {
+                mu: cfg.opt_f64("mu", -4.0),
+                sigma: cfg.opt_f64("sigma", 1.0),
+            },
+            "pareto" => DelayModel::Pareto {
+                scale: cfg.opt_f64("scale", 0.005),
+                alpha: cfg.opt_f64("alpha", 1.5),
+            },
+            "bimodal" => DelayModel::Bimodal {
+                p_slow: cfg.opt_f64("p_slow", 0.05),
+                fast: cfg.opt_f64("fast", 0.001),
+                slow: cfg.opt_f64("slow", 0.1),
+            },
+            "exponential" => DelayModel::Exponential {
+                rate: cfg.opt_f64("rate", 100.0),
+            },
+            other => {
+                return Err(Error::Config(format!("unknown delay model '{other}'")));
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::OnlineStats;
+
+    fn sampled_mean(m: &DelayModel, n: usize) -> f64 {
+        let mut rng = Pcg64::seeded(99);
+        let mut st = OnlineStats::new();
+        for _ in 0..n {
+            st.push(m.sample(&mut rng));
+        }
+        st.mean()
+    }
+
+    #[test]
+    fn sampled_means_match_analytic() {
+        let cases = vec![
+            DelayModel::Constant { secs: 0.02 },
+            DelayModel::Uniform { lo: 0.0, hi: 0.1 },
+            DelayModel::LogNormal { mu: -3.0, sigma: 0.5 },
+            DelayModel::Bimodal { p_slow: 0.1, fast: 0.001, slow: 0.05 },
+            DelayModel::Exponential { rate: 50.0 },
+        ];
+        for m in cases {
+            let got = sampled_mean(&m, 40_000);
+            let want = m.mean();
+            assert!(
+                (got - want).abs() / want.max(1e-9) < 0.08,
+                "{m:?}: sampled {got} vs analytic {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_mean_finite_iff_alpha_gt_1() {
+        assert!(DelayModel::Pareto { scale: 1.0, alpha: 0.9 }.mean().is_infinite());
+        let m = DelayModel::Pareto { scale: 0.01, alpha: 2.5 };
+        assert!((m.mean() - 0.01 * 2.5 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_nonnegative() {
+        let mut rng = Pcg64::seeded(5);
+        let models = [
+            DelayModel::LogNormal { mu: -2.0, sigma: 2.0 },
+            DelayModel::Pareto { scale: 0.001, alpha: 1.1 },
+            DelayModel::Exponential { rate: 10.0 },
+        ];
+        for m in &models {
+            for _ in 0..1000 {
+                assert!(m.sample(&mut rng) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_cycles_samples() {
+        let m = DelayModel::Trace {
+            samples: std::sync::Arc::new(vec![0.1, 0.2, 0.3]),
+            cursor_seed: 0,
+        };
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..50 {
+            let s = m.sample(&mut rng);
+            assert!([0.1, 0.2, 0.3].contains(&s));
+        }
+    }
+
+    #[test]
+    fn from_kind_parses() {
+        let cfg = crate::config::toml::parse("sigma = 2.0\nmu = -1.0").unwrap();
+        let m = DelayModel::from_kind("lognormal", &cfg).unwrap();
+        assert_eq!(m, DelayModel::LogNormal { mu: -1.0, sigma: 2.0 });
+        assert!(DelayModel::from_kind("nope", &cfg).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Worker failure injection: crashes, transient faults, and rejoin.
+//!
+//! The paper's fault-tolerance claim is that the hybrid barrier keeps
+//! iterating when nodes die (BSP stalls; with `γ ≤` alive workers the
+//! hybrid master never notices).  [`FailureState`] is a small per-worker
+//! state machine driven once per iteration.
+
+use crate::util::rng::Pcg64;
+
+/// Stochastic failure behaviour of one worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailureModel {
+    /// Probability per iteration of a permanent (or until-rejoin) crash.
+    pub crash_prob: f64,
+    /// Probability per iteration of dropping just that iteration's result
+    /// (message loss / timeout): the worker stays alive.
+    pub transient_prob: f64,
+    /// If `Some(k)`, a crashed worker restarts after `k` iterations
+    /// (simulating a supervisor respawning it).  `None` = crash is forever.
+    pub rejoin_after: Option<u64>,
+}
+
+impl FailureModel {
+    pub fn none() -> FailureModel {
+        FailureModel {
+            crash_prob: 0.0,
+            transient_prob: 0.0,
+            rejoin_after: None,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.crash_prob == 0.0 && self.transient_prob == 0.0
+    }
+}
+
+/// What happened to a worker this iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureEvent {
+    /// Worker computes and reports normally.
+    Healthy,
+    /// Worker's result is lost this iteration only.
+    TransientDrop,
+    /// Worker crashed this iteration (no result, stays down).
+    Crashed,
+    /// Worker is still down from an earlier crash.
+    Down,
+    /// Worker restarted this iteration (reports normally again).
+    Rejoined,
+}
+
+/// Per-worker failure state machine.
+#[derive(Clone, Debug)]
+pub struct FailureState {
+    model: FailureModel,
+    down_since: Option<u64>,
+}
+
+impl FailureState {
+    pub fn new(model: FailureModel) -> FailureState {
+        FailureState {
+            model,
+            down_since: None,
+        }
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down_since.is_some()
+    }
+
+    /// Advance one iteration; returns what the worker does.
+    pub fn step(&mut self, iter: u64, rng: &mut Pcg64) -> FailureEvent {
+        if let Some(since) = self.down_since {
+            if let Some(k) = self.model.rejoin_after {
+                if iter >= since + k {
+                    self.down_since = None;
+                    return FailureEvent::Rejoined;
+                }
+            }
+            return FailureEvent::Down;
+        }
+        if self.model.crash_prob > 0.0 && rng.next_f64() < self.model.crash_prob {
+            self.down_since = Some(iter);
+            return FailureEvent::Crashed;
+        }
+        if self.model.transient_prob > 0.0 && rng.next_f64() < self.model.transient_prob {
+            return FailureEvent::TransientDrop;
+        }
+        FailureEvent::Healthy
+    }
+
+    /// Force a crash at `iter` (used by the fault-tolerance example to kill
+    /// a specific worker at a specific time).
+    pub fn force_crash(&mut self, iter: u64) {
+        self.down_since = Some(iter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_failures_stays_healthy() {
+        let mut st = FailureState::new(FailureModel::none());
+        let mut rng = Pcg64::seeded(1);
+        for i in 0..1000 {
+            assert_eq!(st.step(i, &mut rng), FailureEvent::Healthy);
+        }
+    }
+
+    #[test]
+    fn crash_is_permanent_without_rejoin() {
+        let mut st = FailureState::new(FailureModel {
+            crash_prob: 1.0,
+            transient_prob: 0.0,
+            rejoin_after: None,
+        });
+        let mut rng = Pcg64::seeded(2);
+        assert_eq!(st.step(0, &mut rng), FailureEvent::Crashed);
+        for i in 1..100 {
+            assert_eq!(st.step(i, &mut rng), FailureEvent::Down);
+        }
+    }
+
+    #[test]
+    fn rejoin_after_k() {
+        let mut st = FailureState::new(FailureModel {
+            crash_prob: 0.0,
+            transient_prob: 0.0,
+            rejoin_after: Some(3),
+        });
+        let mut rng = Pcg64::seeded(3);
+        st.force_crash(10);
+        assert_eq!(st.step(11, &mut rng), FailureEvent::Down);
+        assert_eq!(st.step(12, &mut rng), FailureEvent::Down);
+        assert_eq!(st.step(13, &mut rng), FailureEvent::Rejoined);
+        assert_eq!(st.step(14, &mut rng), FailureEvent::Healthy);
+    }
+
+    #[test]
+    fn transient_rate_approximates_prob() {
+        let mut st = FailureState::new(FailureModel {
+            crash_prob: 0.0,
+            transient_prob: 0.3,
+            rejoin_after: None,
+        });
+        let mut rng = Pcg64::seeded(4);
+        let n = 20_000;
+        let drops = (0..n)
+            .filter(|&i| st.step(i, &mut rng) == FailureEvent::TransientDrop)
+            .count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+}

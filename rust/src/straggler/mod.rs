@@ -1,0 +1,72 @@
+//! Straggler & fault injection: the environment the paper's hybrid barrier
+//! is designed to survive.
+//!
+//! A physical 2014 Hadoop cluster exhibits heavy-tailed per-task latencies
+//! (slow disks, network retransmits, multi-tenant contention) and occasional
+//! node failures.  We model both explicitly so experiments can *sweep*
+//! severity instead of hoping one testbed exhibits it (DESIGN.md §3):
+//!
+//! * [`DelayModel`] — per-(worker, iteration) extra latency distributions;
+//! * [`FailureModel`] — crash / transient-failure / rejoin behaviour;
+//! * [`StragglerProfile`] — a worker's combined timing personality,
+//!   including chronic slow nodes (a constant multiplier on compute time).
+
+pub mod delay;
+pub mod failure;
+pub mod trace;
+
+pub use delay::DelayModel;
+pub use failure::{FailureEvent, FailureModel, FailureState};
+
+use crate::util::rng::Pcg64;
+
+/// A worker's complete timing personality.
+#[derive(Clone, Debug)]
+pub struct StragglerProfile {
+    /// Baseline compute time per iteration in (virtual) seconds.
+    pub base_compute: f64,
+    /// Chronic slowdown multiplier (1.0 = healthy node).
+    pub slow_factor: f64,
+    /// Stochastic extra delay added on top of compute.
+    pub delay: DelayModel,
+    /// Crash / transient-failure behaviour.
+    pub failure: FailureModel,
+}
+
+impl StragglerProfile {
+    pub fn healthy(base_compute: f64) -> Self {
+        StragglerProfile {
+            base_compute,
+            slow_factor: 1.0,
+            delay: DelayModel::None,
+            failure: FailureModel::none(),
+        }
+    }
+
+    /// Sample this worker's total latency for one iteration.
+    pub fn sample_latency(&self, rng: &mut Pcg64) -> f64 {
+        self.base_compute * self.slow_factor + self.delay.sample(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_profile_is_deterministic() {
+        let p = StragglerProfile::healthy(0.01);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10 {
+            assert_eq!(p.sample_latency(&mut rng), 0.01);
+        }
+    }
+
+    #[test]
+    fn slow_factor_scales_base() {
+        let mut p = StragglerProfile::healthy(0.01);
+        p.slow_factor = 5.0;
+        let mut rng = Pcg64::seeded(1);
+        assert!((p.sample_latency(&mut rng) - 0.05).abs() < 1e-12);
+    }
+}

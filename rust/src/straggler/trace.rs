@@ -1,0 +1,141 @@
+//! Latency-trace recording & replay.
+//!
+//! Real deployments tune the hybrid barrier against *measured* latency
+//! distributions.  [`TraceRecorder`] captures per-worker iteration latencies
+//! from any run; traces round-trip through a simple one-float-per-line text
+//! format and feed [`super::DelayModel::Trace`] for replay experiments.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::straggler::DelayModel;
+use crate::{Error, Result};
+
+/// Collects observed latencies (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    samples: Vec<f64>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+
+    pub fn record(&mut self, latency_secs: f64) {
+        self.samples.push(latency_secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Convert into a replayable delay model.
+    pub fn into_model(self) -> DelayModel {
+        DelayModel::Trace {
+            samples: Arc::new(self.samples),
+            cursor_seed: 0,
+        }
+    }
+
+    /// Write one sample per line.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for s in &self.samples {
+            writeln!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Load a trace file into a replayable delay model.
+pub fn load(path: &Path) -> Result<DelayModel> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut samples = Vec::new();
+    for (i, line) in f.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let v: f64 = t
+            .parse()
+            .map_err(|_| Error::Config(format!("{}:{}: bad float '{t}'", path.display(), i + 1)))?;
+        if v < 0.0 {
+            return Err(Error::Config(format!(
+                "{}:{}: negative latency {v}",
+                path.display(),
+                i + 1
+            )));
+        }
+        samples.push(v);
+    }
+    if samples.is_empty() {
+        return Err(Error::Config(format!("{}: empty trace", path.display())));
+    }
+    Ok(DelayModel::Trace {
+        samples: Arc::new(samples),
+        cursor_seed: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("hybriditer_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let mut rec = TraceRecorder::new();
+        for i in 0..10 {
+            rec.record(i as f64 * 0.001);
+        }
+        rec.save(&path).unwrap();
+        let model = load(&path).unwrap();
+        match model {
+            DelayModel::Trace { samples, .. } => {
+                assert_eq!(samples.len(), 10);
+                assert!((samples[3] - 0.003).abs() < 1e-12);
+            }
+            _ => panic!("wrong model"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("hybriditer_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trace");
+        std::fs::write(&path, "0.1\nnot_a_number\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "-0.5\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "# only comments\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn recorder_into_model() {
+        let mut rec = TraceRecorder::new();
+        rec.record(0.5);
+        let m = rec.into_model();
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        assert_eq!(m.sample(&mut rng), 0.5);
+    }
+}

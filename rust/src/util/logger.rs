@@ -1,0 +1,76 @@
+//! Minimal `log` backend (no `env_logger` in the vendor set).
+//!
+//! Levels come from `HYBRIDITER_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.  Output goes to stderr with elapsed-time stamps so
+//! coordinator traces line up with metric timestamps.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Call once from binaries/examples.
+pub fn init() {
+    init_with_level(default_level());
+}
+
+/// Install with an explicit level filter (idempotent).
+pub fn init_with_level(level: log::LevelFilter) {
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+        level,
+    });
+    // set_logger fails if already set (e.g. tests calling init twice) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+}
+
+fn default_level() -> log::LevelFilter {
+    match std::env::var("HYBRIDITER_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

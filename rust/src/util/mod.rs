@@ -1,0 +1,44 @@
+//! Small from-scratch substrates: RNG, logger, property-test helper.
+//!
+//! The offline vendor set has neither `rand` nor `proptest` nor a logger
+//! backend, so the pieces the rest of the crate needs are implemented here
+//! (DESIGN.md §3).
+
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+
+/// Format a `std::time::Duration` in adaptive human units.
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format seconds (f64) in adaptive human units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(0.0000025), "2.5us");
+    }
+}

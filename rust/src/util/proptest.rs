@@ -1,0 +1,94 @@
+//! Tiny property-testing helper (proptest is not in the vendor set).
+//!
+//! `check` runs a property over `n` seeded-random cases; on failure it
+//! reports the case index and the seed that reproduces it, so a failing
+//! property can be re-run deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the crate's rpath rustflags, so
+//! // anything linking the xla-backed lib can't resolve libstdc++ at doctest
+//! // runtime; the same property runs for real in this module's #[test]s.)
+//! use hybriditer::util::{proptest::check, rng::Pcg64};
+//! check("mean_of_two_in_between", 200, |rng: &mut Pcg64| {
+//!     let (a, b) = (rng.next_f64(), rng.next_f64());
+//!     let m = (a + b) / 2.0;
+//!     if m < a.min(b) || m > a.max(b) {
+//!         return Err(format!("mean {m} outside [{a}, {b}]"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Base seed; override with `HYBRIDITER_PROPTEST_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("HYBRIDITER_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_cafe)
+}
+
+/// Run `prop` over `n` cases. Each case gets an independent RNG stream.
+/// Panics (test failure) with seed info on the first failing case.
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..n {
+        let mut rng = Pcg64::new(seed, case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{n}: {msg}\n\
+                 reproduce with HYBRIDITER_PROPTEST_SEED={seed} (stream {case})"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property builds its case from a drawn size in
+/// `[lo, hi]` — convenient for shape sweeps.
+pub fn check_sized<F>(name: &str, n: usize, lo: usize, hi: usize, mut prop: F)
+where
+    F: FnMut(usize, &mut Pcg64) -> Result<(), String>,
+{
+    check(name, n, |rng| {
+        let size = lo + rng.below((hi - lo + 1) as u64) as usize;
+        prop(size, rng)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs_nonneg", 100, |rng| {
+            let v = rng.normal();
+            if v.abs() < 0.0 {
+                Err("negative abs".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sized_draws_in_range() {
+        check_sized("size_in_range", 100, 3, 17, |size, _| {
+            if (3..=17).contains(&size) {
+                Ok(())
+            } else {
+                Err(format!("size {size} out of range"))
+            }
+        });
+    }
+}

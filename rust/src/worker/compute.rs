@@ -1,0 +1,272 @@
+//! Worker-side compute implementations: native mirror and the PJRT path.
+//!
+//! [`XlaKrrPool`] (virtual mode, one engine on the driver thread) and
+//! [`XlaKrrFactory`] (real mode, one engine per worker thread) both execute
+//! the `krr_worker_grad_loss_<config>` artifact — the L1 pallas kernel
+//! lowered through the L2 jax entry point — so the *entire* gradient math
+//! on the hot path runs inside XLA, exactly as Algorithm 3 prescribes.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::shard::Shard;
+use crate::data::{ComputePool, GradResult};
+use crate::runtime::{literal, ArtifactSet, Engine, Executable};
+use crate::worker::{ComputeFactory, WorkerCompute};
+use crate::{Error, Result};
+
+/// Per-shard *device buffers* a worker uploads once (Φ and y never change).
+/// Keeping them device-resident skips the per-call host→device copy the
+/// literal path pays — 512 KiB/call for the default shard (§Perf L3).
+struct ShardBuffers {
+    phi: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    /// Device-resident λ scalar (also constant per run).
+    lam: xla::PjRtBuffer,
+    rows: usize,
+}
+
+fn shard_buffers(engine: &Engine, shard: &Shard, lam: f32) -> Result<ShardBuffers> {
+    Ok(ShardBuffers {
+        phi: engine.buffer_f32(&shard.phi, &[shard.rows, shard.l])?,
+        y: engine.buffer_f32(&shard.y, &[shard.rows])?,
+        lam: engine.buffer_f32(&[lam], &[])?,
+        rows: shard.rows,
+    })
+}
+
+/// Run one gradient+loss step through the artifact (device-buffer path).
+fn xla_grad(
+    engine: &Engine,
+    exe: &Executable,
+    bufs: &ShardBuffers,
+    theta: &[f32],
+) -> Result<GradResult> {
+    // θ changes every iteration → uploaded per call; Φ/y/λ stay resident.
+    let theta_buf = engine.buffer_f32(theta, &[theta.len()])?;
+    let outs = exe.run_b(&[&theta_buf, &bufs.phi, &bufs.y, &bufs.lam])?;
+    let grad = literal::to_vec_f32(&outs[0])?;
+    let loss_sum = literal::to_scalar_f32(&outs[1])? as f64;
+    Ok(GradResult {
+        grad,
+        loss_sum: Some(loss_sum),
+        examples: bufs.rows,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Virtual-mode pool: single engine, all shards resident
+// ---------------------------------------------------------------------
+
+/// XLA-backed [`ComputePool`] for the virtual simulator.
+pub struct XlaKrrPool {
+    engine: Engine,
+    exe: Executable,
+    shards: Vec<ShardBuffers>,
+    dim: usize,
+}
+
+impl XlaKrrPool {
+    /// Load `krr_worker_grad_loss_<config>` and upload every shard.
+    pub fn new(
+        artifacts: &ArtifactSet,
+        engine: &Engine,
+        config: &str,
+        shards: &[Shard],
+        lam: f32,
+    ) -> Result<XlaKrrPool> {
+        let name = format!("krr_worker_grad_loss_{config}");
+        let exe = artifacts.load(engine, &name)?;
+        let info = exe.info();
+        let l = info.meta_usize("l")?;
+        let zeta = info.meta_usize("zeta")?;
+        for s in shards {
+            if s.l != l || s.rows != zeta {
+                return Err(Error::Shape(format!(
+                    "shard is {}x{}, artifact '{name}' wants {zeta}x{l}",
+                    s.rows, s.l
+                )));
+            }
+        }
+        let bufs = shards
+            .iter()
+            .map(|s| shard_buffers(engine, s, lam))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(XlaKrrPool {
+            engine: engine.clone(),
+            exe,
+            shards: bufs,
+            dim: l,
+        })
+    }
+}
+
+impl ComputePool for XlaKrrPool {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_examples(&self, w: usize) -> usize {
+        self.shards[w].rows
+    }
+
+    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        xla_grad(&self.engine, &self.exe, &self.shards[w], theta)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real-mode factories (one engine per worker thread)
+// ---------------------------------------------------------------------
+
+/// Pure-rust factory (no PJRT) — fast-path for tests/benches of the
+/// threaded runtime itself.
+pub struct NativeKrrFactory {
+    shards: Arc<Vec<Shard>>,
+    lam: f32,
+}
+
+impl NativeKrrFactory {
+    pub fn new(shards: Vec<Shard>, lam: f32) -> NativeKrrFactory {
+        NativeKrrFactory {
+            shards: Arc::new(shards),
+            lam,
+        }
+    }
+
+    pub fn for_problem(problem: &crate::data::KrrProblem) -> NativeKrrFactory {
+        NativeKrrFactory::new(problem.shards.clone(), problem.spec.lambda as f32)
+    }
+}
+
+struct NativeWorker {
+    pool: crate::data::native::NativeKrrPool,
+}
+
+impl WorkerCompute for NativeWorker {
+    fn dim(&self) -> usize {
+        crate::data::ComputePool::dim(&self.pool)
+    }
+
+    fn examples(&self) -> usize {
+        self.pool.shard_examples(0)
+    }
+
+    fn grad(&mut self, theta: &[f32], iter: u64) -> Result<GradResult> {
+        self.pool.grad(0, theta, iter)
+    }
+}
+
+impl ComputeFactory for NativeKrrFactory {
+    fn dim(&self) -> usize {
+        self.shards.first().map(|s| s.l).unwrap_or(0)
+    }
+
+    fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_examples(&self, w: usize) -> usize {
+        self.shards[w].rows
+    }
+
+    fn build(&self, w: usize) -> Result<Box<dyn WorkerCompute>> {
+        Ok(Box::new(NativeWorker {
+            pool: crate::data::native::NativeKrrPool::new(
+                vec![self.shards[w].clone()],
+                self.lam,
+            ),
+        }))
+    }
+}
+
+/// PJRT factory: each worker thread compiles its own copy of the artifact.
+pub struct XlaKrrFactory {
+    artifact_dir: PathBuf,
+    config: String,
+    shards: Arc<Vec<Shard>>,
+    lam: f32,
+    dim: usize,
+}
+
+impl XlaKrrFactory {
+    pub fn new(
+        artifacts: &ArtifactSet,
+        config: &str,
+        shards: Vec<Shard>,
+        lam: f32,
+    ) -> Result<XlaKrrFactory> {
+        // Validate shapes against the manifest up front (fail fast on the
+        // driver thread, not inside M worker threads).
+        let info = artifacts.info(&format!("krr_worker_grad_loss_{config}"))?;
+        let l = info.meta_usize("l")?;
+        let zeta = info.meta_usize("zeta")?;
+        for s in &shards {
+            if s.l != l || s.rows != zeta {
+                return Err(Error::Shape(format!(
+                    "shard is {}x{}, artifact wants {zeta}x{l}",
+                    s.rows, s.l
+                )));
+            }
+        }
+        Ok(XlaKrrFactory {
+            artifact_dir: artifacts.dir().to_path_buf(),
+            config: config.to_string(),
+            shards: Arc::new(shards),
+            lam,
+            dim: l,
+        })
+    }
+}
+
+struct XlaWorker {
+    engine: Engine,
+    exe: Executable,
+    bufs: ShardBuffers,
+    dim: usize,
+}
+
+impl WorkerCompute for XlaWorker {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn examples(&self) -> usize {
+        self.bufs.rows
+    }
+
+    fn grad(&mut self, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        xla_grad(&self.engine, &self.exe, &self.bufs, theta)
+    }
+}
+
+impl ComputeFactory for XlaKrrFactory {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_examples(&self, w: usize) -> usize {
+        self.shards[w].rows
+    }
+
+    fn build(&self, w: usize) -> Result<Box<dyn WorkerCompute>> {
+        let artifacts = ArtifactSet::open(&self.artifact_dir)?;
+        let engine = Engine::cpu()?;
+        let exe = artifacts.load(&engine, &format!("krr_worker_grad_loss_{}", self.config))?;
+        let bufs = shard_buffers(&engine, &self.shards[w], self.lam)?;
+        Ok(Box::new(XlaWorker {
+            engine,
+            exe,
+            bufs,
+            dim: self.dim,
+        }))
+    }
+}

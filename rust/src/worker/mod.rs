@@ -1,0 +1,445 @@
+//! Threaded "real" runtime: slave threads with actual sleeps, a master
+//! event loop closing the partial barrier on wall-clock arrivals.
+//!
+//! This is the production-shaped path: each worker thread owns its own PJRT
+//! engine (the `xla` client is not `Send`), receives θ broadcasts over a
+//! channel, computes its shard gradient through the AOT executable, sleeps
+//! its injected straggler delay, and reports back.  The master measures
+//! *wall-clock* — the examples use this to demonstrate the paper's actual
+//! time savings, while benches use the virtual simulator.
+
+pub mod compute;
+pub mod slave;
+
+pub use compute::{NativeKrrFactory, XlaKrrFactory};
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::{ClusterSpec, MasterMsg, Membership, WorkerMsg};
+use crate::coordinator::aggregator::{aggregate, Contribution};
+use crate::coordinator::barrier::{Admission, PartialBarrier};
+use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
+use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
+use crate::data::GradResult;
+use crate::math::vec_ops;
+use crate::metrics::{IterRow, Recorder};
+use crate::sim::EvalHooks;
+use crate::{Error, Result};
+
+/// Worker-side gradient computation (built inside the worker thread).
+pub trait WorkerCompute {
+    fn dim(&self) -> usize;
+    fn examples(&self) -> usize;
+    fn grad(&mut self, theta: &[f32], iter: u64) -> Result<GradResult>;
+}
+
+/// Builds per-worker [`WorkerCompute`] instances.  `Sync` because the
+/// factory is shared across spawning threads; the built compute is not.
+pub trait ComputeFactory: Sync {
+    fn dim(&self) -> usize;
+    fn workers(&self) -> usize;
+    fn shard_examples(&self, w: usize) -> usize;
+    /// Called *inside* worker `w`'s thread (PJRT clients are per-thread).
+    fn build(&self, w: usize) -> Result<Box<dyn WorkerCompute>>;
+}
+
+/// Master receive timeout before declaring a stall (real mode only).
+const STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Run an experiment on real threads, measuring wall-clock.
+pub fn run_real(
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    factory: &dyn ComputeFactory,
+    hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    let m = factory.workers();
+    if m != cluster.workers {
+        return Err(Error::Cluster(format!(
+            "factory has {m} workers, cluster spec says {}",
+            cluster.workers
+        )));
+    }
+    if cfg.mode.is_async() {
+        return run_real_async(cluster, cfg, factory, hooks);
+    }
+    run_real_sync(cluster, cfg, factory, hooks)
+}
+
+fn run_real_sync(
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    factory: &dyn ComputeFactory,
+    hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    let driver_start = Instant::now();
+    let m = factory.workers();
+    let dim = factory.dim();
+    let n_total: usize = (0..m).map(|w| factory.shard_examples(w)).sum();
+    let zeta = factory.shard_examples(0);
+    let gamma = cfg.mode.initial_gamma(n_total, zeta, m)?;
+
+    let (res_tx, res_rx) = mpsc::channel::<WorkerMsg>();
+    let mut work_txs: Vec<mpsc::Sender<MasterMsg>> = Vec::with_capacity(m);
+
+    let mut theta = cfg.init_theta.clone().unwrap_or_else(|| vec![0.0f32; dim]);
+    let mut agg = vec![0.0f32; dim];
+    let mut opt = cfg.optimizer.build();
+    let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
+    let mut rec = Recorder::new();
+    let mut membership = Membership::new(m);
+    let mut status = RunStatus::Completed;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // --- spawn slaves ------------------------------------------------
+        let profiles = cluster.profiles();
+        for w in 0..m {
+            let (tx, rx) = mpsc::channel::<MasterMsg>();
+            work_txs.push(tx);
+            let res_tx = res_tx.clone();
+            let profile = profiles[w].clone();
+            let seed = cluster.seed;
+            scope.spawn(move || {
+                slave::worker_main(w, seed, profile, factory, rx, res_tx);
+            });
+        }
+        drop(res_tx);
+
+        // --- master loop ---------------------------------------------
+        'iters: for iter in 0..cfg.stop.max_iters {
+            let theta_arc = Arc::new(theta.clone());
+            let mut broadcast = 0usize;
+            for w in 0..m {
+                if membership.is_alive(w) {
+                    if work_txs[w]
+                        .send(MasterMsg::Work {
+                            iter,
+                            theta: Arc::clone(&theta_arc),
+                        })
+                        .is_ok()
+                    {
+                        broadcast += 1;
+                    } else {
+                        membership.mark_down(w);
+                    }
+                }
+            }
+            if broadcast == 0 {
+                status = RunStatus::ClusterDead { iter };
+                break;
+            }
+
+            let g_target = match (&cfg.mode, gamma) {
+                (SyncMode::Bsp, _) => membership.alive(),
+                (_, Some(g)) => g.min(membership.alive()),
+                (mode, None) => {
+                    return Err(Error::Config(format!(
+                        "mode {} unsupported in real sync driver",
+                        mode.name()
+                    )))
+                }
+            };
+            let mut barrier = PartialBarrier::new(iter, m, g_target.max(1));
+            let mut grads: Vec<GradResult> = Vec::with_capacity(g_target);
+
+            // Collect until the barrier closes.
+            while !barrier.is_closed() {
+                let msg = match res_rx.recv_timeout(STALL_TIMEOUT) {
+                    Ok(msg) => msg,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        status = RunStatus::Stalled { iter };
+                        break 'iters;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        status = RunStatus::ClusterDead { iter };
+                        break 'iters;
+                    }
+                };
+                match msg {
+                    WorkerMsg::Grad {
+                        worker,
+                        iter: msg_iter,
+                        grad,
+                        loss_sum,
+                        examples,
+                        ..
+                    } => match barrier.offer(worker, msg_iter) {
+                        Admission::Included | Admission::IncludedAndClosed => {
+                            membership.record_contribution(worker);
+                            grads.push(GradResult {
+                                grad,
+                                loss_sum,
+                                examples,
+                            });
+                        }
+                        Admission::Abandoned | Admission::Stale => {
+                            membership.record_abandoned(worker);
+                        }
+                    },
+                    WorkerMsg::SimulatedCrash { worker, .. } => {
+                        membership.mark_down(worker);
+                        match (&cfg.mode, cfg.bsp_recovery) {
+                            (SyncMode::Bsp, BspRecovery::Stall) => {
+                                status = RunStatus::Stalled { iter };
+                                break 'iters;
+                            }
+                            _ => {
+                                if membership.alive() == 0 {
+                                    status = RunStatus::ClusterDead { iter };
+                                    break 'iters;
+                                }
+                                // Close on fewer arrivals (BSP-retry in real
+                                // mode degrades to alive-only membership).
+                                let new_target = match (&cfg.mode, gamma) {
+                                    (SyncMode::Bsp, _) => membership.alive(),
+                                    (_, Some(g)) => g.min(membership.alive()),
+                                    _ => unreachable!(),
+                                };
+                                barrier.shrink_gamma(new_target.max(1));
+                            }
+                        }
+                    }
+                    WorkerMsg::Fatal { worker, error } => {
+                        return Err(Error::Cluster(format!("worker {worker} died: {error}")));
+                    }
+                }
+            }
+            if grads.is_empty() {
+                continue;
+            }
+
+            // Drain any already-queued stragglers without blocking.
+            while let Ok(msg) = res_rx.try_recv() {
+                match msg {
+                    WorkerMsg::Grad { worker, .. } => membership.record_abandoned(worker),
+                    WorkerMsg::SimulatedCrash { worker, .. } => membership.mark_down(worker),
+                    WorkerMsg::Fatal { worker, error } => {
+                        return Err(Error::Cluster(format!("worker {worker} died: {error}")));
+                    }
+                }
+            }
+
+            let contribs: Vec<Contribution<'_>> = grads
+                .iter()
+                .map(|g| Contribution {
+                    grad: &g.grad,
+                    examples: g.examples,
+                    staleness: 0,
+                })
+                .collect();
+            aggregate(cfg.aggregator, &contribs, &mut agg);
+            let grad_norm = vec_ops::norm2(&agg);
+            let loss_sum: f64 = grads.iter().filter_map(|g| g.loss_sum).sum();
+            let loss_examples: usize = grads
+                .iter()
+                .filter(|g| g.loss_sum.is_some())
+                .map(|g| g.examples)
+                .sum();
+            let loss = cfg.loss_form.assemble(loss_sum, loss_examples, &theta);
+
+            opt.step(&mut theta, &agg, iter);
+            let now = driver_start.elapsed().as_secs_f64();
+
+            let do_eval = cfg.eval_every > 0 && iter % cfg.eval_every == 0;
+            let stop = tracker.observe(iter, loss, grad_norm);
+            if (cfg.record_every > 0 && iter % cfg.record_every == 0)
+                || do_eval
+                || stop.is_some()
+            {
+                let (eval_loss, theta_err) = if do_eval || stop.is_some() {
+                    (hooks.hook_eval_loss(&theta), hooks.hook_theta_err(&theta))
+                } else {
+                    (None, None)
+                };
+                rec.push(IterRow {
+                    iter,
+                    time: now,
+                    loss,
+                    eval_loss,
+                    theta_err,
+                    included: grads.len(),
+                    abandoned: 0,
+                    alive: membership.alive(),
+                    gamma,
+                    grad_norm,
+                });
+            }
+            if let Some(s) = stop {
+                status = s;
+                break;
+            }
+        }
+
+        // --- shutdown --------------------------------------------------
+        for tx in &work_txs {
+            let _ = tx.send(MasterMsg::Shutdown);
+        }
+        Ok(())
+    })?;
+
+    Ok(RunReport {
+        recorder: rec,
+        theta,
+        status,
+        gamma,
+        mode_name: cfg.mode.name(),
+        total_contributions: membership.total_contributed(),
+        total_abandoned: membership.total_abandoned(),
+        crashes: membership.crashes(),
+        mean_staleness: None,
+        driver_secs: driver_start.elapsed().as_secs_f64(),
+    })
+}
+
+fn run_real_async(
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    factory: &dyn ComputeFactory,
+    hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    let driver_start = Instant::now();
+    let m = factory.workers();
+    let dim = factory.dim();
+    let damping = match cfg.mode {
+        SyncMode::Async { damping } => damping,
+        _ => unreachable!(),
+    };
+
+    let (res_tx, res_rx) = mpsc::channel::<WorkerMsg>();
+    let mut work_txs: Vec<mpsc::Sender<MasterMsg>> = Vec::with_capacity(m);
+    let mut theta = cfg.init_theta.clone().unwrap_or_else(|| vec![0.0f32; dim]);
+    let mut opt = cfg.optimizer.build();
+    let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
+    let mut rec = Recorder::new();
+    let mut membership = Membership::new(m);
+    let mut status = RunStatus::Completed;
+    let mut version = 0u64;
+    let mut version_given = vec![0u64; m];
+    let mut staleness_sum = 0.0;
+    let mut updates = 0u64;
+    let mut scaled = vec![0.0f32; dim];
+    let mut loss_ema: Option<f64> = None;
+
+    std::thread::scope(|scope| -> Result<()> {
+        let profiles = cluster.profiles();
+        for w in 0..m {
+            let (tx, rx) = mpsc::channel::<MasterMsg>();
+            // Kick off the first round immediately.
+            tx.send(MasterMsg::Work {
+                iter: 0,
+                theta: Arc::new(theta.clone()),
+            })
+            .expect("fresh channel");
+            work_txs.push(tx);
+            let res_tx = res_tx.clone();
+            let profile = profiles[w].clone();
+            let seed = cluster.seed;
+            scope.spawn(move || {
+                slave::worker_main(w, seed, profile, factory, rx, res_tx);
+            });
+        }
+        drop(res_tx);
+
+        while updates < cfg.stop.max_iters {
+            let msg = match res_rx.recv_timeout(STALL_TIMEOUT) {
+                Ok(msg) => msg,
+                Err(_) => {
+                    status = RunStatus::Stalled { iter: updates };
+                    break;
+                }
+            };
+            match msg {
+                WorkerMsg::Grad {
+                    worker,
+                    grad,
+                    loss_sum,
+                    examples,
+                    ..
+                } => {
+                    let staleness = version - version_given[worker];
+                    staleness_sum += staleness as f64;
+                    membership.record_contribution(worker);
+                    let weight = if damping > 0.0 {
+                        (1.0 / (1.0 + staleness as f64)).powf(damping) as f32
+                    } else {
+                        1.0
+                    };
+                    scaled.copy_from_slice(&grad);
+                    if weight != 1.0 {
+                        vec_ops::scale(&mut scaled, weight);
+                    }
+                    opt.step(&mut theta, &scaled, updates);
+                    version += 1;
+                    updates += 1;
+                    version_given[worker] = version;
+                    let _ = work_txs[worker].send(MasterMsg::Work {
+                        iter: updates,
+                        theta: Arc::new(theta.clone()),
+                    });
+
+                    if let Some(ls) = loss_sum {
+                        let shard_loss = cfg.loss_form.assemble(ls, examples, &theta);
+                        loss_ema = Some(match loss_ema {
+                            None => shard_loss,
+                            Some(p) => 0.9 * p + 0.1 * shard_loss,
+                        });
+                    }
+                    let loss = loss_ema.unwrap_or(f64::NAN);
+                    let grad_norm = vec_ops::norm2(&scaled);
+                    let stop = tracker.observe(updates.saturating_sub(1), loss, grad_norm);
+                    if updates % (cfg.record_every.max(1) * m as u64) == 0 || stop.is_some() {
+                        rec.push(IterRow {
+                            iter: updates,
+                            time: driver_start.elapsed().as_secs_f64(),
+                            loss,
+                            eval_loss: hooks.hook_eval_loss(&theta),
+                            theta_err: hooks.hook_theta_err(&theta),
+                            included: 1,
+                            abandoned: 0,
+                            alive: membership.alive(),
+                            gamma: None,
+                            grad_norm,
+                        });
+                    }
+                    if let Some(s) = stop {
+                        status = s;
+                        break;
+                    }
+                }
+                WorkerMsg::SimulatedCrash { worker, .. } => {
+                    membership.mark_down(worker);
+                    if membership.alive() == 0 {
+                        status = RunStatus::ClusterDead { iter: updates };
+                        break;
+                    }
+                }
+                WorkerMsg::Fatal { worker, error } => {
+                    return Err(Error::Cluster(format!("worker {worker} died: {error}")));
+                }
+            }
+        }
+        for tx in &work_txs {
+            let _ = tx.send(MasterMsg::Shutdown);
+        }
+        Ok(())
+    })?;
+
+    Ok(RunReport {
+        recorder: rec,
+        theta,
+        status,
+        gamma: None,
+        mode_name: "async",
+        total_contributions: membership.total_contributed(),
+        total_abandoned: membership.total_abandoned(),
+        crashes: membership.crashes(),
+        mean_staleness: if updates > 0 {
+            Some(staleness_sum / updates as f64)
+        } else {
+            None
+        },
+        driver_secs: driver_start.elapsed().as_secs_f64(),
+    })
+}

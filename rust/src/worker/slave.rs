@@ -1,0 +1,113 @@
+//! Slave thread body (Algorithm 3 + straggler/fault injection).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{MasterMsg, WorkerMsg};
+use crate::straggler::{FailureEvent, FailureState, StragglerProfile};
+use crate::util::rng::Pcg64;
+use crate::worker::ComputeFactory;
+
+/// Worker thread entry point: build compute locally (PJRT engines are
+/// per-thread), then serve Work messages until Shutdown / simulated crash.
+pub fn worker_main(
+    w: usize,
+    cluster_seed: u64,
+    profile: StragglerProfile,
+    factory: &dyn ComputeFactory,
+    rx: mpsc::Receiver<MasterMsg>,
+    tx: mpsc::Sender<WorkerMsg>,
+) {
+    let mut compute = match factory.build(w) {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = tx.send(WorkerMsg::Fatal {
+                worker: w,
+                error: format!("compute init failed: {e}"),
+            });
+            return;
+        }
+    };
+    let mut delay_rng = Pcg64::new(cluster_seed ^ 0xBEEF, w as u64);
+    let mut fail_rng = Pcg64::new(cluster_seed ^ 0xFA11, w as u64);
+    let mut fstate = FailureState::new(profile.failure.clone());
+
+    while let Ok(msg) = rx.recv() {
+        let (mut iter, mut theta) = match msg {
+            MasterMsg::Shutdown => break,
+            MasterMsg::Work { iter, theta } => (iter, theta),
+        };
+        // A straggling slave may find newer broadcasts already queued; jump
+        // to the freshest θ (Algorithm 3 computes on whatever θ_t it holds —
+        // results for superseded iterations would be abandoned anyway).
+        let mut shutdown = false;
+        while let Ok(next) = rx.try_recv() {
+            match next {
+                MasterMsg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+                MasterMsg::Work { iter: i2, theta: t2 } => {
+                    iter = i2;
+                    theta = t2;
+                }
+            }
+        }
+        if shutdown {
+            break;
+        }
+
+        match fstate.step(iter, &mut fail_rng) {
+            FailureEvent::Crashed => {
+                let _ = tx.send(WorkerMsg::SimulatedCrash { worker: w, iter });
+                // A crashed worker stops responding (keep draining so the
+                // master's sends don't error, but do no work).
+                for m in rx.iter() {
+                    if matches!(m, MasterMsg::Shutdown) {
+                        break;
+                    }
+                }
+                return;
+            }
+            FailureEvent::TransientDrop => continue, // result lost
+            FailureEvent::Down | FailureEvent::Rejoined | FailureEvent::Healthy => {}
+        }
+
+        // Injected straggle: chronic slow factor applies to the base compute
+        // budget, stochastic delay on top (see DESIGN.md §3).
+        let extra = profile.base_compute * (profile.slow_factor - 1.0).max(0.0)
+            + profile.delay.sample(&mut delay_rng);
+
+        let t0 = Instant::now();
+        let result = compute.grad(&theta, iter);
+        let compute_secs = t0.elapsed().as_secs_f64();
+        if extra > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(extra));
+        }
+
+        match result {
+            Ok(res) => {
+                if tx
+                    .send(WorkerMsg::Grad {
+                        worker: w,
+                        iter,
+                        grad: res.grad,
+                        loss_sum: res.loss_sum,
+                        examples: res.examples,
+                        compute_secs,
+                    })
+                    .is_err()
+                {
+                    break; // master gone
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(WorkerMsg::Fatal {
+                    worker: w,
+                    error: format!("{e}"),
+                });
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Threaded ("real" timing) runtime integration: worker threads, channels,
+//! wall-clock barriers, fault injection.  Native backend keeps these fast;
+//! the XLA-threaded path is covered separately (spawns M PJRT clients).
+
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, RunStatus, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::NoEval;
+use hybriditer::straggler::{DelayModel, FailureModel};
+use hybriditer::worker::NativeKrrFactory;
+
+fn problem(machines: usize) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "test".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 5,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn cfg(p: &KrrProblem) -> RunConfig {
+    RunConfig {
+        optimizer: OptimizerKind::sgd(1.0),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn real_bsp_trains() {
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0, // no injected sleeps: fast test
+        ..ClusterSpec::default()
+    };
+    let coord = Coordinator::new(cluster, cfg(&p).with_mode(SyncMode::Bsp).with_iters(150)).unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(p.theta_err(&rep.theta) < 0.1);
+}
+
+#[test]
+fn real_hybrid_abandons_stragglers_and_wins_wallclock() {
+    let p = problem(6);
+    // Everyone sleeps ~1ms; one chronically slow node sleeps ~10ms.  The
+    // hybrid run must outlast the slow node's first few results so the
+    // stale-arrival accounting is exercised.
+    let make_cluster = || {
+        ClusterSpec {
+            workers: 6,
+            base_compute: 0.001,
+            delay: DelayModel::Constant { secs: 0.001 },
+            ..ClusterSpec::default()
+        }
+        .with_slow_tail(1, 10.0)
+    };
+    let iters = 60;
+
+    let factory = NativeKrrFactory::for_problem(&p);
+    let bsp = Coordinator::new(make_cluster(), cfg(&p).with_mode(SyncMode::Bsp).with_iters(iters))
+        .unwrap()
+        .run_real(&factory, &NoEval)
+        .unwrap();
+    let hyb = Coordinator::new(
+        make_cluster(),
+        cfg(&p).with_mode(SyncMode::Hybrid { gamma: 5 }).with_iters(iters),
+    )
+    .unwrap()
+    .run_real(&factory, &NoEval)
+    .unwrap();
+
+    assert!(hyb.status.is_healthy());
+    assert!(hyb.total_abandoned > 0, "slow node never abandoned");
+    assert!(
+        hyb.driver_secs < bsp.driver_secs * 0.6,
+        "hybrid {:.3}s vs bsp {:.3}s wall-clock",
+        hyb.driver_secs,
+        bsp.driver_secs
+    );
+}
+
+#[test]
+fn real_hybrid_survives_worker_crash() {
+    let p = problem(6);
+    // Only workers 4 and 5 are crash-prone: they die early with near
+    // certainty, the other four keep the γ=3 barrier satisfiable forever.
+    let cluster = ClusterSpec {
+        workers: 6,
+        base_compute: 0.0,
+        failure: FailureModel {
+            crash_prob: 0.1,
+            transient_prob: 0.0,
+            rejoin_after: None,
+        },
+        failure_only: vec![4, 5],
+        seed: 21,
+        ..ClusterSpec::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        cfg(&p).with_mode(SyncMode::Hybrid { gamma: 3 }).with_iters(200),
+    )
+    .unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(rep.crashes > 0, "no crash injected");
+}
+
+#[test]
+fn real_bsp_stall_detection_on_crash() {
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        failure: FailureModel {
+            crash_prob: 0.05,
+            transient_prob: 0.0,
+            rejoin_after: None,
+        },
+        seed: 3,
+        ..ClusterSpec::default()
+    };
+    let mut c = cfg(&p).with_mode(SyncMode::Bsp).with_iters(500);
+    c.bsp_recovery = hybriditer::coordinator::BspRecovery::Stall;
+    let coord = Coordinator::new(cluster, c).unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(
+        matches!(rep.status, RunStatus::Stalled { .. }),
+        "{:?}",
+        rep.status
+    );
+}
+
+#[test]
+fn real_async_trains() {
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        delay: DelayModel::Uniform { lo: 0.0, hi: 0.001 },
+        ..ClusterSpec::default()
+    };
+    let mut c = cfg(&p).with_mode(SyncMode::Async { damping: 0.0 });
+    c.optimizer = OptimizerKind::sgd(0.3);
+    c = c.with_iters(600); // updates
+    let coord = Coordinator::new(cluster, c).unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(rep.mean_staleness.is_some());
+    assert!(p.theta_err(&rep.theta) < 0.2, "err={}", p.theta_err(&rep.theta));
+}
+
+#[test]
+fn real_xla_threaded_smoke() {
+    // Each worker thread builds its own PJRT client; 3 workers, few iters.
+    let Some(artifacts) = hybriditer::runtime::ArtifactSet::discover().ok() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let spec = KrrProblemSpec::small().with_machines(3);
+    let p = KrrProblem::generate(&spec).unwrap();
+    let cluster = ClusterSpec {
+        workers: 3,
+        base_compute: 0.0,
+        ..ClusterSpec::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        cfg(&p).with_mode(SyncMode::Hybrid { gamma: 2 }).with_iters(10),
+    )
+    .unwrap();
+    let factory = hybriditer::worker::XlaKrrFactory::new(
+        &artifacts,
+        "small",
+        p.shards.clone(),
+        p.spec.lambda as f32,
+    )
+    .unwrap();
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert_eq!(rep.recorder.len(), 10);
+}

@@ -1,0 +1,181 @@
+//! Runtime integration: AOT artifacts load, execute, and agree with the
+//! pure-rust mirror — the end-to-end L1/L2 ⇄ L3 numerical contract.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::runtime::{literal, ArtifactSet, Engine};
+use hybriditer::util::rng::Pcg64;
+use hybriditer::worker::compute::XlaKrrPool;
+
+fn artifacts_or_skip() -> Option<ArtifactSet> {
+    match ArtifactSet::discover() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let m = artifacts.manifest();
+    for name in [
+        "krr_worker_grad_small",
+        "krr_worker_grad_loss_small",
+        "krr_worker_grad_ref_small",
+        "krr_full_loss_small",
+        "rbf_features_small",
+        "master_update_sgd_small",
+        "lm_step_lm_tiny",
+    ] {
+        assert!(m.get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn pallas_kernel_artifact_matches_ref_artifact() {
+    // The pallas-kernel artifact and the pure-jnp oracle artifact must agree
+    // when executed by the rust runtime: cross-checks L1 (kernel), L2
+    // (lowering) and L3 (literal marshalling) in one shot.
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let kernel = artifacts.load(&engine, "krr_worker_grad_small").unwrap();
+    let oracle = artifacts.load(&engine, "krr_worker_grad_ref_small").unwrap();
+
+    let info = kernel.info().clone();
+    let l = info.meta_usize("l").unwrap();
+    let zeta = info.meta_usize("zeta").unwrap();
+
+    let mut rng = Pcg64::seeded(42);
+    let mut theta = vec![0.0f32; l];
+    rng.fill_normal(&mut theta, 0.0, 1.0);
+    let mut phi = vec![0.0f32; zeta * l];
+    rng.fill_normal(&mut phi, 0.0, 1.0);
+    let mut y = vec![0.0f32; zeta];
+    rng.fill_normal(&mut y, 0.0, 1.0);
+
+    let args = |_: ()| -> Vec<xla::Literal> {
+        vec![
+            literal::lit_f32(&theta, &[l]).unwrap(),
+            literal::lit_f32(&phi, &[zeta, l]).unwrap(),
+            literal::lit_f32(&y, &[zeta]).unwrap(),
+            literal::lit_scalar_f32(0.1),
+        ]
+    };
+    let g_kernel = literal::to_vec_f32(&kernel.run(&args(())).unwrap()[0]).unwrap();
+    let g_oracle = literal::to_vec_f32(&oracle.run(&args(())).unwrap()[0]).unwrap();
+    assert_eq!(g_kernel.len(), l);
+    for (a, b) in g_kernel.iter().zip(&g_oracle) {
+        assert!((a - b).abs() < 5e-4, "kernel {a} vs oracle {b}");
+    }
+}
+
+#[test]
+fn xla_pool_matches_native_pool() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let spec = KrrProblemSpec::small().with_machines(4);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut xla_pool = XlaKrrPool::new(
+        &artifacts,
+        &engine,
+        "small",
+        &problem.shards,
+        spec.lambda as f32,
+    )
+    .unwrap();
+    let mut native = problem.native_pool();
+
+    let mut rng = Pcg64::seeded(7);
+    let mut theta = vec![0.0f32; problem.dim()];
+    rng.fill_normal(&mut theta, 0.0, 1.0);
+
+    for w in 0..4 {
+        let gx = xla_pool.grad(w, &theta, 0).unwrap();
+        let gn = native.grad(w, &theta, 0).unwrap();
+        assert_eq!(gx.examples, gn.examples);
+        let max_diff = gx
+            .grad
+            .iter()
+            .zip(&gn.grad)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "worker {w}: grad diff {max_diff}");
+        let lx = gx.loss_sum.unwrap();
+        let ln = gn.loss_sum.unwrap();
+        assert!(
+            (lx - ln).abs() / ln.max(1.0) < 1e-3,
+            "worker {w}: loss {lx} vs {ln}"
+        );
+    }
+}
+
+#[test]
+fn master_update_artifact_applies_sgd() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = artifacts.load(&engine, "master_update_sgd_small").unwrap();
+    let l = exe.info().meta_usize("l").unwrap();
+
+    let theta = vec![1.0f32; l];
+    let gsum = vec![2.0f32; l];
+    let outs = exe
+        .run(&[
+            literal::lit_f32(&theta, &[l]).unwrap(),
+            literal::lit_f32(&gsum, &[l]).unwrap(),
+            literal::lit_scalar_f32(0.25),
+        ])
+        .unwrap();
+    let updated = literal::to_vec_f32(&outs[0]).unwrap();
+    for v in updated {
+        assert!((v - 0.5).abs() < 1e-6); // 1 - 0.25*2
+    }
+}
+
+#[test]
+fn rbf_features_artifact_is_bounded_and_deterministic() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = artifacts.load(&engine, "rbf_features_small").unwrap();
+    let info = exe.info().clone();
+    let d = info.meta_usize("d").unwrap();
+    let l = info.meta_usize("l").unwrap();
+    let zeta = info.meta_usize("zeta").unwrap();
+
+    let mut rng = Pcg64::seeded(3);
+    let mut x = vec![0.0f32; zeta * d];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    let mut w = vec![0.0f32; d * l];
+    rng.fill_normal(&mut w, 0.0, 1.0);
+    let mut b = vec![0.0f32; l];
+    rng.fill_uniform(&mut b, 0.0, 6.28);
+
+    let run = || {
+        literal::to_vec_f32(
+            &exe.run(&[
+                literal::lit_f32(&x, &[zeta, d]).unwrap(),
+                literal::lit_f32(&w, &[d, l]).unwrap(),
+                literal::lit_f32(&b, &[l]).unwrap(),
+            ])
+            .unwrap()[0],
+        )
+        .unwrap()
+    };
+    let phi1 = run();
+    let phi2 = run();
+    assert_eq!(phi1, phi2, "executions must be deterministic");
+    let bound = (2.0f32 / l as f32).sqrt() + 1e-5;
+    assert!(phi1.iter().all(|v| v.abs() <= bound));
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = artifacts.load(&engine, "master_update_sgd_small").unwrap();
+    let r = exe.run(&[literal::lit_scalar_f32(1.0)]);
+    assert!(r.is_err());
+}

@@ -1,0 +1,165 @@
+//! End-to-end training integration: the full three-layer stack (pallas
+//! kernel → jax lowering → PJRT runtime → hybrid coordinator) trains real
+//! problems.  Requires `make artifacts` (skips otherwise).
+
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::lm::{init::init_params, LmPool};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::runtime::{ArtifactSet, Engine};
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+use hybriditer::worker::compute::XlaKrrPool;
+use hybriditer::cluster::ClusterSpec;
+
+fn artifacts_or_skip() -> Option<ArtifactSet> {
+    match ArtifactSet::discover() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn krr_cfg(problem: &KrrProblem) -> RunConfig {
+    RunConfig {
+        optimizer: OptimizerKind::sgd(1.0),
+        loss_form: LossForm::krr(problem.spec.lambda),
+        eval_every: 50,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn hybrid_training_on_xla_backend_converges() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let spec = KrrProblemSpec::small().with_machines(6);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut pool = XlaKrrPool::new(
+        &artifacts,
+        &engine,
+        "small",
+        &problem.shards,
+        spec.lambda as f32,
+    )
+    .unwrap();
+
+    let cluster = ClusterSpec {
+        workers: 6,
+        delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+        ..ClusterSpec::default()
+    };
+    let cfg = krr_cfg(&problem)
+        .with_mode(SyncMode::Hybrid { gamma: 4 })
+        .with_iters(250);
+    let report = sim::run_virtual(&mut pool, &cluster, &cfg, &problem).unwrap();
+
+    assert!(report.status.is_healthy(), "{:?}", report.status);
+    assert!(report.total_abandoned > 0);
+    let err = problem.theta_err(&report.theta);
+    assert!(err < 0.1, "theta_err={err}");
+    // The gap to the exact optimum must close substantially from θ=0.
+    let first = report.recorder.rows().first().unwrap().loss;
+    let last = report.final_loss();
+    let gap0 = first - problem.loss_star;
+    let gap1 = last - problem.loss_star;
+    assert!(gap1 < gap0 * 0.1, "loss gap {gap0} -> {gap1}");
+}
+
+#[test]
+fn xla_and_native_backends_agree_iteration_by_iteration() {
+    // Same problem, same cluster randomness: both backends must produce the
+    // same θ trajectory up to f32 kernel round-off.
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let spec = KrrProblemSpec::small().with_machines(4);
+    let problem = KrrProblem::generate(&spec).unwrap();
+    let cluster = ClusterSpec {
+        workers: 4,
+        delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.8 },
+        ..ClusterSpec::default()
+    };
+    let cfg = krr_cfg(&problem)
+        .with_mode(SyncMode::Hybrid { gamma: 3 })
+        .with_iters(40);
+
+    let mut native = problem.native_pool();
+    let rep_native = sim::run_virtual(&mut native, &cluster, &cfg, &NoEval).unwrap();
+
+    let engine = Engine::cpu().unwrap();
+    let mut xla_pool = XlaKrrPool::new(
+        &artifacts,
+        &engine,
+        "small",
+        &problem.shards,
+        spec.lambda as f32,
+    )
+    .unwrap();
+    let rep_xla = sim::run_virtual(&mut xla_pool, &cluster, &cfg, &NoEval).unwrap();
+
+    // Same barrier decisions (same virtual clock) …
+    assert_eq!(rep_native.total_abandoned, rep_xla.total_abandoned);
+    assert_eq!(rep_native.total_time(), rep_xla.total_time());
+    // … and numerically close parameters.
+    let max_diff = rep_native
+        .theta
+        .iter()
+        .zip(&rep_xla.theta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-2, "theta diff {max_diff}");
+}
+
+#[test]
+fn lm_pool_gradients_reduce_loss() {
+    // Four data-parallel workers, hybrid γ=3, adam master: loss on the
+    // synthetic bigram corpus must fall from ~ln(vocab) toward the floor.
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut pool = match LmPool::new(&artifacts, &engine, "lm_tiny", 4, 4, 99) {
+        Ok(p) => p,
+        Err(e) => panic!("lm_tiny artifact unusable: {e}"),
+    };
+    let init = init_params(pool.task(), 99);
+    let uniform_loss = (pool.task().vocab as f64).ln();
+
+    let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 3 },
+        optimizer: OptimizerKind::Adam { eta: 3e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        loss_form: LossForm::plain(),
+        eval_every: 0,
+        init_theta: Some(init),
+        ..RunConfig::default()
+    }
+    .with_iters(30);
+    let report = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+
+    assert!(report.status.is_healthy());
+    let first = report.recorder.rows().first().unwrap().loss;
+    let last = report.final_loss();
+    assert!(
+        (first - uniform_loss).abs() < 0.7,
+        "init loss {first} should be near ln(V)={uniform_loss}"
+    );
+    assert!(last < first - 0.3, "LM loss {first} -> {last} did not drop");
+    assert!(last > pool.loss_floor() - 0.05, "below entropy floor?!");
+}
+
+#[test]
+fn lm_grad_shapes_roundtrip() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut pool = LmPool::new(&artifacts, &engine, "lm_tiny", 2, 4, 1).unwrap();
+    let dim = pool.dim();
+    let theta = init_params(pool.task(), 1);
+    assert_eq!(theta.len(), dim);
+    let g = pool.grad(0, &theta, 0).unwrap();
+    assert_eq!(g.grad.len(), dim);
+    assert!(g.loss_sum.unwrap() > 0.0);
+    assert_eq!(g.examples, pool.task().tokens_per_batch());
+    // Different workers draw different batches → different grads.
+    let g2 = pool.grad(1, &theta, 0).unwrap();
+    assert_ne!(g.grad, g2.grad);
+}

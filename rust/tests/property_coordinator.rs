@@ -1,0 +1,515 @@
+//! Property tests on coordinator invariants (own helper — proptest is not
+//! in the offline vendor set; see DESIGN.md §3).
+//!
+//! Each property runs over hundreds of seeded random cases; failures print
+//! the seed/stream needed to replay deterministically.
+
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::aggregator::{aggregate, AggregatorKind, Contribution};
+use hybriditer::coordinator::barrier::{Admission, PartialBarrier};
+use hybriditer::coordinator::estimator::{estimate_gamma, estimate_sample_size, EstimatorParams};
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+use hybriditer::util::proptest::{check, check_sized};
+use hybriditer::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Barrier invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_barrier_includes_exactly_gamma_of_any_arrival_order() {
+    check("barrier_gamma_exact", 300, |rng| {
+        let workers = 2 + rng.below(30) as usize;
+        let gamma = 1 + rng.below(workers as u64) as usize;
+        let mut order: Vec<usize> = (0..workers).collect();
+        rng.shuffle(&mut order);
+
+        let mut b = PartialBarrier::new(0, workers, gamma);
+        let mut included = 0;
+        let mut abandoned = 0;
+        for &w in &order {
+            match b.offer(w, 0) {
+                Admission::Included | Admission::IncludedAndClosed => included += 1,
+                Admission::Abandoned => abandoned += 1,
+                Admission::Stale => return Err("unexpected stale".into()),
+            }
+        }
+        if included != gamma {
+            return Err(format!("included {included}, want {gamma}"));
+        }
+        if abandoned != workers - gamma {
+            return Err(format!("abandoned {abandoned}, want {}", workers - gamma));
+        }
+        if !b.is_closed() {
+            return Err("barrier not closed after all arrivals".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_barrier_first_gamma_by_arrival_are_the_included() {
+    check("barrier_first_gamma", 200, |rng| {
+        let workers = 3 + rng.below(20) as usize;
+        let gamma = 1 + rng.below(workers as u64) as usize;
+        let mut order: Vec<usize> = (0..workers).collect();
+        rng.shuffle(&mut order);
+        let mut b = PartialBarrier::new(7, workers, gamma);
+        for (pos, &w) in order.iter().enumerate() {
+            let adm = b.offer(w, 7);
+            let should_include = pos < gamma;
+            let included = matches!(
+                adm,
+                Admission::Included | Admission::IncludedAndClosed
+            );
+            if included != should_include {
+                return Err(format!(
+                    "arrival #{pos} (worker {w}): admission {adm:?}, expected include={should_include}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Aggregator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_mean_aggregation_bounded_by_extremes() {
+    check_sized("aggregate_mean_bounds", 200, 1, 12, |k, rng| {
+        let dim = 1 + rng.below(16) as usize;
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let contribs: Vec<Contribution<'_>> = grads
+            .iter()
+            .map(|g| Contribution { grad: g, examples: 1, staleness: 0 })
+            .collect();
+        let mut out = vec![0.0f32; dim];
+        aggregate(AggregatorKind::Mean, &contribs, &mut out);
+        for d in 0..dim {
+            let lo = grads.iter().map(|g| g[d]).fold(f32::INFINITY, f32::min);
+            let hi = grads.iter().map(|g| g[d]).fold(f32::NEG_INFINITY, f32::max);
+            if out[d] < lo - 1e-5 || out[d] > hi + 1e-5 {
+                return Err(format!("coord {d}: mean {} outside [{lo}, {hi}]", out[d]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_equals_mean_for_equal_weights() {
+    check("aggregate_weighted_eq_mean", 150, |rng| {
+        let k = 2 + rng.below(6) as usize;
+        let dim = 1 + rng.below(8) as usize;
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let contribs: Vec<Contribution<'_>> = grads
+            .iter()
+            .map(|g| Contribution { grad: g, examples: 64, staleness: 0 })
+            .collect();
+        let mut a = vec![0.0f32; dim];
+        let mut b = vec![0.0f32; dim];
+        aggregate(AggregatorKind::Mean, &contribs, &mut a);
+        aggregate(AggregatorKind::ExampleWeighted, &contribs, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            if (x - y).abs() > 1e-5 {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Estimator (Algorithm 1) invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_estimator_monotonicity_and_bounds() {
+    check("estimator_monotone", 300, |rng| {
+        let n_total = 1000 + rng.below(10_000_000) as usize;
+        let zeta = 1 + rng.below(10_000) as usize;
+        let m = 1 + rng.below(256) as usize;
+        let alpha = rng.uniform(0.001, 0.3);
+        let xi = rng.uniform(0.001, 0.5);
+        let p = EstimatorParams { alpha, xi };
+
+        let n = estimate_sample_size(n_total, p).map_err(|e| e.to_string())?;
+        if !(n > 0.0 && n <= n_total as f64) {
+            return Err(format!("n={n} outside (0, {n_total}]"));
+        }
+        let g = estimate_gamma(n_total, zeta, m, p).map_err(|e| e.to_string())?;
+        if !(1..=m).contains(&g) {
+            return Err(format!("gamma={g} outside [1, {m}]"));
+        }
+        // Monotone: stricter α (smaller) and stricter ξ (smaller) need ≥ n.
+        let stricter = EstimatorParams { alpha: alpha / 2.0, xi: xi / 2.0 };
+        let n2 = estimate_sample_size(n_total, stricter).map_err(|e| e.to_string())?;
+        if n2 < n - 1e-9 {
+            return Err(format!("stricter params gave smaller n: {n2} < {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_estimator_coverage_on_gaussian_population() {
+    // Statistical validation of Lemma 3.2: sampling n per the formula keeps
+    // the sample mean within Δ = ξ·|Z̄| of the population mean with
+    // frequency ≥ (1-α) - slack.  One big population, many resamples.
+    let mut rng = Pcg64::seeded(0xC0FFEE);
+    let n_total = 20_000usize;
+    // Population with |mean| >> 0 so relative error is well-defined.
+    let pop: Vec<f64> = (0..n_total).map(|_| 5.0 + rng.normal()).collect();
+    let pop_mean = pop.iter().sum::<f64>() / n_total as f64;
+
+    let p = EstimatorParams { alpha: 0.1, xi: 0.01 };
+    // Exact Lemma-3.2 sample size with known s² = 1 and Δ = ξ·|Z̄|:
+    let u = p.u_half_alpha();
+    let delta = p.xi * pop_mean.abs();
+    let s2 = 1.0;
+    let n = ((n_total as f64) * u * u * s2
+        / (delta * delta * n_total as f64 + u * u * s2))
+        .ceil() as usize;
+
+    let trials = 400;
+    let mut hits = 0;
+    for _ in 0..trials {
+        let idx = rng.sample_indices(n_total, n);
+        let mean: f64 = idx.iter().map(|&i| pop[i]).sum::<f64>() / n as f64;
+        if (mean - pop_mean).abs() < delta {
+            hits += 1;
+        }
+    }
+    let coverage = hits as f64 / trials as f64;
+    assert!(
+        coverage >= 1.0 - p.alpha - 0.05,
+        "coverage {coverage} below {}",
+        1.0 - p.alpha - 0.05
+    );
+}
+
+// ---------------------------------------------------------------------
+// Whole-run invariants (virtual driver)
+// ---------------------------------------------------------------------
+
+fn quick_problem(machines: usize, seed: u64) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "prop".into(),
+        d: 3,
+        l: 8,
+        zeta: 32,
+        machines,
+        noise: 0.05,
+        lambda: 0.02,
+        bandwidth: 1.0,
+        eval_rows: 32,
+        seed,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+#[test]
+fn prop_run_accounting_consistent() {
+    check("run_accounting", 25, |rng| {
+        let m = 2 + rng.below(8) as usize;
+        let gamma = 1 + rng.below(m as u64) as usize;
+        let iters = 20 + rng.below(50);
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.2 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma },
+            optimizer: OptimizerKind::sgd(0.5),
+            loss_form: LossForm::krr(p.spec.lambda),
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+        .with_iters(iters);
+        let mut pool = p.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval)
+            .map_err(|e| e.to_string())?;
+
+        // No failures injected: every iteration includes exactly γ and
+        // abandons exactly m-γ.
+        let expect_contrib = gamma as u64 * iters;
+        let expect_abandoned = (m - gamma) as u64 * iters;
+        if rep.total_contributions != expect_contrib {
+            return Err(format!(
+                "contributions {} want {expect_contrib}",
+                rep.total_contributions
+            ));
+        }
+        if rep.total_abandoned != expect_abandoned {
+            return Err(format!(
+                "abandoned {} want {expect_abandoned}",
+                rep.total_abandoned
+            ));
+        }
+        // Per-row sanity.
+        for row in rep.recorder.rows() {
+            if row.included != gamma {
+                return Err(format!("row {} included {}", row.iter, row.included));
+            }
+            if row.alive != m {
+                return Err(format!("row {} alive {}", row.iter, row.alive));
+            }
+            if !row.loss.is_finite() {
+                return Err(format!("row {} loss not finite", row.iter));
+            }
+        }
+        // Virtual clock strictly increases.
+        for w in rep.recorder.rows().windows(2) {
+            if w[1].time <= w[0].time {
+                return Err(format!("time not increasing at iter {}", w[1].iter));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gamma_m_equals_bsp_without_failures() {
+    // Hybrid with γ = M must produce *exactly* the BSP trajectory: same
+    // included set (everyone) every iteration.
+    check("gamma_m_is_bsp", 15, |rng| {
+        let m = 2 + rng.below(6) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let mk = |mode| {
+            RunConfig {
+                mode,
+                optimizer: OptimizerKind::sgd(0.5),
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                ..RunConfig::default()
+            }
+            .with_iters(30)
+        };
+        let mut pool1 = p.native_pool();
+        let bsp = sim::run_virtual(&mut pool1, &cluster, &mk(SyncMode::Bsp), &NoEval)
+            .map_err(|e| e.to_string())?;
+        let mut pool2 = p.native_pool();
+        let hyb = sim::run_virtual(
+            &mut pool2,
+            &cluster,
+            &mk(SyncMode::Hybrid { gamma: m }),
+            &NoEval,
+        )
+        .map_err(|e| e.to_string())?;
+        if bsp.theta != hyb.theta {
+            return Err("theta trajectories diverged".into());
+        }
+        if bsp.total_time() != hyb.total_time() {
+            return Err(format!(
+                "times diverged: {} vs {}",
+                bsp.total_time(),
+                hyb.total_time()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_abandon_rate_matches_gamma_fraction() {
+    check("abandon_rate_formula", 20, |rng| {
+        let m = 4 + rng.below(8) as usize;
+        let gamma = 1 + rng.below(m as u64 - 1) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::Exponential { rate: 200.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma },
+            optimizer: OptimizerKind::sgd(0.5),
+            loss_form: LossForm::krr(p.spec.lambda),
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+        .with_iters(40);
+        let mut pool = p.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval)
+            .map_err(|e| e.to_string())?;
+        let want = 1.0 - gamma as f64 / m as f64;
+        if (rep.abandon_rate() - want).abs() > 1e-9 {
+            return Err(format!("abandon {} want {want}", rep.abandon_rate()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Async-mode invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_async_applies_every_update_exactly_once() {
+    check("async_update_count", 15, |rng| {
+        let m = 2 + rng.below(6) as usize;
+        let updates = 50 + rng.below(100);
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::Exponential { rate: 100.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: SyncMode::Async { damping: 0.0 },
+            optimizer: OptimizerKind::sgd(0.2),
+            loss_form: LossForm::krr(p.spec.lambda),
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+        .with_iters(updates);
+        let mut pool = p.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval)
+            .map_err(|e| e.to_string())?;
+        if rep.total_contributions != updates {
+            return Err(format!(
+                "applied {} updates, want {updates}",
+                rep.total_contributions
+            ));
+        }
+        let st = rep.mean_staleness.ok_or("no staleness recorded")?;
+        // Staleness is bounded by the cluster size in steady state (every
+        // worker holds at most one in-flight computation).
+        if st < 0.0 || st > m as f64 {
+            return Err(format!("mean staleness {st} outside [0, {m}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_async_damping_shrinks_stale_steps() {
+    // With heavy damping the same event sequence must move θ strictly less
+    // (in total distance) than undamped async whenever staleness occurs.
+    check("async_damping_contracts", 10, |rng| {
+        let m = 4 + rng.below(4) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::Exponential { rate: 50.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let run = |damping: f64| {
+            let cfg = RunConfig {
+                mode: SyncMode::Async { damping },
+                optimizer: OptimizerKind::sgd(0.2),
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                ..RunConfig::default()
+            }
+            .with_iters(60);
+            let mut pool = p.native_pool();
+            sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+        };
+        let plain = run(0.0);
+        let damped = run(4.0);
+        let d_plain = hybriditer::math::vec_ops::norm2(&plain.theta);
+        let d_damped = hybriditer::math::vec_ops::norm2(&damped.theta);
+        // From θ=0 both descend toward θ*; the damped run cannot overshoot
+        // the plain run's travel distance.
+        if d_damped > d_plain * 1.5 + 1e-6 {
+            return Err(format!("damped moved further: {d_damped} vs {d_plain}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// BSP-retry reassignment invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bsp_retry_all_shards_contribute_every_iteration() {
+    use hybriditer::coordinator::BspRecovery;
+    use hybriditer::straggler::FailureModel;
+    check("bsp_retry_full_inclusion", 10, |rng| {
+        let m = 4 + rng.below(6) as usize;
+        let iters = 40;
+        let p = quick_problem(m, rng.next_u64());
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.8 },
+            failure: FailureModel {
+                crash_prob: 0.02,
+                transient_prob: 0.05,
+                rejoin_after: None,
+            },
+            // Keep at least half the cluster immortal so retry can always
+            // reassign somewhere.
+            failure_only: (0..m / 2).collect(),
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: SyncMode::Bsp,
+            optimizer: OptimizerKind::sgd(0.5),
+            loss_form: LossForm::krr(p.spec.lambda),
+            bsp_recovery: BspRecovery::Retry { detect_timeout: 0.05 },
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+        .with_iters(iters);
+        let mut pool = p.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval)
+            .map_err(|e| e.to_string())?;
+        if !rep.status.is_healthy() {
+            return Err(format!("bsp-retry did not survive: {:?}", rep.status));
+        }
+        // Retry semantics: every iteration aggregates all m shards.
+        for row in rep.recorder.rows() {
+            if row.included != m {
+                return Err(format!(
+                    "iter {}: included {} shards, want {m}",
+                    row.iter, row.included
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random() {
+    use hybriditer::data::Checkpoint;
+    check("checkpoint_roundtrip", 50, |rng| {
+        let n = rng.below(5000) as usize;
+        let mut theta = vec![0.0f32; n];
+        rng.fill_normal(&mut theta, 0.0, 10.0);
+        let ckpt = Checkpoint::new(theta, rng.next_u64());
+        let mut buf = Vec::new();
+        ckpt.write_to(&mut buf).map_err(|e| e.to_string())?;
+        let back = Checkpoint::read_from(&mut std::io::Cursor::new(buf))
+            .map_err(|e| e.to_string())?;
+        if back != ckpt {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
