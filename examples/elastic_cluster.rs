@@ -1,0 +1,107 @@
+//! Elastic cluster demo: workers leave mid-run, rejoin later, and the
+//! coordinator rebalances shards onto the live set at iteration
+//! boundaries — so no shard's rows stop contributing and the aggregate
+//! stays unbiased under churn.
+//!
+//! Three policies on the same scripted churn trace (2 of 8 workers leave
+//! at iteration 60 and rejoin at 140):
+//!
+//! * `static`            — no churn (reference);
+//! * `churn-orphaned`    — the seed behaviour: leavers' shards go dark;
+//! * `churn-rebalanced`  — survivors adopt the orphaned shards, load
+//!                         levels back when the leavers return.
+//!
+//!     cargo run --release --example elastic_cluster
+
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim;
+use hybriditer::straggler::DelayModel;
+
+fn main() -> anyhow::Result<()> {
+    hybriditer::util::logger::init();
+    let m = 8;
+    let (leave_at, rejoin_at, iters) = (60u64, 140u64, 300u64);
+    let spec = KrrProblemSpec::small().with_machines(m);
+    let problem = KrrProblem::generate(&spec)?;
+    let churn = ElasticSchedule::crash_and_rejoin(&[m - 2, m - 1], leave_at, rejoin_at);
+
+    let mut table = Table::new(
+        format!("elastic cluster: 2/{m} leave@{leave_at} join@{rejoin_at}, gamma=6"),
+        &[
+            "policy",
+            "virt_secs",
+            "final_loss",
+            "theta_err",
+            "shards/iter@outage",
+            "rebalances",
+        ],
+    );
+
+    for (name, elastic, rebalance_every) in [
+        ("static", ElasticSchedule::default(), 0u64),
+        ("churn-orphaned", churn.clone(), 0),
+        ("churn-rebalanced", churn.clone(), 1),
+    ] {
+        // A stochastic delay rotates which γ workers close each barrier,
+        // so over time every shard contributes (no systematic abandonment).
+        let cluster = ClusterSpec {
+            workers: m,
+            base_compute: 0.01,
+            delay: DelayModel::Uniform { lo: 0.0, hi: 0.01 },
+            seed: 7,
+            ..ClusterSpec::default()
+        }
+        .with_elastic(elastic, rebalance_every);
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma: 6 },
+            optimizer: OptimizerKind::sgd(1.0),
+            loss_form: LossForm::krr(spec.lambda),
+            eval_every: 20,
+            ..RunConfig::default()
+        }
+        .with_iters(iters);
+
+        let mut pool = problem.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &problem)?;
+        println!("{}", rep.summary());
+
+        // Mean shards aggregated per iteration during the outage window.
+        let outage: Vec<usize> = rep
+            .recorder
+            .rows()
+            .iter()
+            .filter(|r| (leave_at..rejoin_at).contains(&r.iter))
+            .map(|r| r.included)
+            .collect();
+        let mean_included = if outage.is_empty() {
+            m as f64
+        } else {
+            outage.iter().sum::<usize>() as f64 / outage.len() as f64
+        };
+
+        table.row(vec![
+            name.to_string(),
+            f(rep.total_time(), 2),
+            format!("{:.6}", rep.final_loss()),
+            rep.final_theta_err()
+                .map(|e| format!("{e:.3e}"))
+                .unwrap_or_else(|| "-".into()),
+            f(mean_included, 1),
+            rep.rebalances.to_string(),
+        ]);
+    }
+    table.print();
+    table.save_csv("example_elastic_cluster")?;
+    println!(
+        "\nReading: without rebalancing the two leavers' shards vanish from\n\
+         the aggregate for the whole outage (shards/iter drops), biasing the\n\
+         reachable optimum; with rebalancing the survivors adopt those shards\n\
+         at the next iteration boundary, every row keeps contributing, and\n\
+         the run matches the static reference's final accuracy."
+    );
+    Ok(())
+}

@@ -2,6 +2,13 @@
 //!
 //! The hybrid barrier needs this to (a) size `γ` against *alive* workers and
 //! (b) detect the BSP stall condition when a worker dies.
+//!
+//! **Elastic membership** (see [`crate::cluster::ElasticSchedule`]): the
+//! view also carries a monotonically increasing **epoch** that bumps on
+//! every liveness transition (crash, scheduled leave, rejoin, scheduled
+//! join).  Both drivers use the epoch to decide when a shard rebalance is
+//! due ([`crate::data::plan_rebalance`]), so "membership changed" means the
+//! same thing in virtual and real timing mode.
 
 use crate::straggler::FailureEvent;
 
@@ -21,6 +28,8 @@ pub struct Membership {
     contributed: Vec<u64>,
     crashes: u64,
     rejoins: u64,
+    /// Bumped on every liveness transition; drives rebalance scheduling.
+    epoch: u64,
 }
 
 impl Membership {
@@ -31,6 +40,7 @@ impl Membership {
             contributed: vec![0; workers],
             crashes: 0,
             rejoins: 0,
+            epoch: 0,
         }
     }
 
@@ -53,28 +63,60 @@ impl Membership {
         self.states[w] == WorkerState::Alive
     }
 
+    /// Per-worker liveness mask (input to [`crate::data::plan_rebalance`]).
+    pub fn alive_mask(&self) -> Vec<bool> {
+        self.states.iter().map(|s| *s == WorkerState::Alive).collect()
+    }
+
+    /// Membership epoch: bumps on every liveness transition.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn transition(&mut self, w: usize, to: WorkerState) -> bool {
+        if self.states[w] != to {
+            self.states[w] = to;
+            self.epoch += 1;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Record a failure-model event observed for worker `w`.
     pub fn observe(&mut self, w: usize, ev: FailureEvent) {
         match ev {
             FailureEvent::Crashed => {
-                self.states[w] = WorkerState::Down;
+                self.transition(w, WorkerState::Down);
                 self.crashes += 1;
             }
             FailureEvent::Rejoined => {
-                self.states[w] = WorkerState::Alive;
+                self.transition(w, WorkerState::Alive);
                 self.rejoins += 1;
             }
-            FailureEvent::Down => self.states[w] = WorkerState::Down,
+            FailureEvent::Down => {
+                self.transition(w, WorkerState::Down);
+            }
             FailureEvent::Healthy | FailureEvent::TransientDrop => {
-                self.states[w] = WorkerState::Alive;
+                self.transition(w, WorkerState::Alive);
             }
         }
     }
 
     pub fn mark_down(&mut self, w: usize) {
-        if self.states[w] == WorkerState::Alive {
-            self.states[w] = WorkerState::Down;
+        if self.transition(w, WorkerState::Down) {
             self.crashes += 1;
+        }
+    }
+
+    /// Re-admit worker `w` (a scheduled join, or a supervisor respawn
+    /// observed out-of-band).  Counts as a rejoin only on a real
+    /// Down → Alive transition, so joining an already-alive worker — e.g.
+    /// a worker rejoining in the same iteration it was declared dead after
+    /// its leave was already processed — is a no-op.
+    pub fn mark_alive(&mut self, w: usize) {
+        if self.transition(w, WorkerState::Alive) {
+            self.rejoins += 1;
         }
     }
 
@@ -148,5 +190,45 @@ mod tests {
         m.mark_down(0);
         assert_eq!(m.crashes(), 1);
         assert_eq!(m.alive(), 1);
+    }
+
+    #[test]
+    fn epoch_bumps_only_on_transitions() {
+        let mut m = Membership::new(3);
+        assert_eq!(m.epoch(), 0);
+        m.observe(0, FailureEvent::Healthy); // already alive: no bump
+        assert_eq!(m.epoch(), 0);
+        m.mark_down(1);
+        assert_eq!(m.epoch(), 1);
+        m.observe(1, FailureEvent::Down); // already down: no bump
+        assert_eq!(m.epoch(), 1);
+        m.mark_alive(1);
+        assert_eq!(m.epoch(), 2);
+        assert_eq!(m.rejoins(), 1);
+    }
+
+    #[test]
+    fn rejoin_same_iteration_as_declared_dead() {
+        // A worker declared dead and re-admitted within the same iteration
+        // boundary nets out alive, with both the crash and the rejoin
+        // counted and two epoch bumps (so a rebalance is still triggered).
+        let mut m = Membership::new(2);
+        m.mark_down(0);
+        m.mark_alive(0);
+        assert!(m.is_alive(0));
+        assert_eq!(m.crashes(), 1);
+        assert_eq!(m.rejoins(), 1);
+        assert_eq!(m.epoch(), 2);
+        // Re-admitting an alive worker is a no-op.
+        m.mark_alive(0);
+        assert_eq!(m.rejoins(), 1);
+        assert_eq!(m.epoch(), 2);
+    }
+
+    #[test]
+    fn alive_mask_matches_states() {
+        let mut m = Membership::new(4);
+        m.mark_down(2);
+        assert_eq!(m.alive_mask(), vec![true, true, false, true]);
     }
 }

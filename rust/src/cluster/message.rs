@@ -1,30 +1,53 @@
 //! Typed master <-> worker messages for the threaded ("real") runtime.
+//!
+//! Elastic clusters make shard assignment dynamic, so a `Work` message
+//! carries the worker's current shard list (usually one shard; more after a
+//! rebalance adopted an orphaned shard) and a `Grad` reply carries one
+//! [`ShardGrad`] per assigned shard.  The master aggregates per *shard* in
+//! shard-index order — the same order the virtual simulator uses — so both
+//! drivers fold contributions identically.
 
 use std::sync::Arc;
 
 /// Master -> worker.
 #[derive(Clone, Debug)]
 pub enum MasterMsg {
-    /// Compute a gradient at `theta` for iteration `iter`.
-    /// `theta` is shared (Arc) so a broadcast does not clone M times.
-    Work { iter: u64, theta: Arc<Vec<f32>> },
+    /// Compute gradients at `theta` for iteration `iter`, one per assigned
+    /// shard.  `theta`/`shards` are shared (Arc) so a broadcast does not
+    /// clone M times.
+    Work {
+        iter: u64,
+        theta: Arc<Vec<f32>>,
+        /// Shards this worker currently owns (ascending shard index).
+        shards: Arc<Vec<usize>>,
+    },
     /// Orderly shutdown.
     Shutdown,
+}
+
+/// One shard's finished gradient inside a [`WorkerMsg::Grad`] report.
+#[derive(Clone, Debug)]
+pub struct ShardGrad {
+    /// Which shard this gradient covers.
+    pub shard: usize,
+    pub grad: Vec<f32>,
+    /// Shard loss contribution (sum of squared residuals for KRR,
+    /// summed NLL for the LM), if the executable provides it.
+    pub loss_sum: Option<f64>,
+    /// Examples that contributed (the paper's ζ).
+    pub examples: usize,
 }
 
 /// Worker -> master.
 #[derive(Debug)]
 pub enum WorkerMsg {
-    /// A finished gradient.
+    /// A finished iteration: one entry per shard the worker was assigned
+    /// (empty if it currently owns no shards — it still reports, occupying
+    /// a barrier slot, exactly like the virtual driver).
     Grad {
         worker: usize,
         iter: u64,
-        grad: Vec<f32>,
-        /// Shard loss contribution (sum of squared residuals for KRR,
-        /// summed NLL for the LM), if the executable provides it.
-        loss_sum: Option<f64>,
-        /// Examples that contributed (the paper's ζ).
-        examples: usize,
+        shards: Vec<ShardGrad>,
         /// Pure compute time (excludes injected delay), seconds.
         compute_secs: f64,
     },
@@ -51,10 +74,12 @@ mod tests {
     #[test]
     fn broadcast_shares_theta() {
         let theta = Arc::new(vec![1.0f32; 1024]);
+        let shards = Arc::new(vec![0usize]);
         let msgs: Vec<MasterMsg> = (0..8)
             .map(|_| MasterMsg::Work {
                 iter: 1,
                 theta: Arc::clone(&theta),
+                shards: Arc::clone(&shards),
             })
             .collect();
         assert_eq!(Arc::strong_count(&theta), 9);
@@ -69,5 +94,25 @@ mod tests {
             error: "x".into(),
         };
         assert_eq!(m.worker(), 3);
+    }
+
+    #[test]
+    fn grad_carries_per_shard_entries() {
+        let m = WorkerMsg::Grad {
+            worker: 1,
+            iter: 4,
+            shards: vec![
+                ShardGrad { shard: 1, grad: vec![0.0], loss_sum: None, examples: 8 },
+                ShardGrad { shard: 5, grad: vec![1.0], loss_sum: Some(2.0), examples: 8 },
+            ],
+            compute_secs: 0.0,
+        };
+        match m {
+            WorkerMsg::Grad { shards, .. } => {
+                assert_eq!(shards.len(), 2);
+                assert_eq!(shards[1].shard, 5);
+            }
+            _ => unreachable!(),
+        }
     }
 }

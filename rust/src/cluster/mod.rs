@@ -1,18 +1,230 @@
-//! Cluster model: topology spec, typed messages, membership tracking.
+//! Cluster model: topology spec, typed messages, membership tracking, and
+//! the **elastic membership schedule**.
 //!
 //! The paper ran on a physical master/slave cluster; here the cluster is
 //! simulated in-process (DESIGN.md §3): workers are OS threads in
 //! [`crate::worker`] ("real" timing mode) or discrete-event entities in
 //! [`crate::sim`] ("virtual" timing mode).  Both share this module's
 //! specification, message, and membership types.
+//!
+//! # Elastic clusters
+//!
+//! The seed system's membership was monotone: workers could only leave
+//! (crash) and their shards' data stopped contributing forever.  An
+//! [`ElasticSchedule`] makes membership a first-class, *scripted* input:
+//! deterministic leave/join events applied at iteration boundaries,
+//! identically by both drivers.  Combined with
+//! [`ClusterSpec::rebalance_every`] the coordinator re-plans shard
+//! ownership over the live set ([`crate::data::plan_rebalance`]) so no
+//! shard's rows are orphaned by churn.  Scheduled leaves model evictions /
+//! network partitions (the worker process survives and can be re-admitted
+//! by a later join); stochastic crashes from [`FailureModel`] still exist
+//! and compose with the schedule.
 
 pub mod membership;
 pub mod message;
 
 pub use membership::Membership;
-pub use message::{MasterMsg, WorkerMsg};
+pub use message::{MasterMsg, ShardGrad, WorkerMsg};
 
 use crate::straggler::{DelayModel, FailureModel, StragglerProfile};
+use crate::{Error, Result};
+
+/// What a scheduled membership event does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticKind {
+    /// The worker leaves the cluster at the event's iteration boundary
+    /// (deterministic crash / eviction: it stops responding).
+    Leave,
+    /// The worker (re)joins at the event's iteration boundary and responds
+    /// again from that iteration on.
+    Join,
+}
+
+/// One scheduled membership change, applied at the start of `iter`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElasticEvent {
+    pub iter: u64,
+    pub worker: usize,
+    pub kind: ElasticKind,
+}
+
+/// A deterministic membership trace: leave/join events sorted by iteration
+/// (stable for same-iteration events, so `leave@k` followed by `join@k`
+/// nets out alive — the "rejoined the iteration it was declared dead"
+/// case).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ElasticSchedule {
+    events: Vec<ElasticEvent>,
+}
+
+impl ElasticSchedule {
+    pub fn new(mut events: Vec<ElasticEvent>) -> ElasticSchedule {
+        events.sort_by_key(|e| e.iter);
+        ElasticSchedule { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[ElasticEvent] {
+        &self.events
+    }
+
+    /// Convenience: each listed worker leaves at `leave_at` and rejoins at
+    /// `rejoin_at` (the F2 elastic scenario).
+    pub fn crash_and_rejoin(workers: &[usize], leave_at: u64, rejoin_at: u64) -> ElasticSchedule {
+        let mut events = Vec::with_capacity(workers.len() * 2);
+        for &w in workers {
+            events.push(ElasticEvent { iter: leave_at, worker: w, kind: ElasticKind::Leave });
+            events.push(ElasticEvent { iter: rejoin_at, worker: w, kind: ElasticKind::Join });
+        }
+        ElasticSchedule::new(events)
+    }
+
+    /// Events due at iteration `iter`, in schedule order.
+    pub fn at(&self, iter: u64) -> impl Iterator<Item = &ElasticEvent> {
+        self.events.iter().filter(move |e| e.iter == iter)
+    }
+
+    /// Parse the `--join-schedule` syntax: comma-separated
+    /// `<worker>:<leave|join>@<iter>` terms, e.g. `"2:leave@30,2:join@50"`.
+    /// An empty string is the empty schedule.
+    pub fn parse(text: &str) -> Result<ElasticSchedule> {
+        let mut events = Vec::new();
+        for term in text.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (worker, rest) = term.split_once(':').ok_or_else(|| {
+                Error::Config(format!("bad elastic event '{term}' (want w:kind@iter)"))
+            })?;
+            let (kind, iter) = rest.split_once('@').ok_or_else(|| {
+                Error::Config(format!("bad elastic event '{term}' (want w:kind@iter)"))
+            })?;
+            let worker: usize = worker.trim().parse().map_err(|_| {
+                Error::Config(format!("bad worker index in elastic event '{term}'"))
+            })?;
+            let iter: u64 = iter.trim().parse().map_err(|_| {
+                Error::Config(format!("bad iteration in elastic event '{term}'"))
+            })?;
+            let kind = match kind.trim() {
+                "leave" => ElasticKind::Leave,
+                "join" => ElasticKind::Join,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown elastic event kind '{other}' (want leave|join)"
+                    )))
+                }
+            };
+            events.push(ElasticEvent { iter, worker, kind });
+        }
+        Ok(ElasticSchedule::new(events))
+    }
+
+    /// Validate against the cluster size: worker indices must be in range,
+    /// and the schedule alone must never evict *every* worker while later
+    /// events are still pending — a fully evicted cluster ends the run
+    /// (`ClusterDead`), so those later joins could never execute.  (This
+    /// replays only scheduled events; stochastic crashes can still kill
+    /// the cluster at runtime.)
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        for e in &self.events {
+            if e.worker >= workers {
+                return Err(Error::Cluster(format!(
+                    "elastic event names worker {} but cluster has {workers}",
+                    e.worker
+                )));
+            }
+        }
+        let mut scheduled_out = vec![false; workers];
+        let mut i = 0;
+        while i < self.events.len() {
+            let iter = self.events[i].iter;
+            while i < self.events.len() && self.events[i].iter == iter {
+                let e = &self.events[i];
+                scheduled_out[e.worker] = e.kind == ElasticKind::Leave;
+                i += 1;
+            }
+            if i < self.events.len() && scheduled_out.iter().all(|&o| o) {
+                return Err(Error::Cluster(format!(
+                    "elastic schedule evicts all {workers} workers at iteration \
+                     {iter}; the run would end (ClusterDead) before the \
+                     schedule's later events"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-run elastic state shared by both drivers: the shard ownership map,
+/// the membership epoch the last rebalance saw, and the rebalance counter.
+///
+/// Both drivers call [`ElasticRuntime::at_boundary`] at the top of every
+/// iteration; keeping the event-application + rebalance-trigger logic in
+/// one place is what makes the cross-driver parity guarantee hold (see
+/// `tests/parity_drivers.rs`) — the drivers cannot drift apart on *when*
+/// a plan is computed or applied.
+pub struct ElasticRuntime {
+    /// Which worker owns each shard.  Drivers read it for assignment and
+    /// latency scaling; BSP-retry mutates it directly for permanent
+    /// Hadoop-style reassignment.
+    pub ownership: crate::data::OwnershipMap,
+    last_epoch: u64,
+    rebalances: u64,
+}
+
+impl ElasticRuntime {
+    /// Identity ownership (shard `s` on worker `s`), epoch synced to the
+    /// membership view.
+    pub fn new(membership: &Membership) -> ElasticRuntime {
+        ElasticRuntime {
+            ownership: crate::data::OwnershipMap::identity(membership.len()),
+            last_epoch: membership.epoch(),
+            rebalances: 0,
+        }
+    }
+
+    /// Rebalance plans executed so far.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    /// Apply iteration-boundary elastic events and, if due, a rebalance
+    /// plan.  `on_event` fires after each event's membership transition —
+    /// drivers hook their failure-state bookkeeping there (the virtual
+    /// driver force-crashes/revives its per-worker `FailureState`s; the
+    /// threaded driver needs nothing).  Returns whether a non-empty plan
+    /// was applied.
+    pub fn at_boundary(
+        &mut self,
+        iter: u64,
+        schedule: &ElasticSchedule,
+        rebalance_every: u64,
+        membership: &mut Membership,
+        mut on_event: impl FnMut(&ElasticEvent),
+    ) -> Result<bool> {
+        for ev in schedule.at(iter) {
+            match ev.kind {
+                ElasticKind::Leave => membership.mark_down(ev.worker),
+                ElasticKind::Join => membership.mark_alive(ev.worker),
+            }
+            on_event(ev);
+        }
+        let mut rebalanced = false;
+        if rebalance_every > 0
+            && (membership.epoch() != self.last_epoch || iter % rebalance_every == 0)
+        {
+            let plan = crate::data::plan_rebalance(&self.ownership, &membership.alive_mask());
+            if !plan.is_empty() {
+                self.ownership.apply(&plan).map_err(Error::Cluster)?;
+                self.rebalances += 1;
+                rebalanced = true;
+            }
+            self.last_epoch = membership.epoch();
+        }
+        Ok(rebalanced)
+    }
+}
 
 /// How iteration latency is realized.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +258,13 @@ pub struct ClusterSpec {
     pub failure_only: Vec<usize>,
     /// Master-side per-iteration overhead (aggregate + update), seconds.
     pub master_overhead: f64,
+    /// Deterministic leave/join trace applied at iteration boundaries
+    /// (empty = static membership, the seed behaviour).
+    pub elastic: ElasticSchedule,
+    /// Shard-rebalance cadence: `0` disables elastic rebalancing (the seed
+    /// behaviour); `k > 0` re-plans ownership every `k` iterations *and*
+    /// whenever the membership epoch changed since the last plan.
+    pub rebalance_every: u64,
     /// RNG seed for all injected randomness (delays, failures).
     pub seed: u64,
 }
@@ -60,6 +279,8 @@ impl Default for ClusterSpec {
             failure: FailureModel::none(),
             failure_only: vec![],
             master_overhead: 0.0005,
+            elastic: ElasticSchedule::default(),
+            rebalance_every: 0,
             seed: 0x5eed,
         }
     }
@@ -100,6 +321,13 @@ impl ClusterSpec {
             .collect();
         self
     }
+
+    /// Convenience: attach an elastic schedule and a rebalance cadence.
+    pub fn with_elastic(mut self, schedule: ElasticSchedule, rebalance_every: u64) -> Self {
+        self.elastic = schedule;
+        self.rebalance_every = rebalance_every;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -127,5 +355,114 @@ mod tests {
         }
         .with_slow_tail(2, 4.0);
         assert_eq!(spec.slow_nodes, vec![(4, 4.0), (5, 4.0)]);
+    }
+
+    #[test]
+    fn elastic_schedule_parses_and_sorts() {
+        let s = ElasticSchedule::parse("2:join@50, 2:leave@30,0:leave@30").unwrap();
+        assert_eq!(s.events().len(), 3);
+        assert_eq!(
+            s.events()[0],
+            ElasticEvent { iter: 30, worker: 2, kind: ElasticKind::Leave }
+        );
+        assert_eq!(
+            s.events()[1],
+            ElasticEvent { iter: 30, worker: 0, kind: ElasticKind::Leave }
+        );
+        assert_eq!(
+            s.events()[2],
+            ElasticEvent { iter: 50, worker: 2, kind: ElasticKind::Join }
+        );
+        assert_eq!(s.at(30).count(), 2);
+        assert_eq!(s.at(31).count(), 0);
+        assert!(ElasticSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn elastic_schedule_rejects_garbage() {
+        assert!(ElasticSchedule::parse("nope").is_err());
+        assert!(ElasticSchedule::parse("1:evaporate@3").is_err());
+        assert!(ElasticSchedule::parse("x:leave@3").is_err());
+        assert!(ElasticSchedule::parse("1:leave@y").is_err());
+    }
+
+    #[test]
+    fn elastic_schedule_validates_worker_range() {
+        let s = ElasticSchedule::parse("7:leave@1").unwrap();
+        assert!(s.validate(8).is_ok());
+        assert!(s.validate(7).is_err());
+    }
+
+    #[test]
+    fn elastic_schedule_rejects_full_eviction_before_later_events() {
+        // Evicting everyone with joins still pending can never replay: the
+        // run ends ClusterDead at the full eviction.
+        let s = ElasticSchedule::crash_and_rejoin(&[0, 1], 10, 20);
+        assert!(s.validate(2).is_err());
+        assert!(s.validate(3).is_ok());
+        // Full eviction as the *final* act is allowed (run honestly ends).
+        let s = ElasticSchedule::parse("0:leave@5,1:leave@5").unwrap();
+        assert!(s.validate(2).is_ok());
+        // Same-iteration leave+join nets out alive, so it is not a full
+        // eviction even with events still pending after it.
+        let s = ElasticSchedule::parse("0:leave@5,1:leave@5,1:join@5,0:join@9").unwrap();
+        assert!(s.validate(2).is_ok());
+    }
+
+    #[test]
+    fn elastic_runtime_rebalances_on_epoch_change_and_cadence() {
+        let mut membership = Membership::new(4);
+        let mut rt = ElasticRuntime::new(&membership);
+        let schedule = ElasticSchedule::crash_and_rejoin(&[3], 2, 5);
+        let mut seen = Vec::new();
+
+        // Iter 0: no events, balanced → no plan even on the cadence tick.
+        let r = rt
+            .at_boundary(0, &schedule, 1, &mut membership, |e| seen.push(*e))
+            .unwrap();
+        assert!(!r);
+        assert!(seen.is_empty());
+
+        // Iter 2: leave fires → shard 3 adopted, plan applied.
+        let r = rt
+            .at_boundary(2, &schedule, 1, &mut membership, |e| seen.push(*e))
+            .unwrap();
+        assert!(r);
+        assert_eq!(seen.len(), 1);
+        assert_eq!(membership.alive(), 3);
+        assert_eq!(rt.ownership.load(3), 0);
+        assert_eq!(rt.rebalances(), 1);
+
+        // Iter 3: unchanged membership, already level → empty plan.
+        assert!(!rt.at_boundary(3, &schedule, 1, &mut membership, |_| {}).unwrap());
+
+        // Iter 5: join fires → load levels back onto worker 3.
+        let r = rt.at_boundary(5, &schedule, 1, &mut membership, |_| {}).unwrap();
+        assert!(r);
+        assert_eq!(membership.alive(), 4);
+        assert_eq!(rt.ownership.load(3), 1);
+        assert_eq!(rt.rebalances(), 2);
+    }
+
+    #[test]
+    fn elastic_runtime_disabled_without_cadence() {
+        let mut membership = Membership::new(3);
+        let mut rt = ElasticRuntime::new(&membership);
+        let schedule = ElasticSchedule::crash_and_rejoin(&[2], 1, 4);
+        // rebalance_every = 0: events still apply, ownership never moves.
+        assert!(!rt.at_boundary(1, &schedule, 0, &mut membership, |_| {}).unwrap());
+        assert_eq!(membership.alive(), 2);
+        assert_eq!(rt.ownership.load(2), 1);
+        assert_eq!(rt.rebalances(), 0);
+    }
+
+    #[test]
+    fn crash_and_rejoin_builder() {
+        let s = ElasticSchedule::crash_and_rejoin(&[1, 3], 10, 25);
+        assert_eq!(s.events().len(), 4);
+        assert_eq!(s.at(10).count(), 2);
+        assert_eq!(s.at(25).count(), 2);
+        assert!(s.at(10).all(|e| e.kind == ElasticKind::Leave));
+        assert!(s.at(25).all(|e| e.kind == ElasticKind::Join));
     }
 }

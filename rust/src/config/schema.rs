@@ -28,6 +28,10 @@
 //! transient_prob = 0.0
 //! rejoin_after = 0      # 0 = never
 //!
+//! [elastic]
+//! schedule = "2:leave@30,2:join@50"   # scripted membership trace
+//! rebalance_every = 1                 # 0 disables shard rebalancing
+//!
 //! [optimizer]
 //! kind = "sgd"          # sgd | momentum | nesterov | adam | lbfgs | cg
 //! eta = 0.5
@@ -42,7 +46,7 @@
 //! seed = 1
 //! ```
 
-use crate::cluster::{ClusterSpec, TimingMode};
+use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
 use crate::coordinator::{AggregatorKind, LossForm, RunConfig, StopRule, SyncMode};
 use crate::data::KrrProblemSpec;
 use crate::optim::{EtaSchedule, OptimizerKind};
@@ -134,6 +138,12 @@ impl ExperimentConfig {
         };
         let slow_n = v.opt_usize("straggler.slow_nodes", 0);
         let slow_factor = v.opt_f64("straggler.slow_factor", 4.0);
+
+        // --- [elastic] ---------------------------------------------------
+        let elastic = ElasticSchedule::parse(v.opt_str("elastic.schedule", ""))?;
+        elastic.validate(machines)?;
+        let rebalance_every = v.opt_u64("elastic.rebalance_every", 0);
+
         let cluster = ClusterSpec {
             workers: machines,
             base_compute: v.opt_f64("straggler.base_compute", 0.01),
@@ -146,6 +156,8 @@ impl ExperimentConfig {
                 .map(|a| a.iter().filter_map(Value::as_usize).collect())
                 .unwrap_or_default(),
             master_overhead: v.opt_f64("straggler.master_overhead", 0.0005),
+            elastic,
+            rebalance_every,
             seed: v.opt_u64("straggler.seed", 0x5eed),
         }
         .with_slow_tail(slow_n.min(machines), slow_factor);
@@ -333,6 +345,36 @@ backend = "native"
         assert!(ExperimentConfig::from_toml("[optimizer]\nkind = \"qp\"").is_err());
         assert!(ExperimentConfig::from_toml("[run]\ntiming = \"half\"").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").is_err());
+    }
+
+    #[test]
+    fn elastic_section_parses() {
+        use crate::cluster::ElasticKind;
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[elastic]\nschedule = \"1:leave@10,1:join@20\"\nrebalance_every = 5",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.rebalance_every, 5);
+        let evs = cfg.cluster.elastic.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].worker, 1);
+        assert_eq!(evs[0].kind, ElasticKind::Leave);
+        assert_eq!(evs[1].iter, 20);
+    }
+
+    #[test]
+    fn elastic_section_rejects_out_of_range_worker() {
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[elastic]\nschedule = \"4:leave@10\"",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn elastic_defaults_to_static() {
+        let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert!(cfg.cluster.elastic.is_empty());
+        assert_eq!(cfg.cluster.rebalance_every, 0);
     }
 
     #[test]

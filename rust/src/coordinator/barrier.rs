@@ -129,6 +129,82 @@ mod tests {
     }
 
     #[test]
+    fn all_workers_abandoned_in_one_iteration() {
+        // Every arrival carries a superseded iteration number (all workers
+        // straggled past the barrier): nothing is included, the barrier
+        // stays open, and the inclusion count is 0 — the coordinator's
+        // "skip the update, keep the clock moving" case.
+        let mut b = PartialBarrier::new(3, 4, 2);
+        for w in 0..4 {
+            assert_eq!(b.offer(w, 2), Admission::Stale);
+        }
+        assert_eq!(b.included(), 0);
+        assert!(!b.is_closed());
+        // Same outcome when the barrier closed before anyone else arrived:
+        // every later arrival is abandoned.
+        let mut b = PartialBarrier::new(0, 4, 1);
+        assert_eq!(b.offer(2, 0), Admission::IncludedAndClosed);
+        for w in [0, 1, 3] {
+            assert_eq!(b.offer(w, 0), Admission::Abandoned);
+        }
+        assert_eq!(b.included(), 1);
+    }
+
+    #[test]
+    fn single_worker_cluster() {
+        // m = 1 degenerates to BSP on one node: γ must be 1, the first
+        // offer closes the barrier, duplicates are abandoned.
+        let mut b = PartialBarrier::new(0, 1, 1);
+        assert_eq!(b.gamma(), 1);
+        assert!(!b.is_closed());
+        assert_eq!(b.offer(0, 0), Admission::IncludedAndClosed);
+        assert!(b.is_closed());
+        assert_eq!(b.offer(0, 0), Admission::Abandoned);
+        assert_eq!(b.included(), 1);
+        // Shrinking a single-worker barrier is a no-op lower bound: γ ≥ 1.
+        let mut b = PartialBarrier::new(1, 1, 1);
+        b.shrink_gamma(0);
+        assert_eq!(b.gamma(), 1);
+        assert!(!b.is_closed());
+    }
+
+    #[test]
+    fn worker_rejoining_same_iteration_it_was_declared_dead() {
+        // γ=3 of 4; worker 2 is declared dead mid-iteration, so the master
+        // shrinks γ to the remaining alive count — but the worker rejoins
+        // (supervisor respawn) within the same iteration and its result
+        // still arrives.  The barrier must accept that result toward γ
+        // rather than double-counting or rejecting it.
+        let mut b = PartialBarrier::new(5, 4, 3);
+        assert_eq!(b.offer(0, 5), Admission::Included);
+        // Worker 2 declared dead: alive = 3, γ clamps to 3 (no-op here).
+        b.shrink_gamma(3);
+        assert!(!b.is_closed());
+        // Worker 2 rejoins within the iteration and reports.
+        assert_eq!(b.offer(2, 5), Admission::Included);
+        assert_eq!(b.offer(1, 5), Admission::IncludedAndClosed);
+        assert!(b.is_closed());
+        assert_eq!(b.included(), 3);
+        // Its re-sent duplicate (rejoin then retransmit) is abandoned.
+        assert_eq!(b.offer(2, 5), Admission::Abandoned);
+    }
+
+    #[test]
+    fn shrink_gamma_never_reopens_or_grows() {
+        let mut b = PartialBarrier::new(0, 4, 2);
+        b.offer(0, 0);
+        b.offer(1, 0);
+        assert!(b.is_closed());
+        // Shrinking after closure keeps it closed.
+        b.shrink_gamma(1);
+        assert!(b.is_closed());
+        // "Shrinking" upward is clamped to the current γ.
+        let mut b = PartialBarrier::new(0, 4, 2);
+        b.shrink_gamma(4);
+        assert_eq!(b.gamma(), 2);
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_gamma_zero() {
         PartialBarrier::new(0, 4, 0);

@@ -23,10 +23,44 @@ pub use aggregator::AggregatorKind;
 pub use convergence::{RunStatus, StopRule};
 pub use modes::SyncMode;
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, ElasticKind};
 use crate::metrics::Recorder;
 use crate::optim::OptimizerKind;
 use crate::{Error, Result};
+
+/// Validate a cluster's elastic configuration against a sync mode.  Shared
+/// by both drivers and [`Coordinator::new`], so the compatibility rules
+/// cannot drift between virtual and real timing:
+///
+/// * worker indices must be in range and the schedule must never evict the
+///   whole cluster with events still pending ([`crate::cluster::ElasticSchedule::validate`]);
+/// * async mode has no iteration boundaries, so it takes no elastic config;
+/// * BSP guarantees every shard contributes every iteration, so scheduled
+///   leaves require rebalancing (otherwise the leaver's shards would
+///   silently stop contributing — exactly the bias BSP exists to prevent).
+pub fn validate_elastic(cluster: &ClusterSpec, mode: &SyncMode) -> Result<()> {
+    cluster.elastic.validate(cluster.workers)?;
+    if mode.is_async() && (!cluster.elastic.is_empty() || cluster.rebalance_every > 0) {
+        return Err(Error::Config(
+            "elastic membership/rebalancing requires a synchronous mode".into(),
+        ));
+    }
+    if matches!(mode, SyncMode::Bsp)
+        && cluster.rebalance_every == 0
+        && cluster
+            .elastic
+            .events()
+            .iter()
+            .any(|e| e.kind == ElasticKind::Leave)
+    {
+        return Err(Error::Config(
+            "BSP with scheduled leaves requires rebalance_every > 0 \
+             (every shard must keep a live owner)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
 
 /// How per-shard loss sums assemble into the reported training loss.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -136,6 +170,10 @@ pub struct RunReport {
     pub total_contributions: u64,
     pub total_abandoned: u64,
     pub crashes: u64,
+    /// Workers re-admitted (scheduled joins + supervisor rejoins).
+    pub rejoins: u64,
+    /// Elastic shard-rebalance plans executed (0 = static membership).
+    pub rebalances: u64,
     /// Async only: mean staleness of applied gradients.
     pub mean_staleness: Option<f64>,
     /// Wall-clock of the driver itself (not virtual time), seconds.
@@ -197,6 +235,7 @@ impl Coordinator {
         if cluster.workers == 0 {
             return Err(Error::Cluster("cluster needs at least one worker".into()));
         }
+        validate_elastic(&cluster, &cfg.mode)?;
         if let SyncMode::Hybrid { gamma } = cfg.mode {
             if gamma == 0 || gamma > cluster.workers {
                 return Err(Error::Cluster(format!(
@@ -252,6 +291,30 @@ mod tests {
     }
 
     #[test]
+    fn validate_elastic_rules() {
+        use crate::cluster::ElasticSchedule;
+        let churn = ElasticSchedule::crash_and_rejoin(&[1], 5, 10);
+        let base = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+
+        // BSP + scheduled leaves needs rebalancing on.
+        let c = base.clone().with_elastic(churn.clone(), 0);
+        assert!(validate_elastic(&c, &SyncMode::Bsp).is_err());
+        let c = base.clone().with_elastic(churn.clone(), 1);
+        assert!(validate_elastic(&c, &SyncMode::Bsp).is_ok());
+
+        // Hybrid tolerates orphaned shards (abandonment is its model).
+        let c = base.clone().with_elastic(churn.clone(), 0);
+        assert!(validate_elastic(&c, &SyncMode::Hybrid { gamma: 2 }).is_ok());
+
+        // Async takes no elastic config at all.
+        let c = base.clone().with_elastic(churn, 1);
+        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_err());
+        let c = base.clone().with_elastic(ElasticSchedule::default(), 1);
+        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_err());
+        assert!(validate_elastic(&base, &SyncMode::Async { damping: 0.0 }).is_ok());
+    }
+
+    #[test]
     fn report_abandon_rate() {
         let rep = RunReport {
             recorder: Recorder::new(),
@@ -262,6 +325,8 @@ mod tests {
             total_contributions: 75,
             total_abandoned: 25,
             crashes: 0,
+            rejoins: 0,
+            rebalances: 0,
             mean_staleness: None,
             driver_secs: 0.0,
         };

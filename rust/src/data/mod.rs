@@ -15,7 +15,7 @@ pub mod synth;
 
 pub use checkpoint::Checkpoint;
 
-pub use shard::Shard;
+pub use shard::{plan_rebalance, OwnershipMap, RebalancePlan, Shard, ShardMove};
 pub use synth::{KrrProblem, KrrProblemSpec};
 
 /// Result of one worker-side gradient computation.

@@ -11,6 +11,41 @@ use crate::data::{ComputePool, GradResult};
 use crate::math::vec_ops;
 use crate::Result;
 
+/// One shard's KRR gradient/loss: `g = Φᵀ(Φθ−y)/ζ + λθ`, shared by the
+/// pool below and the threaded runtime's per-worker compute (which, under
+/// elastic rebalancing, may be handed *any* shard).  `resid` is a scratch
+/// buffer grown as needed.
+pub fn krr_shard_grad(s: &Shard, lambda: f32, theta: &[f32], resid: &mut Vec<f32>) -> GradResult {
+    let (rows, l) = (s.rows, s.l);
+    debug_assert_eq!(theta.len(), l);
+    if resid.len() < rows {
+        resid.resize(rows, 0.0);
+    }
+    let resid = &mut resid[..rows];
+
+    // r = Φθ − y
+    vec_ops::matvec(&s.phi, rows, l, theta, resid);
+    let mut ss = 0.0f64;
+    for (r, &yi) in resid.iter_mut().zip(s.y.iter()) {
+        *r -= yi;
+        ss += (*r as f64) * (*r as f64);
+    }
+
+    // g = Φᵀ r / ζ + λθ
+    let mut grad = vec![0.0f32; l];
+    vec_ops::matvec_t(&s.phi, rows, l, resid, &mut grad);
+    let inv = 1.0 / rows as f32;
+    for (g, &t) in grad.iter_mut().zip(theta.iter()) {
+        *g = *g * inv + lambda * t;
+    }
+
+    GradResult {
+        grad,
+        loss_sum: Some(ss),
+        examples: rows,
+    }
+}
+
 /// Native KRR gradient pool over per-worker shards.
 pub struct NativeKrrPool {
     shards: Vec<Shard>,
@@ -48,32 +83,7 @@ impl ComputePool for NativeKrrPool {
     }
 
     fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
-        let s = &self.shards[w];
-        let (rows, l) = (s.rows, s.l);
-        debug_assert_eq!(theta.len(), l);
-        let resid = &mut self.resid[..rows];
-
-        // r = Φθ − y
-        vec_ops::matvec(&s.phi, rows, l, theta, resid);
-        let mut ss = 0.0f64;
-        for (r, &yi) in resid.iter_mut().zip(s.y.iter()) {
-            *r -= yi;
-            ss += (*r as f64) * (*r as f64);
-        }
-
-        // g = Φᵀ r / ζ + λθ
-        let mut grad = vec![0.0f32; l];
-        vec_ops::matvec_t(&s.phi, rows, l, resid, &mut grad);
-        let inv = 1.0 / rows as f32;
-        for (g, &t) in grad.iter_mut().zip(theta.iter()) {
-            *g = *g * inv + self.lambda * t;
-        }
-
-        Ok(GradResult {
-            grad,
-            loss_sum: Some(ss),
-            examples: rows,
-        })
+        Ok(krr_shard_grad(&self.shards[w], self.lambda, theta, &mut self.resid))
     }
 }
 

@@ -1,4 +1,21 @@
-//! Row-sharding of a feature matrix across M workers.
+//! Row-sharding of a feature matrix across M workers, plus the shard
+//! **ownership map** the elastic cluster subsystem rebalances.
+//!
+//! The seed system hard-wired shard `s` to worker `s` forever, so a crashed
+//! worker's rows silently stopped contributing and biased the aggregate.
+//! [`OwnershipMap`] decouples *data partition* (fixed `Shard`s) from
+//! *assignment* (which worker computes which shard this iteration), and
+//! [`plan_rebalance`] produces a deterministic [`RebalancePlan`] that moves
+//! orphaned shards onto live workers and levels load — the same plan is
+//! executed by both drivers ([`crate::sim`] and [`crate::worker`]), so
+//! semantics stay shared.
+//!
+//! Invariants (property-tested in `tests/property_shard.rs`):
+//! * every shard has exactly one owner (no row lost, no row owned twice);
+//! * after a rebalance every owner is alive (when anyone is);
+//! * alive loads differ by at most one shard;
+//! * with unchanged, already-even membership the plan is empty
+//!   (`split_even` round-trips through rebalance to the identity).
 
 /// One worker's slice of the dataset: `phi` is row-major (rows, l).
 #[derive(Clone, Debug)]
@@ -38,6 +55,199 @@ pub fn split_even(phi: &[f32], y: &[f32], l: usize, m: usize, zeta: usize) -> Ve
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Ownership map + rebalance plans (elastic cluster subsystem)
+// ---------------------------------------------------------------------
+
+/// Which worker owns (computes) each shard.  `owner[shard] = worker`, so by
+/// construction every shard has exactly one owner.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OwnershipMap {
+    owner: Vec<usize>,
+    workers: usize,
+}
+
+impl OwnershipMap {
+    /// Even assignment: shard `s` to worker `s % workers`.  With
+    /// `shards == workers` (the seed layout) this is the identity.
+    pub fn even(shards: usize, workers: usize) -> OwnershipMap {
+        assert!(workers > 0, "ownership needs at least one worker");
+        OwnershipMap {
+            owner: (0..shards).map(|s| s % workers).collect(),
+            workers,
+        }
+    }
+
+    /// The seed layout: one shard per worker, shard `s` owned by worker `s`.
+    pub fn identity(m: usize) -> OwnershipMap {
+        OwnershipMap::even(m, m)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn owner(&self, shard: usize) -> usize {
+        self.owner[shard]
+    }
+
+    /// Number of shards worker `w` currently owns.
+    pub fn load(&self, w: usize) -> usize {
+        self.owner.iter().filter(|&&o| o == w).count()
+    }
+
+    /// All loads, indexed by worker.
+    pub fn loads(&self) -> Vec<usize> {
+        let mut loads = vec![0usize; self.workers];
+        for &o in &self.owner {
+            loads[o] += 1;
+        }
+        loads
+    }
+
+    /// Shards worker `w` owns, in ascending shard order (the deterministic
+    /// compute/aggregation order both drivers use).
+    pub fn shards_of(&self, w: usize) -> Vec<usize> {
+        (0..self.owner.len()).filter(|&s| self.owner[s] == w).collect()
+    }
+
+    /// All per-worker shard lists (each ascending), computed in one
+    /// O(shards) pass — the per-iteration form of [`Self::shards_of`] for
+    /// the drivers' hot loops.
+    pub fn grouped(&self) -> Vec<Vec<usize>> {
+        let mut by_worker = vec![Vec::new(); self.workers];
+        for (s, &o) in self.owner.iter().enumerate() {
+            by_worker[o].push(s);
+        }
+        by_worker
+    }
+
+    /// Point reassignment (BSP-retry's Hadoop-style permanent takeover).
+    pub fn reassign(&mut self, shard: usize, new_owner: usize) {
+        assert!(new_owner < self.workers, "owner {new_owner} out of range");
+        self.owner[shard] = new_owner;
+    }
+
+    /// Execute a rebalance plan.  Errors if a move's `from` no longer holds
+    /// the shard (a stale plan), leaving the map unchanged in that case.
+    pub fn apply(&mut self, plan: &RebalancePlan) -> Result<(), String> {
+        for mv in &plan.moves {
+            if self.owner.get(mv.shard) != Some(&mv.from) {
+                return Err(format!(
+                    "stale rebalance move: shard {} owned by {}, plan says {}",
+                    mv.shard,
+                    self.owner.get(mv.shard).copied().unwrap_or(usize::MAX),
+                    mv.from
+                ));
+            }
+        }
+        for mv in &plan.moves {
+            self.owner[mv.shard] = mv.to;
+        }
+        Ok(())
+    }
+}
+
+/// One shard migration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMove {
+    pub shard: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// A batch of shard migrations computed at an iteration boundary.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RebalancePlan {
+    pub moves: Vec<ShardMove>,
+}
+
+impl RebalancePlan {
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+}
+
+/// Compute a deterministic rebalance plan over the live worker set:
+///
+/// 1. every shard owned by a dead worker moves to the least-loaded alive
+///    worker (ties break toward the lowest worker index);
+/// 2. loads are then levelled: while some alive worker owns ≥ 2 more
+///    shards than another, its highest-index shard moves to the
+///    least-loaded alive worker.
+///
+/// With every worker alive and loads already level the plan is empty, so
+/// rebalancing is the identity on an unchanged balanced cluster.  If no
+/// worker is alive the plan is empty (there is nowhere to move work).
+pub fn plan_rebalance(map: &OwnershipMap, alive: &[bool]) -> RebalancePlan {
+    assert_eq!(alive.len(), map.workers(), "alive mask size mismatch");
+    let alive_workers: Vec<usize> = (0..alive.len()).filter(|&w| alive[w]).collect();
+    let mut plan = RebalancePlan::default();
+    if alive_workers.is_empty() {
+        return plan;
+    }
+
+    let mut loads = map.loads();
+    // Track pending ownership so levelling sees pass-1 moves.
+    let mut owner: Vec<usize> = (0..map.shards()).map(|s| map.owner(s)).collect();
+
+    let least_loaded = |loads: &[usize]| -> usize {
+        let mut best = alive_workers[0];
+        for &w in &alive_workers {
+            if loads[w] < loads[best] {
+                best = w;
+            }
+        }
+        best
+    };
+
+    // Pass 1: adopt orphaned shards.
+    for s in 0..owner.len() {
+        let o = owner[s];
+        if !alive[o] {
+            let to = least_loaded(&loads);
+            plan.moves.push(ShardMove { shard: s, from: o, to });
+            loads[o] -= 1;
+            loads[to] += 1;
+            owner[s] = to;
+        }
+    }
+
+    // Pass 2: level loads among alive workers to within one shard.
+    loop {
+        let mut donor = alive_workers[0];
+        for &w in &alive_workers {
+            if loads[w] > loads[donor] {
+                donor = w;
+            }
+        }
+        let recipient = least_loaded(&loads);
+        if loads[donor] <= loads[recipient] + 1 {
+            break;
+        }
+        // Donor's highest-index shard migrates (low shards stay sticky,
+        // minimizing churn for workers that keep their original data).
+        let shard = (0..owner.len())
+            .rev()
+            .find(|&s| owner[s] == donor)
+            .expect("donor with positive load owns a shard");
+        plan.moves.push(ShardMove { shard, from: donor, to: recipient });
+        loads[donor] -= 1;
+        loads[recipient] += 1;
+        owner[shard] = recipient;
+    }
+
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +269,83 @@ mod tests {
     #[should_panic]
     fn rejects_uneven() {
         split_even(&[0.0; 10], &[0.0; 5], 2, 2, 2);
+    }
+
+    #[test]
+    fn identity_map_owns_one_each() {
+        let map = OwnershipMap::identity(4);
+        assert_eq!(map.shards(), 4);
+        for w in 0..4 {
+            assert_eq!(map.owner(w), w);
+            assert_eq!(map.load(w), 1);
+            assert_eq!(map.shards_of(w), vec![w]);
+        }
+        assert_eq!(map.loads(), vec![1; 4]);
+    }
+
+    #[test]
+    fn rebalance_is_identity_on_healthy_even_cluster() {
+        let map = OwnershipMap::identity(6);
+        let plan = plan_rebalance(&map, &[true; 6]);
+        assert!(plan.is_empty(), "{plan:?}");
+    }
+
+    #[test]
+    fn dead_workers_shards_adopted_by_least_loaded() {
+        let mut map = OwnershipMap::identity(4);
+        let alive = [true, false, true, true];
+        let plan = plan_rebalance(&map, &alive);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.moves[0].shard, 1);
+        assert_eq!(plan.moves[0].from, 1);
+        // Lowest-index least-loaded alive worker adopts.
+        assert_eq!(plan.moves[0].to, 0);
+        map.apply(&plan).unwrap();
+        assert_eq!(map.owner(1), 0);
+        assert_eq!(map.load(0), 2);
+    }
+
+    #[test]
+    fn rejoin_levels_load_back() {
+        // Worker 1 died, its shard moved to 0; when 1 rejoins, levelling
+        // hands a shard back.
+        let mut map = OwnershipMap::identity(4);
+        map.apply(&plan_rebalance(&map, &[true, false, true, true])).unwrap();
+        assert_eq!(map.load(0), 2);
+        assert_eq!(map.load(1), 0);
+        let plan = plan_rebalance(&map, &[true; 4]);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.moves[0].from, 0);
+        assert_eq!(plan.moves[0].to, 1);
+        map.apply(&plan).unwrap();
+        assert_eq!(map.loads(), vec![1; 4]);
+    }
+
+    #[test]
+    fn stale_plan_rejected_without_mutation() {
+        let mut map = OwnershipMap::identity(3);
+        let plan = RebalancePlan {
+            moves: vec![ShardMove { shard: 0, from: 2, to: 1 }],
+        };
+        assert!(map.apply(&plan).is_err());
+        assert_eq!(map, OwnershipMap::identity(3));
+    }
+
+    #[test]
+    fn everyone_dead_yields_empty_plan() {
+        let map = OwnershipMap::identity(3);
+        assert!(plan_rebalance(&map, &[false; 3]).is_empty());
+    }
+
+    #[test]
+    fn single_survivor_adopts_everything() {
+        let mut map = OwnershipMap::identity(5);
+        let alive = [false, false, true, false, false];
+        let plan = plan_rebalance(&map, &alive);
+        map.apply(&plan).unwrap();
+        assert_eq!(map.load(2), 5);
+        for s in 0..5 {
+            assert_eq!(map.owner(s), 2);
+        }
     }
 }

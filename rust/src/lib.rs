@@ -54,23 +54,53 @@ pub mod straggler;
 pub mod util;
 pub mod worker;
 
-/// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Library-wide error type (hand-rolled; `thiserror` is not in the offline
+/// vendor set).
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("config error: {0}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Config(String),
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("cluster error: {0}")]
     Cluster(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Cluster(msg) => write!(f, "cluster error: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 impl Error {

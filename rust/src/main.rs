@@ -54,7 +54,17 @@ fn usage_and_exit() -> ! {
 fn cmd_train(argv: &[String]) -> i32 {
     let spec = ArgSpec::new("hybriditer train", "run an experiment from a TOML config")
         .positional("config", "experiment TOML file")
-        .opt("csv", "", "write the loss curve CSV here (overrides config)");
+        .opt("csv", "", "write the loss curve CSV here (overrides config)")
+        .opt(
+            "join-schedule",
+            "",
+            "elastic membership trace, e.g. 2:leave@30,2:join@50 (overrides config)",
+        )
+        .opt(
+            "rebalance-every",
+            "",
+            "rebalance shards every k iterations, 0 disables (overrides config)",
+        );
     let parsed = match spec.parse(argv) {
         Ok(p) => p,
         Err(e) => {
@@ -62,7 +72,12 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    match run_train(parsed.positional(0), parsed.get("csv")) {
+    match run_train(
+        parsed.positional(0),
+        parsed.get("csv"),
+        parsed.get("join-schedule"),
+        parsed.get("rebalance-every"),
+    ) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("train failed: {e}");
@@ -71,8 +86,25 @@ fn cmd_train(argv: &[String]) -> i32 {
     }
 }
 
-fn run_train(config_path: &str, csv_override: &str) -> hybriditer::Result<()> {
-    let cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+fn run_train(
+    config_path: &str,
+    csv_override: &str,
+    join_schedule: &str,
+    rebalance_every: &str,
+) -> hybriditer::Result<()> {
+    let mut cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    if !join_schedule.is_empty() {
+        let sched = hybriditer::cluster::ElasticSchedule::parse(join_schedule)?;
+        sched.validate(cfg.cluster.workers)?;
+        cfg.cluster.elastic = sched;
+    }
+    if !rebalance_every.is_empty() {
+        cfg.cluster.rebalance_every = rebalance_every.parse().map_err(|_| {
+            hybriditer::Error::Config(format!(
+                "--rebalance-every: expected integer, got '{rebalance_every}'"
+            ))
+        })?;
+    }
     log::info!(
         "experiment: {:?} mode={} workers={} timing={:?} backend={:?}",
         cfg.problem_kind,

@@ -13,8 +13,18 @@
 //! permanent reassignment when the owner crashed for good — so BSP keeps
 //! *correctness* but pays latency, while the hybrid barrier simply keeps
 //! going (the paper's fault-tolerance claim, F2).
+//!
+//! **Elastic membership**: a [`ClusterSpec::elastic`] schedule applies
+//! deterministic leave/join events at iteration boundaries, and with
+//! [`ClusterSpec::rebalance_every`] `> 0` the coordinator re-plans shard
+//! ownership over the live set ([`crate::data::plan_rebalance`]) whenever
+//! the membership epoch changed (and on the fixed cadence).  A worker that
+//! owns k shards computes them serially (latency ×k) and contributes one
+//! gradient per shard, aggregated in ascending shard order — exactly the
+//! order the threaded runtime uses, so the two drivers stay decision- and
+//! trajectory-equivalent (see `tests/parity_drivers.rs`).
 
-use crate::cluster::{ClusterSpec, Membership};
+use crate::cluster::{ClusterSpec, ElasticKind, ElasticRuntime, Membership};
 use crate::coordinator::aggregator::{aggregate, Contribution};
 use crate::coordinator::barrier::PartialBarrier;
 use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
@@ -68,6 +78,7 @@ pub fn run_virtual(
             cluster.workers
         )));
     }
+    crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
     if cfg.mode.is_async() {
         return run_async(pool, cluster, cfg, hooks, driver_start);
     }
@@ -121,9 +132,14 @@ fn run_sync(
         .collect();
     let mut membership = Membership::new(m);
 
-    // Shard ownership (BSP-retry reassignment; hybrid never reassigns).
-    let mut owner: Vec<usize> = (0..m).collect();
-    let mut load: Vec<usize> = vec![1; m];
+    // Shard ownership + rebalance state, shared logic with the threaded
+    // driver.  BSP-retry's permanent reassignment mutates the map directly.
+    let mut elastic = ElasticRuntime::new(&membership);
+    // Workers evicted by a scheduled Leave.  Tracked separately from
+    // FailureState so a FailureModel with `rejoin_after` cannot auto-revive
+    // a scheduled leaver before its scheduled Join (the threaded driver's
+    // master-side eviction has the same semantics).
+    let mut evicted = vec![false; m];
 
     let mut opt = cfg.optimizer.build();
     let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
@@ -137,16 +153,53 @@ fn run_sync(
     let mut carryover: Vec<crate::data::GradResult> = Vec::new();
 
     'iters: for iter in 0..cfg.stop.max_iters {
+        // --- 0. elastic membership events & shard rebalancing ----------
+        // Scheduled leave/join events land exactly at this boundary, in
+        // schedule order (a leave@k followed by join@k nets out alive).
+        let rebalanced = elastic.at_boundary(
+            iter,
+            &cluster.elastic,
+            cluster.rebalance_every,
+            &mut membership,
+            |ev| match ev.kind {
+                ElasticKind::Leave => {
+                    evicted[ev.worker] = true;
+                    fstates[ev.worker].force_crash(iter);
+                }
+                ElasticKind::Join => {
+                    evicted[ev.worker] = false;
+                    fstates[ev.worker].force_rejoin();
+                }
+            },
+        )?;
+        if rebalanced {
+            log::debug!("iter {iter}: shard ownership rebalanced");
+        }
+
+        // Snapshot the assignment once per iteration (O(shards)); it only
+        // changes at boundaries, except for BSP-retry's mid-iteration
+        // reassignment, which reads the live map directly below.
+        let assignment = elastic.ownership.grouped();
+
         // --- 1. failure events & responder latencies -------------------
         let mut events = vec![FailureEvent::Healthy; m];
         let mut latency = vec![f64::INFINITY; m];
         for w in 0..m {
+            if evicted[w] {
+                // Scheduled eviction: no failure-state step (so
+                // `rejoin_after` cannot revive it early), no response.
+                events[w] = FailureEvent::Down;
+                continue;
+            }
             let ev = fstates[w].step(iter, &mut fail_rngs[w]);
             membership.observe(w, ev);
             events[w] = ev;
             if matches!(ev, FailureEvent::Healthy | FailureEvent::Rejoined) {
-                // Serial execution of owned shards.
-                latency[w] = profiles[w].sample_latency(&mut delay_rngs[w]) * load[w] as f64;
+                // Serial execution of owned shards; a worker that briefly
+                // owns no shards still reports (one base heartbeat),
+                // matching the threaded slave's `shards.len().max(1)`.
+                latency[w] = profiles[w].sample_latency(&mut delay_rngs[w])
+                    * assignment[w].len().max(1) as f64;
             }
         }
         let responders: Vec<usize> = (0..m)
@@ -164,12 +217,13 @@ fn run_sync(
 
         // --- 2. barrier: which shards contribute, iteration latency ----
         let mut included_shards: Vec<usize> = Vec::new();
+        let mut included_workers: Vec<usize> = Vec::new();
         let iter_latency: f64;
         match (&cfg.mode, gamma) {
             (SyncMode::Bsp, _) => {
                 let missing: Vec<usize> = (0..m)
                     .filter(|&s| {
-                        let o = owner[s];
+                        let o = elastic.ownership.owner(s);
                         !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined))
                     })
                     .collect();
@@ -182,18 +236,16 @@ fn run_sync(
                         BspRecovery::Retry { detect_timeout } => {
                             // Reassign permanently-dead owners' shards.
                             for &s in &missing {
-                                let o = owner[s];
+                                let o = elastic.ownership.owner(s);
                                 if fstates[o].is_down() {
                                     // least-loaded alive worker takes over
                                     let new_o = (0..m)
                                         .filter(|&w| !fstates[w].is_down())
-                                        .min_by_key(|&w| load[w])
+                                        .min_by_key(|&w| elastic.ownership.load(w))
                                         .ok_or_else(|| {
                                             Error::Cluster("no alive worker for reassignment".into())
                                         })?;
-                                    load[owner[s]] = load[owner[s]].saturating_sub(1);
-                                    owner[s] = new_o;
-                                    load[new_o] += 1;
+                                    elastic.ownership.reassign(s, new_o);
                                 }
                             }
                             // Every shard contributes; stragglers pay detect+retry.
@@ -203,11 +255,11 @@ fn run_sync(
                                 .fold(0.0f64, f64::max);
                             let mut retry_max = 0.0f64;
                             for &s in &missing {
-                                let o = owner[s];
+                                let o = elastic.ownership.owner(s);
                                 let retry_lat = if latency[o].is_finite() {
                                     latency[o]
                                 } else {
-                                    profiles[o].base_compute * load[o] as f64
+                                    profiles[o].base_compute * elastic.ownership.load(o) as f64
                                 };
                                 retry_max = retry_max.max(detect_timeout + retry_lat);
                             }
@@ -224,17 +276,21 @@ fn run_sync(
                 }
             }
             (_, Some(g)) => {
-                // Hybrid family: first γ_eff responders' own shards.
+                // Hybrid family: the first γ_eff responders contribute
+                // every shard they currently own.
                 let mut order: Vec<usize> = responders.clone();
                 order.sort_by(|&a, &b| latency[a].partial_cmp(&latency[b]).unwrap());
                 let g_eff = g.min(order.len());
                 let mut barrier = PartialBarrier::new(iter, m, g_eff);
+                let mut closing_worker = order[0];
                 for &w in &order {
                     let adm = barrier.offer(w, iter);
                     match adm {
                         crate::coordinator::barrier::Admission::Included
                         | crate::coordinator::barrier::Admission::IncludedAndClosed => {
-                            included_shards.push(w);
+                            closing_worker = w;
+                            included_workers.push(w);
+                            included_shards.extend(assignment[w].iter().copied());
                             membership.record_contribution(w);
                         }
                         _ => {
@@ -242,10 +298,11 @@ fn run_sync(
                         }
                     }
                 }
-                iter_latency = latency[*included_shards.last().unwrap()];
-                // Aggregate in worker-index order: f32 summation order is
+                iter_latency = latency[closing_worker];
+                // Aggregate in shard-index order: f32 summation order is
                 // then independent of arrival order (γ=M reproduces BSP
-                // bit-for-bit; see prop_gamma_m_equals_bsp).
+                // bit-for-bit; see prop_gamma_m_equals_bsp) and matches
+                // the threaded runtime's order.
                 included_shards.sort_unstable();
             }
             (mode, None) => {
@@ -256,9 +313,20 @@ fn run_sync(
             }
         }
         if matches!(cfg.mode, SyncMode::Bsp) {
+            included_workers = responders.clone();
             for &w in &responders {
                 membership.record_contribution(w);
             }
+        }
+
+        if included_shards.is_empty() {
+            // Only possible transiently under elastic churn: the γ slots
+            // were all taken by zero-shard workers.  Mirror the threaded
+            // driver (worker/mod.rs): no update, no convergence
+            // observation — just advance the clock.
+            carryover.clear();
+            now += iter_latency + cluster.master_overhead;
+            continue;
         }
 
         // --- 3. compute included gradients ------------------------------
@@ -311,8 +379,10 @@ fn run_sync(
         carryover.clear();
         if reuse_late {
             for &w in &responders {
-                if !included_shards.contains(&w) {
-                    carryover.push(pool.grad(w, &theta, iter)?);
+                if !included_workers.contains(&w) {
+                    for &s in &assignment[w] {
+                        carryover.push(pool.grad(s, &theta, iter)?);
+                    }
                 }
             }
         }
@@ -336,7 +406,7 @@ fn run_sync(
                 eval_loss,
                 theta_err,
                 included: included_shards.len(),
-                abandoned: responders.len().saturating_sub(included_shards.len()),
+                abandoned: responders.len().saturating_sub(included_workers.len()),
                 alive: membership.alive(),
                 gamma,
                 grad_norm,
@@ -357,6 +427,8 @@ fn run_sync(
         total_contributions: membership.total_contributed(),
         total_abandoned: membership.total_abandoned(),
         crashes: membership.crashes(),
+        rejoins: membership.rejoins(),
+        rebalances: elastic.rebalances(),
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     })
@@ -527,6 +599,8 @@ fn run_async(
         total_contributions: membership.total_contributed(),
         total_abandoned: membership.total_abandoned(),
         crashes: membership.crashes(),
+        rejoins: membership.rejoins(),
+        rebalances: 0,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)
         } else {
@@ -747,6 +821,167 @@ mod tests {
         let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
         // Loose ξ + similar shards: adaptive γ should settle at 1.
         assert_eq!(rep.gamma, Some(1), "{:?}", rep.gamma);
+    }
+
+    #[test]
+    fn elastic_crash_and_rejoin_converges_like_static() {
+        // Acceptance: 2 of 8 workers leave at iteration 150 and rejoin at
+        // 250; with rebalancing on, the elastic run must reach the same
+        // loss tolerance as the fully static run.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(8);
+        // Stochastic latencies rotate which γ workers close the barrier, so
+        // every shard contributes over time in both runs.
+        let base = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        };
+        let static_cluster = base.clone();
+        let elastic_cluster = base
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[3, 7], 150, 250), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 5 })
+            .with_iters(800);
+
+        let mut pool1 = p.native_pool();
+        let st = run_virtual(&mut pool1, &static_cluster, &cfg, &p).unwrap();
+        let mut pool2 = p.native_pool();
+        let el = run_virtual(&mut pool2, &elastic_cluster, &cfg, &p).unwrap();
+
+        assert!(st.status.is_healthy());
+        assert!(el.status.is_healthy(), "{:?}", el.status);
+        assert_eq!(el.crashes, 2);
+        assert_eq!(el.rejoins, 2);
+        assert!(el.rebalances >= 2, "rebalances={}", el.rebalances);
+        let err_static = p.theta_err(&st.theta);
+        let err_elastic = p.theta_err(&el.theta);
+        assert!(err_static < 5e-2, "static theta_err={err_static}");
+        assert!(err_elastic < 5e-2, "elastic theta_err={err_elastic}");
+        // Same loss tolerance: both runs end within the same band of the
+        // exact optimum.
+        let gap_static = st.final_loss() - p.loss_star;
+        let gap_elastic = el.final_loss() - p.loss_star;
+        assert!(
+            gap_elastic < gap_static.abs().max(1e-4) * 10.0,
+            "elastic loss gap {gap_elastic} vs static {gap_static}"
+        );
+    }
+
+    #[test]
+    fn elastic_rebalance_keeps_all_rows_contributing() {
+        // While 2 of 6 workers are away, rebalancing must hand their shards
+        // to survivors: with γ = alive count, every iteration still
+        // aggregates all 6 shards.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[4, 5], 10, 30), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            // γ=4 of the ≥4 alive workers cover all 6 shards during the
+            // outage (each survivor owns 1-2 shards).
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.alive, 4, "iter {}", row.iter);
+                assert_eq!(row.included, 6, "iter {}: included {}", row.iter, row.included);
+            }
+        }
+        assert!(rep.rebalances >= 2);
+    }
+
+    #[test]
+    fn elastic_without_rebalance_orphans_shards() {
+        // Ablation: with rebalance_every = 0 the leavers' shards stop
+        // contributing (the seed behaviour the elastic subsystem removes).
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[4, 5], 10, 40), 0);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(30);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert_eq!(rep.rebalances, 0);
+        for row in rep.recorder.rows() {
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.included, 4, "iter {}: included {}", row.iter, row.included);
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_run_is_deterministic() {
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 2], 20, 45), 5);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(100);
+        let mut pool1 = p.native_pool();
+        let r1 = run_virtual(&mut pool1, &cluster, &cfg, &NoEval).unwrap();
+        let mut pool2 = p.native_pool();
+        let r2 = run_virtual(&mut pool2, &cluster, &cfg, &NoEval).unwrap();
+        assert_eq!(r1.theta, r2.theta);
+        assert_eq!(r1.total_abandoned, r2.total_abandoned);
+        assert_eq!(r1.rebalances, r2.rebalances);
+    }
+
+    #[test]
+    fn scheduled_leave_immune_to_rejoin_after_autorevive() {
+        // A FailureModel with `rejoin_after` (supervisor respawn) must not
+        // revive a *scheduled* leaver early: scheduled eviction is
+        // master-side and ends only at the scheduled join — same semantics
+        // as the threaded driver.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec {
+            workers: 4,
+            failure: crate::straggler::FailureModel {
+                crash_prob: 0.0,
+                transient_prob: 0.0,
+                rejoin_after: Some(3),
+            },
+            ..ClusterSpec::default()
+        }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[2], 5, 15), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 3 })
+            .with_iters(25);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            let expect_alive = if (5..15).contains(&row.iter) { 3 } else { 4 };
+            assert_eq!(
+                row.alive, expect_alive,
+                "iter {}: alive {} (rejoin_after revived a scheduled leaver?)",
+                row.iter, row.alive
+            );
+        }
+        assert_eq!(rep.crashes, 1);
+        assert_eq!(rep.rejoins, 1);
+    }
+
+    #[test]
+    fn async_mode_rejects_elastic_schedule() {
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[0], 5, 10), 1);
+        let cfg = base_cfg(&p).with_mode(SyncMode::Async { damping: 0.0 });
+        let mut pool = p.native_pool();
+        assert!(run_virtual(&mut pool, &cluster, &cfg, &NoEval).is_err());
     }
 
     #[test]

@@ -90,9 +90,16 @@ impl FailureState {
     }
 
     /// Force a crash at `iter` (used by the fault-tolerance example to kill
-    /// a specific worker at a specific time).
+    /// a specific worker at a specific time, and by scheduled elastic
+    /// leaves).
     pub fn force_crash(&mut self, iter: u64) {
         self.down_since = Some(iter);
+    }
+
+    /// Clear a down state (scheduled elastic join / supervisor respawn):
+    /// the worker responds normally again from the next `step`.
+    pub fn force_rejoin(&mut self) {
+        self.down_since = None;
     }
 }
 
@@ -136,6 +143,18 @@ mod tests {
         assert_eq!(st.step(12, &mut rng), FailureEvent::Down);
         assert_eq!(st.step(13, &mut rng), FailureEvent::Rejoined);
         assert_eq!(st.step(14, &mut rng), FailureEvent::Healthy);
+    }
+
+    #[test]
+    fn force_rejoin_revives_worker() {
+        let mut st = FailureState::new(FailureModel::none());
+        let mut rng = Pcg64::seeded(8);
+        st.force_crash(5);
+        assert!(st.is_down());
+        assert_eq!(st.step(6, &mut rng), FailureEvent::Down);
+        st.force_rejoin();
+        assert!(!st.is_down());
+        assert_eq!(st.step(7, &mut rng), FailureEvent::Healthy);
     }
 
     #[test]

@@ -5,10 +5,19 @@
 //! the `krr_worker_grad_loss_<config>` artifact — the L1 pallas kernel
 //! lowered through the L2 jax entry point — so the *entire* gradient math
 //! on the hot path runs inside XLA, exactly as Algorithm 3 prescribes.
+//!
+//! Elastic rebalancing means a worker may be handed any shard, not just
+//! its original one, so the per-worker [`WorkerCompute`] is
+//! **shard-addressable**: the native path computes straight from the shared
+//! shard table, and the XLA path uploads a shard's device buffers the first
+//! time it is assigned and keeps them resident after that (migrating a
+//! shard costs one host→device copy, then it's as fast as home data).
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::data::native::krr_shard_grad;
 use crate::data::shard::Shard;
 use crate::data::{ComputePool, GradResult};
 use crate::runtime::{literal, ArtifactSet, Engine, Executable};
@@ -124,7 +133,8 @@ impl ComputePool for XlaKrrPool {
 // ---------------------------------------------------------------------
 
 /// Pure-rust factory (no PJRT) — fast-path for tests/benches of the
-/// threaded runtime itself.
+/// threaded runtime itself.  Workers share the shard table (Arc), so any
+/// worker can compute any shard the rebalancer assigns it.
 pub struct NativeKrrFactory {
     shards: Arc<Vec<Shard>>,
     lam: f32,
@@ -144,20 +154,21 @@ impl NativeKrrFactory {
 }
 
 struct NativeWorker {
-    pool: crate::data::native::NativeKrrPool,
+    shards: Arc<Vec<Shard>>,
+    lam: f32,
+    resid: Vec<f32>,
 }
 
 impl WorkerCompute for NativeWorker {
     fn dim(&self) -> usize {
-        crate::data::ComputePool::dim(&self.pool)
+        self.shards.first().map(|s| s.l).unwrap_or(0)
     }
 
-    fn examples(&self) -> usize {
-        self.pool.shard_examples(0)
-    }
-
-    fn grad(&mut self, theta: &[f32], iter: u64) -> Result<GradResult> {
-        self.pool.grad(0, theta, iter)
+    fn grad_shard(&mut self, shard: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        let s = self.shards.get(shard).ok_or_else(|| {
+            Error::Cluster(format!("assigned unknown shard {shard}"))
+        })?;
+        Ok(krr_shard_grad(s, self.lam, theta, &mut self.resid))
     }
 }
 
@@ -174,12 +185,11 @@ impl ComputeFactory for NativeKrrFactory {
         self.shards[w].rows
     }
 
-    fn build(&self, w: usize) -> Result<Box<dyn WorkerCompute>> {
+    fn build(&self, _w: usize) -> Result<Box<dyn WorkerCompute>> {
         Ok(Box::new(NativeWorker {
-            pool: crate::data::native::NativeKrrPool::new(
-                vec![self.shards[w].clone()],
-                self.lam,
-            ),
+            shards: Arc::clone(&self.shards),
+            lam: self.lam,
+            resid: Vec::new(),
         }))
     }
 }
@@ -226,7 +236,11 @@ impl XlaKrrFactory {
 struct XlaWorker {
     engine: Engine,
     exe: Executable,
-    bufs: ShardBuffers,
+    /// Shared host-side shard table; device buffers upload on first
+    /// assignment and stay resident (keyed by shard index).
+    shards: Arc<Vec<Shard>>,
+    bufs: BTreeMap<usize, ShardBuffers>,
+    lam: f32,
     dim: usize,
 }
 
@@ -235,12 +249,23 @@ impl WorkerCompute for XlaWorker {
         self.dim
     }
 
-    fn examples(&self) -> usize {
-        self.bufs.rows
+    fn retain_shards(&mut self, shards: &[usize]) {
+        // Drop device buffers for shards rebalanced away, so the cache is
+        // bounded by the current assignment instead of every shard ever
+        // assigned (re-adoption re-pays exactly one host→device upload).
+        self.bufs.retain(|s, _| shards.contains(s));
     }
 
-    fn grad(&mut self, theta: &[f32], _iter: u64) -> Result<GradResult> {
-        xla_grad(&self.engine, &self.exe, &self.bufs, theta)
+    fn grad_shard(&mut self, shard: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+        if !self.bufs.contains_key(&shard) {
+            let s = self.shards.get(shard).ok_or_else(|| {
+                Error::Cluster(format!("assigned unknown shard {shard}"))
+            })?;
+            let b = shard_buffers(&self.engine, s, self.lam)?;
+            self.bufs.insert(shard, b);
+        }
+        let bufs = self.bufs.get(&shard).expect("just inserted");
+        xla_grad(&self.engine, &self.exe, bufs, theta)
     }
 }
 
@@ -261,11 +286,15 @@ impl ComputeFactory for XlaKrrFactory {
         let artifacts = ArtifactSet::open(&self.artifact_dir)?;
         let engine = Engine::cpu()?;
         let exe = artifacts.load(&engine, &format!("krr_worker_grad_loss_{}", self.config))?;
-        let bufs = shard_buffers(&engine, &self.shards[w], self.lam)?;
+        // Pre-upload the worker's home shard; others upload on demand.
+        let mut bufs = BTreeMap::new();
+        bufs.insert(w, shard_buffers(&engine, &self.shards[w], self.lam)?);
         Ok(Box::new(XlaWorker {
             engine,
             exe,
+            shards: Arc::clone(&self.shards),
             bufs,
+            lam: self.lam,
             dim: self.dim,
         }))
     }

@@ -3,10 +3,21 @@
 //!
 //! This is the production-shaped path: each worker thread owns its own PJRT
 //! engine (the `xla` client is not `Send`), receives θ broadcasts over a
-//! channel, computes its shard gradient through the AOT executable, sleeps
-//! its injected straggler delay, and reports back.  The master measures
-//! *wall-clock* — the examples use this to demonstrate the paper's actual
-//! time savings, while benches use the virtual simulator.
+//! channel, computes its assigned shards' gradients through the AOT
+//! executable, sleeps its injected straggler delay, and reports back.  The
+//! master measures *wall-clock* — the examples use this to demonstrate the
+//! paper's actual time savings, while benches use the virtual simulator.
+//!
+//! **Elastic membership** executes the same plan as the virtual driver:
+//! scheduled leave/join events ([`crate::cluster::ElasticSchedule`]) apply
+//! at iteration boundaries, and with `rebalance_every > 0` the master
+//! re-plans shard ownership ([`crate::data::plan_rebalance`]) and ships
+//! each worker its current shard list inside every `Work` message.
+//! Contributions aggregate in ascending shard order, matching the
+//! simulator bit-for-bit on the fold order.  A scheduled leave is a
+//! master-side eviction — the slave thread survives, so a later scheduled
+//! join simply re-admits it.  (Joining a worker that *stochastically*
+//! crashed is not supported: its thread has stopped serving work.)
 
 pub mod compute;
 pub mod slave;
@@ -17,7 +28,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cluster::{ClusterSpec, MasterMsg, Membership, WorkerMsg};
+use crate::cluster::{ClusterSpec, ElasticRuntime, MasterMsg, Membership, ShardGrad, WorkerMsg};
 use crate::coordinator::aggregator::{aggregate, Contribution};
 use crate::coordinator::barrier::{Admission, PartialBarrier};
 use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
@@ -29,10 +40,17 @@ use crate::sim::EvalHooks;
 use crate::{Error, Result};
 
 /// Worker-side gradient computation (built inside the worker thread).
+/// Shard-addressable: under elastic rebalancing a worker computes whatever
+/// shards the master currently assigns it.
 pub trait WorkerCompute {
     fn dim(&self) -> usize;
-    fn examples(&self) -> usize;
-    fn grad(&mut self, theta: &[f32], iter: u64) -> Result<GradResult>;
+    fn grad_shard(&mut self, shard: usize, theta: &[f32], iter: u64) -> Result<GradResult>;
+    /// Hint: the worker's current assignment.  Implementations holding
+    /// per-shard resources (device buffers) may release everything not in
+    /// `shards`; migrating a shard back later just re-pays its one upload.
+    fn retain_shards(&mut self, shards: &[usize]) {
+        let _ = shards;
+    }
 }
 
 /// Builds per-worker [`WorkerCompute`] instances.  `Sync` because the
@@ -62,6 +80,7 @@ pub fn run_real(
             cluster.workers
         )));
     }
+    crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
     if cfg.mode.is_async() {
         return run_real_async(cluster, cfg, factory, hooks);
     }
@@ -91,6 +110,11 @@ fn run_real_sync(
     let mut rec = Recorder::new();
     let mut membership = Membership::new(m);
     let mut status = RunStatus::Completed;
+    // Shard ownership + rebalance state, shared logic with the virtual
+    // driver.  A scheduled Leave here is purely master-side (the slave
+    // thread survives and is simply not broadcast to), so no extra
+    // failure-state bookkeeping is needed in the event hook.
+    let mut elastic = ElasticRuntime::new(&membership);
 
     std::thread::scope(|scope| -> Result<()> {
         // --- spawn slaves ------------------------------------------------
@@ -109,7 +133,22 @@ fn run_real_sync(
 
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
+            // Elastic membership events land at this boundary, in schedule
+            // order — identical semantics to the virtual driver.
+            let rebalanced = elastic.at_boundary(
+                iter,
+                &cluster.elastic,
+                cluster.rebalance_every,
+                &mut membership,
+                |_| {},
+            )?;
+            if rebalanced {
+                log::debug!("iter {iter}: shard ownership rebalanced");
+            }
+
             let theta_arc = Arc::new(theta.clone());
+            // One O(shards) pass instead of an O(shards) scan per worker.
+            let mut assignment = elastic.ownership.grouped();
             let mut broadcast = 0usize;
             for w in 0..m {
                 if membership.is_alive(w) {
@@ -117,6 +156,7 @@ fn run_real_sync(
                         .send(MasterMsg::Work {
                             iter,
                             theta: Arc::clone(&theta_arc),
+                            shards: Arc::new(std::mem::take(&mut assignment[w])),
                         })
                         .is_ok()
                     {
@@ -142,7 +182,7 @@ fn run_real_sync(
                 }
             };
             let mut barrier = PartialBarrier::new(iter, m, g_target.max(1));
-            let mut grads: Vec<GradResult> = Vec::with_capacity(g_target);
+            let mut grads: Vec<ShardGrad> = Vec::with_capacity(g_target);
 
             // Collect until the barrier closes.
             while !barrier.is_closed() {
@@ -161,18 +201,12 @@ fn run_real_sync(
                     WorkerMsg::Grad {
                         worker,
                         iter: msg_iter,
-                        grad,
-                        loss_sum,
-                        examples,
+                        shards,
                         ..
                     } => match barrier.offer(worker, msg_iter) {
                         Admission::Included | Admission::IncludedAndClosed => {
                             membership.record_contribution(worker);
-                            grads.push(GradResult {
-                                grad,
-                                loss_sum,
-                                examples,
-                            });
+                            grads.extend(shards);
                         }
                         Admission::Abandoned | Admission::Stale => {
                             membership.record_abandoned(worker);
@@ -221,6 +255,9 @@ fn run_real_sync(
                 }
             }
 
+            // Aggregate in ascending shard order — the same fold order the
+            // virtual simulator uses, so both drivers' f32 sums match.
+            grads.sort_by_key(|g| g.shard);
             let contribs: Vec<Contribution<'_>> = grads
                 .iter()
                 .map(|g| Contribution {
@@ -288,6 +325,8 @@ fn run_real_sync(
         total_contributions: membership.total_contributed(),
         total_abandoned: membership.total_abandoned(),
         crashes: membership.crashes(),
+        rejoins: membership.rejoins(),
+        rebalances: elastic.rebalances(),
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     })
@@ -330,6 +369,7 @@ fn run_real_async(
             tx.send(MasterMsg::Work {
                 iter: 0,
                 theta: Arc::new(theta.clone()),
+                shards: Arc::new(vec![w]),
             })
             .expect("fresh channel");
             work_txs.push(tx);
@@ -351,13 +391,11 @@ fn run_real_async(
                 }
             };
             match msg {
-                WorkerMsg::Grad {
-                    worker,
-                    grad,
-                    loss_sum,
-                    examples,
-                    ..
-                } => {
+                WorkerMsg::Grad { worker, shards, .. } => {
+                    // Async workers always compute exactly their own shard.
+                    let Some(sg) = shards.into_iter().next() else {
+                        continue;
+                    };
                     let staleness = version - version_given[worker];
                     staleness_sum += staleness as f64;
                     membership.record_contribution(worker);
@@ -366,7 +404,7 @@ fn run_real_async(
                     } else {
                         1.0
                     };
-                    scaled.copy_from_slice(&grad);
+                    scaled.copy_from_slice(&sg.grad);
                     if weight != 1.0 {
                         vec_ops::scale(&mut scaled, weight);
                     }
@@ -377,10 +415,11 @@ fn run_real_async(
                     let _ = work_txs[worker].send(MasterMsg::Work {
                         iter: updates,
                         theta: Arc::new(theta.clone()),
+                        shards: Arc::new(vec![worker]),
                     });
 
-                    if let Some(ls) = loss_sum {
-                        let shard_loss = cfg.loss_form.assemble(ls, examples, &theta);
+                    if let Some(ls) = sg.loss_sum {
+                        let shard_loss = cfg.loss_form.assemble(ls, sg.examples, &theta);
                         loss_ema = Some(match loss_ema {
                             None => shard_loss,
                             Some(p) => 0.9 * p + 0.1 * shard_loss,
@@ -435,6 +474,8 @@ fn run_real_async(
         total_contributions: membership.total_contributed(),
         total_abandoned: membership.total_abandoned(),
         crashes: membership.crashes(),
+        rejoins: membership.rejoins(),
+        rebalances: 0,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)
         } else {

@@ -1,9 +1,15 @@
 //! Slave thread body (Algorithm 3 + straggler/fault injection).
+//!
+//! Elastic clusters: each `Work` message names the shards this worker
+//! currently owns (the master re-plans ownership at iteration boundaries),
+//! so the slave computes one gradient per assigned shard and reports them
+//! in a single `Grad` message.  Injected straggle scales with the number of
+//! assigned shards, mirroring the virtual driver's serial-execution model.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::cluster::{MasterMsg, WorkerMsg};
+use crate::cluster::{MasterMsg, ShardGrad, WorkerMsg};
 use crate::straggler::{FailureEvent, FailureState, StragglerProfile};
 use crate::util::rng::Pcg64;
 use crate::worker::ComputeFactory;
@@ -33,9 +39,9 @@ pub fn worker_main(
     let mut fstate = FailureState::new(profile.failure.clone());
 
     while let Ok(msg) = rx.recv() {
-        let (mut iter, mut theta) = match msg {
+        let (mut iter, mut theta, mut shards) = match msg {
             MasterMsg::Shutdown => break,
-            MasterMsg::Work { iter, theta } => (iter, theta),
+            MasterMsg::Work { iter, theta, shards } => (iter, theta, shards),
         };
         // A straggling slave may find newer broadcasts already queued; jump
         // to the freshest θ (Algorithm 3 computes on whatever θ_t it holds —
@@ -47,9 +53,10 @@ pub fn worker_main(
                     shutdown = true;
                     break;
                 }
-                MasterMsg::Work { iter: i2, theta: t2 } => {
+                MasterMsg::Work { iter: i2, theta: t2, shards: s2 } => {
                     iter = i2;
                     theta = t2;
+                    shards = s2;
                 }
             }
         }
@@ -74,26 +81,43 @@ pub fn worker_main(
         }
 
         // Injected straggle: chronic slow factor applies to the base compute
-        // budget, stochastic delay on top (see DESIGN.md §3).
-        let extra = profile.base_compute * (profile.slow_factor - 1.0).max(0.0)
-            + profile.delay.sample(&mut delay_rng);
+        // budget, stochastic delay on top (see DESIGN.md §3).  Both scale
+        // with the number of assigned shards (serial execution), matching
+        // the virtual driver's `latency × load` model.
+        let extra = (profile.base_compute * (profile.slow_factor - 1.0).max(0.0)
+            + profile.delay.sample(&mut delay_rng))
+            * shards.len().max(1) as f64;
 
+        compute.retain_shards(&shards);
         let t0 = Instant::now();
-        let result = compute.grad(&theta, iter);
+        let mut results: Vec<ShardGrad> = Vec::with_capacity(shards.len());
+        let mut fatal: Option<String> = None;
+        for &s in shards.iter() {
+            match compute.grad_shard(s, &theta, iter) {
+                Ok(res) => results.push(ShardGrad {
+                    shard: s,
+                    grad: res.grad,
+                    loss_sum: res.loss_sum,
+                    examples: res.examples,
+                }),
+                Err(e) => {
+                    fatal = Some(format!("{e}"));
+                    break;
+                }
+            }
+        }
         let compute_secs = t0.elapsed().as_secs_f64();
         if extra > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(extra));
         }
 
-        match result {
-            Ok(res) => {
+        match fatal {
+            None => {
                 if tx
                     .send(WorkerMsg::Grad {
                         worker: w,
                         iter,
-                        grad: res.grad,
-                        loss_sum: res.loss_sum,
-                        examples: res.examples,
+                        shards: results,
                         compute_secs,
                     })
                     .is_err()
@@ -101,11 +125,8 @@ pub fn worker_main(
                     break; // master gone
                 }
             }
-            Err(e) => {
-                let _ = tx.send(WorkerMsg::Fatal {
-                    worker: w,
-                    error: format!("{e}"),
-                });
+            Some(error) => {
+                let _ = tx.send(WorkerMsg::Fatal { worker: w, error });
                 return;
             }
         }

@@ -1,0 +1,158 @@
+//! Cross-driver parity: given the same deterministic straggler/failure/join
+//! trace, the virtual simulator (`sim::run_virtual`) and the threaded
+//! runtime (`Coordinator::run_real`) must make identical inclusion /
+//! abandonment decisions and produce matching θ trajectories.
+//!
+//! Stochastic delay models cannot be compared across drivers (each driver
+//! owns its RNG streams), so parity traces use *deterministic* timing:
+//! per-worker chronic slow factors spaced far enough apart (≥ 5 ms) that
+//! wall-clock arrival order in the threaded runtime equals the virtual
+//! latency order.  Gradient math is shared (`krr_shard_grad`) and both
+//! drivers fold contributions in ascending shard order, so θ agrees to
+//! f32 round-off.
+
+use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
+use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, RunReport, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::worker::NativeKrrFactory;
+
+fn problem(machines: usize) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "parity".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 17,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn run_both(p: &KrrProblem, cluster: &ClusterSpec, cfg: &RunConfig) -> (RunReport, RunReport) {
+    let mut pool = p.native_pool();
+    let virt = sim::run_virtual(&mut pool, cluster, cfg, &NoEval).unwrap();
+    let coord = Coordinator::new(cluster.clone(), cfg.clone()).unwrap();
+    let factory = NativeKrrFactory::for_problem(p);
+    let real = coord.run_real(&factory, &NoEval).unwrap();
+    (virt, real)
+}
+
+fn max_theta_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn parity_elastic_join_trace_same_decisions_and_theta() {
+    // 2 of 4 workers leave at iteration 4 and rejoin at 8; rebalancing on;
+    // γ = M so every responder is included and neither driver can drift.
+    let m = 4;
+    let p = problem(m);
+    let iters = 14;
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        // Deterministic, well-separated per-worker latencies.
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 5,
+        ..ClusterSpec::default()
+    }
+    .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 3], 4, 8), 1);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: m },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    // Same membership history…
+    assert_eq!(virt.crashes, 2);
+    assert_eq!(real.crashes, 2);
+    assert_eq!(virt.rejoins, 2);
+    assert_eq!(real.rejoins, 2);
+    assert_eq!(virt.rebalances, real.rebalances);
+
+    // …identical per-iteration inclusion decisions…
+    assert_eq!(virt.recorder.len(), real.recorder.len());
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.iter, rr.iter);
+        assert_eq!(
+            rv.included, rr.included,
+            "iter {}: virtual included {} shards, real {}",
+            rv.iter, rv.included, rr.included
+        );
+        assert_eq!(rv.alive, rr.alive, "iter {}", rv.iter);
+    }
+    assert_eq!(virt.total_contributions, real.total_contributions);
+    assert_eq!(virt.total_abandoned, 0);
+    assert_eq!(real.total_abandoned, 0);
+
+    // …and matching θ (same shared gradient kernel, same fold order).
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
+#[test]
+fn parity_straggler_trace_same_abandonment_decisions() {
+    // One chronically 12× slow worker under γ = 3 of 4: both drivers must
+    // abandon exactly that worker's shard every iteration (it never lands
+    // inside the barrier), and agree on θ.
+    let m = 4;
+    let p = problem(m);
+    let iters = 20;
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 12.0)],
+        seed: 9,
+        ..ClusterSpec::default()
+    };
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 3 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    // Both drivers include exactly workers {0,1,2} every iteration: the
+    // slow worker's shard never contributes.
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.included, 3, "virtual iter {}", rv.iter);
+        assert_eq!(rr.included, 3, "real iter {}", rr.iter);
+    }
+    assert_eq!(virt.total_contributions, 3 * iters);
+    assert_eq!(real.total_contributions, 3 * iters);
+    // The virtual driver abandons the straggler once per iteration; the
+    // threaded runtime abandons each of its (less frequent, because it
+    // skips to the freshest broadcast) stale arrivals — both must abandon
+    // *something*, and only worker 3's results.
+    assert_eq!(virt.total_abandoned, iters);
+    assert!(real.total_abandoned > 0, "straggler never went stale");
+
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}

@@ -1,0 +1,155 @@
+//! Property tests for shard-ownership invariants under elastic
+//! rebalancing (own helper — proptest is not in the offline vendor set).
+//!
+//! The contract every rebalance plan must honour:
+//! * **conservation** — the total row count across workers is unchanged;
+//! * **exclusivity** — no row (shard) is owned by two workers;
+//! * **liveness** — after applying the plan, every owner is alive
+//!   (whenever at least one worker is);
+//! * **balance** — alive loads differ by at most one shard;
+//! * **identity** — `split_even`'s layout round-trips through rebalance to
+//!   itself when membership is unchanged.
+
+use hybriditer::data::{plan_rebalance, OwnershipMap};
+use hybriditer::util::proptest::check;
+use hybriditer::util::rng::Pcg64;
+
+/// Draw a random ownership map (every shard assigned to some worker) plus
+/// a random liveness mask.
+fn random_state(rng: &mut Pcg64) -> (OwnershipMap, Vec<bool>) {
+    let workers = 1 + rng.below(12) as usize;
+    let shards = 1 + rng.below(24) as usize;
+    let mut map = OwnershipMap::even(shards, workers);
+    // Scramble: random reassignments keep the "exactly one owner" shape
+    // but produce arbitrary load skew.
+    for s in 0..shards {
+        map.reassign(s, rng.below(workers as u64) as usize);
+    }
+    let alive: Vec<bool> = (0..workers).map(|_| rng.next_f64() < 0.7).collect();
+    (map, alive)
+}
+
+/// Reconstruct per-worker shard sets and check conservation + exclusivity.
+fn check_partition(map: &OwnershipMap) -> Result<(), String> {
+    let mut seen = vec![0usize; map.shards()];
+    let mut total = 0usize;
+    for w in 0..map.workers() {
+        for s in map.shards_of(w) {
+            seen[s] += 1;
+            total += 1;
+        }
+    }
+    if total != map.shards() {
+        return Err(format!("{total} shard assignments for {} shards", map.shards()));
+    }
+    if let Some(s) = seen.iter().position(|&c| c != 1) {
+        return Err(format!("shard {s} owned {} times", seen[s]));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rebalance_preserves_rows_and_exclusive_ownership() {
+    check("rebalance_conservation", 400, |rng| {
+        let (mut map, alive) = random_state(rng);
+        let before_shards = map.shards();
+        let plan = plan_rebalance(&map, &alive);
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        if map.shards() != before_shards {
+            return Err(format!("shards {} -> {}", before_shards, map.shards()));
+        }
+        check_partition(&map)
+    });
+}
+
+#[test]
+fn prop_rebalance_owners_alive_and_loads_level() {
+    check("rebalance_liveness_balance", 400, |rng| {
+        let (mut map, alive) = random_state(rng);
+        let plan = plan_rebalance(&map, &alive);
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        if !alive.iter().any(|&a| a) {
+            // Nobody alive: the plan must be empty (nowhere to move work).
+            if !plan.is_empty() {
+                return Err("plan non-empty with everyone dead".into());
+            }
+            return Ok(());
+        }
+        for s in 0..map.shards() {
+            if !alive[map.owner(s)] {
+                return Err(format!("shard {s} owned by dead worker {}", map.owner(s)));
+            }
+        }
+        let loads: Vec<usize> = (0..map.workers())
+            .filter(|&w| alive[w])
+            .map(|w| map.load(w))
+            .collect();
+        let (lo, hi) = (
+            *loads.iter().min().unwrap(),
+            *loads.iter().max().unwrap(),
+        );
+        if hi - lo > 1 {
+            return Err(format!("loads not level: min {lo}, max {hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_identity_when_membership_unchanged() {
+    // split_even's layout (one shard per worker) must round-trip through
+    // rebalance to the identity whenever membership is unchanged.
+    check("rebalance_identity", 200, |rng| {
+        let m = 1 + rng.below(16) as usize;
+        let mut map = OwnershipMap::identity(m);
+        let plan = plan_rebalance(&map, &vec![true; m]);
+        if !plan.is_empty() {
+            return Err(format!("identity map produced {} moves", plan.len()));
+        }
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        if map != OwnershipMap::identity(m) {
+            return Err("map changed without membership change".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_is_stable_fixpoint() {
+    // Applying plan_rebalance twice on an unchanged mask: the second plan
+    // must be empty (rebalancing is idempotent at a boundary).
+    check("rebalance_fixpoint", 300, |rng| {
+        let (mut map, alive) = random_state(rng);
+        let plan = plan_rebalance(&map, &alive);
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        let again = plan_rebalance(&map, &alive);
+        if !again.is_empty() {
+            return Err(format!("second plan has {} moves", again.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crash_then_rejoin_roundtrips_to_balanced() {
+    // Leave + rebalance + rejoin + rebalance must restore a level layout
+    // covering every shard exactly once (not necessarily the original
+    // placement — levelling is allowed to leave adopted shards in place).
+    check("crash_rejoin_roundtrip", 200, |rng| {
+        let m = 2 + rng.below(10) as usize;
+        let mut map = OwnershipMap::identity(m);
+        let dead = rng.below(m as u64) as usize;
+        let mut alive = vec![true; m];
+        alive[dead] = false;
+        map.apply(&plan_rebalance(&map, &alive)).map_err(|e| e.to_string())?;
+        alive[dead] = true;
+        map.apply(&plan_rebalance(&map, &alive)).map_err(|e| e.to_string())?;
+        check_partition(&map)?;
+        for w in 0..m {
+            if map.load(w) != 1 {
+                return Err(format!("worker {w} load {} after roundtrip", map.load(w)));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,94 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Provides the subset the examples use: [`Error`] (a boxed dynamic error
+//! that any `std::error::Error` converts into), [`Result`], and the
+//! [`ensure!`]/[`anyhow!`] macros.  Like the real crate, `Error` does NOT
+//! implement `std::error::Error` itself (that would conflict with the
+//! blanket `From` conversion).
+
+use std::fmt;
+
+/// Boxed dynamic error with a readable `Debug` (what `fn main() ->
+/// anyhow::Result<()>` prints on failure).
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string().into())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(Box::new(e))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        while let Some(s) = source {
+            write!(f, "\n\ncaused by: {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => { $crate::Error::msg(format!($($arg)+)) };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => { return Err($crate::anyhow!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn converts_std_errors() {
+        let e: Error = io_err().into();
+        assert!(format!("{e}").contains("boom"));
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(format!("{:?}", check(-1).unwrap_err()).contains("-1"));
+    }
+}
