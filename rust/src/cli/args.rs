@@ -227,6 +227,18 @@ impl Parsed {
             .map_err(|_| Error::Config(format!("--{name}: expected float, got '{}'", self.get(name))))
     }
 
+    /// Like [`Parsed::get_f64`], but the empty string — the conventional
+    /// default of "unset" override options — is `None`.
+    pub fn get_opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            return Ok(None);
+        }
+        raw.parse().map(Some).map_err(|_| {
+            Error::Config(format!("--{name}: expected float, got '{raw}'"))
+        })
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -291,6 +303,17 @@ mod tests {
             .parse(&sv(&["--workers", "abc", "--mode", "bsp", "c"]))
             .unwrap();
         assert!(p.get_usize("workers").is_err());
+    }
+
+    #[test]
+    fn opt_f64_treats_empty_as_unset() {
+        let spec = ArgSpec::new("prog", "t").opt("drop-prob", "", "override");
+        let p = spec.parse(&sv(&[])).unwrap();
+        assert_eq!(p.get_opt_f64("drop-prob").unwrap(), None);
+        let p = spec.parse(&sv(&["--drop-prob", "0.25"])).unwrap();
+        assert_eq!(p.get_opt_f64("drop-prob").unwrap(), Some(0.25));
+        let p = spec.parse(&sv(&["--drop-prob", "x"])).unwrap();
+        assert!(p.get_opt_f64("drop-prob").is_err());
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub enum MasterMsg {
         theta: Arc<Vec<f32>>,
         /// Shards this worker currently owns (ascending shard index).
         shards: Arc<Vec<usize>>,
+        /// Injected network latency (seconds) this roundtrip owes, decided
+        /// master-side by [`crate::net::NetShim`]; the slave adds it to its
+        /// straggler sleep so wall-clock arrivals match the virtual
+        /// driver's `down + compute + up` timing model.
+        net_delay: f64,
     },
     /// Orderly shutdown.
     Shutdown,
@@ -80,6 +85,7 @@ mod tests {
                 iter: 1,
                 theta: Arc::clone(&theta),
                 shards: Arc::clone(&shards),
+                net_delay: 0.0,
             })
             .collect();
         assert_eq!(Arc::strong_count(&theta), 9);

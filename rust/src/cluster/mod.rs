@@ -190,25 +190,29 @@ impl ElasticRuntime {
     }
 
     /// Apply iteration-boundary elastic events and, if due, a rebalance
-    /// plan.  `on_event` fires after each event's membership transition —
-    /// drivers hook their failure-state bookkeeping there (the virtual
-    /// driver force-crashes/revives its per-worker `FailureState`s; the
-    /// threaded driver needs nothing).  Returns whether a non-empty plan
-    /// was applied.
+    /// plan.  `on_event` fires *before* each event's membership transition
+    /// and can veto it by returning `false` — the threaded driver uses
+    /// this to refuse re-admitting a worker whose thread simulated a
+    /// stochastic crash and stopped serving (a "ghost" join).  Drivers
+    /// hook their failure-state bookkeeping in the same closure (the
+    /// virtual driver force-crashes/revives its per-worker
+    /// `FailureState`s).  Returns whether a non-empty plan was applied.
     pub fn at_boundary(
         &mut self,
         iter: u64,
         schedule: &ElasticSchedule,
         rebalance_every: u64,
         membership: &mut Membership,
-        mut on_event: impl FnMut(&ElasticEvent),
+        mut on_event: impl FnMut(&ElasticEvent) -> bool,
     ) -> Result<bool> {
         for ev in schedule.at(iter) {
+            if !on_event(ev) {
+                continue;
+            }
             match ev.kind {
                 ElasticKind::Leave => membership.mark_down(ev.worker),
                 ElasticKind::Join => membership.mark_alive(ev.worker),
             }
-            on_event(ev);
         }
         let mut rebalanced = false;
         if rebalance_every > 0
@@ -265,7 +269,12 @@ pub struct ClusterSpec {
     /// behaviour); `k > 0` re-plans ownership every `k` iterations *and*
     /// whenever the membership epoch changed since the last plan.
     pub rebalance_every: u64,
-    /// RNG seed for all injected randomness (delays, failures).
+    /// Coordinator↔worker network model (loss, delay, duplication,
+    /// scripted partitions).  [`crate::net::NetSpec::ideal`] — the default
+    /// — reproduces pre-transport behaviour bit for bit.
+    pub net: crate::net::NetSpec,
+    /// RNG seed for all injected randomness (delays, failures, and the
+    /// per-message network realizations).
     pub seed: u64,
 }
 
@@ -281,6 +290,7 @@ impl Default for ClusterSpec {
             master_overhead: 0.0005,
             elastic: ElasticSchedule::default(),
             rebalance_every: 0,
+            net: crate::net::NetSpec::ideal(),
             seed: 0x5eed,
         }
     }
@@ -326,6 +336,12 @@ impl ClusterSpec {
     pub fn with_elastic(mut self, schedule: ElasticSchedule, rebalance_every: u64) -> Self {
         self.elastic = schedule;
         self.rebalance_every = rebalance_every;
+        self
+    }
+
+    /// Convenience: attach a network model.
+    pub fn with_net(mut self, net: crate::net::NetSpec) -> Self {
+        self.net = net;
         self
     }
 }
@@ -418,14 +434,14 @@ mod tests {
 
         // Iter 0: no events, balanced → no plan even on the cadence tick.
         let r = rt
-            .at_boundary(0, &schedule, 1, &mut membership, |e| seen.push(*e))
+            .at_boundary(0, &schedule, 1, &mut membership, |e| { seen.push(*e); true })
             .unwrap();
         assert!(!r);
         assert!(seen.is_empty());
 
         // Iter 2: leave fires → shard 3 adopted, plan applied.
         let r = rt
-            .at_boundary(2, &schedule, 1, &mut membership, |e| seen.push(*e))
+            .at_boundary(2, &schedule, 1, &mut membership, |e| { seen.push(*e); true })
             .unwrap();
         assert!(r);
         assert_eq!(seen.len(), 1);
@@ -434,10 +450,10 @@ mod tests {
         assert_eq!(rt.rebalances(), 1);
 
         // Iter 3: unchanged membership, already level → empty plan.
-        assert!(!rt.at_boundary(3, &schedule, 1, &mut membership, |_| {}).unwrap());
+        assert!(!rt.at_boundary(3, &schedule, 1, &mut membership, |_| true).unwrap());
 
         // Iter 5: join fires → load levels back onto worker 3.
-        let r = rt.at_boundary(5, &schedule, 1, &mut membership, |_| {}).unwrap();
+        let r = rt.at_boundary(5, &schedule, 1, &mut membership, |_| true).unwrap();
         assert!(r);
         assert_eq!(membership.alive(), 4);
         assert_eq!(rt.ownership.load(3), 1);
@@ -450,7 +466,7 @@ mod tests {
         let mut rt = ElasticRuntime::new(&membership);
         let schedule = ElasticSchedule::crash_and_rejoin(&[2], 1, 4);
         // rebalance_every = 0: events still apply, ownership never moves.
-        assert!(!rt.at_boundary(1, &schedule, 0, &mut membership, |_| {}).unwrap());
+        assert!(!rt.at_boundary(1, &schedule, 0, &mut membership, |_| true).unwrap());
         assert_eq!(membership.alive(), 2);
         assert_eq!(rt.ownership.load(2), 1);
         assert_eq!(rt.rebalances(), 0);

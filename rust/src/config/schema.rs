@@ -32,6 +32,16 @@
 //! schedule = "2:leave@30,2:join@50"   # scripted membership trace
 //! rebalance_every = 1                 # 0 disables shard rebalancing
 //!
+//! [net]
+//! drop_prob = 0.05      # per-message loss on every link
+//! dup_prob = 0.0        # per-reply duplication probability
+//! dup_lag = 0.001       # duplicate copy lag, seconds
+//! delay = "none"        # link latency: same kinds as straggler.delay
+//! partitions = "3-5@40..60"           # scripted partition windows
+//! slow_link = 3         # one worker behind a chronically slow link...
+//! slow_link_secs = 0.05 # ...with this constant one-way latency
+//! salt = 0              # extra seed salt for the per-message streams
+//!
 //! [optimizer]
 //! kind = "sgd"          # sgd | momentum | nesterov | adam | lbfgs | cg
 //! eta = 0.5
@@ -49,6 +59,7 @@
 use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
 use crate::coordinator::{AggregatorKind, LossForm, RunConfig, StopRule, SyncMode};
 use crate::data::KrrProblemSpec;
+use crate::net::{LinkModel, NetSpec};
 use crate::optim::{EtaSchedule, OptimizerKind};
 use crate::straggler::{DelayModel, FailureModel};
 use crate::{Error, Result};
@@ -144,6 +155,34 @@ impl ExperimentConfig {
         elastic.validate(machines)?;
         let rebalance_every = v.opt_u64("elastic.rebalance_every", 0);
 
+        // --- [net] -------------------------------------------------------
+        let net_sub = v.get("net").cloned().unwrap_or_else(Value::empty_table);
+        let default_link = LinkModel {
+            latency: DelayModel::from_kind(v.opt_str("net.delay", "none"), &net_sub)?,
+            drop_prob: v.opt_f64("net.drop_prob", 0.0),
+            dup_prob: v.opt_f64("net.dup_prob", 0.0),
+            dup_lag: v.opt_f64("net.dup_lag", 0.001),
+        };
+        let mut overrides: Vec<(usize, LinkModel)> = Vec::new();
+        if let Some(w) = v.get("net.slow_link").and_then(Value::as_usize) {
+            overrides.push((
+                w,
+                LinkModel {
+                    latency: DelayModel::Constant {
+                        secs: v.opt_f64("net.slow_link_secs", 0.05),
+                    },
+                    ..default_link.clone()
+                },
+            ));
+        }
+        let net = NetSpec {
+            default_link,
+            overrides,
+            partitions: NetSpec::parse_partitions(v.opt_str("net.partitions", ""))?,
+            salt: v.opt_u64("net.salt", 0),
+        };
+        net.validate(machines)?;
+
         let cluster = ClusterSpec {
             workers: machines,
             base_compute: v.opt_f64("straggler.base_compute", 0.01),
@@ -158,6 +197,7 @@ impl ExperimentConfig {
             master_overhead: v.opt_f64("straggler.master_overhead", 0.0005),
             elastic,
             rebalance_every,
+            net,
             seed: v.opt_u64("straggler.seed", 0x5eed),
         }
         .with_slow_tail(slow_n.min(machines), slow_factor);
@@ -375,6 +415,68 @@ backend = "native"
         let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
         assert!(cfg.cluster.elastic.is_empty());
         assert_eq!(cfg.cluster.rebalance_every, 0);
+    }
+
+    #[test]
+    fn net_section_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+[problem]
+machines = 8
+
+[net]
+drop_prob = 0.1
+dup_prob = 0.05
+delay = "constant"
+secs = 0.002
+partitions = "3-5@40..60;0@10..20"
+slow_link = 7
+slow_link_secs = 0.03
+salt = 9
+"#,
+        )
+        .unwrap();
+        let net = &cfg.cluster.net;
+        assert!(!net.is_ideal());
+        assert_eq!(net.default_link.drop_prob, 0.1);
+        assert_eq!(net.default_link.dup_prob, 0.05);
+        assert_eq!(
+            net.default_link.latency,
+            crate::straggler::DelayModel::Constant { secs: 0.002 }
+        );
+        assert_eq!(net.partitions.len(), 2);
+        assert_eq!(net.partitions[0].workers, vec![3, 4, 5]);
+        assert_eq!(net.overrides.len(), 1);
+        assert_eq!(net.overrides[0].0, 7);
+        assert_eq!(
+            net.overrides[0].1.latency,
+            crate::straggler::DelayModel::Constant { secs: 0.03 }
+        );
+        // The override inherits the default link's loss behaviour.
+        assert_eq!(net.overrides[0].1.drop_prob, 0.1);
+        assert_eq!(net.salt, 9);
+    }
+
+    #[test]
+    fn net_defaults_to_ideal() {
+        let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert!(cfg.cluster.net.is_ideal());
+    }
+
+    #[test]
+    fn net_section_rejects_bad_values() {
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\ndrop_prob = 1.5",
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\npartitions = \"9@1..5\"",
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\npartitions = \"bogus\"",
+        )
+        .is_err());
     }
 
     #[test]

@@ -28,18 +28,21 @@ use crate::metrics::Recorder;
 use crate::optim::OptimizerKind;
 use crate::{Error, Result};
 
-/// Validate a cluster's elastic configuration against a sync mode.  Shared
-/// by both drivers and [`Coordinator::new`], so the compatibility rules
-/// cannot drift between virtual and real timing:
+/// Validate a cluster's elastic *and network* configuration against a sync
+/// mode.  Shared by both drivers and [`Coordinator::new`], so the
+/// compatibility rules cannot drift between virtual and real timing:
 ///
 /// * worker indices must be in range and the schedule must never evict the
 ///   whole cluster with events still pending ([`crate::cluster::ElasticSchedule::validate`]);
+/// * the network spec's probabilities, partition windows, and per-link
+///   overrides must be well-formed ([`crate::net::NetSpec::validate`]);
 /// * async mode has no iteration boundaries, so it takes no elastic config;
 /// * BSP guarantees every shard contributes every iteration, so scheduled
 ///   leaves require rebalancing (otherwise the leaver's shards would
 ///   silently stop contributing — exactly the bias BSP exists to prevent).
 pub fn validate_elastic(cluster: &ClusterSpec, mode: &SyncMode) -> Result<()> {
     cluster.elastic.validate(cluster.workers)?;
+    cluster.net.validate(cluster.workers)?;
     if mode.is_async() && (!cluster.elastic.is_empty() || cluster.rebalance_every > 0) {
         return Err(Error::Config(
             "elastic membership/rebalancing requires a synchronous mode".into(),
@@ -174,6 +177,9 @@ pub struct RunReport {
     pub rejoins: u64,
     /// Elastic shard-rebalance plans executed (0 = static membership).
     pub rebalances: u64,
+    /// Network-level message accounting.  `dropped`/`duplicated` are zero
+    /// under an ideal net; `sent`/`delivered` still count the traffic.
+    pub net: crate::net::NetStats,
     /// Async only: mean staleness of applied gradients.
     pub mean_staleness: Option<f64>,
     /// Wall-clock of the driver itself (not virtual time), seconds.
@@ -205,7 +211,7 @@ impl RunReport {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "[{}] status={:?} iters={} time={:.3}s loss={:.6} theta_err={} abandon={:.1}% crashes={}",
             self.mode_name,
             self.status,
@@ -217,7 +223,15 @@ impl RunReport {
                 .unwrap_or_else(|| "-".into()),
             self.abandon_rate() * 100.0,
             self.crashes,
-        )
+        );
+        if self.net.dropped > 0 || self.net.duplicated > 0 {
+            s.push_str(&format!(
+                " net_drop={:.1}% net_dup={}",
+                self.net.drop_rate() * 100.0,
+                self.net.duplicated
+            ));
+        }
+        s
     }
 }
 
@@ -327,6 +341,7 @@ mod tests {
             crashes: 0,
             rejoins: 0,
             rebalances: 0,
+            net: crate::net::NetStats::default(),
             mean_staleness: None,
             driver_secs: 0.0,
         };

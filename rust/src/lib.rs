@@ -47,6 +47,7 @@ pub mod data;
 pub mod lm;
 pub mod math;
 pub mod metrics;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod sim;
@@ -119,6 +120,7 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, RunConfig, RunReport};
     pub use crate::data::{KrrProblem, KrrProblemSpec};
     pub use crate::metrics::Recorder;
+    pub use crate::net::{LinkModel, NetSpec, NetStats};
     pub use crate::optim::OptimizerKind;
     pub use crate::runtime::{ArtifactSet, Engine};
     pub use crate::sim;

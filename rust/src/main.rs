@@ -64,6 +64,16 @@ fn cmd_train(argv: &[String]) -> i32 {
             "rebalance-every",
             "",
             "rebalance shards every k iterations, 0 disables (overrides config)",
+        )
+        .opt(
+            "drop-prob",
+            "",
+            "per-message network loss probability on every link (overrides config)",
+        )
+        .opt(
+            "net-partitions",
+            "",
+            "scripted partitions, e.g. 3-5@40..60;0@10..20 (overrides config)",
         );
     let parsed = match spec.parse(argv) {
         Ok(p) => p,
@@ -72,12 +82,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    match run_train(
-        parsed.positional(0),
-        parsed.get("csv"),
-        parsed.get("join-schedule"),
-        parsed.get("rebalance-every"),
-    ) {
+    match run_train(&parsed) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("train failed: {e}");
@@ -86,12 +91,12 @@ fn cmd_train(argv: &[String]) -> i32 {
     }
 }
 
-fn run_train(
-    config_path: &str,
-    csv_override: &str,
-    join_schedule: &str,
-    rebalance_every: &str,
-) -> hybriditer::Result<()> {
+fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
+    let config_path = parsed.positional(0);
+    let csv_override = parsed.get("csv");
+    let join_schedule = parsed.get("join-schedule");
+    let rebalance_every = parsed.get("rebalance-every");
+    let net_partitions = parsed.get("net-partitions");
     let mut cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
     if !join_schedule.is_empty() {
         let sched = hybriditer::cluster::ElasticSchedule::parse(join_schedule)?;
@@ -105,6 +110,19 @@ fn run_train(
             ))
         })?;
     }
+    if let Some(p) = parsed.get_opt_f64("drop-prob")? {
+        // "Every link" includes per-worker overrides (e.g. a slow_link
+        // clone of the config-time default), not just the default model.
+        cfg.cluster.net.default_link.drop_prob = p;
+        for (_, link) in &mut cfg.cluster.net.overrides {
+            link.drop_prob = p;
+        }
+    }
+    if !net_partitions.is_empty() {
+        cfg.cluster.net.partitions =
+            hybriditer::net::NetSpec::parse_partitions(net_partitions)?;
+    }
+    cfg.cluster.net.validate(cfg.cluster.workers)?;
     log::info!(
         "experiment: {:?} mode={} workers={} timing={:?} backend={:?}",
         cfg.problem_kind,

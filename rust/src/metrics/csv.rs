@@ -14,12 +14,12 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(
         f,
-        "iter,time,loss,eval_loss,theta_err,included,abandoned,alive,gamma,grad_norm"
+        "iter,time,loss,eval_loss,theta_err,included,abandoned,stale,dropped,duplicated,alive,gamma,grad_norm"
     )?;
     for r in rec.rows() {
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.iter,
             r.time,
             r.loss,
@@ -27,6 +27,9 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
             opt(r.theta_err),
             r.included,
             r.abandoned,
+            r.stale,
+            r.dropped,
+            r.duplicated,
             r.alive,
             r.gamma.map(|g| g.to_string()).unwrap_or_default(),
             r.grad_norm
@@ -43,7 +46,8 @@ pub fn write_table(header: &[&str], rows: &[Vec<String>], path: &Path) -> Result
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(f, "{}", header.join(","))?;
     for row in rows {
-        writeln!(f, "{}", row.iter().map(escape).collect::<Vec<_>>().join(","))?;
+        let cells: Vec<String> = row.iter().map(|s| escape(s)).collect();
+        writeln!(f, "{}", cells.join(","))?;
     }
     Ok(())
 }
@@ -52,11 +56,11 @@ fn opt(v: Option<f64>) -> String {
     v.map(|x| x.to_string()).unwrap_or_default()
 }
 
-fn escape(s: &String) -> String {
+fn escape(s: &str) -> String {
     if s.contains([',', '"', '\n']) {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
-        s.clone()
+        s.to_string()
     }
 }
 
@@ -76,6 +80,9 @@ mod tests {
             theta_err: None,
             included: 3,
             abandoned: 1,
+            stale: 2,
+            dropped: 5,
+            duplicated: 1,
             alive: 4,
             gamma: Some(3),
             grad_norm: 0.7,
@@ -84,9 +91,11 @@ mod tests {
         write_recorder(&rec, &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let mut lines = text.lines();
-        assert!(lines.next().unwrap().starts_with("iter,time,loss"));
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("iter,time,loss"));
+        assert!(header.contains("stale,dropped,duplicated"));
         let row = lines.next().unwrap();
-        assert!(row.starts_with("0,0.5,2,2.1,,3,1,4,3,0.7"));
+        assert!(row.starts_with("0,0.5,2,2.1,,3,1,2,5,1,4,3,0.7"));
         std::fs::remove_file(&path).unwrap();
     }
 

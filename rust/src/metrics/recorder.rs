@@ -16,8 +16,16 @@ pub struct IterRow {
     pub theta_err: Option<f64>,
     /// Gradient contributions aggregated this iteration.
     pub included: usize,
-    /// Results abandoned (arrived late) this iteration.
+    /// Results abandoned this iteration (arrived after the barrier closed,
+    /// or duplicate copies of an already-admitted result).
     pub abandoned: usize,
+    /// Results abandoned as stale this iteration (arrivals carrying an
+    /// older iteration number — only the threaded driver produces these).
+    pub stale: usize,
+    /// Messages the network dropped this iteration.
+    pub dropped: usize,
+    /// Duplicate deliveries the network injected this iteration.
+    pub duplicated: usize,
     /// Workers alive at the end of the iteration.
     pub alive: usize,
     /// γ in effect this iteration (None for BSP/async).
@@ -132,6 +140,9 @@ mod tests {
             theta_err: err,
             included: 4,
             abandoned: 0,
+            stale: 0,
+            dropped: 0,
+            duplicated: 0,
             alive: 4,
             gamma: Some(4),
             grad_norm: 1.0,

@@ -1,0 +1,209 @@
+//! One link's personality and its per-message realization.
+
+use crate::straggler::DelayModel;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// A coordinator↔worker link's behaviour.  Applied to both directions of a
+/// roundtrip (each direction samples its own fate and delay).  Reordering
+/// is emergent: latency variance lets a later-sent message overtake an
+/// earlier one, and duplication delivers the extra `Grad` copy `dup_lag`
+/// seconds behind the primary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// One-way network latency distribution (virtual seconds), sampled per
+    /// message.
+    pub latency: DelayModel,
+    /// Probability each message is silently lost.
+    pub drop_prob: f64,
+    /// Probability a delivered `Grad` reply arrives twice.
+    pub dup_prob: f64,
+    /// How far behind the primary the duplicate copy arrives (seconds).
+    pub dup_lag: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel::ideal()
+    }
+}
+
+impl LinkModel {
+    /// Perfect link: zero latency, no loss, no duplication.
+    pub fn ideal() -> LinkModel {
+        LinkModel {
+            latency: DelayModel::None,
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            dup_lag: 0.0,
+        }
+    }
+
+    /// Zero-latency link that loses each message with probability `p`.
+    pub fn lossy(p: f64) -> LinkModel {
+        LinkModel { drop_prob: p, ..LinkModel::ideal() }
+    }
+
+    /// Does this link perturb traffic at all?
+    pub fn is_ideal(&self) -> bool {
+        self.drop_prob == 0.0 && self.dup_prob == 0.0 && self.latency == DelayModel::None
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [("drop_prob", self.drop_prob), ("dup_prob", self.dup_prob)] {
+            if !(0.0..1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "link {name} must be in [0, 1), got {p}"
+                )));
+            }
+        }
+        if self.dup_lag < 0.0 {
+            return Err(Error::Config(format!(
+                "link dup_lag must be >= 0, got {}",
+                self.dup_lag
+            )));
+        }
+        Ok(())
+    }
+
+    /// Realize one roundtrip from a per-message RNG stream.  The sampling
+    /// order is fixed (down fate, down delay, up fate, up delay, dup fate)
+    /// so a given stream always yields the same realization.
+    pub fn realize(&self, rng: &mut Pcg64) -> LinkRealization {
+        if self.is_ideal() {
+            return LinkRealization::ideal();
+        }
+        let down_dropped = rng.next_f64() < self.drop_prob;
+        let down_delay = self.latency.sample(rng);
+        let up_dropped = rng.next_f64() < self.drop_prob;
+        let up_delay = self.latency.sample(rng);
+        let up_duplicated = rng.next_f64() < self.dup_prob;
+        LinkRealization {
+            down_dropped,
+            down_delay,
+            up_dropped,
+            up_delay,
+            up_duplicated,
+            dup_lag: self.dup_lag,
+        }
+    }
+}
+
+/// One worker-iteration roundtrip, fully realized: both directions' fates
+/// and delays.  Produced by [`crate::net::NetSpec::realize`] as a pure
+/// function of `(seed, worker, iteration)`, which is what lets the virtual
+/// simulator and the threaded runtime agree on every message's fate
+/// without sharing any state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkRealization {
+    /// The `Work` broadcast was lost (the worker never computes).
+    pub down_dropped: bool,
+    /// One-way latency of the `Work` broadcast.
+    pub down_delay: f64,
+    /// The `Grad` reply was lost in flight.
+    pub up_dropped: bool,
+    /// One-way latency of the `Grad` reply.
+    pub up_delay: f64,
+    /// The `Grad` reply arrives twice.
+    pub up_duplicated: bool,
+    /// Lag of the duplicate copy behind the primary.
+    pub dup_lag: f64,
+}
+
+impl LinkRealization {
+    pub fn ideal() -> LinkRealization {
+        LinkRealization {
+            down_dropped: false,
+            down_delay: 0.0,
+            up_dropped: false,
+            up_delay: 0.0,
+            up_duplicated: false,
+            dup_lag: 0.0,
+        }
+    }
+
+    /// Both directions dead — a scripted partition window.
+    pub fn partitioned() -> LinkRealization {
+        LinkRealization {
+            down_dropped: true,
+            up_dropped: true,
+            ..LinkRealization::ideal()
+        }
+    }
+
+    /// Does the roundtrip deliver a usable reply?
+    pub fn delivers(&self) -> bool {
+        !self.down_dropped && !self.up_dropped
+    }
+
+    /// Total injected network latency on a delivered roundtrip.
+    pub fn roundtrip_delay(&self) -> f64 {
+        self.down_delay + self.up_delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_link_never_perturbs() {
+        let link = LinkModel::ideal();
+        assert!(link.is_ideal());
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..100 {
+            let r = link.realize(&mut rng);
+            assert!(r.delivers());
+            assert_eq!(r.roundtrip_delay(), 0.0);
+            assert!(!r.up_duplicated);
+        }
+    }
+
+    #[test]
+    fn lossy_link_drops_at_roughly_its_rate() {
+        let link = LinkModel::lossy(0.3);
+        let mut rng = Pcg64::seeded(2);
+        let n = 20_000;
+        let dropped = (0..n)
+            .filter(|_| link.realize(&mut rng).down_dropped)
+            .count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn directions_realize_independently() {
+        let link = LinkModel::lossy(0.5);
+        let mut rng = Pcg64::seeded(3);
+        let mut down_only = 0;
+        let mut up_only = 0;
+        for _ in 0..5000 {
+            let r = link.realize(&mut rng);
+            if r.down_dropped && !r.up_dropped {
+                down_only += 1;
+            }
+            if r.up_dropped && !r.down_dropped {
+                up_only += 1;
+            }
+        }
+        assert!(down_only > 500, "down_only={down_only}");
+        assert!(up_only > 500, "up_only={up_only}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_probabilities() {
+        assert!(LinkModel::lossy(1.0).validate().is_err());
+        assert!(LinkModel::lossy(-0.1).validate().is_err());
+        assert!(LinkModel { dup_prob: 2.0, ..LinkModel::ideal() }.validate().is_err());
+        assert!(LinkModel { dup_lag: -1.0, ..LinkModel::ideal() }.validate().is_err());
+        assert!(LinkModel::lossy(0.99).validate().is_ok());
+        assert!(LinkModel::ideal().validate().is_ok());
+    }
+
+    #[test]
+    fn partitioned_realization_delivers_nothing() {
+        let r = LinkRealization::partitioned();
+        assert!(!r.delivers());
+        assert!(r.down_dropped && r.up_dropped);
+    }
+}

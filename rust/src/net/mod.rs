@@ -1,0 +1,157 @@
+//! Unreliable-network transport layer: lossy, delayed, duplicated, and
+//! partitionable coordinator↔worker links.
+//!
+//! The straggler subsystem ([`crate::straggler`]) perturbs *compute*; this
+//! module perturbs *communication*.  Yu et al. (arXiv:1810.07766) show that
+//! message loss and delay interact with convergence in ways compute-side
+//! faults do not, and Qiao et al. (arXiv:1810.07354) motivate treating a
+//! dropped update as a first-class perturbation rather than a crash — so
+//! network severity is a sweepable input here, exactly like
+//! [`crate::straggler::StragglerProfile`] sweeps compute severity.
+//!
+//! # Pieces
+//!
+//! * [`LinkModel`] — one link's personality: per-message latency
+//!   distribution, drop probability, duplication probability;
+//! * [`NetSpec`] — the whole cluster's network: a default link, per-worker
+//!   overrides (asymmetric topologies), and scripted partition windows
+//!   ("workers 3..6 unreachable during iterations 40..60");
+//! * [`Transport`] / [`VirtualTransport`] — virtual-time delivery for the
+//!   discrete-event simulator: sends schedule delivery events, polls pop
+//!   them in arrival order;
+//! * [`NetShim`] — the threaded runtime's channel wrapper: the master
+//!   consults it before every `Work` broadcast and on every `Grad` receipt;
+//! * [`NetStats`] — message-level accounting (sent / delivered / dropped /
+//!   duplicated), reported per run and per iteration.
+//!
+//! # Cross-driver determinism
+//!
+//! Every message's fate is a **pure function** of
+//! `(cluster seed, worker, iteration)` — see [`NetSpec::realize`].  No
+//! shared RNG stream is consumed in arrival order, so the virtual simulator
+//! and the threaded runtime realize *identical* drops, duplicates, and
+//! delays for the same spec and seed, and `tests/parity_drivers.rs` can
+//! assert equal delivery counts across drivers.  [`NetSpec::ideal`] (the
+//! default) short-circuits all sampling and reproduces the pre-transport
+//! behaviour bit for bit.
+//!
+//! See `docs/NETWORK.md` for a scenario cookbook.
+
+pub mod link;
+pub mod shim;
+pub mod spec;
+pub mod transport;
+
+pub use link::{LinkModel, LinkRealization};
+pub use shim::{GradFate, NetShim, WorkPlan};
+pub use spec::{NetSpec, Partition};
+pub use transport::{Delivery, Transport, VirtualTransport};
+
+/// Message-level delivery accounting.  Counts individual messages (a
+/// `Work` broadcast and its `Grad` reply are two messages); `duplicated`
+/// counts extra delivered copies on top of `delivered`.  Invariant:
+/// `sent == delivered + dropped`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub sent: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+}
+
+impl NetStats {
+    /// Fraction of sent messages that were dropped.
+    pub fn drop_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.sent as f64
+        }
+    }
+
+    /// Counts accumulated since an `earlier` snapshot (per-iteration deltas
+    /// for the recorder).
+    pub fn since(&self, earlier: &NetStats) -> NetStats {
+        NetStats {
+            sent: self.sent - earlier.sent,
+            delivered: self.delivered - earlier.delivered,
+            dropped: self.dropped - earlier.dropped,
+            duplicated: self.duplicated - earlier.duplicated,
+        }
+    }
+
+    /// Account one Work→Grad roundtrip realization; returns whether the
+    /// reply survives to delivery.  `count_dup` lets the sync drivers count
+    /// the duplicated reply copy; the async drivers apply at-most-once per
+    /// arrival and pass `false`.
+    pub fn count_roundtrip(&mut self, r: &LinkRealization, count_dup: bool) -> bool {
+        self.sent += 1; // Work
+        if r.down_dropped {
+            self.dropped += 1;
+            return false;
+        }
+        self.delivered += 1;
+        self.sent += 1; // Grad
+        if r.up_dropped {
+            self.dropped += 1;
+            return false;
+        }
+        self.delivered += 1;
+        if count_dup && r.up_duplicated {
+            self.duplicated += 1;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_accounting_invariant() {
+        let mut s = NetStats::default();
+        assert!(s.count_roundtrip(&LinkRealization::ideal(), true));
+        assert_eq!(s.sent, 2);
+        assert_eq!(s.delivered, 2);
+        assert_eq!(s.dropped, 0);
+
+        let mut r = LinkRealization::ideal();
+        r.up_dropped = true;
+        assert!(!s.count_roundtrip(&r, true));
+        assert_eq!(s.sent, 4);
+        assert_eq!(s.delivered, 3);
+        assert_eq!(s.dropped, 1);
+
+        assert!(!s.count_roundtrip(&LinkRealization::partitioned(), true));
+        assert_eq!(s.sent, 5);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.sent, s.delivered + s.dropped);
+    }
+
+    #[test]
+    fn duplicate_counted_only_when_asked() {
+        let mut r = LinkRealization::ideal();
+        r.up_duplicated = true;
+        let mut s = NetStats::default();
+        assert!(s.count_roundtrip(&r, false));
+        assert_eq!(s.duplicated, 0);
+        assert!(s.count_roundtrip(&r, true));
+        assert_eq!(s.duplicated, 1);
+    }
+
+    #[test]
+    fn since_gives_deltas() {
+        let a = NetStats { sent: 10, delivered: 7, dropped: 3, duplicated: 1 };
+        let b = NetStats { sent: 14, delivered: 10, dropped: 4, duplicated: 1 };
+        let d = b.since(&a);
+        assert_eq!(d, NetStats { sent: 4, delivered: 3, dropped: 1, duplicated: 0 });
+    }
+
+    #[test]
+    fn drop_rate_handles_empty() {
+        assert_eq!(NetStats::default().drop_rate(), 0.0);
+        let s = NetStats { sent: 10, delivered: 8, dropped: 2, duplicated: 0 };
+        assert!((s.drop_rate() - 0.2).abs() < 1e-12);
+    }
+}

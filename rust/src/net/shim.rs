@@ -1,0 +1,166 @@
+//! The threaded runtime's channel shim.
+//!
+//! The master consults the shim before every `Work` broadcast and on every
+//! `Grad` receipt.  Because a message's fate is a pure function of
+//! `(seed, worker, iteration)` ([`NetSpec::realize`]), the shim needs no
+//! per-iteration state: a stale reply from three iterations ago re-realizes
+//! its own iteration's fate correctly.
+//!
+//! **Accounting happens at broadcast (plan) time** — the reply's fate is
+//! already determined then — so the counts match the virtual driver's
+//! exactly even though real replies land on wall-clock.  (The counts
+//! assume the addressed worker actually replies; a stochastic thread
+//! crash diverges the drivers' counts, just as it already diverges their
+//! abandonment totals.)
+
+use super::link::LinkRealization;
+use super::spec::NetSpec;
+use super::NetStats;
+
+/// What the master should do with one worker's `Work` broadcast.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkPlan {
+    /// Downlink dropped (lossy or partitioned): don't send.
+    Dropped,
+    /// Send; the slave adds `net_delay` to its injected sleep so arrival
+    /// timing matches the virtual driver's `down + compute + up` model.
+    Deliver { net_delay: f64 },
+}
+
+/// Fate of a received `Grad` reply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GradFate {
+    /// The uplink lost it: discard silently.
+    Dropped,
+    /// Offer it to the barrier; if `duplicate`, offer a second copy too.
+    Deliver { duplicate: bool },
+}
+
+/// Master-side network shim for the threaded ("real") runtime.
+pub struct NetShim {
+    spec: NetSpec,
+    seed: u64,
+    ideal: bool,
+    stats: NetStats,
+}
+
+impl NetShim {
+    pub fn new(spec: NetSpec, seed: u64) -> NetShim {
+        let ideal = spec.is_ideal();
+        NetShim { spec, seed, ideal, stats: NetStats::default() }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.ideal
+    }
+
+    /// Plan worker `worker`'s iteration-`iter` broadcast, accounting both
+    /// the `Work` message and the (already-determined) fate of its reply.
+    /// The second return says whether the reply will reach the barrier.
+    pub fn plan(&mut self, worker: usize, iter: u64) -> (WorkPlan, bool) {
+        let r = if self.ideal {
+            LinkRealization::ideal()
+        } else {
+            self.spec.realize(self.seed, worker, iter)
+        };
+        let delivers = self.stats.count_roundtrip(&r, true);
+        if r.down_dropped {
+            return (WorkPlan::Dropped, false);
+        }
+        let net_delay = if delivers { r.roundtrip_delay() } else { r.down_delay };
+        (WorkPlan::Deliver { net_delay }, delivers)
+    }
+
+    /// Whether worker `worker`'s iteration-`iter` reply survives the
+    /// network.  Pure re-realization — no accounting.
+    pub fn reply_expected(&self, worker: usize, iter: u64) -> bool {
+        self.ideal || self.spec.realize(self.seed, worker, iter).delivers()
+    }
+
+    /// Fate of a received `Grad` for `(worker, msg_iter)`.  Pure
+    /// re-realization, so stale replies from earlier iterations resolve
+    /// against their own iteration's fates.  No accounting: [`NetShim::plan`]
+    /// already counted this reply.
+    pub fn grad_fate(&self, worker: usize, msg_iter: u64) -> GradFate {
+        if self.ideal {
+            return GradFate::Deliver { duplicate: false };
+        }
+        let r = self.spec.realize(self.seed, worker, msg_iter);
+        if r.delivers() {
+            GradFate::Deliver { duplicate: r.up_duplicated }
+        } else {
+            GradFate::Dropped
+        }
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_shim_always_delivers() {
+        let mut shim = NetShim::new(NetSpec::ideal(), 1);
+        for iter in 0..10 {
+            let (plan, delivers) = shim.plan(0, iter);
+            assert_eq!(plan, WorkPlan::Deliver { net_delay: 0.0 });
+            assert!(delivers);
+            assert_eq!(shim.grad_fate(0, iter), GradFate::Deliver { duplicate: false });
+        }
+        assert_eq!(shim.stats().sent, 20);
+        assert_eq!(shim.stats().delivered, 20);
+    }
+
+    #[test]
+    fn plan_and_fate_agree_with_realization() {
+        let spec = NetSpec::lossy(0.4);
+        let mut shim = NetShim::new(spec.clone(), 17);
+        for iter in 0..200 {
+            let r = spec.realize(17, 0, iter);
+            let (plan, delivers) = shim.plan(0, iter);
+            assert_eq!(delivers, r.delivers());
+            assert_eq!(matches!(plan, WorkPlan::Dropped), r.down_dropped);
+            assert_eq!(shim.reply_expected(0, iter), r.delivers());
+            // The fate of the reply (if the slave sends one).
+            match shim.grad_fate(0, iter) {
+                GradFate::Dropped => assert!(!r.delivers()),
+                GradFate::Deliver { duplicate } => {
+                    assert!(r.delivers());
+                    assert_eq!(duplicate, r.up_duplicated);
+                }
+            }
+        }
+        let s = shim.stats();
+        assert_eq!(s.sent, s.delivered + s.dropped);
+        assert!(s.dropped > 0);
+    }
+
+    #[test]
+    fn shim_counts_match_virtual_transport() {
+        use crate::net::transport::{Transport, VirtualTransport};
+        let spec = NetSpec {
+            default_link: crate::net::LinkModel {
+                drop_prob: 0.25,
+                dup_prob: 0.2,
+                dup_lag: 0.001,
+                ..crate::net::LinkModel::ideal()
+            },
+            ..NetSpec::ideal()
+        };
+        let seed = 23;
+        let mut shim = NetShim::new(spec.clone(), seed);
+        let mut virt = VirtualTransport::new(spec, seed);
+        for iter in 0..100 {
+            for w in 0..4 {
+                shim.plan(w, iter);
+                virt.send_roundtrip(w, iter, 0.01);
+            }
+            while virt.poll().is_some() {}
+        }
+        assert_eq!(shim.stats(), virt.stats());
+    }
+}

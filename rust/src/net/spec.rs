@@ -1,0 +1,282 @@
+//! The whole cluster's network specification and its pure per-message
+//! realization function.
+
+use super::link::{LinkModel, LinkRealization};
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// A scripted partition: the named workers are unreachable — both
+/// directions dropped — for iterations `from..until` (half-open, like the
+/// `a..b` syntax it parses from).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub workers: Vec<usize>,
+    pub from: u64,
+    pub until: u64,
+}
+
+impl Partition {
+    pub fn covers(&self, worker: usize, iter: u64) -> bool {
+        iter >= self.from && iter < self.until && self.workers.contains(&worker)
+    }
+}
+
+/// The coordinator↔worker network: a default [`LinkModel`], per-worker
+/// overrides for asymmetric topologies, and scripted partition windows.
+/// [`NetSpec::ideal`] (the default) reproduces pre-transport behaviour
+/// bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSpec {
+    /// Link personality applied to every worker without an override.
+    pub default_link: LinkModel,
+    /// `(worker, model)` overrides — e.g. one chronically slow/lossy link.
+    pub overrides: Vec<(usize, LinkModel)>,
+    /// Scripted partition windows.
+    pub partitions: Vec<Partition>,
+    /// Extra salt mixed into the per-message streams, so two specs can
+    /// realize differently under one cluster seed.
+    pub salt: u64,
+}
+
+impl Default for NetSpec {
+    fn default() -> Self {
+        NetSpec::ideal()
+    }
+}
+
+impl NetSpec {
+    /// Perfect network — the seed system's implicit assumption.
+    pub fn ideal() -> NetSpec {
+        NetSpec {
+            default_link: LinkModel::ideal(),
+            overrides: Vec::new(),
+            partitions: Vec::new(),
+            salt: 0,
+        }
+    }
+
+    /// Zero-latency network losing each message with probability `p`.
+    pub fn lossy(p: f64) -> NetSpec {
+        NetSpec { default_link: LinkModel::lossy(p), ..NetSpec::ideal() }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.partitions.is_empty()
+            && self.default_link.is_ideal()
+            && self.overrides.iter().all(|(_, l)| l.is_ideal())
+    }
+
+    /// Builder: partition `workers` away for iterations `from..until`.
+    pub fn with_partition(mut self, workers: &[usize], from: u64, until: u64) -> Self {
+        self.partitions.push(Partition { workers: workers.to_vec(), from, until });
+        self
+    }
+
+    /// Builder: give one worker's link its own model.
+    pub fn with_override(mut self, worker: usize, link: LinkModel) -> Self {
+        self.overrides.push((worker, link));
+        self
+    }
+
+    /// The model governing worker `w`'s link.
+    pub fn link_for(&self, worker: usize) -> &LinkModel {
+        self.overrides
+            .iter()
+            .find(|(w, _)| *w == worker)
+            .map(|(_, l)| l)
+            .unwrap_or(&self.default_link)
+    }
+
+    /// Is worker `w` inside a scripted partition window at `iter`?
+    pub fn partitioned(&self, worker: usize, iter: u64) -> bool {
+        self.partitions.iter().any(|p| p.covers(worker, iter))
+    }
+
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        self.default_link.validate()?;
+        for (w, link) in &self.overrides {
+            if *w >= workers {
+                return Err(Error::Cluster(format!(
+                    "net override names worker {w} but cluster has {workers}"
+                )));
+            }
+            link.validate()?;
+        }
+        for p in &self.partitions {
+            if p.from >= p.until {
+                return Err(Error::Config(format!(
+                    "partition window {}..{} is empty",
+                    p.from, p.until
+                )));
+            }
+            for &w in &p.workers {
+                if w >= workers {
+                    return Err(Error::Cluster(format!(
+                        "partition names worker {w} but cluster has {workers}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Realize worker `worker`'s iteration-`iter` roundtrip.  A **pure
+    /// function** of `(seed, worker, iter)` (plus the spec itself): both
+    /// drivers call this with the same arguments and get the same fates
+    /// and delays, which is the whole cross-driver parity guarantee.
+    pub fn realize(&self, seed: u64, worker: usize, iter: u64) -> LinkRealization {
+        if self.is_ideal() {
+            return LinkRealization::ideal();
+        }
+        if self.partitioned(worker, iter) {
+            return LinkRealization::partitioned();
+        }
+        // One independent PCG stream per (worker, iter) message pair; the
+        // stream id mixes both so consumption order cannot couple streams.
+        let stream = (worker as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ iter.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        let mut rng = Pcg64::new(seed ^ self.salt.wrapping_mul(0xA076_1D64_78BD_642F), stream);
+        self.link_for(worker).realize(&mut rng)
+    }
+
+    /// Parse the partition script syntax: `;`-separated windows
+    /// `<workers>@<from>..<until>`, where `<workers>` is a comma-separated
+    /// mix of indices and inclusive `a-b` ranges.  Example:
+    /// `"3-5@40..60;0@10..20"`.  An empty string parses to no partitions.
+    pub fn parse_partitions(text: &str) -> Result<Vec<Partition>> {
+        let bad = |term: &str| {
+            Error::Config(format!(
+                "bad partition '{term}' (want workers@from..until, e.g. 3-5@40..60)"
+            ))
+        };
+        let mut out = Vec::new();
+        for term in text.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            let (workers, span) = term.split_once('@').ok_or_else(|| bad(term))?;
+            let (from, until) = span.split_once("..").ok_or_else(|| bad(term))?;
+            let mut ws: Vec<usize> = Vec::new();
+            for part in workers.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                match part.split_once('-') {
+                    Some((a, b)) => {
+                        let a: usize = a.trim().parse().map_err(|_| bad(term))?;
+                        let b: usize = b.trim().parse().map_err(|_| bad(term))?;
+                        if a > b {
+                            return Err(bad(term));
+                        }
+                        ws.extend(a..=b);
+                    }
+                    None => ws.push(part.parse().map_err(|_| bad(term))?),
+                }
+            }
+            if ws.is_empty() {
+                return Err(bad(term));
+            }
+            out.push(Partition {
+                workers: ws,
+                from: from.trim().parse().map_err(|_| bad(term))?,
+                until: until.trim().parse().map_err(|_| bad(term))?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::DelayModel;
+
+    #[test]
+    fn realize_is_pure_and_varies_by_message() {
+        let spec = NetSpec::lossy(0.4);
+        let a = spec.realize(7, 2, 13);
+        let b = spec.realize(7, 2, 13);
+        assert_eq!(a, b, "same (seed, worker, iter) must realize identically");
+        // Across iterations / workers the fates must actually vary.
+        let mut distinct = false;
+        for iter in 0..64 {
+            if spec.realize(7, 2, iter) != a {
+                distinct = true;
+                break;
+            }
+        }
+        assert!(distinct, "lossy realizations never varied");
+    }
+
+    #[test]
+    fn ideal_realizes_ideal_without_sampling() {
+        let spec = NetSpec::ideal();
+        assert!(spec.is_ideal());
+        for w in 0..4 {
+            for iter in 0..16 {
+                assert_eq!(spec.realize(1, w, iter), LinkRealization::ideal());
+            }
+        }
+    }
+
+    #[test]
+    fn partition_window_kills_both_directions() {
+        let spec = NetSpec::ideal().with_partition(&[1, 2], 10, 20);
+        assert!(!spec.is_ideal());
+        assert_eq!(spec.realize(5, 1, 9), LinkRealization::ideal());
+        assert_eq!(spec.realize(5, 1, 10), LinkRealization::partitioned());
+        assert_eq!(spec.realize(5, 2, 19), LinkRealization::partitioned());
+        assert_eq!(spec.realize(5, 2, 20), LinkRealization::ideal());
+        assert_eq!(spec.realize(5, 0, 15), LinkRealization::ideal());
+    }
+
+    #[test]
+    fn override_shapes_one_link() {
+        let slow = LinkModel {
+            latency: DelayModel::Constant { secs: 0.05 },
+            ..LinkModel::ideal()
+        };
+        let spec = NetSpec::ideal().with_override(3, slow.clone());
+        assert_eq!(spec.link_for(3), &slow);
+        assert_eq!(spec.link_for(0), &LinkModel::ideal());
+        let r = spec.realize(1, 3, 0);
+        assert!((r.roundtrip_delay() - 0.10).abs() < 1e-12);
+        assert_eq!(spec.realize(1, 0, 0), LinkRealization::ideal());
+    }
+
+    #[test]
+    fn salt_changes_realizations() {
+        let a = NetSpec::lossy(0.5);
+        let b = NetSpec { salt: 1, ..NetSpec::lossy(0.5) };
+        let differs = (0..64).any(|i| a.realize(9, 0, i) != b.realize(9, 0, i));
+        assert!(differs);
+    }
+
+    #[test]
+    fn parse_partitions_grammar() {
+        let ps = NetSpec::parse_partitions("3-5@40..60; 0@10..20").unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].workers, vec![3, 4, 5]);
+        assert_eq!((ps[0].from, ps[0].until), (40, 60));
+        assert_eq!(ps[1].workers, vec![0]);
+        let ps = NetSpec::parse_partitions("0,2-3,7@1..2").unwrap();
+        assert_eq!(ps[0].workers, vec![0, 2, 3, 7]);
+        assert!(NetSpec::parse_partitions("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_partitions_rejects_garbage() {
+        assert!(NetSpec::parse_partitions("nope").is_err());
+        assert!(NetSpec::parse_partitions("1@5").is_err());
+        assert!(NetSpec::parse_partitions("5-3@1..2").is_err());
+        assert!(NetSpec::parse_partitions("x@1..2").is_err());
+        assert!(NetSpec::parse_partitions("@1..2").is_err());
+    }
+
+    #[test]
+    fn validate_checks_ranges_and_windows() {
+        let spec = NetSpec::ideal().with_partition(&[3], 5, 10);
+        assert!(spec.validate(4).is_ok());
+        assert!(spec.validate(3).is_err());
+        let empty = NetSpec::ideal().with_partition(&[0], 10, 10);
+        assert!(empty.validate(4).is_err());
+        let bad_override = NetSpec::ideal().with_override(9, LinkModel::ideal());
+        assert!(bad_override.validate(4).is_err());
+        assert!(NetSpec::lossy(1.5).validate(4).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Virtual-time delivery for the discrete-event simulator.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use super::spec::NetSpec;
+use super::NetStats;
+
+/// One message popping out of a [`Transport`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Delivery {
+    /// Virtual arrival time, relative to the same origin the sends used
+    /// (the lockstep sync driver measures from the iteration start).
+    pub at: f64,
+    pub worker: usize,
+    pub iter: u64,
+    /// True for the extra copy of a duplicated reply.
+    pub duplicate: bool,
+}
+
+/// Virtual-time message routing: sends schedule delivery events, polls pop
+/// them in arrival order.  The lockstep sync driver routes one roundtrip
+/// per responder per iteration: the `Work` broadcast at relative time 0,
+/// `compute` seconds of worker time, and the `Grad` reply back; the
+/// network realization decides what survives and when it lands.
+pub trait Transport {
+    /// Route one coordinator→worker→coordinator roundtrip for `iter`.
+    /// Surviving deliveries become [`Transport::poll`]-able events.
+    fn send_roundtrip(&mut self, worker: usize, iter: u64, compute: f64);
+    /// Pop the next delivery in ascending `(time, worker, duplicate)`
+    /// order, or `None` when everything in flight has been delivered.
+    fn poll(&mut self) -> Option<Delivery>;
+    /// Distinct workers with a pending primary (non-duplicate) delivery.
+    fn deliverable(&self) -> usize;
+    /// Message-level accounting so far.
+    fn stats(&self) -> NetStats;
+}
+
+/// Heap key ordered by `(time, worker, duplicate)`.  Latencies are finite
+/// (the spec validates its distributions produce non-NaN samples), so the
+/// `partial_cmp` fallback to `Equal` is never load-bearing.
+#[derive(PartialEq)]
+struct Key {
+    at: f64,
+    worker: usize,
+    duplicate: bool,
+    iter: u64,
+}
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap_or(Ordering::Equal)
+            .then(self.worker.cmp(&other.worker))
+            .then(self.duplicate.cmp(&other.duplicate))
+    }
+}
+
+/// The simulator's [`Transport`]: realizes every message's fate from the
+/// pure [`NetSpec::realize`] function and keeps surviving deliveries on a
+/// min-heap.  With an ideal spec the fast path schedules delivery exactly
+/// at `compute` with no sampling — the pre-transport timing model, bit for
+/// bit.
+pub struct VirtualTransport {
+    spec: NetSpec,
+    seed: u64,
+    ideal: bool,
+    heap: BinaryHeap<Reverse<Key>>,
+    primaries: usize,
+    stats: NetStats,
+}
+
+impl VirtualTransport {
+    pub fn new(spec: NetSpec, seed: u64) -> VirtualTransport {
+        let ideal = spec.is_ideal();
+        VirtualTransport {
+            spec,
+            seed,
+            ideal,
+            heap: BinaryHeap::new(),
+            primaries: 0,
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.ideal
+    }
+}
+
+impl Transport for VirtualTransport {
+    fn send_roundtrip(&mut self, worker: usize, iter: u64, compute: f64) {
+        if self.ideal {
+            self.stats.sent += 2;
+            self.stats.delivered += 2;
+            self.heap.push(Reverse(Key { at: compute, worker, duplicate: false, iter }));
+            self.primaries += 1;
+            return;
+        }
+        let r = self.spec.realize(self.seed, worker, iter);
+        if !self.stats.count_roundtrip(&r, true) {
+            return;
+        }
+        let at = r.down_delay + compute + r.up_delay;
+        self.heap.push(Reverse(Key { at, worker, duplicate: false, iter }));
+        self.primaries += 1;
+        if r.up_duplicated {
+            self.heap.push(Reverse(Key { at: at + r.dup_lag, worker, duplicate: true, iter }));
+        }
+    }
+
+    fn poll(&mut self) -> Option<Delivery> {
+        self.heap.pop().map(|Reverse(k)| {
+            if !k.duplicate {
+                self.primaries -= 1;
+            }
+            Delivery { at: k.at, worker: k.worker, iter: k.iter, duplicate: k.duplicate }
+        })
+    }
+
+    fn deliverable(&self) -> usize {
+        self.primaries
+    }
+
+    fn stats(&self) -> NetStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::LinkModel;
+    use crate::straggler::DelayModel;
+
+    #[test]
+    fn ideal_delivers_in_compute_order() {
+        let mut t = VirtualTransport::new(NetSpec::ideal(), 1);
+        t.send_roundtrip(0, 5, 0.03);
+        t.send_roundtrip(1, 5, 0.01);
+        t.send_roundtrip(2, 5, 0.02);
+        assert_eq!(t.deliverable(), 3);
+        let order: Vec<(usize, f64)> = std::iter::from_fn(|| t.poll())
+            .map(|d| (d.worker, d.at))
+            .collect();
+        assert_eq!(order, vec![(1, 0.01), (2, 0.02), (0, 0.03)]);
+        assert_eq!(t.deliverable(), 0);
+        assert_eq!(t.stats().sent, 6);
+        assert_eq!(t.stats().delivered, 6);
+    }
+
+    #[test]
+    fn ties_break_by_worker_then_duplicate() {
+        // dup_prob 1.0 would fail validate(), but realize() is the unit
+        // under test here and `next_f64 < 1.0` always holds — so every
+        // reply duplicates, deterministically.
+        let spec = NetSpec {
+            default_link: LinkModel { dup_prob: 1.0, dup_lag: 0.0, ..LinkModel::ideal() },
+            ..NetSpec::ideal()
+        };
+        let mut t = VirtualTransport::new(spec, 3);
+        t.send_roundtrip(1, 0, 0.01);
+        t.send_roundtrip(0, 0, 0.01);
+        let ds: Vec<Delivery> = std::iter::from_fn(|| t.poll()).collect();
+        // Every primary precedes its own duplicate, and equal times order
+        // by worker index.
+        assert_eq!(ds.len(), 4);
+        assert_eq!((ds[0].worker, ds[0].duplicate), (0, false));
+        assert_eq!((ds[1].worker, ds[1].duplicate), (0, true));
+        assert_eq!((ds[2].worker, ds[2].duplicate), (1, false));
+        assert_eq!((ds[3].worker, ds[3].duplicate), (1, true));
+        assert_eq!(t.stats().duplicated, 2);
+    }
+
+    #[test]
+    fn drops_never_surface() {
+        let mut t = VirtualTransport::new(NetSpec::lossy(0.5), 7);
+        let n = 200u64;
+        for iter in 0..n {
+            t.send_roundtrip(0, iter, 0.01);
+        }
+        let popped = std::iter::from_fn(|| t.poll()).count() as u64;
+        let s = t.stats();
+        assert_eq!(s.sent, s.delivered + s.dropped);
+        assert!(s.dropped > 0, "nothing dropped at 50%");
+        assert!(popped < n, "popped {popped} of {n} at 50% loss");
+        // Each popped event is a delivered Grad whose Work also got
+        // through; Works may outnumber Grads (up-direction drops).
+        assert!(s.delivered >= 2 * popped, "{s:?} vs {popped} pops");
+    }
+
+    #[test]
+    fn net_delays_shift_arrivals() {
+        let spec = NetSpec {
+            default_link: LinkModel {
+                latency: DelayModel::Constant { secs: 0.005 },
+                ..LinkModel::ideal()
+            },
+            ..NetSpec::ideal()
+        };
+        let mut t = VirtualTransport::new(spec, 1);
+        t.send_roundtrip(0, 0, 0.02);
+        let d = t.poll().unwrap();
+        assert!((d.at - 0.03).abs() < 1e-12, "at={}", d.at);
+        assert!(t.poll().is_none());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mk = || {
+            let mut t = VirtualTransport::new(NetSpec::lossy(0.3), 11);
+            for iter in 0..50 {
+                for w in 0..4 {
+                    t.send_roundtrip(w, iter, 0.01 * (w + 1) as f64);
+                }
+            }
+            let ds: Vec<Delivery> = std::iter::from_fn(|| t.poll()).collect();
+            (ds, t.stats())
+        };
+        let (d1, s1) = mk();
+        let (d2, s2) = mk();
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+    }
+}

@@ -23,6 +23,17 @@
 //! gradient per shard, aggregated in ascending shard order — exactly the
 //! order the threaded runtime uses, so the two drivers stay decision- and
 //! trajectory-equivalent (see `tests/parity_drivers.rs`).
+//!
+//! **Unreliable network**: every coordinator↔worker roundtrip routes
+//! through [`crate::net::VirtualTransport`] — the `Work` broadcast down,
+//! the `Grad` reply back up.  A [`crate::net::NetSpec`] realizes each
+//! message's fate (drop, delay, duplicate; scripted partitions silence
+//! whole windows) as a pure function of `(seed, worker, iteration)`, so
+//! the threaded runtime realizes the *same* fates (see
+//! [`crate::net::NetShim`]).  The [`PartialBarrier`] thereby finally sees
+//! a realistic source of duplicate and late arrivals.  `NetSpec::ideal()`
+//! — the default — bypasses all sampling and reproduces the pre-transport
+//! admission sequence bit for bit.
 
 use crate::cluster::{ClusterSpec, ElasticKind, ElasticRuntime, Membership};
 use crate::coordinator::aggregator::{aggregate, Contribution};
@@ -34,6 +45,7 @@ use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
 use crate::data::ComputePool;
 use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
+use crate::net::{NetStats, Transport, VirtualTransport};
 use crate::straggler::{FailureEvent, FailureState};
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
@@ -147,6 +159,9 @@ fn run_sync(
     let mut agg = vec![0.0f32; dim];
     let mut now = 0.0f64;
     let mut status = RunStatus::Completed;
+    // All coordinator↔worker traffic goes through the transport; with an
+    // ideal NetSpec it is a zero-perturbation passthrough.
+    let mut net = VirtualTransport::new(cluster.net.clone(), cluster.seed);
     // Hybrid-reuse ablation: abandoned results computed at θ_t arrive during
     // iteration t+1 and are folded in with staleness 1 (aggregator-weighted).
     let reuse_late = matches!(cfg.aggregator, crate::coordinator::AggregatorKind::StalenessDamped { .. });
@@ -161,15 +176,18 @@ fn run_sync(
             &cluster.elastic,
             cluster.rebalance_every,
             &mut membership,
-            |ev| match ev.kind {
-                ElasticKind::Leave => {
-                    evicted[ev.worker] = true;
-                    fstates[ev.worker].force_crash(iter);
+            |ev| {
+                match ev.kind {
+                    ElasticKind::Leave => {
+                        evicted[ev.worker] = true;
+                        fstates[ev.worker].force_crash(iter);
+                    }
+                    ElasticKind::Join => {
+                        evicted[ev.worker] = false;
+                        fstates[ev.worker].force_rejoin();
+                    }
                 }
-                ElasticKind::Join => {
-                    evicted[ev.worker] = false;
-                    fstates[ev.worker].force_rejoin();
-                }
+                true
             },
         )?;
         if rebalanced {
@@ -215,16 +233,40 @@ fn run_sync(
             continue;
         }
 
-        // --- 2. barrier: which shards contribute, iteration latency ----
+        // --- 2. transport + barrier: which shards contribute, latency ---
+        // Every responder's roundtrip goes through the transport: the Work
+        // broadcast down, `latency[w]` of compute, the Grad reply up.  The
+        // NetSpec realizes drops / delays / duplicates per message.
+        let stats_iter_start = net.stats();
+        for &w in &responders {
+            net.send_roundtrip(w, iter, latency[w]);
+        }
         let mut included_shards: Vec<usize> = Vec::new();
         let mut included_workers: Vec<usize> = Vec::new();
+        // Workers whose primary reply reached the coordinator (delivered,
+        // whether or not the barrier admitted it).
+        let mut arrived_workers: Vec<usize> = Vec::new();
+        let mut iter_abandoned = 0usize;
+        let mut iter_stale = 0usize;
         let iter_latency: f64;
         match (&cfg.mode, gamma) {
             (SyncMode::Bsp, _) => {
+                let mut delivered = vec![false; m];
+                let mut last_arrival = 0.0f64;
+                while let Some(d) = net.poll() {
+                    if !d.duplicate {
+                        delivered[d.worker] = true;
+                        arrived_workers.push(d.worker);
+                    }
+                    last_arrival = last_arrival.max(d.at);
+                }
+                // A shard is missing if its owner is down *or* its reply
+                // was lost in the network — BSP cannot tell the two apart.
                 let missing: Vec<usize> = (0..m)
                     .filter(|&s| {
                         let o = elastic.ownership.owner(s);
-                        !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined))
+                        !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined)
+                            && delivered[o])
                     })
                     .collect();
                 if !missing.is_empty() {
@@ -248,11 +290,10 @@ fn run_sync(
                                     elastic.ownership.reassign(s, new_o);
                                 }
                             }
-                            // Every shard contributes; stragglers pay detect+retry.
-                            let healthy_max = responders
-                                .iter()
-                                .map(|&w| latency[w])
-                                .fold(0.0f64, f64::max);
+                            // Every shard contributes; stragglers pay
+                            // detect+retry (the retry itself is assumed to
+                            // traverse a clean path — one retransmission
+                            // suffices in this model).
                             let mut retry_max = 0.0f64;
                             for &s in &missing {
                                 let o = elastic.ownership.owner(s);
@@ -264,41 +305,51 @@ fn run_sync(
                                 retry_max = retry_max.max(detect_timeout + retry_lat);
                             }
                             included_shards = (0..m).collect();
-                            iter_latency = healthy_max.max(retry_max);
+                            iter_latency = last_arrival.max(retry_max);
                         }
                     }
                 } else {
                     included_shards = (0..m).collect();
-                    iter_latency = responders
-                        .iter()
-                        .map(|&w| latency[w])
-                        .fold(0.0f64, f64::max);
+                    iter_latency = last_arrival;
                 }
             }
             (_, Some(g)) => {
-                // Hybrid family: the first γ_eff responders contribute
-                // every shard they currently own.
-                let mut order: Vec<usize> = responders.clone();
-                order.sort_by(|&a, &b| latency[a].partial_cmp(&latency[b]).unwrap());
-                let g_eff = g.min(order.len());
+                // Hybrid family: the first γ_eff *delivered* replies close
+                // the barrier; everything later — and every duplicate — is
+                // abandoned, exactly what a physical barrier would see.
+                let deliverable = net.deliverable();
+                if deliverable == 0 {
+                    // Every reply dropped or partitioned away: burn a
+                    // detection window, like the all-transient-drop case.
+                    now += cluster.base_compute.max(1e-6);
+                    continue;
+                }
+                let g_eff = g.min(deliverable);
                 let mut barrier = PartialBarrier::new(iter, m, g_eff);
-                let mut closing_worker = order[0];
-                for &w in &order {
-                    let adm = barrier.offer(w, iter);
-                    match adm {
+                let mut close_time = 0.0f64;
+                while let Some(d) = net.poll() {
+                    if !d.duplicate {
+                        arrived_workers.push(d.worker);
+                    }
+                    match barrier.offer(d.worker, d.iter) {
                         crate::coordinator::barrier::Admission::Included
                         | crate::coordinator::barrier::Admission::IncludedAndClosed => {
-                            closing_worker = w;
-                            included_workers.push(w);
-                            included_shards.extend(assignment[w].iter().copied());
-                            membership.record_contribution(w);
+                            close_time = d.at;
+                            included_workers.push(d.worker);
+                            included_shards.extend(assignment[d.worker].iter().copied());
+                            membership.record_contribution(d.worker);
                         }
-                        _ => {
-                            membership.record_abandoned(w);
+                        crate::coordinator::barrier::Admission::Abandoned => {
+                            membership.record_abandoned(d.worker);
+                            iter_abandoned += 1;
+                        }
+                        crate::coordinator::barrier::Admission::Stale => {
+                            membership.record_abandoned(d.worker);
+                            iter_stale += 1;
                         }
                     }
                 }
-                iter_latency = latency[closing_worker];
+                iter_latency = close_time;
                 // Aggregate in shard-index order: f32 summation order is
                 // then independent of arrival order (γ=M reproduces BSP
                 // bit-for-bit; see prop_gamma_m_equals_bsp) and matches
@@ -375,14 +426,22 @@ fn run_sync(
 
         // --- 4. update & clock -----------------------------------------
         // Reuse ablation: abandoned responders' θ_t gradients become next
-        // iteration's staleness-1 carryover.
+        // iteration's staleness-1 carryover.  Only replies that actually
+        // *arrived* qualify — a network-dropped result never reached the
+        // coordinator, so there is nothing to reuse.
         carryover.clear();
         if reuse_late {
-            for &w in &responders {
-                if !included_workers.contains(&w) {
-                    for &s in &assignment[w] {
-                        carryover.push(pool.grad(s, &theta, iter)?);
-                    }
+            // Ascending worker order (not arrival order) keeps the f32
+            // fold order identical to the pre-transport driver.
+            let mut late: Vec<usize> = arrived_workers
+                .iter()
+                .copied()
+                .filter(|w| !included_workers.contains(w))
+                .collect();
+            late.sort_unstable();
+            for w in late {
+                for &s in &assignment[w] {
+                    carryover.push(pool.grad(s, &theta, iter)?);
                 }
             }
         }
@@ -399,6 +458,7 @@ fn run_sync(
             } else {
                 (None, None)
             };
+            let dnet = net.stats().since(&stats_iter_start);
             rec.push(IterRow {
                 iter,
                 time: now,
@@ -406,7 +466,10 @@ fn run_sync(
                 eval_loss,
                 theta_err,
                 included: included_shards.len(),
-                abandoned: responders.len().saturating_sub(included_workers.len()),
+                abandoned: iter_abandoned,
+                stale: iter_stale,
+                dropped: dnet.dropped as usize,
+                duplicated: dnet.duplicated as usize,
                 alive: membership.alive(),
                 gamma,
                 grad_norm,
@@ -429,6 +492,7 @@ fn run_sync(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: elastic.rebalances(),
+        net: net.stats(),
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     })
@@ -447,6 +511,48 @@ impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
     }
+}
+
+/// Schedule worker `w`'s next async arrival: `base + compute + net + tail`
+/// on the event heap, with the roundtrip's network fate riding in the
+/// entry.  A dropped roundtrip still pops (the master "detects" the loss a
+/// full traversal later) but carries `delivers = false`, so the update is
+/// discarded and the worker retries.  With an ideal spec no network
+/// sampling happens and the arrival time degenerates to the pre-transport
+/// expression bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn schedule_async_arrival(
+    heap: &mut std::collections::BinaryHeap<std::cmp::Reverse<(OrdF64, usize, bool)>>,
+    base: f64,
+    tail: f64,
+    w: usize,
+    profiles: &[crate::straggler::StragglerProfile],
+    delay_rng: &mut Pcg64,
+    net: &crate::net::NetSpec,
+    net_ideal: bool,
+    seed: u64,
+    attempts: &mut [u64],
+    stats: &mut NetStats,
+) {
+    let compute = profiles[w].sample_latency(delay_rng);
+    let (delivers, net_delay) = if net_ideal {
+        stats.sent += 2;
+        stats.delivered += 2;
+        (true, 0.0)
+    } else {
+        // Async applies each arrival at most once, so the duplicated copy
+        // is not modelled here (`count_dup = false`); the attempt counter
+        // keys the per-message realization the way `iter` does for sync.
+        let r = net.realize(seed, w, attempts[w]);
+        let ok = stats.count_roundtrip(&r, false);
+        (ok, r.roundtrip_delay())
+    };
+    attempts[w] += 1;
+    heap.push(std::cmp::Reverse((
+        OrdF64(base + compute + net_delay + tail),
+        w,
+        delivers,
+    )));
 }
 
 fn run_async(
@@ -482,10 +588,25 @@ fn run_async(
     let mut version_given = vec![0u64; m];
     let mut version = 0u64;
 
-    let mut heap: BinaryHeap<Reverse<(OrdF64, usize)>> = BinaryHeap::new();
+    let net_ideal = cluster.net.is_ideal();
+    let mut net_stats = NetStats::default();
+    let mut stats_at_row = NetStats::default();
+    let mut attempts = vec![0u64; m];
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize, bool)>> = BinaryHeap::new();
     for w in 0..m {
-        let t = profiles[w].sample_latency(&mut delay_rngs[w]);
-        heap.push(Reverse((OrdF64(t), w)));
+        schedule_async_arrival(
+            &mut heap,
+            0.0,
+            0.0,
+            w,
+            &profiles,
+            &mut delay_rngs[w],
+            &cluster.net,
+            net_ideal,
+            cluster.seed,
+            &mut attempts,
+            &mut net_stats,
+        );
     }
 
     let mut opt = cfg.optimizer.build();
@@ -498,8 +619,26 @@ fn run_async(
     let mut scaled = vec![0.0f32; dim];
     let mut loss_ema: Option<f64> = None;
 
-    while let Some(Reverse((OrdF64(t), w))) = heap.pop() {
+    while let Some(Reverse((OrdF64(t), w, delivers))) = heap.pop() {
         now = t;
+        if !delivers {
+            // The network lost this roundtrip: the update never reaches
+            // the master; the worker retries from the same θ.
+            schedule_async_arrival(
+                &mut heap,
+                now,
+                0.0,
+                w,
+                &profiles,
+                &mut delay_rngs[w],
+                &cluster.net,
+                net_ideal,
+                cluster.seed,
+                &mut attempts,
+                &mut net_stats,
+            );
+            continue;
+        }
         // Failure check at delivery time.
         let ev = fstates[w].step(updates, &mut fail_rngs[w]);
         membership.observe(w, ev);
@@ -513,8 +652,19 @@ fn run_async(
             }
             FailureEvent::TransientDrop => {
                 // Result lost; worker retries from the same θ.
-                let dt = profiles[w].sample_latency(&mut delay_rngs[w]);
-                heap.push(Reverse((OrdF64(now + dt), w)));
+                schedule_async_arrival(
+                    &mut heap,
+                    now,
+                    0.0,
+                    w,
+                    &profiles,
+                    &mut delay_rngs[w],
+                    &cluster.net,
+                    net_ideal,
+                    cluster.seed,
+                    &mut attempts,
+                    &mut net_stats,
+                );
                 membership.record_abandoned(w);
                 continue;
             }
@@ -543,8 +693,19 @@ fn run_async(
         // Hand the worker fresh parameters; schedule its next arrival.
         theta_given[w].copy_from_slice(&theta);
         version_given[w] = version;
-        let dt = profiles[w].sample_latency(&mut delay_rngs[w]);
-        heap.push(Reverse((OrdF64(now + dt + cluster.master_overhead), w)));
+        schedule_async_arrival(
+            &mut heap,
+            now,
+            cluster.master_overhead,
+            w,
+            &profiles,
+            &mut delay_rngs[w],
+            &cluster.net,
+            net_ideal,
+            cluster.seed,
+            &mut attempts,
+            &mut net_stats,
+        );
 
         // Loss estimate: EMA over single-shard losses (noisy but cheap).
         if let Some(ls) = res.loss_sum {
@@ -567,6 +728,8 @@ fn run_async(
             } else {
                 (None, None)
             };
+            let dnet = net_stats.since(&stats_at_row);
+            stats_at_row = net_stats;
             rec.push(IterRow {
                 iter: updates,
                 time: now,
@@ -575,6 +738,9 @@ fn run_async(
                 theta_err,
                 included: 1,
                 abandoned: 0,
+                stale: 0,
+                dropped: dnet.dropped as usize,
+                duplicated: dnet.duplicated as usize,
                 alive: membership.alive(),
                 gamma: None,
                 grad_norm,
@@ -601,6 +767,7 @@ fn run_async(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: 0,
+        net: net_stats,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)
         } else {
@@ -1007,5 +1174,129 @@ mod tests {
             times.push(rep.total_time());
         }
         assert!(times[0] < times[1] && times[1] < times[2], "{times:?}");
+    }
+
+    #[test]
+    fn lossy_net_hybrid_converges_and_counts_drops() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.5 },
+            ..ClusterSpec::default()
+        }
+        .with_net(NetSpec::lossy(0.15));
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 5 })
+            .with_iters(600);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert!(rep.net.dropped > 0, "no drops at 15% loss: {:?}", rep.net);
+        assert_eq!(rep.net.sent, rep.net.delivered + rep.net.dropped);
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 5e-2, "theta_err={err}");
+    }
+
+    #[test]
+    fn duplicated_replies_are_abandoned_not_double_counted() {
+        use crate::net::{LinkModel, NetSpec};
+        let p = tiny_problem(6);
+        let net = NetSpec {
+            default_link: LinkModel { dup_prob: 0.5, dup_lag: 1e-4, ..LinkModel::ideal() },
+            ..NetSpec::ideal()
+        };
+        let base = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.5 },
+            ..ClusterSpec::default()
+        };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 6 })
+            .with_iters(200);
+        // γ = M and pure duplication (no drops): the included set each
+        // iteration is identical to the clean run, so θ matches exactly —
+        // every duplicate must land in `Abandoned`, never in the sum.
+        let mut pool_clean = p.native_pool();
+        let clean = run_virtual(&mut pool_clean, &base, &cfg, &NoEval).unwrap();
+        let mut pool_dup = p.native_pool();
+        let dup = run_virtual(&mut pool_dup, &base.clone().with_net(net), &cfg, &NoEval).unwrap();
+        assert!(dup.net.duplicated > 0, "{:?}", dup.net);
+        assert_eq!(dup.net.dropped, 0);
+        assert_eq!(clean.theta, dup.theta, "a duplicate leaked into the aggregate");
+        assert!(dup.total_abandoned >= dup.net.duplicated);
+        assert_eq!(clean.total_abandoned, 0);
+    }
+
+    #[test]
+    fn partition_window_suppresses_partitioned_workers() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_net(NetSpec::ideal().with_partition(&[4, 5], 10, 30));
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 6 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            // During the window only 4 replies can arrive, so γ=6 clamps
+            // to the deliverable 4 and the partitioned shards drop out.
+            let want = if (10..30).contains(&row.iter) { 4 } else { 6 };
+            assert_eq!(row.included, want, "iter {}", row.iter);
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.dropped, 2, "iter {}", row.iter);
+            } else {
+                assert_eq!(row.dropped, 0, "iter {}", row.iter);
+            }
+        }
+        // 2 workers × 20 iterations, one Work message each.
+        assert_eq!(rep.net.dropped, 40);
+    }
+
+    #[test]
+    fn bsp_retry_pays_for_network_loss() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(4);
+        let mk = |net: NetSpec| {
+            let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() }.with_net(net);
+            let mut cfg = base_cfg(&p).with_mode(SyncMode::Bsp).with_iters(120);
+            cfg.bsp_recovery = BspRecovery::Retry { detect_timeout: 0.05 };
+            let mut pool = p.native_pool();
+            run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+        };
+        let clean = mk(NetSpec::ideal());
+        let lossy = mk(NetSpec::lossy(0.2));
+        assert!(clean.status.is_healthy());
+        assert!(lossy.status.is_healthy());
+        // Retry keeps every shard contributing (θ identical to clean BSP)
+        // but pays detection + re-execution latency for every lost reply.
+        assert_eq!(clean.theta, lossy.theta);
+        assert!(
+            lossy.total_time() > clean.total_time() * 1.5,
+            "lossy {:.3}s vs clean {:.3}s",
+            lossy.total_time(),
+            clean.total_time()
+        );
+        assert!(lossy.net.dropped > 0);
+    }
+
+    #[test]
+    fn async_mode_survives_lossy_net() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_net(NetSpec::lossy(0.2));
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Async { damping: 0.0 })
+            .with_iters(1800);
+        cfg.optimizer = OptimizerKind::sgd(0.3);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert!(rep.net.dropped > 0, "{:?}", rep.net);
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 0.1, "theta_err={err}");
     }
 }

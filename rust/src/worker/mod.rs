@@ -16,8 +16,21 @@
 //! Contributions aggregate in ascending shard order, matching the
 //! simulator bit-for-bit on the fold order.  A scheduled leave is a
 //! master-side eviction — the slave thread survives, so a later scheduled
-//! join simply re-admits it.  (Joining a worker that *stochastically*
-//! crashed is not supported: its thread has stopped serving work.)
+//! join simply re-admits it.  Joining a worker that *stochastically*
+//! crashed is not supported — its thread has stopped serving — so the
+//! master tracks crashed threads and vetoes their scheduled joins instead
+//! of silently assigning shards to a ghost (supervisor-style respawn is a
+//! ROADMAP item).
+//!
+//! **Unreliable network**: the master wraps its channels in a
+//! [`crate::net::NetShim`].  Before each `Work` broadcast it plans the
+//! roundtrip (a dropped downlink suppresses the send; injected latency
+//! ships inside the message for the slave to sleep), and each received
+//! `Grad` is classified by the same pure per-message realization the
+//! virtual driver uses — dropped replies are discarded, duplicated ones
+//! offered to the barrier twice.  With a lossy spec, BSP degrades to
+//! closing on whatever replies can still arrive (the virtual driver
+//! instead models Hadoop-style retry; see `docs/NETWORK.md`).
 
 pub mod compute;
 pub mod slave;
@@ -28,7 +41,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cluster::{ClusterSpec, ElasticRuntime, MasterMsg, Membership, ShardGrad, WorkerMsg};
+use crate::cluster::{
+    ClusterSpec, ElasticKind, ElasticRuntime, MasterMsg, Membership, ShardGrad, WorkerMsg,
+};
 use crate::coordinator::aggregator::{aggregate, Contribution};
 use crate::coordinator::barrier::{Admission, PartialBarrier};
 use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
@@ -36,6 +51,7 @@ use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
 use crate::data::GradResult;
 use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
+use crate::net::{GradFate, NetShim, NetStats, WorkPlan};
 use crate::sim::EvalHooks;
 use crate::{Error, Result};
 
@@ -115,6 +131,12 @@ fn run_real_sync(
     // thread survives and is simply not broadcast to), so no extra
     // failure-state bookkeeping is needed in the event hook.
     let mut elastic = ElasticRuntime::new(&membership);
+    // Channel shim realizing the same per-message network fates as the
+    // virtual driver's transport.
+    let mut shim = NetShim::new(cluster.net.clone(), cluster.seed);
+    // Threads that simulated a stochastic crash and stopped serving: a
+    // scheduled join must not re-admit them (ghost workers).
+    let mut thread_crashed = vec![false; m];
 
     std::thread::scope(|scope| -> Result<()> {
         // --- spawn slaves ------------------------------------------------
@@ -140,7 +162,19 @@ fn run_real_sync(
                 &cluster.elastic,
                 cluster.rebalance_every,
                 &mut membership,
-                |_| {},
+                |ev| {
+                    if ev.kind == ElasticKind::Join && thread_crashed[ev.worker] {
+                        // Its thread simulated a crash and stopped serving:
+                        // re-admitting it would assign shards to a ghost.
+                        log::warn!(
+                            "iter {iter}: scheduled join of worker {} skipped — \
+                             its thread crashed and no supervisor respawn exists",
+                            ev.worker
+                        );
+                        return false;
+                    }
+                    true
+                },
             )?;
             if rebalanced {
                 log::debug!("iter {iter}: shard ownership rebalanced");
@@ -149,31 +183,53 @@ fn run_real_sync(
             let theta_arc = Arc::new(theta.clone());
             // One O(shards) pass instead of an O(shards) scan per worker.
             let mut assignment = elastic.ownership.grouped();
-            let mut broadcast = 0usize;
+            let stats_iter_start = shim.stats();
+            let mut deliverable = 0usize;
             for w in 0..m {
                 if membership.is_alive(w) {
+                    // Realize this worker's roundtrip.  A dropped downlink
+                    // suppresses the send; otherwise the injected network
+                    // latency rides inside the message for the slave to
+                    // sleep, so arrival order matches the virtual model.
+                    let (plan, reply_delivered) = shim.plan(w, iter);
+                    let net_delay = match plan {
+                        WorkPlan::Dropped => continue,
+                        WorkPlan::Deliver { net_delay } => net_delay,
+                    };
                     if work_txs[w]
                         .send(MasterMsg::Work {
                             iter,
                             theta: Arc::clone(&theta_arc),
                             shards: Arc::new(std::mem::take(&mut assignment[w])),
+                            net_delay,
                         })
                         .is_ok()
                     {
-                        broadcast += 1;
+                        if reply_delivered {
+                            deliverable += 1;
+                        }
                     } else {
                         membership.mark_down(w);
                     }
                 }
             }
-            if broadcast == 0 {
+            if membership.alive() == 0 {
                 status = RunStatus::ClusterDead { iter };
                 break;
             }
+            if deliverable == 0 {
+                // Every reply is destined to drop (lossy links or a
+                // partition window): nothing can close a barrier, so skip
+                // the iteration — the virtual driver burns the same window.
+                continue;
+            }
 
             let g_target = match (&cfg.mode, gamma) {
-                (SyncMode::Bsp, _) => membership.alive(),
-                (_, Some(g)) => g.min(membership.alive()),
+                // With a lossy net, real-mode BSP degrades to closing on
+                // whatever replies can still arrive (the virtual driver
+                // models Hadoop-style retry instead; see docs/NETWORK.md).
+                (SyncMode::Bsp, _) => deliverable,
+                (_, Some(g)) => g.min(deliverable),
                 (mode, None) => {
                     return Err(Error::Config(format!(
                         "mode {} unsupported in real sync driver",
@@ -183,6 +239,8 @@ fn run_real_sync(
             };
             let mut barrier = PartialBarrier::new(iter, m, g_target.max(1));
             let mut grads: Vec<ShardGrad> = Vec::with_capacity(g_target);
+            let mut iter_abandoned = 0usize;
+            let mut iter_stale = 0usize;
 
             // Collect until the barrier closes.
             while !barrier.is_closed() {
@@ -203,16 +261,31 @@ fn run_real_sync(
                         iter: msg_iter,
                         shards,
                         ..
-                    } => match barrier.offer(worker, msg_iter) {
-                        Admission::Included | Admission::IncludedAndClosed => {
-                            membership.record_contribution(worker);
-                            grads.extend(shards);
+                    } => {
+                        let duplicate = match shim.grad_fate(worker, msg_iter) {
+                            GradFate::Dropped => continue, // lost in flight
+                            GradFate::Deliver { duplicate } => duplicate,
+                        };
+                        let mut shards = shards;
+                        for _copy in 0..(1 + duplicate as usize) {
+                            match barrier.offer(worker, msg_iter) {
+                                Admission::Included | Admission::IncludedAndClosed => {
+                                    membership.record_contribution(worker);
+                                    grads.extend(std::mem::take(&mut shards));
+                                }
+                                Admission::Abandoned => {
+                                    membership.record_abandoned(worker);
+                                    iter_abandoned += 1;
+                                }
+                                Admission::Stale => {
+                                    membership.record_abandoned(worker);
+                                    iter_stale += 1;
+                                }
+                            }
                         }
-                        Admission::Abandoned | Admission::Stale => {
-                            membership.record_abandoned(worker);
-                        }
-                    },
+                    }
                     WorkerMsg::SimulatedCrash { worker, .. } => {
+                        thread_crashed[worker] = true;
                         membership.mark_down(worker);
                         match (&cfg.mode, cfg.bsp_recovery) {
                             (SyncMode::Bsp, BspRecovery::Stall) => {
@@ -224,13 +297,23 @@ fn run_real_sync(
                                     status = RunStatus::ClusterDead { iter };
                                     break 'iters;
                                 }
-                                // Close on fewer arrivals (BSP-retry in real
-                                // mode degrades to alive-only membership).
+                                // This worker's reply will never come
+                                // (whether it died on this broadcast or an
+                                // older one); if it was counted
+                                // deliverable, close on one fewer arrival.
+                                if shim.reply_expected(worker, iter) {
+                                    deliverable = deliverable.saturating_sub(1);
+                                }
                                 let new_target = match (&cfg.mode, gamma) {
-                                    (SyncMode::Bsp, _) => membership.alive(),
-                                    (_, Some(g)) => g.min(membership.alive()),
+                                    (SyncMode::Bsp, _) => deliverable,
+                                    (_, Some(g)) => g.min(deliverable),
                                     _ => unreachable!(),
                                 };
+                                if new_target == 0 && barrier.included() == 0 {
+                                    // Nothing arrived and nothing can:
+                                    // abandon the iteration entirely.
+                                    continue 'iters;
+                                }
                                 barrier.shrink_gamma(new_target.max(1));
                             }
                         }
@@ -244,11 +327,32 @@ fn run_real_sync(
                 continue;
             }
 
-            // Drain any already-queued stragglers without blocking.
+            // Drain any already-queued stragglers without blocking.  Only
+            // replies the network actually delivered count — a dropped
+            // reply never reached the coordinator — and, like the collect
+            // loop, older-iteration arrivals classify as stale rather than
+            // abandoned.
             while let Ok(msg) = res_rx.try_recv() {
                 match msg {
-                    WorkerMsg::Grad { worker, .. } => membership.record_abandoned(worker),
-                    WorkerMsg::SimulatedCrash { worker, .. } => membership.mark_down(worker),
+                    WorkerMsg::Grad { worker, iter: msg_iter, .. } => {
+                        if let GradFate::Deliver { duplicate } = shim.grad_fate(worker, msg_iter)
+                        {
+                            let copies = 1 + duplicate as usize;
+                            membership.record_abandoned(worker);
+                            if duplicate {
+                                membership.record_abandoned(worker);
+                            }
+                            if msg_iter == iter {
+                                iter_abandoned += copies;
+                            } else {
+                                iter_stale += copies;
+                            }
+                        }
+                    }
+                    WorkerMsg::SimulatedCrash { worker, .. } => {
+                        thread_crashed[worker] = true;
+                        membership.mark_down(worker);
+                    }
                     WorkerMsg::Fatal { worker, error } => {
                         return Err(Error::Cluster(format!("worker {worker} died: {error}")));
                     }
@@ -290,6 +394,7 @@ fn run_real_sync(
                 } else {
                     (None, None)
                 };
+                let dnet = shim.stats().since(&stats_iter_start);
                 rec.push(IterRow {
                     iter,
                     time: now,
@@ -297,7 +402,10 @@ fn run_real_sync(
                     eval_loss,
                     theta_err,
                     included: grads.len(),
-                    abandoned: 0,
+                    abandoned: iter_abandoned,
+                    stale: iter_stale,
+                    dropped: dnet.dropped as usize,
+                    duplicated: dnet.duplicated as usize,
                     alive: membership.alive(),
                     gamma,
                     grad_norm,
@@ -327,9 +435,34 @@ fn run_real_sync(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: elastic.rebalances(),
+        net: shim.stats(),
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     })
+}
+
+/// Plan one real-async roundtrip: realize worker `w`'s next message fate
+/// (keyed by its per-worker attempt counter, the async analogue of the
+/// sync drivers' iteration key), account it, and return the injected
+/// network latency the slave should sleep.  `reply_ok[w]` records whether
+/// the master will honor the reply or discard it and retransmit.
+fn plan_async_roundtrip(
+    net: &crate::net::NetSpec,
+    net_ideal: bool,
+    seed: u64,
+    w: usize,
+    attempts: &mut [u64],
+    reply_ok: &mut [bool],
+    stats: &mut NetStats,
+) -> f64 {
+    let r = if net_ideal {
+        crate::net::LinkRealization::ideal()
+    } else {
+        net.realize(seed, w, attempts[w])
+    };
+    attempts[w] += 1;
+    reply_ok[w] = stats.count_roundtrip(&r, false);
+    r.roundtrip_delay()
 }
 
 fn run_real_async(
@@ -360,16 +493,31 @@ fn run_real_async(
     let mut updates = 0u64;
     let mut scaled = vec![0.0f32; dim];
     let mut loss_ema: Option<f64> = None;
+    let net_ideal = cluster.net.is_ideal();
+    let mut net_stats = NetStats::default();
+    let mut stats_at_row = NetStats::default();
+    let mut attempts = vec![0u64; m];
+    let mut reply_ok = vec![true; m];
 
     std::thread::scope(|scope| -> Result<()> {
         let profiles = cluster.profiles();
         for w in 0..m {
             let (tx, rx) = mpsc::channel::<MasterMsg>();
             // Kick off the first round immediately.
+            let net_delay = plan_async_roundtrip(
+                &cluster.net,
+                net_ideal,
+                cluster.seed,
+                w,
+                &mut attempts,
+                &mut reply_ok,
+                &mut net_stats,
+            );
             tx.send(MasterMsg::Work {
                 iter: 0,
                 theta: Arc::new(theta.clone()),
                 shards: Arc::new(vec![w]),
+                net_delay,
             })
             .expect("fresh channel");
             work_txs.push(tx);
@@ -392,6 +540,30 @@ fn run_real_async(
             };
             match msg {
                 WorkerMsg::Grad { worker, shards, .. } => {
+                    if !reply_ok[worker] {
+                        // The network lost this roundtrip (Work down or
+                        // reply up): discard and retransmit.  The virtual
+                        // driver's worker retries from the θ it holds; here
+                        // the master hands fresh parameters with the
+                        // retransmission, which only reduces staleness.
+                        let net_delay = plan_async_roundtrip(
+                            &cluster.net,
+                            net_ideal,
+                            cluster.seed,
+                            worker,
+                            &mut attempts,
+                            &mut reply_ok,
+                            &mut net_stats,
+                        );
+                        version_given[worker] = version;
+                        let _ = work_txs[worker].send(MasterMsg::Work {
+                            iter: updates,
+                            theta: Arc::new(theta.clone()),
+                            shards: Arc::new(vec![worker]),
+                            net_delay,
+                        });
+                        continue;
+                    }
                     // Async workers always compute exactly their own shard.
                     let Some(sg) = shards.into_iter().next() else {
                         continue;
@@ -412,10 +584,20 @@ fn run_real_async(
                     version += 1;
                     updates += 1;
                     version_given[worker] = version;
+                    let net_delay = plan_async_roundtrip(
+                        &cluster.net,
+                        net_ideal,
+                        cluster.seed,
+                        worker,
+                        &mut attempts,
+                        &mut reply_ok,
+                        &mut net_stats,
+                    );
                     let _ = work_txs[worker].send(MasterMsg::Work {
                         iter: updates,
                         theta: Arc::new(theta.clone()),
                         shards: Arc::new(vec![worker]),
+                        net_delay,
                     });
 
                     if let Some(ls) = sg.loss_sum {
@@ -429,6 +611,8 @@ fn run_real_async(
                     let grad_norm = vec_ops::norm2(&scaled);
                     let stop = tracker.observe(updates.saturating_sub(1), loss, grad_norm);
                     if updates % (cfg.record_every.max(1) * m as u64) == 0 || stop.is_some() {
+                        let dnet = net_stats.since(&stats_at_row);
+                        stats_at_row = net_stats;
                         rec.push(IterRow {
                             iter: updates,
                             time: driver_start.elapsed().as_secs_f64(),
@@ -437,6 +621,9 @@ fn run_real_async(
                             theta_err: hooks.hook_theta_err(&theta),
                             included: 1,
                             abandoned: 0,
+                            stale: 0,
+                            dropped: dnet.dropped as usize,
+                            duplicated: dnet.duplicated as usize,
                             alive: membership.alive(),
                             gamma: None,
                             grad_norm,
@@ -476,6 +663,7 @@ fn run_real_async(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: 0,
+        net: net_stats,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)
         } else {

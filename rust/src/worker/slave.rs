@@ -39,9 +39,11 @@ pub fn worker_main(
     let mut fstate = FailureState::new(profile.failure.clone());
 
     while let Ok(msg) = rx.recv() {
-        let (mut iter, mut theta, mut shards) = match msg {
+        let (mut iter, mut theta, mut shards, mut net_delay) = match msg {
             MasterMsg::Shutdown => break,
-            MasterMsg::Work { iter, theta, shards } => (iter, theta, shards),
+            MasterMsg::Work { iter, theta, shards, net_delay } => {
+                (iter, theta, shards, net_delay)
+            }
         };
         // A straggling slave may find newer broadcasts already queued; jump
         // to the freshest θ (Algorithm 3 computes on whatever θ_t it holds —
@@ -53,10 +55,11 @@ pub fn worker_main(
                     shutdown = true;
                     break;
                 }
-                MasterMsg::Work { iter: i2, theta: t2, shards: s2 } => {
+                MasterMsg::Work { iter: i2, theta: t2, shards: s2, net_delay: n2 } => {
                     iter = i2;
                     theta = t2;
                     shards = s2;
+                    net_delay = n2;
                 }
             }
         }
@@ -83,10 +86,12 @@ pub fn worker_main(
         // Injected straggle: chronic slow factor applies to the base compute
         // budget, stochastic delay on top (see DESIGN.md §3).  Both scale
         // with the number of assigned shards (serial execution), matching
-        // the virtual driver's `latency × load` model.
+        // the virtual driver's `latency × load` model.  The master-planned
+        // network delay rides on top, un-scaled: one roundtrip per report.
         let extra = (profile.base_compute * (profile.slow_factor - 1.0).max(0.0)
             + profile.delay.sample(&mut delay_rng))
-            * shards.len().max(1) as f64;
+            * shards.len().max(1) as f64
+            + net_delay;
 
         compute.retain_shards(&shards);
         let t0 = Instant::now();

@@ -119,6 +119,77 @@ fn real_hybrid_survives_worker_crash() {
 }
 
 #[test]
+fn real_scheduled_join_skips_crashed_thread() {
+    // ROADMAP open item: a thread that simulated a stochastic crash stops
+    // serving, so a later *scheduled* join must not re-admit it — the
+    // master would otherwise assign shards to a ghost.  Worker 3 crashes
+    // with certainty at iteration 0; the schedule tries to join it at 6.
+    use hybriditer::cluster::ElasticSchedule;
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        failure: FailureModel {
+            crash_prob: 1.0,
+            transient_prob: 0.0,
+            rejoin_after: None,
+        },
+        failure_only: vec![3],
+        ..ClusterSpec::default()
+    }
+    .with_elastic(ElasticSchedule::parse("3:join@6").unwrap(), 1);
+    let coord = Coordinator::new(
+        cluster,
+        cfg(&p).with_mode(SyncMode::Hybrid { gamma: 2 }).with_iters(12),
+    )
+    .unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert_eq!(rep.crashes, 1);
+    assert_eq!(rep.rejoins, 0, "ghost worker was re-admitted");
+    for row in rep.recorder.rows() {
+        if row.iter >= 6 {
+            assert_eq!(row.alive, 3, "iter {}: ghost counted alive", row.iter);
+        }
+    }
+}
+
+#[test]
+fn real_lossy_net_keeps_training() {
+    // 15% message loss + duplication on real threads: the run must stay
+    // healthy, report network accounting, and still learn.
+    use hybriditer::net::{LinkModel, NetSpec};
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        delay: DelayModel::Constant { secs: 0.001 },
+        ..ClusterSpec::default()
+    }
+    .with_net(NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.15,
+            dup_prob: 0.15,
+            dup_lag: 0.0002,
+            ..LinkModel::ideal()
+        },
+        ..NetSpec::ideal()
+    });
+    let coord = Coordinator::new(
+        cluster,
+        cfg(&p).with_mode(SyncMode::Hybrid { gamma: 2 }).with_iters(150),
+    )
+    .unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(rep.net.dropped > 0, "{:?}", rep.net);
+    assert_eq!(rep.net.sent, rep.net.delivered + rep.net.dropped);
+    assert!(p.theta_err(&rep.theta) < 0.2, "err={}", p.theta_err(&rep.theta));
+}
+
+#[test]
 fn real_bsp_stall_detection_on_crash() {
     let p = problem(4);
     let cluster = ClusterSpec {

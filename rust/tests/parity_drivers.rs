@@ -14,6 +14,7 @@
 use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
 use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, RunReport, SyncMode};
 use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::net::{LinkModel, NetSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::worker::NativeKrrFactory;
@@ -153,6 +154,106 @@ fn parity_straggler_trace_same_abandonment_decisions() {
     assert_eq!(virt.total_abandoned, iters);
     assert!(real.total_abandoned > 0, "straggler never went stale");
 
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
+#[test]
+fn parity_ideal_net_reports_zero_perturbation() {
+    // The default NetSpec is ideal: both drivers must report clean message
+    // accounting (nothing dropped or duplicated) and identical send counts
+    // on a crash-free trace.
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 3,
+        ..ClusterSpec::default()
+    };
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: m },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(10);
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+    assert_eq!(virt.net.dropped, 0);
+    assert_eq!(virt.net.duplicated, 0);
+    assert_eq!(virt.net, real.net, "ideal-net accounting diverged");
+    // 2 messages per worker per iteration.
+    assert_eq!(virt.net.sent, 2 * m as u64 * 10);
+}
+
+#[test]
+fn parity_lossy_net_same_counts_decisions_and_theta() {
+    // Acceptance: with a lossy + duplicating NetSpec, both drivers realize
+    // the *same* per-message fates (delivered / dropped / duplicated per
+    // seed), make the same inclusion decisions, and land on the same θ.
+    // Timing is deterministic (well-separated chronic slow factors, zero
+    // net latency) so wall-clock arrival order equals virtual order.
+    let m = 4;
+    let p = problem(m);
+    let iters = 30;
+    let net = NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            dup_lag: 0.0005,
+            ..LinkModel::ideal()
+        },
+        ..NetSpec::ideal()
+    };
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 21,
+        ..ClusterSpec::default()
+    }
+    .with_net(net);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    // Identical message-level accounting — the same pure realization
+    // function drives both drivers.
+    assert_eq!(virt.net, real.net, "net accounting diverged");
+    assert!(virt.net.dropped > 0, "test spec produced no drops: {:?}", virt.net);
+    assert!(virt.net.duplicated > 0, "test spec produced no dups: {:?}", virt.net);
+    assert_eq!(virt.net.sent, virt.net.delivered + virt.net.dropped);
+
+    // Identical per-iteration inclusion decisions (rows align because both
+    // drivers skip exactly the all-dropped iterations).
+    assert_eq!(virt.recorder.len(), real.recorder.len());
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.iter, rr.iter, "row iteration mismatch");
+        assert_eq!(
+            rv.included, rr.included,
+            "iter {}: virtual included {}, real {}",
+            rv.iter, rv.included, rr.included
+        );
+        assert_eq!(rv.dropped, rr.dropped, "iter {} dropped", rv.iter);
+        assert_eq!(rv.duplicated, rr.duplicated, "iter {} duplicated", rv.iter);
+    }
+    assert_eq!(virt.total_contributions, real.total_contributions);
+
+    // Same included shard sets + same fold order ⇒ matching θ.
     let diff = max_theta_diff(&virt.theta, &real.theta);
     assert!(diff < 1e-5, "theta diverged: max diff {diff}");
 }

@@ -1,0 +1,264 @@
+//! Property tests for the unreliable-network transport layer:
+//! realization determinism, transport-schedule determinism, delivery
+//! accounting invariants, and [`PartialBarrier`] invariants under the
+//! duplication/reordering a lossy [`LinkModel`] injects.
+
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::barrier::{Admission, PartialBarrier};
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::net::{LinkModel, NetSpec, Transport, VirtualTransport};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+use hybriditer::util::proptest::check;
+use hybriditer::util::rng::Pcg64;
+
+/// Draw a random (but valid) lossy spec from the case RNG.
+fn draw_spec(rng: &mut Pcg64, workers: usize) -> NetSpec {
+    let link = LinkModel {
+        latency: if rng.next_f64() < 0.5 {
+            DelayModel::None
+        } else {
+            DelayModel::Uniform { lo: 0.0, hi: 0.01 }
+        },
+        drop_prob: rng.uniform(0.0, 0.5),
+        dup_prob: rng.uniform(0.0, 0.5),
+        dup_lag: rng.uniform(0.0, 0.002),
+    };
+    let mut spec = NetSpec { default_link: link, ..NetSpec::ideal() };
+    if rng.next_f64() < 0.3 {
+        let w = rng.below(workers as u64) as usize;
+        let from = rng.below(20);
+        spec = spec.with_partition(&[w], from, from + 1 + rng.below(20));
+    }
+    spec
+}
+
+#[test]
+fn prop_realize_is_a_pure_function() {
+    check("realize_pure", 50, |rng| {
+        let workers = 2 + rng.below(8) as usize;
+        let spec = draw_spec(rng, workers);
+        let seed = rng.next_u64();
+        for w in 0..workers {
+            for iter in 0..32u64 {
+                let a = spec.realize(seed, w, iter);
+                let b = spec.realize(seed, w, iter);
+                if a != b {
+                    return Err(format!("realize({seed}, {w}, {iter}) not pure: {a:?} vs {b:?}"));
+                }
+                if a.dup_lag < 0.0 || a.down_delay < 0.0 || a.up_delay < 0.0 {
+                    return Err(format!("negative delay realized: {a:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transport_schedule_deterministic() {
+    // Same seed + NetSpec ⇒ identical delivery order, times, and stats.
+    check("transport_deterministic", 30, |rng| {
+        let workers = 2 + rng.below(8) as usize;
+        let spec = draw_spec(rng, workers);
+        let seed = rng.next_u64();
+        let computes: Vec<f64> = (0..workers).map(|_| rng.uniform(0.001, 0.05)).collect();
+        let run = || {
+            let mut t = VirtualTransport::new(spec.clone(), seed);
+            let mut log = Vec::new();
+            for iter in 0..40u64 {
+                for w in 0..workers {
+                    t.send_roundtrip(w, iter, computes[w]);
+                }
+                while let Some(d) = t.poll() {
+                    log.push((d.at, d.worker, d.iter, d.duplicate));
+                }
+            }
+            (log, t.stats())
+        };
+        let (l1, s1) = run();
+        let (l2, s2) = run();
+        if l1 != l2 {
+            return Err("delivery schedules diverged for identical inputs".into());
+        }
+        if s1 != s2 {
+            return Err(format!("stats diverged: {s1:?} vs {s2:?}"));
+        }
+        if s1.sent != s1.delivered + s1.dropped {
+            return Err(format!("accounting invariant broken: {s1:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deliveries_arrive_in_time_order_and_dups_follow_primaries() {
+    check("poll_order", 30, |rng| {
+        let workers = 2 + rng.below(8) as usize;
+        let spec = draw_spec(rng, workers);
+        let seed = rng.next_u64();
+        let mut t = VirtualTransport::new(spec, seed);
+        for iter in 0..40u64 {
+            for w in 0..workers {
+                t.send_roundtrip(w, iter, rng.uniform(0.001, 0.05));
+            }
+            let mut last = f64::NEG_INFINITY;
+            let mut primary_seen = vec![false; workers];
+            while let Some(d) = t.poll() {
+                if d.at < last {
+                    return Err(format!("arrival at {} after {}", d.at, last));
+                }
+                last = d.at;
+                if d.duplicate {
+                    if !primary_seen[d.worker] {
+                        return Err(format!("dup for worker {} before its primary", d.worker));
+                    }
+                } else {
+                    if primary_seen[d.worker] {
+                        return Err(format!("two primaries for worker {}", d.worker));
+                    }
+                    primary_seen[d.worker] = true;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_barrier_invariants_under_lossy_link() {
+    // Feed the barrier exactly what a lossy, duplicating, reordering link
+    // delivers; its invariants must hold regardless of the spec drawn.
+    check("barrier_under_loss", 50, |rng| {
+        let workers = 2 + rng.below(10) as usize;
+        let gamma = 1 + rng.below(workers as u64) as usize;
+        let spec = draw_spec(rng, workers);
+        let seed = rng.next_u64();
+        let mut t = VirtualTransport::new(spec, seed);
+        for iter in 0..25u64 {
+            for w in 0..workers {
+                t.send_roundtrip(w, iter, rng.uniform(0.001, 0.05));
+            }
+            let deliverable = t.deliverable();
+            if deliverable == 0 {
+                continue;
+            }
+            let g_eff = gamma.min(deliverable);
+            let mut barrier = PartialBarrier::new(iter, workers, g_eff);
+            let mut included = vec![false; workers];
+            let mut n_included = 0usize;
+            while let Some(d) = t.poll() {
+                match barrier.offer(d.worker, d.iter) {
+                    Admission::Included | Admission::IncludedAndClosed => {
+                        if d.duplicate {
+                            return Err("duplicate copy admitted".into());
+                        }
+                        if included[d.worker] {
+                            return Err(format!("worker {} admitted twice", d.worker));
+                        }
+                        if barrier.is_closed() && barrier.included() > g_eff {
+                            return Err("barrier overfilled".into());
+                        }
+                        included[d.worker] = true;
+                        n_included += 1;
+                    }
+                    Admission::Abandoned => {
+                        if !barrier.is_closed() && !included[d.worker] && !d.duplicate {
+                            return Err(format!(
+                                "fresh primary from worker {} abandoned pre-close",
+                                d.worker
+                            ));
+                        }
+                    }
+                    Admission::Stale => {
+                        return Err("sync transport delivered a stale iteration".into());
+                    }
+                }
+            }
+            if n_included != g_eff {
+                return Err(format!("included {n_included}, γ_eff {g_eff}"));
+            }
+            if !barrier.is_closed() {
+                return Err("barrier never closed despite γ_eff deliveries".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_driver_deterministic_under_lossy_net() {
+    // Same seed + NetSpec ⇒ bit-identical trajectory, counts, and stats
+    // from the virtual driver.
+    let spec = KrrProblemSpec {
+        config: "propnet".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines: 6,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 23,
+    };
+    let p = KrrProblem::generate(&spec).unwrap();
+    check("sim_lossy_deterministic", 6, |rng| {
+        let net = draw_spec(rng, 6);
+        let cluster = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        }
+        .with_net(net);
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma: 4 },
+            optimizer: OptimizerKind::sgd(0.8),
+            loss_form: LossForm::krr(p.spec.lambda),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(60);
+        let mut pool1 = p.native_pool();
+        let r1 = sim::run_virtual(&mut pool1, &cluster, &cfg, &NoEval).unwrap();
+        let mut pool2 = p.native_pool();
+        let r2 = sim::run_virtual(&mut pool2, &cluster, &cfg, &NoEval).unwrap();
+        if r1.theta != r2.theta {
+            return Err("theta diverged across identical runs".into());
+        }
+        if r1.net != r2.net {
+            return Err(format!("net stats diverged: {:?} vs {:?}", r1.net, r2.net));
+        }
+        if r1.total_abandoned != r2.total_abandoned
+            || r1.total_contributions != r2.total_contributions
+        {
+            return Err("admission totals diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_empirical_drop_rate_tracks_spec() {
+    // Over many roundtrips the observed message drop rate must track the
+    // configured probability (loose 3σ-ish tolerance).
+    for &p in &[0.05, 0.2, 0.4] {
+        let mut t = VirtualTransport::new(NetSpec::lossy(p), 0xD0_5EED);
+        for iter in 0..2000u64 {
+            for w in 0..4 {
+                t.send_roundtrip(w, iter, 0.01);
+            }
+            while t.poll().is_some() {}
+        }
+        let s = t.stats();
+        let rate = s.drop_rate();
+        assert!(
+            (rate - p).abs() < 0.02,
+            "configured {p}, observed {rate} ({s:?})"
+        );
+    }
+}
