@@ -7,11 +7,15 @@
 //! time-to-target crossover table.  Expected shape: hybrid reaches every
 //! loss target first; BSP is latest (tail-latency bound); async sits
 //! between (no barrier, but stale gradients slow convergence per update).
+//!
+//! The three mode runs execute concurrently on the sweep engine
+//! (`--threads N` overrides the pool size).
 
+use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
-use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::metrics::csv;
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim;
@@ -19,42 +23,47 @@ use hybriditer::straggler::DelayModel;
 
 fn main() {
     let m = 16;
+    let engine = SweepEngine::from_env();
     let spec = KrrProblemSpec::small().with_machines(m);
-    let problem = KrrProblem::generate(&spec).unwrap();
+    let problem = engine.cache().get(&spec);
     let loss_star = problem.loss_star;
     println!("F1: time-to-loss — M={m}, lognormal(σ=1) + 2 slow nodes @10x");
-    println!("optimal training loss (exact solver): {loss_star:.6}\n");
+    println!("optimal training loss (exact solver): {loss_star:.6}");
+    println!("sweep pool: {} threads\n", engine.threads());
 
-    let cluster = || {
-        ClusterSpec {
+    let iters = 400u64;
+    let gamma = m * 3 / 4;
+    let points: [(&str, SyncMode, u64, f64); 3] = [
+        ("bsp", SyncMode::Bsp, iters, 1.0),
+        ("async", SyncMode::Async { damping: 0.0 }, iters * m as u64, 0.35),
+        ("hybrid", SyncMode::Hybrid { gamma }, iters, 1.0),
+    ];
+    let runs = engine.run(&points, |cache, (_, mode, n_iters, eta)| {
+        let problem = cache.get(&spec);
+        let cluster = ClusterSpec {
             workers: m,
             base_compute: 0.01,
             delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
             ..ClusterSpec::default()
         }
-        .with_slow_tail(2, 10.0)
-    };
-    let run = |mode: SyncMode, iters: u64, eta: f64| -> RunReport {
+        .with_slow_tail(2, 10.0);
         let cfg = RunConfig {
-            mode,
-            optimizer: OptimizerKind::sgd(eta),
+            mode: mode.clone(),
+            optimizer: OptimizerKind::sgd(*eta),
             loss_form: LossForm::krr(spec.lambda),
             eval_every: 0,
             record_every: 1,
             ..RunConfig::default()
         }
-        .with_iters(iters);
+        .with_iters(*n_iters);
         let mut pool = problem.native_pool();
-        sim::run_virtual(&mut pool, &cluster(), &cfg, &sim::NoEval).unwrap()
-    };
-
-    let iters = 400;
-    let gamma = m * 3 / 4;
-    let reports = vec![
-        ("bsp", run(SyncMode::Bsp, iters, 1.0)),
-        ("async", run(SyncMode::Async { damping: 0.0 }, iters * m as u64, 0.35)),
-        ("hybrid", run(SyncMode::Hybrid { gamma }, iters, 1.0)),
-    ];
+        sim::run_virtual(&mut pool, &cluster, &cfg, &sim::NoEval).unwrap()
+    });
+    let reports: Vec<(&str, _)> = points
+        .iter()
+        .map(|(name, ..)| *name)
+        .zip(runs)
+        .collect();
 
     // Series CSVs (downsampled print).
     for (name, rep) in &reports {

@@ -10,11 +10,16 @@
 //! terminal status and progress.  Expected: BSP-stall dies immediately,
 //! BSP-retry survives with growing overhead, hybrid sails until the alive
 //! count drops below γ.
+//!
+//! All three parts' sweep points run concurrently on the sweep engine
+//! (`--threads N` overrides the pool size); each point is seed-determined,
+//! so the tables match a serial run exactly.
 
+use hybriditer::bench_harness::sweep::{ProblemCache, SweepEngine};
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
 use hybriditer::coordinator::{BspRecovery, LossForm, RunConfig, RunStatus, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::straggler::{DelayModel, FailureModel};
@@ -23,9 +28,15 @@ const M: usize = 16;
 const ITERS: u64 = 150;
 const SEEDS: u64 = 3;
 
-fn mean_time(mode: SyncMode, delay: DelayModel, failure: FailureModel, recovery: BspRecovery) -> (f64, String, u64) {
+fn mean_time(
+    cache: &ProblemCache,
+    mode: SyncMode,
+    delay: DelayModel,
+    failure: FailureModel,
+    recovery: BspRecovery,
+) -> (f64, String, u64) {
     let spec = KrrProblemSpec::small().with_machines(M);
-    let problem = KrrProblem::generate(&spec).unwrap();
+    let problem = cache.get(&spec);
     let mut times = Vec::new();
     let mut status = String::new();
     let mut iters_done = 0;
@@ -67,7 +78,11 @@ fn mean_time(mode: SyncMode, delay: DelayModel, failure: FailureModel, recovery:
 }
 
 fn main() {
-    println!("F2: straggler severity sweep + fault tolerance — M={M}, {ITERS} iters, {SEEDS} seeds\n");
+    let engine = SweepEngine::from_env();
+    println!(
+        "F2: straggler severity sweep + fault tolerance — M={M}, {ITERS} iters, {SEEDS} seeds"
+    );
+    println!("sweep pool: {} threads\n", engine.threads());
 
     // Part 1: severity sweep.
     let gamma = M * 3 / 4;
@@ -75,26 +90,38 @@ fn main() {
         format!("F2a speedup vs lognormal sigma (gamma={gamma})"),
         &["sigma", "bsp_s", "hybrid_s", "async_s", "hybrid_speedup"],
     );
-    for &sigma in &[0.0, 0.5, 1.0, 1.5, 2.0] {
+    let sigmas = [0.0, 0.5, 1.0, 1.5, 2.0];
+    let severity = engine.run(&sigmas, |cache, &sigma| {
         let delay = if sigma == 0.0 {
             DelayModel::None
         } else {
             DelayModel::LogNormal { mu: -4.0, sigma }
         };
         let none = FailureModel::none();
-        let (bsp, _, _) = mean_time(SyncMode::Bsp, delay.clone(), none.clone(), BspRecovery::Stall);
+        let (bsp, _, _) = mean_time(
+            cache,
+            SyncMode::Bsp,
+            delay.clone(),
+            none.clone(),
+            BspRecovery::Stall,
+        );
         let (hyb, _, _) = mean_time(
+            cache,
             SyncMode::Hybrid { gamma },
             delay.clone(),
             none.clone(),
             BspRecovery::Stall,
         );
         let (asy, _, _) = mean_time(
+            cache,
             SyncMode::Async { damping: 0.0 },
             delay,
             none,
             BspRecovery::Stall,
         );
+        (bsp, hyb, asy)
+    });
+    for (&sigma, &(bsp, hyb, asy)) in sigmas.iter().zip(&severity) {
         t1.row(vec![
             f(sigma, 1),
             f(bsp, 2),
@@ -111,7 +138,8 @@ fn main() {
         format!("F2b fault tolerance vs crash probability (gamma={})", M / 2),
         &["crash_prob", "bsp_stall", "bsp_retry_s", "hybrid_s", "hybrid_status"],
     );
-    for &p in &[0.0, 0.001, 0.005, 0.01, 0.02] {
+    let probs = [0.0, 0.001, 0.005, 0.01, 0.02];
+    let crash = engine.run(&probs, |cache, &p| {
         let failure = FailureModel {
             crash_prob: p,
             transient_prob: 0.0,
@@ -119,29 +147,35 @@ fn main() {
         };
         let delay = DelayModel::LogNormal { mu: -4.0, sigma: 0.5 };
         let (_, stall_status, stall_iters) = mean_time(
+            cache,
             SyncMode::Bsp,
             delay.clone(),
             failure.clone(),
             BspRecovery::Stall,
         );
         let (retry_t, _, _) = mean_time(
+            cache,
             SyncMode::Bsp,
             delay.clone(),
             failure.clone(),
             BspRecovery::Retry { detect_timeout: 0.05 },
         );
         let (hyb_t, hyb_status, _) = mean_time(
+            cache,
             SyncMode::Hybrid { gamma: M / 2 },
             delay,
             failure,
             BspRecovery::Stall,
         );
+        (stall_status, stall_iters, retry_t, hyb_t, hyb_status)
+    });
+    for (&p, (stall_status, stall_iters, retry_t, hyb_t, hyb_status)) in probs.iter().zip(&crash) {
         t2.row(vec![
             f(p, 3),
             format!("{stall_status} ({stall_iters} iters)"),
-            f(retry_t, 2),
-            f(hyb_t, 2),
-            hyb_status,
+            f(*retry_t, 2),
+            f(*hyb_t, 2),
+            hyb_status.clone(),
         ]);
     }
     t2.print();
@@ -156,14 +190,15 @@ fn main() {
         format!("F2c elastic churn: 2/{M} leave@50 join@100 (gamma={gamma3})"),
         &["policy", "time_s", "final_loss", "theta_err", "rebalances"],
     );
-    let spec = KrrProblemSpec::small().with_machines(M);
-    let problem = KrrProblem::generate(&spec).unwrap();
     let churn = ElasticSchedule::crash_and_rejoin(&[M - 2, M - 1], 50, 100);
-    for (name, elastic, rebalance_every) in [
+    let policies = [
         ("static", ElasticSchedule::default(), 0u64),
         ("churn-orphaned", churn.clone(), 0),
         ("churn-rebalanced", churn.clone(), 1),
-    ] {
+    ];
+    let spec = KrrProblemSpec::small().with_machines(M);
+    let churn_rows = engine.run(&policies, |cache, (_, elastic, rebalance_every)| {
+        let problem = cache.get(&spec);
         let cluster = ClusterSpec {
             workers: M,
             base_compute: 0.01,
@@ -171,7 +206,7 @@ fn main() {
             seed: 44,
             ..ClusterSpec::default()
         }
-        .with_elastic(elastic, rebalance_every);
+        .with_elastic(elastic.clone(), *rebalance_every);
         let cfg = RunConfig {
             mode: SyncMode::Hybrid { gamma: gamma3 },
             optimizer: OptimizerKind::sgd(1.0),
@@ -182,15 +217,21 @@ fn main() {
         }
         .with_iters(ITERS);
         let mut pool = problem.native_pool();
-        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &problem).unwrap();
+        let rep = sim::run_virtual(&mut pool, &cluster, &cfg, problem.as_ref()).unwrap();
+        (
+            rep.total_time(),
+            rep.final_loss(),
+            rep.final_theta_err(),
+            rep.rebalances,
+        )
+    });
+    for ((name, _, _), (time, loss, err, rebalances)) in policies.iter().zip(&churn_rows) {
         t3.row(vec![
             name.to_string(),
-            f(rep.total_time(), 2),
-            format!("{:.6}", rep.final_loss()),
-            rep.final_theta_err()
-                .map(|e| format!("{e:.3e}"))
-                .unwrap_or_else(|| "-".into()),
-            rep.rebalances.to_string(),
+            f(*time, 2),
+            format!("{loss:.6}"),
+            err.map(|e| format!("{e:.3e}")).unwrap_or_else(|| "-".into()),
+            rebalances.to_string(),
         ]);
     }
     t3.print();

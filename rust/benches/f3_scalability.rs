@@ -6,29 +6,37 @@
 //! statistic (flat-ish), so the gap widens with M — the paper's "scalable
 //! platforms" motivation.  Async throughput scales linearly but each
 //! update uses one shard only.
+//!
+//! The M-points run concurrently on the sweep engine (`--threads N`
+//! overrides the pool size); each point is seed-determined, so the table
+//! matches a serial run exactly.
 
+use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::straggler::DelayModel;
 
 fn main() {
     let iters = 120u64;
-    println!("F3: iteration-time scalability — lognormal(mu=-4, sigma=1), {iters} iters\n");
+    let engine = SweepEngine::from_env();
+    println!("F3: iteration-time scalability — lognormal(mu=-4, sigma=1), {iters} iters");
+    println!("sweep pool: {} threads\n", engine.threads());
 
     let mut table = Table::new(
         "F3 mean time per iteration vs M",
         &["M", "gamma", "bsp_ms", "hybrid_ms", "async_ms_per_update_x_M", "bsp/hybrid"],
     );
-    for &m in &[2usize, 4, 8, 16, 32, 64] {
+    let ms = [2usize, 4, 8, 16, 32, 64];
+    let rows = engine.run(&ms, |cache, &m| {
         let spec = KrrProblemSpec {
             machines: m,
             ..KrrProblemSpec::small()
         };
-        let problem = KrrProblem::generate(&spec).unwrap();
+        let problem = cache.get(&spec);
         let cluster = ClusterSpec {
             workers: m,
             base_compute: 0.01,
@@ -36,7 +44,7 @@ fn main() {
             ..ClusterSpec::default()
         };
         let gamma = (m * 3 / 4).max(1);
-        let mut per_iter = |mode: SyncMode, n_iters: u64| -> f64 {
+        let per_iter = |mode: SyncMode, n_iters: u64| -> f64 {
             let cfg = RunConfig {
                 mode,
                 optimizer: OptimizerKind::sgd(1.0),
@@ -53,6 +61,9 @@ fn main() {
         let bsp = per_iter(SyncMode::Bsp, iters);
         let hyb = per_iter(SyncMode::Hybrid { gamma }, iters);
         let asy = per_iter(SyncMode::Async { damping: 0.0 }, iters * m as u64) * m as f64;
+        (gamma, bsp, hyb, asy)
+    });
+    for (&m, &(gamma, bsp, hyb, asy)) in ms.iter().zip(&rows) {
         table.row(vec![
             m.to_string(),
             gamma.to_string(),

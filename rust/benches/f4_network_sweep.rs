@@ -6,6 +6,10 @@
 //! train to a fixed convergence target — 90% of the initial→optimal loss
 //! gap closed — and report iterations- and virtual-time-to-target.
 //!
+//! The 15 (drop × γ) cells run concurrently on the sweep engine
+//! (`--threads N` overrides the pool size); every cell shares the cached
+//! problem, so generation's Cholesky solve happens once.
+//!
 //! Expected reading: drops act like extra abandonment, so
 //! iterations-to-target inflate with the drop rate, and a mid-sized γ
 //! (which already plans for missing replies) degrades more gracefully
@@ -13,6 +17,7 @@
 //! membership).  The γ=12 drop-sweep headline lands in
 //! `results/BENCH_f4_network.json` as a trajectory point.
 
+use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
@@ -63,13 +68,15 @@ struct Cell {
 }
 
 fn main() {
+    let engine = SweepEngine::from_env();
     println!(
         "F4: drop rate × gamma network sweep — M={M}, {ITERS} iters cap, {SEEDS} seeds, \
-         target = {:.0}% of loss gap closed\n",
+         target = {:.0}% of loss gap closed",
         (1.0 - GAP_FRACTION) * 100.0
     );
+    println!("sweep pool: {} threads\n", engine.threads());
     let spec = KrrProblemSpec::small().with_machines(M);
-    let problem = KrrProblem::generate(&spec).unwrap();
+    let problem = engine.cache().get(&spec);
 
     // The clean γ=M reference defines the absolute loss target.
     let reference = run_once(&problem, M, 0.0, 0);
@@ -99,59 +106,64 @@ fn main() {
             "abandon_pct",
         ],
     );
-    let mut cells: Vec<Cell> = Vec::new();
+    let mut points: Vec<(f64, usize)> = Vec::new();
     for &drop in &[0.0, 0.05, 0.1, 0.2, 0.3] {
         for &gamma in &[M / 2, M * 3 / 4, M] {
-            let mut iters_sum = 0.0;
-            let mut time_sum = 0.0;
-            let mut reached = 0u64;
-            let mut final_loss = 0.0;
-            let mut dropped = 0u64;
-            let mut duplicated = 0u64;
-            let mut abandon = 0.0;
-            for seed in 0..SEEDS {
-                let rep = run_once(&problem, gamma, drop, seed);
-                match rep.recorder.iters_to_loss(target) {
-                    Some(it) => {
-                        iters_sum += it as f64;
-                        time_sum += rep.recorder.time_to_loss(target).unwrap_or(0.0);
-                        reached += 1;
-                    }
-                    None => {
-                        iters_sum += ITERS as f64;
-                        time_sum += rep.total_time();
-                    }
-                }
-                final_loss += rep.final_loss();
-                dropped += rep.net.dropped;
-                duplicated += rep.net.duplicated;
-                abandon += rep.abandon_rate();
-            }
-            let n = SEEDS as f64;
-            let cell = Cell {
-                drop,
-                gamma,
-                iters: iters_sum / n,
-                time: time_sum / n,
-                reached,
-                final_loss: final_loss / n,
-                dropped,
-                duplicated,
-                abandon_pct: abandon / n * 100.0,
-            };
-            table.row(vec![
-                f(cell.drop, 2),
-                cell.gamma.to_string(),
-                f(cell.iters, 1),
-                f(cell.time, 3),
-                format!("{}/{}", cell.reached, SEEDS),
-                format!("{:.6}", cell.final_loss),
-                cell.dropped.to_string(),
-                cell.duplicated.to_string(),
-                f(cell.abandon_pct, 1),
-            ]);
-            cells.push(cell);
+            points.push((drop, gamma));
         }
+    }
+    let cells: Vec<Cell> = engine.run(&points, |cache, &(drop, gamma)| {
+        let problem = cache.get(&spec);
+        let mut iters_sum = 0.0;
+        let mut time_sum = 0.0;
+        let mut reached = 0u64;
+        let mut final_loss = 0.0;
+        let mut dropped = 0u64;
+        let mut duplicated = 0u64;
+        let mut abandon = 0.0;
+        for seed in 0..SEEDS {
+            let rep = run_once(&problem, gamma, drop, seed);
+            match rep.recorder.iters_to_loss(target) {
+                Some(it) => {
+                    iters_sum += it as f64;
+                    time_sum += rep.recorder.time_to_loss(target).unwrap_or(0.0);
+                    reached += 1;
+                }
+                None => {
+                    iters_sum += ITERS as f64;
+                    time_sum += rep.total_time();
+                }
+            }
+            final_loss += rep.final_loss();
+            dropped += rep.net.dropped;
+            duplicated += rep.net.duplicated;
+            abandon += rep.abandon_rate();
+        }
+        let n = SEEDS as f64;
+        Cell {
+            drop,
+            gamma,
+            iters: iters_sum / n,
+            time: time_sum / n,
+            reached,
+            final_loss: final_loss / n,
+            dropped,
+            duplicated,
+            abandon_pct: abandon / n * 100.0,
+        }
+    });
+    for cell in &cells {
+        table.row(vec![
+            f(cell.drop, 2),
+            cell.gamma.to_string(),
+            f(cell.iters, 1),
+            f(cell.time, 3),
+            format!("{}/{}", cell.reached, SEEDS),
+            format!("{:.6}", cell.final_loss),
+            cell.dropped.to_string(),
+            cell.duplicated.to_string(),
+            f(cell.abandon_pct, 1),
+        ]);
     }
     table.print();
     table.save_csv("f4_network_sweep").unwrap();
@@ -168,7 +180,7 @@ fn main() {
         .find(|c| c.drop == 0.1 && c.gamma == g_ref)
         .expect("lossy cell");
     let inflation = if clean.iters > 0.0 { lossy.iters / clean.iters } else { f64::NAN };
-    let points: Vec<String> = cells
+    let points_json: Vec<String> = cells
         .iter()
         .map(|c| {
             format!(
@@ -186,11 +198,14 @@ fn main() {
          \"points\": [\n{}\n  ]\n}}\n",
         clean.iters,
         lossy.iters,
-        points.join(",\n")
+        points_json.join(",\n")
     );
     std::fs::create_dir_all("results").unwrap();
     std::fs::write("results/BENCH_f4_network.json", json).unwrap();
-    println!("\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2})", clean.iters, lossy.iters);
+    println!(
+        "\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2})",
+        clean.iters, lossy.iters
+    );
     println!("trajectory point -> results/BENCH_f4_network.json");
 
     println!(

@@ -2,30 +2,47 @@
 //! performance pass (EXPERIMENTS.md §Perf).
 //!
 //! Times each stage of one coordinator iteration in isolation:
-//! native shard gradient, XLA shard gradient (PJRT dispatch + pallas
-//! kernel), aggregation, optimizer step, barrier bookkeeping, and one
-//! whole virtual iteration — so regressions in any stage are visible
-//! without a profiler.
+//! native shard gradient (fused kernel *and* the two-pass reference it
+//! replaced), XLA shard gradient (PJRT dispatch + pallas kernel),
+//! aggregation, optimizer step, barrier bookkeeping, and one whole virtual
+//! iteration — so regressions in any stage are visible without a profiler.
+//!
+//! Emits `results/BENCH_micro_hotpath.json` with per-stage mean/p50/p99 and
+//! a `fused_speedup` headline (reference mean / fused mean on the default
+//! config), the machine-readable perf-trajectory point this and future PRs
+//! compare against.  Runs strictly serially — timing a stage while other
+//! sweep points share the cores would corrupt the numbers.
 
 use std::hint::black_box;
 
-use hybriditer::bench_harness::Bench;
+use hybriditer::bench_harness::{Bench, BenchResult};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::aggregator::{aggregate, AggregatorKind, Contribution};
 use hybriditer::coordinator::barrier::PartialBarrier;
 use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
-use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::data::{ComputePool, GradResult, KrrProblem, KrrProblemSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::runtime::{ArtifactSet, Engine};
 use hybriditer::sim::{self, NoEval};
 use hybriditer::util::rng::Pcg64;
 use hybriditer::worker::compute::XlaKrrPool;
 
+fn json_stage(r: &BenchResult) -> String {
+    format!(
+        "    {{\"name\": \"{}\", \"samples\": {}, \"mean_s\": {:.9e}, \"p50_s\": {:.9e}, \
+         \"p99_s\": {:.9e}, \"throughput_hz\": {:.3}}}",
+        r.name, r.samples, r.mean, r.p50, r.p99, r.throughput_hz
+    )
+}
+
 fn main() {
     println!("micro_hotpath: per-stage latencies of one coordinator iteration\n");
     let mut rng = Pcg64::seeded(1);
+    let mut stages: Vec<BenchResult> = Vec::new();
+    let mut fused_default_mean = f64::NAN;
+    let mut reference_default_mean = f64::NAN;
 
-    // --- shard gradient: native vs XLA, small & default configs --------
+    // --- shard gradient: fused vs reference vs XLA, three configs --------
     for (cfg_name, spec) in [
         ("small (zeta=256, l=32)", KrrProblemSpec::small().with_machines(2)),
         ("default (zeta=2048, l=64)", KrrProblemSpec::default_config().with_machines(2)),
@@ -34,11 +51,24 @@ fn main() {
         let problem = KrrProblem::generate(&spec).unwrap();
         let mut theta = vec![0.0f32; problem.dim()];
         rng.fill_normal(&mut theta, 0.0, 1.0);
+        let mut out = GradResult::empty();
 
         let mut native = problem.native_pool();
-        Bench::new(format!("grad/native/{cfg_name}")).run(|| {
-            black_box(native.grad(0, black_box(&theta), 0).unwrap());
+        let fused = Bench::new(format!("grad/native/{cfg_name}")).run(|| {
+            native.grad_into(0, black_box(&theta), 0, &mut out).unwrap();
+            black_box(&out);
         });
+        let mut reference = problem.reference_pool();
+        let refr = Bench::new(format!("grad/native-reference/{cfg_name}")).run(|| {
+            reference.grad_into(0, black_box(&theta), 0, &mut out).unwrap();
+            black_box(&out);
+        });
+        if cfg_name.starts_with("default") {
+            fused_default_mean = fused.mean;
+            reference_default_mean = refr.mean;
+        }
+        stages.push(fused);
+        stages.push(refr);
 
         if let Ok(artifacts) = ArtifactSet::discover() {
             let engine = Engine::cpu().unwrap();
@@ -50,9 +80,10 @@ fn main() {
                 spec.lambda as f32,
             )
             .unwrap();
-            Bench::new(format!("grad/xla/{cfg_name}")).run(|| {
-                black_box(xla_pool.grad(0, black_box(&theta), 0).unwrap());
-            });
+            stages.push(Bench::new(format!("grad/xla/{cfg_name}")).run(|| {
+                xla_pool.grad_into(0, black_box(&theta), 0, &mut out).unwrap();
+                black_box(&out);
+            }));
         }
     }
 
@@ -70,9 +101,9 @@ fn main() {
             .map(|g| Contribution { grad: g, examples: 256, staleness: 0 })
             .collect();
         let mut out = vec![0.0f32; dim];
-        Bench::new(format!("aggregate/mean/k={k},dim={dim}")).run(|| {
+        stages.push(Bench::new(format!("aggregate/mean/k={k},dim={dim}")).run(|| {
             black_box(aggregate(AggregatorKind::Mean, black_box(&contribs), &mut out));
-        });
+        }));
     }
 
     // --- optimizer steps --------------------------------------------------
@@ -87,25 +118,25 @@ fn main() {
     ] {
         let mut opt = kind.build();
         let mut it = 0u64;
-        Bench::new(format!("optim/{}/dim={dim}", kind.name())).run(|| {
+        stages.push(Bench::new(format!("optim/{}/dim={dim}", kind.name())).run(|| {
             opt.step(black_box(&mut theta), black_box(&grad), it);
             it += 1;
-        });
+        }));
     }
 
     // --- barrier bookkeeping ---------------------------------------------
-    Bench::new("barrier/offer x32").run(|| {
+    stages.push(Bench::new("barrier/offer x32").run(|| {
         let mut b = PartialBarrier::new(0, 32, 24);
         for w in 0..32 {
             black_box(b.offer(w, 0));
         }
-    });
+    }));
 
     // --- one whole virtual iteration (native, M=16) -----------------------
     let spec = KrrProblemSpec::small().with_machines(16);
     let problem = KrrProblem::generate(&spec).unwrap();
     let cluster = ClusterSpec { workers: 16, ..ClusterSpec::default() };
-    Bench::new("sim/whole-run-100-iters/M=16,small").run(|| {
+    stages.push(Bench::new("sim/whole-run-100-iters/M=16,small").run(|| {
         let cfg = RunConfig {
             mode: SyncMode::Hybrid { gamma: 12 },
             optimizer: OptimizerKind::sgd(1.0),
@@ -117,5 +148,25 @@ fn main() {
         .with_iters(100);
         let mut pool = problem.native_pool();
         black_box(sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap());
-    });
+    }));
+
+    // --- machine-readable trajectory point --------------------------------
+    let fused_speedup = reference_default_mean / fused_default_mean;
+    let rows: Vec<String> = stages.iter().map(json_stage).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"micro_hotpath\",\n  \"headline\": {{\n    \
+         \"grad_native_default_mean_s\": {fused_default_mean:.9e},\n    \
+         \"grad_native_default_reference_mean_s\": {reference_default_mean:.9e},\n    \
+         \"fused_speedup\": {fused_speedup:.3}\n  }},\n  \"stages\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/BENCH_micro_hotpath.json", json).unwrap();
+    println!(
+        "\nheadline: grad/native default config fused {:.2}us vs reference {:.2}us (x{:.2})",
+        fused_default_mean * 1e6,
+        reference_default_mean * 1e6,
+        fused_speedup
+    );
+    println!("trajectory point -> results/BENCH_micro_hotpath.json");
 }

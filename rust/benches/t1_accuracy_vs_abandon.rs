@@ -7,14 +7,19 @@
 //! time.  5 seeds per point.  Also includes the DESIGN.md §6 "hybrid-reuse"
 //! ablation row (staleness-damped inclusion of late gradients).
 //!
+//! The γ-points run concurrently on the sweep engine (`--threads N` to
+//! override the pool size); the per-seed problems are shared through its
+//! cache, so each (config, seed) pays its Cholesky solve once.
+//!
 //! Expected shape (paper claim): accuracy degrades *gracefully* as the
 //! abandon rate rises — large speedups cost little accuracy until γζ drops
 //! below the Lemma-3.2 sample size.
 
+use hybriditer::bench_harness::sweep::{ProblemCache, SweepEngine};
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{AggregatorKind, LossForm, RunConfig, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::math::{stats::Summary, vec_ops};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
@@ -25,6 +30,7 @@ const SEEDS: u64 = 5;
 const ITERS: u64 = 250;
 
 fn run_point(
+    cache: &ProblemCache,
     gamma: usize,
     aggregator: AggregatorKind,
     seeds: u64,
@@ -34,7 +40,7 @@ fn run_point(
     let mut times = Vec::new();
     for seed in 0..seeds {
         let spec = KrrProblemSpec::small().with_machines(M).with_seed(100 + seed);
-        let problem = KrrProblem::generate(&spec).unwrap();
+        let problem = cache.get(&spec);
         let cluster = ClusterSpec {
             workers: M,
             delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
@@ -73,20 +79,32 @@ fn run_point(
 }
 
 fn main() {
+    let engine = SweepEngine::from_env();
     println!("T1: accuracy vs abandon rate — M={M}, {ITERS} iters, {SEEDS} seeds/point");
-    println!("paper claim: accuracy degrades gracefully as abandon rate rises\n");
+    println!("paper claim: accuracy degrades gracefully as abandon rate rises");
+    println!("sweep pool: {} threads\n", engine.threads());
 
     let mut table = Table::new(
         "T1 accuracy vs abandon rate",
-        &["gamma", "abandon_%", "rel_err_mean", "rel_err_std", "eval_gap", "virt_time_s", "speedup"],
+        &[
+            "gamma",
+            "abandon_%",
+            "rel_err_mean",
+            "rel_err_std",
+            "eval_gap",
+            "virt_time_s",
+            "speedup",
+        ],
     );
     let gammas = [32usize, 28, 24, 20, 16, 12, 8, 4, 2, 1];
-    let mut bsp_time = None;
-    for &g in &gammas {
-        let (rel, gap, time) = run_point(g, AggregatorKind::Mean, SEEDS);
-        if g == M {
-            bsp_time = Some(time.mean);
-        }
+    // The leading point doubles as the BSP reference for the speedup
+    // column (run_point switches to SyncMode::Bsp at gamma == M).
+    assert_eq!(gammas[0], M, "speedup reference must be the gamma=M point");
+    let results = engine.run(&gammas, |cache, &g| {
+        run_point(cache, g, AggregatorKind::Mean, SEEDS)
+    });
+    let bsp_time = results[0].2.mean;
+    for (&g, (rel, gap, time)) in gammas.iter().zip(&results) {
         table.row(vec![
             g.to_string(),
             f(100.0 * (1.0 - g as f64 / M as f64), 1),
@@ -94,7 +112,7 @@ fn main() {
             format!("{:.1e}", rel.std),
             format!("{:.3e}", gap.mean),
             f(time.mean, 2),
-            f(bsp_time.unwrap() / time.mean, 2),
+            f(bsp_time / time.mean, 2),
         ]);
     }
     table.print();
@@ -105,11 +123,12 @@ fn main() {
         "T1 ablation: abandon vs hybrid-reuse (gamma=8, rho=0.5)",
         &["policy", "rel_err_mean", "virt_time_s"],
     );
-    for (name, agg) in [
+    let policies = [
         ("abandon (paper)", AggregatorKind::Mean),
         ("reuse rho=0.5", AggregatorKind::StalenessDamped { rho: 0.5 }),
-    ] {
-        let (rel, _, time) = run_point(8, agg, SEEDS);
+    ];
+    let ab_results = engine.run(&policies, |cache, &(_, agg)| run_point(cache, 8, agg, SEEDS));
+    for ((name, _), (rel, _, time)) in policies.iter().zip(&ab_results) {
         ab.row(vec![
             name.to_string(),
             format!("{:.4e}", rel.mean),

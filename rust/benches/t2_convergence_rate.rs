@@ -3,23 +3,28 @@
 //!
 //! Fits the empirical per-iteration contraction q̂ from `ln‖θ_t−θ*‖` and
 //! compares with the theoretical envelope √(1−λη) for several γ and η.
+//! The 16 (λ, η, γ) cells run concurrently on the sweep engine
+//! (`--threads N` overrides the pool size); each λ's noiseless problem is
+//! shared through the cache.
+//!
 //! Expected shape: q̂ ≤ theory for every γ (partial aggregation does not
 //! break Q-linear convergence; smaller γ adds gradient noise, raising the
 //! floor, not the rate).
 
+use hybriditer::bench_harness::sweep::{ProblemCache, SweepEngine};
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim;
 use hybriditer::straggler::DelayModel;
 
-fn qhat(gamma: usize, m: usize, eta: f64, lambda: f64) -> (f64, f64, f64) {
+fn qhat(cache: &ProblemCache, gamma: usize, m: usize, eta: f64, lambda: f64) -> (f64, f64, f64) {
     let mut spec = KrrProblemSpec::small().with_machines(m);
     spec.lambda = lambda;
     spec.noise = 0.0; // noiseless → clean geometric decay to θ*
-    let problem = KrrProblem::generate(&spec).unwrap();
+    let problem = cache.get(&spec);
     let cluster = ClusterSpec {
         workers: m,
         delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
@@ -39,35 +44,43 @@ fn qhat(gamma: usize, m: usize, eta: f64, lambda: f64) -> (f64, f64, f64) {
     }
     .with_iters(120);
     let mut pool = problem.native_pool();
-    let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &problem).unwrap();
+    let rep = sim::run_virtual(&mut pool, &cluster, &cfg, problem.as_ref()).unwrap();
     let (q, r2) = rep.recorder.qlinear_rate().unwrap();
     (q, r2, rep.final_theta_err().unwrap())
 }
 
 fn main() {
     let m = 16;
+    let engine = SweepEngine::from_env();
     println!("T2: Q-linear convergence rate — M={m}, noiseless KRR");
-    println!("theory (eq. 30): ‖θ_t−θ*‖ contracts by at most sqrt(1−λη) per iteration\n");
+    println!("theory (eq. 30): ‖θ_t−θ*‖ contracts by at most sqrt(1−λη) per iteration");
+    println!("sweep pool: {} threads\n", engine.threads());
 
     let mut table = Table::new(
         "T2 empirical contraction vs theory",
         &["lambda", "eta", "gamma", "q_hat", "r2", "q_theory", "ok", "final_err"],
     );
+    let mut points: Vec<(f64, f64, usize)> = Vec::new();
     for &(lambda, eta) in &[(0.05f64, 1.0f64), (0.1, 1.0), (0.1, 0.5), (0.2, 0.5)] {
-        let q_theory = (1.0 - lambda * eta).sqrt();
         for &gamma in &[m, m * 3 / 4, m / 2, m / 4] {
-            let (q, r2, err) = qhat(gamma, m, eta, lambda);
-            table.row(vec![
-                f(lambda, 2),
-                f(eta, 2),
-                gamma.to_string(),
-                f(q, 4),
-                f(r2, 3),
-                f(q_theory, 4),
-                if q <= q_theory + 0.01 { "yes".into() } else { "NO".into() },
-                format!("{err:.2e}"),
-            ]);
+            points.push((lambda, eta, gamma));
         }
+    }
+    let results = engine.run(&points, |cache, &(lambda, eta, gamma)| {
+        qhat(cache, gamma, m, eta, lambda)
+    });
+    for (&(lambda, eta, gamma), &(q, r2, err)) in points.iter().zip(&results) {
+        let q_theory = (1.0 - lambda * eta).sqrt();
+        table.row(vec![
+            f(lambda, 2),
+            f(eta, 2),
+            gamma.to_string(),
+            f(q, 4),
+            f(r2, 3),
+            f(q_theory, 4),
+            if q <= q_theory + 0.01 { "yes".into() } else { "NO".into() },
+            format!("{err:.2e}"),
+        ]);
     }
     table.print();
     table.save_csv("t2_convergence_rate").unwrap();

@@ -9,16 +9,22 @@
 //!      KRR *gradients*, vs the variance-aware adaptive estimator —
 //!      exposing where the worst-case step (s² vs (ξZ̄)², §3.2) is and
 //!      isn't conservative.
+//!
+//! Each part's Monte-Carlo cells run concurrently on the sweep engine
+//! (`--threads N` overrides the pool size); every cell owns an
+//! index-derived RNG stream, so the tables are deterministic regardless
+//! of the pool size.
 
+use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::coordinator::estimator::{
-    estimate_gamma, estimate_sample_size, AdaptiveEstimator, EstimatorParams,
+    estimate_gamma, AdaptiveEstimator, EstimatorParams,
 };
-use hybriditer::data::{ComputePool, KrrProblem, KrrProblemSpec};
+use hybriditer::data::{ComputePool, KrrProblemSpec};
 use hybriditer::math::vec_ops;
 use hybriditer::util::rng::Pcg64;
 
-fn part_a_fpc() {
+fn part_a_fpc(engine: &SweepEngine) {
     let mut rng = Pcg64::seeded(1);
     let n_pop = 5000usize;
     let pop: Vec<f64> = (0..n_pop).map(|_| rng.normal() * 2.0 + 1.0).collect();
@@ -29,7 +35,9 @@ fn part_a_fpc() {
         "T3a Lemma 3.1: Var(sample mean) with finite-population correction",
         &["n", "predicted_var", "measured_var", "ratio"],
     );
-    for &n in &[10usize, 100, 1000, 4000] {
+    let ns = [10usize, 100, 1000, 4000];
+    let rows = engine.run(&ns, |_, &n| {
+        let mut rng = Pcg64::new(0xA3, n as u64);
         let predicted = pop_var / n as f64 * (n_pop - n) as f64 / (n_pop - 1) as f64;
         let trials = 4000;
         let mut means = Vec::with_capacity(trials);
@@ -39,6 +47,9 @@ fn part_a_fpc() {
         }
         let mm = means.iter().sum::<f64>() / trials as f64;
         let mv = means.iter().map(|x| (x - mm).powi(2)).sum::<f64>() / trials as f64;
+        (predicted, mv)
+    });
+    for (&n, &(predicted, mv)) in ns.iter().zip(&rows) {
         table.row(vec![
             n.to_string(),
             format!("{predicted:.5e}"),
@@ -50,7 +61,7 @@ fn part_a_fpc() {
     table.save_csv("t3a_fpc_variance").unwrap();
 }
 
-fn part_b_coverage() {
+fn part_b_coverage(engine: &SweepEngine) {
     let mut rng = Pcg64::seeded(2);
     let n_pop = 30_000usize;
     let pop: Vec<f64> = (0..n_pop).map(|_| 4.0 + rng.normal()).collect();
@@ -61,39 +72,47 @@ fn part_b_coverage() {
         "T3b Lemma 3.2 coverage on a population satisfying its assumptions",
         &["alpha", "xi", "n_lemma", "coverage_%", "target_%"],
     );
+    let mut cells: Vec<(f64, f64)> = Vec::new();
     for &alpha in &[0.01, 0.05, 0.10] {
         for &xi in &[0.01, 0.02, 0.05] {
-            let p = EstimatorParams { alpha, xi };
-            let u = p.u_half_alpha();
-            let delta = xi * pop_mean.abs();
-            let n = ((n_pop as f64) * u * u * s2
-                / (delta * delta * n_pop as f64 + u * u * s2))
-                .ceil() as usize;
-            let trials = 1500;
-            let mut hits = 0;
-            for _ in 0..trials {
-                let idx = rng.sample_indices(n_pop, n);
-                let mean = idx.iter().map(|&i| pop[i]).sum::<f64>() / n as f64;
-                if (mean - pop_mean).abs() < delta {
-                    hits += 1;
-                }
-            }
-            table.row(vec![
-                f(alpha, 2),
-                f(xi, 2),
-                n.to_string(),
-                f(100.0 * hits as f64 / trials as f64, 1),
-                f(100.0 * (1.0 - alpha), 1),
-            ]);
+            cells.push((alpha, xi));
         }
+    }
+    let rows = engine.run(&cells, |_, &(alpha, xi)| {
+        let mut rng = Pcg64::new(0xB3, ((alpha * 1e4) as u64) ^ (((xi * 1e6) as u64) << 16));
+        let p = EstimatorParams { alpha, xi };
+        let u = p.u_half_alpha();
+        let delta = xi * pop_mean.abs();
+        let n = ((n_pop as f64) * u * u * s2
+            / (delta * delta * n_pop as f64 + u * u * s2))
+            .ceil() as usize;
+        let trials = 1500;
+        let mut hits = 0;
+        for _ in 0..trials {
+            let idx = rng.sample_indices(n_pop, n);
+            let mean = idx.iter().map(|&i| pop[i]).sum::<f64>() / n as f64;
+            if (mean - pop_mean).abs() < delta {
+                hits += 1;
+            }
+        }
+        (n, 100.0 * hits as f64 / trials as f64)
+    });
+    for (&(alpha, xi), &(n, coverage)) in cells.iter().zip(&rows) {
+        table.row(vec![
+            f(alpha, 2),
+            f(xi, 2),
+            n.to_string(),
+            f(coverage, 1),
+            f(100.0 * (1.0 - alpha), 1),
+        ]);
     }
     table.print();
     table.save_csv("t3b_lemma32_coverage").unwrap();
 }
 
-fn part_c_gradients() {
+fn part_c_gradients(engine: &SweepEngine) {
     let spec = KrrProblemSpec::default_config().with_machines(32);
-    let problem = KrrProblem::generate(&spec).unwrap();
+    let problem = engine.cache().get(&spec);
     let (n, zeta, m) = (spec.total_examples(), spec.zeta, spec.machines);
     let mut pool = problem.native_pool();
 
@@ -114,45 +133,54 @@ fn part_c_gradients() {
         "T3c Algorithm-1 (distribution-free) vs variance-aware gamma on real gradients",
         &["alpha", "xi", "g_alg1", "cov_alg1_%", "g_adaptive", "cov_adapt_%"],
     );
+    let mut cells: Vec<(f64, f64)> = Vec::new();
     for &alpha in &[0.05, 0.10] {
         for &xi in &[0.05, 0.10, 0.25] {
-            let p = EstimatorParams { alpha, xi };
-            let g1 = estimate_gamma(n, zeta, m, p).unwrap();
-
-            let mut adaptive = AdaptiveEstimator::new(n, zeta, m, p);
-            let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-            adaptive.observe(&views);
-            adaptive.observe(&views);
-            let g2 = adaptive.gamma().unwrap();
-
-            let coverage = |gamma: usize, rng: &mut Pcg64| {
-                let trials = 400;
-                let mut hits = 0;
-                let mut sub = vec![0.0f32; problem.dim()];
-                for _ in 0..trials {
-                    let idx = rng.sample_indices(m, gamma);
-                    sub.fill(0.0);
-                    for &w in &idx {
-                        vec_ops::add_assign(&mut sub, &grads[w]);
-                    }
-                    vec_ops::scale(&mut sub, 1.0 / gamma as f32);
-                    if vec_ops::dist2(&sub, &full) / full_norm <= xi {
-                        hits += 1;
-                    }
-                }
-                100.0 * hits as f64 / trials as f64
-            };
-            let c1 = coverage(g1, &mut rng);
-            let c2 = coverage(g2, &mut rng);
-            table.row(vec![
-                f(alpha, 2),
-                f(xi, 2),
-                g1.to_string(),
-                f(c1, 1),
-                g2.to_string(),
-                f(c2, 1),
-            ]);
+            cells.push((alpha, xi));
         }
+    }
+    let dim = problem.dim();
+    let rows = engine.run(&cells, |_, &(alpha, xi)| {
+        let mut rng = Pcg64::new(0xC3, ((alpha * 1e4) as u64) ^ (((xi * 1e6) as u64) << 16));
+        let p = EstimatorParams { alpha, xi };
+        let g1 = estimate_gamma(n, zeta, m, p).unwrap();
+
+        let mut adaptive = AdaptiveEstimator::new(n, zeta, m, p);
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        adaptive.observe(&views);
+        adaptive.observe(&views);
+        let g2 = adaptive.gamma().unwrap();
+
+        let mut coverage = |gamma: usize| {
+            let trials = 400;
+            let mut hits = 0;
+            let mut sub = vec![0.0f32; dim];
+            for _ in 0..trials {
+                let idx = rng.sample_indices(m, gamma);
+                sub.fill(0.0);
+                for &w in &idx {
+                    vec_ops::add_assign(&mut sub, &grads[w]);
+                }
+                vec_ops::scale(&mut sub, 1.0 / gamma as f32);
+                if vec_ops::dist2(&sub, &full) / full_norm <= xi {
+                    hits += 1;
+                }
+            }
+            100.0 * hits as f64 / trials as f64
+        };
+        let c1 = coverage(g1);
+        let c2 = coverage(g2);
+        (g1, c1, g2, c2)
+    });
+    for (&(alpha, xi), &(g1, c1, g2, c2)) in cells.iter().zip(&rows) {
+        table.row(vec![
+            f(alpha, 2),
+            f(xi, 2),
+            g1.to_string(),
+            f(c1, 1),
+            g2.to_string(),
+            f(c2, 1),
+        ]);
     }
     table.print();
     table.save_csv("t3c_estimator_on_gradients").unwrap();
@@ -169,8 +197,10 @@ fn part_c_gradients() {
 }
 
 fn main() {
-    println!("T3: estimator validation (Lemmas 3.1, 3.2, Algorithm 1)\n");
-    part_a_fpc();
-    part_b_coverage();
-    part_c_gradients();
+    let engine = SweepEngine::from_env();
+    println!("T3: estimator validation (Lemmas 3.1, 3.2, Algorithm 1)");
+    println!("sweep pool: {} threads\n", engine.threads());
+    part_a_fpc(&engine);
+    part_b_coverage(&engine);
+    part_c_gradients(&engine);
 }

@@ -2,15 +2,18 @@
 //! applied to a list of algorithms including iterations such as Stochastic
 //! Gradient Descent, Conjugate Gradient Descent, L-BFGS and so on").
 //!
-//! Drives the same KRR problem with five master-side optimizers, each under
-//! BSP and under hybrid γ=¾M on a straggler-ridden cluster.  Expected
-//! shape: every optimizer still converges under partial aggregation, and
-//! hybrid wins wall-clock across the board.
+//! Drives the same KRR problem with six master-side optimizers, each under
+//! BSP and under hybrid γ=¾M on a straggler-ridden cluster.  The 12
+//! (optimizer × mode) cells run concurrently on the sweep engine
+//! (`--threads N` overrides the pool size).  Expected shape: every
+//! optimizer still converges under partial aggregation, and hybrid wins
+//! wall-clock across the board.
 
+use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
-use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::data::KrrProblemSpec;
 use hybriditer::optim::{EtaSchedule, OptimizerKind};
 use hybriditer::sim;
 use hybriditer::straggler::DelayModel;
@@ -18,9 +21,10 @@ use hybriditer::straggler::DelayModel;
 fn main() {
     let m = 16;
     let iters = 200;
+    let engine = SweepEngine::from_env();
     let spec = KrrProblemSpec::small().with_machines(m);
-    let problem = KrrProblem::generate(&spec).unwrap();
-    println!("T4: optimizer applicability — M={m}, {iters} iters, lognormal stragglers\n");
+    println!("T4: optimizer applicability — M={m}, {iters} iters, lognormal stragglers");
+    println!("sweep pool: {} threads\n", engine.threads());
 
     let optimizers: Vec<(&str, OptimizerKind)> = vec![
         ("sgd", OptimizerKind::Sgd { eta: EtaSchedule::constant(1.0) }),
@@ -37,51 +41,62 @@ fn main() {
         ("cg", OptimizerKind::Cg { eta: 0.5, restart: 16 }),
     ];
 
+    // One sweep point per (optimizer, mode) cell, BSP first per optimizer
+    // so the speedup column's reference lands before its hybrid row.
+    let mut points: Vec<(String, OptimizerKind, &'static str, SyncMode)> = Vec::new();
+    for (name, kind) in &optimizers {
+        points.push((name.to_string(), kind.clone(), "bsp", SyncMode::Bsp));
+        points.push((
+            name.to_string(),
+            kind.clone(),
+            "hybrid",
+            SyncMode::Hybrid { gamma: m * 3 / 4 },
+        ));
+    }
+    let results = engine.run(&points, |cache, (_, kind, _, mode)| {
+        let problem = cache.get(&spec);
+        let cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.2 },
+            ..ClusterSpec::default()
+        };
+        let cfg = RunConfig {
+            mode: mode.clone(),
+            optimizer: kind.clone(),
+            loss_form: LossForm::krr(spec.lambda),
+            eval_every: 1,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(iters);
+        let mut pool = problem.native_pool();
+        sim::run_virtual(&mut pool, &cluster, &cfg, problem.as_ref()).unwrap()
+    });
+
     let mut table = Table::new(
         "T4 optimizer x barrier policy",
         &["optimizer", "mode", "theta_err", "virt_time_s", "iters_to_err<0.1", "speedup"],
     );
-    for (name, kind) in optimizers {
-        let mut bsp_time = 0.0;
-        for (mode_name, mode) in [
-            ("bsp", SyncMode::Bsp),
-            ("hybrid", SyncMode::Hybrid { gamma: m * 3 / 4 }),
-        ] {
-            let cluster = ClusterSpec {
-                workers: m,
-                delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.2 },
-                ..ClusterSpec::default()
-            };
-            let cfg = RunConfig {
-                mode,
-                optimizer: kind.clone(),
-                loss_form: LossForm::krr(spec.lambda),
-                eval_every: 1,
-                record_every: 1,
-                ..RunConfig::default()
-            }
-            .with_iters(iters);
-            let mut pool = problem.native_pool();
-            let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &problem).unwrap();
-            if mode_name == "bsp" {
-                bsp_time = rep.total_time();
-            }
-            let iters_to = rep
-                .recorder
-                .rows()
-                .iter()
-                .find(|r| r.theta_err.map(|e| e < 0.1).unwrap_or(false))
-                .map(|r| r.iter.to_string())
-                .unwrap_or_else(|| "-".into());
-            table.row(vec![
-                name.to_string(),
-                mode_name.to_string(),
-                format!("{:.3e}", rep.final_theta_err().unwrap_or(f64::NAN)),
-                f(rep.total_time(), 2),
-                iters_to,
-                f(bsp_time / rep.total_time(), 2),
-            ]);
+    let mut bsp_time = 0.0;
+    for ((name, _, mode_name, _), rep) in points.iter().zip(&results) {
+        if *mode_name == "bsp" {
+            bsp_time = rep.total_time();
         }
+        let iters_to = rep
+            .recorder
+            .rows()
+            .iter()
+            .find(|r| r.theta_err.map(|e| e < 0.1).unwrap_or(false))
+            .map(|r| r.iter.to_string())
+            .unwrap_or_else(|| "-".into());
+        table.row(vec![
+            name.clone(),
+            mode_name.to_string(),
+            format!("{:.3e}", rep.final_theta_err().unwrap_or(f64::NAN)),
+            f(rep.total_time(), 2),
+            iters_to,
+            f(bsp_time / rep.total_time(), 2),
+        ]);
     }
     table.print();
     table.save_csv("t4_optimizers").unwrap();

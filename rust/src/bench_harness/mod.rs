@@ -1,11 +1,16 @@
 //! Benchmark harness (criterion is not in the vendor set).
 //!
-//! Two layers:
+//! Three layers:
 //! * [`Bench`] — microbenchmark timing: warmup, fixed-duration sampling,
 //!   mean/p50/p99 reporting (used by `micro_hotpath`);
 //! * [`Table`] — aligned experiment-table printing + CSV mirror, used by
 //!   every T*/F* bench to emit the rows the paper's tables/figures would
-//!   hold.
+//!   hold;
+//! * [`sweep::SweepEngine`] — parallel sweep-point runner with a problem
+//!   cache and deterministic result ordering (used by every T*/F* bench's
+//!   outer grid).
+
+pub mod sweep;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,174 @@
+//! Parallel sweep engine: runs independent experiment sweep points
+//! concurrently with deterministic result ordering, plus a problem cache
+//! so a (γ × drop × seed) grid pays each `KrrProblem::generate` — which
+//! includes a Cholesky solve for θ* — exactly once per distinct spec.
+//!
+//! Every sweep point is an independent `run_virtual` (own pool, own RNG
+//! streams seeded from the point), so points are embarrassingly parallel
+//! and the table a parallel sweep prints is byte-identical to the serial
+//! one.  Wall-clock drops by roughly the core count on the wide sweeps
+//! (T1's 10 γ-points, F4's 15 drop×γ cells).
+//!
+//! Pool size resolution: `--threads N` on the bench command line, else the
+//! process default ([`crate::util::pool::default_threads`], settable via
+//! the `[bench] threads` config key or `hybriditer train --threads`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::data::{KrrProblem, KrrProblemSpec};
+use crate::util::pool;
+
+/// Cache of generated problems keyed by their full spec.  Each key holds a
+/// `OnceLock` cell, so when a whole pool of sweep points races on the same
+/// not-yet-cached spec exactly *one* thread runs `KrrProblem::generate`
+/// (the Cholesky solve) while the rest block on the cell — distinct specs
+/// still generate concurrently (the map lock is only held to look up the
+/// cell, never across generation).
+#[derive(Default)]
+pub struct ProblemCache {
+    map: Mutex<HashMap<String, Arc<OnceLock<Arc<KrrProblem>>>>>,
+}
+
+impl ProblemCache {
+    pub fn new() -> ProblemCache {
+        ProblemCache::default()
+    }
+
+    /// The problem for `spec`, generating (and caching) it on first use.
+    /// Panics on a degenerate spec — sweep grids are static, so this is a
+    /// bench authoring error, not a runtime condition.
+    pub fn get(&self, spec: &KrrProblemSpec) -> Arc<KrrProblem> {
+        let key = format!("{spec:?}");
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            Arc::clone(map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())))
+        };
+        Arc::clone(cell.get_or_init(|| {
+            Arc::new(KrrProblem::generate(spec).expect("sweep problem generation"))
+        }))
+    }
+
+    /// Distinct problems generated so far.
+    pub fn len(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|c| c.get().is_some())
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The bench suite's sweep runner: a scoped worker pool plus a shared
+/// [`ProblemCache`].
+pub struct SweepEngine {
+    threads: usize,
+    cache: ProblemCache,
+}
+
+impl SweepEngine {
+    /// Engine with an explicit pool size (0 = process default).
+    pub fn new(threads: usize) -> SweepEngine {
+        let threads = if threads == 0 { pool::default_threads() } else { threads };
+        SweepEngine {
+            threads,
+            cache: ProblemCache::new(),
+        }
+    }
+
+    /// Engine sized from the bench command line (`--threads N`), falling
+    /// back to the process default.
+    pub fn from_env() -> SweepEngine {
+        SweepEngine::new(threads_from_args(std::env::args()).unwrap_or(0))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cache(&self) -> &ProblemCache {
+        &self.cache
+    }
+
+    /// Run `f` over every sweep point concurrently; results come back in
+    /// input order (deterministic tables/CSVs).  `f` gets the shared
+    /// problem cache and the point.
+    pub fn run<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(&ProblemCache, &P) -> R + Sync,
+    {
+        pool::scoped_map(self.threads, points, |_, p| f(&self.cache, p))
+    }
+}
+
+/// Parse `--threads N` / `--threads=N` from an argument stream (benches
+/// receive extra args after `cargo bench --bench x -- --threads 4`).
+pub fn threads_from_args(args: impl Iterator<Item = String>) -> Option<usize> {
+    let mut args = args.peekable();
+    while let Some(a) = args.next() {
+        if let Some(v) = a.strip_prefix("--threads=") {
+            return v.parse().ok();
+        }
+        if a == "--threads" {
+            return args.next().and_then(|v| v.parse().ok());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> impl Iterator<Item = String> {
+        args.iter().map(|s| s.to_string()).collect::<Vec<_>>().into_iter()
+    }
+
+    #[test]
+    fn threads_arg_parses() {
+        assert_eq!(threads_from_args(sv(&["bench", "--threads", "4"])), Some(4));
+        assert_eq!(threads_from_args(sv(&["--threads=2"])), Some(2));
+        assert_eq!(threads_from_args(sv(&["--bench"])), None);
+        assert_eq!(threads_from_args(sv(&["--threads", "x"])), None);
+    }
+
+    #[test]
+    fn cache_generates_once_per_spec() {
+        let cache = ProblemCache::new();
+        let spec = KrrProblemSpec {
+            config: "test".into(),
+            d: 4,
+            l: 8,
+            zeta: 16,
+            machines: 2,
+            noise: 0.05,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 16,
+            seed: 9,
+        };
+        let a = cache.get(&spec);
+        let b = cache.get(&spec);
+        assert!(Arc::ptr_eq(&a, &b), "same spec must share one instance");
+        assert_eq!(cache.len(), 1);
+        let other = KrrProblemSpec { seed: 10, ..spec };
+        let c = cache.get(&other);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn sweep_results_keep_input_order() {
+        let engine = SweepEngine::new(4);
+        let points: Vec<u64> = (0..20).collect();
+        let out = engine.run(&points, |_, &p| p * p);
+        assert_eq!(out, points.iter().map(|p| p * p).collect::<Vec<_>>());
+    }
+}

@@ -116,11 +116,9 @@ impl ArgSpec {
                     Some((n, v)) => (n, Some(v.to_string())),
                     None => (name, None),
                 };
-                let opt = self
-                    .opts
-                    .iter()
-                    .find(|o| o.name == name)
-                    .ok_or_else(|| Error::Config(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                let opt = self.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    Error::Config(format!("unknown option --{name}\n\n{}", self.usage()))
+                })?;
                 if opt.is_flag {
                     if inline.is_some() {
                         return Err(Error::Config(format!("--{name} takes no value")));
@@ -210,21 +208,21 @@ impl Parsed {
     }
 
     pub fn get_usize(&self, name: &str) -> Result<usize> {
-        self.get(name)
-            .parse()
-            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name))))
+        self.get(name).parse().map_err(|_| {
+            Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name)))
+        })
     }
 
     pub fn get_u64(&self, name: &str) -> Result<u64> {
-        self.get(name)
-            .parse()
-            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name))))
+        self.get(name).parse().map_err(|_| {
+            Error::Config(format!("--{name}: expected integer, got '{}'", self.get(name)))
+        })
     }
 
     pub fn get_f64(&self, name: &str) -> Result<f64> {
-        self.get(name)
-            .parse()
-            .map_err(|_| Error::Config(format!("--{name}: expected float, got '{}'", self.get(name))))
+        self.get(name).parse().map_err(|_| {
+            Error::Config(format!("--{name}: expected float, got '{}'", self.get(name)))
+        })
     }
 
     /// Like [`Parsed::get_f64`], but the empty string — the conventional
@@ -236,6 +234,18 @@ impl Parsed {
         }
         raw.parse().map(Some).map_err(|_| {
             Error::Config(format!("--{name}: expected float, got '{raw}'"))
+        })
+    }
+
+    /// Like [`Parsed::get_usize`], but the empty string — the conventional
+    /// default of "unset" override options — is `None`.
+    pub fn get_opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            return Ok(None);
+        }
+        raw.parse().map(Some).map_err(|_| {
+            Error::Config(format!("--{name}: expected integer, got '{raw}'"))
         })
     }
 
@@ -303,6 +313,17 @@ mod tests {
             .parse(&sv(&["--workers", "abc", "--mode", "bsp", "c"]))
             .unwrap();
         assert!(p.get_usize("workers").is_err());
+    }
+
+    #[test]
+    fn opt_usize_treats_empty_as_unset() {
+        let spec = ArgSpec::new("prog", "t").opt("threads", "", "pool size");
+        let p = spec.parse(&sv(&[])).unwrap();
+        assert_eq!(p.get_opt_usize("threads").unwrap(), None);
+        let p = spec.parse(&sv(&["--threads", "6"])).unwrap();
+        assert_eq!(p.get_opt_usize("threads").unwrap(), Some(6));
+        let p = spec.parse(&sv(&["--threads", "-1"])).unwrap();
+        assert!(p.get_opt_usize("threads").is_err());
     }
 
     #[test]

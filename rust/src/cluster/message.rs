@@ -25,6 +25,10 @@ pub enum MasterMsg {
         /// straggler sleep so wall-clock arrivals match the virtual
         /// driver's `down + compute + up` timing model.
         net_delay: f64,
+        /// Gradient-buffer free-list: payload `Vec`s reclaimed from earlier
+        /// `Grad` replies, handed back so the slave's next reply reuses
+        /// them instead of allocating (capacity already fits one gradient).
+        recycle: Vec<Vec<f32>>,
     },
     /// Orderly shutdown.
     Shutdown,
@@ -86,6 +90,7 @@ mod tests {
                 theta: Arc::clone(&theta),
                 shards: Arc::clone(&shards),
                 net_delay: 0.0,
+                recycle: Vec::new(),
             })
             .collect();
         assert_eq!(Arc::strong_count(&theta), 9);

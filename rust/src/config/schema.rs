@@ -47,6 +47,9 @@
 //! eta = 0.5
 //! decay = 0.0
 //!
+//! [bench]
+//! threads = 0           # sweep worker pool size (0 = available parallelism)
+//!
 //! [run]
 //! iters = 500
 //! eval_every = 10
@@ -92,6 +95,10 @@ pub struct ExperimentConfig {
     pub timing: TimingMode,
     pub backend: Backend,
     pub out_csv: Option<String>,
+    /// `[bench] threads`: sweep/worker pool size for parallel sweeps
+    /// (0 = auto: available parallelism).  Applied process-wide via
+    /// [`crate::util::pool::set_default_threads`].
+    pub bench_threads: usize,
 }
 
 impl ExperimentConfig {
@@ -256,6 +263,7 @@ impl ExperimentConfig {
             timing,
             backend,
             out_csv: v.get("run.out_csv").and_then(Value::as_str).map(String::from),
+            bench_threads: v.opt_usize("bench.threads", 0),
         })
     }
 }
@@ -377,6 +385,13 @@ backend = "native"
         assert_eq!(cfg.krr.machines, 4);
         assert!(matches!(cfg.run.mode, SyncMode::Hybrid { .. }));
         assert_eq!(cfg.timing, TimingMode::Virtual);
+        assert_eq!(cfg.bench_threads, 0);
+    }
+
+    #[test]
+    fn bench_threads_parses() {
+        let cfg = ExperimentConfig::from_toml("[bench]\nthreads = 6").unwrap();
+        assert_eq!(cfg.bench_threads, 6);
     }
 
     #[test]

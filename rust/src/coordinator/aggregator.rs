@@ -17,6 +17,7 @@ pub enum AggregatorKind {
 }
 
 /// One gradient contribution.
+#[derive(Clone, Copy)]
 pub struct Contribution<'a> {
     pub grad: &'a [f32],
     pub examples: usize,
@@ -24,12 +25,20 @@ pub struct Contribution<'a> {
     pub staleness: u64,
 }
 
-/// Aggregate contributions into `out`. Returns the effective weight sum.
-pub fn aggregate(kind: AggregatorKind, contribs: &[Contribution<'_>], out: &mut [f32]) -> f64 {
-    assert!(!contribs.is_empty(), "aggregate with no contributions");
+/// Aggregate a contribution stream into `out` without materializing a
+/// slice — the virtual driver's zero-alloc hot path feeds it an iterator
+/// chained straight off its scratch arena.  Returns the effective weight
+/// sum.  Panics on an empty stream (same contract as [`aggregate`]).
+pub fn aggregate_iter<'a>(
+    kind: AggregatorKind,
+    contribs: impl IntoIterator<Item = Contribution<'a>>,
+    out: &mut [f32],
+) -> f64 {
     out.fill(0.0);
     let mut wsum = 0.0f64;
+    let mut seen = 0usize;
     for c in contribs {
+        seen += 1;
         let w = match kind {
             AggregatorKind::Mean => {
                 if c.staleness > 0 {
@@ -52,10 +61,16 @@ pub fn aggregate(kind: AggregatorKind, contribs: &[Contribution<'_>], out: &mut 
             wsum += w;
         }
     }
+    assert!(seen > 0, "aggregate with no contributions");
     if wsum > 0.0 {
         vec_ops::scale(out, (1.0 / wsum) as f32);
     }
     wsum
+}
+
+/// Aggregate contributions into `out`. Returns the effective weight sum.
+pub fn aggregate(kind: AggregatorKind, contribs: &[Contribution<'_>], out: &mut [f32]) -> f64 {
+    aggregate_iter(kind, contribs.iter().copied(), out)
 }
 
 #[cfg(test)]

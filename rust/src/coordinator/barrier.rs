@@ -43,6 +43,23 @@ impl PartialBarrier {
         }
     }
 
+    /// Reuse this barrier for a new iteration without reallocating the
+    /// arrival mask (the virtual driver's zero-alloc steady state keeps
+    /// one barrier in its scratch arena).  The worker count is fixed at
+    /// construction.
+    pub fn reset(&mut self, iter: u64, gamma: usize) {
+        assert!(
+            gamma >= 1 && gamma <= self.arrived.len(),
+            "gamma {gamma} of {}",
+            self.arrived.len()
+        );
+        self.iter = iter;
+        self.gamma = gamma;
+        self.arrived.fill(false);
+        self.included = 0;
+        self.closed = false;
+    }
+
     pub fn iter(&self) -> u64 {
         self.iter
     }
@@ -202,6 +219,29 @@ mod tests {
         let mut b = PartialBarrier::new(0, 4, 2);
         b.shrink_gamma(4);
         assert_eq!(b.gamma(), 2);
+    }
+
+    #[test]
+    fn reset_reuses_barrier_like_new() {
+        let mut reused = PartialBarrier::new(0, 4, 2);
+        reused.offer(0, 0);
+        reused.offer(1, 0);
+        assert!(reused.is_closed());
+        reused.reset(7, 3);
+        let fresh = PartialBarrier::new(7, 4, 3);
+        assert_eq!(reused.iter(), fresh.iter());
+        assert_eq!(reused.gamma(), fresh.gamma());
+        assert_eq!(reused.included(), 0);
+        assert!(!reused.is_closed());
+        // Previously-arrived workers count again after a reset.
+        assert_eq!(reused.offer(0, 7), Admission::Included);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reset_rejects_gamma_above_workers() {
+        let mut b = PartialBarrier::new(0, 4, 2);
+        b.reset(1, 5);
     }
 
     #[test]

@@ -78,6 +78,9 @@ pub struct AdaptiveEstimator {
     /// Per-coordinate-norm statistics across workers this window.
     scatter: OnlineStats,
     mean_norm: OnlineStats,
+    /// Reusable mean-gradient buffer (zero allocations per observation
+    /// after warmup).
+    mean_buf: Vec<f64>,
 }
 
 impl AdaptiveEstimator {
@@ -89,24 +92,43 @@ impl AdaptiveEstimator {
             m,
             scatter: OnlineStats::new(),
             mean_norm: OnlineStats::new(),
+            mean_buf: Vec::new(),
         }
     }
 
     /// Observe one iteration's included worker gradients.
     pub fn observe(&mut self, grads: &[&[f32]]) {
-        if grads.len() < 2 {
+        self.observe_iter(grads.iter().copied(), grads.len());
+    }
+
+    /// Observe included gradients straight from a driver's result slots —
+    /// no `Vec<&[f32]>` view buffer needed on the hot path.
+    pub fn observe_results(&mut self, grads: &[crate::data::GradResult]) {
+        self.observe_iter(grads.iter().map(|g| g.grad.as_slice()), grads.len());
+    }
+
+    fn observe_iter<'a, I>(&mut self, grads: I, k: usize)
+    where
+        I: Iterator<Item = &'a [f32]> + Clone,
+    {
+        if k < 2 {
             return;
         }
-        let dim = grads[0].len();
-        // Mean gradient.
-        let mut mean = vec![0.0f64; dim];
-        for g in grads {
+        // Mean gradient (reused buffer; dim fixed per run).
+        let mut dim = 0usize;
+        let mean = &mut self.mean_buf;
+        for (i, g) in grads.clone().enumerate() {
+            if i == 0 {
+                dim = g.len();
+                mean.resize(dim, 0.0);
+                mean.fill(0.0);
+            }
             for (m, &v) in mean.iter_mut().zip(g.iter()) {
                 *m += v as f64;
             }
         }
         for m in mean.iter_mut() {
-            *m /= grads.len() as f64;
+            *m /= k as f64;
         }
         let mean_sq: f64 = mean.iter().map(|v| v * v).sum::<f64>() / dim as f64;
         self.mean_norm.push(mean_sq.sqrt());
@@ -116,12 +138,12 @@ impl AdaptiveEstimator {
         for g in grads {
             let mut d2 = 0.0;
             for (m, &v) in mean.iter().zip(g.iter()) {
-                let d = v as f64 - m;
+                let d = v as f64 - *m;
                 d2 += d * d;
             }
             var += d2 / dim as f64;
         }
-        var /= (grads.len() - 1).max(1) as f64;
+        var /= (k - 1).max(1) as f64;
         // Worker mean over ζ examples with FPC: Var(mean) = s²/ζ · (N−ζ)/(N−1)
         // ⇒ s² ≈ var · ζ · (N−1)/(N−ζ).
         let n = self.n_total as f64;

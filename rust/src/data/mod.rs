@@ -29,18 +29,50 @@ pub struct GradResult {
     pub examples: usize,
 }
 
+impl GradResult {
+    /// A result holding no allocation yet — the starting state of a
+    /// reusable output slot for [`ComputePool::grad_into`].
+    pub fn empty() -> GradResult {
+        GradResult {
+            grad: Vec::new(),
+            loss_sum: None,
+            examples: 0,
+        }
+    }
+}
+
 /// Anything that can compute per-worker gradients for the coordinator.
 ///
 /// Implementations: [`native::NativeKrrPool`] (pure rust, used by tests and
 /// the straggler benches), [`crate::worker::compute::XlaKrrPool`] (PJRT
 /// artifacts — the production path), [`crate::lm::LmPool`] (transformer).
+///
+/// The required method is [`ComputePool::grad_into`], which writes into a
+/// caller-owned [`GradResult`]: the drivers keep a scratch arena of such
+/// slots and reuse them every iteration, so the steady-state hot path
+/// allocates nothing (see `docs/PERF.md`).  [`ComputePool::grad`] is the
+/// allocating convenience wrapper for tests and one-shot callers.
 pub trait ComputePool {
     /// Parameter dimension.
     fn dim(&self) -> usize;
     /// Number of workers (the paper's M).
     fn n_workers(&self) -> usize;
-    /// Compute worker `w`'s gradient at `theta` for iteration `iter`.
-    fn grad(&mut self, w: usize, theta: &[f32], iter: u64) -> crate::Result<GradResult>;
+    /// Compute worker `w`'s gradient at `theta` for iteration `iter`,
+    /// writing into `out` (grad buffer resized/overwritten in place —
+    /// reusing `out` across calls avoids per-call allocation).
+    fn grad_into(
+        &mut self,
+        w: usize,
+        theta: &[f32],
+        iter: u64,
+        out: &mut GradResult,
+    ) -> crate::Result<()>;
+    /// Allocating convenience wrapper around [`ComputePool::grad_into`].
+    fn grad(&mut self, w: usize, theta: &[f32], iter: u64) -> crate::Result<GradResult> {
+        let mut out = GradResult::empty();
+        self.grad_into(w, theta, iter, &mut out)?;
+        Ok(out)
+    }
     /// Examples per worker (the paper's ζ).
     fn shard_examples(&self, w: usize) -> usize;
 }

@@ -5,62 +5,88 @@
 //! * by benches that sweep thousands of virtual iterations where PJRT
 //!   dispatch overhead would dominate the thing being measured (straggler
 //!   policy behaviour, not kernel speed).
+//!
+//! The production path runs the fused single-pass kernel
+//! ([`crate::math::kernels::fused_resid_grad`]); the seed's two-pass
+//! implementation survives as [`krr_shard_grad_reference`], the golden
+//! baseline the fused kernel is equivalence-tested against (the two are
+//! bit-identical by construction — see `math/kernels.rs`).
 
 use crate::data::shard::Shard;
 use crate::data::{ComputePool, GradResult};
-use crate::math::vec_ops;
+use crate::math::kernels;
 use crate::Result;
 
-/// One shard's KRR gradient/loss: `g = Φᵀ(Φθ−y)/ζ + λθ`, shared by the
-/// pool below and the threaded runtime's per-worker compute (which, under
-/// elastic rebalancing, may be handed *any* shard).  `resid` is a scratch
-/// buffer grown as needed.
-pub fn krr_shard_grad(s: &Shard, lambda: f32, theta: &[f32], resid: &mut Vec<f32>) -> GradResult {
-    let (rows, l) = (s.rows, s.l);
-    debug_assert_eq!(theta.len(), l);
-    if resid.len() < rows {
-        resid.resize(rows, 0.0);
-    }
-    let resid = &mut resid[..rows];
-
-    // r = Φθ − y
-    vec_ops::matvec(&s.phi, rows, l, theta, resid);
-    let mut ss = 0.0f64;
-    for (r, &yi) in resid.iter_mut().zip(s.y.iter()) {
-        *r -= yi;
-        ss += (*r as f64) * (*r as f64);
-    }
-
-    // g = Φᵀ r / ζ + λθ
-    let mut grad = vec![0.0f32; l];
-    vec_ops::matvec_t(&s.phi, rows, l, resid, &mut grad);
+/// Finish a raw `Φᵀ(Φθ−y)` accumulation into the KRR gradient:
+/// `g ← g/ζ + λθ` — shared by the fused and reference paths so the final
+/// elementwise ops are literally the same code.
+#[inline]
+fn finish_grad(grad: &mut [f32], theta: &[f32], lambda: f32, rows: usize) {
     let inv = 1.0 / rows as f32;
     for (g, &t) in grad.iter_mut().zip(theta.iter()) {
         *g = *g * inv + lambda * t;
     }
+}
 
-    GradResult {
-        grad,
-        loss_sum: Some(ss),
-        examples: rows,
-    }
+/// One shard's KRR gradient/loss via the fused kernel, written into a
+/// caller-owned [`GradResult`] (`g = Φᵀ(Φθ−y)/ζ + λθ`).  Shared by the
+/// native pool, the threaded runtime's per-worker compute, and (through
+/// [`ComputePool::grad_into`]) the virtual driver's scratch arena.
+pub fn krr_shard_grad_into(s: &Shard, lambda: f32, theta: &[f32], out: &mut GradResult) {
+    let (rows, l) = (s.rows, s.l);
+    debug_assert_eq!(theta.len(), l);
+    out.grad.resize(l, 0.0);
+    let ss = kernels::fused_resid_grad(&s.phi, rows, l, theta, &s.y, &mut out.grad);
+    finish_grad(&mut out.grad, theta, lambda, rows);
+    out.loss_sum = Some(ss);
+    out.examples = rows;
+}
+
+/// The seed's two-pass gradient (matvec + matvec_t), kept as the golden
+/// reference implementation.  `resid` is a scratch buffer grown as needed.
+pub fn krr_shard_grad_reference(
+    s: &Shard,
+    lambda: f32,
+    theta: &[f32],
+    resid: &mut Vec<f32>,
+    out: &mut GradResult,
+) {
+    let (rows, l) = (s.rows, s.l);
+    debug_assert_eq!(theta.len(), l);
+    out.grad.resize(l, 0.0);
+    let ss = kernels::reference_resid_grad(&s.phi, rows, l, theta, &s.y, resid, &mut out.grad);
+    finish_grad(&mut out.grad, theta, lambda, rows);
+    out.loss_sum = Some(ss);
+    out.examples = rows;
 }
 
 /// Native KRR gradient pool over per-worker shards.
 pub struct NativeKrrPool {
     shards: Vec<Shard>,
     lambda: f32,
-    /// Scratch residual buffer (reused across calls; sized to max shard).
+    /// Run the two-pass reference kernel instead of the fused one (golden
+    /// equivalence tests only).
+    reference: bool,
+    /// Scratch residual buffer for the reference path.
     resid: Vec<f32>,
 }
 
 impl NativeKrrPool {
     pub fn new(shards: Vec<Shard>, lambda: f32) -> NativeKrrPool {
-        let max_rows = shards.iter().map(|s| s.rows).max().unwrap_or(0);
         NativeKrrPool {
             shards,
             lambda,
-            resid: vec![0.0; max_rows],
+            reference: false,
+            resid: Vec::new(),
+        }
+    }
+
+    /// A pool running the seed's two-pass reference kernel — the "before"
+    /// implementation the fused path is bit-equivalence-tested against.
+    pub fn reference(shards: Vec<Shard>, lambda: f32) -> NativeKrrPool {
+        NativeKrrPool {
+            reference: true,
+            ..NativeKrrPool::new(shards, lambda)
         }
     }
 
@@ -82,8 +108,20 @@ impl ComputePool for NativeKrrPool {
         self.shards[w].rows
     }
 
-    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
-        Ok(krr_shard_grad(&self.shards[w], self.lambda, theta, &mut self.resid))
+    fn grad_into(
+        &mut self,
+        w: usize,
+        theta: &[f32],
+        _iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()> {
+        let s = &self.shards[w];
+        if self.reference {
+            krr_shard_grad_reference(s, self.lambda, theta, &mut self.resid, out);
+        } else {
+            krr_shard_grad_into(s, self.lambda, theta, out);
+        }
+        Ok(())
     }
 }
 
@@ -91,6 +129,7 @@ impl ComputePool for NativeKrrPool {
 mod tests {
     use super::*;
     use crate::data::{KrrProblem, KrrProblemSpec};
+    use crate::math::vec_ops;
     use crate::util::rng::Pcg64;
 
     fn tiny() -> KrrProblem {
@@ -164,6 +203,39 @@ mod tests {
         let direct = crate::data::synth::sumsq_residual(&p.theta_true, &s.phi, &s.y, s.l);
         assert!((g.loss_sum.unwrap() - direct).abs() < 1e-6);
         assert_eq!(g.examples, 32);
+    }
+
+    #[test]
+    fn fused_pool_matches_reference_pool_exactly() {
+        let p = tiny();
+        let mut fused = p.native_pool();
+        let mut reference = p.reference_pool();
+        let mut rng = Pcg64::seeded(11);
+        let mut theta = vec![0.0f32; p.dim()];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        for w in 0..fused.n_workers() {
+            let gf = fused.grad(w, &theta, 0).unwrap();
+            let gr = reference.grad(w, &theta, 0).unwrap();
+            assert_eq!(gf.grad, gr.grad, "worker {w} grad bits diverged");
+            assert_eq!(
+                gf.loss_sum.unwrap().to_bits(),
+                gr.loss_sum.unwrap().to_bits(),
+                "worker {w} loss bits diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_into_reuses_buffer_without_allocating_growth() {
+        let p = tiny();
+        let mut pool = p.native_pool();
+        let mut out = GradResult::empty();
+        pool.grad_into(0, &p.theta_true, 0, &mut out).unwrap();
+        let cap = out.grad.capacity();
+        let first = out.grad.clone();
+        pool.grad_into(0, &p.theta_true, 1, &mut out).unwrap();
+        assert_eq!(out.grad, first);
+        assert_eq!(out.grad.capacity(), cap, "reuse must not reallocate");
     }
 
     #[test]

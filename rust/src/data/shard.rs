@@ -119,11 +119,22 @@ impl OwnershipMap {
     /// O(shards) pass — the per-iteration form of [`Self::shards_of`] for
     /// the drivers' hot loops.
     pub fn grouped(&self) -> Vec<Vec<usize>> {
-        let mut by_worker = vec![Vec::new(); self.workers];
-        for (s, &o) in self.owner.iter().enumerate() {
-            by_worker[o].push(s);
-        }
+        let mut by_worker = Vec::new();
+        self.grouped_into(&mut by_worker);
         by_worker
+    }
+
+    /// [`Self::grouped`] into a caller-owned buffer: the outer and inner
+    /// `Vec`s keep their capacity across calls, so the virtual driver's
+    /// per-iteration assignment snapshot allocates nothing in steady state.
+    pub fn grouped_into(&self, out: &mut Vec<Vec<usize>>) {
+        out.resize_with(self.workers, Vec::new);
+        for v in out.iter_mut() {
+            v.clear();
+        }
+        for (s, &o) in self.owner.iter().enumerate() {
+            out[o].push(s);
+        }
     }
 
     /// Point reassignment (BSP-retry's Hadoop-style permanent takeover).

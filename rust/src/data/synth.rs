@@ -192,9 +192,18 @@ impl KrrProblem {
         vec_ops::dist2(theta, &self.theta_star)
     }
 
-    /// Pure-rust compute pool over this problem's shards.
+    /// Pure-rust compute pool over this problem's shards (fused kernel).
     pub fn native_pool(&self) -> crate::data::native::NativeKrrPool {
         crate::data::native::NativeKrrPool::new(
+            self.shards.clone(),
+            self.spec.lambda as f32,
+        )
+    }
+
+    /// Pool running the seed's two-pass reference kernel — the golden
+    /// baseline for the fused kernel's equivalence tests.
+    pub fn reference_pool(&self) -> crate::data::native::NativeKrrPool {
+        crate::data::native::NativeKrrPool::reference(
             self.shards.clone(),
             self.spec.lambda as f32,
         )

@@ -56,11 +56,12 @@ impl LmPool {
     /// Evaluate mean NLL on a fresh batch (eval hook helper).
     pub fn eval_loss(&mut self, theta: &[f32], seed: u64) -> Result<f64> {
         let mut rng = Pcg64::new(seed, 0xE7A1);
-        let res = self.step(theta, &mut rng)?;
+        let mut res = GradResult::empty();
+        self.step_into(theta, &mut rng, &mut res)?;
         Ok(res.loss_sum.unwrap() / res.examples as f64)
     }
 
-    fn step(&mut self, theta: &[f32], rng: &mut Pcg64) -> Result<GradResult> {
+    fn step_into(&mut self, theta: &[f32], rng: &mut Pcg64, out: &mut GradResult) -> Result<()> {
         let t = &self.task;
         debug_assert_eq!(theta.len(), t.n_params);
         let tokens = self.corpus.sample_batch(t.batch, t.seq, rng);
@@ -77,22 +78,21 @@ impl LmPool {
         let outs = self.exe.run_b(&inputs)?;
         let loss = literal::to_scalar_f32(&outs[0])? as f64;
 
-        // Flatten grads back into one vector (outs[1..] in param order).
-        let mut grad = vec![0.0f32; t.n_params];
-        for (out, &(off, n)) in outs[1..].iter().zip(&self.offsets) {
-            let v = literal::to_vec_f32(out)?;
+        // Flatten grads back into the caller's buffer (outs[1..] in param
+        // order); resize is a no-op on a reused slot.
+        out.grad.resize(t.n_params, 0.0);
+        for (o, &(off, n)) in outs[1..].iter().zip(&self.offsets) {
+            let v = literal::to_vec_f32(o)?;
             debug_assert_eq!(v.len(), n);
-            grad[off..off + n].copy_from_slice(&v);
+            out.grad[off..off + n].copy_from_slice(&v);
         }
 
         let examples = t.tokens_per_batch();
-        Ok(GradResult {
-            grad,
-            // lm_step returns *mean* NLL; convert to a sum so the shared
-            // loss assembly (Σ/Σ) recovers the mean across workers.
-            loss_sum: Some(loss * examples as f64),
-            examples,
-        })
+        // lm_step returns *mean* NLL; convert to a sum so the shared loss
+        // assembly (Σ/Σ) recovers the mean across workers.
+        out.loss_sum = Some(loss * examples as f64);
+        out.examples = examples;
+        Ok(())
     }
 }
 
@@ -109,10 +109,16 @@ impl ComputePool for LmPool {
         self.task.tokens_per_batch()
     }
 
-    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+    fn grad_into(
+        &mut self,
+        w: usize,
+        theta: &[f32],
+        _iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()> {
         let mut rng = self.rngs[w].clone();
-        let res = self.step(theta, &mut rng)?;
+        self.step_into(theta, &mut rng, out)?;
         self.rngs[w] = rng;
-        Ok(res)
+        Ok(())
     }
 }

@@ -74,6 +74,11 @@ fn cmd_train(argv: &[String]) -> i32 {
             "net-partitions",
             "",
             "scripted partitions, e.g. 3-5@40..60;0@10..20 (overrides config)",
+        )
+        .opt(
+            "threads",
+            "",
+            "sweep/worker pool size (default: [bench] threads, else available parallelism)",
         );
     let parsed = match spec.parse(argv) {
         Ok(p) => p,
@@ -123,6 +128,15 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
             hybriditer::net::NetSpec::parse_partitions(net_partitions)?;
     }
     cfg.cluster.net.validate(cfg.cluster.workers)?;
+    // Pool-size resolution: --threads beats [bench] threads beats auto.
+    let threads = match parsed.get_opt_usize("threads")? {
+        Some(n) => n,
+        None => cfg.bench_threads,
+    };
+    if threads > 0 {
+        hybriditer::util::pool::set_default_threads(threads);
+        log::info!("worker/sweep pool size: {threads}");
+    }
     log::info!(
         "experiment: {:?} mode={} workers={} timing={:?} backend={:?}",
         cfg.problem_kind,

@@ -1,0 +1,176 @@
+//! Fused, register-tiled KRR gradient kernels — the L3 perf pass.
+//!
+//! The seed hot path computed one shard gradient as two full sweeps of Φ
+//! (`matvec` for the residual, then `matvec_t` for Φᵀr) plus a fresh
+//! `Vec` per call.  For the default shard (ζ=2048, l=64) Φ is 512 KiB, so
+//! the second sweep re-streams the whole matrix from L2/DRAM, and the
+//! per-row residual dot is a single f64 dependency chain the CPU cannot
+//! pipeline.
+//!
+//! [`fused_resid_grad`] makes one pass: rows are processed in tiles of
+//! [`ROW_TILE`], each tile's residual dots run as `ROW_TILE` *independent*
+//! f64 accumulator chains (register-tiled, so the adds pipeline across
+//! rows), and the Φᵀr update happens per-row while the tile is still hot
+//! in L1.  The loss sum rides along in the same sweep.
+//!
+//! **Equivalence contract** (golden-tested in `tests/parity_drivers.rs`):
+//! the fused kernel is *bit-identical* to the two-pass reference, not
+//! merely close.  Per row, the residual is the same f64 dot fold in the
+//! same element order; per gradient coordinate, the f32 accumulation
+//! visits rows in the same ascending order; the loss sum folds residuals
+//! in the same order.  IEEE arithmetic is deterministic, so reordering
+//! *independent* chains across rows changes nothing — only the schedule
+//! the CPU sees.  This is why the perf pass cannot move θ trajectories:
+//! every driver, test, and bench sees the exact bits the reference
+//! produced, just sooner.
+
+use crate::math::vec_ops;
+
+/// Rows per register tile.  Eight f64 accumulators fit one AVX-512 (or two
+/// AVX2) vector registers and give the out-of-order core ~8 independent
+/// add chains to pipeline; larger tiles spill accumulators to the stack.
+pub const ROW_TILE: usize = 8;
+
+/// Reference two-pass kernel (the seed implementation, kept verbatim as
+/// the golden baseline): `r = Φθ − y` by [`vec_ops::matvec`], loss sum in
+/// row order, then `grad = Φᵀr` by [`vec_ops::matvec_t`].  `resid` is a
+/// caller scratch buffer grown as needed; `grad` is fully overwritten.
+/// Returns the residual sum of squares.
+pub fn reference_resid_grad(
+    phi: &[f32],
+    rows: usize,
+    l: usize,
+    theta: &[f32],
+    y: &[f32],
+    resid: &mut Vec<f32>,
+    grad: &mut [f32],
+) -> f64 {
+    assert_eq!(phi.len(), rows * l);
+    assert_eq!(y.len(), rows);
+    if resid.len() < rows {
+        resid.resize(rows, 0.0);
+    }
+    let resid = &mut resid[..rows];
+    vec_ops::matvec(phi, rows, l, theta, resid);
+    let mut ss = 0.0f64;
+    for (r, &yi) in resid.iter_mut().zip(y.iter()) {
+        *r -= yi;
+        ss += (*r as f64) * (*r as f64);
+    }
+    vec_ops::matvec_t(phi, rows, l, resid, grad);
+    ss
+}
+
+/// Fused single-pass kernel: computes `grad = Φᵀ(Φθ − y)` and returns the
+/// residual sum of squares in one sweep of Φ.  `grad` is fully
+/// overwritten; no residual buffer is needed (tile residuals live in
+/// registers).  Bit-identical to [`reference_resid_grad`] — see the
+/// module docs for why.
+pub fn fused_resid_grad(
+    phi: &[f32],
+    rows: usize,
+    l: usize,
+    theta: &[f32],
+    y: &[f32],
+    grad: &mut [f32],
+) -> f64 {
+    assert_eq!(phi.len(), rows * l);
+    assert_eq!(theta.len(), l);
+    assert_eq!(y.len(), rows);
+    assert_eq!(grad.len(), l);
+    grad.fill(0.0);
+
+    let mut ss = 0.0f64;
+    let tiles = rows / ROW_TILE;
+    for tile in 0..tiles {
+        let base = tile * ROW_TILE;
+        let block = &phi[base * l..(base + ROW_TILE) * l];
+
+        // Residual dots: ROW_TILE independent f64 chains, each folding its
+        // row's elements in ascending j — the exact `vec_ops::dot` order.
+        let mut acc = [0.0f64; ROW_TILE];
+        for (j, &th) in theta.iter().enumerate() {
+            let tj = th as f64;
+            for (t, a) in acc.iter_mut().enumerate() {
+                *a += block[t * l + j] as f64 * tj;
+            }
+        }
+
+        // Subtract labels and fold the loss sum in ascending row order.
+        let mut r = [0.0f32; ROW_TILE];
+        for t in 0..ROW_TILE {
+            let ri = acc[t] as f32 - y[base + t];
+            r[t] = ri;
+            ss += ri as f64 * ri as f64;
+        }
+
+        // Φᵀr for the tile: per-row axpy (vectorized across j) while the
+        // tile is L1-hot.  Per gradient coordinate the adds still happen
+        // in ascending row order, matching `vec_ops::matvec_t`.
+        for t in 0..ROW_TILE {
+            vec_ops::axpy(r[t], &block[t * l..(t + 1) * l], grad);
+        }
+    }
+
+    // Tail rows (rows % ROW_TILE), one at a time in the same order.
+    for i in (tiles * ROW_TILE)..rows {
+        let row = &phi[i * l..(i + 1) * l];
+        let ri = vec_ops::dot(row, theta) as f32 - y[i];
+        ss += ri as f64 * ri as f64;
+        vec_ops::axpy(ri, row, grad);
+    }
+    ss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_problem(rows: usize, l: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut phi = vec![0.0f32; rows * l];
+        rng.fill_normal(&mut phi, 0.0, 0.3);
+        let mut y = vec![0.0f32; rows];
+        rng.fill_normal(&mut y, 0.0, 1.0);
+        let mut theta = vec![0.0f32; l];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        (phi, y, theta)
+    }
+
+    #[test]
+    fn fused_is_bit_identical_to_reference() {
+        // Tiled rows, tail rows, and tiny shapes all round-trip exactly.
+        for &(rows, l) in &[(32usize, 8usize), (37, 16), (8, 1), (5, 4), (256, 64)] {
+            let (phi, y, theta) = random_problem(rows, l, 7 + rows as u64);
+            let mut resid = Vec::new();
+            let mut g_ref = vec![0.0f32; l];
+            let ss_ref = reference_resid_grad(&phi, rows, l, &theta, &y, &mut resid, &mut g_ref);
+            let mut g_fused = vec![0.0f32; l];
+            let ss_fused = fused_resid_grad(&phi, rows, l, &theta, &y, &mut g_fused);
+            assert_eq!(g_ref, g_fused, "grad bits diverged at rows={rows} l={l}");
+            assert_eq!(ss_ref.to_bits(), ss_fused.to_bits(), "loss bits diverged");
+        }
+    }
+
+    #[test]
+    fn fused_matches_manual_small_case() {
+        // Φ = [[1, 2], [3, 4]], θ = [1, -1], y = [0, 0]:
+        // r = [-1, -1]; Φᵀr = [-4, -6]; ss = 2.
+        let phi = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![0.0, 0.0];
+        let theta = vec![1.0, -1.0];
+        let mut grad = vec![0.0f32; 2];
+        let ss = fused_resid_grad(&phi, 2, 2, &theta, &y, &mut grad);
+        assert_eq!(grad, vec![-4.0, -6.0]);
+        assert!((ss - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rows_is_zero() {
+        let mut grad = vec![1.0f32; 4];
+        let ss = fused_resid_grad(&[], 0, 4, &[0.0; 4], &[], &mut grad);
+        assert_eq!(ss, 0.0);
+        assert_eq!(grad, vec![0.0; 4]);
+    }
+}

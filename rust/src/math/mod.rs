@@ -4,6 +4,7 @@
 //! linear-algebra or stats crate, implemented from scratch (DESIGN.md §3).
 
 pub mod cholesky;
+pub mod kernels;
 pub mod quantile;
 pub mod stats;
 pub mod vec_ops;

@@ -65,29 +65,11 @@ pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
     s.sqrt()
 }
 
-/// Mean of `k` gradient slices accumulated into `out` (out = sum(gs)/k).
-pub fn mean_into(gs: &[&[f32]], out: &mut [f32]) {
-    assert!(!gs.is_empty());
-    out.fill(0.0);
-    for g in gs {
-        add_assign(out, g);
-    }
-    scale(out, 1.0 / gs.len() as f32);
-}
-
-/// Weighted mean: `out = sum(w_i g_i) / sum(w_i)`.
-pub fn weighted_mean_into(gs: &[&[f32]], ws: &[f32], out: &mut [f32]) {
-    assert_eq!(gs.len(), ws.len());
-    assert!(!gs.is_empty());
-    out.fill(0.0);
-    let mut wsum = 0.0f32;
-    for (g, &w) in gs.iter().zip(ws.iter()) {
-        axpy(w, g, out);
-        wsum += w;
-    }
-    assert!(wsum > 0.0, "weights must not all be zero");
-    scale(out, 1.0 / wsum);
-}
+// NOTE: `mean_into`/`weighted_mean_into` used to live here; both were
+// redundant with `coordinator::aggregator::aggregate` (Mean and
+// ExampleWeighted cover them) and were removed in the perf pass — see
+// docs/PERF.md for the invariant that `aggregate` is the single gradient
+// combination path.
 
 /// Dense row-major matvec: `out = A x`, A is (m, n).
 pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], out: &mut [f32]) {
@@ -148,24 +130,6 @@ mod tests {
     fn norms() {
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn mean_of_grads() {
-        let g1 = vec![1.0, 2.0];
-        let g2 = vec![3.0, 6.0];
-        let mut out = vec![0.0; 2];
-        mean_into(&[&g1, &g2], &mut out);
-        assert_eq!(out, vec![2.0, 4.0]);
-    }
-
-    #[test]
-    fn weighted_mean() {
-        let g1 = vec![1.0, 0.0];
-        let g2 = vec![0.0, 1.0];
-        let mut out = vec![0.0; 2];
-        weighted_mean_into(&[&g1, &g2], &[3.0, 1.0], &mut out);
-        assert_eq!(out, vec![0.75, 0.25]);
     }
 
     #[test]

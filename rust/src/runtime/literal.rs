@@ -57,6 +57,17 @@ pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+/// Extract a flat f32 vector into a caller-owned buffer (cleared and
+/// refilled; capacity is reused).  The literal still materializes one host
+/// `Vec` at the PJRT boundary — this saves the *second* copy the `grad_into`
+/// hot path would otherwise allocate per dispatch.
+pub fn read_f32_into(lit: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+    let v = lit.to_vec::<f32>()?;
+    out.clear();
+    out.extend_from_slice(&v);
+    Ok(())
+}
+
 /// Extract a single f32 scalar (rank-0 or single-element).
 pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
     let v = lit.to_vec::<f32>()?;

@@ -36,7 +36,7 @@
 //! admission sequence bit for bit.
 
 use crate::cluster::{ClusterSpec, ElasticKind, ElasticRuntime, Membership};
-use crate::coordinator::aggregator::{aggregate, Contribution};
+use crate::coordinator::aggregator::{aggregate_iter, Contribution};
 use crate::coordinator::barrier::PartialBarrier;
 use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
 use crate::coordinator::estimator::AdaptiveEstimator;
@@ -101,6 +101,92 @@ pub fn run_virtual(
 // Synchronous modes (BSP / hybrid family)
 // ---------------------------------------------------------------------
 
+/// Slab of reusable [`crate::data::GradResult`] slots: `clear()` resets the
+/// cursor without dropping the gradient buffers, `next()` hands out the
+/// next slot (the slab grows only until its high-water mark is reached, so
+/// steady-state iterations recycle the same allocations).
+struct GradArena {
+    slots: Vec<crate::data::GradResult>,
+    len: usize,
+}
+
+impl GradArena {
+    fn new() -> GradArena {
+        GradArena { slots: Vec::new(), len: 0 }
+    }
+
+    fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    fn next(&mut self) -> &mut crate::data::GradResult {
+        if self.len == self.slots.len() {
+            self.slots.push(crate::data::GradResult::empty());
+        }
+        self.len += 1;
+        &mut self.slots[self.len - 1]
+    }
+
+    fn results(&self) -> &[crate::data::GradResult] {
+        &self.slots[..self.len]
+    }
+}
+
+/// Per-iteration scratch the sync driver reuses across iterations.  Every
+/// buffer the loop needs lives here and is cleared (capacity kept) rather
+/// than reallocated, so a steady-state virtual iteration performs **zero**
+/// heap allocations after warmup — asserted by `tests/alloc_regression.rs`.
+/// Pure buffer reuse: the computed values are bit-identical to the
+/// allocate-per-iteration seed driver (see `tests/parity_drivers.rs`).
+struct IterScratch {
+    /// Per-worker failure events this iteration.
+    events: Vec<FailureEvent>,
+    /// Per-worker response latency (∞ = no response).
+    latency: Vec<f64>,
+    /// Workers that respond this iteration.
+    responders: Vec<usize>,
+    /// Per-worker owned-shard lists (ownership snapshot).
+    assignment: Vec<Vec<usize>>,
+    /// Shards admitted by the barrier, ascending.
+    included_shards: Vec<usize>,
+    /// Workers admitted by the barrier.
+    included_workers: Vec<usize>,
+    /// Workers whose primary reply was delivered.
+    arrived_workers: Vec<usize>,
+    /// BSP: per-worker delivery mask.
+    delivered: Vec<bool>,
+    /// BSP: shards with no delivered owner.
+    missing: Vec<usize>,
+    /// Reuse ablation: arrived-but-abandoned workers, ascending.
+    late: Vec<usize>,
+    /// The partial barrier, `reset()` per iteration.
+    barrier: PartialBarrier,
+    /// This iteration's included gradients.
+    grads: GradArena,
+    /// Staleness-1 gradients carried into the next iteration.
+    carryover: GradArena,
+}
+
+impl IterScratch {
+    fn new(m: usize) -> IterScratch {
+        IterScratch {
+            events: vec![FailureEvent::Healthy; m],
+            latency: vec![f64::INFINITY; m],
+            responders: Vec::with_capacity(m),
+            assignment: Vec::new(),
+            included_shards: Vec::with_capacity(m),
+            included_workers: Vec::with_capacity(m),
+            arrived_workers: Vec::with_capacity(m),
+            delivered: vec![false; m],
+            missing: Vec::with_capacity(m),
+            late: Vec::with_capacity(m),
+            barrier: PartialBarrier::new(0, m, 1),
+            grads: GradArena::new(),
+            carryover: GradArena::new(),
+        }
+    }
+}
+
 fn run_sync(
     pool: &mut dyn ComputePool,
     cluster: &ClusterSpec,
@@ -164,10 +250,32 @@ fn run_sync(
     let mut net = VirtualTransport::new(cluster.net.clone(), cluster.seed);
     // Hybrid-reuse ablation: abandoned results computed at θ_t arrive during
     // iteration t+1 and are folded in with staleness 1 (aggregator-weighted).
-    let reuse_late = matches!(cfg.aggregator, crate::coordinator::AggregatorKind::StalenessDamped { .. });
-    let mut carryover: Vec<crate::data::GradResult> = Vec::new();
+    let reuse_late = matches!(
+        cfg.aggregator,
+        crate::coordinator::AggregatorKind::StalenessDamped { .. }
+    );
+    // Every per-iteration buffer lives in this arena and is reused across
+    // iterations: zero steady-state allocations (tests/alloc_regression.rs).
+    let mut scratch = IterScratch::new(m);
 
     'iters: for iter in 0..cfg.stop.max_iters {
+        // Split the scratch into disjoint &mut locals so the loop body
+        // reads like the original allocate-per-iteration code.
+        let IterScratch {
+            events,
+            latency,
+            responders,
+            assignment,
+            included_shards,
+            included_workers,
+            arrived_workers,
+            delivered,
+            missing,
+            late,
+            barrier,
+            grads,
+            carryover,
+        } = &mut scratch;
         // --- 0. elastic membership events & shard rebalancing ----------
         // Scheduled leave/join events land exactly at this boundary, in
         // schedule order (a leave@k followed by join@k nets out alive).
@@ -197,12 +305,11 @@ fn run_sync(
         // Snapshot the assignment once per iteration (O(shards)); it only
         // changes at boundaries, except for BSP-retry's mid-iteration
         // reassignment, which reads the live map directly below.
-        let assignment = elastic.ownership.grouped();
+        elastic.ownership.grouped_into(assignment);
 
         // --- 1. failure events & responder latencies -------------------
-        let mut events = vec![FailureEvent::Healthy; m];
-        let mut latency = vec![f64::INFINITY; m];
         for w in 0..m {
+            latency[w] = f64::INFINITY;
             if evicted[w] {
                 // Scheduled eviction: no failure-state step (so
                 // `rejoin_after` cannot revive it early), no response.
@@ -220,9 +327,8 @@ fn run_sync(
                     * assignment[w].len().max(1) as f64;
             }
         }
-        let responders: Vec<usize> = (0..m)
-            .filter(|&w| latency[w].is_finite())
-            .collect();
+        responders.clear();
+        responders.extend((0..m).filter(|&w| latency[w].is_finite()));
         if membership.alive() == 0 {
             status = RunStatus::ClusterDead { iter };
             break;
@@ -238,20 +344,20 @@ fn run_sync(
         // broadcast down, `latency[w]` of compute, the Grad reply up.  The
         // NetSpec realizes drops / delays / duplicates per message.
         let stats_iter_start = net.stats();
-        for &w in &responders {
+        for &w in responders.iter() {
             net.send_roundtrip(w, iter, latency[w]);
         }
-        let mut included_shards: Vec<usize> = Vec::new();
-        let mut included_workers: Vec<usize> = Vec::new();
+        included_shards.clear();
+        included_workers.clear();
         // Workers whose primary reply reached the coordinator (delivered,
         // whether or not the barrier admitted it).
-        let mut arrived_workers: Vec<usize> = Vec::new();
+        arrived_workers.clear();
         let mut iter_abandoned = 0usize;
         let mut iter_stale = 0usize;
         let iter_latency: f64;
         match (&cfg.mode, gamma) {
             (SyncMode::Bsp, _) => {
-                let mut delivered = vec![false; m];
+                delivered.fill(false);
                 let mut last_arrival = 0.0f64;
                 while let Some(d) = net.poll() {
                     if !d.duplicate {
@@ -262,13 +368,15 @@ fn run_sync(
                 }
                 // A shard is missing if its owner is down *or* its reply
                 // was lost in the network — BSP cannot tell the two apart.
-                let missing: Vec<usize> = (0..m)
-                    .filter(|&s| {
-                        let o = elastic.ownership.owner(s);
-                        !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined)
-                            && delivered[o])
-                    })
-                    .collect();
+                missing.clear();
+                for s in 0..m {
+                    let o = elastic.ownership.owner(s);
+                    if !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined)
+                        && delivered[o])
+                    {
+                        missing.push(s);
+                    }
+                }
                 if !missing.is_empty() {
                     match cfg.bsp_recovery {
                         BspRecovery::Stall => {
@@ -277,7 +385,7 @@ fn run_sync(
                         }
                         BspRecovery::Retry { detect_timeout } => {
                             // Reassign permanently-dead owners' shards.
-                            for &s in &missing {
+                            for &s in missing.iter() {
                                 let o = elastic.ownership.owner(s);
                                 if fstates[o].is_down() {
                                     // least-loaded alive worker takes over
@@ -285,7 +393,9 @@ fn run_sync(
                                         .filter(|&w| !fstates[w].is_down())
                                         .min_by_key(|&w| elastic.ownership.load(w))
                                         .ok_or_else(|| {
-                                            Error::Cluster("no alive worker for reassignment".into())
+                                            Error::Cluster(
+                                                "no alive worker for reassignment".into(),
+                                            )
                                         })?;
                                     elastic.ownership.reassign(s, new_o);
                                 }
@@ -295,7 +405,7 @@ fn run_sync(
                             // traverse a clean path — one retransmission
                             // suffices in this model).
                             let mut retry_max = 0.0f64;
-                            for &s in &missing {
+                            for &s in missing.iter() {
                                 let o = elastic.ownership.owner(s);
                                 let retry_lat = if latency[o].is_finite() {
                                     latency[o]
@@ -304,12 +414,12 @@ fn run_sync(
                                 };
                                 retry_max = retry_max.max(detect_timeout + retry_lat);
                             }
-                            included_shards = (0..m).collect();
+                            included_shards.extend(0..m);
                             iter_latency = last_arrival.max(retry_max);
                         }
                     }
                 } else {
-                    included_shards = (0..m).collect();
+                    included_shards.extend(0..m);
                     iter_latency = last_arrival;
                 }
             }
@@ -325,7 +435,7 @@ fn run_sync(
                     continue;
                 }
                 let g_eff = g.min(deliverable);
-                let mut barrier = PartialBarrier::new(iter, m, g_eff);
+                barrier.reset(iter, g_eff);
                 let mut close_time = 0.0f64;
                 while let Some(d) = net.poll() {
                     if !d.duplicate {
@@ -364,8 +474,9 @@ fn run_sync(
             }
         }
         if matches!(cfg.mode, SyncMode::Bsp) {
-            included_workers = responders.clone();
-            for &w in &responders {
+            included_workers.clear();
+            included_workers.extend_from_slice(responders);
+            for &w in responders.iter() {
                 membership.record_contribution(w);
             }
         }
@@ -381,30 +492,31 @@ fn run_sync(
         }
 
         // --- 3. compute included gradients ------------------------------
-        let mut grads: Vec<crate::data::GradResult> = Vec::with_capacity(included_shards.len());
-        for &s in &included_shards {
-            grads.push(pool.grad(s, &theta, iter)?);
+        // Gradients land in reusable arena slots (`grad_into`): the fused
+        // kernel writes into last iteration's buffers, so the steady state
+        // allocates nothing.
+        grads.clear();
+        for &s in included_shards.iter() {
+            pool.grad_into(s, &theta, iter, grads.next())?;
         }
-        let mut contribs: Vec<Contribution<'_>> = grads
-            .iter()
-            .map(|g| Contribution {
-                grad: &g.grad,
-                examples: g.examples,
-                staleness: 0,
-            })
-            .collect();
-        contribs.extend(carryover.iter().map(|g| Contribution {
-            grad: &g.grad,
-            examples: g.examples,
-            staleness: 1,
-        }));
-        aggregate(cfg.aggregator, &contribs, &mut agg);
+        aggregate_iter(
+            cfg.aggregator,
+            grads
+                .results()
+                .iter()
+                .map(|g| Contribution { grad: &g.grad, examples: g.examples, staleness: 0 })
+                .chain(carryover.results().iter().map(|g| Contribution {
+                    grad: &g.grad,
+                    examples: g.examples,
+                    staleness: 1,
+                })),
+            &mut agg,
+        );
         let grad_norm = vec_ops::norm2(&agg);
 
         // Adaptive γ: observe scatter, re-estimate per window.
         if let Some((est, window)) = adaptive.as_mut() {
-            let views: Vec<&[f32]> = grads.iter().map(|g| g.grad.as_slice()).collect();
-            est.observe(&views);
+            est.observe_results(grads.results());
             if *window > 0 && (iter + 1) % *window == 0 {
                 let g_new = est.gamma()?;
                 if Some(g_new) != gamma {
@@ -416,8 +528,9 @@ fn run_sync(
         }
 
         // Training-loss estimate at θ_t from the included shards.
-        let loss_sum: f64 = grads.iter().filter_map(|g| g.loss_sum).sum();
+        let loss_sum: f64 = grads.results().iter().filter_map(|g| g.loss_sum).sum();
         let loss_examples: usize = grads
+            .results()
             .iter()
             .filter(|g| g.loss_sum.is_some())
             .map(|g| g.examples)
@@ -433,15 +546,17 @@ fn run_sync(
         if reuse_late {
             // Ascending worker order (not arrival order) keeps the f32
             // fold order identical to the pre-transport driver.
-            let mut late: Vec<usize> = arrived_workers
-                .iter()
-                .copied()
-                .filter(|w| !included_workers.contains(w))
-                .collect();
+            late.clear();
+            late.extend(
+                arrived_workers
+                    .iter()
+                    .copied()
+                    .filter(|w| !included_workers.contains(w)),
+            );
             late.sort_unstable();
-            for w in late {
+            for &w in late.iter() {
                 for &s in &assignment[w] {
-                    carryover.push(pool.grad(s, &theta, iter)?);
+                    pool.grad_into(s, &theta, iter, carryover.next())?;
                 }
             }
         }
@@ -618,6 +733,9 @@ fn run_async(
     let mut updates = 0u64;
     let mut scaled = vec![0.0f32; dim];
     let mut loss_ema: Option<f64> = None;
+    // Reusable gradient slot: the event loop's steady state allocates
+    // nothing per applied update.
+    let mut grad_slot = crate::data::GradResult::empty();
 
     while let Some(Reverse((OrdF64(t), w, delivers))) = heap.pop() {
         now = t;
@@ -671,7 +789,8 @@ fn run_async(
             FailureEvent::Healthy | FailureEvent::Rejoined => {}
         }
 
-        let res = pool.grad(w, &theta_given[w], updates)?;
+        pool.grad_into(w, &theta_given[w], updates, &mut grad_slot)?;
+        let res = &grad_slot;
         let staleness = version - version_given[w];
         staleness_sum += staleness as f64;
         membership.record_contribution(w);

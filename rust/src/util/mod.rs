@@ -5,6 +5,7 @@
 //! (DESIGN.md §3).
 
 pub mod logger;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 

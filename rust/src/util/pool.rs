@@ -1,0 +1,131 @@
+//! Hand-rolled scoped worker pool (the vendor set has no rayon):
+//! deterministic-order parallel map over independent work items.
+//!
+//! Used by the bench suite's sweep engine ([`crate::bench_harness::sweep`])
+//! to run (γ × drop × seed) points concurrently.  Results come back in
+//! *input order* regardless of completion order, so sweep tables and CSVs
+//! are byte-identical to a serial run of the same points.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Process-wide default pool size: 0 means "ask the OS"
+/// (`std::thread::available_parallelism`).  Set from the `--threads` CLI
+/// flag or the `[bench] threads` config key.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the default pool size (0 restores auto-detection).
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The pool size [`scoped_map`] callers should use when none is given:
+/// the configured override, else available parallelism, else 1.
+pub fn default_threads() -> usize {
+    match DEFAULT_THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped worker threads, returning
+/// results in input order.  Work is pulled from a shared atomic cursor, so
+/// uneven item costs self-balance.  `f(i, &items[i])` receives the item's
+/// index for seed derivation.  A panic inside `f` propagates to the caller
+/// once the scope joins (no result is silently dropped).
+pub fn scoped_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // Collect until every sender is gone; placement by index restores
+        // deterministic input order.
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
+
+    out.into_iter()
+        .map(|o| o.expect("pool worker died before finishing its items"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = scoped_map(4, &items, |i, &x| {
+            // Stagger completion: later items finish first.
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_run() {
+        let items: Vec<u64> = (0..37).collect();
+        let serial = scoped_map(1, &items, |i, &x| x * 31 + i as u64);
+        let parallel = scoped_map(8, &items, |i, &x| x * 31 + i as u64);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u8> = vec![];
+        assert!(scoped_map(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(scoped_map(4, &[5u8], |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn index_matches_item() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = scoped_map(6, &items, |i, &x| (i, x));
+        for (i, (gi, gx)) in out.into_iter().enumerate() {
+            assert_eq!(i, gi);
+            assert_eq!(i, gx);
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+        set_default_threads(3);
+        assert_eq!(default_threads(), 3);
+        set_default_threads(0);
+        assert!(default_threads() >= 1);
+    }
+}

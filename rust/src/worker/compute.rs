@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::data::native::krr_shard_grad;
+use crate::data::native::krr_shard_grad_into;
 use crate::data::shard::Shard;
 use crate::data::{ComputePool, GradResult};
 use crate::runtime::{literal, ArtifactSet, Engine, Executable};
@@ -44,23 +44,24 @@ fn shard_buffers(engine: &Engine, shard: &Shard, lam: f32) -> Result<ShardBuffer
     })
 }
 
-/// Run one gradient+loss step through the artifact (device-buffer path).
-fn xla_grad(
+/// Run one gradient+loss step through the artifact (device-buffer path),
+/// writing into a caller-owned [`GradResult`] — the drivers' scratch
+/// arenas reuse `out` across calls, so the host side of the PJRT boundary
+/// stops allocating a fresh gradient `Vec` per dispatch.
+fn xla_grad_into(
     engine: &Engine,
     exe: &Executable,
     bufs: &ShardBuffers,
     theta: &[f32],
-) -> Result<GradResult> {
+    out: &mut GradResult,
+) -> Result<()> {
     // θ changes every iteration → uploaded per call; Φ/y/λ stay resident.
     let theta_buf = engine.buffer_f32(theta, &[theta.len()])?;
     let outs = exe.run_b(&[&theta_buf, &bufs.phi, &bufs.y, &bufs.lam])?;
-    let grad = literal::to_vec_f32(&outs[0])?;
-    let loss_sum = literal::to_scalar_f32(&outs[1])? as f64;
-    Ok(GradResult {
-        grad,
-        loss_sum: Some(loss_sum),
-        examples: bufs.rows,
-    })
+    literal::read_f32_into(&outs[0], &mut out.grad)?;
+    out.loss_sum = Some(literal::to_scalar_f32(&outs[1])? as f64);
+    out.examples = bufs.rows;
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -123,8 +124,14 @@ impl ComputePool for XlaKrrPool {
         self.shards[w].rows
     }
 
-    fn grad(&mut self, w: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
-        xla_grad(&self.engine, &self.exe, &self.shards[w], theta)
+    fn grad_into(
+        &mut self,
+        w: usize,
+        theta: &[f32],
+        _iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()> {
+        xla_grad_into(&self.engine, &self.exe, &self.shards[w], theta, out)
     }
 }
 
@@ -156,7 +163,6 @@ impl NativeKrrFactory {
 struct NativeWorker {
     shards: Arc<Vec<Shard>>,
     lam: f32,
-    resid: Vec<f32>,
 }
 
 impl WorkerCompute for NativeWorker {
@@ -164,11 +170,18 @@ impl WorkerCompute for NativeWorker {
         self.shards.first().map(|s| s.l).unwrap_or(0)
     }
 
-    fn grad_shard(&mut self, shard: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+    fn grad_shard_into(
+        &mut self,
+        shard: usize,
+        theta: &[f32],
+        _iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()> {
         let s = self.shards.get(shard).ok_or_else(|| {
             Error::Cluster(format!("assigned unknown shard {shard}"))
         })?;
-        Ok(krr_shard_grad(s, self.lam, theta, &mut self.resid))
+        krr_shard_grad_into(s, self.lam, theta, out);
+        Ok(())
     }
 }
 
@@ -189,7 +202,6 @@ impl ComputeFactory for NativeKrrFactory {
         Ok(Box::new(NativeWorker {
             shards: Arc::clone(&self.shards),
             lam: self.lam,
-            resid: Vec::new(),
         }))
     }
 }
@@ -256,7 +268,13 @@ impl WorkerCompute for XlaWorker {
         self.bufs.retain(|s, _| shards.contains(s));
     }
 
-    fn grad_shard(&mut self, shard: usize, theta: &[f32], _iter: u64) -> Result<GradResult> {
+    fn grad_shard_into(
+        &mut self,
+        shard: usize,
+        theta: &[f32],
+        _iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()> {
         if !self.bufs.contains_key(&shard) {
             let s = self.shards.get(shard).ok_or_else(|| {
                 Error::Cluster(format!("assigned unknown shard {shard}"))
@@ -265,7 +283,7 @@ impl WorkerCompute for XlaWorker {
             self.bufs.insert(shard, b);
         }
         let bufs = self.bufs.get(&shard).expect("just inserted");
-        xla_grad(&self.engine, &self.exe, bufs, theta)
+        xla_grad_into(&self.engine, &self.exe, bufs, theta, out)
     }
 }
 

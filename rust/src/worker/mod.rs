@@ -58,9 +58,29 @@ use crate::{Error, Result};
 /// Worker-side gradient computation (built inside the worker thread).
 /// Shard-addressable: under elastic rebalancing a worker computes whatever
 /// shards the master currently assigns it.
+///
+/// The required method writes into a caller-owned [`GradResult`]; the
+/// slave feeds it buffers recycled from the master's free-list
+/// ([`MasterMsg::Work`]`::recycle`), so steady-state `Grad` replies reuse
+/// their payload `Vec`s instead of allocating per message.
 pub trait WorkerCompute {
     fn dim(&self) -> usize;
-    fn grad_shard(&mut self, shard: usize, theta: &[f32], iter: u64) -> Result<GradResult>;
+    /// Compute `shard`'s gradient at `theta` into `out` (grad buffer
+    /// resized/overwritten in place).
+    fn grad_shard_into(
+        &mut self,
+        shard: usize,
+        theta: &[f32],
+        iter: u64,
+        out: &mut GradResult,
+    ) -> Result<()>;
+    /// Allocating convenience wrapper around
+    /// [`WorkerCompute::grad_shard_into`].
+    fn grad_shard(&mut self, shard: usize, theta: &[f32], iter: u64) -> Result<GradResult> {
+        let mut out = GradResult::empty();
+        self.grad_shard_into(shard, theta, iter, &mut out)?;
+        Ok(out)
+    }
     /// Hint: the worker's current assignment.  Implementations holding
     /// per-shard resources (device buffers) may release everything not in
     /// `shards`; migrating a shard back later just re-pays its one upload.
@@ -153,6 +173,12 @@ fn run_real_sync(
         }
         drop(res_tx);
 
+        // Gradient-buffer free-list: payload Vecs from admitted Grad
+        // replies are reclaimed here and shipped back to the slaves inside
+        // the next Work broadcast, so steady-state replies recycle their
+        // buffers through the channel instead of allocating per message.
+        let mut free: Vec<Vec<f32>> = Vec::new();
+
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
             // Elastic membership events land at this boundary, in schedule
@@ -196,12 +222,18 @@ fn run_real_sync(
                         WorkPlan::Dropped => continue,
                         WorkPlan::Deliver { net_delay } => net_delay,
                     };
+                    let shards_w = Arc::new(std::mem::take(&mut assignment[w]));
+                    // Hand back as many recycled buffers as this worker
+                    // will need for its per-shard reply payloads.
+                    let take = shards_w.len().min(free.len());
+                    let recycle: Vec<Vec<f32>> = free.drain(free.len() - take..).collect();
                     if work_txs[w]
                         .send(MasterMsg::Work {
                             iter,
                             theta: Arc::clone(&theta_arc),
-                            shards: Arc::new(std::mem::take(&mut assignment[w])),
+                            shards: shards_w,
                             net_delay,
+                            recycle,
                         })
                         .is_ok()
                     {
@@ -379,6 +411,15 @@ fn run_real_sync(
                 .map(|g| g.examples)
                 .sum();
             let loss = cfg.loss_form.assemble(loss_sum, loss_examples, &theta);
+            let included = grads.len();
+
+            // Reclaim the admitted payload buffers for the free-list (they
+            // ride back to the slaves in the next Work broadcast).
+            drop(contribs);
+            for g in grads.drain(..) {
+                free.push(g.grad);
+            }
+            free.truncate(2 * m);
 
             opt.step(&mut theta, &agg, iter);
             let now = driver_start.elapsed().as_secs_f64();
@@ -401,7 +442,7 @@ fn run_real_sync(
                     loss,
                     eval_loss,
                     theta_err,
-                    included: grads.len(),
+                    included,
                     abandoned: iter_abandoned,
                     stale: iter_stale,
                     dropped: dnet.dropped as usize,
@@ -518,6 +559,7 @@ fn run_real_async(
                 theta: Arc::new(theta.clone()),
                 shards: Arc::new(vec![w]),
                 net_delay,
+                recycle: Vec::new(),
             })
             .expect("fresh channel");
             work_txs.push(tx);
@@ -561,6 +603,7 @@ fn run_real_async(
                             theta: Arc::new(theta.clone()),
                             shards: Arc::new(vec![worker]),
                             net_delay,
+                            recycle: Vec::new(),
                         });
                         continue;
                     }
@@ -584,6 +627,10 @@ fn run_real_async(
                     version += 1;
                     updates += 1;
                     version_given[worker] = version;
+                    // Recycle the reply's payload buffer with the next Work.
+                    let sg_loss = sg.loss_sum;
+                    let sg_examples = sg.examples;
+                    let sg_buf = sg.grad;
                     let net_delay = plan_async_roundtrip(
                         &cluster.net,
                         net_ideal,
@@ -598,10 +645,11 @@ fn run_real_async(
                         theta: Arc::new(theta.clone()),
                         shards: Arc::new(vec![worker]),
                         net_delay,
+                        recycle: vec![sg_buf],
                     });
 
-                    if let Some(ls) = sg.loss_sum {
-                        let shard_loss = cfg.loss_form.assemble(ls, sg.examples, &theta);
+                    if let Some(ls) = sg_loss {
+                        let shard_loss = cfg.loss_form.assemble(ls, sg_examples, &theta);
                         loss_ema = Some(match loss_ema {
                             None => shard_loss,
                             Some(p) => 0.9 * p + 0.1 * shard_loss,

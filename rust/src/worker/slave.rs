@@ -37,11 +37,15 @@ pub fn worker_main(
     let mut delay_rng = Pcg64::new(cluster_seed ^ 0xBEEF, w as u64);
     let mut fail_rng = Pcg64::new(cluster_seed ^ 0xFA11, w as u64);
     let mut fstate = FailureState::new(profile.failure.clone());
+    // Recycled gradient buffers from the master's free-list; popped for
+    // each reply payload so steady-state replies allocate nothing.
+    let mut spares: Vec<Vec<f32>> = Vec::new();
 
     while let Ok(msg) = rx.recv() {
         let (mut iter, mut theta, mut shards, mut net_delay) = match msg {
             MasterMsg::Shutdown => break,
-            MasterMsg::Work { iter, theta, shards, net_delay } => {
+            MasterMsg::Work { iter, theta, shards, net_delay, recycle } => {
+                spares.extend(recycle);
                 (iter, theta, shards, net_delay)
             }
         };
@@ -55,7 +59,14 @@ pub fn worker_main(
                     shutdown = true;
                     break;
                 }
-                MasterMsg::Work { iter: i2, theta: t2, shards: s2, net_delay: n2 } => {
+                MasterMsg::Work {
+                    iter: i2,
+                    theta: t2,
+                    shards: s2,
+                    net_delay: n2,
+                    recycle,
+                } => {
+                    spares.extend(recycle);
                     iter = i2;
                     theta = t2;
                     shards = s2;
@@ -98,8 +109,15 @@ pub fn worker_main(
         let mut results: Vec<ShardGrad> = Vec::with_capacity(shards.len());
         let mut fatal: Option<String> = None;
         for &s in shards.iter() {
-            match compute.grad_shard(s, &theta, iter) {
-                Ok(res) => results.push(ShardGrad {
+            // Reuse a recycled buffer for the reply payload when one is
+            // available (its capacity already fits one gradient).
+            let mut res = crate::data::GradResult {
+                grad: spares.pop().unwrap_or_default(),
+                loss_sum: None,
+                examples: 0,
+            };
+            match compute.grad_shard_into(s, &theta, iter, &mut res) {
+                Ok(()) => results.push(ShardGrad {
                     shard: s,
                     grad: res.grad,
                     loss_sum: res.loss_sum,

@@ -1,0 +1,160 @@
+//! Allocation-regression guard for the perf pass (dedicated test binary —
+//! the counting `#[global_allocator]` must own the whole process).
+//!
+//! *Virtual driver*: after warmup, a steady-state iteration of
+//! `sim::run_virtual` must perform **zero** heap allocations — the
+//! `IterScratch` arena, the fused `grad_into` kernel, and the reusable
+//! barrier/transport buffers leave nothing to allocate.  Measured
+//! differentially: two identical runs that differ only in iteration count
+//! must allocate exactly the same number of times (setup + warmup
+//! allocations cancel; any per-iteration allocation shows up multiplied by
+//! the extra iterations).
+//!
+//! *Threaded runtime*: real channels allocate per message by construction
+//! (mpsc nodes, per-broadcast θ Arc), so the guard there is a *budget*:
+//! the per-iteration delta must stay small and flat — the gradient-buffer
+//! free-list keeps reply payloads out of the allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+use hybriditer::worker::NativeKrrFactory;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn problem() -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "alloc".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines: 4,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 32,
+        seed: 23,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn virtual_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
+    let cluster = ClusterSpec {
+        workers: 4,
+        delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+        seed: 7,
+        ..ClusterSpec::default()
+    };
+    // record_every/eval_every = 0: recording rows is the one legitimate
+    // (caller-requested) allocation a steady-state iteration may make.
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 3 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 0,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+    let mut pool = p.native_pool();
+    let before = allocs();
+    let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+    let after = allocs();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    after - before
+}
+
+fn real_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        master_overhead: 0.0,
+        seed: 7,
+        ..ClusterSpec::default()
+    };
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 4 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 0,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+    let coord = Coordinator::new(cluster, cfg).unwrap();
+    let factory = NativeKrrFactory::for_problem(p);
+    let before = allocs();
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    let after = allocs();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    after - before
+}
+
+/// One test drives both checks so the global counter is never shared by
+/// concurrently running tests.
+#[test]
+fn steady_state_allocation_budgets() {
+    let p = problem();
+
+    // --- virtual driver: zero allocations per steady-state iteration ---
+    // Warm the arena's high-water marks once, then measure differentially.
+    let _ = virtual_run_allocs(&p, 50);
+    let short = virtual_run_allocs(&p, 100);
+    let long = virtual_run_allocs(&p, 400);
+    assert_eq!(
+        long, short,
+        "virtual driver allocates per iteration: {} allocs over 300 extra \
+         iterations ({:.2}/iter)",
+        long - short,
+        (long - short) as f64 / 300.0
+    );
+
+    // --- threaded runtime: small, flat per-iteration budget ------------
+    // Channels/Arcs allocate per message by construction; the free-list
+    // must keep the payload Vecs out, so the budget is tight: well under
+    // 40 allocations per worker-iteration for m = 4.
+    let _ = real_run_allocs(&p, 20);
+    let short = real_run_allocs(&p, 40);
+    let long = real_run_allocs(&p, 120);
+    let per_iter = (long.saturating_sub(short)) as f64 / 80.0;
+    assert!(
+        per_iter < 160.0,
+        "threaded runtime allocation budget blown: {per_iter:.1} allocs/iter"
+    );
+}

@@ -43,7 +43,8 @@ fn real_bsp_trains() {
         base_compute: 0.0, // no injected sleeps: fast test
         ..ClusterSpec::default()
     };
-    let coord = Coordinator::new(cluster, cfg(&p).with_mode(SyncMode::Bsp).with_iters(150)).unwrap();
+    let run_cfg = cfg(&p).with_mode(SyncMode::Bsp).with_iters(150);
+    let coord = Coordinator::new(cluster, run_cfg).unwrap();
     let factory = NativeKrrFactory::for_problem(&p);
     let rep = coord.run_real(&factory, &NoEval).unwrap();
     assert!(rep.status.is_healthy(), "{:?}", rep.status);

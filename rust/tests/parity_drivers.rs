@@ -7,9 +7,15 @@
 //! owns its RNG streams), so parity traces use *deterministic* timing:
 //! per-worker chronic slow factors spaced far enough apart (≥ 5 ms) that
 //! wall-clock arrival order in the threaded runtime equals the virtual
-//! latency order.  Gradient math is shared (`krr_shard_grad`) and both
-//! drivers fold contributions in ascending shard order, so θ agrees to
-//! f32 round-off.
+//! latency order.  Gradient math is shared (`krr_shard_grad_into`) and
+//! both drivers fold contributions in ascending shard order, so θ agrees
+//! to f32 round-off.
+//!
+//! The perf pass added golden equivalence tests at the bottom: the fused
+//! single-pass kernel must match the seed's two-pass reference bit for
+//! bit, and `run_virtual` θ trajectories must be identical before/after
+//! the scratch-arena + `grad_into` refactor (the reference pool *is* the
+//! "before": allocate-per-call, two-pass kernel).
 
 use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
 use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, RunReport, SyncMode};
@@ -256,4 +262,147 @@ fn parity_lossy_net_same_counts_decisions_and_theta() {
     // Same included shard sets + same fold order ⇒ matching θ.
     let diff = max_theta_diff(&virt.theta, &real.theta);
     assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
+// ---------------------------------------------------------------------
+// Golden equivalence: fused kernel & scratch-arena refactor (perf pass)
+// ---------------------------------------------------------------------
+
+/// The fused single-pass kernel must match the two-pass reference on every
+/// artifact config the bench suite uses — within 1e-5 by the acceptance
+/// criterion, and in fact bit for bit (the fused kernel preserves the
+/// reference's per-row and per-column fold orders exactly).
+#[test]
+fn golden_fused_kernel_matches_reference_on_all_configs() {
+    use hybriditer::data::ComputePool;
+    use hybriditer::util::rng::Pcg64;
+
+    for spec in [
+        KrrProblemSpec::small().with_machines(2),
+        KrrProblemSpec::default_config().with_machines(2),
+        KrrProblemSpec::wide().with_machines(2),
+    ] {
+        let p = KrrProblem::generate(&spec).unwrap();
+        let mut fused = p.native_pool();
+        let mut reference = p.reference_pool();
+        let mut rng = Pcg64::seeded(spec.l as u64);
+        let mut theta = vec![0.0f32; p.dim()];
+        rng.fill_normal(&mut theta, 0.0, 1.0);
+        for w in 0..fused.n_workers() {
+            let gf = fused.grad(w, &theta, 0).unwrap();
+            let gr = reference.grad(w, &theta, 0).unwrap();
+            let max_diff = max_theta_diff(&gf.grad, &gr.grad);
+            assert!(
+                max_diff <= 1e-5,
+                "config {}: worker {w} fused vs reference diff {max_diff}",
+                spec.config
+            );
+            // Stronger than the acceptance bound: exact bit equality.
+            assert_eq!(gf.grad, gr.grad, "config {}: grad bits diverged", spec.config);
+            assert_eq!(
+                gf.loss_sum.unwrap().to_bits(),
+                gr.loss_sum.unwrap().to_bits(),
+                "config {}: loss bits diverged",
+                spec.config
+            );
+            assert_eq!(gf.examples, gr.examples);
+        }
+    }
+}
+
+/// `run_virtual` trajectories must be *bit-identical* before/after the
+/// perf pass: the reference pool reproduces the seed's behaviour (two-pass
+/// kernel, fresh allocation per call), the native pool runs the fused
+/// kernel through the scratch arena — θ and every recorded row must agree
+/// exactly, across straggler abandonment, elastic churn, and the
+/// staleness-damped reuse ablation.
+#[test]
+fn golden_theta_trajectory_bit_identical_reference_vs_fused() {
+    let m = 6;
+    let p = problem(m);
+    let base = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        delay: hybriditer::straggler::DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+        seed: 31,
+        ..ClusterSpec::default()
+    };
+    let scenarios: Vec<(ClusterSpec, RunConfig)> = vec![
+        (
+            base.clone(),
+            RunConfig {
+                mode: SyncMode::Hybrid { gamma: 4 },
+                optimizer: OptimizerKind::sgd(0.8),
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                record_every: 1,
+                ..RunConfig::default()
+            }
+            .with_iters(60),
+        ),
+        (
+            base.clone()
+                .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 4], 10, 25), 1),
+            RunConfig {
+                mode: SyncMode::Hybrid { gamma: 4 },
+                optimizer: OptimizerKind::sgd(0.8),
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                record_every: 1,
+                ..RunConfig::default()
+            }
+            .with_iters(60),
+        ),
+        (
+            base.clone(),
+            RunConfig {
+                mode: SyncMode::Hybrid { gamma: 3 },
+                optimizer: OptimizerKind::sgd(0.8),
+                aggregator: hybriditer::coordinator::AggregatorKind::StalenessDamped {
+                    rho: 0.5,
+                },
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                record_every: 1,
+                ..RunConfig::default()
+            }
+            .with_iters(60),
+        ),
+        (
+            base,
+            RunConfig {
+                mode: SyncMode::Bsp,
+                optimizer: OptimizerKind::sgd(0.8),
+                loss_form: LossForm::krr(p.spec.lambda),
+                eval_every: 0,
+                record_every: 1,
+                ..RunConfig::default()
+            }
+            .with_iters(40),
+        ),
+    ];
+    for (i, (cluster, cfg)) in scenarios.iter().enumerate() {
+        let mut fused_pool = p.native_pool();
+        let fused = sim::run_virtual(&mut fused_pool, cluster, cfg, &NoEval).unwrap();
+        let mut ref_pool = p.reference_pool();
+        let reference = sim::run_virtual(&mut ref_pool, cluster, cfg, &NoEval).unwrap();
+        assert_eq!(
+            fused.theta, reference.theta,
+            "scenario {i}: theta bits diverged"
+        );
+        assert_eq!(fused.recorder.len(), reference.recorder.len(), "scenario {i}");
+        for (rf, rr) in fused.recorder.rows().iter().zip(reference.recorder.rows()) {
+            assert_eq!(rf.iter, rr.iter, "scenario {i}");
+            assert_eq!(rf.loss.to_bits(), rr.loss.to_bits(), "scenario {i} iter {}", rf.iter);
+            assert_eq!(
+                rf.grad_norm.to_bits(),
+                rr.grad_norm.to_bits(),
+                "scenario {i} iter {}",
+                rf.iter
+            );
+            assert_eq!(rf.included, rr.included, "scenario {i} iter {}", rf.iter);
+            assert_eq!(rf.time.to_bits(), rr.time.to_bits(), "scenario {i} iter {}", rf.iter);
+        }
+        assert_eq!(fused.total_abandoned, reference.total_abandoned, "scenario {i}");
+    }
 }
