@@ -1,4 +1,5 @@
-//! F4 — iteration efficiency vs network unreliability (drop rate × γ).
+//! F4 — iteration efficiency vs network unreliability (drop rate × γ,
+//! plus a stale-admission sweep over slow uplinks).
 //!
 //! The paper's hybrid barrier tolerates *compute-side* stragglers; this
 //! sweep asks how it behaves when the network itself loses messages
@@ -6,23 +7,31 @@
 //! train to a fixed convergence target — 90% of the initial→optimal loss
 //! gap closed — and report iterations- and virtual-time-to-target.
 //!
-//! The 15 (drop × γ) cells run concurrently on the sweep engine
-//! (`--threads N` overrides the pool size); every cell shares the cached
-//! problem, so generation's Cholesky solve happens once.
+//! **Stale sweep**: the event engine lets a reply out-live its iteration
+//! window in virtual time, so F4 now also sweeps per-direction *uplink*
+//! latency on the slowest quarter of the cluster: their replies straggle
+//! past the barrier and classify as `Admission::Stale`, and the stale
+//! columns quantify how much useful work the asymmetric uplinks burn.
+//!
+//! The cells run concurrently on the sweep engine (`--threads N`
+//! overrides the pool size); every cell shares the cached problem, so
+//! generation's Cholesky solve happens once.
 //!
 //! Expected reading: drops act like extra abandonment, so
 //! iterations-to-target inflate with the drop rate, and a mid-sized γ
 //! (which already plans for missing replies) degrades more gracefully
 //! than γ = M (where every lost reply shrinks the barrier below full
-//! membership).  The γ=12 drop-sweep headline lands in
-//! `results/BENCH_f4_network.json` as a trajectory point.
+//! membership).  Slow uplinks behave like permanent stragglers: their
+//! stale replies never contribute, so the effective cluster shrinks by
+//! the lagged quarter.  The γ=12 drop-sweep headline and the stale sweep
+//! land in `results/BENCH_f4_network.json`.
 
 use hybriditer::bench_harness::sweep::SweepEngine;
 use hybriditer::bench_harness::{f, Table};
 use hybriditer::cluster::ClusterSpec;
 use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
 use hybriditer::data::{KrrProblem, KrrProblemSpec};
-use hybriditer::net::NetSpec;
+use hybriditer::net::{LinkDir, LinkModel, NetSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::straggler::DelayModel;
@@ -31,8 +40,28 @@ const M: usize = 16;
 const ITERS: u64 = 600;
 const SEEDS: u64 = 2;
 const GAP_FRACTION: f64 = 0.1; // target: 90% of the loss gap closed
+/// Workers behind a slow uplink in the stale sweep (the slowest quarter).
+const SLOW_UP_WORKERS: usize = M / 4;
 
-fn run_once(problem: &KrrProblem, gamma: usize, drop: f64, seed: u64) -> RunReport {
+fn run_once(problem: &KrrProblem, gamma: usize, drop: f64, up_lat: f64, seed: u64) -> RunReport {
+    let mut net = if drop > 0.0 { NetSpec::lossy(drop) } else { NetSpec::ideal() };
+    if up_lat > 0.0 {
+        // Per-direction asymmetry: the tail quarter's Grad replies crawl
+        // while their Work broadcasts stay instant.
+        for w in (M - SLOW_UP_WORKERS)..M {
+            net = net.with_override(
+                w,
+                LinkModel {
+                    drop_prob: drop,
+                    up: Some(LinkDir {
+                        latency: DelayModel::Constant { secs: up_lat },
+                        drop_prob: drop,
+                    }),
+                    ..LinkModel::ideal()
+                },
+            );
+        }
+    }
     let cluster = ClusterSpec {
         workers: M,
         base_compute: 0.01,
@@ -40,7 +69,7 @@ fn run_once(problem: &KrrProblem, gamma: usize, drop: f64, seed: u64) -> RunRepo
         seed: 70 + seed,
         ..ClusterSpec::default()
     }
-    .with_net(if drop > 0.0 { NetSpec::lossy(drop) } else { NetSpec::ideal() });
+    .with_net(net);
     let cfg = RunConfig {
         mode: SyncMode::Hybrid { gamma },
         optimizer: OptimizerKind::sgd(1.0),
@@ -57,6 +86,7 @@ fn run_once(problem: &KrrProblem, gamma: usize, drop: f64, seed: u64) -> RunRepo
 struct Cell {
     drop: f64,
     gamma: usize,
+    up_lat: f64,
     /// Mean iterations to target (unreached seeds count as `ITERS`).
     iters: f64,
     time: f64,
@@ -64,7 +94,56 @@ struct Cell {
     final_loss: f64,
     dropped: u64,
     duplicated: u64,
+    stale: u64,
     abandon_pct: f64,
+}
+
+fn sweep_cells(engine: &SweepEngine, points: &[(f64, usize, f64)], target: f64) -> Vec<Cell> {
+    let spec = KrrProblemSpec::small().with_machines(M);
+    engine.run(points, move |cache, &(drop, gamma, up_lat)| {
+        let problem = cache.get(&spec);
+        let mut iters_sum = 0.0;
+        let mut time_sum = 0.0;
+        let mut reached = 0u64;
+        let mut final_loss = 0.0;
+        let mut dropped = 0u64;
+        let mut duplicated = 0u64;
+        let mut stale = 0u64;
+        let mut abandon = 0.0;
+        for seed in 0..SEEDS {
+            let rep = run_once(&problem, gamma, drop, up_lat, seed);
+            match rep.recorder.iters_to_loss(target) {
+                Some(it) => {
+                    iters_sum += it as f64;
+                    time_sum += rep.recorder.time_to_loss(target).unwrap_or(0.0);
+                    reached += 1;
+                }
+                None => {
+                    iters_sum += ITERS as f64;
+                    time_sum += rep.total_time();
+                }
+            }
+            final_loss += rep.final_loss();
+            dropped += rep.net.dropped;
+            duplicated += rep.net.duplicated;
+            stale += rep.recorder.rows().iter().map(|r| r.stale as u64).sum::<u64>();
+            abandon += rep.abandon_rate();
+        }
+        let n = SEEDS as f64;
+        Cell {
+            drop,
+            gamma,
+            up_lat,
+            iters: iters_sum / n,
+            time: time_sum / n,
+            reached,
+            final_loss: final_loss / n,
+            dropped,
+            duplicated,
+            stale,
+            abandon_pct: abandon / n * 100.0,
+        }
+    })
 }
 
 fn main() {
@@ -79,7 +158,7 @@ fn main() {
     let problem = engine.cache().get(&spec);
 
     // The clean γ=M reference defines the absolute loss target.
-    let reference = run_once(&problem, M, 0.0, 0);
+    let reference = run_once(&problem, M, 0.0, 0.0, 0);
     let start_loss = reference
         .recorder
         .rows()
@@ -97,71 +176,46 @@ fn main() {
         &[
             "drop_prob",
             "gamma",
+            "up_lat_s",
             "iters_to_target",
             "time_to_target_s",
             "reached",
             "final_loss",
             "net_dropped",
             "net_dup",
+            "stale",
             "abandon_pct",
         ],
     );
-    let mut points: Vec<(f64, usize)> = Vec::new();
+    let mut points: Vec<(f64, usize, f64)> = Vec::new();
     for &drop in &[0.0, 0.05, 0.1, 0.2, 0.3] {
         for &gamma in &[M / 2, M * 3 / 4, M] {
-            points.push((drop, gamma));
+            points.push((drop, gamma, 0.0));
         }
     }
-    let cells: Vec<Cell> = engine.run(&points, |cache, &(drop, gamma)| {
-        let problem = cache.get(&spec);
-        let mut iters_sum = 0.0;
-        let mut time_sum = 0.0;
-        let mut reached = 0u64;
-        let mut final_loss = 0.0;
-        let mut dropped = 0u64;
-        let mut duplicated = 0u64;
-        let mut abandon = 0.0;
-        for seed in 0..SEEDS {
-            let rep = run_once(&problem, gamma, drop, seed);
-            match rep.recorder.iters_to_loss(target) {
-                Some(it) => {
-                    iters_sum += it as f64;
-                    time_sum += rep.recorder.time_to_loss(target).unwrap_or(0.0);
-                    reached += 1;
-                }
-                None => {
-                    iters_sum += ITERS as f64;
-                    time_sum += rep.total_time();
-                }
-            }
-            final_loss += rep.final_loss();
-            dropped += rep.net.dropped;
-            duplicated += rep.net.duplicated;
-            abandon += rep.abandon_rate();
-        }
-        let n = SEEDS as f64;
-        Cell {
-            drop,
-            gamma,
-            iters: iters_sum / n,
-            time: time_sum / n,
-            reached,
-            final_loss: final_loss / n,
-            dropped,
-            duplicated,
-            abandon_pct: abandon / n * 100.0,
-        }
-    });
-    for cell in &cells {
+    // Stale-admission sweep: γ = 3M/4 at a mild drop rate, uplink latency
+    // rising until the tail quarter's replies always miss the barrier.
+    // (The up_lat = 0 baseline for this γ already sits in the main grid,
+    // so the sweep starts at the first nonzero latency.)
+    let g_stale = M * 3 / 4;
+    let stale_points: Vec<(f64, usize, f64)> = [0.01, 0.02, 0.04]
+        .iter()
+        .map(|&up| (0.05, g_stale, up))
+        .collect();
+    let cells = sweep_cells(&engine, &points, target);
+    let stale_cells = sweep_cells(&engine, &stale_points, target);
+    for cell in cells.iter().chain(stale_cells.iter()) {
         table.row(vec![
             f(cell.drop, 2),
             cell.gamma.to_string(),
+            f(cell.up_lat, 3),
             f(cell.iters, 1),
             f(cell.time, 3),
             format!("{}/{}", cell.reached, SEEDS),
             format!("{:.6}", cell.final_loss),
             cell.dropped.to_string(),
             cell.duplicated.to_string(),
+            cell.stale.to_string(),
             f(cell.abandon_pct, 1),
         ]);
     }
@@ -169,7 +223,8 @@ fn main() {
     table.save_csv("f4_network_sweep").unwrap();
 
     // Headline trajectory point: how much a 10% drop rate inflates
-    // iterations-to-target at γ = 3M/4.
+    // iterations-to-target at γ = 3M/4, and how many admissions go stale
+    // once the tail quarter sits behind a 40 ms uplink.
     let g_ref = M * 3 / 4;
     let clean = cells
         .iter()
@@ -179,32 +234,39 @@ fn main() {
         .iter()
         .find(|c| c.drop == 0.1 && c.gamma == g_ref)
         .expect("lossy cell");
+    let stale_head = stale_cells.last().expect("stale sweep cell");
     let inflation = if clean.iters > 0.0 { lossy.iters / clean.iters } else { f64::NAN };
-    let points_json: Vec<String> = cells
-        .iter()
-        .map(|c| {
-            format!(
-                "    {{\"drop_prob\": {}, \"gamma\": {}, \"iters_to_target\": {:.1}, \
-                 \"time_to_target_s\": {:.4}, \"reached\": {}, \"final_loss\": {:.6}}}",
-                c.drop, c.gamma, c.iters, c.time, c.reached, c.final_loss
-            )
-        })
-        .collect();
+    let cell_json = |c: &Cell| {
+        format!(
+            "    {{\"drop_prob\": {}, \"gamma\": {}, \"up_lat_s\": {}, \
+             \"iters_to_target\": {:.1}, \"time_to_target_s\": {:.4}, \"reached\": {}, \
+             \"final_loss\": {:.6}, \"stale\": {}, \"dropped\": {}}}",
+            c.drop, c.gamma, c.up_lat, c.iters, c.time, c.reached, c.final_loss, c.stale,
+            c.dropped
+        )
+    };
+    let points_json: Vec<String> = cells.iter().map(&cell_json).collect();
+    let stale_json: Vec<String> = stale_cells.iter().map(&cell_json).collect();
     let json = format!(
         "{{\n  \"bench\": \"f4_network\",\n  \"machines\": {M},\n  \"iters_cap\": {ITERS},\n  \
          \"seeds\": {SEEDS},\n  \"target_loss\": {target:.6},\n  \"headline\": {{\n    \
          \"gamma\": {g_ref},\n    \"clean_iters_to_target\": {:.1},\n    \
-         \"drop10_iters_to_target\": {:.1},\n    \"iteration_inflation\": {inflation:.3}\n  }},\n  \
-         \"points\": [\n{}\n  ]\n}}\n",
+         \"drop10_iters_to_target\": {:.1},\n    \"iteration_inflation\": {inflation:.3},\n    \
+         \"slow_uplink_stale\": {},\n    \"slow_uplink_s\": {}\n  }},\n  \"points\": [\n{}\n  ],\n  \
+         \"stale_sweep\": [\n{}\n  ]\n}}\n",
         clean.iters,
         lossy.iters,
-        points_json.join(",\n")
+        stale_head.stale,
+        stale_head.up_lat,
+        points_json.join(",\n"),
+        stale_json.join(",\n")
     );
     std::fs::create_dir_all("results").unwrap();
     std::fs::write("results/BENCH_f4_network.json", json).unwrap();
     println!(
-        "\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2})",
-        clean.iters, lossy.iters
+        "\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2}); \
+         {} stale admissions at a {}s tail uplink",
+        clean.iters, lossy.iters, stale_head.stale, stale_head.up_lat
     );
     println!("trajectory point -> results/BENCH_f4_network.json");
 
@@ -213,6 +275,8 @@ fn main() {
          extra abandonment — γ below M absorbs moderate loss (the barrier\n\
          already plans for missing replies), while γ = M feels every drop.\n\
          Duplicates are absorbed by the barrier's admission dedup at no\n\
-         accuracy cost."
+         accuracy cost.  Slow uplinks turn the tail quarter into permanent\n\
+         stragglers: their replies arrive iterations late, classify Stale,\n\
+         and the effective cluster shrinks accordingly."
     );
 }

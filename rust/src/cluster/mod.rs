@@ -159,11 +159,20 @@ impl ElasticSchedule {
 /// Per-run elastic state shared by both drivers: the shard ownership map,
 /// the membership epoch the last rebalance saw, and the rebalance counter.
 ///
-/// Both drivers call [`ElasticRuntime::at_boundary`] at the top of every
-/// iteration; keeping the event-application + rebalance-trigger logic in
-/// one place is what makes the cross-driver parity guarantee hold (see
-/// `tests/parity_drivers.rs`) — the drivers cannot drift apart on *when*
-/// a plan is computed or applied.
+/// The *boundary protocol* — apply scheduled events, then re-plan if due —
+/// lives in the event engine's boundary handler for the virtual drivers
+/// (`crate::sim::engine`) and inline in the threaded master
+/// (`crate::worker`); both are built from the primitives here
+/// ([`ElasticRuntime::maybe_rebalance`], [`ElasticRuntime::replan_orphans`]),
+/// so the drivers cannot drift apart on *when* a boundary plan is computed
+/// or applied (see `tests/parity_drivers.rs`).  One deliberate asymmetry:
+/// [`ElasticRuntime::replan_orphans`] — the mid-barrier repair for an
+/// owner crashing after the boundary plan — runs only in the virtual
+/// driver, which observes crashes *before* dispatching work; the threaded
+/// master learns of a crash mid-collect, after work is already assigned,
+/// so it repairs at the next boundary (its epoch-change trigger).
+/// Stochastic-crash traces therefore remain outside the cross-driver
+/// parity guarantee, as they already were.
 pub struct ElasticRuntime {
     /// Which worker owns each shard.  Drivers read it for assignment and
     /// latency scaling; BSP-retry mutates it directly for permanent
@@ -189,44 +198,58 @@ impl ElasticRuntime {
         self.rebalances
     }
 
-    /// Apply iteration-boundary elastic events and, if due, a rebalance
-    /// plan.  `on_event` fires *before* each event's membership transition
-    /// and can veto it by returning `false` — the threaded driver uses
-    /// this to refuse re-admitting a worker whose thread simulated a
-    /// stochastic crash and stopped serving (a "ghost" join).  Drivers
-    /// hook their failure-state bookkeeping in the same closure (the
-    /// virtual driver force-crashes/revives its per-worker
-    /// `FailureState`s).  Returns whether a non-empty plan was applied.
-    pub fn at_boundary(
+    /// Re-plan shard ownership over the live set if a plan is due: the
+    /// membership epoch changed since the last plan, or the fixed cadence
+    /// hit.  `rebalance_every == 0` disables elastic rebalancing entirely
+    /// (the seed behaviour).  Returns whether a non-empty plan was applied.
+    pub fn maybe_rebalance(
         &mut self,
         iter: u64,
-        schedule: &ElasticSchedule,
         rebalance_every: u64,
-        membership: &mut Membership,
-        mut on_event: impl FnMut(&ElasticEvent) -> bool,
+        membership: &Membership,
     ) -> Result<bool> {
-        for ev in schedule.at(iter) {
-            if !on_event(ev) {
-                continue;
-            }
-            match ev.kind {
-                ElasticKind::Leave => membership.mark_down(ev.worker),
-                ElasticKind::Join => membership.mark_alive(ev.worker),
-            }
-        }
-        let mut rebalanced = false;
-        if rebalance_every > 0
-            && (membership.epoch() != self.last_epoch || iter % rebalance_every == 0)
+        if rebalance_every == 0
+            || (membership.epoch() == self.last_epoch && iter % rebalance_every != 0)
         {
-            let plan = crate::data::plan_rebalance(&self.ownership, &membership.alive_mask());
-            if !plan.is_empty() {
-                self.ownership.apply(&plan).map_err(Error::Cluster)?;
-                self.rebalances += 1;
-                rebalanced = true;
-            }
-            self.last_epoch = membership.epoch();
+            return Ok(false);
         }
-        Ok(rebalanced)
+        let applied = self.replan(membership)?;
+        self.last_epoch = membership.epoch();
+        Ok(applied)
+    }
+
+    /// Crash-during-rebalance repair: when a shard's owner died *after*
+    /// this boundary's plan was applied — e.g. an adopter crashing in the
+    /// same iteration it adopted orphaned shards — re-plan immediately
+    /// inside the barrier instead of leaving the shards on a dead owner
+    /// until the next boundary.  Cheap no-op when rebalancing is disabled
+    /// or every owner is alive.
+    pub fn replan_orphans(
+        &mut self,
+        rebalance_every: u64,
+        membership: &Membership,
+    ) -> Result<bool> {
+        if rebalance_every == 0 {
+            return Ok(false);
+        }
+        let orphaned = (0..self.ownership.shards())
+            .any(|s| !membership.is_alive(self.ownership.owner(s)));
+        if !orphaned || membership.alive() == 0 {
+            return Ok(false);
+        }
+        let applied = self.replan(membership)?;
+        self.last_epoch = membership.epoch();
+        Ok(applied)
+    }
+
+    fn replan(&mut self, membership: &Membership) -> Result<bool> {
+        let plan = crate::data::plan_rebalance(&self.ownership, &membership.alive_mask());
+        if plan.is_empty() {
+            return Ok(false);
+        }
+        self.ownership.apply(&plan).map_err(Error::Cluster)?;
+        self.rebalances += 1;
+        Ok(true)
     }
 }
 
@@ -429,34 +452,34 @@ mod tests {
     fn elastic_runtime_rebalances_on_epoch_change_and_cadence() {
         let mut membership = Membership::new(4);
         let mut rt = ElasticRuntime::new(&membership);
-        let schedule = ElasticSchedule::crash_and_rejoin(&[3], 2, 5);
-        let mut seen = Vec::new();
 
-        // Iter 0: no events, balanced → no plan even on the cadence tick.
-        let r = rt
-            .at_boundary(0, &schedule, 1, &mut membership, |e| { seen.push(*e); true })
-            .unwrap();
-        assert!(!r);
-        assert!(seen.is_empty());
+        // Iter 0: no membership change, balanced → no plan even on the
+        // cadence tick.
+        assert!(!rt.maybe_rebalance(0, 1, &membership).unwrap());
 
-        // Iter 2: leave fires → shard 3 adopted, plan applied.
-        let r = rt
-            .at_boundary(2, &schedule, 1, &mut membership, |e| { seen.push(*e); true })
-            .unwrap();
-        assert!(r);
-        assert_eq!(seen.len(), 1);
+        // Iter 2: worker 3 leaves → shard 3 adopted, plan applied.
+        membership.mark_down(3);
+        assert!(rt.maybe_rebalance(2, 1, &membership).unwrap());
         assert_eq!(membership.alive(), 3);
         assert_eq!(rt.ownership.load(3), 0);
         assert_eq!(rt.rebalances(), 1);
 
         // Iter 3: unchanged membership, already level → empty plan.
-        assert!(!rt.at_boundary(3, &schedule, 1, &mut membership, |_| true).unwrap());
+        assert!(!rt.maybe_rebalance(3, 1, &membership).unwrap());
 
-        // Iter 5: join fires → load levels back onto worker 3.
-        let r = rt.at_boundary(5, &schedule, 1, &mut membership, |_| true).unwrap();
-        assert!(r);
+        // Iter 5: worker 3 rejoins → load levels back onto worker 3.
+        membership.mark_alive(3);
+        assert!(rt.maybe_rebalance(5, 1, &membership).unwrap());
         assert_eq!(membership.alive(), 4);
         assert_eq!(rt.ownership.load(3), 1);
+        assert_eq!(rt.rebalances(), 2);
+
+        // Epoch bumps (down + straight back up) off the cadence: the
+        // change triggers a re-plan *check*, but loads are level so the
+        // plan is empty and nothing is counted.
+        membership.mark_down(0);
+        membership.mark_alive(0);
+        assert!(!rt.maybe_rebalance(7, 10, &membership).unwrap());
         assert_eq!(rt.rebalances(), 2);
     }
 
@@ -464,12 +487,46 @@ mod tests {
     fn elastic_runtime_disabled_without_cadence() {
         let mut membership = Membership::new(3);
         let mut rt = ElasticRuntime::new(&membership);
-        let schedule = ElasticSchedule::crash_and_rejoin(&[2], 1, 4);
-        // rebalance_every = 0: events still apply, ownership never moves.
-        assert!(!rt.at_boundary(1, &schedule, 0, &mut membership, |_| true).unwrap());
+        // rebalance_every = 0: membership changes never move ownership.
+        membership.mark_down(2);
+        assert!(!rt.maybe_rebalance(1, 0, &membership).unwrap());
+        assert!(!rt.replan_orphans(0, &membership).unwrap());
         assert_eq!(membership.alive(), 2);
         assert_eq!(rt.ownership.load(2), 1);
         assert_eq!(rt.rebalances(), 0);
+    }
+
+    #[test]
+    fn replan_orphans_repairs_adopter_crash_in_same_boundary() {
+        // Worker 3 leaves at a boundary; its shard is adopted by worker 0
+        // (least-loaded, lowest index).  Worker 0 then crashes *in the same
+        // iteration* — before the fix its shards stayed on the dead adopter
+        // until the next boundary's re-plan; replan_orphans repairs the map
+        // immediately inside the barrier.
+        let mut membership = Membership::new(4);
+        let mut rt = ElasticRuntime::new(&membership);
+        membership.mark_down(3);
+        assert!(rt.maybe_rebalance(5, 1, &membership).unwrap());
+        assert_eq!(rt.ownership.owner(3), 0);
+        assert_eq!(rt.ownership.load(0), 2);
+
+        // The adopter crashes after the boundary plan was applied.
+        membership.mark_down(0);
+        assert!(rt.replan_orphans(1, &membership).unwrap());
+        for s in 0..4 {
+            assert!(
+                membership.is_alive(rt.ownership.owner(s)),
+                "shard {s} still owned by dead worker {}",
+                rt.ownership.owner(s)
+            );
+        }
+        assert_eq!(rt.rebalances(), 2);
+
+        // With everyone healthy and level, replan_orphans is a no-op.
+        membership.mark_alive(0);
+        membership.mark_alive(3);
+        rt.maybe_rebalance(6, 1, &membership).unwrap();
+        assert!(!rt.replan_orphans(1, &membership).unwrap());
     }
 
     #[test]

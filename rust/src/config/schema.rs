@@ -33,10 +33,14 @@
 //! rebalance_every = 1                 # 0 disables shard rebalancing
 //!
 //! [net]
-//! drop_prob = 0.05      # per-message loss on every link
+//! drop_prob = 0.05      # per-message loss on every link (both directions)
 //! dup_prob = 0.0        # per-reply duplication probability
 //! dup_lag = 0.001       # duplicate copy lag, seconds
 //! delay = "none"        # link latency: same kinds as straggler.delay
+//! up_drop_prob = 0.2    # uplink (Grad) loss override, per direction
+//! down_drop_prob = 0.0  # downlink (Work) loss override
+//! up_delay_secs = 0.03  # constant uplink one-way latency override
+//! down_delay_secs = 0.0 # constant downlink one-way latency override
 //! partitions = "3-5@40..60"           # scripted partition windows
 //! slow_link = 3         # one worker behind a chronically slow link...
 //! slow_link_secs = 0.05 # ...with this constant one-way latency
@@ -62,7 +66,7 @@
 use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
 use crate::coordinator::{AggregatorKind, LossForm, RunConfig, StopRule, SyncMode};
 use crate::data::KrrProblemSpec;
-use crate::net::{LinkModel, NetSpec};
+use crate::net::{LinkDir, LinkModel, NetSpec};
 use crate::optim::{EtaSchedule, OptimizerKind};
 use crate::straggler::{DelayModel, FailureModel};
 use crate::{Error, Result};
@@ -164,20 +168,57 @@ impl ExperimentConfig {
 
         // --- [net] -------------------------------------------------------
         let net_sub = v.get("net").cloned().unwrap_or_else(Value::empty_table);
-        let default_link = LinkModel {
+        // Per-direction asymmetry: `up_*`/`down_*` keys override the
+        // symmetric link for one direction only (up = Grad replies,
+        // down = Work broadcasts).  Absent keys inherit the symmetric
+        // fields, so a config without them is bitwise-identical to the
+        // pre-asymmetry parse.
+        let dir_override = |prefix: &str, base: &LinkModel| -> Result<Option<LinkDir>> {
+            let drop_key = format!("net.{prefix}_drop_prob");
+            let delay_key = format!("net.{prefix}_delay_secs");
+            let drop = v.get(&drop_key).and_then(Value::as_f64);
+            let delay = v.get(&delay_key).and_then(Value::as_f64);
+            if drop.is_none() && delay.is_none() {
+                return Ok(None);
+            }
+            Ok(Some(LinkDir {
+                latency: match delay {
+                    Some(secs) => DelayModel::Constant { secs },
+                    None => base.latency.clone(),
+                },
+                drop_prob: drop.unwrap_or(base.drop_prob),
+            }))
+        };
+        let mut default_link = LinkModel {
             latency: DelayModel::from_kind(v.opt_str("net.delay", "none"), &net_sub)?,
             drop_prob: v.opt_f64("net.drop_prob", 0.0),
             dup_prob: v.opt_f64("net.dup_prob", 0.0),
             dup_lag: v.opt_f64("net.dup_lag", 0.001),
+            ..LinkModel::ideal()
         };
+        default_link.up = dir_override("up", &default_link)?;
+        default_link.down = dir_override("down", &default_link)?;
         let mut overrides: Vec<(usize, LinkModel)> = Vec::new();
         if let Some(w) = v.get("net.slow_link").and_then(Value::as_usize) {
+            // The chronically slow link's constant latency governs *both*
+            // directions (it would otherwise be masked by a per-direction
+            // latency inherited from the default link), while each
+            // direction keeps its effective configured loss rate.
+            let slow_latency = DelayModel::Constant {
+                secs: v.opt_f64("net.slow_link_secs", 0.05),
+            };
             overrides.push((
                 w,
                 LinkModel {
-                    latency: DelayModel::Constant {
-                        secs: v.opt_f64("net.slow_link_secs", 0.05),
-                    },
+                    latency: slow_latency.clone(),
+                    up: Some(LinkDir {
+                        latency: slow_latency.clone(),
+                        drop_prob: default_link.up_dir().1,
+                    }),
+                    down: Some(LinkDir {
+                        latency: slow_latency,
+                        drop_prob: default_link.down_dir().1,
+                    }),
                     ..default_link.clone()
                 },
             ));
@@ -470,6 +511,39 @@ salt = 9
         // The override inherits the default link's loss behaviour.
         assert_eq!(net.overrides[0].1.drop_prob, 0.1);
         assert_eq!(net.salt, 9);
+    }
+
+    #[test]
+    fn net_per_direction_overrides_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+[problem]
+machines = 4
+
+[net]
+drop_prob = 0.1
+up_drop_prob = 0.3
+up_delay_secs = 0.04
+"#,
+        )
+        .unwrap();
+        let link = &cfg.cluster.net.default_link;
+        // Uplink overridden, downlink inherits the symmetric fields.
+        let (up_lat, up_drop) = link.up_dir();
+        assert_eq!(up_drop, 0.3);
+        assert_eq!(
+            *up_lat,
+            crate::straggler::DelayModel::Constant { secs: 0.04 }
+        );
+        let (down_lat, down_drop) = link.down_dir();
+        assert_eq!(down_drop, 0.1);
+        assert_eq!(*down_lat, crate::straggler::DelayModel::None);
+        assert!(link.down.is_none());
+        // Out-of-range per-direction probability is rejected.
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\nup_drop_prob = 1.5",
+        )
+        .is_err());
     }
 
     #[test]

@@ -36,18 +36,16 @@ use crate::{Error, Result};
 ///   whole cluster with events still pending ([`crate::cluster::ElasticSchedule::validate`]);
 /// * the network spec's probabilities, partition windows, and per-link
 ///   overrides must be well-formed ([`crate::net::NetSpec::validate`]);
-/// * async mode has no iteration boundaries, so it takes no elastic config;
+/// * async mode accepts elastic schedules too: it has no barrier
+///   iterations, so a scheduled event at iteration `k` lands at the
+///   update-count boundary `k·M` (the sync-iteration equivalent — see
+///   `docs/SIM.md`);
 /// * BSP guarantees every shard contributes every iteration, so scheduled
 ///   leaves require rebalancing (otherwise the leaver's shards would
 ///   silently stop contributing — exactly the bias BSP exists to prevent).
 pub fn validate_elastic(cluster: &ClusterSpec, mode: &SyncMode) -> Result<()> {
     cluster.elastic.validate(cluster.workers)?;
     cluster.net.validate(cluster.workers)?;
-    if mode.is_async() && (!cluster.elastic.is_empty() || cluster.rebalance_every > 0) {
-        return Err(Error::Config(
-            "elastic membership/rebalancing requires a synchronous mode".into(),
-        ));
-    }
     if matches!(mode, SyncMode::Bsp)
         && cluster.rebalance_every == 0
         && cluster
@@ -320,12 +318,17 @@ mod tests {
         let c = base.clone().with_elastic(churn.clone(), 0);
         assert!(validate_elastic(&c, &SyncMode::Hybrid { gamma: 2 }).is_ok());
 
-        // Async takes no elastic config at all.
+        // Async accepts elastic config: joins/leaves land at update-count
+        // boundaries in the unified event engine.
         let c = base.clone().with_elastic(churn, 1);
-        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_err());
+        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_ok());
         let c = base.clone().with_elastic(ElasticSchedule::default(), 1);
-        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_err());
+        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_ok());
         assert!(validate_elastic(&base, &SyncMode::Async { damping: 0.0 }).is_ok());
+        // …but the schedule itself is still validated.
+        let bad = ElasticSchedule::parse("9:leave@1").unwrap();
+        let c = base.clone().with_elastic(bad, 1);
+        assert!(validate_elastic(&c, &SyncMode::Async { damping: 0.0 }).is_err());
     }
 
     #[test]

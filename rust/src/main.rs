@@ -76,6 +76,16 @@ fn cmd_train(argv: &[String]) -> i32 {
             "scripted partitions, e.g. 3-5@40..60;0@10..20 (overrides config)",
         )
         .opt(
+            "up-drop-prob",
+            "",
+            "uplink (Grad) loss probability on every link (overrides config)",
+        )
+        .opt(
+            "down-drop-prob",
+            "",
+            "downlink (Work) loss probability on every link (overrides config)",
+        )
+        .opt(
             "threads",
             "",
             "sweep/worker pool size (default: [bench] threads, else available parallelism)",
@@ -126,6 +136,29 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
     if !net_partitions.is_empty() {
         cfg.cluster.net.partitions =
             hybriditer::net::NetSpec::parse_partitions(net_partitions)?;
+    }
+    // Per-direction overrides: force one direction's loss rate on every
+    // link, keeping that direction's configured latency.
+    let mut set_dir = |up: bool, p: f64| {
+        let mut apply = |link: &mut hybriditer::net::LinkModel| {
+            let (lat, _) = if up { link.up_dir() } else { link.down_dir() };
+            let dir = hybriditer::net::LinkDir { latency: lat.clone(), drop_prob: p };
+            if up {
+                link.up = Some(dir);
+            } else {
+                link.down = Some(dir);
+            }
+        };
+        apply(&mut cfg.cluster.net.default_link);
+        for (_, link) in &mut cfg.cluster.net.overrides {
+            apply(link);
+        }
+    };
+    if let Some(p) = parsed.get_opt_f64("up-drop-prob")? {
+        set_dir(true, p);
+    }
+    if let Some(p) = parsed.get_opt_f64("down-drop-prob")? {
+        set_dir(false, p);
     }
     cfg.cluster.net.validate(cfg.cluster.workers)?;
     // Pool-size resolution: --threads beats [bench] threads beats auto.

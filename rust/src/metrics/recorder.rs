@@ -20,7 +20,10 @@ pub struct IterRow {
     /// or duplicate copies of an already-admitted result).
     pub abandoned: usize,
     /// Results abandoned as stale this iteration (arrivals carrying an
-    /// older iteration number — only the threaded driver produces these).
+    /// older iteration number).  Both drivers produce these: the threaded
+    /// master sees them on wall-clock, and the virtual engine's event heap
+    /// lets a straggling reply out-live its iteration window and land in a
+    /// later one (non-ideal nets only; see `docs/SIM.md`).
     pub stale: usize,
     /// Messages the network dropped this iteration.
     pub dropped: usize,

@@ -4,22 +4,58 @@ use crate::straggler::DelayModel;
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
 
-/// A coordinator↔worker link's behaviour.  Applied to both directions of a
-/// roundtrip (each direction samples its own fate and delay).  Reordering
-/// is emergent: latency variance lets a later-sent message overtake an
-/// earlier one, and duplication delivers the extra `Grad` copy `dup_lag`
-/// seconds behind the primary.
+/// One direction of a link: its own latency distribution and loss rate.
+/// Real networks are asymmetric — a worker behind a congested uplink can
+/// receive `Work` broadcasts promptly while its `Grad` replies crawl — so
+/// each direction of a [`LinkModel`] can carry its own `LinkDir` override.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkDir {
+    /// One-way latency distribution (virtual seconds), sampled per message.
+    pub latency: DelayModel,
+    /// Probability each message in this direction is silently lost.
+    pub drop_prob: f64,
+}
+
+impl LinkDir {
+    pub fn ideal() -> LinkDir {
+        LinkDir { latency: DelayModel::None, drop_prob: 0.0 }
+    }
+
+    fn validate(&self, name: &str) -> Result<()> {
+        if !(0.0..1.0).contains(&self.drop_prob) {
+            return Err(Error::Config(format!(
+                "link {name} drop_prob must be in [0, 1), got {}",
+                self.drop_prob
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A coordinator↔worker link's behaviour, split into independent up and
+/// down directions.  The symmetric `latency`/`drop_prob` fields apply to
+/// *both* directions (each direction still samples its own fate and
+/// delay); the optional [`LinkModel::up`]/[`LinkModel::down`] overrides
+/// give one direction its own personality — e.g. a slow, lossy uplink
+/// under a fast, clean downlink.  Reordering is emergent: latency variance
+/// lets a later-sent message overtake an earlier one, and duplication
+/// delivers the extra `Grad` copy `dup_lag` seconds behind the primary.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LinkModel {
     /// One-way network latency distribution (virtual seconds), sampled per
-    /// message.
+    /// message — both directions unless overridden.
     pub latency: DelayModel,
-    /// Probability each message is silently lost.
+    /// Probability each message is silently lost — both directions unless
+    /// overridden.
     pub drop_prob: f64,
     /// Probability a delivered `Grad` reply arrives twice.
     pub dup_prob: f64,
     /// How far behind the primary the duplicate copy arrives (seconds).
     pub dup_lag: f64,
+    /// Uplink (worker → coordinator, the `Grad` direction) override.
+    pub up: Option<LinkDir>,
+    /// Downlink (coordinator → worker, the `Work` direction) override.
+    pub down: Option<LinkDir>,
 }
 
 impl Default for LinkModel {
@@ -36,6 +72,8 @@ impl LinkModel {
             drop_prob: 0.0,
             dup_prob: 0.0,
             dup_lag: 0.0,
+            up: None,
+            down: None,
         }
     }
 
@@ -44,9 +82,40 @@ impl LinkModel {
         LinkModel { drop_prob: p, ..LinkModel::ideal() }
     }
 
+    /// Fully asymmetric link from two explicit directions.
+    pub fn asymmetric(up: LinkDir, down: LinkDir) -> LinkModel {
+        LinkModel {
+            up: Some(up),
+            down: Some(down),
+            ..LinkModel::ideal()
+        }
+    }
+
+    /// Effective uplink parameters (`Grad` replies).
+    pub fn up_dir(&self) -> (&DelayModel, f64) {
+        match &self.up {
+            Some(d) => (&d.latency, d.drop_prob),
+            None => (&self.latency, self.drop_prob),
+        }
+    }
+
+    /// Effective downlink parameters (`Work` broadcasts).
+    pub fn down_dir(&self) -> (&DelayModel, f64) {
+        match &self.down {
+            Some(d) => (&d.latency, d.drop_prob),
+            None => (&self.latency, self.drop_prob),
+        }
+    }
+
     /// Does this link perturb traffic at all?
     pub fn is_ideal(&self) -> bool {
-        self.drop_prob == 0.0 && self.dup_prob == 0.0 && self.latency == DelayModel::None
+        let (up_lat, up_drop) = self.up_dir();
+        let (down_lat, down_drop) = self.down_dir();
+        self.dup_prob == 0.0
+            && up_drop == 0.0
+            && down_drop == 0.0
+            && *up_lat == DelayModel::None
+            && *down_lat == DelayModel::None
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -56,6 +125,12 @@ impl LinkModel {
                     "link {name} must be in [0, 1), got {p}"
                 )));
             }
+        }
+        if let Some(up) = &self.up {
+            up.validate("up")?;
+        }
+        if let Some(down) = &self.down {
+            down.validate("down")?;
         }
         if self.dup_lag < 0.0 {
             return Err(Error::Config(format!(
@@ -68,15 +143,19 @@ impl LinkModel {
 
     /// Realize one roundtrip from a per-message RNG stream.  The sampling
     /// order is fixed (down fate, down delay, up fate, up delay, dup fate)
-    /// so a given stream always yields the same realization.
+    /// so a given stream always yields the same realization; a symmetric
+    /// link (no direction overrides) consumes the stream exactly as the
+    /// pre-asymmetry model did.
     pub fn realize(&self, rng: &mut Pcg64) -> LinkRealization {
         if self.is_ideal() {
             return LinkRealization::ideal();
         }
-        let down_dropped = rng.next_f64() < self.drop_prob;
-        let down_delay = self.latency.sample(rng);
-        let up_dropped = rng.next_f64() < self.drop_prob;
-        let up_delay = self.latency.sample(rng);
+        let (down_lat, down_drop) = self.down_dir();
+        let (up_lat, up_drop) = self.up_dir();
+        let down_dropped = rng.next_f64() < down_drop;
+        let down_delay = down_lat.sample(rng);
+        let up_dropped = rng.next_f64() < up_drop;
+        let up_delay = up_lat.sample(rng);
         let up_duplicated = rng.next_f64() < self.dup_prob;
         LinkRealization {
             down_dropped,
@@ -191,6 +270,79 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_up_direction_only() {
+        // Slow, lossy uplink; ideal downlink: Work broadcasts always land
+        // with zero delay, Grad replies pay latency and loss.
+        let link = LinkModel {
+            up: Some(LinkDir {
+                latency: DelayModel::Constant { secs: 0.04 },
+                drop_prob: 0.5,
+            }),
+            ..LinkModel::ideal()
+        };
+        assert!(!link.is_ideal());
+        let mut rng = Pcg64::seeded(4);
+        let mut up_drops = 0;
+        for _ in 0..2000 {
+            let r = link.realize(&mut rng);
+            assert!(!r.down_dropped, "ideal downlink dropped");
+            assert_eq!(r.down_delay, 0.0);
+            if r.up_dropped {
+                up_drops += 1;
+            } else {
+                assert!((r.up_delay - 0.04).abs() < 1e-12);
+            }
+        }
+        assert!(up_drops > 500, "up_drops={up_drops}");
+    }
+
+    #[test]
+    fn asymmetric_builder_and_accessors() {
+        let up = LinkDir { latency: DelayModel::Constant { secs: 0.02 }, drop_prob: 0.1 };
+        let down = LinkDir::ideal();
+        let link = LinkModel::asymmetric(up.clone(), down);
+        let (lat, drop) = link.up_dir();
+        assert_eq!(*lat, DelayModel::Constant { secs: 0.02 });
+        assert_eq!(drop, 0.1);
+        let (lat, drop) = link.down_dir();
+        assert_eq!(*lat, DelayModel::None);
+        assert_eq!(drop, 0.0);
+        // Symmetric fields fall through when no override is present.
+        let sym = LinkModel::lossy(0.25);
+        assert_eq!(sym.up_dir().1, 0.25);
+        assert_eq!(sym.down_dir().1, 0.25);
+    }
+
+    #[test]
+    fn symmetric_link_realizes_identically_to_explicit_dirs() {
+        // A link with both directions overridden by copies of the symmetric
+        // parameters must consume the RNG stream identically.
+        let base = LinkModel {
+            latency: DelayModel::Uniform { lo: 0.001, hi: 0.003 },
+            drop_prob: 0.2,
+            dup_prob: 0.1,
+            dup_lag: 0.001,
+            ..LinkModel::ideal()
+        };
+        let explicit = LinkModel {
+            up: Some(LinkDir {
+                latency: DelayModel::Uniform { lo: 0.001, hi: 0.003 },
+                drop_prob: 0.2,
+            }),
+            down: Some(LinkDir {
+                latency: DelayModel::Uniform { lo: 0.001, hi: 0.003 },
+                drop_prob: 0.2,
+            }),
+            ..base.clone()
+        };
+        let mut r1 = Pcg64::seeded(9);
+        let mut r2 = Pcg64::seeded(9);
+        for _ in 0..256 {
+            assert_eq!(base.realize(&mut r1), explicit.realize(&mut r2));
+        }
+    }
+
+    #[test]
     fn validate_rejects_bad_probabilities() {
         assert!(LinkModel::lossy(1.0).validate().is_err());
         assert!(LinkModel::lossy(-0.1).validate().is_err());
@@ -198,6 +350,16 @@ mod tests {
         assert!(LinkModel { dup_lag: -1.0, ..LinkModel::ideal() }.validate().is_err());
         assert!(LinkModel::lossy(0.99).validate().is_ok());
         assert!(LinkModel::ideal().validate().is_ok());
+        let bad_up = LinkModel {
+            up: Some(LinkDir { latency: DelayModel::None, drop_prob: 1.5 }),
+            ..LinkModel::ideal()
+        };
+        assert!(bad_up.validate().is_err());
+        let ok_down = LinkModel {
+            down: Some(LinkDir { latency: DelayModel::None, drop_prob: 0.5 }),
+            ..LinkModel::ideal()
+        };
+        assert!(ok_down.validate().is_ok());
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! # Pieces
 //!
 //! * [`LinkModel`] — one link's personality: per-message latency
-//!   distribution, drop probability, duplication probability;
+//!   distribution, drop probability, duplication probability — with
+//!   optional per-direction [`LinkDir`] overrides (slow lossy uplink under
+//!   a fast clean downlink);
 //! * [`NetSpec`] — the whole cluster's network: a default link, per-worker
 //!   overrides (asymmetric topologies), and scripted partition windows
 //!   ("workers 3..6 unreachable during iterations 40..60");
@@ -42,7 +44,7 @@ pub mod shim;
 pub mod spec;
 pub mod transport;
 
-pub use link::{LinkModel, LinkRealization};
+pub use link::{LinkDir, LinkModel, LinkRealization};
 pub use shim::{GradFate, NetShim, WorkPlan};
 pub use spec::{NetSpec, Partition};
 pub use transport::{Delivery, Transport, VirtualTransport};

@@ -1,0 +1,374 @@
+//! Fully asynchronous policy over the event engine.
+//!
+//! Every delivered reply applies immediately (staleness-damped when
+//! configured); there are no barriers, so virtual time is simply the event
+//! heap's clock.  The unified engine closes two historical gaps:
+//!
+//! * **Elastic membership** — a scheduled event at iteration `k` lands at
+//!   the update-count boundary `k·M` (the sync-iteration equivalent).
+//!   Leaves evict the worker (its in-flight reply is discarded); joins
+//!   re-admit it with a *fresh* θ snapshot — staleness 0 — and a new
+//!   dispatch, and with `rebalance_every > 0` the engine's boundary
+//!   handler re-plans shard ownership exactly like the sync policy.
+//! * **Duplication** — `dup_prob` now schedules the duplicated reply copy
+//!   as its own event.  Every dispatch carries a **version tag** (the
+//!   per-worker attempt counter, which also keys the network realization);
+//!   an arriving reply applies only if its tag matches the worker's
+//!   outstanding dispatch, so duplicate copies — and stragglers from
+//!   before a leave/rejoin cycle — are detected and discarded, never
+//!   double-applied.
+//!
+//! With a static cluster the event sequence, RNG streams, and timing
+//! arithmetic are unchanged from the pre-refactor `run_async` (the RNG
+//! family is still `(0xA51C, 2000)` and arrivals still land at
+//! `base + compute + net + tail`).
+
+use crate::cluster::{ClusterSpec, ElasticKind};
+use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
+use crate::coordinator::{RunConfig, RunReport, SyncMode};
+use crate::data::{ComputePool, GradResult};
+use crate::math::vec_ops;
+use crate::metrics::{IterRow, Recorder};
+use crate::net::{NetSpec, NetStats};
+use crate::straggler::{FailureEvent, StragglerProfile};
+use crate::Result;
+
+use super::engine::{EngineCore, Event};
+use super::{report, EvalHooks};
+
+/// The dispatch side of the async policy: the per-worker attempt counters
+/// (version tags), the outstanding-tag table the duplicate detection
+/// checks against, the network spec, and the message accounting — bundled
+/// so every dispatch site states only what varies (worker, base time,
+/// tail, shard list).
+struct Dispatcher<'a> {
+    profiles: &'a [StragglerProfile],
+    net: &'a NetSpec,
+    net_ideal: bool,
+    seed: u64,
+    attempts: Vec<u64>,
+    /// Version tag of each worker's outstanding dispatch; only the
+    /// matching reply may apply.
+    outstanding: Vec<u64>,
+    /// The shard list each worker's outstanding dispatch was sent with.
+    /// The reply computes *these* shards — like the threaded `Work`
+    /// message carrying its list — so a rebalance landing while the
+    /// roundtrip is in flight cannot retroactively change what the reply
+    /// covers.  Buffers reuse capacity across dispatches.
+    shards_given: Vec<Vec<usize>>,
+    stats: NetStats,
+}
+
+impl Dispatcher<'_> {
+    /// Dispatch worker `w`'s next roundtrip over `shards` (its current
+    /// assignment, frozen into the dispatch): sample its compute latency
+    /// (scaled by the shard count, the sync policy's serial model),
+    /// realize the roundtrip's network fate keyed by the worker's attempt
+    /// counter — the version tag — and push the arrival (plus any
+    /// duplicated copy) onto the engine heap.  A lost roundtrip still pops
+    /// (the master "detects" the loss a full traversal later) but carries
+    /// `delivers = false`, so the update is discarded and the worker
+    /// retries.
+    fn dispatch(
+        &mut self,
+        core: &mut EngineCore,
+        w: usize,
+        base: f64,
+        tail: f64,
+        shards: &[usize],
+    ) {
+        self.shards_given[w].clear();
+        self.shards_given[w].extend_from_slice(shards);
+        let compute = self.profiles[w].sample_latency(&mut core.delay_rngs[w])
+            * shards.len().max(1) as f64;
+        let tag = self.attempts[w];
+        let (delivers, net_delay, dup_lag) = if self.net_ideal {
+            self.stats.sent += 2;
+            self.stats.delivered += 2;
+            (true, 0.0, None)
+        } else {
+            let r = self.net.realize(self.seed, w, tag);
+            let ok = self.stats.count_roundtrip(&r, true);
+            let dup = if ok && r.up_duplicated { Some(r.dup_lag) } else { None };
+            (ok, r.roundtrip_delay(), dup)
+        };
+        self.attempts[w] += 1;
+        self.outstanding[w] = tag;
+        let at = base + compute + net_delay + tail;
+        core.heap.push(Event { at, worker: w, iter: tag, duplicate: false, delivers });
+        if let Some(lag) = dup_lag {
+            let dup = Event { at: at + lag, worker: w, iter: tag, duplicate: true, delivers: true };
+            core.heap.push(dup);
+        }
+    }
+}
+
+pub(super) fn run_async(
+    pool: &mut dyn ComputePool,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    hooks: &dyn EvalHooks,
+    driver_start: std::time::Instant,
+) -> Result<RunReport> {
+    let damping = match cfg.mode {
+        SyncMode::Async { damping } => damping,
+        _ => unreachable!("run_async requires Async mode"),
+    };
+    let m = pool.n_workers();
+    let dim = pool.dim();
+    let profiles = cluster.profiles();
+
+    let mut theta = cfg.init_theta.clone().unwrap_or_else(|| vec![0.0f32; dim]);
+    // Engine state on the historical async RNG stream family.
+    let mut core = EngineCore::new(&profiles, cluster.seed, 0xA51C, 2000);
+
+    // Each worker computes against the θ snapshot it was last handed.
+    let mut theta_given: Vec<Vec<f32>> = (0..m).map(|_| theta.clone()).collect();
+    let mut version_given = vec![0u64; m];
+    let mut version = 0u64;
+
+    let mut dx = Dispatcher {
+        profiles: &profiles,
+        net: &cluster.net,
+        net_ideal: cluster.net.is_ideal(),
+        seed: cluster.seed,
+        attempts: vec![0u64; m],
+        outstanding: vec![0u64; m],
+        shards_given: (0..m).map(|_| Vec::new()).collect(),
+        stats: NetStats::default(),
+    };
+    let mut stats_at_row = NetStats::default();
+    let mut assignment: Vec<Vec<usize>> = core.elastic.ownership.grouped();
+
+    let mut opt = cfg.optimizer.build();
+    let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
+    let mut rec = Recorder::new();
+    let mut now = 0.0;
+    let mut status = RunStatus::Completed;
+    let mut staleness_sum = 0.0f64;
+    let mut updates = 0u64;
+    let mut scaled = vec![0.0f32; dim];
+    let mut loss_ema: Option<f64> = None;
+    // Reusable gradient slots: the event loop's steady state allocates
+    // nothing per applied update (the multi-shard slot only grows under
+    // elastic rebalancing).
+    let mut grad_slot = GradResult::empty();
+    let mut multi_slot = GradResult::empty();
+    // The iteration-0 boundary precedes the opening dispatches (a leave@0
+    // suppresses that worker's first roundtrip); joins at boundary 0 are
+    // covered by the opening dispatches themselves.
+    if (cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0)
+        && core.boundary(0, &cluster.elastic, cluster.rebalance_every)?
+    {
+        core.elastic.ownership.grouped_into(&mut assignment);
+    }
+    // Next update-count boundary (in sync-iteration equivalents) whose
+    // scheduled events and rebalance cadence are still unprocessed.
+    let mut next_boundary = 1u64;
+    for w in 0..m {
+        if core.evicted[w] {
+            continue;
+        }
+        dx.dispatch(&mut core, w, 0.0, 0.0, &assignment[w]);
+    }
+
+    loop {
+        // --- boundaries due at this update count ------------------------
+        while next_boundary <= updates / m as u64 {
+            let b = next_boundary;
+            next_boundary += 1;
+            let had_events = cluster.elastic.at(b).next().is_some();
+            if !had_events && cluster.rebalance_every == 0 {
+                continue;
+            }
+            if core.boundary(b, &cluster.elastic, cluster.rebalance_every)? {
+                core.elastic.ownership.grouped_into(&mut assignment);
+                log::debug!("async boundary {b}: shard ownership rebalanced");
+            }
+            // Policy side of a join: hand the re-admitted worker a fresh θ
+            // snapshot (staleness 0) and dispatch its next roundtrip.  Its
+            // pre-leave in-flight reply, if any, now carries a stale
+            // version tag and will be discarded on arrival.
+            for ev in cluster.elastic.at(b) {
+                if ev.kind == ElasticKind::Join
+                    && !core.evicted[ev.worker]
+                    && !core.fstates[ev.worker].is_down()
+                {
+                    theta_given[ev.worker].copy_from_slice(&theta);
+                    version_given[ev.worker] = version;
+                    let shards = &assignment[ev.worker];
+                    dx.dispatch(&mut core, ev.worker, now, cluster.master_overhead, shards);
+                }
+            }
+        }
+
+        // --- next event -------------------------------------------------
+        let Some(ev) = core.heap.pop() else { break };
+        now = ev.at;
+        let w = ev.worker;
+        if core.evicted[w] || ev.iter != dx.outstanding[w] {
+            // Pre-eviction leftovers, duplicate copies, and pre-rejoin
+            // stragglers: the eviction mask / version tag detects them and
+            // the update is discarded, never double-applied.
+            if ev.delivers {
+                core.membership.record_abandoned(w);
+            }
+            continue;
+        }
+        if !ev.delivers {
+            // The network lost this roundtrip: the update never reaches
+            // the master; the worker retries from the same θ.
+            dx.dispatch(&mut core, w, now, 0.0, &assignment[w]);
+            continue;
+        }
+        // Failure check at delivery time.
+        let fev = core.fstates[w].step(updates, &mut core.fail_rngs[w]);
+        core.membership.observe(w, fev);
+        match fev {
+            FailureEvent::Crashed | FailureEvent::Down => {
+                if core.membership.alive() == 0 {
+                    status = RunStatus::ClusterDead { iter: updates };
+                    break;
+                }
+                continue; // worker drops out of the loop (no reschedule)
+            }
+            FailureEvent::TransientDrop => {
+                // Result lost; worker retries from the same θ.
+                dx.dispatch(&mut core, w, now, 0.0, &assignment[w]);
+                core.membership.record_abandoned(w);
+                continue;
+            }
+            FailureEvent::Healthy | FailureEvent::Rejoined => {}
+        }
+
+        if dx.shards_given[w].is_empty() {
+            // Transient zero-shard dispatch under churn: heartbeat only.
+            dx.dispatch(&mut core, w, now, cluster.master_overhead, &assignment[w]);
+            continue;
+        }
+
+        // Compute the shards this dispatch was sent with (not the current
+        // assignment — a rebalance may have landed while the roundtrip was
+        // in flight) at the held θ snapshot.  One shard — the static
+        // layout — writes straight into the reusable slot; a multi-shard
+        // dispatch folds a plain mean in the canonical order the shared
+        // aggregator uses (unit-weight folds, then one 1/k scale), with
+        // losses and example counts summing.
+        let res: &GradResult = if dx.shards_given[w].len() == 1 {
+            let s = dx.shards_given[w][0];
+            pool.grad_into(s, &theta_given[w], updates, &mut grad_slot)?;
+            &grad_slot
+        } else {
+            let k = dx.shards_given[w].len();
+            multi_slot.grad.resize(dim, 0.0);
+            multi_slot.grad.fill(0.0);
+            let mut loss_sum = 0.0f64;
+            let mut any_loss = false;
+            let mut examples = 0usize;
+            for &s in dx.shards_given[w].iter() {
+                pool.grad_into(s, &theta_given[w], updates, &mut grad_slot)?;
+                vec_ops::axpy(1.0, &grad_slot.grad, &mut multi_slot.grad);
+                if let Some(ls) = grad_slot.loss_sum {
+                    loss_sum += ls;
+                    any_loss = true;
+                }
+                examples += grad_slot.examples;
+            }
+            vec_ops::scale(&mut multi_slot.grad, (1.0 / k as f64) as f32);
+            multi_slot.loss_sum = if any_loss { Some(loss_sum) } else { None };
+            multi_slot.examples = examples;
+            &multi_slot
+        };
+        let staleness = version - version_given[w];
+        staleness_sum += staleness as f64;
+        core.membership.record_contribution(w);
+
+        // Staleness-damped application.
+        let weight = if damping > 0.0 {
+            (1.0 / (1.0 + staleness as f64)).powf(damping)
+        } else {
+            1.0
+        };
+        scaled.copy_from_slice(&res.grad);
+        if weight != 1.0 {
+            vec_ops::scale(&mut scaled, weight as f32);
+        }
+        opt.step(&mut theta, &scaled, updates);
+        version += 1;
+        updates += 1;
+
+        // Hand the worker fresh parameters; schedule its next arrival over
+        // its *current* assignment.
+        theta_given[w].copy_from_slice(&theta);
+        version_given[w] = version;
+        let res_loss = res.loss_sum;
+        let res_examples = res.examples;
+        let applied_shards = dx.shards_given[w].len();
+        dx.dispatch(&mut core, w, now, cluster.master_overhead, &assignment[w]);
+
+        // Loss estimate: EMA over per-report losses (noisy but cheap).
+        if let Some(ls) = res_loss {
+            let shard_loss = cfg.loss_form.assemble(ls, res_examples, &theta);
+            loss_ema = Some(match loss_ema {
+                None => shard_loss,
+                Some(prev) => 0.9 * prev + 0.1 * shard_loss,
+            });
+        }
+
+        // Record every `record_every × m` updates ≈ one sync-iteration.
+        let iter_equiv = updates / m.max(1) as u64;
+        let grad_norm = vec_ops::norm2(&scaled);
+        let loss = loss_ema.unwrap_or(f64::NAN);
+        let stop = tracker.observe(updates.saturating_sub(1), loss, grad_norm);
+        if updates % (cfg.record_every.max(1) * m as u64) == 0 || stop.is_some() {
+            let do_eval = cfg.eval_every > 0 && iter_equiv % cfg.eval_every == 0;
+            let (eval_loss, theta_err) = if do_eval || stop.is_some() {
+                (hooks.hook_eval_loss(&theta), hooks.hook_theta_err(&theta))
+            } else {
+                (None, None)
+            };
+            let dnet = dx.stats.since(&stats_at_row);
+            stats_at_row = dx.stats;
+            rec.push(IterRow {
+                iter: updates,
+                time: now,
+                loss,
+                eval_loss,
+                theta_err,
+                included: applied_shards,
+                abandoned: 0,
+                stale: 0,
+                dropped: dnet.dropped as usize,
+                duplicated: dnet.duplicated as usize,
+                alive: core.membership.alive(),
+                gamma: None,
+                grad_norm,
+            });
+        }
+        if let Some(s) = stop {
+            status = s;
+            break;
+        }
+    }
+    if core.heap.is_empty() && core.membership.alive() == 0 && status == RunStatus::Completed {
+        status = RunStatus::ClusterDead { iter: updates };
+    }
+    core.heap.clear();
+
+    let mean_staleness = if updates > 0 {
+        Some(staleness_sum / updates as f64)
+    } else {
+        None
+    };
+    Ok(report::assemble(
+        rec,
+        theta,
+        status,
+        None,
+        "async",
+        &core,
+        dx.stats,
+        mean_staleness,
+        driver_start,
+    ))
+}

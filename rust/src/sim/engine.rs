@@ -1,0 +1,263 @@
+//! The shared discrete-event core both virtual policies run on.
+//!
+//! [`EventHeap`] is the virtual-time event heap: reply events pop in
+//! deterministic `(time, worker, duplicate, iter)` order, and — for the
+//! sync policy — stragglers that out-live their iteration window are
+//! *rebased* into the next window's time frame instead of being force-
+//! drained, which is what lets a reply straggle past a barrier boundary
+//! and classify as [`crate::coordinator::barrier::Admission::Stale`] in
+//! virtual time.
+//!
+//! [`EngineCore`] bundles the per-run state every policy needs — the heap,
+//! the membership view, the elastic runtime, per-worker failure state
+//! machines and RNG streams — and owns the **boundary event handler**
+//! ([`EngineCore::boundary`]): scheduled elastic leave/join events land
+//! there, followed by any due shard-rebalance plan (this is the former
+//! `ElasticRuntime::at_boundary`, folded into the engine).  Policies layer
+//! their own semantics on top: the sync policy opens a
+//! [`crate::coordinator::barrier::PartialBarrier`] per window, the async
+//! policy applies every delivered reply immediately.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::{ElasticKind, ElasticRuntime, ElasticSchedule, Membership};
+use crate::straggler::{FailureState, StragglerProfile};
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+pub use super::events::Event;
+
+/// Virtual-time event heap with deterministic pop order and window
+/// rebasing.  Pushes and pops recycle the underlying buffers, so a
+/// steady-state sync iteration allocates nothing once the high-water mark
+/// is reached (`tests/alloc_regression.rs`).
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<Event>>,
+    /// Scratch for [`EventHeap::rebase`]; capacity is retained.
+    scratch: Vec<Event>,
+}
+
+impl Default for EventHeap {
+    fn default() -> Self {
+        EventHeap::new()
+    }
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap { heap: BinaryHeap::new(), scratch: Vec::new() }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Pop the next event in `(at, worker, duplicate, iter)` order.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    /// Pop the next event only if it lands strictly before `deadline`.
+    pub fn pop_before(&mut self, deadline: f64) -> Option<Event> {
+        match self.heap.peek() {
+            Some(Reverse(ev)) if ev.at < deadline => self.pop(),
+            _ => None,
+        }
+    }
+
+    /// Earliest pending event time.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(ev)| ev.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Shift every pending event `window_len` seconds into the past: the
+    /// sync policy calls this when it closes an iteration window, so
+    /// events that out-lived the window re-enter the next one at the
+    /// correct relative offset.  Only stragglers under a non-ideal
+    /// [`crate::net::NetSpec`] ever remain at a boundary; under an ideal
+    /// spec this is never reached and the lockstep arithmetic is untouched
+    /// (the bit-for-bit guarantee).
+    pub fn rebase(&mut self, window_len: f64) {
+        if self.heap.is_empty() {
+            return;
+        }
+        self.scratch.clear();
+        while let Some(Reverse(mut ev)) = self.heap.pop() {
+            ev.at -= window_len;
+            self.scratch.push(ev);
+        }
+        for ev in self.scratch.drain(..) {
+            self.heap.push(Reverse(ev));
+        }
+    }
+}
+
+/// Per-run engine state shared by the sync and async policies.
+pub struct EngineCore {
+    pub heap: EventHeap,
+    pub membership: Membership,
+    pub elastic: ElasticRuntime,
+    pub fstates: Vec<FailureState>,
+    pub delay_rngs: Vec<Pcg64>,
+    pub fail_rngs: Vec<Pcg64>,
+    /// Workers evicted by a scheduled Leave.  Tracked separately from
+    /// `FailureState` so a `FailureModel` with `rejoin_after` cannot
+    /// auto-revive a scheduled leaver before its scheduled Join (the
+    /// threaded driver's master-side eviction has the same semantics).
+    pub evicted: Vec<bool>,
+}
+
+impl EngineCore {
+    /// Build the engine for `m` workers.  `stream_salt` / `fail_offset`
+    /// pick the policy's RNG stream family: the sync policy keeps the
+    /// historical `(0x51D, 1000)` streams, the async policy `(0xA51C,
+    /// 2000)`, so both reproduce their pre-refactor sequences bit for bit.
+    pub fn new(
+        profiles: &[StragglerProfile],
+        seed: u64,
+        stream_salt: u64,
+        fail_offset: u64,
+    ) -> EngineCore {
+        let m = profiles.len();
+        let mut seed_rng = Pcg64::new(seed, stream_salt);
+        let delay_rngs: Vec<Pcg64> = (0..m).map(|w| seed_rng.split(w as u64)).collect();
+        let fail_rngs: Vec<Pcg64> =
+            (0..m).map(|w| seed_rng.split(fail_offset + w as u64)).collect();
+        let fstates: Vec<FailureState> = profiles
+            .iter()
+            .map(|p| FailureState::new(p.failure.clone()))
+            .collect();
+        let membership = Membership::new(m);
+        let elastic = ElasticRuntime::new(&membership);
+        EngineCore {
+            heap: EventHeap::new(),
+            membership,
+            elastic,
+            fstates,
+            delay_rngs,
+            fail_rngs,
+            evicted: vec![false; m],
+        }
+    }
+
+    /// The engine's boundary event handler.  Scheduled elastic leave/join
+    /// events due at `iter` land here, in schedule order (a leave@k
+    /// followed by join@k nets out alive), each updating the failure
+    /// state, the eviction mask, and the membership view together; a due
+    /// shard-rebalance plan follows.  Returns whether a non-empty plan was
+    /// applied.
+    pub fn boundary(
+        &mut self,
+        iter: u64,
+        schedule: &ElasticSchedule,
+        rebalance_every: u64,
+    ) -> Result<bool> {
+        for ev in schedule.at(iter) {
+            match ev.kind {
+                ElasticKind::Leave => {
+                    self.evicted[ev.worker] = true;
+                    self.fstates[ev.worker].force_crash(iter);
+                    self.membership.mark_down(ev.worker);
+                }
+                ElasticKind::Join => {
+                    self.evicted[ev.worker] = false;
+                    self.fstates[ev.worker].force_rejoin();
+                    self.membership.mark_alive(ev.worker);
+                }
+            }
+        }
+        self.elastic.maybe_rebalance(iter, rebalance_every, &self.membership)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, worker: usize, iter: u64) -> Event {
+        Event { at, worker, iter, duplicate: false, delivers: true }
+    }
+
+    #[test]
+    fn heap_pops_in_deterministic_order() {
+        let mut h = EventHeap::new();
+        h.push(ev(0.03, 0, 1));
+        h.push(ev(0.01, 2, 1));
+        h.push(ev(0.01, 1, 1));
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.pop().unwrap().worker, 1);
+        assert_eq!(h.pop().unwrap().worker, 2);
+        assert_eq!(h.pop().unwrap().at, 0.03);
+        assert!(h.pop().is_none());
+    }
+
+    #[test]
+    fn pop_before_respects_deadline() {
+        let mut h = EventHeap::new();
+        h.push(ev(0.01, 0, 0));
+        h.push(ev(0.05, 1, 0));
+        assert_eq!(h.pop_before(0.02).unwrap().worker, 0);
+        assert!(h.pop_before(0.02).is_none());
+        assert_eq!(h.len(), 1);
+        // An event exactly at the deadline stays (strictly-before).
+        assert!(h.pop_before(0.05).is_none());
+        assert_eq!(h.pop_before(0.050001).unwrap().worker, 1);
+    }
+
+    #[test]
+    fn rebase_shifts_pending_events() {
+        let mut h = EventHeap::new();
+        h.push(ev(0.015, 0, 3));
+        h.push(ev(0.025, 1, 3));
+        h.rebase(0.010);
+        let a = h.pop().unwrap();
+        assert!((a.at - 0.005).abs() < 1e-12);
+        assert_eq!(a.iter, 3, "rebase must not touch the iteration tag");
+        let b = h.pop().unwrap();
+        assert!((b.at - 0.015).abs() < 1e-12);
+        // Rebasing an empty heap is a no-op.
+        h.rebase(1.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn boundary_applies_events_and_rebalances() {
+        use crate::cluster::ElasticSchedule;
+        let profiles: Vec<StragglerProfile> =
+            (0..4).map(|_| StragglerProfile::healthy(0.01)).collect();
+        let mut core = EngineCore::new(&profiles, 7, 0x51D, 1000);
+        let schedule = ElasticSchedule::crash_and_rejoin(&[3], 2, 5);
+
+        assert!(!core.boundary(0, &schedule, 1).unwrap());
+        assert_eq!(core.membership.alive(), 4);
+
+        // Leave fires: eviction mask + failure state + membership move
+        // together, and the orphaned shard is adopted.
+        assert!(core.boundary(2, &schedule, 1).unwrap());
+        assert!(core.evicted[3]);
+        assert!(core.fstates[3].is_down());
+        assert_eq!(core.membership.alive(), 3);
+        assert_eq!(core.elastic.ownership.load(3), 0);
+
+        // Join fires: everything reverts and load levels back.
+        assert!(core.boundary(5, &schedule, 1).unwrap());
+        assert!(!core.evicted[3]);
+        assert!(!core.fstates[3].is_down());
+        assert_eq!(core.membership.alive(), 4);
+        assert_eq!(core.elastic.ownership.load(3), 1);
+        assert_eq!(core.elastic.rebalances(), 2);
+    }
+}

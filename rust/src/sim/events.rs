@@ -1,0 +1,100 @@
+//! Event taxonomy of the discrete-event engine.
+//!
+//! One event type covers both policies: a [`Event`] is a `Grad` reply (or
+//! the duplicated copy of one, or — async only — the detection point of a
+//! lost roundtrip) reaching the coordinator at a virtual time.  Scheduled
+//! elastic membership changes and shard rebalances are *boundary* events:
+//! they are keyed by iteration (sync) or update count (async), not by
+//! virtual time, and are handled by
+//! [`crate::sim::engine::EngineCore::boundary`] rather than the heap.
+//!
+//! Ordering is total and deterministic: `(at, worker, duplicate, iter)`
+//! ascending.  The first three components reproduce the transport's
+//! delivery order exactly (a primary precedes its own duplicate, equal
+//! times order by worker index), so under an ideal [`crate::net::NetSpec`]
+//! the engine pops events in the same sequence the pre-refactor lockstep
+//! driver polled them — the bit-for-bit guarantee.  The trailing `iter`
+//! component only matters when a carried-over straggler from an earlier
+//! iteration collides exactly with a fresh reply, which requires a
+//! non-ideal spec.
+
+use std::cmp::Ordering;
+
+/// One reply event on the engine's virtual-time heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    /// Virtual arrival time.  The sync policy keys events *relative to the
+    /// current iteration window* (carried stragglers are rebased at each
+    /// boundary — see [`crate::sim::engine::EventHeap::rebase`]); the
+    /// async policy uses absolute virtual time (it has no windows).
+    pub at: f64,
+    /// The replying worker.
+    pub worker: usize,
+    /// What the reply answers: the iteration whose `Work` produced it
+    /// (sync), or the dispatch's version tag (async) — the engine's
+    /// duplicate/stale detection compares this against the worker's
+    /// outstanding tag.
+    pub iter: u64,
+    /// True for the extra copy of a duplicated reply.
+    pub duplicate: bool,
+    /// False when the network lost the roundtrip.  The async policy models
+    /// the master's loss-detection point as an event (the worker retries
+    /// from the θ it holds); the sync policy never schedules lost replies.
+    pub delivers: bool,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Latencies are finite (the spec validates its distributions), so
+        // the partial_cmp fallback to Equal is never load-bearing.
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap_or(Ordering::Equal)
+            .then(self.worker.cmp(&other.worker))
+            .then(self.duplicate.cmp(&other.duplicate))
+            .then(self.iter.cmp(&other.iter))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, worker: usize, iter: u64, duplicate: bool) -> Event {
+        Event { at, worker, iter, duplicate, delivers: true }
+    }
+
+    #[test]
+    fn orders_by_time_then_worker_then_duplicate() {
+        let mut evs = vec![
+            ev(0.02, 0, 5, false),
+            ev(0.01, 1, 5, false),
+            ev(0.01, 0, 5, true),
+            ev(0.01, 0, 5, false),
+        ];
+        evs.sort();
+        assert_eq!(evs[0], ev(0.01, 0, 5, false));
+        assert_eq!(evs[1], ev(0.01, 0, 5, true));
+        assert_eq!(evs[2], ev(0.01, 1, 5, false));
+        assert_eq!(evs[3], ev(0.02, 0, 5, false));
+    }
+
+    #[test]
+    fn carried_straggler_ties_break_oldest_first() {
+        // A carried reply from iteration 3 colliding exactly with a fresh
+        // reply from iteration 4 pops oldest-first — deterministic, so the
+        // same seed always yields the same admission sequence.
+        let mut evs = vec![ev(0.01, 2, 4, false), ev(0.01, 2, 3, false)];
+        evs.sort();
+        assert_eq!(evs[0].iter, 3);
+        assert_eq!(evs[1].iter, 4);
+    }
+}

@@ -1,0 +1,790 @@
+//! Virtual-timing driver: discrete-event simulation of the whole cluster.
+//!
+//! Latencies are *bookkept*, never slept, so a 10,000-iteration straggler
+//! sweep runs in seconds and is bit-for-bit reproducible.  Semantics are
+//! shared with the threaded runtime ([`crate::worker`]): the same
+//! [`crate::coordinator::barrier::PartialBarrier`] closes iterations, the
+//! same aggregator/optimizer update θ, and which results get abandoned
+//! depends only on the sampled latency order — exactly what a physical
+//! cluster's barrier sees.
+//!
+//! # Architecture (see `docs/SIM.md`)
+//!
+//! Both timing modes run on **one discrete-event core**:
+//!
+//! * [`engine`] — the virtual-time event heap ([`engine::EventHeap`]),
+//!   per-run engine state ([`engine::EngineCore`]: membership, elastic
+//!   runtime, failure states, RNG streams), and the boundary event handler
+//!   (scheduled elastic leave/join + shard rebalancing);
+//! * [`events`] — the event taxonomy: replies (and their duplicated
+//!   copies, and async loss-detection points) with a deterministic total
+//!   order;
+//! * `sync` — the BSP / hybrid family as a *policy* over the engine: one
+//!   barrier window per iteration, with cross-iteration message
+//!   reordering — a straggler's reply can out-live its window and land in
+//!   a later one as [`crate::coordinator::barrier::Admission::Stale`],
+//!   matching the threaded driver's stale arrivals in virtual time;
+//! * `async_mode` — the fully asynchronous baseline as a policy over the
+//!   same engine, now with elastic membership (leave/join at update-count
+//!   boundaries), shard rebalancing, and version-tagged duplicate
+//!   detection;
+//! * `report` — single assembly point for [`crate::coordinator::RunReport`].
+//!
+//! Under [`crate::net::NetSpec::ideal`] (the default) the sync policy
+//! reproduces the pre-engine lockstep driver **bit for bit** — nothing is
+//! ever carried across a window — and the async policy keeps its
+//! historical event sequence.  The golden tests in
+//! `tests/parity_drivers.rs` pin this down.
+//!
+//! BSP failure recovery follows the Hadoop model the paper argues against
+//! ("they have to calculate it again when failure occurs"): a missing shard
+//! is detected after a timeout and re-executed on a healthy node, with
+//! permanent reassignment when the owner crashed for good — so BSP keeps
+//! *correctness* but pays latency, while the hybrid barrier simply keeps
+//! going (the paper's fault-tolerance claim, F2).
+//!
+//! **Elastic membership**: a [`crate::cluster::ClusterSpec::elastic`]
+//! schedule applies deterministic leave/join events at boundaries — sync
+//! iterations, or update-count equivalents in async mode — through the
+//! engine's boundary handler, and with
+//! [`crate::cluster::ClusterSpec::rebalance_every`] `> 0` the coordinator
+//! re-plans shard ownership over the live set
+//! ([`crate::data::plan_rebalance`]).  A crash observed mid-run re-plans
+//! *immediately inside the barrier* when rebalancing is enabled, so an
+//! adopter dying in the boundary it adopted shards cannot orphan them for
+//! an iteration.
+//!
+//! **Unreliable network**: every coordinator↔worker roundtrip routes
+//! through [`crate::net::VirtualTransport`] — the `Work` broadcast down,
+//! the `Grad` reply back up.  A [`crate::net::NetSpec`] realizes each
+//! message's fate (drop, delay, duplicate — per direction; scripted
+//! partitions silence whole windows) as a pure function of
+//! `(seed, worker, iteration)`, so the threaded runtime realizes the
+//! *same* fates (see [`crate::net::NetShim`]).
+
+pub mod engine;
+pub mod events;
+
+mod async_mode;
+mod report;
+mod sync;
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::{RunConfig, RunReport};
+use crate::data::ComputePool;
+use crate::{Error, Result};
+
+/// Problem-specific evaluation callbacks (exact holdout loss, ‖θ−θ*‖).
+pub trait EvalHooks {
+    fn hook_eval_loss(&self, theta: &[f32]) -> Option<f64> {
+        let _ = theta;
+        None
+    }
+    fn hook_theta_err(&self, theta: &[f32]) -> Option<f64> {
+        let _ = theta;
+        None
+    }
+}
+
+/// No evaluation.
+pub struct NoEval;
+impl EvalHooks for NoEval {}
+
+impl EvalHooks for crate::data::KrrProblem {
+    fn hook_eval_loss(&self, theta: &[f32]) -> Option<f64> {
+        Some(crate::data::KrrProblem::eval_loss(self, theta))
+    }
+    fn hook_theta_err(&self, theta: &[f32]) -> Option<f64> {
+        Some(crate::data::KrrProblem::theta_err(self, theta))
+    }
+}
+
+/// Run a full experiment in virtual time.
+pub fn run_virtual(
+    pool: &mut dyn ComputePool,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    let driver_start = std::time::Instant::now();
+    let m = pool.n_workers();
+    if m != cluster.workers {
+        return Err(Error::Cluster(format!(
+            "pool has {m} workers, cluster spec says {}",
+            cluster.workers
+        )));
+    }
+    crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
+    if cfg.mode.is_async() {
+        return async_mode::run_async(pool, cluster, cfg, hooks, driver_start);
+    }
+    sync::run_sync(pool, cluster, cfg, hooks, driver_start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::convergence::RunStatus;
+    use crate::coordinator::{BspRecovery, SyncMode};
+    use crate::data::{KrrProblem, KrrProblemSpec};
+    use crate::math::vec_ops;
+    use crate::optim::OptimizerKind;
+    use crate::straggler::DelayModel;
+
+    fn tiny_problem(machines: usize) -> KrrProblem {
+        let spec = KrrProblemSpec {
+            config: "test".into(),
+            d: 4,
+            l: 16,
+            zeta: 64,
+            machines,
+            noise: 0.05,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 128,
+            seed: 11,
+        };
+        KrrProblem::generate(&spec).unwrap()
+    }
+
+    fn base_cfg(problem: &KrrProblem) -> RunConfig {
+        RunConfig {
+            optimizer: OptimizerKind::sgd(1.0),
+            loss_form: crate::coordinator::LossForm::krr(problem.spec.lambda),
+            eval_every: 25,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn bsp_converges_to_theta_star() {
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+        let cfg = base_cfg(&p).with_mode(SyncMode::Bsp).with_iters(800);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy());
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 1e-2, "theta_err={err}");
+    }
+
+    #[test]
+    fn hybrid_converges_with_abandonment() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 5 })
+            .with_iters(400);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy());
+        assert!(rep.total_abandoned > 0, "no abandonment happened");
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 5e-2, "theta_err={err}");
+    }
+
+    #[test]
+    fn hybrid_is_faster_than_bsp_under_stragglers() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.5 },
+            ..ClusterSpec::default()
+        }
+        .with_slow_tail(1, 10.0);
+        let iters = 150;
+        let mut pool = p.native_pool();
+        let bsp = run_virtual(
+            &mut pool,
+            &cluster,
+            &base_cfg(&p).with_mode(SyncMode::Bsp).with_iters(iters),
+            &NoEval,
+        )
+        .unwrap();
+        let mut pool2 = p.native_pool();
+        let hyb = run_virtual(
+            &mut pool2,
+            &cluster,
+            &base_cfg(&p)
+                .with_mode(SyncMode::Hybrid { gamma: 6 })
+                .with_iters(iters),
+            &NoEval,
+        )
+        .unwrap();
+        assert!(
+            hyb.total_time() < bsp.total_time() * 0.7,
+            "hybrid {:.3}s vs bsp {:.3}s",
+            hyb.total_time(),
+            bsp.total_time()
+        );
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(100);
+        let mut pool1 = p.native_pool();
+        let r1 = run_virtual(&mut pool1, &cluster, &cfg, &NoEval).unwrap();
+        let mut pool2 = p.native_pool();
+        let r2 = run_virtual(&mut pool2, &cluster, &cfg, &NoEval).unwrap();
+        assert_eq!(r1.theta, r2.theta);
+        assert_eq!(r1.total_time(), r2.total_time());
+        assert_eq!(r1.total_abandoned, r2.total_abandoned);
+    }
+
+    #[test]
+    fn bsp_stalls_on_crash_without_recovery() {
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec {
+            workers: 4,
+            failure: crate::straggler::FailureModel {
+                crash_prob: 0.05,
+                transient_prob: 0.0,
+                rejoin_after: None,
+            },
+            seed: 7,
+            ..ClusterSpec::default()
+        };
+        let mut cfg = base_cfg(&p).with_mode(SyncMode::Bsp).with_iters(500);
+        cfg.bsp_recovery = BspRecovery::Stall;
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(matches!(rep.status, RunStatus::Stalled { .. }), "{:?}", rep.status);
+    }
+
+    #[test]
+    fn hybrid_survives_crashes() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            failure: crate::straggler::FailureModel {
+                crash_prob: 0.001,
+                transient_prob: 0.01,
+                rejoin_after: None,
+            },
+            seed: 13,
+            ..ClusterSpec::default()
+        };
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 3 })
+            .with_iters(600);
+        // Decay η to squeeze out the partial-gradient noise floor.
+        cfg.optimizer = OptimizerKind::Sgd {
+            eta: crate::optim::EtaSchedule { eta0: 1.0, decay: 0.01 },
+        };
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert!(rep.crashes > 0, "no crash got injected");
+        // Dead shards bias the reachable optimum away from the full-data θ*;
+        // the claim under test is "keeps training through crashes".
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 0.2, "theta_err={err}");
+        let start = vec_ops::dist2(&vec![0.0; p.dim()], &p.theta_star);
+        assert!(err < start * 0.1, "barely moved: {err} of {start}");
+    }
+
+    #[test]
+    fn async_mode_converges() {
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() };
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Async { damping: 0.0 })
+            .with_iters(1800); // updates, ≈300 sync iterations
+        cfg.optimizer = OptimizerKind::sgd(0.3);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy());
+        assert!(rep.mean_staleness.is_some());
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 0.1, "theta_err={err}");
+    }
+
+    #[test]
+    fn auto_gamma_resolves_from_estimator() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec { workers: 8, ..ClusterSpec::default() };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::HybridAuto { alpha: 0.05, xi: 0.05 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        let g = rep.gamma.unwrap();
+        assert!((1..=8).contains(&g), "gamma={g}");
+    }
+
+    #[test]
+    fn adaptive_gamma_shrinks_on_homogeneous_data() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec { workers: 8, ..ClusterSpec::default() };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::HybridAdaptive { alpha: 0.05, xi: 0.5, window: 10 })
+            .with_iters(100);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        // Loose ξ + similar shards: adaptive γ should settle at 1.
+        assert_eq!(rep.gamma, Some(1), "{:?}", rep.gamma);
+    }
+
+    #[test]
+    fn elastic_crash_and_rejoin_converges_like_static() {
+        // Acceptance: 2 of 8 workers leave at iteration 150 and rejoin at
+        // 250; with rebalancing on, the elastic run must reach the same
+        // loss tolerance as the fully static run.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(8);
+        // Stochastic latencies rotate which γ workers close the barrier, so
+        // every shard contributes over time in both runs.
+        let base = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        };
+        let static_cluster = base.clone();
+        let elastic_cluster = base
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[3, 7], 150, 250), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 5 })
+            .with_iters(800);
+
+        let mut pool1 = p.native_pool();
+        let st = run_virtual(&mut pool1, &static_cluster, &cfg, &p).unwrap();
+        let mut pool2 = p.native_pool();
+        let el = run_virtual(&mut pool2, &elastic_cluster, &cfg, &p).unwrap();
+
+        assert!(st.status.is_healthy());
+        assert!(el.status.is_healthy(), "{:?}", el.status);
+        assert_eq!(el.crashes, 2);
+        assert_eq!(el.rejoins, 2);
+        assert!(el.rebalances >= 2, "rebalances={}", el.rebalances);
+        let err_static = p.theta_err(&st.theta);
+        let err_elastic = p.theta_err(&el.theta);
+        assert!(err_static < 5e-2, "static theta_err={err_static}");
+        assert!(err_elastic < 5e-2, "elastic theta_err={err_elastic}");
+        // Same loss tolerance: both runs end within the same band of the
+        // exact optimum.
+        let gap_static = st.final_loss() - p.loss_star;
+        let gap_elastic = el.final_loss() - p.loss_star;
+        assert!(
+            gap_elastic < gap_static.abs().max(1e-4) * 10.0,
+            "elastic loss gap {gap_elastic} vs static {gap_static}"
+        );
+    }
+
+    #[test]
+    fn elastic_rebalance_keeps_all_rows_contributing() {
+        // While 2 of 6 workers are away, rebalancing must hand their shards
+        // to survivors: with γ = alive count, every iteration still
+        // aggregates all 6 shards.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[4, 5], 10, 30), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            // γ=4 of the ≥4 alive workers cover all 6 shards during the
+            // outage (each survivor owns 1-2 shards).
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.alive, 4, "iter {}", row.iter);
+                assert_eq!(row.included, 6, "iter {}: included {}", row.iter, row.included);
+            }
+        }
+        assert!(rep.rebalances >= 2);
+    }
+
+    #[test]
+    fn elastic_without_rebalance_orphans_shards() {
+        // Ablation: with rebalance_every = 0 the leavers' shards stop
+        // contributing (the seed behaviour the elastic subsystem removes).
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[4, 5], 10, 40), 0);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(30);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert_eq!(rep.rebalances, 0);
+        for row in rep.recorder.rows() {
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.included, 4, "iter {}: included {}", row.iter, row.included);
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_run_is_deterministic() {
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 2], 20, 45), 5);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 4 })
+            .with_iters(100);
+        let mut pool1 = p.native_pool();
+        let r1 = run_virtual(&mut pool1, &cluster, &cfg, &NoEval).unwrap();
+        let mut pool2 = p.native_pool();
+        let r2 = run_virtual(&mut pool2, &cluster, &cfg, &NoEval).unwrap();
+        assert_eq!(r1.theta, r2.theta);
+        assert_eq!(r1.total_abandoned, r2.total_abandoned);
+        assert_eq!(r1.rebalances, r2.rebalances);
+    }
+
+    #[test]
+    fn scheduled_leave_immune_to_rejoin_after_autorevive() {
+        // A FailureModel with `rejoin_after` (supervisor respawn) must not
+        // revive a *scheduled* leaver early: scheduled eviction is
+        // master-side and ends only at the scheduled join — same semantics
+        // as the threaded driver.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec {
+            workers: 4,
+            failure: crate::straggler::FailureModel {
+                crash_prob: 0.0,
+                transient_prob: 0.0,
+                rejoin_after: Some(3),
+            },
+            ..ClusterSpec::default()
+        }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[2], 5, 15), 1);
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 3 })
+            .with_iters(25);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            let expect_alive = if (5..15).contains(&row.iter) { 3 } else { 4 };
+            assert_eq!(
+                row.alive, expect_alive,
+                "iter {}: alive {} (rejoin_after revived a scheduled leaver?)",
+                row.iter, row.alive
+            );
+        }
+        assert_eq!(rep.crashes, 1);
+        assert_eq!(rep.rejoins, 1);
+    }
+
+    #[test]
+    fn async_mode_accepts_elastic_schedule_and_converges() {
+        // The unified engine's acceptance test: the async policy takes the
+        // same scripted churn the sync policy does — 2 of 8 workers leave
+        // at iteration-equivalent 50 (update 400) and rejoin at 100 — with
+        // rebalancing keeping every shard contributing, and still reaches
+        // the static run's tolerance.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(8);
+        let base = ClusterSpec { workers: 8, ..ClusterSpec::default() };
+        let elastic_cluster = base
+            .clone()
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[3, 7], 50, 100), 1);
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Async { damping: 0.0 })
+            .with_iters(2400); // updates, ≈300 sync iterations
+        cfg.optimizer = OptimizerKind::sgd(0.3);
+
+        let mut pool1 = p.native_pool();
+        let st = run_virtual(&mut pool1, &base, &cfg, &p).unwrap();
+        let mut pool2 = p.native_pool();
+        let el = run_virtual(&mut pool2, &elastic_cluster, &cfg, &p).unwrap();
+
+        assert!(st.status.is_healthy(), "{:?}", st.status);
+        assert!(el.status.is_healthy(), "{:?}", el.status);
+        assert_eq!(el.crashes, 2);
+        assert_eq!(el.rejoins, 2);
+        assert!(el.rebalances >= 2, "rebalances={}", el.rebalances);
+        assert!(el.mean_staleness.is_some());
+        let err_static = p.theta_err(&st.theta);
+        let err_elastic = p.theta_err(&el.theta);
+        assert!(err_static < 0.1, "static theta_err={err_static}");
+        assert!(err_elastic < 0.15, "elastic theta_err={err_elastic}");
+    }
+
+    #[test]
+    fn async_detects_duplicates_version_tagged() {
+        // Pure duplication (no drops, no latency): the duplicated reply
+        // copies pop as events but their version tags no longer match the
+        // worker's outstanding dispatch, so every one is detected and
+        // discarded — the update stream, and hence θ, is bit-identical to
+        // the clean run.
+        use crate::net::{LinkModel, NetSpec};
+        let p = tiny_problem(6);
+        let base = ClusterSpec { workers: 6, ..ClusterSpec::default() };
+        let dup_net = NetSpec {
+            default_link: LinkModel { dup_prob: 0.5, dup_lag: 1e-4, ..LinkModel::ideal() },
+            ..NetSpec::ideal()
+        };
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Async { damping: 0.0 })
+            .with_iters(1200);
+        cfg.optimizer = OptimizerKind::sgd(0.3);
+
+        let mut pool1 = p.native_pool();
+        let clean = run_virtual(&mut pool1, &base, &cfg, &NoEval).unwrap();
+        let mut pool2 = p.native_pool();
+        let dup =
+            run_virtual(&mut pool2, &base.clone().with_net(dup_net), &cfg, &NoEval).unwrap();
+
+        assert!(dup.net.duplicated > 0, "{:?}", dup.net);
+        assert_eq!(dup.net.dropped, 0);
+        assert_eq!(clean.theta, dup.theta, "a duplicate leaked into an update");
+        // Every delivered duplicate that popped before the run ended was
+        // discarded (≤ one per worker may still be in flight at the end).
+        assert!(dup.total_abandoned <= dup.net.duplicated);
+        assert!(
+            dup.total_abandoned + 6 >= dup.net.duplicated,
+            "abandoned {} vs duplicated {}",
+            dup.total_abandoned,
+            dup.net.duplicated
+        );
+        assert_eq!(clean.total_abandoned, 0);
+    }
+
+    #[test]
+    fn crash_during_rebalance_replans_inside_barrier() {
+        // Regression (crash-during-rebalance): worker 0 crashes in the very
+        // iteration boundary where it would hold shards.  With rebalancing
+        // enabled the sync policy re-plans *inside* the barrier, so the
+        // orphaned shard contributes in the same iteration — before the
+        // fix it sat on the dead owner until the next boundary.
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec {
+            workers: 4,
+            failure: crate::straggler::FailureModel {
+                crash_prob: 1.0,
+                transient_prob: 0.0,
+                rejoin_after: None,
+            },
+            failure_only: vec![0],
+            rebalance_every: 1,
+            ..ClusterSpec::default()
+        };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 3 })
+            .with_iters(20);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert_eq!(rep.crashes, 1);
+        assert!(rep.rebalances >= 1);
+        for row in rep.recorder.rows() {
+            assert_eq!(
+                row.included, 4,
+                "iter {}: crashed owner's shard missing from the barrier",
+                row.iter
+            );
+        }
+    }
+
+    #[test]
+    fn smaller_gamma_gives_faster_iterations() {
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -4.0, sigma: 1.0 },
+            ..ClusterSpec::default()
+        };
+        let mut times = Vec::new();
+        for gamma in [2usize, 6, 8] {
+            let mut pool = p.native_pool();
+            let rep = run_virtual(
+                &mut pool,
+                &cluster,
+                &base_cfg(&p)
+                    .with_mode(SyncMode::Hybrid { gamma })
+                    .with_iters(120),
+                &NoEval,
+            )
+            .unwrap();
+            times.push(rep.total_time());
+        }
+        assert!(times[0] < times[1] && times[1] < times[2], "{times:?}");
+    }
+
+    #[test]
+    fn lossy_net_hybrid_converges_and_counts_drops() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(8);
+        let cluster = ClusterSpec {
+            workers: 8,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.5 },
+            ..ClusterSpec::default()
+        }
+        .with_net(NetSpec::lossy(0.15));
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 5 })
+            .with_iters(600);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert!(rep.net.dropped > 0, "no drops at 15% loss: {:?}", rep.net);
+        assert_eq!(rep.net.sent, rep.net.delivered + rep.net.dropped);
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 5e-2, "theta_err={err}");
+    }
+
+    #[test]
+    fn duplicated_replies_are_abandoned_not_double_counted() {
+        use crate::net::{LinkModel, NetSpec};
+        let p = tiny_problem(6);
+        let net = NetSpec {
+            default_link: LinkModel { dup_prob: 0.5, dup_lag: 1e-4, ..LinkModel::ideal() },
+            ..NetSpec::ideal()
+        };
+        let base = ClusterSpec {
+            workers: 6,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 0.5 },
+            ..ClusterSpec::default()
+        };
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 6 })
+            .with_iters(200);
+        // γ = M and pure duplication (no drops): the included set each
+        // iteration is identical to the clean run, so θ matches exactly —
+        // every duplicate must land in `Abandoned`, never in the sum.
+        let mut pool_clean = p.native_pool();
+        let clean = run_virtual(&mut pool_clean, &base, &cfg, &NoEval).unwrap();
+        let mut pool_dup = p.native_pool();
+        let dup = run_virtual(&mut pool_dup, &base.clone().with_net(net), &cfg, &NoEval).unwrap();
+        assert!(dup.net.duplicated > 0, "{:?}", dup.net);
+        assert_eq!(dup.net.dropped, 0);
+        assert_eq!(clean.theta, dup.theta, "a duplicate leaked into the aggregate");
+        assert!(dup.total_abandoned >= dup.net.duplicated);
+        assert_eq!(clean.total_abandoned, 0);
+    }
+
+    #[test]
+    fn partition_window_suppresses_partitioned_workers() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_net(NetSpec::ideal().with_partition(&[4, 5], 10, 30));
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 6 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        for row in rep.recorder.rows() {
+            // During the window only 4 replies can arrive, so γ=6 clamps
+            // to the deliverable 4 and the partitioned shards drop out.
+            let want = if (10..30).contains(&row.iter) { 4 } else { 6 };
+            assert_eq!(row.included, want, "iter {}", row.iter);
+            if (10..30).contains(&row.iter) {
+                assert_eq!(row.dropped, 2, "iter {}", row.iter);
+            } else {
+                assert_eq!(row.dropped, 0, "iter {}", row.iter);
+            }
+        }
+        // 2 workers × 20 iterations, one Work message each.
+        assert_eq!(rep.net.dropped, 40);
+    }
+
+    #[test]
+    fn bsp_retry_pays_for_network_loss() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(4);
+        let mk = |net: NetSpec| {
+            let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() }.with_net(net);
+            let mut cfg = base_cfg(&p).with_mode(SyncMode::Bsp).with_iters(120);
+            cfg.bsp_recovery = BspRecovery::Retry { detect_timeout: 0.05 };
+            let mut pool = p.native_pool();
+            run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+        };
+        let clean = mk(NetSpec::ideal());
+        let lossy = mk(NetSpec::lossy(0.2));
+        assert!(clean.status.is_healthy());
+        assert!(lossy.status.is_healthy());
+        // Retry keeps every shard contributing (θ identical to clean BSP)
+        // but pays detection + re-execution latency for every lost reply.
+        assert_eq!(clean.theta, lossy.theta);
+        assert!(
+            lossy.total_time() > clean.total_time() * 1.5,
+            "lossy {:.3}s vs clean {:.3}s",
+            lossy.total_time(),
+            clean.total_time()
+        );
+        assert!(lossy.net.dropped > 0);
+    }
+
+    #[test]
+    fn async_mode_survives_lossy_net() {
+        use crate::net::NetSpec;
+        let p = tiny_problem(6);
+        let cluster = ClusterSpec { workers: 6, ..ClusterSpec::default() }
+            .with_net(NetSpec::lossy(0.2));
+        let mut cfg = base_cfg(&p)
+            .with_mode(SyncMode::Async { damping: 0.0 })
+            .with_iters(1800);
+        cfg.optimizer = OptimizerKind::sgd(0.3);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        assert!(rep.net.dropped > 0, "{:?}", rep.net);
+        let err = p.theta_err(&rep.theta);
+        assert!(err < 0.1, "theta_err={err}");
+    }
+
+    #[test]
+    fn slow_uplink_replies_straggle_into_later_iterations_as_stale() {
+        // Cross-iteration reordering: worker 3's uplink is 50 ms while the
+        // barrier closes in ~5 ms, so its reply out-lives every window it
+        // was computed for and lands iterations later — the engine must
+        // classify it Stale (an old-iteration arrival), which the lockstep
+        // driver could never produce in virtual time.  The asymmetry is
+        // per-direction: the Work broadcast down is instant.
+        use crate::net::{LinkDir, LinkModel, NetSpec};
+        let p = tiny_problem(4);
+        let slow_up = LinkModel {
+            up: Some(LinkDir {
+                latency: DelayModel::Constant { secs: 0.05 },
+                drop_prob: 0.0,
+            }),
+            ..LinkModel::ideal()
+        };
+        let cluster = ClusterSpec {
+            workers: 4,
+            base_compute: 0.005,
+            ..ClusterSpec::default()
+        }
+        .with_net(NetSpec::ideal().with_override(3, slow_up));
+        let cfg = base_cfg(&p)
+            .with_mode(SyncMode::Hybrid { gamma: 3 })
+            .with_iters(50);
+        let mut pool = p.native_pool();
+        let rep = run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{:?}", rep.status);
+        let stale_total: usize = rep.recorder.rows().iter().map(|r| r.stale).sum();
+        assert!(stale_total > 0, "no stale admissions in virtual time");
+        // Worker 3's reply never lands inside its own window, so it is
+        // never merely "abandoned" — every accounted loss is a stale.
+        assert_eq!(rep.total_abandoned, stale_total as u64);
+        for row in rep.recorder.rows() {
+            assert_eq!(row.included, 3, "iter {}", row.iter);
+        }
+        assert_eq!(rep.net.dropped, 0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Run-report assembly shared by the sync and async policies.
+//!
+//! Both policies finish a run with the same ingredients — a recorder, the
+//! final θ, a status, and the engine's membership / elastic / network
+//! accounting — so the [`crate::coordinator::RunReport`] is assembled in
+//! exactly one place and the two policies cannot drift on what a report
+//! means.
+
+use crate::coordinator::convergence::RunStatus;
+use crate::coordinator::RunReport;
+use crate::metrics::Recorder;
+use crate::net::NetStats;
+
+use super::engine::EngineCore;
+
+/// Assemble the final report from a finished policy run.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble(
+    recorder: Recorder,
+    theta: Vec<f32>,
+    status: RunStatus,
+    gamma: Option<usize>,
+    mode_name: &'static str,
+    core: &EngineCore,
+    net: NetStats,
+    mean_staleness: Option<f64>,
+    driver_start: std::time::Instant,
+) -> RunReport {
+    RunReport {
+        recorder,
+        theta,
+        status,
+        gamma,
+        mode_name,
+        total_contributions: core.membership.total_contributed(),
+        total_abandoned: core.membership.total_abandoned(),
+        crashes: core.membership.crashes(),
+        rejoins: core.membership.rejoins(),
+        rebalances: core.elastic.rebalances(),
+        net,
+        mean_staleness,
+        driver_secs: driver_start.elapsed().as_secs_f64(),
+    }
+}

@@ -1,0 +1,592 @@
+//! Synchronous policies (BSP / hybrid family) over the event engine.
+//!
+//! Each iteration opens a *window*: the boundary event handler applies
+//! elastic membership changes and shard rebalances, every responder's
+//! roundtrip is dispatched through the transport onto the engine's event
+//! heap, and the [`PartialBarrier`] classifies arrivals as they pop.
+//!
+//! # Cross-iteration reordering
+//!
+//! Replies are first-class events, so a straggler can out-live its
+//! iteration window: under a non-ideal [`crate::net::NetSpec`], events
+//! still pending when the window closes (at `close + master_overhead`,
+//! the instant the next `Work` broadcast goes out) are *rebased* into the
+//! next window, where the barrier classifies them as
+//! [`Admission::Stale`] — exactly what the threaded master sees when a
+//! slow reply lands during a later collect loop.  Under an ideal spec
+//! nothing is ever rebased: every reply of iteration `t` is drained inside
+//! window `t` and the loop reproduces the pre-refactor lockstep driver
+//! **bit for bit** (timing arithmetic, admission order, f32 fold order —
+//! see `tests/parity_drivers.rs` golden tests).
+//!
+//! # Crash-during-rebalance
+//!
+//! The failure sweep runs *before* dispatch, so a crash observed this
+//! iteration (including an adopter crashing in the same boundary it
+//! adopted orphaned shards) triggers an immediate re-plan inside the
+//! barrier ([`crate::cluster::ElasticRuntime::replan_orphans`]) — the
+//! orphaned shards contribute this very iteration instead of a boundary
+//! later.
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::aggregator::{aggregate_iter, Contribution};
+use crate::coordinator::barrier::{Admission, PartialBarrier};
+use crate::coordinator::convergence::{ConvergenceTracker, RunStatus};
+use crate::coordinator::estimator::{AdaptiveEstimator, EstimatorParams};
+use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
+use crate::data::ComputePool;
+use crate::math::vec_ops;
+use crate::metrics::{IterRow, Recorder};
+use crate::net::{Transport, VirtualTransport};
+use crate::straggler::FailureEvent;
+use crate::{Error, Result};
+
+use super::engine::{EngineCore, Event};
+use super::{report, EvalHooks};
+
+/// Slab of reusable [`crate::data::GradResult`] slots: `clear()` resets the
+/// cursor without dropping the gradient buffers, `next()` hands out the
+/// next slot (the slab grows only until its high-water mark is reached, so
+/// steady-state iterations recycle the same allocations).
+struct GradArena {
+    slots: Vec<crate::data::GradResult>,
+    len: usize,
+}
+
+impl GradArena {
+    fn new() -> GradArena {
+        GradArena { slots: Vec::new(), len: 0 }
+    }
+
+    fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    fn next(&mut self) -> &mut crate::data::GradResult {
+        if self.len == self.slots.len() {
+            self.slots.push(crate::data::GradResult::empty());
+        }
+        self.len += 1;
+        &mut self.slots[self.len - 1]
+    }
+
+    fn results(&self) -> &[crate::data::GradResult] {
+        &self.slots[..self.len]
+    }
+}
+
+/// Per-iteration scratch the sync policy reuses across iterations.  Every
+/// buffer the loop needs lives here and is cleared (capacity kept) rather
+/// than reallocated, so a steady-state virtual iteration performs **zero**
+/// heap allocations after warmup — asserted by `tests/alloc_regression.rs`.
+/// Pure buffer reuse: the computed values are bit-identical to the
+/// allocate-per-iteration seed driver (see `tests/parity_drivers.rs`).
+struct IterScratch {
+    /// Per-worker failure events this iteration.
+    events: Vec<FailureEvent>,
+    /// Per-worker response latency (∞ = no response).
+    latency: Vec<f64>,
+    /// Workers that respond this iteration.
+    responders: Vec<usize>,
+    /// Per-worker owned-shard lists (ownership snapshot).
+    assignment: Vec<Vec<usize>>,
+    /// Shards admitted by the barrier, ascending.
+    included_shards: Vec<usize>,
+    /// Workers admitted by the barrier.
+    included_workers: Vec<usize>,
+    /// Workers whose primary reply was delivered this window.
+    arrived_workers: Vec<usize>,
+    /// BSP: per-worker delivery mask.
+    delivered: Vec<bool>,
+    /// BSP: shards with no delivered owner.
+    missing: Vec<usize>,
+    /// Reuse ablation: arrived-but-abandoned workers, ascending.
+    late: Vec<usize>,
+    /// The partial barrier, `reset()` per iteration.
+    barrier: PartialBarrier,
+    /// This iteration's included gradients.
+    grads: GradArena,
+    /// Staleness-1 gradients carried into the next iteration.
+    carryover: GradArena,
+}
+
+impl IterScratch {
+    fn new(m: usize) -> IterScratch {
+        IterScratch {
+            events: vec![FailureEvent::Healthy; m],
+            latency: vec![f64::INFINITY; m],
+            responders: Vec::with_capacity(m),
+            assignment: Vec::new(),
+            included_shards: Vec::with_capacity(m),
+            included_workers: Vec::with_capacity(m),
+            arrived_workers: Vec::with_capacity(m),
+            delivered: vec![false; m],
+            missing: Vec::with_capacity(m),
+            late: Vec::with_capacity(m),
+            barrier: PartialBarrier::new(0, m, 1),
+            grads: GradArena::new(),
+            carryover: GradArena::new(),
+        }
+    }
+}
+
+/// Burn a responder-less (or deliverable-less) detection window of `len`
+/// virtual seconds: in-flight stragglers landing inside it are stale
+/// arrivals with no barrier to offer them to — account and discard — and
+/// everything later is rebased into the next window.
+fn burn_window(core: &mut EngineCore, len: f64) {
+    while let Some(ev) = core.heap.pop_before(len) {
+        core.membership.record_abandoned(ev.worker);
+    }
+    core.heap.rebase(len);
+}
+
+pub(super) fn run_sync(
+    pool: &mut dyn ComputePool,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    hooks: &dyn EvalHooks,
+    driver_start: std::time::Instant,
+) -> Result<RunReport> {
+    let m = pool.n_workers();
+    let dim = pool.dim();
+    let profiles = cluster.profiles();
+    let n_total: usize = (0..m).map(|w| pool.shard_examples(w)).sum();
+    let zeta = pool.shard_examples(0);
+
+    let mut theta = cfg
+        .init_theta
+        .clone()
+        .unwrap_or_else(|| vec![0.0f32; dim]);
+    if theta.len() != dim {
+        return Err(Error::Shape(format!(
+            "init_theta has {} elements, problem dim is {dim}",
+            theta.len()
+        )));
+    }
+
+    let mut gamma = cfg.mode.initial_gamma(n_total, zeta, m)?;
+    let mut adaptive = match cfg.mode {
+        SyncMode::HybridAdaptive { alpha, xi, window } => Some((
+            AdaptiveEstimator::new(n_total, zeta, m, EstimatorParams { alpha, xi }),
+            window,
+        )),
+        _ => None,
+    };
+
+    // Engine state: heap, membership, elastic runtime, failure states, and
+    // the historical sync RNG stream family (bit-compatible with the
+    // pre-refactor driver).
+    let mut core = EngineCore::new(&profiles, cluster.seed, 0x51D, 1000);
+
+    let mut opt = cfg.optimizer.build();
+    let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
+    let mut rec = Recorder::new();
+    let mut agg = vec![0.0f32; dim];
+    let mut now = 0.0f64;
+    let mut status = RunStatus::Completed;
+    // All coordinator↔worker traffic goes through the transport; with an
+    // ideal NetSpec it is a zero-perturbation passthrough.
+    let mut net = VirtualTransport::new(cluster.net.clone(), cluster.seed);
+    // Cross-iteration reordering is a non-ideal-net phenomenon: with an
+    // ideal spec every reply of iteration t pops inside window t and the
+    // loop is the lockstep driver, arithmetic untouched.
+    let carry = !net.is_ideal();
+    // Hybrid-reuse ablation: abandoned results computed at θ_t arrive during
+    // iteration t+1 and are folded in with staleness 1 (aggregator-weighted).
+    let reuse_late = matches!(
+        cfg.aggregator,
+        crate::coordinator::AggregatorKind::StalenessDamped { .. }
+    );
+    // Every per-iteration buffer lives in this arena and is reused across
+    // iterations: zero steady-state allocations (tests/alloc_regression.rs).
+    let mut scratch = IterScratch::new(m);
+
+    'iters: for iter in 0..cfg.stop.max_iters {
+        // Split the scratch into disjoint &mut locals so the loop body
+        // reads like the original allocate-per-iteration code.
+        let IterScratch {
+            events,
+            latency,
+            responders,
+            assignment,
+            included_shards,
+            included_workers,
+            arrived_workers,
+            delivered,
+            missing,
+            late,
+            barrier,
+            grads,
+            carryover,
+        } = &mut scratch;
+        // --- 0. boundary events: elastic membership & shard rebalancing --
+        // Scheduled leave/join events land exactly at this boundary, in
+        // schedule order (a leave@k followed by join@k nets out alive).
+        let rebalanced = core.boundary(iter, &cluster.elastic, cluster.rebalance_every)?;
+        if rebalanced {
+            log::debug!("iter {iter}: shard ownership rebalanced");
+        }
+
+        // --- 1. failure events & responder latencies -------------------
+        for w in 0..m {
+            latency[w] = f64::INFINITY;
+            if core.evicted[w] {
+                // Scheduled eviction: no failure-state step (so
+                // `rejoin_after` cannot revive it early), no response.
+                events[w] = FailureEvent::Down;
+                continue;
+            }
+            let ev = core.fstates[w].step(iter, &mut core.fail_rngs[w]);
+            core.membership.observe(w, ev);
+            events[w] = ev;
+        }
+        // Crash-during-rebalance repair: a crash observed this sweep (e.g.
+        // an adopter dying in the same boundary it adopted shards) re-plans
+        // ownership immediately inside the barrier, so the orphaned shards
+        // contribute this very iteration.  No-op when rebalancing is off
+        // or every owner is alive — and in particular on every ideal-net
+        // trajectory the pre-refactor golden tests pin down.
+        if core
+            .elastic
+            .replan_orphans(cluster.rebalance_every, &core.membership)?
+        {
+            log::debug!("iter {iter}: mid-barrier re-plan after owner crash");
+        }
+
+        // Snapshot the assignment once per iteration (O(shards)); it only
+        // changes at boundaries, except for BSP-retry's mid-iteration
+        // reassignment, which reads the live map directly below.
+        core.elastic.ownership.grouped_into(assignment);
+
+        for w in 0..m {
+            if matches!(events[w], FailureEvent::Healthy | FailureEvent::Rejoined) {
+                // Serial execution of owned shards; a worker that briefly
+                // owns no shards still reports (one base heartbeat),
+                // matching the threaded slave's `shards.len().max(1)`.
+                latency[w] = profiles[w].sample_latency(&mut core.delay_rngs[w])
+                    * assignment[w].len().max(1) as f64;
+            }
+        }
+        responders.clear();
+        responders.extend((0..m).filter(|&w| latency[w].is_finite()));
+        if core.membership.alive() == 0 {
+            status = RunStatus::ClusterDead { iter };
+            break;
+        }
+        if responders.is_empty() {
+            // Everyone transiently dropped: burn a detection window.
+            let len = cluster.base_compute.max(1e-6);
+            burn_window(&mut core, len);
+            now += len;
+            continue;
+        }
+
+        // --- 2. transport + engine + barrier ---------------------------
+        // Every responder's roundtrip goes through the transport: the Work
+        // broadcast down, `latency[w]` of compute, the Grad reply up.  The
+        // NetSpec realizes drops / delays / duplicates per message; the
+        // surviving deliveries become events on the engine heap, where
+        // they merge (in time order) with stragglers carried over from
+        // earlier windows.
+        let stats_iter_start = net.stats();
+        for &w in responders.iter() {
+            net.send_roundtrip(w, iter, latency[w]);
+        }
+        // Fresh primaries this window — captured before the drain (the
+        // barrier can only close on this iteration's deliveries).
+        let fresh = net.deliverable();
+        while let Some(d) = net.poll() {
+            core.heap.push(Event {
+                at: d.at,
+                worker: d.worker,
+                iter: d.iter,
+                duplicate: d.duplicate,
+                delivers: true,
+            });
+        }
+        included_shards.clear();
+        included_workers.clear();
+        // Workers whose primary reply reached the coordinator this window
+        // (delivered, whether or not the barrier admitted it).
+        arrived_workers.clear();
+        let mut iter_abandoned = 0usize;
+        let mut iter_stale = 0usize;
+        let iter_latency: f64;
+        match (&cfg.mode, gamma) {
+            (SyncMode::Bsp, _) => {
+                delivered.fill(false);
+                let mut last_arrival = 0.0f64;
+                while let Some(d) = core.heap.pop() {
+                    if !d.duplicate {
+                        delivered[d.worker] = true;
+                        arrived_workers.push(d.worker);
+                    }
+                    last_arrival = last_arrival.max(d.at);
+                }
+                // A shard is missing if its owner is down *or* its reply
+                // was lost in the network — BSP cannot tell the two apart.
+                missing.clear();
+                for s in 0..m {
+                    let o = core.elastic.ownership.owner(s);
+                    if !(matches!(events[o], FailureEvent::Healthy | FailureEvent::Rejoined)
+                        && delivered[o])
+                    {
+                        missing.push(s);
+                    }
+                }
+                if !missing.is_empty() {
+                    match cfg.bsp_recovery {
+                        BspRecovery::Stall => {
+                            status = RunStatus::Stalled { iter };
+                            break 'iters;
+                        }
+                        BspRecovery::Retry { detect_timeout } => {
+                            // Reassign permanently-dead owners' shards.
+                            for &s in missing.iter() {
+                                let o = core.elastic.ownership.owner(s);
+                                if core.fstates[o].is_down() {
+                                    // least-loaded alive worker takes over
+                                    let new_o = (0..m)
+                                        .filter(|&w| !core.fstates[w].is_down())
+                                        .min_by_key(|&w| core.elastic.ownership.load(w))
+                                        .ok_or_else(|| {
+                                            Error::Cluster(
+                                                "no alive worker for reassignment".into(),
+                                            )
+                                        })?;
+                                    core.elastic.ownership.reassign(s, new_o);
+                                }
+                            }
+                            // Every shard contributes; stragglers pay
+                            // detect+retry (the retry itself is assumed to
+                            // traverse a clean path — one retransmission
+                            // suffices in this model).
+                            let mut retry_max = 0.0f64;
+                            for &s in missing.iter() {
+                                let o = core.elastic.ownership.owner(s);
+                                let retry_lat = if latency[o].is_finite() {
+                                    latency[o]
+                                } else {
+                                    profiles[o].base_compute
+                                        * core.elastic.ownership.load(o) as f64
+                                };
+                                retry_max = retry_max.max(detect_timeout + retry_lat);
+                            }
+                            included_shards.extend(0..m);
+                            iter_latency = last_arrival.max(retry_max);
+                        }
+                    }
+                } else {
+                    included_shards.extend(0..m);
+                    iter_latency = last_arrival;
+                }
+            }
+            (_, Some(g)) => {
+                // Hybrid family: the first γ_eff *delivered* replies close
+                // the barrier; everything later — and every duplicate — is
+                // abandoned, exactly what a physical barrier would see.
+                if fresh == 0 {
+                    // Every reply dropped or partitioned away: burn a
+                    // detection window, like the all-transient-drop case.
+                    let len = cluster.base_compute.max(1e-6);
+                    burn_window(&mut core, len);
+                    now += len;
+                    continue;
+                }
+                let g_eff = g.min(fresh);
+                barrier.reset(iter, g_eff);
+                let mut close_time = 0.0f64;
+                loop {
+                    // Before the barrier closes, every pending event pops
+                    // (time order guarantees it lands inside this window);
+                    // after it closes, only events before the window's end
+                    // — the next broadcast at close + master_overhead —
+                    // still belong to it.  Later stragglers stay on the
+                    // heap and go stale in a subsequent window.  Under an
+                    // ideal spec everything drains, lockstep-style.
+                    let ev = if carry && barrier.is_closed() {
+                        core.heap
+                            .pop_before(close_time + cluster.master_overhead)
+                    } else {
+                        core.heap.pop()
+                    };
+                    let Some(ev) = ev else { break };
+                    if !ev.duplicate && ev.iter == iter {
+                        arrived_workers.push(ev.worker);
+                    }
+                    match barrier.offer(ev.worker, ev.iter) {
+                        Admission::Included | Admission::IncludedAndClosed => {
+                            close_time = ev.at;
+                            included_workers.push(ev.worker);
+                            included_shards.extend(assignment[ev.worker].iter().copied());
+                            core.membership.record_contribution(ev.worker);
+                        }
+                        Admission::Abandoned => {
+                            core.membership.record_abandoned(ev.worker);
+                            iter_abandoned += 1;
+                        }
+                        Admission::Stale => {
+                            core.membership.record_abandoned(ev.worker);
+                            iter_stale += 1;
+                        }
+                    }
+                }
+                iter_latency = close_time;
+                // Aggregate in shard-index order: f32 summation order is
+                // then independent of arrival order (γ=M reproduces BSP
+                // bit-for-bit; see prop_gamma_m_equals_bsp) and matches
+                // the threaded runtime's order.
+                included_shards.sort_unstable();
+            }
+            (mode, None) => {
+                return Err(Error::Config(format!(
+                    "mode {} has no gamma in sync driver",
+                    mode.name()
+                )))
+            }
+        }
+        if matches!(cfg.mode, SyncMode::Bsp) {
+            included_workers.clear();
+            included_workers.extend_from_slice(responders);
+            for &w in responders.iter() {
+                core.membership.record_contribution(w);
+            }
+        }
+        // Close the window: whatever is still in flight re-enters the next
+        // window's time frame (no-op under an ideal spec — the heap is
+        // empty — so the lockstep arithmetic stays untouched).
+        core.heap.rebase(iter_latency + cluster.master_overhead);
+
+        if included_shards.is_empty() {
+            // Only possible transiently under elastic churn: the γ slots
+            // were all taken by zero-shard workers.  Mirror the threaded
+            // driver (worker/mod.rs): no update, no convergence
+            // observation — just advance the clock.
+            carryover.clear();
+            now += iter_latency + cluster.master_overhead;
+            continue;
+        }
+
+        // --- 3. compute included gradients ------------------------------
+        // Gradients land in reusable arena slots (`grad_into`): the fused
+        // kernel writes into last iteration's buffers, so the steady state
+        // allocates nothing.
+        grads.clear();
+        for &s in included_shards.iter() {
+            pool.grad_into(s, &theta, iter, grads.next())?;
+        }
+        aggregate_iter(
+            cfg.aggregator,
+            grads
+                .results()
+                .iter()
+                .map(|g| Contribution { grad: &g.grad, examples: g.examples, staleness: 0 })
+                .chain(carryover.results().iter().map(|g| Contribution {
+                    grad: &g.grad,
+                    examples: g.examples,
+                    staleness: 1,
+                })),
+            &mut agg,
+        );
+        let grad_norm = vec_ops::norm2(&agg);
+
+        // Adaptive γ: observe scatter, re-estimate per window.
+        if let Some((est, window)) = adaptive.as_mut() {
+            est.observe_results(grads.results());
+            if *window > 0 && (iter + 1) % *window == 0 {
+                let g_new = est.gamma()?;
+                if Some(g_new) != gamma {
+                    log::debug!("adaptive gamma: {:?} -> {}", gamma, g_new);
+                    gamma = Some(g_new);
+                }
+                est.reset_window();
+            }
+        }
+
+        // Training-loss estimate at θ_t from the included shards.
+        let loss_sum: f64 = grads.results().iter().filter_map(|g| g.loss_sum).sum();
+        let loss_examples: usize = grads
+            .results()
+            .iter()
+            .filter(|g| g.loss_sum.is_some())
+            .map(|g| g.examples)
+            .sum();
+        let loss = cfg.loss_form.assemble(loss_sum, loss_examples, &theta);
+
+        // --- 4. update & clock -----------------------------------------
+        // Reuse ablation: abandoned responders' θ_t gradients become next
+        // iteration's staleness-1 carryover.  Only replies that actually
+        // *arrived* within this window qualify — a network-dropped result
+        // never reached the coordinator, and a straggler still in flight
+        // will be classified stale when it lands.
+        carryover.clear();
+        if reuse_late {
+            // Ascending worker order (not arrival order) keeps the f32
+            // fold order identical to the pre-transport driver.
+            late.clear();
+            late.extend(
+                arrived_workers
+                    .iter()
+                    .copied()
+                    .filter(|w| !included_workers.contains(w)),
+            );
+            late.sort_unstable();
+            for &w in late.iter() {
+                for &s in &assignment[w] {
+                    pool.grad_into(s, &theta, iter, carryover.next())?;
+                }
+            }
+        }
+        opt.step(&mut theta, &agg, iter);
+        now += iter_latency + cluster.master_overhead;
+
+        // --- 5. record / evaluate / stop --------------------------------
+        let do_eval = cfg.eval_every > 0 && iter % cfg.eval_every == 0;
+        let stop = tracker.observe(iter, loss, grad_norm);
+        let record = cfg.record_every > 0 && iter % cfg.record_every == 0;
+        if record || do_eval || stop.is_some() {
+            let (eval_loss, theta_err) = if do_eval || stop.is_some() {
+                (hooks.hook_eval_loss(&theta), hooks.hook_theta_err(&theta))
+            } else {
+                (None, None)
+            };
+            let dnet = net.stats().since(&stats_iter_start);
+            rec.push(IterRow {
+                iter,
+                time: now,
+                loss,
+                eval_loss,
+                theta_err,
+                included: included_shards.len(),
+                abandoned: iter_abandoned,
+                stale: iter_stale,
+                dropped: dnet.dropped as usize,
+                duplicated: dnet.duplicated as usize,
+                alive: core.membership.alive(),
+                gamma,
+                grad_norm,
+            });
+        }
+        if let Some(s) = stop {
+            status = s;
+            break;
+        }
+    }
+
+    // Replies still in flight when the run ends are discarded uncounted —
+    // the threaded master likewise drops queued replies at shutdown.
+    core.heap.clear();
+
+    Ok(report::assemble(
+        rec,
+        theta,
+        status,
+        gamma,
+        cfg.mode.name(),
+        &core,
+        net.stats(),
+        None,
+        driver_start,
+    ))
+}

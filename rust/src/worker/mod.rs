@@ -20,7 +20,12 @@
 //! crashed is not supported — its thread has stopped serving — so the
 //! master tracks crashed threads and vetoes their scheduled joins instead
 //! of silently assigning shards to a ghost (supervisor-style respawn is a
-//! ROADMAP item).
+//! ROADMAP item).  The **async** master accepts elastic schedules too: a
+//! scheduled event at iteration `k` lands at the update-count boundary
+//! `k·M` (the sync-iteration equivalent the virtual engine uses), leaves
+//! evict master-side, joins hand the worker a fresh θ snapshot, and with
+//! `rebalance_every > 0` each `Work` carries the worker's current shard
+//! list whose replies fold as a plain mean.
 //!
 //! **Unreliable network**: the master wraps its channels in a
 //! [`crate::net::NetShim`].  Before each `Work` broadcast it plans the
@@ -102,6 +107,38 @@ pub trait ComputeFactory: Sync {
 /// Master receive timeout before declaring a stall (real mode only).
 const STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 
+/// Apply one scheduled membership event master-side — the threaded
+/// counterpart of the virtual engine's boundary handler.  A join of a
+/// worker whose thread simulated a stochastic crash is vetoed (its thread
+/// stopped serving; re-admitting it would assign shards to a ghost).
+/// Returns whether the event was applied, so callers can keep their own
+/// per-event state (the async master's eviction mask) in step.
+fn apply_master_event(
+    ev: &crate::cluster::ElasticEvent,
+    membership: &mut Membership,
+    thread_crashed: &[bool],
+    boundary: u64,
+) -> bool {
+    match ev.kind {
+        ElasticKind::Join if thread_crashed[ev.worker] => {
+            log::warn!(
+                "boundary {boundary}: scheduled join of worker {} skipped — \
+                 its thread crashed and no supervisor respawn exists",
+                ev.worker
+            );
+            false
+        }
+        ElasticKind::Join => {
+            membership.mark_alive(ev.worker);
+            true
+        }
+        ElasticKind::Leave => {
+            membership.mark_down(ev.worker);
+            true
+        }
+    }
+}
+
 /// Run an experiment on real threads, measuring wall-clock.
 pub fn run_real(
     cluster: &ClusterSpec,
@@ -182,26 +219,14 @@ fn run_real_sync(
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
             // Elastic membership events land at this boundary, in schedule
-            // order — identical semantics to the virtual driver.
-            let rebalanced = elastic.at_boundary(
-                iter,
-                &cluster.elastic,
-                cluster.rebalance_every,
-                &mut membership,
-                |ev| {
-                    if ev.kind == ElasticKind::Join && thread_crashed[ev.worker] {
-                        // Its thread simulated a crash and stopped serving:
-                        // re-admitting it would assign shards to a ghost.
-                        log::warn!(
-                            "iter {iter}: scheduled join of worker {} skipped — \
-                             its thread crashed and no supervisor respawn exists",
-                            ev.worker
-                        );
-                        return false;
-                    }
-                    true
-                },
-            )?;
+            // order, followed by any due rebalance plan — the same
+            // primitives the virtual engine's boundary handler uses, so
+            // the drivers cannot drift on when a plan is applied.
+            for ev in cluster.elastic.at(iter) {
+                apply_master_event(ev, &mut membership, &thread_crashed, iter);
+            }
+            let rebalanced =
+                elastic.maybe_rebalance(iter, cluster.rebalance_every, &membership)?;
             if rebalanced {
                 log::debug!("iter {iter}: shard ownership rebalanced");
             }
@@ -483,10 +508,14 @@ fn run_real_sync(
 }
 
 /// Plan one real-async roundtrip: realize worker `w`'s next message fate
-/// (keyed by its per-worker attempt counter, the async analogue of the
-/// sync drivers' iteration key), account it, and return the injected
-/// network latency the slave should sleep.  `reply_ok[w]` records whether
-/// the master will honor the reply or discard it and retransmit.
+/// (keyed by its per-worker attempt counter — the dispatch's *version
+/// tag*, the async analogue of the sync drivers' iteration key), account
+/// it, and return the injected network latency the slave should sleep.
+/// `reply_ok[w]` records whether the master will honor the reply or
+/// discard it and retransmit.  Duplicates are counted (`count_dup =
+/// true`), matching the virtual async policy's accounting; only the
+/// virtual heap materializes the second copy, so no detection path is
+/// needed here — one physical reply exists per roundtrip.
 fn plan_async_roundtrip(
     net: &crate::net::NetSpec,
     net_ideal: bool,
@@ -502,7 +531,7 @@ fn plan_async_roundtrip(
         net.realize(seed, w, attempts[w])
     };
     attempts[w] += 1;
-    reply_ok[w] = stats.count_roundtrip(&r, false);
+    reply_ok[w] = stats.count_roundtrip(&r, true);
     r.roundtrip_delay()
 }
 
@@ -539,29 +568,51 @@ fn run_real_async(
     let mut stats_at_row = NetStats::default();
     let mut attempts = vec![0u64; m];
     let mut reply_ok = vec![true; m];
+    // Elastic membership: ownership + rebalance state shared with the
+    // virtual engine; scheduled events land at update-count boundaries
+    // (iteration k ≈ update k·M, the sync-iteration equivalent).
+    let mut elastic = ElasticRuntime::new(&membership);
+    let mut evicted = vec![false; m];
+    let mut thread_crashed = vec![false; m];
+    // One Work in flight per alive worker; a Join while the pre-leave
+    // reply is still in flight marks it for discard-and-redispatch.
+    let mut in_flight = vec![false; m];
+    let mut stale_pending = vec![false; m];
+    let mut next_boundary = 1u64;
 
     std::thread::scope(|scope| -> Result<()> {
         let profiles = cluster.profiles();
+        // Iteration-0 boundary precedes the opening dispatches.
+        for ev in cluster.elastic.at(0) {
+            if apply_master_event(ev, &mut membership, &thread_crashed, 0) {
+                evicted[ev.worker] = ev.kind == ElasticKind::Leave;
+            }
+        }
+        elastic.maybe_rebalance(0, cluster.rebalance_every, &membership)?;
+        let mut assignment = elastic.ownership.grouped();
         for w in 0..m {
             let (tx, rx) = mpsc::channel::<MasterMsg>();
-            // Kick off the first round immediately.
-            let net_delay = plan_async_roundtrip(
-                &cluster.net,
-                net_ideal,
-                cluster.seed,
-                w,
-                &mut attempts,
-                &mut reply_ok,
-                &mut net_stats,
-            );
-            tx.send(MasterMsg::Work {
-                iter: 0,
-                theta: Arc::new(theta.clone()),
-                shards: Arc::new(vec![w]),
-                net_delay,
-                recycle: Vec::new(),
-            })
-            .expect("fresh channel");
+            if !evicted[w] {
+                // Kick off the first round immediately.
+                let net_delay = plan_async_roundtrip(
+                    &cluster.net,
+                    net_ideal,
+                    cluster.seed,
+                    w,
+                    &mut attempts,
+                    &mut reply_ok,
+                    &mut net_stats,
+                );
+                tx.send(MasterMsg::Work {
+                    iter: 0,
+                    theta: Arc::new(theta.clone()),
+                    shards: Arc::new(assignment[w].clone()),
+                    net_delay,
+                    recycle: Vec::new(),
+                })
+                .expect("fresh channel");
+                in_flight[w] = true;
+            }
             work_txs.push(tx);
             let res_tx = res_tx.clone();
             let profile = profiles[w].clone();
@@ -573,6 +624,57 @@ fn run_real_async(
         drop(res_tx);
 
         while updates < cfg.stop.max_iters {
+            // Boundaries due at this update count: scheduled leave/join
+            // events and the rebalance cadence, mirroring the virtual
+            // engine's boundary handler.
+            while next_boundary <= updates / m as u64 {
+                let b = next_boundary;
+                next_boundary += 1;
+                if cluster.elastic.at(b).next().is_none() && cluster.rebalance_every == 0 {
+                    continue;
+                }
+                for ev in cluster.elastic.at(b) {
+                    if apply_master_event(ev, &mut membership, &thread_crashed, b) {
+                        evicted[ev.worker] = ev.kind == ElasticKind::Leave;
+                    }
+                }
+                if elastic.maybe_rebalance(b, cluster.rebalance_every, &membership)? {
+                    elastic.ownership.grouped_into(&mut assignment);
+                    log::debug!("async boundary {b}: shard ownership rebalanced");
+                }
+                // Re-admitted workers get a fresh θ snapshot (staleness 0)
+                // and a new dispatch; a pre-leave reply still in flight is
+                // marked for discard so it cannot double-apply.
+                for ev in cluster.elastic.at(b) {
+                    let w = ev.worker;
+                    if ev.kind != ElasticKind::Join || evicted[w] || thread_crashed[w] {
+                        continue;
+                    }
+                    version_given[w] = version;
+                    if in_flight[w] {
+                        stale_pending[w] = true;
+                        continue;
+                    }
+                    let net_delay = plan_async_roundtrip(
+                        &cluster.net,
+                        net_ideal,
+                        cluster.seed,
+                        w,
+                        &mut attempts,
+                        &mut reply_ok,
+                        &mut net_stats,
+                    );
+                    let _ = work_txs[w].send(MasterMsg::Work {
+                        iter: updates,
+                        theta: Arc::new(theta.clone()),
+                        shards: Arc::new(assignment[w].clone()),
+                        net_delay,
+                        recycle: Vec::new(),
+                    });
+                    in_flight[w] = true;
+                }
+            }
+
             let msg = match res_rx.recv_timeout(STALL_TIMEOUT) {
                 Ok(msg) => msg,
                 Err(_) => {
@@ -582,6 +684,41 @@ fn run_real_async(
             };
             match msg {
                 WorkerMsg::Grad { worker, shards, .. } => {
+                    in_flight[worker] = false;
+                    if evicted[worker] {
+                        // Reply from before a scheduled leave: discard, do
+                        // not reschedule (the worker idles until its join).
+                        // The straggler this flag marked has now landed, so
+                        // a later rejoin starts clean.
+                        stale_pending[worker] = false;
+                        membership.record_abandoned(worker);
+                        continue;
+                    }
+                    if stale_pending[worker] {
+                        // Pre-leave straggler arriving after the rejoin:
+                        // discard and hand the worker fresh parameters.
+                        stale_pending[worker] = false;
+                        membership.record_abandoned(worker);
+                        let net_delay = plan_async_roundtrip(
+                            &cluster.net,
+                            net_ideal,
+                            cluster.seed,
+                            worker,
+                            &mut attempts,
+                            &mut reply_ok,
+                            &mut net_stats,
+                        );
+                        version_given[worker] = version;
+                        let _ = work_txs[worker].send(MasterMsg::Work {
+                            iter: updates,
+                            theta: Arc::new(theta.clone()),
+                            shards: Arc::new(assignment[worker].clone()),
+                            net_delay,
+                            recycle: shards.into_iter().map(|sg| sg.grad).collect(),
+                        });
+                        in_flight[worker] = true;
+                        continue;
+                    }
                     if !reply_ok[worker] {
                         // The network lost this roundtrip (Work down or
                         // reply up): discard and retransmit.  The virtual
@@ -601,16 +738,43 @@ fn run_real_async(
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
                             theta: Arc::new(theta.clone()),
-                            shards: Arc::new(vec![worker]),
+                            shards: Arc::new(assignment[worker].clone()),
+                            net_delay,
+                            recycle: shards.into_iter().map(|sg| sg.grad).collect(),
+                        });
+                        in_flight[worker] = true;
+                        continue;
+                    }
+                    // Fold the worker's owned shards: the static layout is
+                    // a single shard (bit-identical to the historical
+                    // copy-through); an elastic multi-shard owner folds a
+                    // plain mean in the canonical aggregator order —
+                    // unit-weight folds, then one 1/k scale, then the
+                    // damping weight — the same f32 op sequence the virtual
+                    // async policy uses, so the drivers cannot drift on the
+                    // fold arithmetic.
+                    let k = shards.len();
+                    if k == 0 {
+                        // Zero-shard heartbeat under churn: redispatch.
+                        let net_delay = plan_async_roundtrip(
+                            &cluster.net,
+                            net_ideal,
+                            cluster.seed,
+                            worker,
+                            &mut attempts,
+                            &mut reply_ok,
+                            &mut net_stats,
+                        );
+                        let _ = work_txs[worker].send(MasterMsg::Work {
+                            iter: updates,
+                            theta: Arc::new(theta.clone()),
+                            shards: Arc::new(assignment[worker].clone()),
                             net_delay,
                             recycle: Vec::new(),
                         });
+                        in_flight[worker] = true;
                         continue;
                     }
-                    // Async workers always compute exactly their own shard.
-                    let Some(sg) = shards.into_iter().next() else {
-                        continue;
-                    };
                     let staleness = version - version_given[worker];
                     staleness_sum += staleness as f64;
                     membership.record_contribution(worker);
@@ -619,18 +783,35 @@ fn run_real_async(
                     } else {
                         1.0
                     };
-                    scaled.copy_from_slice(&sg.grad);
+                    let mut loss_sum = 0.0f64;
+                    let mut any_loss = false;
+                    let mut loss_examples = 0usize;
+                    if k == 1 {
+                        scaled.copy_from_slice(&shards[0].grad);
+                    } else {
+                        scaled.fill(0.0);
+                        for sg in shards.iter() {
+                            vec_ops::axpy(1.0, &sg.grad, &mut scaled);
+                        }
+                        vec_ops::scale(&mut scaled, (1.0 / k as f64) as f32);
+                    }
                     if weight != 1.0 {
                         vec_ops::scale(&mut scaled, weight);
+                    }
+                    for sg in shards.iter() {
+                        if let Some(ls) = sg.loss_sum {
+                            loss_sum += ls;
+                            any_loss = true;
+                        }
+                        loss_examples += sg.examples;
                     }
                     opt.step(&mut theta, &scaled, updates);
                     version += 1;
                     updates += 1;
                     version_given[worker] = version;
-                    // Recycle the reply's payload buffer with the next Work.
-                    let sg_loss = sg.loss_sum;
-                    let sg_examples = sg.examples;
-                    let sg_buf = sg.grad;
+                    // Recycle the reply's payload buffers with the next Work.
+                    let recycle: Vec<Vec<f32>> =
+                        shards.into_iter().map(|sg| sg.grad).collect();
                     let net_delay = plan_async_roundtrip(
                         &cluster.net,
                         net_ideal,
@@ -643,13 +824,14 @@ fn run_real_async(
                     let _ = work_txs[worker].send(MasterMsg::Work {
                         iter: updates,
                         theta: Arc::new(theta.clone()),
-                        shards: Arc::new(vec![worker]),
+                        shards: Arc::new(assignment[worker].clone()),
                         net_delay,
-                        recycle: vec![sg_buf],
+                        recycle,
                     });
+                    in_flight[worker] = true;
 
-                    if let Some(ls) = sg_loss {
-                        let shard_loss = cfg.loss_form.assemble(ls, sg_examples, &theta);
+                    if any_loss {
+                        let shard_loss = cfg.loss_form.assemble(loss_sum, loss_examples, &theta);
                         loss_ema = Some(match loss_ema {
                             None => shard_loss,
                             Some(p) => 0.9 * p + 0.1 * shard_loss,
@@ -667,7 +849,7 @@ fn run_real_async(
                             loss,
                             eval_loss: hooks.hook_eval_loss(&theta),
                             theta_err: hooks.hook_theta_err(&theta),
-                            included: 1,
+                            included: k,
                             abandoned: 0,
                             stale: 0,
                             dropped: dnet.dropped as usize,
@@ -683,6 +865,8 @@ fn run_real_async(
                     }
                 }
                 WorkerMsg::SimulatedCrash { worker, .. } => {
+                    thread_crashed[worker] = true;
+                    in_flight[worker] = false;
                     membership.mark_down(worker);
                     if membership.alive() == 0 {
                         status = RunStatus::ClusterDead { iter: updates };
@@ -710,7 +894,7 @@ fn run_real_async(
         total_abandoned: membership.total_abandoned(),
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
-        rebalances: 0,
+        rebalances: elastic.rebalances(),
         net: net_stats,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)

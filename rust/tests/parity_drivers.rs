@@ -264,6 +264,112 @@ fn parity_lossy_net_same_counts_decisions_and_theta() {
     assert!(diff < 1e-5, "theta diverged: max diff {diff}");
 }
 
+#[test]
+fn parity_stale_admissions_virtual_matches_threaded() {
+    // Acceptance (event-engine refactor): the virtual driver now produces
+    // nonzero `Admission::Stale` counts — a reply out-living its iteration
+    // window — and they must equal the threaded driver's under the same
+    // lossy spec.
+    //
+    // Trace design: workers 2 and 3 sit behind chronically slow, lossy
+    // *uplinks* (40/60 ms on a ~5–10 ms barrier — per-direction asymmetry,
+    // the Work broadcast down is instant), so each reply they send lands
+    // several iterations late.  They participate only in one-iteration
+    // bursts (join@k, leave@k+1) with idle gaps long enough that each
+    // burst puts exactly one reply per slow worker in flight in *both*
+    // drivers — the threaded slave is guaranteed idle again before the
+    // next burst — and every delivered one classifies Stale.  Workers 0
+    // and 1 keep clean links so the barrier always closes on them (no
+    // skipped iterations, and the slow replies are never admitted); the
+    // per-message fates are the same pure function of (seed, worker, iter)
+    // in both drivers, so delivered/dropped — and hence the stale totals —
+    // agree exactly.
+    use hybriditer::cluster::{ElasticEvent, ElasticKind};
+    use hybriditer::net::LinkDir;
+    use hybriditer::straggler::DelayModel;
+
+    let m = 4;
+    let p = problem(m);
+    let iters = 90;
+    let slow_up = |secs: f64| LinkModel {
+        drop_prob: 0.25,
+        up: Some(LinkDir {
+            latency: DelayModel::Constant { secs },
+            drop_prob: 0.25,
+        }),
+        ..LinkModel::ideal()
+    };
+    let net = NetSpec::ideal()
+        .with_override(2, slow_up(0.04))
+        .with_override(3, slow_up(0.06));
+    let mut events = Vec::new();
+    for burst in [0u64, 15, 30, 45, 60, 75] {
+        for w in [2usize, 3] {
+            if burst > 0 {
+                events.push(ElasticEvent { iter: burst, worker: w, kind: ElasticKind::Join });
+            }
+            events.push(ElasticEvent { iter: burst + 1, worker: w, kind: ElasticKind::Leave });
+        }
+    }
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        // Deterministic, well-separated fast-worker latencies: worker 1's
+        // 2× slow factor is what the threaded barrier waits on, keeping
+        // wall-clock windows ≈ 5 ms so the slow uplink replies land
+        // iterations later in both drivers.
+        slow_nodes: vec![(1, 2.0)],
+        seed: 27,
+        ..ClusterSpec::default()
+    }
+    .with_net(net)
+    .with_elastic(hybriditer::cluster::ElasticSchedule::new(events), 0);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    // Same pure per-message realizations → identical message accounting.
+    assert_eq!(virt.net, real.net, "net accounting diverged");
+    assert!(virt.net.dropped > 0, "lossy spec produced no drops");
+
+    // The headline: the virtual driver produces stale admissions in
+    // virtual time, and exactly as many as the threaded driver.
+    let virt_stale: usize = virt.recorder.rows().iter().map(|r| r.stale).sum();
+    let real_stale: usize = real.recorder.rows().iter().map(|r| r.stale).sum();
+    assert!(virt_stale > 0, "virtual driver produced no stale admissions");
+    assert_eq!(
+        virt_stale, real_stale,
+        "stale counts diverged: virtual {virt_stale}, real {real_stale}"
+    );
+    assert_eq!(virt.total_abandoned, real.total_abandoned);
+    assert_eq!(virt.total_contributions, real.total_contributions);
+
+    // Same inclusion decisions per recorded iteration, same θ.
+    assert_eq!(virt.recorder.len(), real.recorder.len());
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.iter, rr.iter, "row iteration mismatch");
+        assert_eq!(
+            rv.included, rr.included,
+            "iter {}: virtual included {}, real {}",
+            rv.iter, rv.included, rr.included
+        );
+        assert_eq!(rv.dropped, rr.dropped, "iter {} dropped", rv.iter);
+    }
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
 // ---------------------------------------------------------------------
 // Golden equivalence: fused kernel & scratch-arena refactor (perf pass)
 // ---------------------------------------------------------------------

@@ -25,6 +25,7 @@ fn draw_spec(rng: &mut Pcg64, workers: usize) -> NetSpec {
         drop_prob: rng.uniform(0.0, 0.5),
         dup_prob: rng.uniform(0.0, 0.5),
         dup_lag: rng.uniform(0.0, 0.002),
+        ..LinkModel::ideal()
     };
     let mut spec = NetSpec { default_link: link, ..NetSpec::ideal() };
     if rng.next_f64() < 0.3 {

@@ -1,0 +1,206 @@
+//! Property tests for the discrete-event engine (`sim::engine`).
+//!
+//! The engine's determinism contract: everything a run produces — the
+//! event pop order, every admission decision, every recorded row, θ — is
+//! a **pure function of the seed** (plus the specs), under ideal *and*
+//! non-ideal networks.  The lockstep driver got this for free from its
+//! per-iteration structure; the event engine must keep it now that
+//! stragglers carry state (heap entries) across iteration windows.
+
+use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
+use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::net::{LinkDir, LinkModel, NetSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+use hybriditer::util::proptest::check;
+use hybriditer::util::rng::Pcg64;
+
+fn quick_problem(machines: usize, seed: u64) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "prop-sim".into(),
+        d: 3,
+        l: 8,
+        zeta: 32,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 16,
+        seed,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn run_once(p: &KrrProblem, cluster: &ClusterSpec, cfg: &RunConfig) -> RunReport {
+    let mut pool = p.native_pool();
+    sim::run_virtual(&mut pool, cluster, cfg, &NoEval).unwrap()
+}
+
+/// Bitwise comparison of everything two runs record.
+fn reports_identical(a: &RunReport, b: &RunReport) -> Result<(), String> {
+    if a.theta != b.theta {
+        return Err("theta bits diverged".into());
+    }
+    if a.recorder.len() != b.recorder.len() {
+        return Err(format!("row counts {} vs {}", a.recorder.len(), b.recorder.len()));
+    }
+    for (ra, rb) in a.recorder.rows().iter().zip(b.recorder.rows()) {
+        if ra.iter != rb.iter
+            || ra.time.to_bits() != rb.time.to_bits()
+            || ra.loss.to_bits() != rb.loss.to_bits()
+            || ra.included != rb.included
+            || ra.abandoned != rb.abandoned
+            || ra.stale != rb.stale
+            || ra.dropped != rb.dropped
+            || ra.duplicated != rb.duplicated
+            || ra.alive != rb.alive
+        {
+            return Err(format!("row for iter {} diverged", ra.iter));
+        }
+    }
+    if a.total_contributions != b.total_contributions
+        || a.total_abandoned != b.total_abandoned
+        || a.crashes != b.crashes
+        || a.rejoins != b.rejoins
+        || a.rebalances != b.rebalances
+        || a.net != b.net
+    {
+        return Err("run totals diverged".into());
+    }
+    Ok(())
+}
+
+fn draw_cfg(rng: &mut Pcg64, m: usize) -> RunConfig {
+    let gamma = 1 + rng.below(m as u64) as usize;
+    RunConfig {
+        mode: SyncMode::Hybrid { gamma },
+        optimizer: OptimizerKind::sgd(0.5),
+        loss_form: LossForm::krr(0.01),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(40 + rng.below(40))
+}
+
+#[test]
+fn prop_ideal_net_run_is_pure_function_of_seed() {
+    check("ideal_event_order_seed_pure", 12, |rng| {
+        let m = 3 + rng.below(6) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let mut cluster = ClusterSpec {
+            workers: m,
+            delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        };
+        if rng.next_f64() < 0.5 && m >= 3 {
+            // Elastic churn must not break purity either.
+            cluster = cluster
+                .with_elastic(ElasticSchedule::crash_and_rejoin(&[m - 1], 5, 15), 1);
+        }
+        let cfg = draw_cfg(rng, m);
+        let a = run_once(&p, &cluster, &cfg);
+        let b = run_once(&p, &cluster, &cfg);
+        reports_identical(&a, &b)?;
+
+        // A different cluster seed must actually change the trajectory
+        // (otherwise "pure function of the seed" is vacuous).
+        let mut other = cluster.clone();
+        other.seed = cluster.seed.wrapping_add(1);
+        let c = run_once(&p, &other, &cfg);
+        if reports_identical(&a, &c).is_ok() && a.total_abandoned > 0 {
+            return Err("different seed reproduced the identical run".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_carry_mode_run_is_pure_function_of_seed() {
+    // The cross-iteration reordering path: a lossy spec with an asymmetric
+    // slow uplink keeps events alive across windows — determinism must
+    // survive the carry/rebase machinery.
+    check("carry_event_order_seed_pure", 10, |rng| {
+        let m = 3 + rng.below(5) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let slow_up = LinkModel {
+            drop_prob: rng.uniform(0.0, 0.3),
+            up: Some(LinkDir {
+                latency: DelayModel::Constant { secs: rng.uniform(0.01, 0.08) },
+                drop_prob: rng.uniform(0.0, 0.3),
+            }),
+            ..LinkModel::ideal()
+        };
+        let net = NetSpec {
+            default_link: LinkModel::lossy(rng.uniform(0.0, 0.2)),
+            ..NetSpec::ideal()
+        }
+        .with_override(m - 1, slow_up);
+        let cluster = ClusterSpec {
+            workers: m,
+            base_compute: 0.005,
+            delay: DelayModel::Uniform { lo: 0.0, hi: 0.002 },
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        }
+        .with_net(net);
+        let cfg = draw_cfg(rng, m);
+        let a = run_once(&p, &cluster, &cfg);
+        let b = run_once(&p, &cluster, &cfg);
+        reports_identical(&a, &b)
+    });
+}
+
+#[test]
+fn prop_stale_admissions_conserve_accounting() {
+    // Every reply is exactly one of: admitted, abandoned/stale-accounted,
+    // network-dropped, or still in flight at the end (discarded, like the
+    // threaded master's shutdown).  With record_every = 1 the rows see
+    // every completed window, so the run-level totals must reconcile.
+    check("stale_conservation", 10, |rng| {
+        let m = 4 + rng.below(4) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let slow_up = LinkModel {
+            up: Some(LinkDir {
+                latency: DelayModel::Constant { secs: rng.uniform(0.02, 0.06) },
+                drop_prob: 0.0,
+            }),
+            ..LinkModel::ideal()
+        };
+        let cluster = ClusterSpec {
+            workers: m,
+            base_compute: 0.005,
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        }
+        .with_net(NetSpec::ideal().with_override(m - 1, slow_up));
+        let gamma = 1 + rng.below((m - 1) as u64) as usize;
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma },
+            optimizer: OptimizerKind::sgd(0.5),
+            loss_form: LossForm::krr(0.01),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(60);
+        let rep = run_once(&p, &cluster, &cfg);
+        let row_abandoned: usize = rep.recorder.rows().iter().map(|r| r.abandoned).sum();
+        let row_stale: usize = rep.recorder.rows().iter().map(|r| r.stale).sum();
+        if rep.total_abandoned != (row_abandoned + row_stale) as u64 {
+            return Err(format!(
+                "totals {} != rows abandoned {row_abandoned} + stale {row_stale}",
+                rep.total_abandoned
+            ));
+        }
+        // γ < m with a chronically slow uplink: the slow worker's replies
+        // must actually go stale (the reordering feature under test).
+        if gamma < m && row_stale == 0 && rep.net.dropped == 0 {
+            return Err("slow uplink produced no stale admissions".into());
+        }
+        Ok(())
+    });
+}
