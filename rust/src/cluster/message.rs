@@ -25,6 +25,12 @@ pub enum MasterMsg {
         /// straggler sleep so wall-clock arrivals match the virtual
         /// driver's `down + compute + up` timing model.
         net_delay: f64,
+        /// Warm-up service-time dilation (1.0 = warm), decided master-side
+        /// from the elastic runtime's ramp state
+        /// ([`crate::cluster::ElasticRuntime::latency_scale`]) — the slave
+        /// has no view of boundary state, so the scale rides in the
+        /// message like `net_delay` does.
+        compute_scale: f64,
         /// Gradient-buffer free-list: payload `Vec`s reclaimed from earlier
         /// `Grad` replies, handed back so the slave's next reply reuses
         /// them instead of allocating (capacity already fits one gradient).
@@ -50,9 +56,10 @@ pub struct ShardGrad {
 /// Worker -> master.
 #[derive(Debug)]
 pub enum WorkerMsg {
-    /// A finished iteration: one entry per shard the worker was assigned
-    /// (empty if it currently owns no shards — it still reports, occupying
-    /// a barrier slot, exactly like the virtual driver).
+    /// A finished iteration: one entry per shard the worker was assigned.
+    /// Empty only in async mode's keep-alive heartbeats — the sync master
+    /// never dispatches a shard-less worker, exactly like the virtual
+    /// driver.
     Grad {
         worker: usize,
         iter: u64,
@@ -90,6 +97,7 @@ mod tests {
                 theta: Arc::clone(&theta),
                 shards: Arc::clone(&shards),
                 net_delay: 0.0,
+                compute_scale: 1.0,
                 recycle: Vec::new(),
             })
             .collect();

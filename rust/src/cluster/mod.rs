@@ -180,16 +180,99 @@ pub struct ElasticRuntime {
     pub ownership: crate::data::OwnershipMap,
     last_epoch: u64,
     rebalances: u64,
+    /// Per-worker relative hardware capacity (1.0 = baseline).
+    capacity: Vec<f64>,
+    /// Warm-up ramp length for scheduled rejoins, in boundaries (0 = off).
+    warmup_iters: u64,
+    /// Remaining warm-up boundaries per worker (0 = fully warmed).
+    warmup_left: Vec<u64>,
+    /// Whether the planner apportions by capacity (false = legacy level
+    /// loads even on skewed hardware — the F2d ablation baseline).
+    weighted: bool,
+    /// Scratch for the planner's weight vector (capacity kept).
+    weights: Vec<f64>,
 }
 
 impl ElasticRuntime {
     /// Identity ownership (shard `s` on worker `s`), epoch synced to the
-    /// membership view.
+    /// membership view, homogeneous capacity, no warm-up.
     pub fn new(membership: &Membership) -> ElasticRuntime {
         ElasticRuntime {
             ownership: crate::data::OwnershipMap::identity(membership.len()),
             last_epoch: membership.epoch(),
             rebalances: 0,
+            capacity: vec![1.0; membership.len()],
+            warmup_iters: 0,
+            warmup_left: vec![0; membership.len()],
+            weighted: true,
+            weights: Vec::new(),
+        }
+    }
+
+    /// Install the cluster's capacity model: per-worker relative capacity,
+    /// the warm-up ramp length for scheduled rejoins, and whether the
+    /// planner apportions by capacity.  Resets any warm-up in progress.
+    /// With uniform capacities and `warmup_iters == 0` — the defaults —
+    /// every plan is bit-for-bit the legacy planner's.
+    pub fn configure_capacity(&mut self, capacity: Vec<f64>, warmup_iters: u64, weighted: bool) {
+        assert_eq!(
+            capacity.len(),
+            self.capacity.len(),
+            "capacity vector size mismatch"
+        );
+        assert!(
+            capacity.iter().all(|&c| c > 0.0 && c.is_finite()),
+            "capacities must be positive and finite"
+        );
+        self.capacity = capacity;
+        self.warmup_iters = warmup_iters;
+        self.weighted = weighted;
+        self.warmup_left.fill(0);
+    }
+
+    /// A scheduled join re-admitted worker `w`: it starts its warm-up ramp
+    /// (no-op when `warmup_iters == 0`).  Stochastic `rejoin_after`
+    /// revivals do not ramp — only the deterministic elastic schedule does,
+    /// so both drivers realize identical ramps.
+    pub fn note_join(&mut self, w: usize) {
+        self.warmup_left[w] = self.warmup_iters;
+    }
+
+    /// Advance every warm-up ramp by one boundary.  Called exactly once
+    /// per boundary by both drivers, *before* that boundary's scheduled
+    /// events are applied.
+    pub fn tick_warmup(&mut self) {
+        for l in self.warmup_left.iter_mut() {
+            *l = l.saturating_sub(1);
+        }
+    }
+
+    /// Warm-up ramp of worker `w` in (0, 1]: `1/(k+1)` at the boundary it
+    /// rejoined, climbing linearly to `k/(k+1)` at its k-th warm-up
+    /// boundary, then 1.
+    pub fn ramp(&self, w: usize) -> f64 {
+        if self.warmup_left[w] == 0 {
+            1.0
+        } else {
+            ((self.warmup_iters - self.warmup_left[w]) as f64 + 1.0)
+                / (self.warmup_iters as f64 + 1.0)
+        }
+    }
+
+    /// Service-time dilation while a worker is cold: `1/ramp` (1.0 once
+    /// warmed, so steady-state latency arithmetic is untouched).
+    pub fn latency_scale(&self, w: usize) -> f64 {
+        1.0 / self.ramp(w)
+    }
+
+    /// The apportionment weight the planner sees for worker `w`:
+    /// `capacity · ramp` while warming, `capacity` once warm — or 1.0 with
+    /// weighting disabled.
+    pub fn plan_weight(&self, w: usize) -> f64 {
+        if self.weighted {
+            self.capacity[w] * self.ramp(w)
+        } else {
+            1.0
         }
     }
 
@@ -243,7 +326,17 @@ impl ElasticRuntime {
     }
 
     fn replan(&mut self, membership: &Membership) -> Result<bool> {
-        let plan = crate::data::plan_rebalance(&self.ownership, &membership.alive_mask());
+        let mut weights = std::mem::take(&mut self.weights);
+        weights.clear();
+        for w in 0..self.capacity.len() {
+            weights.push(self.plan_weight(w));
+        }
+        let plan = crate::data::plan_rebalance_weighted(
+            &self.ownership,
+            &membership.alive_mask(),
+            &weights,
+        );
+        self.weights = weights;
         if plan.is_empty() {
             return Ok(false);
         }
@@ -277,6 +370,22 @@ pub struct ClusterSpec {
     pub delay: DelayModel,
     /// Chronically slow nodes: `(worker index, multiplier)`.
     pub slow_nodes: Vec<(usize, f64)>,
+    /// Heterogeneous hardware: `(worker index, relative capacity)` — every
+    /// unlisted worker is 1.0.  Service time scales by `1/capacity`, and
+    /// with [`ClusterSpec::weighted_rebalance`] the planner apportions
+    /// shards proportionally to capacity (see `docs/ELASTIC.md`).
+    pub capacities: Vec<(usize, f64)>,
+    /// Warm-up ramp length for scheduled rejoins, iterations (0 = rejoins
+    /// are instantly at full capacity, the pre-capacity behaviour).  While
+    /// warming, a worker's service time dilates by `1/ramp` and its
+    /// apportionment weight shrinks by `ramp`, with
+    /// `ramp = (j+1)/(warmup_iters+1)` on its j-th post-join boundary.
+    pub warmup_iters: u64,
+    /// Capacity-weighted shard apportionment (default).  `false` keeps the
+    /// legacy level-load planner even on skewed hardware — the F2d
+    /// ablation baseline.  Irrelevant on homogeneous clusters, where the
+    /// weighted planner delegates to the legacy one bit-for-bit.
+    pub weighted_rebalance: bool,
     /// Failure behaviour, applied to every worker (unless `failure_only`
     /// narrows it).
     pub failure: FailureModel,
@@ -308,6 +417,9 @@ impl Default for ClusterSpec {
             base_compute: 0.010,
             delay: DelayModel::None,
             slow_nodes: vec![],
+            capacities: vec![],
+            warmup_iters: 0,
+            weighted_rebalance: true,
             failure: FailureModel::none(),
             failure_only: vec![],
             master_overhead: 0.0005,
@@ -339,11 +451,51 @@ impl ClusterSpec {
                 StragglerProfile {
                     base_compute: self.base_compute,
                     slow_factor,
+                    capacity: self.capacity_of(w),
                     delay: self.delay.clone(),
                     failure,
                 }
             })
             .collect()
+    }
+
+    /// Relative capacity of worker `w` (1.0 unless listed in
+    /// [`ClusterSpec::capacities`]).
+    pub fn capacity_of(&self, w: usize) -> f64 {
+        self.capacities
+            .iter()
+            .find(|(idx, _)| *idx == w)
+            .map(|(_, c)| *c)
+            .unwrap_or(1.0)
+    }
+
+    /// All per-worker capacities, indexed by worker.
+    pub fn capacity_vec(&self) -> Vec<f64> {
+        (0..self.workers).map(|w| self.capacity_of(w)).collect()
+    }
+
+    /// Parse the `--capacities` syntax: comma-separated `<worker>:<cap>`
+    /// terms, e.g. `"8:0.25,9:0.5"`.  An empty string is the empty list.
+    pub fn parse_capacities(text: &str) -> Result<Vec<(usize, f64)>> {
+        let mut out = Vec::new();
+        for term in text.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (worker, cap) = term.split_once(':').ok_or_else(|| {
+                Error::Config(format!("bad capacity entry '{term}' (want w:cap)"))
+            })?;
+            let worker: usize = worker.trim().parse().map_err(|_| {
+                Error::Config(format!("bad worker index in capacity entry '{term}'"))
+            })?;
+            let cap: f64 = cap.trim().parse().map_err(|_| {
+                Error::Config(format!("bad capacity value in entry '{term}'"))
+            })?;
+            if !(cap > 0.0 && cap.is_finite()) {
+                return Err(Error::Config(format!(
+                    "capacity of worker {worker} must be positive and finite, got {cap}"
+                )));
+            }
+            out.push((worker, cap));
+        }
+        Ok(out)
     }
 
     /// Convenience: mark the last `n` workers as chronically `factor`× slow.
@@ -352,6 +504,20 @@ impl ClusterSpec {
         self.slow_nodes = ((self.workers - n)..self.workers)
             .map(|w| (w, factor))
             .collect();
+        self
+    }
+
+    /// Convenience: the last `n` workers run at relative capacity `cap`
+    /// (the F2d mixed-hardware scenario).
+    pub fn with_capacity_tail(mut self, n: usize, cap: f64) -> Self {
+        assert!(n <= self.workers);
+        self.capacities = ((self.workers - n)..self.workers).map(|w| (w, cap)).collect();
+        self
+    }
+
+    /// Convenience: set the scheduled-rejoin warm-up ramp length.
+    pub fn with_warmup(mut self, warmup_iters: u64) -> Self {
+        self.warmup_iters = warmup_iters;
         self
     }
 
@@ -527,6 +693,88 @@ mod tests {
         membership.mark_alive(3);
         rt.maybe_rebalance(6, 1, &membership).unwrap();
         assert!(!rt.replan_orphans(1, &membership).unwrap());
+    }
+
+    #[test]
+    fn profiles_apply_capacities() {
+        let spec = ClusterSpec {
+            workers: 4,
+            capacities: vec![(2, 0.25), (3, 2.0)],
+            ..ClusterSpec::default()
+        };
+        let ps = spec.profiles();
+        assert_eq!(ps[0].capacity, 1.0);
+        assert_eq!(ps[2].capacity, 0.25);
+        assert_eq!(ps[3].capacity, 2.0);
+        assert_eq!(spec.capacity_vec(), vec![1.0, 1.0, 0.25, 2.0]);
+    }
+
+    #[test]
+    fn capacity_tail_marks_last_workers() {
+        let spec = ClusterSpec { workers: 4, ..ClusterSpec::default() }
+            .with_capacity_tail(2, 0.5);
+        assert_eq!(spec.capacities, vec![(2, 0.5), (3, 0.5)]);
+    }
+
+    #[test]
+    fn parse_capacities_accepts_and_rejects() {
+        let caps = ClusterSpec::parse_capacities("8:0.25, 9:0.5").unwrap();
+        assert_eq!(caps, vec![(8, 0.25), (9, 0.5)]);
+        assert!(ClusterSpec::parse_capacities("").unwrap().is_empty());
+        assert!(ClusterSpec::parse_capacities("nope").is_err());
+        assert!(ClusterSpec::parse_capacities("x:1.0").is_err());
+        assert!(ClusterSpec::parse_capacities("1:fast").is_err());
+        assert!(ClusterSpec::parse_capacities("1:0").is_err());
+        assert!(ClusterSpec::parse_capacities("1:-2").is_err());
+    }
+
+    #[test]
+    fn warmup_ramp_climbs_linearly_then_saturates() {
+        let membership = Membership::new(2);
+        let mut rt = ElasticRuntime::new(&membership);
+        rt.configure_capacity(vec![1.0, 0.5], 3, true);
+        // Fully warmed: ramp 1, no dilation, weight = capacity.
+        assert_eq!(rt.ramp(1), 1.0);
+        assert_eq!(rt.latency_scale(1), 1.0);
+        assert_eq!(rt.plan_weight(1), 0.5);
+        // Rejoin: ramp starts at 1/(k+1) and climbs one step per boundary.
+        rt.note_join(1);
+        assert!((rt.ramp(1) - 0.25).abs() < 1e-12);
+        assert!((rt.latency_scale(1) - 4.0).abs() < 1e-12);
+        assert!((rt.plan_weight(1) - 0.125).abs() < 1e-12);
+        rt.tick_warmup();
+        assert!((rt.ramp(1) - 0.5).abs() < 1e-12);
+        rt.tick_warmup();
+        assert!((rt.ramp(1) - 0.75).abs() < 1e-12);
+        rt.tick_warmup();
+        assert_eq!(rt.ramp(1), 1.0);
+        rt.tick_warmup(); // saturates, no underflow
+        assert_eq!(rt.ramp(1), 1.0);
+        // Warm-up never touches the unaffected worker.
+        assert_eq!(rt.ramp(0), 1.0);
+        // Disabled weighting flattens plan weights but not the ramp.
+        rt.note_join(1);
+        rt.configure_capacity(vec![1.0, 0.5], 3, false);
+        assert_eq!(rt.plan_weight(1), 1.0);
+    }
+
+    #[test]
+    fn weighted_replan_strips_slow_half() {
+        // 2 of 4 workers at 0.25×: the capacity-weighted planner hands
+        // their shards to the fast pair (quotas 1.6/0.4 → targets 2/0).
+        let membership = Membership::new(4);
+        let mut rt = ElasticRuntime::new(&membership);
+        rt.configure_capacity(vec![1.0, 1.0, 0.25, 0.25], 0, true);
+        assert!(rt.maybe_rebalance(0, 1, &membership).unwrap());
+        assert_eq!(rt.ownership.loads(), vec![2, 2, 0, 0]);
+        assert_eq!(rt.rebalances(), 1);
+        // Fixpoint: the next boundary plans nothing.
+        assert!(!rt.maybe_rebalance(1, 1, &membership).unwrap());
+        // The ablation baseline keeps the legacy level layout.
+        let mut rt = ElasticRuntime::new(&membership);
+        rt.configure_capacity(vec![1.0, 1.0, 0.25, 0.25], 0, false);
+        assert!(!rt.maybe_rebalance(0, 1, &membership).unwrap());
+        assert_eq!(rt.ownership.loads(), vec![1, 1, 1, 1]);
     }
 
     #[test]

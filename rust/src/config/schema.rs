@@ -24,6 +24,7 @@
 //! base_compute = 0.01
 //! slow_nodes = 2
 //! slow_factor = 8.0
+//! capacities = "8:0.25,9:0.5"   # per-worker relative hardware capacity
 //! crash_prob = 0.0
 //! transient_prob = 0.0
 //! rejoin_after = 0      # 0 = never
@@ -31,6 +32,8 @@
 //! [elastic]
 //! schedule = "2:leave@30,2:join@50"   # scripted membership trace
 //! rebalance_every = 1                 # 0 disables shard rebalancing
+//! warmup_iters = 8                    # rejoin warm-up ramp (0 = instant)
+//! weighted_rebalance = true           # capacity-weighted apportionment
 //!
 //! [net]
 //! drop_prob = 0.05      # per-message loss on every link (both directions)
@@ -160,11 +163,22 @@ impl ExperimentConfig {
         };
         let slow_n = v.opt_usize("straggler.slow_nodes", 0);
         let slow_factor = v.opt_f64("straggler.slow_factor", 4.0);
+        let capacities =
+            ClusterSpec::parse_capacities(v.opt_str("straggler.capacities", ""))?;
+        for &(w, _) in &capacities {
+            if w >= machines {
+                return Err(Error::Config(format!(
+                    "capacity entry names worker {w} but cluster has {machines}"
+                )));
+            }
+        }
 
         // --- [elastic] ---------------------------------------------------
         let elastic = ElasticSchedule::parse(v.opt_str("elastic.schedule", ""))?;
         elastic.validate(machines)?;
         let rebalance_every = v.opt_u64("elastic.rebalance_every", 0);
+        let warmup_iters = v.opt_u64("elastic.warmup_iters", 0);
+        let weighted_rebalance = v.opt_bool("elastic.weighted_rebalance", true);
 
         // --- [net] -------------------------------------------------------
         let net_sub = v.get("net").cloned().unwrap_or_else(Value::empty_table);
@@ -236,6 +250,9 @@ impl ExperimentConfig {
             base_compute: v.opt_f64("straggler.base_compute", 0.01),
             delay,
             slow_nodes: vec![],
+            capacities,
+            warmup_iters,
+            weighted_rebalance,
             failure,
             failure_only: v
                 .get("straggler.failure_only")
@@ -471,6 +488,38 @@ backend = "native"
         let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
         assert!(cfg.cluster.elastic.is_empty());
         assert_eq!(cfg.cluster.rebalance_every, 0);
+        assert_eq!(cfg.cluster.warmup_iters, 0);
+        assert!(cfg.cluster.weighted_rebalance);
+        assert!(cfg.cluster.capacities.is_empty());
+    }
+
+    #[test]
+    fn capacity_section_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[straggler]\ncapacities = \"2:0.25,3:0.5\"\n\n\
+             [elastic]\nwarmup_iters = 8\nweighted_rebalance = false",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.capacities, vec![(2, 0.25), (3, 0.5)]);
+        assert_eq!(cfg.cluster.warmup_iters, 8);
+        assert!(!cfg.cluster.weighted_rebalance);
+        assert_eq!(cfg.cluster.capacity_vec(), vec![1.0, 1.0, 0.25, 0.5]);
+    }
+
+    #[test]
+    fn capacity_section_rejects_bad_entries() {
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[straggler]\ncapacities = \"4:0.5\"",
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[straggler]\ncapacities = \"1:0\"",
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[straggler]\ncapacities = \"bogus\"",
+        )
+        .is_err());
     }
 
     #[test]

@@ -46,6 +46,19 @@ use crate::{Error, Result};
 pub fn validate_elastic(cluster: &ClusterSpec, mode: &SyncMode) -> Result<()> {
     cluster.elastic.validate(cluster.workers)?;
     cluster.net.validate(cluster.workers)?;
+    for &(w, c) in &cluster.capacities {
+        if w >= cluster.workers {
+            return Err(Error::Cluster(format!(
+                "capacity entry names worker {w} but cluster has {}",
+                cluster.workers
+            )));
+        }
+        if !(c > 0.0 && c.is_finite()) {
+            return Err(Error::Cluster(format!(
+                "capacity of worker {w} must be positive and finite, got {c}"
+            )));
+        }
+    }
     if matches!(mode, SyncMode::Bsp)
         && cluster.rebalance_every == 0
         && cluster
@@ -175,6 +188,10 @@ pub struct RunReport {
     pub rejoins: u64,
     /// Elastic shard-rebalance plans executed (0 = static membership).
     pub rebalances: u64,
+    /// Final shard ownership (index = shard, value = owner) — the state
+    /// the elastic runtime ended the run with, for ownership-timeline
+    /// assertions in the cross-driver parity suite.
+    pub shard_owners: Vec<usize>,
     /// Network-level message accounting.  `dropped`/`duplicated` are zero
     /// under an ideal net; `sent`/`delivered` still count the traffic.
     pub net: crate::net::NetStats,
@@ -344,6 +361,7 @@ mod tests {
             crashes: 0,
             rejoins: 0,
             rebalances: 0,
+            shard_owners: vec![],
             net: crate::net::NetStats::default(),
             mean_staleness: None,
             driver_secs: 0.0,

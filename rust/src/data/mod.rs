@@ -15,7 +15,9 @@ pub mod synth;
 
 pub use checkpoint::Checkpoint;
 
-pub use shard::{plan_rebalance, OwnershipMap, RebalancePlan, Shard, ShardMove};
+pub use shard::{
+    plan_rebalance, plan_rebalance_weighted, OwnershipMap, RebalancePlan, Shard, ShardMove,
+};
 pub use synth::{KrrProblem, KrrProblemSpec};
 
 /// Result of one worker-side gradient computation.

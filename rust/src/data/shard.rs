@@ -10,12 +10,23 @@
 //! executed by both drivers ([`crate::sim`] and [`crate::worker`]), so
 //! semantics stay shared.
 //!
+//! **Capacity-aware clusters** (see `docs/ELASTIC.md`): on mixed hardware a
+//! level shard count is *not* a level load, so
+//! [`plan_rebalance_weighted`] apportions shards proportionally to each
+//! worker's relative capacity weight by deterministic **largest-remainder**
+//! apportionment.  Uniform weights delegate to the legacy planner, so every
+//! pre-capacity plan — and hence every golden trajectory — is reproduced
+//! bit for bit.
+//!
 //! Invariants (property-tested in `tests/property_shard.rs`):
 //! * every shard has exactly one owner (no row lost, no row owned twice);
 //! * after a rebalance every owner is alive (when anyone is);
-//! * alive loads differ by at most one shard;
+//! * alive loads differ by at most one shard (uniform weights) / by less
+//!   than one from their fractional quota (weighted);
 //! * with unchanged, already-even membership the plan is empty
-//!   (`split_even` round-trips through rebalance to the identity).
+//!   (`split_even` round-trips through rebalance to the identity);
+//! * with no worker alive the plan moves nothing and surfaces the
+//!   unadoptable shards in [`RebalancePlan::orphans`].
 
 /// One worker's slice of the dataset: `phi` is row-major (rows, l).
 #[derive(Clone, Debug)]
@@ -93,6 +104,12 @@ impl OwnershipMap {
 
     pub fn owner(&self, shard: usize) -> usize {
         self.owner[shard]
+    }
+
+    /// The full owner-per-shard vector (index = shard).  Reports snapshot
+    /// this at run end so tests can assert cross-driver ownership parity.
+    pub fn owners(&self) -> &[usize] {
+        &self.owner
     }
 
     /// Number of shards worker `w` currently owns.
@@ -175,9 +192,16 @@ pub struct ShardMove {
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RebalancePlan {
     pub moves: Vec<ShardMove>,
+    /// Shards that remain owned by a dead worker because there was nowhere
+    /// to move them — non-empty only when *no* worker is alive.  Surfaced
+    /// so callers can assert conservation: every dead-owned shard is either
+    /// moved or reported here, never silently forgotten.
+    pub orphans: Vec<usize>,
 }
 
 impl RebalancePlan {
+    /// No moves to apply.  A plan can be "empty" and still carry
+    /// [`RebalancePlan::orphans`] (the everyone-dead case).
     pub fn is_empty(&self) -> bool {
         self.moves.is_empty()
     }
@@ -197,12 +221,14 @@ impl RebalancePlan {
 ///
 /// With every worker alive and loads already level the plan is empty, so
 /// rebalancing is the identity on an unchanged balanced cluster.  If no
-/// worker is alive the plan is empty (there is nowhere to move work).
+/// worker is alive the plan moves nothing and the unadoptable shards are
+/// surfaced in [`RebalancePlan::orphans`].
 pub fn plan_rebalance(map: &OwnershipMap, alive: &[bool]) -> RebalancePlan {
     assert_eq!(alive.len(), map.workers(), "alive mask size mismatch");
     let alive_workers: Vec<usize> = (0..alive.len()).filter(|&w| alive[w]).collect();
     let mut plan = RebalancePlan::default();
     if alive_workers.is_empty() {
+        plan.orphans = (0..map.shards()).filter(|&s| !alive[map.owner(s)]).collect();
         return plan;
     }
 
@@ -254,6 +280,141 @@ pub fn plan_rebalance(map: &OwnershipMap, alive: &[bool]) -> RebalancePlan {
         loads[donor] -= 1;
         loads[recipient] += 1;
         owner[shard] = recipient;
+    }
+
+    plan
+}
+
+/// Capacity-weighted rebalance: apportion the shard count over the live
+/// worker set proportionally to `weights` (relative capacities, > 0) by
+/// deterministic **largest-remainder** apportionment, then emit the moves
+/// that realize the apportionment with minimal churn:
+///
+/// 1. each alive worker's target is `floor(S · wᵢ / ΣW)`, and the leftover
+///    shards go to the largest fractional remainders — ties prefer workers
+///    already holding more than their floor (stickiness: a replan with
+///    unchanged weights and loads is the empty plan), then the lowest
+///    worker index;
+/// 2. dead workers' shards move first (ascending shard index) to the most
+///    under-target alive worker (ties toward the lowest index);
+/// 3. over-target workers then donate their highest-index shards to the
+///    most under-target workers until every alive load equals its target.
+///
+/// **Uniform weights delegate to [`plan_rebalance`]**, so a homogeneous
+/// cluster's plans — move lists included — are bit-for-bit the legacy
+/// planner's, which is what keeps every pre-capacity golden trajectory
+/// unchanged.  With no worker alive the plan moves nothing and surfaces
+/// the unadoptable shards in [`RebalancePlan::orphans`].
+pub fn plan_rebalance_weighted(
+    map: &OwnershipMap,
+    alive: &[bool],
+    weights: &[f64],
+) -> RebalancePlan {
+    assert_eq!(alive.len(), map.workers(), "alive mask size mismatch");
+    assert_eq!(weights.len(), map.workers(), "weight vector size mismatch");
+    let alive_workers: Vec<usize> = (0..alive.len()).filter(|&w| alive[w]).collect();
+    if alive_workers.is_empty() {
+        return plan_rebalance(map, alive);
+    }
+    for &w in &alive_workers {
+        assert!(
+            weights[w] > 0.0 && weights[w].is_finite(),
+            "weight of alive worker {w} must be positive and finite, got {}",
+            weights[w]
+        );
+    }
+    // Uniform weights: capacity carries no information, so the legacy
+    // planner *is* the apportionment — and its exact move lists are pinned
+    // by the golden/parity suites.
+    let w0 = weights[alive_workers[0]];
+    if alive_workers.iter().all(|&w| weights[w] == w0) {
+        return plan_rebalance(map, alive);
+    }
+
+    let shards = map.shards();
+    let loads = map.loads();
+    let total: f64 = alive_workers.iter().map(|&w| weights[w]).sum();
+
+    // Largest-remainder apportionment of `shards` over the alive set.
+    let mut target = vec![0usize; map.workers()];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(alive_workers.len());
+    let mut assigned = 0usize;
+    for &w in &alive_workers {
+        let quota = shards as f64 * weights[w] / total;
+        let base = quota.floor() as usize;
+        target[w] = base;
+        assigned += base;
+        fracs.push((quota - base as f64, w));
+    }
+    let extras = shards.saturating_sub(assigned);
+    fracs.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .expect("quota fractions are finite")
+            // Stickiness: a worker already holding more than its floor
+            // keeps its extra, so replanning unchanged state is a no-op.
+            .then_with(|| (loads[b.1] > target[b.1]).cmp(&(loads[a.1] > target[a.1])))
+            .then_with(|| a.1.cmp(&b.1))
+    });
+    // `extras` ≤ alive count in exact arithmetic; `cycle` keeps the
+    // distribution total (Σ target == shards, which pass 2's termination
+    // depends on) even if f64 rounding ever floors one quota too low.
+    for &(_, w) in fracs.iter().cycle().take(extras) {
+        target[w] += 1;
+    }
+
+    // Emit moves: track pending ownership so later picks see earlier ones.
+    let mut plan = RebalancePlan::default();
+    let mut owner: Vec<usize> = (0..shards).map(|s| map.owner(s)).collect();
+    let mut load = loads;
+    let most_under = |load: &[usize]| -> usize {
+        let mut best = alive_workers[0];
+        let mut best_deficit = target[best] as i64 - load[best] as i64;
+        for &w in &alive_workers {
+            let deficit = target[w] as i64 - load[w] as i64;
+            if deficit > best_deficit {
+                best = w;
+                best_deficit = deficit;
+            }
+        }
+        best
+    };
+
+    // Pass 1: adopt dead workers' shards.
+    for s in 0..shards {
+        let o = owner[s];
+        if !alive[o] {
+            let to = most_under(&load);
+            plan.moves.push(ShardMove { shard: s, from: o, to });
+            load[o] -= 1;
+            load[to] += 1;
+            owner[s] = to;
+        }
+    }
+
+    // Pass 2: drain over-target workers into under-target ones.  Total
+    // excess equals total deficit (both sides sum to `shards`), so this
+    // terminates with every alive load exactly on target.
+    loop {
+        let mut donor = None;
+        let mut worst = 0i64;
+        for &w in &alive_workers {
+            let excess = load[w] as i64 - target[w] as i64;
+            if excess > worst {
+                donor = Some(w);
+                worst = excess;
+            }
+        }
+        let Some(donor) = donor else { break };
+        let to = most_under(&load);
+        // Donor's highest-index shard migrates (low shards stay sticky).
+        let shard = (0..owner.len())
+            .rev()
+            .find(|&s| owner[s] == donor)
+            .expect("over-target donor owns a shard");
+        plan.moves.push(ShardMove { shard, from: donor, to });
+        load[donor] -= 1;
+        load[to] += 1;
+        owner[shard] = to;
     }
 
     plan
@@ -337,15 +498,74 @@ mod tests {
         let mut map = OwnershipMap::identity(3);
         let plan = RebalancePlan {
             moves: vec![ShardMove { shard: 0, from: 2, to: 1 }],
+            ..RebalancePlan::default()
         };
         assert!(map.apply(&plan).is_err());
         assert_eq!(map, OwnershipMap::identity(3));
     }
 
     #[test]
-    fn everyone_dead_yields_empty_plan() {
+    fn everyone_dead_yields_empty_plan_with_orphans() {
         let map = OwnershipMap::identity(3);
-        assert!(plan_rebalance(&map, &[false; 3]).is_empty());
+        let plan = plan_rebalance(&map, &[false; 3]);
+        assert!(plan.is_empty());
+        // The unadoptable shards are surfaced, not silently forgotten.
+        assert_eq!(plan.orphans, vec![0, 1, 2]);
+        // With anyone alive, everything is adopted and nothing is orphaned.
+        let plan = plan_rebalance(&map, &[false, true, false]);
+        assert!(plan.orphans.is_empty());
+        assert_eq!(plan.len(), 2);
+    }
+
+    #[test]
+    fn weighted_uniform_delegates_to_legacy() {
+        // Any uniform weight vector must reproduce the legacy plan exactly
+        // (move lists included), keeping homogeneous goldens bit-for-bit.
+        let map = OwnershipMap::identity(5);
+        let alive = [true, false, true, true, false];
+        let legacy = plan_rebalance(&map, &alive);
+        let weighted = plan_rebalance_weighted(&map, &alive, &[2.5; 5]);
+        assert_eq!(legacy, weighted);
+    }
+
+    #[test]
+    fn weighted_apportionment_strips_slow_half() {
+        // 4 shards over 2 fast (1.0) + 2 slow (0.25) workers: quotas are
+        // 1.6 / 0.4, so largest remainder gives the fast pair 2 shards each
+        // and the slow pair none.
+        let map = OwnershipMap::identity(4);
+        let weights = [1.0, 1.0, 0.25, 0.25];
+        let mut map2 = map.clone();
+        let plan = plan_rebalance_weighted(&map, &[true; 4], &weights);
+        map2.apply(&plan).unwrap();
+        assert_eq!(map2.loads(), vec![2, 2, 0, 0], "{plan:?}");
+        // Replanning the result with unchanged weights is a no-op.
+        assert!(plan_rebalance_weighted(&map2, &[true; 4], &weights).is_empty());
+    }
+
+    #[test]
+    fn weighted_proportionality_keeps_minority_slow_node() {
+        // One 0.25× worker among three fast ones: its quota 4·0.25/3.25 ≈
+        // 0.31 out-remainders the fast 0.23, so proportional apportionment
+        // leaves it exactly its one shard — the identity plan.
+        let map = OwnershipMap::identity(4);
+        let plan = plan_rebalance_weighted(&map, &[true; 4], &[1.0, 1.0, 1.0, 0.25]);
+        assert!(plan.is_empty(), "{plan:?}");
+    }
+
+    #[test]
+    fn weighted_adopts_orphans_by_deficit() {
+        // Worker 1 (weight 2.0) dies; its shard must go to the most
+        // under-target survivor.  Targets over {0, 2, 3} with weights
+        // {2, 1, 1}: quotas 2 / 1 / 1 — worker 0 is two under, adopts both.
+        let mut map = OwnershipMap::identity(4);
+        map.reassign(0, 1); // worker 1 owns shards 0 and 1, worker 0 none
+        let alive = [true, false, true, true];
+        let weights = [2.0, 2.0, 1.0, 1.0];
+        let plan = plan_rebalance_weighted(&map, &alive, &weights);
+        map.apply(&plan).unwrap();
+        assert_eq!(map.loads(), vec![2, 0, 1, 1], "{plan:?}");
+        assert!(plan.orphans.is_empty());
     }
 
     #[test]

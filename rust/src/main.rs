@@ -66,6 +66,16 @@ fn cmd_train(argv: &[String]) -> i32 {
             "rebalance shards every k iterations, 0 disables (overrides config)",
         )
         .opt(
+            "warmup-iters",
+            "",
+            "rejoin warm-up ramp length in iterations, 0 = instant (overrides config)",
+        )
+        .opt(
+            "capacities",
+            "",
+            "per-worker relative capacities, e.g. 8:0.25,9:0.5 (overrides config)",
+        )
+        .opt(
             "drop-prob",
             "",
             "per-message network loss probability on every link (overrides config)",
@@ -124,6 +134,16 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
                 "--rebalance-every: expected integer, got '{rebalance_every}'"
             ))
         })?;
+    }
+    if let Some(k) = parsed.get_opt_usize("warmup-iters")? {
+        cfg.cluster.warmup_iters = k as u64;
+    }
+    let capacities = parsed.get("capacities");
+    if !capacities.is_empty() {
+        // Worker-range/positivity checks happen in validate_elastic on
+        // every run path, so the override only needs to parse here.
+        cfg.cluster.capacities =
+            hybriditer::cluster::ClusterSpec::parse_capacities(capacities)?;
     }
     if let Some(p) = parsed.get_opt_f64("drop-prob")? {
         // "Every link" includes per-worker overrides (e.g. a slow_link

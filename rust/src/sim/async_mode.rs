@@ -79,8 +79,19 @@ impl Dispatcher<'_> {
     ) {
         self.shards_given[w].clear();
         self.shards_given[w].extend_from_slice(shards);
-        let compute = self.profiles[w].sample_latency(&mut core.delay_rngs[w])
-            * shards.len().max(1) as f64;
+        // Serial execution of the dispatched shards, dilated by the
+        // warm-up ramp while the worker is cold.  A zero-shard dispatch is
+        // a control-plane keep-alive (it keeps the worker in the event
+        // loop so a later rebalance can reach it): flat base cost, no
+        // slow/capacity/warm-up scaling, no delay draw.  Zero-shard
+        // dispatches only arise under capacity-weighted apportionment, so
+        // the legacy event sequence is untouched.
+        let compute = if shards.is_empty() {
+            self.profiles[w].base_compute
+        } else {
+            let per_shard = self.profiles[w].sample_latency(&mut core.delay_rngs[w]);
+            per_shard * core.elastic.latency_scale(w) * shards.len() as f64
+        };
         let tag = self.attempts[w];
         let (delivers, net_delay, dup_lag) = if self.net_ideal {
             self.stats.sent += 2;
@@ -119,8 +130,14 @@ pub(super) fn run_async(
     let profiles = cluster.profiles();
 
     let mut theta = cfg.init_theta.clone().unwrap_or_else(|| vec![0.0f32; dim]);
-    // Engine state on the historical async RNG stream family.
+    // Engine state on the historical async RNG stream family, with the
+    // cluster's capacity model installed (defaults are a bit-for-bit no-op).
     let mut core = EngineCore::new(&profiles, cluster.seed, 0xA51C, 2000);
+    core.elastic.configure_capacity(
+        cluster.capacity_vec(),
+        cluster.warmup_iters,
+        cluster.weighted_rebalance,
+    );
 
     // Each worker computes against the θ snapshot it was last handed.
     let mut theta_given: Vec<Vec<f32>> = (0..m).map(|_| theta.clone()).collect();
@@ -242,7 +259,12 @@ pub(super) fn run_async(
         }
 
         if dx.shards_given[w].is_empty() {
-            // Transient zero-shard dispatch under churn: heartbeat only.
+            // Transient zero-shard dispatch under churn: heartbeat only —
+            // but a heartbeat still round-trips through the master, which
+            // hands out fresh parameters with it (the threaded master does
+            // the same), so the snapshot and version refresh.
+            theta_given[w].copy_from_slice(&theta);
+            version_given[w] = version;
             dx.dispatch(&mut core, w, now, cluster.master_overhead, &assignment[w]);
             continue;
         }

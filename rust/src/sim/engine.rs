@@ -153,11 +153,15 @@ impl EngineCore {
         }
     }
 
-    /// The engine's boundary event handler.  Scheduled elastic leave/join
-    /// events due at `iter` land here, in schedule order (a leave@k
-    /// followed by join@k nets out alive), each updating the failure
-    /// state, the eviction mask, and the membership view together; a due
-    /// shard-rebalance plan follows.  Returns whether a non-empty plan was
+    /// The engine's boundary event handler.  Every warm-up ramp advances
+    /// one step first; then scheduled elastic leave/join events due at
+    /// `iter` land, in schedule order (a leave@k followed by join@k nets
+    /// out alive), each updating the failure state, the eviction mask, and
+    /// the membership view together — a join that re-admits a down worker
+    /// also starts its warm-up ramp
+    /// ([`crate::cluster::ElasticRuntime::note_join`]); a due
+    /// shard-rebalance plan follows, seeing the post-event membership and
+    /// the ramped capacity weights.  Returns whether a non-empty plan was
     /// applied.
     pub fn boundary(
         &mut self,
@@ -165,6 +169,7 @@ impl EngineCore {
         schedule: &ElasticSchedule,
         rebalance_every: u64,
     ) -> Result<bool> {
+        self.elastic.tick_warmup();
         for ev in schedule.at(iter) {
             match ev.kind {
                 ElasticKind::Leave => {
@@ -173,6 +178,9 @@ impl EngineCore {
                     self.membership.mark_down(ev.worker);
                 }
                 ElasticKind::Join => {
+                    if !self.membership.is_alive(ev.worker) {
+                        self.elastic.note_join(ev.worker);
+                    }
                     self.evicted[ev.worker] = false;
                     self.fstates[ev.worker].force_rejoin();
                     self.membership.mark_alive(ev.worker);
@@ -259,5 +267,32 @@ mod tests {
         assert_eq!(core.membership.alive(), 4);
         assert_eq!(core.elastic.ownership.load(3), 1);
         assert_eq!(core.elastic.rebalances(), 2);
+    }
+
+    #[test]
+    fn boundary_ramps_warmup_on_scheduled_rejoin() {
+        use crate::cluster::ElasticSchedule;
+        let profiles: Vec<StragglerProfile> =
+            (0..4).map(|_| StragglerProfile::healthy(0.01)).collect();
+        let mut core = EngineCore::new(&profiles, 7, 0x51D, 1000);
+        core.elastic.configure_capacity(vec![1.0; 4], 2, true);
+        let schedule = ElasticSchedule::crash_and_rejoin(&[1], 1, 3);
+
+        core.boundary(0, &schedule, 1).unwrap();
+        assert_eq!(core.elastic.ramp(1), 1.0);
+        core.boundary(1, &schedule, 1).unwrap(); // leave
+        core.boundary(2, &schedule, 1).unwrap();
+        assert_eq!(core.elastic.ramp(1), 1.0, "eviction alone must not ramp");
+
+        // The join boundary starts the ramp at 1/(k+1); each subsequent
+        // boundary climbs one step until it saturates at 1.
+        core.boundary(3, &schedule, 1).unwrap();
+        assert!((core.elastic.ramp(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((core.elastic.latency_scale(1) - 3.0).abs() < 1e-12);
+        core.boundary(4, &schedule, 1).unwrap();
+        assert!((core.elastic.ramp(1) - 2.0 / 3.0).abs() < 1e-12);
+        core.boundary(5, &schedule, 1).unwrap();
+        assert_eq!(core.elastic.ramp(1), 1.0);
+        assert_eq!(core.elastic.latency_scale(1), 1.0);
     }
 }

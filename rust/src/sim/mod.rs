@@ -600,6 +600,102 @@ mod tests {
     }
 
     #[test]
+    fn weighted_rebalance_cuts_iteration_latency_on_skewed_hardware() {
+        // 2 of 4 workers at 0.25× capacity.  Capacity-weighted
+        // apportionment hands their shards to the fast pair (2 each), so
+        // the full-coverage barrier closes at 2·base instead of waiting
+        // 4·base for the slow pair — same shards folded in the same order,
+        // so θ is bit-identical; only *who* computes changed.
+        let p = tiny_problem(4);
+        let mk = |weighted: bool| {
+            let cluster = ClusterSpec {
+                workers: 4,
+                rebalance_every: 1,
+                weighted_rebalance: weighted,
+                ..ClusterSpec::default()
+            }
+            .with_capacity_tail(2, 0.25);
+            let cfg = base_cfg(&p)
+                .with_mode(SyncMode::Hybrid { gamma: 4 })
+                .with_iters(40);
+            let mut pool = p.native_pool();
+            run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+        };
+        let weighted = mk(true);
+        let unweighted = mk(false);
+        assert!(weighted.status.is_healthy());
+        assert!(unweighted.status.is_healthy());
+        // The weighted planner stripped the slow pair at the first
+        // boundary; the ablation kept the identity layout.
+        assert_eq!(weighted.shard_owners, vec![0, 1, 0, 1]);
+        assert_eq!(unweighted.shard_owners, vec![0, 1, 2, 3]);
+        // Full data coverage and zero abandonment in both runs…
+        for rep in [&weighted, &unweighted] {
+            for row in rep.recorder.rows() {
+                assert_eq!(row.included, 4, "iter {}", row.iter);
+            }
+            assert_eq!(rep.total_abandoned, 0);
+        }
+        // …so θ agrees bit-for-bit while the weighted run is ~2× faster.
+        assert_eq!(weighted.theta, unweighted.theta);
+        assert!(
+            weighted.total_time() < unweighted.total_time() * 0.6,
+            "weighted {:.3}s vs unweighted {:.3}s",
+            weighted.total_time(),
+            unweighted.total_time()
+        );
+    }
+
+    #[test]
+    fn warmup_ramp_removes_rejoin_latency_spike() {
+        // 2 of 6 workers leave@10 and rejoin@20 cold (6-boundary warm-up:
+        // their service time starts 7× dilated).  The legacy planner hands
+        // them a level load the moment they rejoin, so the γ=M barrier
+        // waits out a ~7·base straggler; the capacity-weighted planner
+        // ramps their share up with the warm-up, keeping the post-join
+        // iterations fast.
+        use crate::cluster::ElasticSchedule;
+        let p = tiny_problem(6);
+        let mk = |weighted: bool| {
+            let cluster = ClusterSpec {
+                workers: 6,
+                weighted_rebalance: weighted,
+                ..ClusterSpec::default()
+            }
+            .with_elastic(ElasticSchedule::crash_and_rejoin(&[4, 5], 10, 20), 1)
+            .with_warmup(6);
+            let cfg = base_cfg(&p)
+                .with_mode(SyncMode::Hybrid { gamma: 6 })
+                .with_iters(35);
+            let mut pool = p.native_pool();
+            run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+        };
+        let peak_post_join = |rep: &RunReport| -> f64 {
+            let rows = rep.recorder.rows();
+            let mut peak = 0.0f64;
+            for pair in rows.windows(2) {
+                if (20..30).contains(&pair[1].iter) {
+                    peak = peak.max(pair[1].time - pair[0].time);
+                }
+            }
+            peak
+        };
+        let weighted = mk(true);
+        let unweighted = mk(false);
+        assert!(weighted.status.is_healthy());
+        assert!(unweighted.status.is_healthy());
+        assert_eq!(weighted.rejoins, 2);
+        let spike = peak_post_join(&unweighted);
+        let ramped = peak_post_join(&weighted);
+        assert!(
+            spike > ramped * 1.5,
+            "rejoin spike not smoothed: unweighted peak {spike:.4}s, weighted {ramped:.4}s"
+        );
+        // Once warm, both layouts level back out to one shard per worker.
+        assert_eq!(weighted.shard_owners, unweighted.shard_owners);
+    }
+
+    #[test]
     fn smaller_gamma_gives_faster_iterations() {
         let p = tiny_problem(8);
         let cluster = ClusterSpec {

@@ -37,6 +37,7 @@ pub(crate) fn assemble(
         crashes: core.membership.crashes(),
         rejoins: core.membership.rejoins(),
         rebalances: core.elastic.rebalances(),
+        shard_owners: core.elastic.ownership.owners().to_vec(),
         net,
         mean_staleness,
         driver_secs: driver_start.elapsed().as_secs_f64(),

@@ -178,6 +178,14 @@ pub(super) fn run_sync(
     // the historical sync RNG stream family (bit-compatible with the
     // pre-refactor driver).
     let mut core = EngineCore::new(&profiles, cluster.seed, 0x51D, 1000);
+    // Capacity model: per-worker hardware weights, the scheduled-rejoin
+    // warm-up ramp, and the apportionment toggle.  The defaults (uniform,
+    // warmup 0, weighted) leave every legacy plan bit-for-bit intact.
+    core.elastic.configure_capacity(
+        cluster.capacity_vec(),
+        cluster.warmup_iters,
+        cluster.weighted_rebalance,
+    );
 
     let mut opt = cfg.optimizer.build();
     let mut tracker = ConvergenceTracker::new(cfg.stop.clone());
@@ -261,11 +269,24 @@ pub(super) fn run_sync(
 
         for w in 0..m {
             if matches!(events[w], FailureEvent::Healthy | FailureEvent::Rejoined) {
-                // Serial execution of owned shards; a worker that briefly
-                // owns no shards still reports (one base heartbeat),
-                // matching the threaded slave's `shards.len().max(1)`.
-                latency[w] = profiles[w].sample_latency(&mut core.delay_rngs[w])
-                    * assignment[w].len().max(1) as f64;
+                // A worker that currently owns no shards (capacity-weighted
+                // apportionment can strip slow or still-warming nodes; a
+                // stochastic `rejoin_after` revival can land one sweep
+                // after its shards were adopted) is not dispatched to at
+                // all — no roundtrip, no barrier slot — matching the
+                // threaded master, which skips its `Work` broadcast.  On
+                // every existing golden/parity trace (uniform weights, no
+                // stochastic revival) no alive worker is ever shard-less,
+                // so the legacy dispatch sequence is untouched.
+                if assignment[w].is_empty() {
+                    continue;
+                }
+                // Serial execution of owned shards, dilated by the warm-up
+                // ramp while the worker is cold (scale 1.0 once warm — the
+                // multiplication is bit-exact).
+                let per_shard = profiles[w].sample_latency(&mut core.delay_rngs[w]);
+                latency[w] =
+                    per_shard * core.elastic.latency_scale(w) * assignment[w].len() as f64;
             }
         }
         responders.clear();
@@ -459,10 +480,10 @@ pub(super) fn run_sync(
         core.heap.rebase(iter_latency + cluster.master_overhead);
 
         if included_shards.is_empty() {
-            // Only possible transiently under elastic churn: the γ slots
-            // were all taken by zero-shard workers.  Mirror the threaded
-            // driver (worker/mod.rs): no update, no convergence
-            // observation — just advance the clock.
+            // Defensive: shard-less workers are no longer dispatched, so
+            // every admitted responder carries shards — but mirror the
+            // threaded driver (worker/mod.rs) if it ever triggers: no
+            // update, no convergence observation — just advance the clock.
             carryover.clear();
             now += iter_latency + cluster.master_overhead;
             continue;

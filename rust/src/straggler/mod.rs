@@ -27,6 +27,13 @@ pub struct StragglerProfile {
     pub base_compute: f64,
     /// Chronic slowdown multiplier (1.0 = healthy node).
     pub slow_factor: f64,
+    /// Relative hardware capacity (1.0 = baseline): per-shard service time
+    /// scales by `1/capacity`, and the capacity-weighted rebalance planner
+    /// apportions shards proportionally to it (see `docs/ELASTIC.md`).
+    /// Unlike `slow_factor` — a *fault* the barrier tolerates — capacity is
+    /// a declared property of the hardware that work assignment should
+    /// respect.
+    pub capacity: f64,
     /// Stochastic extra delay added on top of compute.
     pub delay: DelayModel,
     /// Crash / transient-failure behaviour.
@@ -38,6 +45,7 @@ impl StragglerProfile {
         StragglerProfile {
             base_compute,
             slow_factor: 1.0,
+            capacity: 1.0,
             delay: DelayModel::None,
             failure: FailureModel::none(),
         }
@@ -45,7 +53,7 @@ impl StragglerProfile {
 
     /// Sample this worker's total latency for one iteration.
     pub fn sample_latency(&self, rng: &mut Pcg64) -> f64 {
-        self.base_compute * self.slow_factor + self.delay.sample(rng)
+        self.base_compute * self.slow_factor / self.capacity + self.delay.sample(rng)
     }
 }
 
@@ -68,5 +76,17 @@ mod tests {
         p.slow_factor = 5.0;
         let mut rng = Pcg64::seeded(1);
         assert!((p.sample_latency(&mut rng) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_dilates_service_time() {
+        let mut p = StragglerProfile::healthy(0.01);
+        p.capacity = 0.25;
+        let mut rng = Pcg64::seeded(1);
+        assert!((p.sample_latency(&mut rng) - 0.04).abs() < 1e-12);
+        // Unit capacity is the exact legacy latency (division by 1.0 is
+        // bit-exact, preserving every pre-capacity golden trajectory).
+        p.capacity = 1.0;
+        assert_eq!(p.sample_latency(&mut rng), 0.01);
     }
 }

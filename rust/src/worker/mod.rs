@@ -188,6 +188,11 @@ fn run_real_sync(
     // thread survives and is simply not broadcast to), so no extra
     // failure-state bookkeeping is needed in the event hook.
     let mut elastic = ElasticRuntime::new(&membership);
+    elastic.configure_capacity(
+        cluster.capacity_vec(),
+        cluster.warmup_iters,
+        cluster.weighted_rebalance,
+    );
     // Channel shim realizing the same per-message network fates as the
     // virtual driver's transport.
     let mut shim = NetShim::new(cluster.net.clone(), cluster.seed);
@@ -215,15 +220,29 @@ fn run_real_sync(
         // the next Work broadcast, so steady-state replies recycle their
         // buffers through the channel instead of allocating per message.
         let mut free: Vec<Vec<f32>> = Vec::new();
+        // Who actually got a Work this iteration — a shard-less worker is
+        // skipped entirely, so a crash notice from it must not shrink the
+        // deliverable count it never joined.
+        let mut dispatched = vec![false; m];
 
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
             // Elastic membership events land at this boundary, in schedule
             // order, followed by any due rebalance plan — the same
             // primitives the virtual engine's boundary handler uses, so
-            // the drivers cannot drift on when a plan is applied.
+            // the drivers cannot drift on when a plan is applied.  Warm-up
+            // ramps advance first (the engine's boundary handler does the
+            // same), and a join that re-admits a down worker starts its
+            // ramp.
+            elastic.tick_warmup();
             for ev in cluster.elastic.at(iter) {
-                apply_master_event(ev, &mut membership, &thread_crashed, iter);
+                let was_down = !membership.is_alive(ev.worker);
+                if apply_master_event(ev, &mut membership, &thread_crashed, iter)
+                    && ev.kind == ElasticKind::Join
+                    && was_down
+                {
+                    elastic.note_join(ev.worker);
+                }
             }
             let rebalanced =
                 elastic.maybe_rebalance(iter, cluster.rebalance_every, &membership)?;
@@ -236,8 +255,20 @@ fn run_real_sync(
             let mut assignment = elastic.ownership.grouped();
             let stats_iter_start = shim.stats();
             let mut deliverable = 0usize;
+            dispatched.fill(false);
             for w in 0..m {
                 if membership.is_alive(w) {
+                    // A shard-less worker (stripped by capacity-weighted
+                    // apportionment, or freshly revived before a boundary
+                    // re-plan hands it work back) gets no Work at all — no
+                    // roundtrip, no barrier slot — matching the virtual
+                    // driver.  On every existing golden/parity trace no
+                    // alive worker is ever shard-less, so the legacy
+                    // broadcast (and shim realization) sequence is
+                    // untouched.
+                    if assignment[w].is_empty() {
+                        continue;
+                    }
                     // Realize this worker's roundtrip.  A dropped downlink
                     // suppresses the send; otherwise the injected network
                     // latency rides inside the message for the slave to
@@ -258,10 +289,12 @@ fn run_real_sync(
                             theta: Arc::clone(&theta_arc),
                             shards: shards_w,
                             net_delay,
+                            compute_scale: elastic.latency_scale(w),
                             recycle,
                         })
                         .is_ok()
                     {
+                        dispatched[w] = true;
                         if reply_delivered {
                             deliverable += 1;
                         }
@@ -358,7 +391,7 @@ fn run_real_sync(
                                 // (whether it died on this broadcast or an
                                 // older one); if it was counted
                                 // deliverable, close on one fewer arrival.
-                                if shim.reply_expected(worker, iter) {
+                                if dispatched[worker] && shim.reply_expected(worker, iter) {
                                     deliverable = deliverable.saturating_sub(1);
                                 }
                                 let new_target = match (&cfg.mode, gamma) {
@@ -501,6 +534,7 @@ fn run_real_sync(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: elastic.rebalances(),
+        shard_owners: elastic.ownership.owners().to_vec(),
         net: shim.stats(),
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
@@ -572,6 +606,11 @@ fn run_real_async(
     // virtual engine; scheduled events land at update-count boundaries
     // (iteration k ≈ update k·M, the sync-iteration equivalent).
     let mut elastic = ElasticRuntime::new(&membership);
+    elastic.configure_capacity(
+        cluster.capacity_vec(),
+        cluster.warmup_iters,
+        cluster.weighted_rebalance,
+    );
     let mut evicted = vec![false; m];
     let mut thread_crashed = vec![false; m];
     // One Work in flight per alive worker; a Join while the pre-leave
@@ -582,10 +621,20 @@ fn run_real_async(
 
     std::thread::scope(|scope| -> Result<()> {
         let profiles = cluster.profiles();
-        // Iteration-0 boundary precedes the opening dispatches.
+        // Iteration-0 boundary precedes the opening dispatches.  The
+        // warm-up tick mirrors the virtual engine: its boundary handler
+        // runs at update-count 0 only when events are due or rebalancing
+        // is on.
+        if cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0 {
+            elastic.tick_warmup();
+        }
         for ev in cluster.elastic.at(0) {
+            let was_down = !membership.is_alive(ev.worker);
             if apply_master_event(ev, &mut membership, &thread_crashed, 0) {
                 evicted[ev.worker] = ev.kind == ElasticKind::Leave;
+                if ev.kind == ElasticKind::Join && was_down {
+                    elastic.note_join(ev.worker);
+                }
             }
         }
         elastic.maybe_rebalance(0, cluster.rebalance_every, &membership)?;
@@ -608,6 +657,7 @@ fn run_real_async(
                     theta: Arc::new(theta.clone()),
                     shards: Arc::new(assignment[w].clone()),
                     net_delay,
+                    compute_scale: elastic.latency_scale(w),
                     recycle: Vec::new(),
                 })
                 .expect("fresh channel");
@@ -633,9 +683,14 @@ fn run_real_async(
                 if cluster.elastic.at(b).next().is_none() && cluster.rebalance_every == 0 {
                     continue;
                 }
+                elastic.tick_warmup();
                 for ev in cluster.elastic.at(b) {
+                    let was_down = !membership.is_alive(ev.worker);
                     if apply_master_event(ev, &mut membership, &thread_crashed, b) {
                         evicted[ev.worker] = ev.kind == ElasticKind::Leave;
+                        if ev.kind == ElasticKind::Join && was_down {
+                            elastic.note_join(ev.worker);
+                        }
                     }
                 }
                 if elastic.maybe_rebalance(b, cluster.rebalance_every, &membership)? {
@@ -669,6 +724,7 @@ fn run_real_async(
                         theta: Arc::new(theta.clone()),
                         shards: Arc::new(assignment[w].clone()),
                         net_delay,
+                        compute_scale: elastic.latency_scale(w),
                         recycle: Vec::new(),
                     });
                     in_flight[w] = true;
@@ -714,6 +770,7 @@ fn run_real_async(
                             theta: Arc::new(theta.clone()),
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
+                            compute_scale: elastic.latency_scale(worker),
                             recycle: shards.into_iter().map(|sg| sg.grad).collect(),
                         });
                         in_flight[worker] = true;
@@ -740,6 +797,7 @@ fn run_real_async(
                             theta: Arc::new(theta.clone()),
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
+                            compute_scale: elastic.latency_scale(worker),
                             recycle: shards.into_iter().map(|sg| sg.grad).collect(),
                         });
                         in_flight[worker] = true;
@@ -755,7 +813,10 @@ fn run_real_async(
                     // fold arithmetic.
                     let k = shards.len();
                     if k == 0 {
-                        // Zero-shard heartbeat under churn: redispatch.
+                        // Zero-shard heartbeat under churn: redispatch with
+                        // fresh parameters — and account the fresh snapshot,
+                        // like every other fresh-θ redispatch, so the next
+                        // real reply's staleness counts from here.
                         let net_delay = plan_async_roundtrip(
                             &cluster.net,
                             net_ideal,
@@ -765,11 +826,13 @@ fn run_real_async(
                             &mut reply_ok,
                             &mut net_stats,
                         );
+                        version_given[worker] = version;
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
                             theta: Arc::new(theta.clone()),
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
+                            compute_scale: elastic.latency_scale(worker),
                             recycle: Vec::new(),
                         });
                         in_flight[worker] = true;
@@ -826,6 +889,7 @@ fn run_real_async(
                         theta: Arc::new(theta.clone()),
                         shards: Arc::new(assignment[worker].clone()),
                         net_delay,
+                        compute_scale: elastic.latency_scale(worker),
                         recycle,
                     });
                     in_flight[worker] = true;
@@ -895,6 +959,7 @@ fn run_real_async(
         crashes: membership.crashes(),
         rejoins: membership.rejoins(),
         rebalances: elastic.rebalances(),
+        shard_owners: elastic.ownership.owners().to_vec(),
         net: net_stats,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)

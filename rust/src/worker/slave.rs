@@ -42,11 +42,11 @@ pub fn worker_main(
     let mut spares: Vec<Vec<f32>> = Vec::new();
 
     while let Ok(msg) = rx.recv() {
-        let (mut iter, mut theta, mut shards, mut net_delay) = match msg {
+        let (mut iter, mut theta, mut shards, mut net_delay, mut compute_scale) = match msg {
             MasterMsg::Shutdown => break,
-            MasterMsg::Work { iter, theta, shards, net_delay, recycle } => {
+            MasterMsg::Work { iter, theta, shards, net_delay, compute_scale, recycle } => {
                 spares.extend(recycle);
-                (iter, theta, shards, net_delay)
+                (iter, theta, shards, net_delay, compute_scale)
             }
         };
         // A straggling slave may find newer broadcasts already queued; jump
@@ -64,6 +64,7 @@ pub fn worker_main(
                     theta: t2,
                     shards: s2,
                     net_delay: n2,
+                    compute_scale: c2,
                     recycle,
                 } => {
                     spares.extend(recycle);
@@ -71,6 +72,7 @@ pub fn worker_main(
                     theta = t2;
                     shards = s2;
                     net_delay = n2;
+                    compute_scale = c2;
                 }
             }
         }
@@ -94,15 +96,25 @@ pub fn worker_main(
             FailureEvent::Down | FailureEvent::Rejoined | FailureEvent::Healthy => {}
         }
 
-        // Injected straggle: chronic slow factor applies to the base compute
+        // Injected straggle: chronic slow factor, capacity dilation, and
+        // the master-planned warm-up scale apply to the base compute
         // budget, stochastic delay on top (see DESIGN.md §3).  Both scale
         // with the number of assigned shards (serial execution), matching
         // the virtual driver's `latency × load` model.  The master-planned
         // network delay rides on top, un-scaled: one roundtrip per report.
-        let extra = (profile.base_compute * (profile.slow_factor - 1.0).max(0.0)
-            + profile.delay.sample(&mut delay_rng))
-            * shards.len().max(1) as f64
-            + net_delay;
+        // A zero-shard assignment is a control-plane keep-alive: flat base
+        // cost, no compute scaling, no delay draw — mirroring the virtual
+        // async heartbeat (the sync master never dispatches shard-less
+        // workers at all).
+        let extra = if shards.is_empty() {
+            profile.base_compute + net_delay
+        } else {
+            (profile.base_compute
+                * (profile.slow_factor * compute_scale / profile.capacity - 1.0).max(0.0)
+                + profile.delay.sample(&mut delay_rng) * compute_scale)
+                * shards.len() as f64
+                + net_delay
+        };
 
         compute.retain_shards(&shards);
         let t0 = Instant::now();

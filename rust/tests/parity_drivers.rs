@@ -165,6 +165,94 @@ fn parity_straggler_trace_same_abandonment_decisions() {
 }
 
 #[test]
+fn parity_mixed_capacity_join_same_ownership_timeline_and_counts() {
+    // A 0.25× worker leaves at iteration 4 and rejoins at 8 with a
+    // 3-boundary warm-up ramp, capacity-weighted rebalancing on.  Both
+    // drivers must realize the *same ownership timeline* — the shard moves
+    // through the same owners at the same boundaries, driven by the shared
+    // weighted planner and warm-up state — and agree on every admission
+    // count and on θ.  The timeline is sampled at two cuts: mid-ramp
+    // (iters = 10, the rejoiner still shard-less) and after the ramp
+    // (iters = 16, the shard handed back).
+    let m = 4;
+    let p = problem(m);
+    let mk_cluster = || {
+        ClusterSpec {
+            workers: m,
+            base_compute: 0.005,
+            // Deterministic, well-separated per-worker latencies; worker
+            // 3's 0.25× capacity gives it a 4×-base service time.
+            slow_nodes: vec![(1, 2.0), (2, 3.0)],
+            capacities: vec![(3, 0.25)],
+            rebalance_every: 1,
+            seed: 35,
+            ..ClusterSpec::default()
+        }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[3], 4, 8), 1)
+        .with_warmup(3)
+    };
+    let mk_cfg = |iters: u64| {
+        RunConfig {
+            mode: SyncMode::Hybrid { gamma: m },
+            optimizer: OptimizerKind::sgd(0.8),
+            loss_form: LossForm::krr(p.spec.lambda),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(iters)
+    };
+
+    // Mid-ramp cut: the rejoiner's warm-up weight is still too small for
+    // the apportionment to hand its shard back, so shard 3 sits on the
+    // adopter (worker 0) in both drivers.
+    let (virt_mid, real_mid) = run_both(&p, &mk_cluster(), &mk_cfg(10));
+    assert_eq!(virt_mid.shard_owners, vec![0, 1, 2, 0]);
+    assert_eq!(real_mid.shard_owners, vec![0, 1, 2, 0]);
+    assert_eq!(virt_mid.rebalances, 1);
+    assert_eq!(real_mid.rebalances, 1);
+
+    // Full run: the ramp saturates at boundary 11 and the weighted planner
+    // hands shard 3 back to its warmed owner.
+    let (virt, real) = run_both(&p, &mk_cluster(), &mk_cfg(16));
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+    assert_eq!(virt.shard_owners, vec![0, 1, 2, 3]);
+    assert_eq!(real.shard_owners, vec![0, 1, 2, 3]);
+    assert_eq!(virt.rebalances, 2);
+    assert_eq!(real.rebalances, 2);
+    assert_eq!(virt.crashes, 1);
+    assert_eq!(real.crashes, 1);
+    assert_eq!(virt.rejoins, 1);
+    assert_eq!(real.rejoins, 1);
+
+    // γ = M with every responder included: no abandons, no stales — and
+    // the drivers agree on every per-iteration decision.
+    assert_eq!(virt.total_abandoned, 0);
+    assert_eq!(real.total_abandoned, 0);
+    let virt_stale: usize = virt.recorder.rows().iter().map(|r| r.stale).sum();
+    let real_stale: usize = real.recorder.rows().iter().map(|r| r.stale).sum();
+    assert_eq!(virt_stale, real_stale);
+    assert_eq!(virt.total_contributions, real.total_contributions);
+    assert_eq!(virt.recorder.len(), real.recorder.len());
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.iter, rr.iter);
+        assert_eq!(
+            rv.included, rr.included,
+            "iter {}: virtual included {} shards, real {}",
+            rv.iter, rv.included, rr.included
+        );
+        assert_eq!(rv.alive, rr.alive, "iter {}", rv.iter);
+        // Every shard keeps contributing through the whole churn cycle:
+        // the whole point of adopting + ramped give-back.
+        assert_eq!(rv.included, m, "iter {}", rv.iter);
+    }
+
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
+#[test]
 fn parity_ideal_net_reports_zero_perturbation() {
     // The default NetSpec is ideal: both drivers must report clean message
     // accounting (nothing dropped or duplicated) and identical send counts

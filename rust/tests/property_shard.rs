@@ -2,15 +2,21 @@
 //! rebalancing (own helper — proptest is not in the offline vendor set).
 //!
 //! The contract every rebalance plan must honour:
-//! * **conservation** — the total row count across workers is unchanged;
+//! * **conservation** — the total row count across workers is unchanged,
+//!   and with nobody alive the unadoptable shards are surfaced in
+//!   `RebalancePlan::orphans` rather than silently forgotten;
 //! * **exclusivity** — no row (shard) is owned by two workers;
 //! * **liveness** — after applying the plan, every owner is alive
 //!   (whenever at least one worker is);
-//! * **balance** — alive loads differ by at most one shard;
+//! * **balance** — alive loads differ by at most one shard (uniform
+//!   weights) / by less than one from the fractional capacity quota
+//!   (weighted largest-remainder apportionment);
 //! * **identity** — `split_even`'s layout round-trips through rebalance to
-//!   itself when membership is unchanged.
+//!   itself when membership is unchanged;
+//! * **uniform equivalence** — any uniform weight vector reproduces the
+//!   legacy plan exactly, move lists included.
 
-use hybriditer::data::{plan_rebalance, OwnershipMap};
+use hybriditer::data::{plan_rebalance, plan_rebalance_weighted, OwnershipMap};
 use hybriditer::util::proptest::check;
 use hybriditer::util::rng::Pcg64;
 
@@ -125,6 +131,119 @@ fn prop_rebalance_is_stable_fixpoint() {
         let again = plan_rebalance(&map, &alive);
         if !again.is_empty() {
             return Err(format!("second plan has {} moves", again.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Draw a per-worker weight vector from a small capacity palette.
+fn random_weights(rng: &mut Pcg64, workers: usize) -> Vec<f64> {
+    const PALETTE: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+    (0..workers)
+        .map(|_| PALETTE[rng.below(PALETTE.len() as u64) as usize])
+        .collect()
+}
+
+#[test]
+fn prop_weighted_conserves_rows_owners_alive_quota_bound() {
+    check("weighted_conservation_liveness_quota", 400, |rng| {
+        let (mut map, alive) = random_state(rng);
+        let weights = random_weights(rng, map.workers());
+        let plan = plan_rebalance_weighted(&map, &alive, &weights);
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        check_partition(&map)?;
+        let alive_workers: Vec<usize> =
+            (0..map.workers()).filter(|&w| alive[w]).collect();
+        if alive_workers.is_empty() {
+            if !plan.is_empty() {
+                return Err("plan non-empty with everyone dead".into());
+            }
+            return Ok(());
+        }
+        for s in 0..map.shards() {
+            if !alive[map.owner(s)] {
+                return Err(format!("shard {s} owned by dead worker {}", map.owner(s)));
+            }
+        }
+        // Largest-remainder bound: every alive load is within one of its
+        // fractional quota.
+        let total: f64 = alive_workers.iter().map(|&w| weights[w]).sum();
+        for &w in &alive_workers {
+            let quota = map.shards() as f64 * weights[w] / total;
+            let load = map.load(w) as f64;
+            if (load - quota).abs() >= 1.0 {
+                return Err(format!(
+                    "worker {w}: load {load} vs quota {quota:.3} (weights {weights:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_uniform_weights_reproduce_legacy_plan() {
+    // Any uniform weight vector must produce *exactly* the legacy plan —
+    // same moves in the same order — so homogeneous clusters cannot drift
+    // from the pre-capacity goldens.
+    check("weighted_uniform_equals_legacy", 300, |rng| {
+        let (map, alive) = random_state(rng);
+        let c = [0.25, 1.0, 3.5][rng.below(3) as usize];
+        let weights = vec![c; map.workers()];
+        let legacy = plan_rebalance(&map, &alive);
+        let weighted = plan_rebalance_weighted(&map, &alive, &weights);
+        if legacy != weighted {
+            return Err(format!("plans diverged: {legacy:?} vs {weighted:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_rebalance_is_stable_fixpoint() {
+    check("weighted_fixpoint", 300, |rng| {
+        let (mut map, alive) = random_state(rng);
+        let weights = random_weights(rng, map.workers());
+        let plan = plan_rebalance_weighted(&map, &alive, &weights);
+        map.apply(&plan).map_err(|e| e.to_string())?;
+        let again = plan_rebalance_weighted(&map, &alive, &weights);
+        if !again.is_empty() {
+            return Err(format!("second plan has {} moves", again.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_orphans_surface_exactly_the_unadoptable_shards() {
+    // Conservation across the dead-owner set: every shard owned by a dead
+    // worker is either moved (someone is alive) or listed in `orphans`
+    // (nobody is) — and never both.
+    check("orphan_conservation", 300, |rng| {
+        let (map, alive) = random_state(rng);
+        let dead_owned: Vec<usize> =
+            (0..map.shards()).filter(|&s| !alive[map.owner(s)]).collect();
+        let plan = plan_rebalance(&map, &alive);
+        let anyone_alive = alive.iter().any(|&a| a);
+        if anyone_alive {
+            if !plan.orphans.is_empty() {
+                return Err(format!("orphans {:?} with workers alive", plan.orphans));
+            }
+            for &s in &dead_owned {
+                if !plan.moves.iter().any(|m| m.shard == s) {
+                    return Err(format!("dead-owned shard {s} neither moved nor orphaned"));
+                }
+            }
+        } else {
+            if !plan.moves.is_empty() {
+                return Err("moves with nobody alive".into());
+            }
+            if plan.orphans != dead_owned {
+                return Err(format!(
+                    "orphans {:?} != dead-owned {:?}",
+                    plan.orphans, dead_owned
+                ));
+            }
         }
         Ok(())
     });
