@@ -43,8 +43,16 @@ const GAP_FRACTION: f64 = 0.1; // target: 90% of the loss gap closed
 /// Workers behind a slow uplink in the stale sweep (the slowest quarter).
 const SLOW_UP_WORKERS: usize = M / 4;
 
-fn run_once(problem: &KrrProblem, gamma: usize, drop: f64, up_lat: f64, seed: u64) -> RunReport {
+fn run_once(
+    problem: &KrrProblem,
+    gamma: usize,
+    drop: f64,
+    up_lat: f64,
+    block_size: usize,
+    seed: u64,
+) -> RunReport {
     let mut net = if drop > 0.0 { NetSpec::lossy(drop) } else { NetSpec::ideal() };
+    net.block_size = block_size;
     if up_lat > 0.0 {
         // Per-direction asymmetry: the tail quarter's Grad replies crawl
         // while their Work broadcasts stay instant.
@@ -111,7 +119,7 @@ fn sweep_cells(engine: &SweepEngine, points: &[(f64, usize, f64)], target: f64) 
         let mut stale = 0u64;
         let mut abandon = 0.0;
         for seed in 0..SEEDS {
-            let rep = run_once(&problem, gamma, drop, up_lat, seed);
+            let rep = run_once(&problem, gamma, drop, up_lat, 0, seed);
             match rep.recorder.iters_to_loss(target) {
                 Some(it) => {
                     iters_sum += it as f64;
@@ -158,7 +166,7 @@ fn main() {
     let problem = engine.cache().get(&spec);
 
     // The clean γ=M reference defines the absolute loss target.
-    let reference = run_once(&problem, M, 0.0, 0.0, 0);
+    let reference = run_once(&problem, M, 0.0, 0.0, 0, 0);
     let start_loss = reference
         .recorder
         .rows()
@@ -204,6 +212,96 @@ fn main() {
         .collect();
     let cells = sweep_cells(&engine, &points, target);
     let stale_cells = sweep_cells(&engine, &stale_points, target);
+
+    // Block-admission sweep: block granularity × drop rate at γ = 3M/4.
+    // `block_size = 0` is the whole-reply baseline; smaller blocks mean a
+    // lossy reply still lands most of its coordinates, so time-to-target
+    // should improve monotonically with granularity at a fixed drop rate.
+    struct BlockCell {
+        drop: f64,
+        block_size: usize,
+        n_blocks: usize,
+        iters: f64,
+        time: f64,
+        reached: u64,
+        blocks_delivered: u64,
+        blocks_dropped: u64,
+        stale_blocks: u64,
+    }
+    let g_blk = M * 3 / 4;
+    let dim = problem.dim();
+    let mut block_points: Vec<(f64, usize)> = Vec::new();
+    for &drop in &[0.1, 0.2, 0.3] {
+        for &bs in &[0usize, 16, 8, 4, 2] {
+            block_points.push((drop, bs));
+        }
+    }
+    let block_spec = KrrProblemSpec::small().with_machines(M);
+    let block_cells: Vec<BlockCell> = engine.run(&block_points, |cache, &(drop, bs)| {
+        let problem = cache.get(&block_spec);
+        let mut iters_sum = 0.0;
+        let mut time_sum = 0.0;
+        let mut reached = 0u64;
+        let mut blocks_delivered = 0u64;
+        let mut blocks_dropped = 0u64;
+        let mut stale_blocks = 0u64;
+        for seed in 0..SEEDS {
+            let rep = run_once(&problem, g_blk, drop, 0.0, bs, seed);
+            match rep.recorder.iters_to_loss(target) {
+                Some(it) => {
+                    iters_sum += it as f64;
+                    time_sum += rep.recorder.time_to_loss(target).unwrap_or(0.0);
+                    reached += 1;
+                }
+                None => {
+                    iters_sum += ITERS as f64;
+                    time_sum += rep.total_time();
+                }
+            }
+            blocks_delivered += rep.net.blocks_delivered;
+            blocks_dropped += rep.net.blocks_dropped;
+            stale_blocks += rep.stale_blocks;
+        }
+        let n = SEEDS as f64;
+        BlockCell {
+            drop,
+            block_size: bs,
+            n_blocks: NetSpec { block_size: bs, ..NetSpec::ideal() }.n_blocks(dim),
+            iters: iters_sum / n,
+            time: time_sum / n,
+            reached,
+            blocks_delivered,
+            blocks_dropped,
+            stale_blocks,
+        }
+    });
+    let mut block_table = Table::new(
+        "F4 block admission: time-to-target vs block granularity",
+        &[
+            "drop_prob",
+            "block_size",
+            "n_blocks",
+            "iters_to_target",
+            "time_to_target_s",
+            "reached",
+            "blocks_delivered",
+            "blocks_dropped",
+            "stale_blocks",
+        ],
+    );
+    for c in &block_cells {
+        block_table.row(vec![
+            f(c.drop, 2),
+            c.block_size.to_string(),
+            c.n_blocks.to_string(),
+            f(c.iters, 1),
+            f(c.time, 3),
+            format!("{}/{}", c.reached, SEEDS),
+            c.blocks_delivered.to_string(),
+            c.blocks_dropped.to_string(),
+            c.stale_blocks.to_string(),
+        ]);
+    }
     for cell in cells.iter().chain(stale_cells.iter()) {
         table.row(vec![
             f(cell.drop, 2),
@@ -221,6 +319,8 @@ fn main() {
     }
     table.print();
     table.save_csv("f4_network_sweep").unwrap();
+    block_table.print();
+    block_table.save_csv("f4_block_sweep").unwrap();
 
     // Headline trajectory point: how much a 10% drop rate inflates
     // iterations-to-target at γ = 3M/4, and how many admissions go stale
@@ -245,6 +345,37 @@ fn main() {
             c.dropped
         )
     };
+    // Block-sweep headline: whole-reply vs finest-grain admission at the
+    // 20% drop rate.
+    let blk_whole = block_cells
+        .iter()
+        .find(|c| c.drop == 0.2 && c.block_size == 0)
+        .expect("whole-reply block cell");
+    let blk_fine = block_cells
+        .iter()
+        .find(|c| c.drop == 0.2 && c.block_size == 2)
+        .expect("finest block cell");
+    let block_speedup =
+        if blk_fine.time > 0.0 { blk_whole.time / blk_fine.time } else { f64::NAN };
+    let block_json: Vec<String> = block_cells
+        .iter()
+        .map(|c| {
+            format!(
+                "    {{\"drop_prob\": {}, \"block_size\": {}, \"n_blocks\": {}, \
+                 \"iters_to_target\": {:.1}, \"time_to_target_s\": {:.4}, \"reached\": {}, \
+                 \"blocks_delivered\": {}, \"blocks_dropped\": {}, \"stale_blocks\": {}}}",
+                c.drop,
+                c.block_size,
+                c.n_blocks,
+                c.iters,
+                c.time,
+                c.reached,
+                c.blocks_delivered,
+                c.blocks_dropped,
+                c.stale_blocks
+            )
+        })
+        .collect();
     let points_json: Vec<String> = cells.iter().map(&cell_json).collect();
     let stale_json: Vec<String> = stale_cells.iter().map(&cell_json).collect();
     let json = format!(
@@ -252,21 +383,27 @@ fn main() {
          \"seeds\": {SEEDS},\n  \"target_loss\": {target:.6},\n  \"headline\": {{\n    \
          \"gamma\": {g_ref},\n    \"clean_iters_to_target\": {:.1},\n    \
          \"drop10_iters_to_target\": {:.1},\n    \"iteration_inflation\": {inflation:.3},\n    \
-         \"slow_uplink_stale\": {},\n    \"slow_uplink_s\": {}\n  }},\n  \"points\": [\n{}\n  ],\n  \
-         \"stale_sweep\": [\n{}\n  ]\n}}\n",
+         \"slow_uplink_stale\": {},\n    \"slow_uplink_s\": {},\n    \
+         \"block_whole_time_s\": {:.4},\n    \"block_fine_time_s\": {:.4},\n    \
+         \"block_speedup\": {block_speedup:.3}\n  }},\n  \"points\": [\n{}\n  ],\n  \
+         \"stale_sweep\": [\n{}\n  ],\n  \"block_sweep\": [\n{}\n  ]\n}}\n",
         clean.iters,
         lossy.iters,
         stale_head.stale,
         stale_head.up_lat,
+        blk_whole.time,
+        blk_fine.time,
         points_json.join(",\n"),
-        stale_json.join(",\n")
+        stale_json.join(",\n"),
+        block_json.join(",\n")
     );
     std::fs::create_dir_all("results").unwrap();
     std::fs::write("results/BENCH_f4_network.json", json).unwrap();
     println!(
         "\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2}); \
-         {} stale admissions at a {}s tail uplink",
-        clean.iters, lossy.iters, stale_head.stale, stale_head.up_lat
+         {} stale admissions at a {}s tail uplink; block admission x{block_speedup:.2} \
+         time-to-target at 20% drop ({}-wide blocks vs whole replies)",
+        clean.iters, lossy.iters, stale_head.stale, stale_head.up_lat, blk_fine.block_size
     );
     println!("trajectory point -> results/BENCH_f4_network.json");
 

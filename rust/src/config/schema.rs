@@ -48,6 +48,8 @@
 //! slow_link = 3         # one worker behind a chronically slow link...
 //! slow_link_secs = 0.05 # ...with this constant one-way latency
 //! salt = 0              # extra seed salt for the per-message streams
+//! block_size = 0        # gradient block size in f32s (0 = whole-reply)
+//! min_block_frac = 0.0  # drop replies delivering below this block fraction
 //!
 //! [optimizer]
 //! kind = "sgd"          # sgd | momentum | nesterov | adam | lbfgs | cg
@@ -242,6 +244,8 @@ impl ExperimentConfig {
             overrides,
             partitions: NetSpec::parse_partitions(v.opt_str("net.partitions", ""))?,
             salt: v.opt_u64("net.salt", 0),
+            block_size: v.opt_usize("net.block_size", 0),
+            min_block_frac: v.opt_f64("net.min_block_frac", 0.0),
         };
         net.validate(machines)?;
 
@@ -599,6 +603,29 @@ up_delay_secs = 0.04
     fn net_defaults_to_ideal() {
         let cfg = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
         assert!(cfg.cluster.net.is_ideal());
+        assert_eq!(cfg.cluster.net.block_size, 0);
+        assert_eq!(cfg.cluster.net.min_block_frac, 0.0);
+    }
+
+    #[test]
+    fn net_block_admission_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\ndrop_prob = 0.1\nblock_size = 32\nmin_block_frac = 0.25",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.net.block_size, 32);
+        assert_eq!(cfg.cluster.net.min_block_frac, 0.25);
+        // Blocking alone does not perturb the ideal-net fast path.
+        let ideal = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\nblock_size = 32",
+        )
+        .unwrap();
+        assert!(ideal.cluster.net.is_ideal());
+        // min_block_frac is a probability-like fraction.
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\nmin_block_frac = 1.5",
+        )
+        .is_err());
     }
 
     #[test]

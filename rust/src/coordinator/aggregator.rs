@@ -1,6 +1,15 @@
 //! Gradient aggregation policies (Algorithm 2 line 3 and ablations).
+//!
+//! With the transport's block admission active, a contribution may carry
+//! only a subset of its gradient's blocks ([`BlockSet`]): the fold weights
+//! such partial replies by their delivered fraction and adds each of them
+//! only over the coordinate ranges that actually arrived — the bounded
+//! perturbation model of Yu et al. (arXiv:1810.07766).  A full set
+//! multiplies the weight by exactly `1.0` and folds the whole slice, so
+//! pre-block behaviour is reproduced bit for bit.
 
 use crate::math::vec_ops;
+use crate::net::BlockSet;
 
 /// How included gradients combine into the master's update direction.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -23,6 +32,16 @@ pub struct Contribution<'a> {
     pub examples: usize,
     /// 0 = computed for this iteration, k = k iterations old.
     pub staleness: u64,
+    /// Which gradient blocks the network delivered.  [`BlockSet::full`]
+    /// (any count) folds the whole vector exactly as the pre-block model.
+    pub blocks: BlockSet,
+}
+
+impl<'a> Contribution<'a> {
+    /// A fully-delivered contribution — the legacy whole-gradient case.
+    pub fn whole(grad: &'a [f32], examples: usize, staleness: u64) -> Contribution<'a> {
+        Contribution { grad, examples, staleness, blocks: BlockSet::full(1) }
+    }
 }
 
 /// Aggregate a contribution stream into `out` without materializing a
@@ -56,8 +75,21 @@ pub fn aggregate_iter<'a>(
             }
             AggregatorKind::StalenessDamped { rho } => rho.powi(c.staleness as i32),
         };
+        // Partial deliveries fold at fraction-scaled weight; a full set's
+        // fraction is exactly 1.0, leaving the legacy arithmetic intact.
+        let w = w * c.blocks.fraction();
         if w > 0.0 {
-            vec_ops::axpy(w as f32, c.grad, out);
+            if c.blocks.is_full() {
+                vec_ops::axpy(w as f32, c.grad, out);
+            } else {
+                for b in 0..c.blocks.len() {
+                    if !c.blocks.contains(b) {
+                        continue;
+                    }
+                    let (lo, hi) = c.blocks.range(b, c.grad.len());
+                    vec_ops::axpy(w as f32, &c.grad[lo..hi], &mut out[lo..hi]);
+                }
+            }
             wsum += w;
         }
     }
@@ -78,11 +110,7 @@ mod tests {
     use super::*;
 
     fn c(grad: &[f32], staleness: u64) -> Contribution<'_> {
-        Contribution {
-            grad,
-            examples: 10,
-            staleness,
-        }
+        Contribution::whole(grad, 10, staleness)
     }
 
     #[test]
@@ -105,8 +133,8 @@ mod tests {
         let g1 = vec![1.0];
         let g2 = vec![4.0];
         let contribs = [
-            Contribution { grad: &g1, examples: 30, staleness: 0 },
-            Contribution { grad: &g2, examples: 10, staleness: 0 },
+            Contribution::whole(&g1, 30, 0),
+            Contribution::whole(&g2, 10, 0),
         ];
         let mut out = vec![0.0];
         aggregate(AggregatorKind::ExampleWeighted, &contribs, &mut out);
@@ -135,5 +163,71 @@ mod tests {
         let mut out = vec![0.0; 2];
         aggregate(AggregatorKind::Mean, &[c(&g, 0)], &mut out);
         assert_eq!(out, g);
+    }
+
+    #[test]
+    fn full_block_set_matches_whole_fold_bitwise() {
+        // A full 4-block mask must produce the identical f32 sequence the
+        // whole-gradient fold does (fraction 1.0 multiplies exactly).
+        let g1 = vec![0.3, -1.7, 2.9, 0.01, 5.5, -0.125, 8.0, 1e-3];
+        let g2 = vec![-2.2, 0.4, 1.1, 3.0, -0.7, 0.9, -4.4, 2.5];
+        let mut whole = vec![0.0f32; 8];
+        aggregate(AggregatorKind::Mean, &[c(&g1, 0), c(&g2, 0)], &mut whole);
+        let mut blocked = vec![0.0f32; 8];
+        let full4 = BlockSet::full(4);
+        aggregate(
+            AggregatorKind::Mean,
+            &[
+                Contribution { grad: &g1, examples: 10, staleness: 0, blocks: full4 },
+                Contribution { grad: &g2, examples: 10, staleness: 0, blocks: full4 },
+            ],
+            &mut blocked,
+        );
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&whole), bits(&blocked));
+    }
+
+    #[test]
+    fn partial_blocks_fold_only_delivered_ranges() {
+        // Two 4-block contributions over dim 8 (2 coords per block); the
+        // second lost blocks 1 and 3.
+        let g1 = vec![1.0f32; 8];
+        let g2 = vec![3.0f32; 8];
+        let part = BlockSet::empty(4).with(0).with(2);
+        let mut out = vec![0.0f32; 8];
+        let w = aggregate(
+            AggregatorKind::Mean,
+            &[
+                Contribution { grad: &g1, examples: 10, staleness: 0, blocks: BlockSet::full(4) },
+                Contribution { grad: &g2, examples: 10, staleness: 0, blocks: part },
+            ],
+            &mut out,
+        );
+        // Weights: 1.0 and 0.5 → wsum 1.5.
+        assert!((w - 1.5).abs() < 1e-12);
+        // Delivered ranges: (1*1 + 0.5*3)/1.5 = 5/3; missing: 1/1.5 = 2/3.
+        for i in [0usize, 1, 4, 5] {
+            assert!((out[i] - 5.0 / 3.0).abs() < 1e-6, "coord {i} = {}", out[i]);
+        }
+        for i in [2usize, 3, 6, 7] {
+            assert!((out[i] - 2.0 / 3.0).abs() < 1e-6, "coord {i} = {}", out[i]);
+        }
+    }
+
+    #[test]
+    fn empty_block_set_contributes_nothing() {
+        let g1 = vec![2.0f32, 2.0];
+        let g2 = vec![9.0f32, 9.0];
+        let mut out = vec![0.0f32; 2];
+        let w = aggregate(
+            AggregatorKind::Mean,
+            &[
+                c(&g1, 0),
+                Contribution { grad: &g2, examples: 10, staleness: 0, blocks: BlockSet::empty(2) },
+            ],
+            &mut out,
+        );
+        assert_eq!(w, 1.0);
+        assert_eq!(out, vec![2.0, 2.0]);
     }
 }

@@ -195,6 +195,12 @@ pub struct RunReport {
     /// Network-level message accounting.  `dropped`/`duplicated` are zero
     /// under an ideal net; `sent`/`delivered` still count the traffic.
     pub net: crate::net::NetStats,
+    /// Gradient blocks admitted *stale* — surviving blocks of a straggling
+    /// reply that landed in a later window and was folded (or at least
+    /// accounted) via the cross-iteration reordering path.  Zero unless
+    /// block admission chunks replies (`NetSpec::block_size`) under a
+    /// non-ideal net.
+    pub stale_blocks: u64,
     /// Async only: mean staleness of applied gradients.
     pub mean_staleness: Option<f64>,
     /// Wall-clock of the driver itself (not virtual time), seconds.
@@ -244,6 +250,12 @@ impl RunReport {
                 " net_drop={:.1}% net_dup={}",
                 self.net.drop_rate() * 100.0,
                 self.net.duplicated
+            ));
+        }
+        if self.net.blocks_sent > 0 {
+            s.push_str(&format!(
+                " blocks={}/{} stale_blocks={}",
+                self.net.blocks_delivered, self.net.blocks_sent, self.stale_blocks
             ));
         }
         s
@@ -363,6 +375,7 @@ mod tests {
             rebalances: 0,
             shard_owners: vec![],
             net: crate::net::NetStats::default(),
+            stale_blocks: 0,
             mean_staleness: None,
             driver_secs: 0.0,
         };

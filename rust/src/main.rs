@@ -96,6 +96,16 @@ fn cmd_train(argv: &[String]) -> i32 {
             "downlink (Work) loss probability on every link (overrides config)",
         )
         .opt(
+            "block-size",
+            "",
+            "gradient block size in f32s, 0 = whole-reply fate (overrides config)",
+        )
+        .opt(
+            "min-block-frac",
+            "",
+            "admission threshold: drop replies below this block fraction (overrides config)",
+        )
+        .opt(
             "threads",
             "",
             "sweep/worker pool size (default: [bench] threads, else available parallelism)",
@@ -179,6 +189,12 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
     }
     if let Some(p) = parsed.get_opt_f64("down-drop-prob")? {
         set_dir(false, p);
+    }
+    if let Some(b) = parsed.get_opt_usize("block-size")? {
+        cfg.cluster.net.block_size = b;
+    }
+    if let Some(f) = parsed.get_opt_f64("min-block-frac")? {
+        cfg.cluster.net.min_block_frac = f;
     }
     cfg.cluster.net.validate(cfg.cluster.workers)?;
     // Pool-size resolution: --threads beats [bench] threads beats auto.

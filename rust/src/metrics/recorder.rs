@@ -29,6 +29,9 @@ pub struct IterRow {
     pub dropped: usize,
     /// Duplicate deliveries the network injected this iteration.
     pub duplicated: usize,
+    /// Gradient blocks delivered this iteration (0 unless block admission
+    /// chunks replies into more than one block — see `docs/NETWORK.md`).
+    pub blocks: usize,
     /// Workers alive at the end of the iteration.
     pub alive: usize,
     /// γ in effect this iteration (None for BSP/async).
@@ -146,6 +149,7 @@ mod tests {
             stale: 0,
             dropped: 0,
             duplicated: 0,
+            blocks: 0,
             alive: 4,
             gamma: Some(4),
             grad_norm: 1.0,

@@ -1,0 +1,219 @@
+//! Partial-gradient block admission: fixed-size blocks of a `Grad` reply
+//! whose fates the network realizes independently.
+//!
+//! Yu et al. (arXiv:1810.07766) prove convergence when each iteration
+//! delivers only a random *subset* of gradient blocks; this module gives
+//! the transport layer the vocabulary for that model.  A reply's payload
+//! (each per-shard gradient vector) is chunked into at most [`MAX_BLOCKS`]
+//! equal ranges, and a [`BlockSet`] records which of them survived the
+//! uplink.  With blocking disabled (`block_size = 0`, the default) every
+//! reply is a single block and the whole layer reduces to the legacy
+//! binary delivered/dropped decision, bit for bit.
+
+/// Hard cap on blocks per reply — the delivered set packs into one `u64`
+/// mask, which keeps [`BlockSet`] `Copy` and the steady state zero-alloc.
+pub const MAX_BLOCKS: usize = 64;
+
+/// Which blocks of one reply survived: a bitmask over `n` blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSet {
+    mask: u64,
+    n: u8,
+}
+
+impl BlockSet {
+    /// All `n` blocks delivered.  `n` is clamped to `1..=MAX_BLOCKS`.
+    pub fn full(n: usize) -> BlockSet {
+        let n = n.clamp(1, MAX_BLOCKS);
+        let mask = if n == MAX_BLOCKS { u64::MAX } else { (1u64 << n) - 1 };
+        BlockSet { mask, n: n as u8 }
+    }
+
+    /// No blocks delivered.
+    pub fn empty(n: usize) -> BlockSet {
+        BlockSet { mask: 0, n: n.clamp(1, MAX_BLOCKS) as u8 }
+    }
+
+    /// Number of blocks the reply was chunked into.
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mask == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.delivered() == self.len()
+    }
+
+    /// Number of delivered blocks.
+    pub fn delivered(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    /// Delivered fraction in `[0, 1]`; exactly `1.0` when full, so
+    /// full-mask weights multiply out bit-identically to the pre-block
+    /// aggregation.
+    pub fn fraction(&self) -> f64 {
+        self.delivered() as f64 / self.len() as f64
+    }
+
+    pub fn contains(&self, block: usize) -> bool {
+        block < self.len() && self.mask & (1u64 << block) != 0
+    }
+
+    /// Self with `block` marked delivered.
+    pub fn with(mut self, block: usize) -> BlockSet {
+        debug_assert!(block < self.len());
+        self.mask |= 1u64 << block;
+        self
+    }
+
+    /// Blocks in `self` not already in `claimed` (same `n`).
+    pub fn minus(&self, claimed: BlockSet) -> BlockSet {
+        BlockSet { mask: self.mask & !claimed.mask, n: self.n }
+    }
+
+    /// Raw mask, for ledger bookkeeping.
+    pub fn mask(&self) -> u64 {
+        self.mask
+    }
+
+    /// Coordinate range `[start, end)` of `block` in a `dim`-length
+    /// gradient: the even split `start = b·dim/n`, `end = (b+1)·dim/n`,
+    /// which partitions every `dim` exactly (last blocks absorb the
+    /// remainder).
+    pub fn range(&self, block: usize, dim: usize) -> (usize, usize) {
+        let n = self.len();
+        (block * dim / n, (block + 1) * dim / n)
+    }
+}
+
+/// Double-count guard for block admission: each `(worker, iter, block)`
+/// folds into θ **at most once**, even when a duplicated reply straggles
+/// into a later window with an overlapping block set.  The drivers claim
+/// a reply's delivered set when they fold it; a later claim for the same
+/// `(worker, iter)` returns only the still-unclaimed blocks.
+#[derive(Debug, Default)]
+pub struct BlockLedger {
+    entries: Vec<(usize, u64, u64)>,
+}
+
+impl BlockLedger {
+    pub fn new() -> BlockLedger {
+        BlockLedger::default()
+    }
+
+    /// Claim `blocks` for `(worker, iter)`; returns the subset that was
+    /// not already claimed (the blocks safe to fold).
+    pub fn claim(&mut self, worker: usize, iter: u64, blocks: BlockSet) -> BlockSet {
+        for e in self.entries.iter_mut() {
+            if e.0 == worker && e.1 == iter {
+                let fresh = BlockSet { mask: blocks.mask & !e.2, n: blocks.n };
+                e.2 |= blocks.mask;
+                return fresh;
+            }
+        }
+        self.entries.push((worker, iter, blocks.mask));
+        blocks
+    }
+
+    /// Drop entries older than `iter` — stragglers that far behind can no
+    /// longer pop (the reorder window is bounded), so the scan stays
+    /// short-lived.
+    pub fn prune_before(&mut self, iter: u64) {
+        self.entries.retain(|e| e.1 >= iter);
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_and_empty_extremes() {
+        let f = BlockSet::full(8);
+        assert_eq!(f.len(), 8);
+        assert_eq!(f.delivered(), 8);
+        assert!(f.is_full() && !f.is_empty());
+        assert_eq!(f.fraction(), 1.0);
+        let e = BlockSet::empty(8);
+        assert_eq!(e.delivered(), 0);
+        assert!(e.is_empty() && !e.is_full());
+        assert_eq!(e.fraction(), 0.0);
+        // The single-block degenerate case the legacy model maps onto.
+        assert!(BlockSet::full(1).is_full());
+        assert_eq!(BlockSet::full(1).fraction(), 1.0);
+        // The mask cap.
+        assert_eq!(BlockSet::full(MAX_BLOCKS).delivered(), MAX_BLOCKS);
+        assert_eq!(BlockSet::full(MAX_BLOCKS + 7).len(), MAX_BLOCKS);
+    }
+
+    #[test]
+    fn insert_contains_minus() {
+        let s = BlockSet::empty(4).with(0).with(2);
+        assert!(s.contains(0) && s.contains(2));
+        assert!(!s.contains(1) && !s.contains(3));
+        assert_eq!(s.delivered(), 2);
+        assert_eq!(s.fraction(), 0.5);
+        let t = BlockSet::empty(4).with(2).with(3);
+        let fresh = t.minus(s);
+        assert!(fresh.contains(3) && !fresh.contains(2));
+        assert_eq!(fresh.delivered(), 1);
+    }
+
+    #[test]
+    fn ranges_partition_the_dimension() {
+        for &n in &[1usize, 2, 3, 5, 8] {
+            for &dim in &[1usize, 7, 16, 33] {
+                let s = BlockSet::full(n);
+                let mut covered = 0usize;
+                let mut prev_end = 0usize;
+                for b in 0..n {
+                    let (lo, hi) = s.range(b, dim);
+                    assert_eq!(lo, prev_end, "gap before block {b} (n={n}, dim={dim})");
+                    assert!(hi >= lo);
+                    covered += hi - lo;
+                    prev_end = hi;
+                }
+                assert_eq!(prev_end, dim);
+                assert_eq!(covered, dim);
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_claims_each_block_once() {
+        let mut ledger = BlockLedger::new();
+        let first = BlockSet::empty(4).with(0).with(1);
+        assert_eq!(ledger.claim(3, 7, first), first);
+        // Overlapping duplicate: only the unclaimed block comes back.
+        let dup = BlockSet::empty(4).with(1).with(2);
+        let fresh = ledger.claim(3, 7, dup);
+        assert!(fresh.contains(2) && !fresh.contains(1));
+        // A full claim recovers only the remaining block; after that,
+        // nothing is fresh.
+        assert_eq!(ledger.claim(3, 7, BlockSet::full(4)), BlockSet::empty(4).with(3));
+        assert!(ledger.claim(3, 7, BlockSet::full(4)).is_empty());
+        // Other (worker, iter) keys are independent.
+        assert_eq!(ledger.claim(2, 7, dup), dup);
+        assert_eq!(ledger.claim(3, 8, dup), dup);
+    }
+
+    #[test]
+    fn ledger_prunes_old_iterations() {
+        let mut ledger = BlockLedger::new();
+        ledger.claim(0, 1, BlockSet::full(2));
+        ledger.claim(0, 5, BlockSet::full(2));
+        ledger.prune_before(4);
+        // The iter-1 entry is gone: a re-claim gets everything back.
+        assert_eq!(ledger.claim(0, 1, BlockSet::full(2)), BlockSet::full(2));
+        // The iter-5 entry survived.
+        assert!(ledger.claim(0, 5, BlockSet::full(2)).is_empty());
+    }
+}

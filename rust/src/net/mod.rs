@@ -39,13 +39,15 @@
 //!
 //! See `docs/NETWORK.md` for a scenario cookbook.
 
+pub mod block;
 pub mod link;
 pub mod shim;
 pub mod spec;
 pub mod transport;
 
+pub use block::{BlockLedger, BlockSet, MAX_BLOCKS};
 pub use link::{LinkDir, LinkModel, LinkRealization};
-pub use shim::{GradFate, NetShim, WorkPlan};
+pub use shim::{GradFate, NetShim, ThetaLedger, WorkPlan};
 pub use spec::{NetSpec, Partition};
 pub use transport::{Delivery, Transport, VirtualTransport};
 
@@ -53,12 +55,23 @@ pub use transport::{Delivery, Transport, VirtualTransport};
 /// `Work` broadcast and its `Grad` reply are two messages); `duplicated`
 /// counts extra delivered copies on top of `delivered`.  Invariant:
 /// `sent == delivered + dropped`.
+///
+/// The `blocks_*` counters account **primary-reply gradient blocks** when
+/// block admission is active (`NetSpec::block_size > 0` chunking into more
+/// than one block); they stay zero otherwise so non-blocking runs report
+/// exactly what they always did.  Blocks are counted only once the `Work`
+/// broadcast delivers (a worker that never computed dispatched no blocks),
+/// and duplicate copies are accounted at message level only.  Invariant:
+/// `blocks_sent == blocks_delivered + blocks_dropped`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NetStats {
     pub sent: u64,
     pub delivered: u64,
     pub dropped: u64,
     pub duplicated: u64,
+    pub blocks_sent: u64,
+    pub blocks_delivered: u64,
+    pub blocks_dropped: u64,
 }
 
 impl NetStats {
@@ -79,6 +92,9 @@ impl NetStats {
             delivered: self.delivered - earlier.delivered,
             dropped: self.dropped - earlier.dropped,
             duplicated: self.duplicated - earlier.duplicated,
+            blocks_sent: self.blocks_sent - earlier.blocks_sent,
+            blocks_delivered: self.blocks_delivered - earlier.blocks_delivered,
+            blocks_dropped: self.blocks_dropped - earlier.blocks_dropped,
         }
     }
 
@@ -103,6 +119,48 @@ impl NetStats {
             self.duplicated += 1;
         }
         true
+    }
+
+    /// Account one roundtrip under **block admission**: the reply chunks
+    /// into `blocks.len()` blocks whose realized delivered set is `blocks`,
+    /// and `admitted` is the spec's threshold decision
+    /// ([`NetSpec::admits`]).  Block counters record what the network
+    /// physically realized; a below-threshold reply still counts its
+    /// delivered blocks but the *message* counts dropped (the drivers
+    /// treat it as loss).  Returns whether the reply surfaces.
+    pub fn count_roundtrip_blocks(
+        &mut self,
+        r: &LinkRealization,
+        blocks: BlockSet,
+        admitted: bool,
+        count_dup: bool,
+    ) -> bool {
+        self.sent += 1; // Work
+        if r.down_dropped {
+            self.dropped += 1;
+            return false;
+        }
+        self.delivered += 1;
+        self.sent += 1; // Grad
+        self.blocks_sent += blocks.len() as u64;
+        self.blocks_delivered += blocks.delivered() as u64;
+        self.blocks_dropped += (blocks.len() - blocks.delivered()) as u64;
+        if !admitted {
+            self.dropped += 1;
+            return false;
+        }
+        self.delivered += 1;
+        if count_dup && r.up_duplicated {
+            self.duplicated += 1;
+        }
+        true
+    }
+
+    /// Ideal-net fast-path block accounting: all `n` blocks of one reply
+    /// delivered, no sampling.
+    pub fn count_blocks_ideal(&mut self, n: usize) {
+        self.blocks_sent += n as u64;
+        self.blocks_delivered += n as u64;
     }
 }
 
@@ -144,16 +202,74 @@ mod tests {
 
     #[test]
     fn since_gives_deltas() {
-        let a = NetStats { sent: 10, delivered: 7, dropped: 3, duplicated: 1 };
-        let b = NetStats { sent: 14, delivered: 10, dropped: 4, duplicated: 1 };
+        let a = NetStats {
+            sent: 10,
+            delivered: 7,
+            dropped: 3,
+            duplicated: 1,
+            blocks_sent: 8,
+            blocks_delivered: 6,
+            blocks_dropped: 2,
+        };
+        let b = NetStats {
+            sent: 14,
+            delivered: 10,
+            dropped: 4,
+            duplicated: 1,
+            blocks_sent: 16,
+            blocks_delivered: 13,
+            blocks_dropped: 3,
+        };
         let d = b.since(&a);
-        assert_eq!(d, NetStats { sent: 4, delivered: 3, dropped: 1, duplicated: 0 });
+        assert_eq!(
+            d,
+            NetStats {
+                sent: 4,
+                delivered: 3,
+                dropped: 1,
+                duplicated: 0,
+                blocks_sent: 8,
+                blocks_delivered: 7,
+                blocks_dropped: 1,
+            }
+        );
     }
 
     #[test]
     fn drop_rate_handles_empty() {
         assert_eq!(NetStats::default().drop_rate(), 0.0);
-        let s = NetStats { sent: 10, delivered: 8, dropped: 2, duplicated: 0 };
+        let s = NetStats { sent: 10, delivered: 8, dropped: 2, ..NetStats::default() };
         assert!((s.drop_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocked_roundtrip_accounting_invariants() {
+        let mut s = NetStats::default();
+        // Partial delivery above threshold: message delivered, block split
+        // recorded.
+        let partial = BlockSet::empty(4).with(0).with(2).with(3);
+        assert!(s.count_roundtrip_blocks(&LinkRealization::ideal(), partial, true, true));
+        assert_eq!((s.sent, s.delivered, s.dropped), (2, 2, 0));
+        assert_eq!((s.blocks_sent, s.blocks_delivered, s.blocks_dropped), (4, 3, 1));
+
+        // Below threshold: blocks still realized, message counts dropped.
+        let thin = BlockSet::empty(4).with(1);
+        assert!(!s.count_roundtrip_blocks(&LinkRealization::ideal(), thin, false, true));
+        assert_eq!((s.sent, s.delivered, s.dropped), (4, 3, 1));
+        assert_eq!((s.blocks_sent, s.blocks_delivered, s.blocks_dropped), (8, 4, 4));
+
+        // Down drop: no blocks dispatched at all.
+        let mut r = LinkRealization::ideal();
+        r.down_dropped = true;
+        assert!(!s.count_roundtrip_blocks(&r, BlockSet::full(4), true, true));
+        assert_eq!(s.blocks_sent, 8);
+        assert_eq!(s.sent, s.delivered + s.dropped);
+        assert_eq!(s.blocks_sent, s.blocks_delivered + s.blocks_dropped);
+
+        // Ideal fast path.
+        s.count_blocks_ideal(4);
+        assert_eq!(s.blocks_sent, 12);
+        assert_eq!(s.blocks_delivered, 8);
+        assert_eq!(s.blocks_sent, s.blocks_delivered + s.blocks_dropped);
     }
 }

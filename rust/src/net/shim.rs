@@ -13,6 +13,9 @@
 //! crash diverges the drivers' counts, just as it already diverges their
 //! abandonment totals.)
 
+use std::sync::Arc;
+
+use super::block::BlockSet;
 use super::link::LinkRealization;
 use super::spec::NetSpec;
 use super::NetStats;
@@ -41,17 +44,42 @@ pub struct NetShim {
     spec: NetSpec,
     seed: u64,
     ideal: bool,
+    n_blocks: usize,
     stats: NetStats,
 }
 
 impl NetShim {
     pub fn new(spec: NetSpec, seed: u64) -> NetShim {
         let ideal = spec.is_ideal();
-        NetShim { spec, seed, ideal, stats: NetStats::default() }
+        NetShim { spec, seed, ideal, n_blocks: 1, stats: NetStats::default() }
+    }
+
+    /// Activate block admission, mirroring
+    /// [`crate::net::VirtualTransport::set_block_count`].
+    pub fn set_block_count(&mut self, n: usize) {
+        self.n_blocks = n.max(1);
     }
 
     pub fn is_ideal(&self) -> bool {
         self.ideal
+    }
+
+    /// Does a reply with delivered set `blocks` survive to the barrier?
+    /// A single-block reply keeps the legacy binary rule.
+    fn admits(&self, blocks: BlockSet) -> bool {
+        self.spec.admits(blocks)
+    }
+
+    /// The delivered block set of `(worker, msg_iter, duplicate)`'s reply
+    /// — the same pure re-realization the virtual transport performs, so
+    /// the master folds identical masks.
+    pub fn blocks_for(&self, worker: usize, msg_iter: u64, duplicate: bool) -> BlockSet {
+        if self.ideal || self.n_blocks <= 1 {
+            return BlockSet::full(self.n_blocks);
+        }
+        let r = self.spec.realize(self.seed, worker, msg_iter);
+        self.spec
+            .realize_blocks(self.seed, worker, msg_iter, self.n_blocks, r.up_dropped, duplicate)
     }
 
     /// Plan worker `worker`'s iteration-`iter` broadcast, accounting both
@@ -63,7 +91,26 @@ impl NetShim {
         } else {
             self.spec.realize(self.seed, worker, iter)
         };
-        let delivers = self.stats.count_roundtrip(&r, true);
+        let delivers = if self.ideal {
+            let d = self.stats.count_roundtrip(&r, true);
+            if self.n_blocks > 1 {
+                self.stats.count_blocks_ideal(self.n_blocks);
+            }
+            d
+        } else if self.n_blocks <= 1 {
+            self.stats.count_roundtrip(&r, true)
+        } else {
+            let blocks = self.spec.realize_blocks(
+                self.seed,
+                worker,
+                iter,
+                self.n_blocks,
+                r.up_dropped,
+                false,
+            );
+            self.stats
+                .count_roundtrip_blocks(&r, blocks, self.admits(blocks), true)
+        };
         if r.down_dropped {
             return (WorkPlan::Dropped, false);
         }
@@ -74,27 +121,74 @@ impl NetShim {
     /// Whether worker `worker`'s iteration-`iter` reply survives the
     /// network.  Pure re-realization — no accounting.
     pub fn reply_expected(&self, worker: usize, iter: u64) -> bool {
-        self.ideal || self.spec.realize(self.seed, worker, iter).delivers()
+        if self.ideal {
+            return true;
+        }
+        let r = self.spec.realize(self.seed, worker, iter);
+        if self.n_blocks <= 1 {
+            return r.delivers();
+        }
+        !r.down_dropped && self.admits(self.blocks_for(worker, iter, false))
     }
 
     /// Fate of a received `Grad` for `(worker, msg_iter)`.  Pure
     /// re-realization, so stale replies from earlier iterations resolve
     /// against their own iteration's fates.  No accounting: [`NetShim::plan`]
-    /// already counted this reply.
+    /// already counted this reply.  Under block admission the reply
+    /// survives on its delivered set ([`NetShim::blocks_for`]) passing the
+    /// admission threshold — a reply that lost block 0 (the legacy whole
+    /// message) can still deliver its surviving tail blocks.
     pub fn grad_fate(&self, worker: usize, msg_iter: u64) -> GradFate {
         if self.ideal {
             return GradFate::Deliver { duplicate: false };
         }
         let r = self.spec.realize(self.seed, worker, msg_iter);
-        if r.delivers() {
-            GradFate::Deliver { duplicate: r.up_duplicated }
-        } else {
+        if self.n_blocks <= 1 {
+            return if r.delivers() {
+                GradFate::Deliver { duplicate: r.up_duplicated }
+            } else {
+                GradFate::Dropped
+            };
+        }
+        if r.down_dropped || !self.admits(self.blocks_for(worker, msg_iter, false)) {
             GradFate::Dropped
+        } else {
+            GradFate::Deliver { duplicate: r.up_duplicated }
         }
     }
 
     pub fn stats(&self) -> NetStats {
         self.stats
+    }
+}
+
+/// Per-worker θ snapshots the async master holds for retransmission.
+///
+/// The virtual async driver's loss recovery has the *worker* retry from
+/// the θ it already holds — the master does not refresh parameters, so the
+/// eventual reply's staleness counts from the original hand-off.  The
+/// threaded master used to resend a fresh θ instead, silently reducing
+/// staleness and diverging the drivers' async stale counts; it now holds
+/// each dispatch's snapshot here and retransmits exactly that.
+#[derive(Debug, Default)]
+pub struct ThetaLedger {
+    slots: Vec<Option<Arc<Vec<f32>>>>,
+}
+
+impl ThetaLedger {
+    pub fn new(workers: usize) -> ThetaLedger {
+        ThetaLedger { slots: vec![None; workers] }
+    }
+
+    /// Record the snapshot handed to worker `w` with its latest dispatch.
+    pub fn hold(&mut self, w: usize, theta: &Arc<Vec<f32>>) {
+        self.slots[w] = Some(Arc::clone(theta));
+    }
+
+    /// The snapshot worker `w` is currently computing on, for a
+    /// retransmission that must not refresh parameters.
+    pub fn held(&self, w: usize) -> Option<Arc<Vec<f32>>> {
+        self.slots[w].clone()
     }
 }
 
@@ -162,5 +256,64 @@ mod tests {
             while virt.poll().is_some() {}
         }
         assert_eq!(shim.stats(), virt.stats());
+    }
+
+    #[test]
+    fn blocked_shim_matches_virtual_transport_counts_and_masks() {
+        use crate::net::transport::{Transport, VirtualTransport};
+        let spec = NetSpec {
+            default_link: crate::net::LinkModel {
+                drop_prob: 0.3,
+                dup_prob: 0.2,
+                dup_lag: 0.001,
+                ..crate::net::LinkModel::ideal()
+            },
+            block_size: 2,
+            min_block_frac: 0.25,
+            ..NetSpec::ideal()
+        };
+        let seed = 31;
+        let n = spec.n_blocks(16);
+        let mut shim = NetShim::new(spec.clone(), seed);
+        shim.set_block_count(n);
+        let mut virt = VirtualTransport::new(spec.clone(), seed);
+        virt.set_block_count(n);
+        for iter in 0..200 {
+            for w in 0..4 {
+                let (_, shim_delivers) = shim.plan(w, iter);
+                virt.send_roundtrip(w, iter, 0.01);
+                // The shim's pre-commitment must agree with whether the
+                // reply actually surfaces (and with its own receipt-side
+                // classification).
+                assert_eq!(shim_delivers, shim.reply_expected(w, iter));
+                assert_eq!(
+                    shim_delivers,
+                    !matches!(shim.grad_fate(w, iter), GradFate::Dropped)
+                );
+            }
+            while let Some(d) = virt.poll() {
+                // Shim and transport realize the same delivered sets.
+                assert_eq!(d.blocks, shim.blocks_for(d.worker, d.iter, d.duplicate));
+                assert!(!d.blocks.is_empty());
+            }
+        }
+        let s = shim.stats();
+        assert_eq!(s, virt.stats());
+        assert_eq!(s.blocks_sent, s.blocks_delivered + s.blocks_dropped);
+        assert!(s.blocks_dropped > 0);
+    }
+
+    #[test]
+    fn theta_ledger_holds_latest_snapshot() {
+        let mut ledger = ThetaLedger::new(2);
+        assert!(ledger.held(0).is_none());
+        let a = Arc::new(vec![1.0f32, 2.0]);
+        ledger.hold(0, &a);
+        let got = ledger.held(0).unwrap();
+        assert!(Arc::ptr_eq(&got, &a));
+        let b = Arc::new(vec![3.0f32]);
+        ledger.hold(0, &b);
+        assert!(Arc::ptr_eq(&ledger.held(0).unwrap(), &b));
+        assert!(ledger.held(1).is_none());
     }
 }

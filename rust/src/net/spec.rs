@@ -1,9 +1,21 @@
 //! The whole cluster's network specification and its pure per-message
 //! realization function.
 
+use super::block::{BlockSet, MAX_BLOCKS};
 use super::link::{LinkModel, LinkRealization};
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
+
+/// Salt mixed into the per-block fate stream so block fates are
+/// independent of the legacy per-message stream (which must keep
+/// realizing bit-identically with blocking off).
+const BLOCK_SALT: u64 = 0xB10C_FA7E_0000_0001;
+/// Salt for a duplicated reply's block set — an independent retransmission
+/// realization, so a dup can carry blocks its primary lost (and overlap
+/// with blocks it delivered, which is what the dedup ledger guards).
+const BLOCK_DUP_SALT: u64 = 0xB10C_D0B1_0000_0002;
+/// Salt for BSP retry attempts, keyed additionally by the attempt index.
+const RETRY_SALT: u64 = 0x8E72_4A11_0000_0003;
 
 /// A scripted partition: the named workers are unreachable — both
 /// directions dropped — for iterations `from..until` (half-open, like the
@@ -36,6 +48,15 @@ pub struct NetSpec {
     /// Extra salt mixed into the per-message streams, so two specs can
     /// realize differently under one cluster seed.
     pub salt: u64,
+    /// Gradient block size (coordinates per block) for partial admission.
+    /// `0` (the default) disables blocking: every reply is one block and
+    /// admission stays the legacy binary decision, bit for bit.
+    pub block_size: usize,
+    /// Minimum delivered fraction a blocked reply needs to be admitted;
+    /// below it the reply counts as a network drop (the async drivers
+    /// retransmit, the sync drivers never surface it).  Only meaningful
+    /// when blocking is active.
+    pub min_block_frac: f64,
 }
 
 impl Default for NetSpec {
@@ -52,6 +73,8 @@ impl NetSpec {
             overrides: Vec::new(),
             partitions: Vec::new(),
             salt: 0,
+            block_size: 0,
+            min_block_frac: 0.0,
         }
     }
 
@@ -102,6 +125,12 @@ impl NetSpec {
             }
             link.validate()?;
         }
+        if !(0.0..=1.0).contains(&self.min_block_frac) {
+            return Err(Error::Config(format!(
+                "net min_block_frac must be in [0, 1], got {}",
+                self.min_block_frac
+            )));
+        }
         for p in &self.partitions {
             if p.from >= p.until {
                 return Err(Error::Config(format!(
@@ -137,6 +166,104 @@ impl NetSpec {
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             ^ iter.wrapping_mul(0xD1B5_4A32_D192_ED03);
         let mut rng = Pcg64::new(seed ^ self.salt.wrapping_mul(0xA076_1D64_78BD_642F), stream);
+        self.link_for(worker).realize(&mut rng)
+    }
+
+    /// How many blocks a `dim`-coordinate gradient chunks into under this
+    /// spec.  `1` means blocking is off (the legacy single-block model);
+    /// the count caps at [`MAX_BLOCKS`] so the delivered set stays a
+    /// single-word mask.
+    pub fn n_blocks(&self, dim: usize) -> usize {
+        if self.block_size == 0 || dim == 0 {
+            1
+        } else {
+            dim.div_ceil(self.block_size).clamp(1, MAX_BLOCKS)
+        }
+    }
+
+    /// Admission policy for a blocked reply's delivered set: non-empty and
+    /// at least `min_block_frac` of the blocks present.
+    pub fn admits(&self, blocks: BlockSet) -> bool {
+        !blocks.is_empty() && blocks.fraction() >= self.min_block_frac
+    }
+
+    /// Realize which of a reply's `n` blocks survive the uplink — a pure
+    /// function of `(seed, worker, iter, duplicate)` plus the spec, like
+    /// [`NetSpec::realize`], from an independently-salted stream so the
+    /// legacy per-message realization is untouched.
+    ///
+    /// Block 0 rides the legacy up-direction fate (`up_dropped`), so a
+    /// single-block reply reproduces the binary decision exactly; blocks
+    /// `1..n` each sample the link's effective uplink drop probability.
+    /// A duplicated copy is an independent retransmission realization:
+    /// its block 0 always lands (the copy exists because the primary
+    /// delivered) and its tail blocks draw from a dup-salted stream, so
+    /// dup sets can overlap the primary's — the [`super::BlockLedger`]
+    /// dedup guard is what keeps overlaps from double-counting.
+    pub fn realize_blocks(
+        &self,
+        seed: u64,
+        worker: usize,
+        iter: u64,
+        n: usize,
+        up_dropped: bool,
+        duplicate: bool,
+    ) -> BlockSet {
+        if n <= 1 {
+            return if up_dropped && !duplicate {
+                BlockSet::empty(1)
+            } else {
+                BlockSet::full(1)
+            };
+        }
+        if self.partitioned(worker, iter) {
+            return BlockSet::empty(n);
+        }
+        let mut set = BlockSet::empty(n);
+        if duplicate || !up_dropped {
+            set = set.with(0);
+        }
+        let (_, up_drop) = self.link_for(worker).up_dir();
+        let stream = (worker as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ iter.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        let salt = if duplicate { BLOCK_DUP_SALT } else { BLOCK_SALT };
+        let mut rng =
+            Pcg64::new(seed ^ self.salt.wrapping_mul(0xA076_1D64_78BD_642F) ^ salt, stream);
+        for b in 1..n {
+            if rng.next_f64() >= up_drop {
+                set = set.with(b);
+            }
+        }
+        set
+    }
+
+    /// Realize a BSP retry's retransmission roundtrip: attempt `attempt`
+    /// of worker `worker`'s iteration-`iter` recovery.  Pure in
+    /// `(seed, worker, iter, attempt)` and independent of the primary
+    /// message stream, so routing retries through the link model cannot
+    /// perturb any non-retry realization.
+    pub fn realize_attempt(
+        &self,
+        seed: u64,
+        worker: usize,
+        iter: u64,
+        attempt: u64,
+    ) -> LinkRealization {
+        if self.is_ideal() {
+            return LinkRealization::ideal();
+        }
+        if self.partitioned(worker, iter) {
+            return LinkRealization::partitioned();
+        }
+        let stream = (worker as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ iter.wrapping_mul(0xD1B5_4A32_D192_ED03)
+            ^ attempt.wrapping_add(1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        let mut rng = Pcg64::new(
+            seed ^ self.salt.wrapping_mul(0xA076_1D64_78BD_642F) ^ RETRY_SALT,
+            stream,
+        );
         self.link_for(worker).realize(&mut rng)
     }
 
@@ -266,6 +393,91 @@ mod tests {
         assert!(NetSpec::parse_partitions("5-3@1..2").is_err());
         assert!(NetSpec::parse_partitions("x@1..2").is_err());
         assert!(NetSpec::parse_partitions("@1..2").is_err());
+    }
+
+    #[test]
+    fn block_realization_is_pure_and_reduces_to_legacy() {
+        use crate::net::block::BlockSet;
+        let spec = NetSpec { block_size: 2, ..NetSpec::lossy(0.3) };
+        for w in 0..4usize {
+            for iter in 0..32u64 {
+                let r = spec.realize(9, w, iter);
+                let a = spec.realize_blocks(9, w, iter, 8, r.up_dropped, false);
+                let b = spec.realize_blocks(9, w, iter, 8, r.up_dropped, false);
+                assert_eq!(a, b, "block fates must be pure");
+                // Block 0 carries the legacy up fate.
+                assert_eq!(a.contains(0), !r.up_dropped);
+                // Single block ≡ the binary decision.
+                let one = spec.realize_blocks(9, w, iter, 1, r.up_dropped, false);
+                assert_eq!(one.is_full(), !r.up_dropped);
+                assert_eq!(one, if r.up_dropped { BlockSet::empty(1) } else { BlockSet::full(1) });
+                // A dup's block 0 always lands.
+                assert!(spec.realize_blocks(9, w, iter, 8, r.up_dropped, true).contains(0));
+            }
+        }
+        // Tail blocks must actually vary under loss.
+        let varied = (0..64u64).any(|i| {
+            let r = spec.realize(9, 0, i);
+            !spec.realize_blocks(9, 0, i, 8, r.up_dropped, false).is_full()
+        });
+        assert!(varied, "lossy link delivered every block of every reply");
+    }
+
+    #[test]
+    fn partition_window_kills_all_blocks() {
+        let spec = NetSpec { block_size: 1, ..NetSpec::ideal() }.with_partition(&[1], 10, 20);
+        assert!(spec.realize_blocks(5, 1, 15, 8, true, false).is_empty());
+        assert!(spec.realize_blocks(5, 1, 15, 8, true, true).is_empty());
+        assert!(spec.realize_blocks(5, 1, 9, 8, false, false).is_full());
+    }
+
+    #[test]
+    fn n_blocks_and_admission_policy() {
+        let off = NetSpec::ideal();
+        assert_eq!(off.n_blocks(1000), 1);
+        let spec = NetSpec { block_size: 16, min_block_frac: 0.5, ..NetSpec::ideal() };
+        assert_eq!(spec.n_blocks(64), 4);
+        assert_eq!(spec.n_blocks(65), 5);
+        assert_eq!(spec.n_blocks(8), 1);
+        assert_eq!(spec.n_blocks(0), 1);
+        // The mask cap.
+        assert_eq!(NetSpec { block_size: 1, ..NetSpec::ideal() }.n_blocks(1000), 64);
+        use crate::net::block::BlockSet;
+        assert!(spec.admits(BlockSet::full(4)));
+        assert!(spec.admits(BlockSet::empty(4).with(0).with(1)));
+        assert!(!spec.admits(BlockSet::empty(4).with(0)));
+        assert!(!spec.admits(BlockSet::empty(4)));
+    }
+
+    #[test]
+    fn retry_attempts_realize_independently() {
+        let spec = NetSpec::lossy(0.4);
+        let a0 = spec.realize_attempt(7, 2, 13, 0);
+        assert_eq!(a0, spec.realize_attempt(7, 2, 13, 0), "attempt fates must be pure");
+        let varies = (1..32u64).any(|k| spec.realize_attempt(7, 2, 13, k) != a0);
+        assert!(varies, "retry attempts never varied");
+        // Ideal specs short-circuit; partitions kill retries too.
+        assert_eq!(NetSpec::ideal().realize_attempt(7, 2, 13, 5), LinkRealization::ideal());
+        let part = NetSpec::ideal().with_partition(&[2], 10, 20);
+        assert_eq!(part.realize_attempt(7, 2, 13, 5), LinkRealization::partitioned());
+    }
+
+    #[test]
+    fn validate_checks_min_block_frac() {
+        let ok = NetSpec { block_size: 8, min_block_frac: 0.5, ..NetSpec::ideal() };
+        assert!(ok.validate(4).is_ok());
+        let bad = NetSpec { min_block_frac: 1.5, ..NetSpec::ideal() };
+        assert!(bad.validate(4).is_err());
+        let neg = NetSpec { min_block_frac: -0.1, ..NetSpec::ideal() };
+        assert!(neg.validate(4).is_err());
+    }
+
+    #[test]
+    fn blocking_does_not_make_a_net_non_ideal() {
+        // Blocking over an ideal net delivers every block: behaviour (and
+        // the ideal fast paths) must be unaffected.
+        let spec = NetSpec { block_size: 4, ..NetSpec::ideal() };
+        assert!(spec.is_ideal());
     }
 
     #[test]

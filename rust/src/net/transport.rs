@@ -3,6 +3,8 @@
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
+use super::block::BlockSet;
+use super::link::LinkRealization;
 use super::spec::NetSpec;
 use super::NetStats;
 
@@ -16,6 +18,9 @@ pub struct Delivery {
     pub iter: u64,
     /// True for the extra copy of a duplicated reply.
     pub duplicate: bool,
+    /// Which gradient blocks this reply carries.  `BlockSet::full(1)`
+    /// whenever block admission is off — the legacy whole-reply model.
+    pub blocks: BlockSet,
 }
 
 /// Virtual-time message routing: sends schedule delivery events, polls pop
@@ -74,6 +79,7 @@ pub struct VirtualTransport {
     spec: NetSpec,
     seed: u64,
     ideal: bool,
+    n_blocks: usize,
     heap: BinaryHeap<Reverse<Key>>,
     primaries: usize,
     stats: NetStats,
@@ -86,14 +92,45 @@ impl VirtualTransport {
             spec,
             seed,
             ideal,
+            n_blocks: 1,
             heap: BinaryHeap::new(),
             primaries: 0,
             stats: NetStats::default(),
         }
     }
 
+    /// Activate block admission: chunk every reply into `n` blocks (the
+    /// driver computes `n` from the gradient dimension via
+    /// [`NetSpec::n_blocks`]).  `n <= 1` keeps the legacy whole-reply
+    /// model.
+    pub fn set_block_count(&mut self, n: usize) {
+        self.n_blocks = n.max(1);
+    }
+
     pub fn is_ideal(&self) -> bool {
         self.ideal
+    }
+
+    /// The delivered block set of `(worker, iter, duplicate)`'s reply —
+    /// pure re-realization, so drivers that queue deliveries as bare
+    /// events can recover the mask at admission time.
+    pub fn blocks_for(&self, worker: usize, iter: u64, duplicate: bool) -> BlockSet {
+        if self.ideal || self.n_blocks <= 1 {
+            return BlockSet::full(self.n_blocks);
+        }
+        let r = self.spec.realize(self.seed, worker, iter);
+        self.spec
+            .realize_blocks(self.seed, worker, iter, self.n_blocks, r.up_dropped, duplicate)
+    }
+
+    /// Realize (and account) BSP retry attempt `attempt` for worker
+    /// `worker`'s iteration-`iter` recovery — the satellite fix that
+    /// routes retransmissions through the link model instead of assuming
+    /// a clean path.  Duplicates are not materialized for retries.
+    pub fn realize_retry(&mut self, worker: usize, iter: u64, attempt: u64) -> LinkRealization {
+        let r = self.spec.realize_attempt(self.seed, worker, iter, attempt);
+        self.stats.count_roundtrip(&r, false);
+        r
     }
 }
 
@@ -102,12 +139,29 @@ impl Transport for VirtualTransport {
         if self.ideal {
             self.stats.sent += 2;
             self.stats.delivered += 2;
+            if self.n_blocks > 1 {
+                self.stats.count_blocks_ideal(self.n_blocks);
+            }
             self.heap.push(Reverse(Key { at: compute, worker, duplicate: false, iter }));
             self.primaries += 1;
             return;
         }
         let r = self.spec.realize(self.seed, worker, iter);
-        if !self.stats.count_roundtrip(&r, true) {
+        let surfaced = if self.n_blocks <= 1 {
+            self.stats.count_roundtrip(&r, true)
+        } else {
+            let blocks = self.spec.realize_blocks(
+                self.seed,
+                worker,
+                iter,
+                self.n_blocks,
+                r.up_dropped,
+                false,
+            );
+            self.stats
+                .count_roundtrip_blocks(&r, blocks, self.spec.admits(blocks), true)
+        };
+        if !surfaced {
             return;
         }
         let at = r.down_delay + compute + r.up_delay;
@@ -119,12 +173,22 @@ impl Transport for VirtualTransport {
     }
 
     fn poll(&mut self) -> Option<Delivery> {
-        self.heap.pop().map(|Reverse(k)| {
-            if !k.duplicate {
-                self.primaries -= 1;
+        match self.heap.pop() {
+            None => None,
+            Some(Reverse(k)) => {
+                if !k.duplicate {
+                    self.primaries -= 1;
+                }
+                let blocks = self.blocks_for(k.worker, k.iter, k.duplicate);
+                Some(Delivery {
+                    at: k.at,
+                    worker: k.worker,
+                    iter: k.iter,
+                    duplicate: k.duplicate,
+                    blocks,
+                })
             }
-            Delivery { at: k.at, worker: k.worker, iter: k.iter, duplicate: k.duplicate }
-        })
+        }
     }
 
     fn deliverable(&self) -> usize {
@@ -212,6 +276,105 @@ mod tests {
         let d = t.poll().unwrap();
         assert!((d.at - 0.03).abs() < 1e-12, "at={}", d.at);
         assert!(t.poll().is_none());
+    }
+
+    #[test]
+    fn single_block_count_reproduces_legacy_schedule() {
+        // block_size large enough that the gradient is one block: the
+        // transport must schedule, count, and deliver exactly as the
+        // pre-block model — under a lossy spec, not just an ideal one.
+        let spec = NetSpec { block_size: 1024, ..NetSpec::lossy(0.3) };
+        let run = |blocked: bool| {
+            let mut t = VirtualTransport::new(spec.clone(), 11);
+            if blocked {
+                t.set_block_count(spec.n_blocks(16)); // 16 ≤ 1024 → 1 block
+            }
+            for iter in 0..50 {
+                for w in 0..4 {
+                    t.send_roundtrip(w, iter, 0.01 * (w + 1) as f64);
+                }
+            }
+            let ds: Vec<(f64, usize, u64, bool)> = std::iter::from_fn(|| t.poll())
+                .map(|d| (d.at, d.worker, d.iter, d.duplicate))
+                .collect();
+            (ds, t.stats())
+        };
+        let (d1, s1) = run(false);
+        let (d2, s2) = run(true);
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+        assert_eq!(s2.blocks_sent, 0, "single-block replies must not count block stats");
+    }
+
+    #[test]
+    fn blocked_replies_surface_partial_sets() {
+        let spec = NetSpec { block_size: 2, ..NetSpec::lossy(0.3) };
+        let n = spec.n_blocks(16);
+        assert_eq!(n, 8);
+        let mut t = VirtualTransport::new(spec.clone(), 19);
+        for iter in 0..200u64 {
+            for w in 0..4 {
+                t.send_roundtrip(w, iter, 0.01);
+            }
+        }
+        let mut partial = 0usize;
+        let mut rescued = 0usize;
+        let mut popped = 0usize;
+        while let Some(d) = t.poll() {
+            popped += 1;
+            assert_eq!(d.blocks.len(), n);
+            assert!(!d.blocks.is_empty(), "empty replies must never surface");
+            // The mask is recoverable purely.
+            assert_eq!(d.blocks, t.blocks_for(d.worker, d.iter, d.duplicate));
+            if !d.blocks.is_full() {
+                partial += 1;
+            }
+            if !d.duplicate && !d.blocks.contains(0) {
+                rescued += 1; // legacy model would have dropped this reply
+            }
+        }
+        assert!(popped > 0);
+        assert!(partial > 0, "30% loss never produced a partial reply");
+        assert!(rescued > 0, "no reply survived on tail blocks alone");
+        let s = t.stats();
+        assert_eq!(s.sent, s.delivered + s.dropped);
+        assert_eq!(s.blocks_sent, s.blocks_delivered + s.blocks_dropped);
+        assert!(s.blocks_dropped > 0);
+    }
+
+    #[test]
+    fn min_block_frac_suppresses_thin_replies() {
+        let strict = NetSpec { block_size: 2, min_block_frac: 0.99, ..NetSpec::lossy(0.4) };
+        let loose = NetSpec { min_block_frac: 0.0, ..strict.clone() };
+        let run = |spec: &NetSpec| {
+            let mut t = VirtualTransport::new(spec.clone(), 7);
+            t.set_block_count(spec.n_blocks(16));
+            for iter in 0..300u64 {
+                t.send_roundtrip(0, iter, 0.01);
+            }
+            let popped = std::iter::from_fn(|| t.poll())
+                .inspect(|d| assert!(spec.admits(d.blocks) || d.duplicate))
+                .count();
+            (popped, t.stats())
+        };
+        let (p_strict, s_strict) = run(&strict);
+        let (p_loose, s_loose) = run(&loose);
+        assert!(p_strict < p_loose, "threshold suppressed nothing: {p_strict} vs {p_loose}");
+        // The physical block realization is policy-independent.
+        assert_eq!(s_strict.blocks_delivered, s_loose.blocks_delivered);
+        assert!(s_strict.dropped > s_loose.dropped);
+    }
+
+    #[test]
+    fn retry_realizations_are_counted_and_pure() {
+        let mut t = VirtualTransport::new(NetSpec::lossy(0.4), 5);
+        let before = t.stats();
+        let a = t.realize_retry(1, 10, 0);
+        let b = t.realize_retry(1, 10, 0);
+        assert_eq!(a, b);
+        let s = t.stats();
+        assert_eq!(s.sent - before.sent, if a.down_dropped { 2 } else { 4 });
+        assert_eq!(s.sent, s.delivered + s.dropped);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::coordinator::{RunConfig, RunReport, SyncMode};
 use crate::data::{ComputePool, GradResult};
 use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
-use crate::net::{NetSpec, NetStats};
+use crate::net::{BlockSet, NetSpec, NetStats};
 use crate::straggler::{FailureEvent, StragglerProfile};
 use crate::Result;
 
@@ -56,6 +56,11 @@ struct Dispatcher<'a> {
     /// roundtrip is in flight cannot retroactively change what the reply
     /// covers.  Buffers reuse capacity across dispatches.
     shards_given: Vec<Vec<usize>>,
+    /// Reply block count (1 = block admission off).
+    n_blocks: usize,
+    /// Delivered block set of each worker's outstanding dispatch; the fold
+    /// zeroes the ranges of blocks the network lost.
+    blocks_out: Vec<BlockSet>,
     stats: NetStats,
 }
 
@@ -96,10 +101,32 @@ impl Dispatcher<'_> {
         let (delivers, net_delay, dup_lag) = if self.net_ideal {
             self.stats.sent += 2;
             self.stats.delivered += 2;
+            if self.n_blocks > 1 {
+                self.stats.count_blocks_ideal(self.n_blocks);
+            }
+            self.blocks_out[w] = BlockSet::full(self.n_blocks);
             (true, 0.0, None)
         } else {
             let r = self.net.realize(self.seed, w, tag);
-            let ok = self.stats.count_roundtrip(&r, true);
+            let ok = if self.n_blocks > 1 {
+                // Block admission: the reply's blocks realize their fates
+                // independently (keyed by the version tag, exactly like the
+                // whole-message realization); a below-threshold delivery is
+                // loss — the master detects it and the worker retries.
+                let blocks = self.net.realize_blocks(
+                    self.seed,
+                    w,
+                    tag,
+                    self.n_blocks,
+                    r.up_dropped,
+                    false,
+                );
+                self.blocks_out[w] = blocks;
+                self.stats
+                    .count_roundtrip_blocks(&r, blocks, self.net.admits(blocks), true)
+            } else {
+                self.stats.count_roundtrip(&r, true)
+            };
             let dup = if ok && r.up_duplicated { Some(r.dup_lag) } else { None };
             (ok, r.roundtrip_delay(), dup)
         };
@@ -152,6 +179,8 @@ pub(super) fn run_async(
         attempts: vec![0u64; m],
         outstanding: vec![0u64; m],
         shards_given: (0..m).map(|_| Vec::new()).collect(),
+        n_blocks: cluster.net.n_blocks(dim),
+        blocks_out: vec![BlockSet::full(cluster.net.n_blocks(dim)); m],
         stats: NetStats::default(),
     };
     let mut stats_at_row = NetStats::default();
@@ -315,6 +344,19 @@ pub(super) fn run_async(
         if weight != 1.0 {
             vec_ops::scale(&mut scaled, weight as f32);
         }
+        // Block admission: the network delivered only `blocks_out[w]` of
+        // this reply — zero the lost ranges so the update touches exactly
+        // the coordinates that arrived.  A full set is a no-op, so the
+        // legacy (single-block) fold is bit-identical.
+        let blocks = dx.blocks_out[w];
+        if !blocks.is_full() {
+            for b in 0..blocks.len() {
+                if !blocks.contains(b) {
+                    let (lo, hi) = blocks.range(b, dim);
+                    scaled[lo..hi].fill(0.0);
+                }
+            }
+        }
         opt.step(&mut theta, &scaled, updates);
         version += 1;
         updates += 1;
@@ -362,6 +404,7 @@ pub(super) fn run_async(
                 stale: 0,
                 dropped: dnet.dropped as usize,
                 duplicated: dnet.duplicated as usize,
+                blocks: dnet.blocks_delivered as usize,
                 alive: core.membership.alive(),
                 gamma: None,
                 grad_norm,
@@ -390,6 +433,7 @@ pub(super) fn run_async(
         "async",
         &core,
         dx.stats,
+        0,
         mean_staleness,
         driver_start,
     ))

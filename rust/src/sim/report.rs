@@ -23,6 +23,7 @@ pub(crate) fn assemble(
     mode_name: &'static str,
     core: &EngineCore,
     net: NetStats,
+    stale_blocks: u64,
     mean_staleness: Option<f64>,
     driver_start: std::time::Instant,
 ) -> RunReport {
@@ -39,6 +40,7 @@ pub(crate) fn assemble(
         rebalances: core.elastic.rebalances(),
         shard_owners: core.elastic.ownership.owners().to_vec(),
         net,
+        stale_blocks,
         mean_staleness,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     }

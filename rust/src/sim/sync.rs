@@ -37,7 +37,7 @@ use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
 use crate::data::ComputePool;
 use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
-use crate::net::{Transport, VirtualTransport};
+use crate::net::{BlockLedger, BlockSet, Transport, VirtualTransport};
 use crate::straggler::FailureEvent;
 use crate::{Error, Result};
 
@@ -90,8 +90,10 @@ struct IterScratch {
     responders: Vec<usize>,
     /// Per-worker owned-shard lists (ownership snapshot).
     assignment: Vec<Vec<usize>>,
-    /// Shards admitted by the barrier, ascending.
-    included_shards: Vec<usize>,
+    /// Shards admitted by the barrier (ascending) with the delivered block
+    /// set of the reply that carried each — [`BlockSet::full`] whenever
+    /// block admission is off.
+    included_shards: Vec<(usize, BlockSet)>,
     /// Workers admitted by the barrier.
     included_workers: Vec<usize>,
     /// Workers whose primary reply was delivered this window.
@@ -108,6 +110,18 @@ struct IterScratch {
     grads: GradArena,
     /// Staleness-1 gradients carried into the next iteration.
     carryover: GradArena,
+    /// Delivered block set per carryover slot (parallel to `carryover`).
+    carry_blocks: Vec<BlockSet>,
+    /// Block admission only: which `(worker, iter)` blocks have already
+    /// been folded, so a duplicate or straggling copy with an overlapping
+    /// delivered set never double-counts a block.
+    ledger: BlockLedger,
+    /// Stale-admitted block sets this window: `(worker, staleness, fresh)`.
+    stale_admits: Vec<(usize, u64, BlockSet)>,
+    /// Gradients recomputed for stale-admitted blocks.
+    stale_arena: GradArena,
+    /// `(staleness, blocks)` per stale-arena slot.
+    stale_meta: Vec<(u64, BlockSet)>,
 }
 
 impl IterScratch {
@@ -126,9 +140,26 @@ impl IterScratch {
             barrier: PartialBarrier::new(0, m, 1),
             grads: GradArena::new(),
             carryover: GradArena::new(),
+            carry_blocks: Vec::with_capacity(m),
+            ledger: BlockLedger::default(),
+            stale_admits: Vec::with_capacity(m),
+            stale_arena: GradArena::new(),
+            stale_meta: Vec::with_capacity(m),
         }
     }
 }
+
+/// BSP network-aware retry: attempts per missing shard before the master
+/// gives up on the lossy path and fetches over a reliable channel (forced
+/// success), and the exponent cap on the detection-timeout backoff
+/// (`detect_timeout · min(2^k, 2^BSP_RETRY_BACKOFF_CAP)`).
+const BSP_RETRY_MAX_ATTEMPTS: u64 = 8;
+const BSP_RETRY_BACKOFF_CAP: u64 = 5;
+
+/// How many iterations a `(worker, iter)` block-claim entry outlives its
+/// window before the ledger drops it.  Far beyond any plausible straggler
+/// horizon; bounds ledger memory under long lossy runs.
+const BLOCK_LEDGER_HORIZON: u64 = 64;
 
 /// Burn a responder-less (or deliverable-less) detection window of `len`
 /// virtual seconds: in-flight stragglers landing inside it are stale
@@ -196,10 +227,19 @@ pub(super) fn run_sync(
     // All coordinator↔worker traffic goes through the transport; with an
     // ideal NetSpec it is a zero-perturbation passthrough.
     let mut net = VirtualTransport::new(cluster.net.clone(), cluster.seed);
+    // Block admission: chunk each reply into `n_blocks` fixed-size blocks
+    // whose fates realize independently.  `block_size = 0` (or a size ≥
+    // dim) keeps a single block and the legacy binary delivery decision.
+    let n_blocks = cluster.net.n_blocks(dim);
+    net.set_block_count(n_blocks);
     // Cross-iteration reordering is a non-ideal-net phenomenon: with an
     // ideal spec every reply of iteration t pops inside window t and the
     // loop is the lockstep driver, arithmetic untouched.
     let carry = !net.is_ideal();
+    // Partial folds and stale-block claims only matter when replies chunk
+    // into several blocks *and* the network can actually lose some.
+    let blocking = carry && n_blocks > 1;
+    let mut stale_blocks_total = 0u64;
     // Hybrid-reuse ablation: abandoned results computed at θ_t arrive during
     // iteration t+1 and are folded in with staleness 1 (aggregator-weighted).
     let reuse_late = matches!(
@@ -227,7 +267,16 @@ pub(super) fn run_sync(
             barrier,
             grads,
             carryover,
+            carry_blocks,
+            ledger,
+            stale_admits,
+            stale_arena,
+            stale_meta,
         } = &mut scratch;
+        if blocking {
+            ledger.prune_before(iter.saturating_sub(BLOCK_LEDGER_HORIZON));
+        }
+        stale_admits.clear();
         // --- 0. boundary events: elastic membership & shard rebalancing --
         // Scheduled leave/join events land exactly at this boundary, in
         // schedule order (a leave@k followed by join@k nets out alive).
@@ -380,9 +429,17 @@ pub(super) fn run_sync(
                                 }
                             }
                             // Every shard contributes; stragglers pay
-                            // detect+retry (the retry itself is assumed to
-                            // traverse a clean path — one retransmission
-                            // suffices in this model).
+                            // detect+retry.  Under an ideal net the retry
+                            // path cannot lose messages, so exactly one
+                            // retransmission at `detect_timeout + retry_lat`
+                            // suffices — the historical cost, bit for bit.
+                            // Under a lossy net each attempt re-traverses
+                            // the owner's link (fate drawn from its own
+                            // salted stream, so repeated loss is possible),
+                            // with the detection timeout backing off
+                            // exponentially up to a cap until the master
+                            // gives up on the network and fetches the
+                            // result over a reliable channel.
                             let mut retry_max = 0.0f64;
                             for &s in missing.iter() {
                                 let o = core.elastic.ownership.owner(s);
@@ -392,14 +449,37 @@ pub(super) fn run_sync(
                                     profiles[o].base_compute
                                         * core.elastic.ownership.load(o) as f64
                                 };
-                                retry_max = retry_max.max(detect_timeout + retry_lat);
+                                let cost = if carry {
+                                    let mut cost = 0.0f64;
+                                    let mut attempt = 0u64;
+                                    loop {
+                                        let backoff = detect_timeout
+                                            * (1u64 << attempt.min(BSP_RETRY_BACKOFF_CAP))
+                                                as f64;
+                                        cost += backoff + retry_lat;
+                                        if attempt >= BSP_RETRY_MAX_ATTEMPTS {
+                                            break; // reliable-channel fetch
+                                        }
+                                        let r = net.realize_retry(o, iter, attempt);
+                                        if r.delivers() {
+                                            cost += r.roundtrip_delay();
+                                            break;
+                                        }
+                                        attempt += 1;
+                                    }
+                                    cost
+                                } else {
+                                    detect_timeout + retry_lat
+                                };
+                                retry_max = retry_max.max(cost);
                             }
-                            included_shards.extend(0..m);
+                            included_shards
+                                .extend((0..m).map(|s| (s, BlockSet::full(1))));
                             iter_latency = last_arrival.max(retry_max);
                         }
                     }
                 } else {
-                    included_shards.extend(0..m);
+                    included_shards.extend((0..m).map(|s| (s, BlockSet::full(1))));
                     iter_latency = last_arrival;
                 }
             }
@@ -440,7 +520,18 @@ pub(super) fn run_sync(
                         Admission::Included | Admission::IncludedAndClosed => {
                             close_time = ev.at;
                             included_workers.push(ev.worker);
-                            included_shards.extend(assignment[ev.worker].iter().copied());
+                            // Under block admission the reply carries only
+                            // its delivered set; fold exactly those blocks
+                            // and claim them so a straggling duplicate can
+                            // never re-fold one.
+                            let mask = if blocking {
+                                let mk = net.blocks_for(ev.worker, ev.iter, ev.duplicate);
+                                ledger.claim(ev.worker, ev.iter, mk)
+                            } else {
+                                BlockSet::full(1)
+                            };
+                            included_shards
+                                .extend(assignment[ev.worker].iter().map(|&s| (s, mask)));
                             core.membership.record_contribution(ev.worker);
                         }
                         Admission::Abandoned => {
@@ -450,6 +541,25 @@ pub(super) fn run_sync(
                         Admission::Stale => {
                             core.membership.record_abandoned(ev.worker);
                             iter_stale += 1;
+                            // Late blocks from an earlier window: instead
+                            // of discarding the whole reply, admit the
+                            // blocks that survived *and were not already
+                            // folded* as a stale contribution (folded only
+                            // under StalenessDamped; always accounted).
+                            if blocking {
+                                let mk = net.blocks_for(ev.worker, ev.iter, ev.duplicate);
+                                let fresh = ledger.claim(ev.worker, ev.iter, mk);
+                                if !fresh.is_empty() {
+                                    stale_blocks_total += fresh.delivered() as u64;
+                                    if reuse_late {
+                                        stale_admits.push((
+                                            ev.worker,
+                                            iter - ev.iter,
+                                            fresh,
+                                        ));
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -458,7 +568,7 @@ pub(super) fn run_sync(
                 // then independent of arrival order (γ=M reproduces BSP
                 // bit-for-bit; see prop_gamma_m_equals_bsp) and matches
                 // the threaded runtime's order.
-                included_shards.sort_unstable();
+                included_shards.sort_unstable_by_key(|&(s, _)| s);
             }
             (mode, None) => {
                 return Err(Error::Config(format!(
@@ -485,6 +595,7 @@ pub(super) fn run_sync(
             // threaded driver (worker/mod.rs) if it ever triggers: no
             // update, no convergence observation — just advance the clock.
             carryover.clear();
+            carry_blocks.clear();
             now += iter_latency + cluster.master_overhead;
             continue;
         }
@@ -494,20 +605,58 @@ pub(super) fn run_sync(
         // kernel writes into last iteration's buffers, so the steady state
         // allocates nothing.
         grads.clear();
-        for &s in included_shards.iter() {
+        for &(s, _) in included_shards.iter() {
             pool.grad_into(s, &theta, iter, grads.next())?;
+        }
+        // Stale-admitted blocks (reuse ablation only): recompute the late
+        // worker's shards at the *current* θ — the same approximation the
+        // carryover path makes — and fold just the freshly-claimed blocks,
+        // damped by their true staleness.  Appended after the legacy chain
+        // so the fresh+carryover f32 fold order is untouched.
+        stale_arena.clear();
+        stale_meta.clear();
+        for &(w, stal, mask) in stale_admits.iter() {
+            for &s in &assignment[w] {
+                pool.grad_into(s, &theta, iter, stale_arena.next())?;
+                stale_meta.push((stal, mask));
+            }
         }
         aggregate_iter(
             cfg.aggregator,
             grads
                 .results()
                 .iter()
-                .map(|g| Contribution { grad: &g.grad, examples: g.examples, staleness: 0 })
-                .chain(carryover.results().iter().map(|g| Contribution {
+                .zip(included_shards.iter())
+                .map(|(g, &(_, mask))| Contribution {
                     grad: &g.grad,
                     examples: g.examples,
-                    staleness: 1,
-                })),
+                    staleness: 0,
+                    blocks: mask,
+                })
+                .chain(
+                    carryover
+                        .results()
+                        .iter()
+                        .zip(carry_blocks.iter())
+                        .map(|(g, &mask)| Contribution {
+                            grad: &g.grad,
+                            examples: g.examples,
+                            staleness: 1,
+                            blocks: mask,
+                        }),
+                )
+                .chain(
+                    stale_arena
+                        .results()
+                        .iter()
+                        .zip(stale_meta.iter())
+                        .map(|(g, &(stal, mask))| Contribution {
+                            grad: &g.grad,
+                            examples: g.examples,
+                            staleness: stal,
+                            blocks: mask,
+                        }),
+                ),
             &mut agg,
         );
         let grad_norm = vec_ops::norm2(&agg);
@@ -542,6 +691,7 @@ pub(super) fn run_sync(
         // never reached the coordinator, and a straggler still in flight
         // will be classified stale when it lands.
         carryover.clear();
+        carry_blocks.clear();
         if reuse_late {
             // Ascending worker order (not arrival order) keeps the f32
             // fold order identical to the pre-transport driver.
@@ -554,8 +704,22 @@ pub(super) fn run_sync(
             );
             late.sort_unstable();
             for &w in late.iter() {
+                // Under block admission the late reply only carried its
+                // delivered set; claim those blocks now (the reuse *is* the
+                // fold) so a duplicate straggling into a later window can
+                // only stale-admit blocks this carryover did not cover.
+                let mask = if blocking {
+                    let mk = net.blocks_for(w, iter, false);
+                    ledger.claim(w, iter, mk)
+                } else {
+                    BlockSet::full(1)
+                };
+                if blocking && mask.is_empty() {
+                    continue;
+                }
                 for &s in &assignment[w] {
                     pool.grad_into(s, &theta, iter, carryover.next())?;
+                    carry_blocks.push(mask);
                 }
             }
         }
@@ -584,6 +748,7 @@ pub(super) fn run_sync(
                 stale: iter_stale,
                 dropped: dnet.dropped as usize,
                 duplicated: dnet.duplicated as usize,
+                blocks: dnet.blocks_delivered as usize,
                 alive: core.membership.alive(),
                 gamma,
                 grad_norm,
@@ -607,6 +772,7 @@ pub(super) fn run_sync(
         cfg.mode.name(),
         &core,
         net.stats(),
+        stale_blocks_total,
         None,
         driver_start,
     ))

@@ -56,7 +56,7 @@ use crate::coordinator::{BspRecovery, RunConfig, RunReport, SyncMode};
 use crate::data::GradResult;
 use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
-use crate::net::{GradFate, NetShim, NetStats, WorkPlan};
+use crate::net::{BlockLedger, BlockSet, GradFate, NetShim, NetStats, ThetaLedger, WorkPlan};
 use crate::sim::EvalHooks;
 use crate::{Error, Result};
 
@@ -196,6 +196,14 @@ fn run_real_sync(
     // Channel shim realizing the same per-message network fates as the
     // virtual driver's transport.
     let mut shim = NetShim::new(cluster.net.clone(), cluster.seed);
+    // Block admission: the shim chunks reply fates into the same block
+    // count the virtual transport uses, so both drivers fold identical
+    // delivered sets.
+    let n_blocks = cluster.net.n_blocks(dim);
+    shim.set_block_count(n_blocks);
+    let blocking = !shim.is_ideal() && n_blocks > 1;
+    let mut ledger = BlockLedger::default();
+    let mut stale_blocks_total = 0u64;
     // Threads that simulated a stochastic crash and stopped serving: a
     // scheduled join must not re-admit them (ghost workers).
     let mut thread_crashed = vec![false; m];
@@ -250,6 +258,10 @@ fn run_real_sync(
                 log::debug!("iter {iter}: shard ownership rebalanced");
             }
 
+            if blocking {
+                // Same straggler horizon the virtual driver uses.
+                ledger.prune_before(iter.saturating_sub(64));
+            }
             let theta_arc = Arc::new(theta.clone());
             // One O(shards) pass instead of an O(shards) scan per worker.
             let mut assignment = elastic.ownership.grouped();
@@ -328,7 +340,7 @@ fn run_real_sync(
                 }
             };
             let mut barrier = PartialBarrier::new(iter, m, g_target.max(1));
-            let mut grads: Vec<ShardGrad> = Vec::with_capacity(g_target);
+            let mut grads: Vec<(ShardGrad, BlockSet)> = Vec::with_capacity(g_target);
             let mut iter_abandoned = 0usize;
             let mut iter_stale = 0usize;
 
@@ -357,11 +369,29 @@ fn run_real_sync(
                             GradFate::Deliver { duplicate } => duplicate,
                         };
                         let mut shards = shards;
-                        for _copy in 0..(1 + duplicate as usize) {
+                        for copy in 0..(1 + duplicate as usize) {
                             match barrier.offer(worker, msg_iter) {
                                 Admission::Included | Admission::IncludedAndClosed => {
                                     membership.record_contribution(worker);
-                                    grads.extend(std::mem::take(&mut shards));
+                                    // Block admission: fold exactly the
+                                    // delivered set the virtual transport
+                                    // realizes, claiming the blocks so a
+                                    // straggling duplicate never re-folds
+                                    // one.
+                                    let mask = if blocking {
+                                        ledger.claim(
+                                            worker,
+                                            msg_iter,
+                                            shim.blocks_for(worker, msg_iter, copy == 1),
+                                        )
+                                    } else {
+                                        BlockSet::full(1)
+                                    };
+                                    grads.extend(
+                                        std::mem::take(&mut shards)
+                                            .into_iter()
+                                            .map(|sg| (sg, mask)),
+                                    );
                                 }
                                 Admission::Abandoned => {
                                     membership.record_abandoned(worker);
@@ -370,6 +400,18 @@ fn run_real_sync(
                                 Admission::Stale => {
                                     membership.record_abandoned(worker);
                                     iter_stale += 1;
+                                    // Stale-block accounting mirrors the
+                                    // virtual reorder path: surviving
+                                    // blocks not already folded count as
+                                    // stale-admitted.
+                                    if blocking {
+                                        let fresh = ledger.claim(
+                                            worker,
+                                            msg_iter,
+                                            shim.blocks_for(worker, msg_iter, copy == 1),
+                                        );
+                                        stale_blocks_total += fresh.delivered() as u64;
+                                    }
                                 }
                             }
                         }
@@ -436,6 +478,16 @@ fn run_real_sync(
                                 iter_abandoned += copies;
                             } else {
                                 iter_stale += copies;
+                                if blocking {
+                                    for copy in 0..copies {
+                                        let fresh = ledger.claim(
+                                            worker,
+                                            msg_iter,
+                                            shim.blocks_for(worker, msg_iter, copy == 1),
+                                        );
+                                        stale_blocks_total += fresh.delivered() as u64;
+                                    }
+                                }
                             }
                         }
                     }
@@ -451,22 +503,23 @@ fn run_real_sync(
 
             // Aggregate in ascending shard order — the same fold order the
             // virtual simulator uses, so both drivers' f32 sums match.
-            grads.sort_by_key(|g| g.shard);
+            grads.sort_by_key(|g| g.0.shard);
             let contribs: Vec<Contribution<'_>> = grads
                 .iter()
-                .map(|g| Contribution {
+                .map(|(g, mask)| Contribution {
                     grad: &g.grad,
                     examples: g.examples,
                     staleness: 0,
+                    blocks: *mask,
                 })
                 .collect();
             aggregate(cfg.aggregator, &contribs, &mut agg);
             let grad_norm = vec_ops::norm2(&agg);
-            let loss_sum: f64 = grads.iter().filter_map(|g| g.loss_sum).sum();
+            let loss_sum: f64 = grads.iter().filter_map(|(g, _)| g.loss_sum).sum();
             let loss_examples: usize = grads
                 .iter()
-                .filter(|g| g.loss_sum.is_some())
-                .map(|g| g.examples)
+                .filter(|(g, _)| g.loss_sum.is_some())
+                .map(|(g, _)| g.examples)
                 .sum();
             let loss = cfg.loss_form.assemble(loss_sum, loss_examples, &theta);
             let included = grads.len();
@@ -474,7 +527,7 @@ fn run_real_sync(
             // Reclaim the admitted payload buffers for the free-list (they
             // ride back to the slaves in the next Work broadcast).
             drop(contribs);
-            for g in grads.drain(..) {
+            for (g, _) in grads.drain(..) {
                 free.push(g.grad);
             }
             free.truncate(2 * m);
@@ -505,6 +558,7 @@ fn run_real_sync(
                     stale: iter_stale,
                     dropped: dnet.dropped as usize,
                     duplicated: dnet.duplicated as usize,
+                    blocks: dnet.blocks_delivered as usize,
                     alive: membership.alive(),
                     gamma,
                     grad_norm,
@@ -536,6 +590,7 @@ fn run_real_sync(
         rebalances: elastic.rebalances(),
         shard_owners: elastic.ownership.owners().to_vec(),
         net: shim.stats(),
+        stale_blocks: stale_blocks_total,
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
     })
@@ -549,7 +604,10 @@ fn run_real_sync(
 /// discard it and retransmit.  Duplicates are counted (`count_dup =
 /// true`), matching the virtual async policy's accounting; only the
 /// virtual heap materializes the second copy, so no detection path is
-/// needed here — one physical reply exists per roundtrip.
+/// needed here — one physical reply exists per roundtrip.  With block
+/// admission active (`n_blocks > 1`) the reply's delivered set is realized
+/// alongside and written to `blocks_out[w]` for the fold to mask.
+#[allow(clippy::too_many_arguments)]
 fn plan_async_roundtrip(
     net: &crate::net::NetSpec,
     net_ideal: bool,
@@ -558,14 +616,30 @@ fn plan_async_roundtrip(
     attempts: &mut [u64],
     reply_ok: &mut [bool],
     stats: &mut NetStats,
+    n_blocks: usize,
+    blocks_out: &mut [BlockSet],
 ) -> f64 {
+    let tag = attempts[w];
     let r = if net_ideal {
         crate::net::LinkRealization::ideal()
     } else {
-        net.realize(seed, w, attempts[w])
+        net.realize(seed, w, tag)
     };
     attempts[w] += 1;
-    reply_ok[w] = stats.count_roundtrip(&r, true);
+    reply_ok[w] = if net_ideal {
+        let ok = stats.count_roundtrip(&r, true);
+        if n_blocks > 1 {
+            stats.count_blocks_ideal(n_blocks);
+        }
+        blocks_out[w] = BlockSet::full(n_blocks);
+        ok
+    } else if n_blocks > 1 {
+        let blocks = net.realize_blocks(seed, w, tag, n_blocks, r.up_dropped, false);
+        blocks_out[w] = blocks;
+        stats.count_roundtrip_blocks(&r, blocks, net.admits(blocks), true)
+    } else {
+        stats.count_roundtrip(&r, true)
+    };
     r.roundtrip_delay()
 }
 
@@ -602,6 +676,14 @@ fn run_real_async(
     let mut stats_at_row = NetStats::default();
     let mut attempts = vec![0u64; m];
     let mut reply_ok = vec![true; m];
+    // Block admission state: the delivered set of each worker's
+    // outstanding dispatch, masked into the fold.
+    let n_blocks = cluster.net.n_blocks(dim);
+    let mut blocks_out = vec![BlockSet::full(n_blocks); m];
+    // θ snapshots per dispatch: a lost roundtrip retransmits the *held*
+    // snapshot (the virtual driver's worker retries from the θ it already
+    // has), never a fresh one.
+    let mut theta_ledger = ThetaLedger::new(m);
     // Elastic membership: ownership + rebalance state shared with the
     // virtual engine; scheduled events land at update-count boundaries
     // (iteration k ≈ update k·M, the sync-iteration equivalent).
@@ -651,10 +733,14 @@ fn run_real_async(
                     &mut attempts,
                     &mut reply_ok,
                     &mut net_stats,
+                    n_blocks,
+                    &mut blocks_out,
                 );
+                let snap = Arc::new(theta.clone());
+                theta_ledger.hold(w, &snap);
                 tx.send(MasterMsg::Work {
                     iter: 0,
-                    theta: Arc::new(theta.clone()),
+                    theta: snap,
                     shards: Arc::new(assignment[w].clone()),
                     net_delay,
                     compute_scale: elastic.latency_scale(w),
@@ -718,10 +804,14 @@ fn run_real_async(
                         &mut attempts,
                         &mut reply_ok,
                         &mut net_stats,
+                        n_blocks,
+                        &mut blocks_out,
                     );
+                    let snap = Arc::new(theta.clone());
+                    theta_ledger.hold(w, &snap);
                     let _ = work_txs[w].send(MasterMsg::Work {
                         iter: updates,
-                        theta: Arc::new(theta.clone()),
+                        theta: snap,
                         shards: Arc::new(assignment[w].clone()),
                         net_delay,
                         compute_scale: elastic.latency_scale(w),
@@ -763,11 +853,15 @@ fn run_real_async(
                             &mut attempts,
                             &mut reply_ok,
                             &mut net_stats,
+                            n_blocks,
+                            &mut blocks_out,
                         );
                         version_given[worker] = version;
+                        let snap = Arc::new(theta.clone());
+                        theta_ledger.hold(worker, &snap);
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
-                            theta: Arc::new(theta.clone()),
+                            theta: snap,
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
@@ -778,10 +872,12 @@ fn run_real_async(
                     }
                     if !reply_ok[worker] {
                         // The network lost this roundtrip (Work down or
-                        // reply up): discard and retransmit.  The virtual
-                        // driver's worker retries from the θ it holds; here
-                        // the master hands fresh parameters with the
-                        // retransmission, which only reduces staleness.
+                        // reply up): discard and retransmit.  Mirror the
+                        // virtual driver, whose worker retries from the θ
+                        // it already holds: resend the *held* snapshot and
+                        // keep `version_given` — refreshing either here
+                        // would silently shrink the eventual reply's
+                        // staleness and diverge the drivers.
                         let net_delay = plan_async_roundtrip(
                             &cluster.net,
                             net_ideal,
@@ -790,11 +886,15 @@ fn run_real_async(
                             &mut attempts,
                             &mut reply_ok,
                             &mut net_stats,
+                            n_blocks,
+                            &mut blocks_out,
                         );
-                        version_given[worker] = version;
+                        let held = theta_ledger
+                            .held(worker)
+                            .unwrap_or_else(|| Arc::new(theta.clone()));
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
-                            theta: Arc::new(theta.clone()),
+                            theta: held,
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
@@ -825,11 +925,15 @@ fn run_real_async(
                             &mut attempts,
                             &mut reply_ok,
                             &mut net_stats,
+                            n_blocks,
+                            &mut blocks_out,
                         );
                         version_given[worker] = version;
+                        let snap = Arc::new(theta.clone());
+                        theta_ledger.hold(worker, &snap);
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
-                            theta: Arc::new(theta.clone()),
+                            theta: snap,
                             shards: Arc::new(assignment[worker].clone()),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
@@ -861,6 +965,18 @@ fn run_real_async(
                     if weight != 1.0 {
                         vec_ops::scale(&mut scaled, weight);
                     }
+                    // Block admission: zero the ranges of blocks the
+                    // network lost, the same masked fold the virtual async
+                    // policy applies.  A full set is a no-op.
+                    let blocks = blocks_out[worker];
+                    if !blocks.is_full() {
+                        for b in 0..blocks.len() {
+                            if !blocks.contains(b) {
+                                let (lo, hi) = blocks.range(b, dim);
+                                scaled[lo..hi].fill(0.0);
+                            }
+                        }
+                    }
                     for sg in shards.iter() {
                         if let Some(ls) = sg.loss_sum {
                             loss_sum += ls;
@@ -883,10 +999,14 @@ fn run_real_async(
                         &mut attempts,
                         &mut reply_ok,
                         &mut net_stats,
+                        n_blocks,
+                        &mut blocks_out,
                     );
+                    let snap = Arc::new(theta.clone());
+                    theta_ledger.hold(worker, &snap);
                     let _ = work_txs[worker].send(MasterMsg::Work {
                         iter: updates,
-                        theta: Arc::new(theta.clone()),
+                        theta: snap,
                         shards: Arc::new(assignment[worker].clone()),
                         net_delay,
                         compute_scale: elastic.latency_scale(worker),
@@ -918,6 +1038,7 @@ fn run_real_async(
                             stale: 0,
                             dropped: dnet.dropped as usize,
                             duplicated: dnet.duplicated as usize,
+                            blocks: dnet.blocks_delivered as usize,
                             alive: membership.alive(),
                             gamma: None,
                             grad_norm,
@@ -961,6 +1082,7 @@ fn run_real_async(
         rebalances: elastic.rebalances(),
         shard_owners: elastic.ownership.owners().to_vec(),
         net: net_stats,
+        stale_blocks: 0,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)
         } else {

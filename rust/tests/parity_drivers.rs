@@ -458,6 +458,214 @@ fn parity_stale_admissions_virtual_matches_threaded() {
     assert!(diff < 1e-5, "theta diverged: max diff {diff}");
 }
 
+#[test]
+fn parity_async_lost_roundtrip_retransmits_held_theta() {
+    // Regression (retransmit parity): when the network loses an async
+    // roundtrip, the threaded master must resend the *held* θ snapshot and
+    // keep `version_given` — the virtual driver's worker retries from the
+    // θ it already has.  The old behaviour (fresh snapshot + refreshed
+    // version) silently reset the eventual reply's staleness.
+    //
+    // Trace design: two workers; worker 1 sits behind a scripted partition
+    // covering its first three attempt tags, so attempts 0–2 are lost
+    // *deterministically* (no RNG involved) and attempt 3 delivers.  Worker
+    // 0 keeps a clean link and a 20 ms cadence; worker 1's 66 ms cadence
+    // means ~3 master updates elapse per lost attempt.  With the held-θ
+    // retransmit, worker 1's first applied reply carries staleness ≈ 12
+    // (every update since its *initial* dispatch); with the fresh-θ bug it
+    // would only count the updates of the final roundtrip (≈ 3).  The mean
+    // staleness over 14 updates separates the two regimes by ~4×, far
+    // beyond wall-clock ordering jitter.
+    let m = 2;
+    let p = problem(m);
+    let net = NetSpec {
+        partitions: NetSpec::parse_partitions("1@0..3").unwrap(),
+        ..NetSpec::ideal()
+    };
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.02,
+        slow_nodes: vec![(1, 3.3)],
+        seed: 11,
+        ..ClusterSpec::default()
+    }
+    .with_net(net);
+    let cfg = RunConfig {
+        mode: SyncMode::Async { damping: 0.5 },
+        optimizer: OptimizerKind::sgd(0.5),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(14);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+    assert!(virt.net.dropped > 0, "partition produced no drops: {:?}", virt.net);
+    assert!(real.net.dropped > 0, "partition produced no drops: {:?}", real.net);
+
+    // The held-θ retransmit keeps staleness accruing across lost attempts
+    // in *both* drivers; the fresh-θ bug pins the threaded mean near 0.2.
+    let vs = virt.mean_staleness.expect("virtual made updates");
+    let rs = real.mean_staleness.expect("real made updates");
+    assert!(vs > 0.6, "virtual mean staleness collapsed: {vs}");
+    assert!(rs > 0.6, "threaded retransmit reset staleness: {rs}");
+    assert!(
+        (vs - rs).abs() < 0.3,
+        "staleness accounting diverged: virtual {vs}, real {rs}"
+    );
+}
+
+#[test]
+fn parity_blocked_lossy_net_same_block_fates_and_theta() {
+    // Tentpole acceptance: with block admission active (dim 16 chunked
+    // into 4 blocks) over a lossy + duplicating net, both drivers realize
+    // the *same per-block fates* — identical delivered/dropped block
+    // counts and stale-block totals — make the same admission decisions,
+    // and land on the same θ through the shared fraction-weighted fold.
+    let m = 4;
+    let p = problem(m);
+    let iters = 30;
+    let net = NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            dup_lag: 0.0005,
+            ..LinkModel::ideal()
+        },
+        block_size: 4,
+        min_block_frac: 0.0,
+        ..NetSpec::ideal()
+    };
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 21,
+        ..ClusterSpec::default()
+    }
+    .with_net(net);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters);
+
+    let (virt, real) = run_both(&p, &cluster, &cfg);
+
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    // Identical message- and block-level accounting.
+    assert_eq!(virt.net, real.net, "net/block accounting diverged");
+    assert!(virt.net.blocks_sent > 0, "blocking never engaged: {:?}", virt.net);
+    assert!(virt.net.blocks_dropped > 0, "no block was ever lost: {:?}", virt.net);
+    assert_eq!(
+        virt.net.blocks_sent,
+        virt.net.blocks_delivered + virt.net.blocks_dropped
+    );
+    assert_eq!(
+        virt.stale_blocks, real.stale_blocks,
+        "stale-block admission diverged"
+    );
+
+    // Same admission decisions and delivered-block rows per iteration.
+    assert_eq!(virt.recorder.len(), real.recorder.len());
+    for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+        assert_eq!(rv.iter, rr.iter, "row iteration mismatch");
+        assert_eq!(rv.included, rr.included, "iter {} included", rv.iter);
+        assert_eq!(rv.dropped, rr.dropped, "iter {} dropped", rv.iter);
+        assert_eq!(rv.blocks, rr.blocks, "iter {} delivered blocks", rv.iter);
+    }
+    assert_eq!(virt.total_contributions, real.total_contributions);
+
+    // Same masks through the shared fraction-weighted fold ⇒ matching θ.
+    let diff = max_theta_diff(&virt.theta, &real.theta);
+    assert!(diff < 1e-5, "theta diverged: max diff {diff}");
+}
+
+#[test]
+fn blocked_single_block_reproduces_unblocked_run_bitwise() {
+    // Acceptance: `block_size = 0` (blocking off) and `block_size = ∞`
+    // (one block spanning the reply) must reproduce the pre-block
+    // admission decisions and θ bit for bit, under both ideal and lossy
+    // nets — the single-block fate *is* the legacy binary delivery
+    // decision.  An ideal net with real chunking (4 blocks) is also inert:
+    // every block of every reply delivers, so only the accounting grows.
+    let m = 4;
+    let p = problem(m);
+    let lossy_link = LinkModel {
+        drop_prob: 0.25,
+        dup_prob: 0.25,
+        dup_lag: 0.0005,
+        ..LinkModel::ideal()
+    };
+    let mk_cluster = |block_size: usize, lossy: bool| {
+        let net = NetSpec {
+            default_link: if lossy { lossy_link.clone() } else { LinkModel::ideal() },
+            block_size,
+            ..NetSpec::ideal()
+        };
+        ClusterSpec {
+            workers: m,
+            base_compute: 0.005,
+            slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+            seed: 21,
+            ..ClusterSpec::default()
+        }
+        .with_net(net)
+    };
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(30);
+    let run = |cluster: &ClusterSpec| {
+        let mut pool = p.native_pool();
+        sim::run_virtual(&mut pool, cluster, &cfg, &NoEval).unwrap()
+    };
+
+    for lossy in [false, true] {
+        let off = run(&mk_cluster(0, lossy));
+        // dim = 16, so a 1 MiB block size collapses to a single block.
+        let one = run(&mk_cluster(1 << 20, lossy));
+        assert_eq!(off.theta, one.theta, "lossy={lossy}: theta bits diverged");
+        assert_eq!(off.net, one.net, "lossy={lossy}: accounting diverged");
+        assert_eq!(off.net.blocks_sent, 0, "single-block runs must not count blocks");
+        assert_eq!(off.stale_blocks, one.stale_blocks);
+        assert_eq!(off.recorder.len(), one.recorder.len());
+        for (ra, rb) in off.recorder.rows().iter().zip(one.recorder.rows()) {
+            assert_eq!(ra.iter, rb.iter);
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "lossy={lossy} iter {}", ra.iter);
+            assert_eq!(ra.time.to_bits(), rb.time.to_bits(), "lossy={lossy} iter {}", ra.iter);
+            assert_eq!(ra.included, rb.included);
+            assert_eq!(ra.blocks, rb.blocks);
+        }
+    }
+
+    // Ideal net + real chunking: θ identical to the unblocked ideal run;
+    // the block counters fill in (every block delivered, none dropped).
+    let ideal_off = run(&mk_cluster(0, false));
+    let ideal_blocked = run(&mk_cluster(4, false));
+    assert_eq!(ideal_off.theta, ideal_blocked.theta, "ideal blocking perturbed θ");
+    assert!(ideal_blocked.net.blocks_sent > 0);
+    assert_eq!(ideal_blocked.net.blocks_dropped, 0);
+    assert_eq!(
+        ideal_blocked.net.blocks_sent,
+        ideal_blocked.net.blocks_delivered
+    );
+}
+
 // ---------------------------------------------------------------------
 // Golden equivalence: fused kernel & scratch-arena refactor (perf pass)
 // ---------------------------------------------------------------------

@@ -244,6 +244,70 @@ fn prop_sim_driver_deterministic_under_lossy_net() {
 }
 
 #[test]
+fn prop_duplicate_block_sets_fold_each_block_at_most_once() {
+    // Orphaned-block dedup guard: a duplicated reply is an independent
+    // retransmission whose block set may overlap the primary's.  Folding
+    // both through the ledger must claim each (worker, iter, block) at
+    // most once — the dup only contributes blocks the primary lost, and
+    // replaying either copy claims nothing further.
+    use hybriditer::net::BlockLedger;
+    check("block_dedup", 50, |rng| {
+        let workers = 2 + rng.below(6) as usize;
+        let link = LinkModel {
+            drop_prob: rng.uniform(0.1, 0.6),
+            dup_prob: 1.0,
+            ..LinkModel::ideal()
+        };
+        let spec = NetSpec { default_link: link, ..NetSpec::ideal() };
+        let seed = rng.next_u64();
+        let n = 2 + rng.below(7) as usize;
+        let mut ledger = BlockLedger::default();
+        for iter in 0..20u64 {
+            for w in 0..workers {
+                let r = spec.realize(seed, w, iter);
+                let primary = spec.realize_blocks(seed, w, iter, n, r.up_dropped, false);
+                let dup = spec.realize_blocks(seed, w, iter, n, r.up_dropped, true);
+                let got_primary = ledger.claim(w, iter, primary);
+                let got_dup = ledger.claim(w, iter, dup);
+                if got_primary.mask() != primary.mask() {
+                    return Err(format!(
+                        "w{w} iter {iter}: first claim mutated the primary set \
+                         ({:#x} vs {:#x})",
+                        got_primary.mask(),
+                        primary.mask()
+                    ));
+                }
+                if got_primary.mask() & got_dup.mask() != 0 {
+                    return Err(format!(
+                        "w{w} iter {iter}: block double-counted across copies \
+                         (overlap {:#x})",
+                        got_primary.mask() & got_dup.mask()
+                    ));
+                }
+                if got_dup.mask() & !dup.mask() != 0 {
+                    return Err(format!(
+                        "w{w} iter {iter}: dup claim invented blocks it never \
+                         delivered ({:#x} vs {:#x})",
+                        got_dup.mask(),
+                        dup.mask()
+                    ));
+                }
+                if got_primary.mask() | got_dup.mask() != primary.mask() | dup.mask() {
+                    return Err(format!("w{w} iter {iter}: delivered coverage lost"));
+                }
+                // Replays — a re-queued copy of either message — are inert.
+                if !ledger.claim(w, iter, primary).is_empty()
+                    || !ledger.claim(w, iter, dup).is_empty()
+                {
+                    return Err(format!("w{w} iter {iter}: replay claimed fresh blocks"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_empirical_drop_rate_tracks_spec() {
     // Over many roundtrips the observed message drop rate must track the
     // configured probability (loose 3σ-ish tolerance).

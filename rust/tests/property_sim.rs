@@ -55,6 +55,7 @@ fn reports_identical(a: &RunReport, b: &RunReport) -> Result<(), String> {
             || ra.stale != rb.stale
             || ra.dropped != rb.dropped
             || ra.duplicated != rb.duplicated
+            || ra.blocks != rb.blocks
             || ra.alive != rb.alive
         {
             return Err(format!("row for iter {} diverged", ra.iter));
@@ -66,6 +67,7 @@ fn reports_identical(a: &RunReport, b: &RunReport) -> Result<(), String> {
         || a.rejoins != b.rejoins
         || a.rebalances != b.rebalances
         || a.net != b.net
+        || a.stale_blocks != b.stale_blocks
     {
         return Err("run totals diverged".into());
     }
@@ -136,6 +138,9 @@ fn prop_carry_mode_run_is_pure_function_of_seed() {
         };
         let net = NetSpec {
             default_link: LinkModel::lossy(rng.uniform(0.0, 0.2)),
+            // Half the cases chunk replies into blocks (dim 8 → 3 blocks):
+            // determinism must survive the partial-admission machinery too.
+            block_size: if rng.next_f64() < 0.5 { 3 } else { 0 },
             ..NetSpec::ideal()
         }
         .with_override(m - 1, slow_up);
@@ -151,6 +156,81 @@ fn prop_carry_mode_run_is_pure_function_of_seed() {
         let a = run_once(&p, &cluster, &cfg);
         let b = run_once(&p, &cluster, &cfg);
         reports_identical(&a, &b)
+    });
+}
+
+#[test]
+fn prop_block_conservation_across_drivers() {
+    // Block conservation under lossy sweeps, in *both* drivers: every
+    // block the network dispatched is either delivered or dropped
+    // (`blocks_sent == blocks_delivered + blocks_dropped`), stale-admitted
+    // blocks never exceed what was dispatched, and the per-row delivered
+    // counts never overrun the run total (rows can undercount only by the
+    // tail the final partial window discards).
+    use hybriditer::coordinator::Coordinator;
+    use hybriditer::worker::NativeKrrFactory;
+    check("block_conservation", 6, |rng| {
+        let m = 4 + rng.below(3) as usize;
+        let p = quick_problem(m, rng.next_u64());
+        let net = NetSpec {
+            default_link: LinkModel {
+                drop_prob: rng.uniform(0.05, 0.4),
+                dup_prob: rng.uniform(0.0, 0.4),
+                dup_lag: 0.0005,
+                ..LinkModel::ideal()
+            },
+            // dim 8 → 2–8 blocks per reply.
+            block_size: 1 + rng.below(4) as usize,
+            min_block_frac: if rng.next_f64() < 0.5 { 0.0 } else { 0.5 },
+            ..NetSpec::ideal()
+        };
+        let cluster = ClusterSpec {
+            workers: m,
+            base_compute: 0.002,
+            slow_nodes: (1..m).map(|w| (w, 1.0 + w as f64)).collect(),
+            seed: rng.next_u64(),
+            ..ClusterSpec::default()
+        }
+        .with_net(net);
+        let gamma = 1 + rng.below(m as u64) as usize;
+        let cfg = RunConfig {
+            mode: SyncMode::Hybrid { gamma },
+            optimizer: OptimizerKind::sgd(0.5),
+            loss_form: LossForm::krr(0.01),
+            eval_every: 0,
+            record_every: 1,
+            ..RunConfig::default()
+        }
+        .with_iters(25);
+        let virt = run_once(&p, &cluster, &cfg);
+        let coord = Coordinator::new(cluster.clone(), cfg.clone())
+            .map_err(|e| e.to_string())?;
+        let factory = NativeKrrFactory::for_problem(&p);
+        let real = coord.run_real(&factory, &NoEval).map_err(|e| e.to_string())?;
+        for (name, rep) in [("virtual", &virt), ("real", &real)] {
+            let n = &rep.net;
+            if n.blocks_sent == 0 {
+                return Err(format!("{name}: blocking never engaged ({n:?})"));
+            }
+            if n.blocks_sent != n.blocks_delivered + n.blocks_dropped {
+                return Err(format!("{name}: block conservation broken ({n:?})"));
+            }
+            if rep.stale_blocks > n.blocks_sent {
+                return Err(format!(
+                    "{name}: stale-admitted {} blocks out of {} dispatched",
+                    rep.stale_blocks, n.blocks_sent
+                ));
+            }
+            let row_blocks: u64 =
+                rep.recorder.rows().iter().map(|r| r.blocks as u64).sum();
+            if row_blocks > n.blocks_delivered {
+                return Err(format!(
+                    "{name}: rows claim {row_blocks} delivered blocks, run total {}",
+                    n.blocks_delivered
+                ));
+            }
+        }
+        Ok(())
     });
 }
 
