@@ -35,6 +35,7 @@ use hybriditer::net::{LinkDir, LinkModel, NetSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::straggler::DelayModel;
+use hybriditer::trace;
 
 const M: usize = 16;
 const ITERS: u64 = 600;
@@ -50,6 +51,19 @@ fn run_once(
     up_lat: f64,
     block_size: usize,
     seed: u64,
+) -> RunReport {
+    run_once_traced(problem, gamma, drop, up_lat, block_size, seed, &mut trace::NoopSink)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_once_traced(
+    problem: &KrrProblem,
+    gamma: usize,
+    drop: f64,
+    up_lat: f64,
+    block_size: usize,
+    seed: u64,
+    sink: &mut dyn trace::TraceSink,
 ) -> RunReport {
     let mut net = if drop > 0.0 { NetSpec::lossy(drop) } else { NetSpec::ideal() };
     net.block_size = block_size;
@@ -88,7 +102,7 @@ fn run_once(
     }
     .with_iters(ITERS);
     let mut pool = problem.native_pool();
-    sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap()
+    sim::run_virtual_traced(&mut pool, &cluster, &cfg, &NoEval, sink).unwrap()
 }
 
 struct Cell {
@@ -399,6 +413,25 @@ fn main() {
     );
     std::fs::create_dir_all("results").unwrap();
     std::fs::write("results/BENCH_f4_network.json", json).unwrap();
+
+    // Flight-recorder capture of the headline lossy cell (γ = 3M/4 at 10%
+    // drop, seed 0): one extra run with the journal attached, exported as
+    // JSONL + a Chrome trace for Perfetto (see docs/OBSERVABILITY.md).
+    let mut journal = trace::JournalSink::new();
+    let traced = run_once_traced(&problem, g_ref, 0.1, 0.0, 0, 0, &mut journal);
+    journal
+        .write_jsonl(std::path::Path::new("results/f4_headline_trace.jsonl"))
+        .unwrap();
+    journal
+        .write_chrome(std::path::Path::new("results/f4_headline_trace.chrome.json"))
+        .unwrap();
+    if let Some(ts) = &traced.trace {
+        println!(
+            "\ntraced headline cell: {} events journaled -> \
+             results/f4_headline_trace.jsonl (+ .chrome.json)",
+            ts.events
+        );
+    }
     println!(
         "\nheadline: gamma={g_ref} iters-to-target {:.1} -> {:.1} at 10% drop (x{inflation:.2}); \
          {} stale admissions at a {}s tail uplink; block admission x{block_speedup:.2} \

@@ -66,6 +66,10 @@
 //! timing = "virtual"    # virtual | real
 //! backend = "xla"       # xla | native
 //! seed = 1
+//!
+//! [trace]
+//! out = "run.trace.jsonl"          # flight-recorder journal (JSONL)
+//! chrome = "run.trace.chrome.json" # Chrome trace-event export (Perfetto)
 //! ```
 
 use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
@@ -104,6 +108,12 @@ pub struct ExperimentConfig {
     pub timing: TimingMode,
     pub backend: Backend,
     pub out_csv: Option<String>,
+    /// `[trace] out`: write the flight-recorder journal (JSONL) here.
+    /// Setting either trace path attaches a [`crate::trace::JournalSink`]
+    /// to the run (see `docs/OBSERVABILITY.md`).
+    pub trace_out: Option<String>,
+    /// `[trace] chrome`: write the Chrome trace-event export here.
+    pub trace_chrome: Option<String>,
     /// `[bench] threads`: sweep/worker pool size for parallel sweeps
     /// (0 = auto: available parallelism).  Applied process-wide via
     /// [`crate::util::pool::set_default_threads`].
@@ -325,6 +335,8 @@ impl ExperimentConfig {
             timing,
             backend,
             out_csv: v.get("run.out_csv").and_then(Value::as_str).map(String::from),
+            trace_out: v.get("trace.out").and_then(Value::as_str).map(String::from),
+            trace_chrome: v.get("trace.chrome").and_then(Value::as_str).map(String::from),
             bench_threads: v.opt_usize("bench.threads", 0),
         })
     }
@@ -454,6 +466,18 @@ backend = "native"
     fn bench_threads_parses() {
         let cfg = ExperimentConfig::from_toml("[bench]\nthreads = 6").unwrap();
         assert_eq!(cfg.bench_threads, 6);
+    }
+
+    #[test]
+    fn trace_section_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_toml(
+            "[trace]\nout = \"t.jsonl\"\nchrome = \"t.chrome.json\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("t.jsonl"));
+        assert_eq!(cfg.trace_chrome.as_deref(), Some("t.chrome.json"));
+        let off = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert!(off.trace_out.is_none() && off.trace_chrome.is_none());
     }
 
     #[test]

@@ -205,6 +205,10 @@ pub struct RunReport {
     pub mean_staleness: Option<f64>,
     /// Wall-clock of the driver itself (not virtual time), seconds.
     pub driver_secs: f64,
+    /// Flight-recorder roll-up (per-worker lanes, latency/abandonment
+    /// histograms) when the run was traced through a
+    /// [`crate::trace::JournalSink`]; `None` with the default `NoopSink`.
+    pub trace: Option<crate::trace::TraceSummary>,
 }
 
 impl RunReport {
@@ -297,6 +301,17 @@ impl Coordinator {
     ) -> Result<RunReport> {
         crate::worker::run_real(&self.cluster, &self.cfg, factory, hooks)
     }
+
+    /// [`Coordinator::run_real`] with a flight-recorder sink attached; see
+    /// `docs/OBSERVABILITY.md`.
+    pub fn run_real_traced(
+        &self,
+        factory: &dyn crate::worker::ComputeFactory,
+        hooks: &dyn crate::sim::EvalHooks,
+        sink: &mut dyn crate::trace::TraceSink,
+    ) -> Result<RunReport> {
+        crate::worker::run_real_traced(&self.cluster, &self.cfg, factory, hooks, sink)
+    }
 }
 
 #[cfg(test)]
@@ -378,6 +393,7 @@ mod tests {
             stale_blocks: 0,
             mean_staleness: None,
             driver_secs: 0.0,
+            trace: None,
         };
         assert!((rep.abandon_rate() - 0.25).abs() < 1e-12);
     }

@@ -52,6 +52,7 @@ pub mod optim;
 pub mod runtime;
 pub mod sim;
 pub mod straggler;
+pub mod trace;
 pub mod util;
 pub mod worker;
 

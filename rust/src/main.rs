@@ -109,6 +109,16 @@ fn cmd_train(argv: &[String]) -> i32 {
             "threads",
             "",
             "sweep/worker pool size (default: [bench] threads, else available parallelism)",
+        )
+        .opt(
+            "trace-out",
+            "",
+            "write the flight-recorder journal (JSONL) here (overrides config)",
+        )
+        .opt(
+            "trace-chrome",
+            "",
+            "write the Chrome trace-event export here (overrides config)",
         );
     let parsed = match spec.parse(argv) {
         Ok(p) => p,
@@ -215,13 +225,31 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
         cfg.backend
     );
 
+    // Flight recorder: either --trace-* flag beats the [trace] section;
+    // any configured export attaches a JournalSink to the run.
+    let trace_out = if !parsed.get("trace-out").is_empty() {
+        Some(parsed.get("trace-out").to_string())
+    } else {
+        cfg.trace_out.clone()
+    };
+    let trace_chrome = if !parsed.get("trace-chrome").is_empty() {
+        Some(parsed.get("trace-chrome").to_string())
+    } else {
+        cfg.trace_chrome.clone()
+    };
+    let mut journal = hybriditer::trace::JournalSink::new();
+    let mut noop = hybriditer::trace::NoopSink;
+    let tracing = trace_out.is_some() || trace_chrome.is_some();
+    let sink: &mut dyn hybriditer::trace::TraceSink =
+        if tracing { &mut journal } else { &mut noop };
+
     let report = match (&cfg.problem_kind, cfg.timing) {
         (ProblemKind::Krr, TimingMode::Virtual) => {
             let problem = KrrProblem::generate(&cfg.krr)?;
             match cfg.backend {
                 Backend::Native => {
                     let mut pool = problem.native_pool();
-                    sim::run_virtual(&mut pool, &cfg.cluster, &cfg.run, &problem)?
+                    sim::run_virtual_traced(&mut pool, &cfg.cluster, &cfg.run, &problem, sink)?
                 }
                 Backend::Xla => {
                     let artifacts = ArtifactSet::discover()?;
@@ -233,7 +261,7 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
                         &problem.shards,
                         problem.spec.lambda as f32,
                     )?;
-                    sim::run_virtual(&mut pool, &cfg.cluster, &cfg.run, &problem)?
+                    sim::run_virtual_traced(&mut pool, &cfg.cluster, &cfg.run, &problem, sink)?
                 }
             }
         }
@@ -243,7 +271,7 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
             match cfg.backend {
                 Backend::Native => {
                     let factory = NativeKrrFactory::for_problem(&problem);
-                    coord.run_real(&factory, &problem)?
+                    coord.run_real_traced(&factory, &problem, sink)?
                 }
                 Backend::Xla => {
                     let artifacts = ArtifactSet::discover()?;
@@ -253,7 +281,7 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
                         problem.shards.clone(),
                         problem.spec.lambda as f32,
                     )?;
-                    coord.run_real(&factory, &problem)?
+                    coord.run_real_traced(&factory, &problem, sink)?
                 }
             }
         }
@@ -271,11 +299,22 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
             )?;
             let mut run = cfg.run.clone();
             run.init_theta = Some(hybriditer::lm::init::init_params(pool.task(), cfg.krr.seed));
-            sim::run_virtual(&mut pool, &cfg.cluster, &run, &NoEval)?
+            sim::run_virtual_traced(&mut pool, &cfg.cluster, &run, &NoEval, sink)?
         }
     };
 
     println!("{}", report.summary());
+    if let Some(ts) = &report.trace {
+        print!("{}", ts.render());
+    }
+    if let Some(path) = &trace_out {
+        journal.write_jsonl(std::path::Path::new(path))?;
+        log::info!("trace journal -> {path}");
+    }
+    if let Some(path) = &trace_chrome {
+        journal.write_chrome(std::path::Path::new(path))?;
+        log::info!("chrome trace -> {path}");
+    }
     let out = if !csv_override.is_empty() {
         Some(csv_override.to_string())
     } else {

@@ -12,16 +12,16 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    // `blocks` is appended last so existing column-indexed readers keep
-    // working on pre-block CSVs.
+    // `blocks` and `stale_blocks` are appended last (in that order) so
+    // existing column-indexed readers keep working on older CSVs.
     writeln!(
         f,
-        "iter,time,loss,eval_loss,theta_err,included,abandoned,stale,dropped,duplicated,alive,gamma,grad_norm,blocks"
+        "iter,time,loss,eval_loss,theta_err,included,abandoned,stale,dropped,duplicated,alive,gamma,grad_norm,blocks,stale_blocks"
     )?;
     for r in rec.rows() {
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.iter,
             r.time,
             r.loss,
@@ -35,7 +35,8 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
             r.alive,
             r.gamma.map(|g| g.to_string()).unwrap_or_default(),
             r.grad_norm,
-            r.blocks
+            r.blocks,
+            r.stale_blocks
         )?;
     }
     Ok(())
@@ -87,6 +88,7 @@ mod tests {
             dropped: 5,
             duplicated: 1,
             blocks: 6,
+            stale_blocks: 2,
             alive: 4,
             gamma: Some(3),
             grad_norm: 0.7,
@@ -98,10 +100,10 @@ mod tests {
         let header = lines.next().unwrap();
         assert!(header.starts_with("iter,time,loss"));
         assert!(header.contains("stale,dropped,duplicated"));
-        assert!(header.ends_with(",blocks"));
+        assert!(header.ends_with(",blocks,stale_blocks"));
         let row = lines.next().unwrap();
         assert!(row.starts_with("0,0.5,2,2.1,,3,1,2,5,1,4,3,0.7"));
-        assert!(row.ends_with(",6"));
+        assert!(row.ends_with(",6,2"));
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -127,6 +127,79 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_quantiles_and_mean() {
+        let h = Histogram::new(1.0, 10.0, 10);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse_to_its_bucket() {
+        let mut h = Histogram::new(1.0, 100.0, 20);
+        h.record(7.0);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 7.0).abs() < 1e-12);
+        // Every positive quantile of a one-sample histogram is that
+        // sample's bucket upper edge (ceil(q·1)=1 targets the only sample).
+        let edge = h.quantile(1.0);
+        assert!(edge >= 7.0 && edge < 7.0 * (100.0f64 / 1.0).powf(1.0 / 20.0));
+        assert_eq!(h.quantile(0.5), edge);
+        assert_eq!(h.quantile(0.01), edge);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let samples: Vec<f64> = (1..=90).map(|i| i as f64).collect();
+        let fill = |range: std::ops::Range<usize>| {
+            let mut h = Histogram::new(1.0, 100.0, 30);
+            for &v in &samples[range] {
+                h.record(v);
+            }
+            h
+        };
+        // (a ∪ b) ∪ c
+        let mut left = fill(0..30);
+        left.merge(&fill(30..60));
+        left.merge(&fill(60..90));
+        // a ∪ (c ∪ b) — different association and order
+        let mut right_inner = fill(60..90);
+        right_inner.merge(&fill(30..60));
+        let mut right = fill(0..30);
+        right.merge(&right_inner);
+        assert_eq!(left.count(), right.count());
+        assert!((left.mean() - right.mean()).abs() < 1e-9);
+        for q in [0.01, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), right.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn p50_p99_edges_on_known_mass() {
+        // Bucket edges are exp(k·ln(max/min)/n) — compare with a relative
+        // tolerance, not bitwise, since exp(ln(x)) need not round-trip.
+        fn close(a: f64, b: f64) -> bool {
+            (a / b - 1.0).abs() < 1e-12
+        }
+        // 99 samples all in one bucket: every quantile is that bucket edge.
+        let mut h = Histogram::new(1.0, 100.0, 2); // buckets [1,10), [10,100)
+        for _ in 0..99 {
+            h.record(2.0);
+        }
+        assert!(close(h.quantile(0.5), 10.0));
+        assert!(close(h.quantile(0.99), 10.0));
+        // One sample in the upper bucket: p99 of 100 targets sample #99,
+        // still in the lower bucket; p100 crosses into the upper edge.
+        h.record(50.0);
+        assert_eq!(h.count(), 100);
+        assert!(close(h.quantile(0.5), 10.0));
+        assert!(close(h.quantile(0.99), 10.0));
+        assert!(close(h.quantile(1.0), 100.0));
+    }
+
+    #[test]
     fn merge_combines() {
         let mut a = Histogram::new(1.0, 100.0, 20);
         let mut b = Histogram::new(1.0, 100.0, 20);

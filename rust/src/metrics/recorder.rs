@@ -32,6 +32,9 @@ pub struct IterRow {
     /// Gradient blocks delivered this iteration (0 unless block admission
     /// chunks replies into more than one block — see `docs/NETWORK.md`).
     pub blocks: usize,
+    /// Blocks claimed off stale arrivals this iteration (the late-block
+    /// re-entry path of `docs/SIM.md`; 0 unless block admission is on).
+    pub stale_blocks: usize,
     /// Workers alive at the end of the iteration.
     pub alive: usize,
     /// γ in effect this iteration (None for BSP/async).
@@ -90,13 +93,17 @@ impl Recorder {
     }
 
     /// Summary of per-iteration durations.
+    ///
+    /// Rows are normally time-ordered, but stale-heavy async traces can
+    /// record a row pair whose `time` fields are non-monotone; a negative
+    /// duration would poison the mean, so each duration clamps at 0.
     pub fn iter_time_summary(&self) -> Option<Summary> {
         if self.rows.len() < 2 {
             return None;
         }
         let mut durs = Vec::with_capacity(self.rows.len() - 1);
         for w in self.rows.windows(2) {
-            durs.push(w[1].time - w[0].time);
+            durs.push((w[1].time - w[0].time).max(0.0));
         }
         Some(Summary::of(&durs))
     }
@@ -150,6 +157,7 @@ mod tests {
             dropped: 0,
             duplicated: 0,
             blocks: 0,
+            stale_blocks: 0,
             alive: 4,
             gamma: Some(4),
             grad_norm: 1.0,
@@ -192,5 +200,18 @@ mod tests {
         let s = rec.iter_time_summary().unwrap();
         assert_eq!(s.count, 10);
         assert!((s.mean - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iter_time_summary_clamps_non_monotone_rows() {
+        let mut rec = Recorder::new();
+        rec.push(row(0, 0.0, 1.0, None));
+        rec.push(row(1, 1.0, 1.0, None));
+        rec.push(row(2, 0.25, 1.0, None)); // out-of-order stale row
+        rec.push(row(3, 1.25, 1.0, None));
+        let s = rec.iter_time_summary().unwrap();
+        assert_eq!(s.count, 3);
+        // durations: 1.0, clamp(-0.75)=0.0, 1.0 — mean 2/3, never negative
+        assert!((s.mean - 2.0 / 3.0).abs() < 1e-12, "mean={}", s.mean);
     }
 }

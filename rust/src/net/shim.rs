@@ -12,6 +12,11 @@
 //! assume the addressed worker actually replies; a stochastic thread
 //! crash diverges the drivers' counts, just as it already diverges their
 //! abandonment totals.)
+//!
+//! The same purity is what makes the threaded flight recorder honest: the
+//! master emits [`crate::trace`] fate events by re-realizing `(seed,
+//! worker, iteration)` right before it consults the shim, so the journaled
+//! fates cannot disagree with the plans the shim actually executes.
 
 use std::sync::Arc;
 

@@ -1,5 +1,10 @@
 //! The whole cluster's network specification and its pure per-message
 //! realization function.
+//!
+//! Purity is a load-bearing property: both drivers *and* the flight
+//! recorder ([`crate::trace::emit_roundtrip_fates`]) realize each message's
+//! fate independently from the same key, and the trace-parity oracles in
+//! `tests/parity_drivers.rs` rely on those realizations agreeing exactly.
 
 use super::block::{BlockSet, MAX_BLOCKS};
 use super::link::{LinkModel, LinkRealization};

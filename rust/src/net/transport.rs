@@ -1,4 +1,10 @@
 //! Virtual-time delivery for the discrete-event simulator.
+//!
+//! Message fates realized here are pure in `(seed, worker, iter)`, which is
+//! what lets the flight recorder ([`crate::trace`]) re-realize them at
+//! dispatch time without consuming any RNG state: the journaled fate
+//! sequence is identical to what the transport actually delivers
+//! (`trace::tests::roundtrip_fates_match_transport` pins this down).
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;

@@ -31,6 +31,7 @@ use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
 use crate::net::{BlockSet, NetSpec, NetStats};
 use crate::straggler::{FailureEvent, StragglerProfile};
+use crate::trace::{self, TraceEvent, TraceSink};
 use crate::Result;
 
 use super::engine::{EngineCore, Event};
@@ -77,6 +78,7 @@ impl Dispatcher<'_> {
     fn dispatch(
         &mut self,
         core: &mut EngineCore,
+        sink: &mut dyn TraceSink,
         w: usize,
         base: f64,
         tail: f64,
@@ -98,6 +100,11 @@ impl Dispatcher<'_> {
             per_shard * core.elastic.latency_scale(w) * shards.len() as f64
         };
         let tag = self.attempts[w];
+        // Fate events key on the version tag — the same pure realization
+        // key the dispatch itself uses below.
+        if sink.enabled() {
+            trace::emit_roundtrip_fates(sink, self.net, self.seed, w, tag, self.n_blocks, base);
+        }
         let (delivers, net_delay, dup_lag) = if self.net_ideal {
             self.stats.sent += 2;
             self.stats.delivered += 2;
@@ -147,6 +154,7 @@ pub(super) fn run_async(
     cfg: &RunConfig,
     hooks: &dyn EvalHooks,
     driver_start: std::time::Instant,
+    sink: &mut dyn TraceSink,
 ) -> Result<RunReport> {
     let damping = match cfg.mode {
         SyncMode::Async { damping } => damping,
@@ -203,10 +211,15 @@ pub(super) fn run_async(
     // The iteration-0 boundary precedes the opening dispatches (a leave@0
     // suppresses that worker's first roundtrip); joins at boundary 0 are
     // covered by the opening dispatches themselves.
-    if (cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0)
-        && core.boundary(0, &cluster.elastic, cluster.rebalance_every)?
-    {
-        core.elastic.ownership.grouped_into(&mut assignment);
+    if cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0 {
+        let rebalanced = core.boundary(0, &cluster.elastic, cluster.rebalance_every)?;
+        if rebalanced {
+            core.elastic.ownership.grouped_into(&mut assignment);
+        }
+        if sink.enabled() {
+            let owners = core.elastic.ownership.owners();
+            trace::emit_boundary(sink, &cluster.elastic, 0, rebalanced, owners, 0.0);
+        }
     }
     // Next update-count boundary (in sync-iteration equivalents) whose
     // scheduled events and rebalance cadence are still unprocessed.
@@ -215,7 +228,7 @@ pub(super) fn run_async(
         if core.evicted[w] {
             continue;
         }
-        dx.dispatch(&mut core, w, 0.0, 0.0, &assignment[w]);
+        dx.dispatch(&mut core, sink, w, 0.0, 0.0, &assignment[w]);
     }
 
     loop {
@@ -227,9 +240,14 @@ pub(super) fn run_async(
             if !had_events && cluster.rebalance_every == 0 {
                 continue;
             }
-            if core.boundary(b, &cluster.elastic, cluster.rebalance_every)? {
+            let rebalanced = core.boundary(b, &cluster.elastic, cluster.rebalance_every)?;
+            if rebalanced {
                 core.elastic.ownership.grouped_into(&mut assignment);
                 log::debug!("async boundary {b}: shard ownership rebalanced");
+            }
+            if sink.enabled() {
+                let owners = core.elastic.ownership.owners();
+                trace::emit_boundary(sink, &cluster.elastic, b, rebalanced, owners, now);
             }
             // Policy side of a join: hand the re-admitted worker a fresh θ
             // snapshot (staleness 0) and dispatch its next roundtrip.  Its
@@ -243,7 +261,7 @@ pub(super) fn run_async(
                     theta_given[ev.worker].copy_from_slice(&theta);
                     version_given[ev.worker] = version;
                     let shards = &assignment[ev.worker];
-                    dx.dispatch(&mut core, ev.worker, now, cluster.master_overhead, shards);
+                    dx.dispatch(&mut core, sink, ev.worker, now, cluster.master_overhead, shards);
                 }
             }
         }
@@ -252,6 +270,10 @@ pub(super) fn run_async(
         let Some(ev) = core.heap.pop() else { break };
         now = ev.at;
         let w = ev.worker;
+        if sink.enabled() && ev.delivers {
+            let deliv = TraceEvent::Delivery { duplicate: ev.duplicate };
+            sink.emit(ev.iter, w as i64, now, deliv);
+        }
         if core.evicted[w] || ev.iter != dx.outstanding[w] {
             // Pre-eviction leftovers, duplicate copies, and pre-rejoin
             // stragglers: the eviction mask / version tag detects them and
@@ -264,12 +286,15 @@ pub(super) fn run_async(
         if !ev.delivers {
             // The network lost this roundtrip: the update never reaches
             // the master; the worker retries from the same θ.
-            dx.dispatch(&mut core, w, now, 0.0, &assignment[w]);
+            dx.dispatch(&mut core, sink, w, now, 0.0, &assignment[w]);
             continue;
         }
         // Failure check at delivery time.
         let fev = core.fstates[w].step(updates, &mut core.fail_rngs[w]);
         core.membership.observe(w, fev);
+        if sink.enabled() && matches!(fev, FailureEvent::Crashed) {
+            sink.emit(updates, w as i64, now, TraceEvent::Crash);
+        }
         match fev {
             FailureEvent::Crashed | FailureEvent::Down => {
                 if core.membership.alive() == 0 {
@@ -280,7 +305,7 @@ pub(super) fn run_async(
             }
             FailureEvent::TransientDrop => {
                 // Result lost; worker retries from the same θ.
-                dx.dispatch(&mut core, w, now, 0.0, &assignment[w]);
+                dx.dispatch(&mut core, sink, w, now, 0.0, &assignment[w]);
                 core.membership.record_abandoned(w);
                 continue;
             }
@@ -294,7 +319,7 @@ pub(super) fn run_async(
             // the same), so the snapshot and version refresh.
             theta_given[w].copy_from_slice(&theta);
             version_given[w] = version;
-            dx.dispatch(&mut core, w, now, cluster.master_overhead, &assignment[w]);
+            dx.dispatch(&mut core, sink, w, now, cluster.master_overhead, &assignment[w]);
             continue;
         }
 
@@ -368,7 +393,7 @@ pub(super) fn run_async(
         let res_loss = res.loss_sum;
         let res_examples = res.examples;
         let applied_shards = dx.shards_given[w].len();
-        dx.dispatch(&mut core, w, now, cluster.master_overhead, &assignment[w]);
+        dx.dispatch(&mut core, sink, w, now, cluster.master_overhead, &assignment[w]);
 
         // Loss estimate: EMA over per-report losses (noisy but cheap).
         if let Some(ls) = res_loss {
@@ -405,6 +430,7 @@ pub(super) fn run_async(
                 dropped: dnet.dropped as usize,
                 duplicated: dnet.duplicated as usize,
                 blocks: dnet.blocks_delivered as usize,
+                stale_blocks: 0,
                 alive: core.membership.alive(),
                 gamma: None,
                 grad_norm,
@@ -436,5 +462,6 @@ pub(super) fn run_async(
         0,
         mean_staleness,
         driver_start,
+        sink.summary(),
     ))
 }

@@ -17,6 +17,12 @@
 //! their own semantics on top: the sync policy opens a
 //! [`crate::coordinator::barrier::PartialBarrier`] per window, the async
 //! policy applies every delivered reply immediately.
+//!
+//! Both policies can thread a [`crate::trace::TraceSink`] through their run
+//! loops: boundary events, message fates, deliveries and barrier closes are
+//! journaled in virtual time, and `tests/parity_drivers.rs` holds the
+//! resulting event sequences identical to the threaded runtime's (see
+//! `docs/OBSERVABILITY.md`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

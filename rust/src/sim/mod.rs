@@ -100,11 +100,32 @@ impl EvalHooks for crate::data::KrrProblem {
 }
 
 /// Run a full experiment in virtual time.
+///
+/// Tracing is disabled ([`crate::trace::NoopSink`]): every emission site is
+/// guarded behind `sink.enabled()`, so this path allocates nothing for
+/// observability and θ is bit-identical to pre-tracer builds.
 pub fn run_virtual(
     pool: &mut dyn ComputePool,
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    run_virtual_traced(pool, cluster, cfg, hooks, &mut crate::trace::NoopSink)
+}
+
+/// Run a full experiment in virtual time, recording structured trace events
+/// into `sink` (see [`crate::trace`]).
+///
+/// Event timestamps are in virtual seconds — the same clock the event heap
+/// runs on — so a [`crate::trace::JournalSink`] journal from this driver can
+/// be compared against the threaded runtime's after timestamp normalization
+/// (`tests/parity_drivers.rs` does exactly that).
+pub fn run_virtual_traced(
+    pool: &mut dyn ComputePool,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    hooks: &dyn EvalHooks,
+    sink: &mut dyn crate::trace::TraceSink,
 ) -> Result<RunReport> {
     let driver_start = std::time::Instant::now();
     let m = pool.n_workers();
@@ -116,9 +137,9 @@ pub fn run_virtual(
     }
     crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
     if cfg.mode.is_async() {
-        return async_mode::run_async(pool, cluster, cfg, hooks, driver_start);
+        return async_mode::run_async(pool, cluster, cfg, hooks, driver_start, sink);
     }
-    sync::run_sync(pool, cluster, cfg, hooks, driver_start)
+    sync::run_sync(pool, cluster, cfg, hooks, driver_start, sink)
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ pub(crate) fn assemble(
     stale_blocks: u64,
     mean_staleness: Option<f64>,
     driver_start: std::time::Instant,
+    trace: Option<crate::trace::TraceSummary>,
 ) -> RunReport {
     RunReport {
         recorder,
@@ -43,5 +44,6 @@ pub(crate) fn assemble(
         stale_blocks,
         mean_staleness,
         driver_secs: driver_start.elapsed().as_secs_f64(),
+        trace,
     }
 }

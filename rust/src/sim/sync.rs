@@ -39,6 +39,7 @@ use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
 use crate::net::{BlockLedger, BlockSet, Transport, VirtualTransport};
 use crate::straggler::FailureEvent;
+use crate::trace::{self, TraceEvent, TraceSink};
 use crate::{Error, Result};
 
 use super::engine::{EngineCore, Event};
@@ -178,6 +179,7 @@ pub(super) fn run_sync(
     cfg: &RunConfig,
     hooks: &dyn EvalHooks,
     driver_start: std::time::Instant,
+    sink: &mut dyn TraceSink,
 ) -> Result<RunReport> {
     let m = pool.n_workers();
     let dim = pool.dim();
@@ -284,6 +286,10 @@ pub(super) fn run_sync(
         if rebalanced {
             log::debug!("iter {iter}: shard ownership rebalanced");
         }
+        if sink.enabled() {
+            let owners = core.elastic.ownership.owners();
+            trace::emit_boundary(sink, &cluster.elastic, iter, rebalanced, owners, now);
+        }
 
         // --- 1. failure events & responder latencies -------------------
         for w in 0..m {
@@ -297,6 +303,9 @@ pub(super) fn run_sync(
             let ev = core.fstates[w].step(iter, &mut core.fail_rngs[w]);
             core.membership.observe(w, ev);
             events[w] = ev;
+            if sink.enabled() && matches!(ev, FailureEvent::Crashed) {
+                sink.emit(iter, w as i64, now, TraceEvent::Crash);
+            }
         }
         // Crash-during-rebalance repair: a crash observed this sweep (e.g.
         // an adopter dying in the same boundary it adopted shards) re-plans
@@ -309,6 +318,12 @@ pub(super) fn run_sync(
             .replan_orphans(cluster.rebalance_every, &core.membership)?
         {
             log::debug!("iter {iter}: mid-barrier re-plan after owner crash");
+            if sink.enabled() {
+                let cut = TraceEvent::RebalanceCut {
+                    owners: core.elastic.ownership.owners().to_vec(),
+                };
+                sink.emit(iter, trace::MASTER, now, cut);
+            }
         }
 
         // Snapshot the assignment once per iteration (O(shards)); it only
@@ -360,7 +375,19 @@ pub(super) fn run_sync(
         // they merge (in time order) with stragglers carried over from
         // earlier windows.
         let stats_iter_start = net.stats();
+        let stale_blocks_iter_start = stale_blocks_total;
         for &w in responders.iter() {
+            if sink.enabled() {
+                trace::emit_roundtrip_fates(
+                    sink,
+                    &cluster.net,
+                    cluster.seed,
+                    w,
+                    iter,
+                    n_blocks,
+                    now,
+                );
+            }
             net.send_roundtrip(w, iter, latency[w]);
         }
         // Fresh primaries this window — captured before the drain (the
@@ -388,6 +415,10 @@ pub(super) fn run_sync(
                 delivered.fill(false);
                 let mut last_arrival = 0.0f64;
                 while let Some(d) = core.heap.pop() {
+                    if sink.enabled() {
+                        let deliv = TraceEvent::Delivery { duplicate: d.duplicate };
+                        sink.emit(d.iter, d.worker as i64, now + d.at, deliv);
+                    }
                     if !d.duplicate {
                         delivered[d.worker] = true;
                         arrived_workers.push(d.worker);
@@ -461,6 +492,15 @@ pub(super) fn run_sync(
                                             break; // reliable-channel fetch
                                         }
                                         let r = net.realize_retry(o, iter, attempt);
+                                        if sink.enabled() {
+                                            let delivered = r.delivers();
+                                            let ra = TraceEvent::RetryAttempt {
+                                                attempt,
+                                                backoff,
+                                                delivered,
+                                            };
+                                            sink.emit(iter, o as i64, now, ra);
+                                        }
                                         if r.delivers() {
                                             cost += r.roundtrip_delay();
                                             break;
@@ -513,6 +553,10 @@ pub(super) fn run_sync(
                         core.heap.pop()
                     };
                     let Some(ev) = ev else { break };
+                    if sink.enabled() {
+                        let deliv = TraceEvent::Delivery { duplicate: ev.duplicate };
+                        sink.emit(ev.iter, ev.worker as i64, now + ev.at, deliv);
+                    }
                     if !ev.duplicate && ev.iter == iter {
                         arrived_workers.push(ev.worker);
                     }
@@ -546,10 +590,12 @@ pub(super) fn run_sync(
                             // blocks that survived *and were not already
                             // folded* as a stale contribution (folded only
                             // under StalenessDamped; always accounted).
+                            let mut claimed = 0usize;
                             if blocking {
                                 let mk = net.blocks_for(ev.worker, ev.iter, ev.duplicate);
                                 let fresh = ledger.claim(ev.worker, ev.iter, mk);
                                 if !fresh.is_empty() {
+                                    claimed = fresh.delivered() as usize;
                                     stale_blocks_total += fresh.delivered() as u64;
                                     if reuse_late {
                                         stale_admits.push((
@@ -560,8 +606,20 @@ pub(super) fn run_sync(
                                     }
                                 }
                             }
+                            if sink.enabled() {
+                                let st = TraceEvent::StaleAdmission { claimed_blocks: claimed };
+                                sink.emit(ev.iter, ev.worker as i64, now + ev.at, st);
+                            }
                         }
                     }
+                }
+                if sink.enabled() {
+                    let close = TraceEvent::BarrierClose {
+                        gamma: g_eff,
+                        included: included_workers.len(),
+                        abandoned: iter_abandoned,
+                    };
+                    sink.emit(iter, trace::MASTER, now + close_time, close);
                 }
                 iter_latency = close_time;
                 // Aggregate in shard-index order: f32 summation order is
@@ -749,6 +807,7 @@ pub(super) fn run_sync(
                 dropped: dnet.dropped as usize,
                 duplicated: dnet.duplicated as usize,
                 blocks: dnet.blocks_delivered as usize,
+                stale_blocks: (stale_blocks_total - stale_blocks_iter_start) as usize,
                 alive: core.membership.alive(),
                 gamma,
                 grad_norm,
@@ -775,5 +834,6 @@ pub(super) fn run_sync(
         stale_blocks_total,
         None,
         driver_start,
+        sink.summary(),
     ))
 }

@@ -1,0 +1,740 @@
+//! Deterministic flight recorder: structured event tracing for both drivers.
+//!
+//! Per-iteration aggregates (`IterRow`) say *how many* results were
+//! abandoned; they cannot say *which* reply was dropped, retried with
+//! backoff, admitted stale, or folded as a partial block set.  This module
+//! records that causal chain as a stream of typed [`TraceEvent`]s, each
+//! stamped `(iter, worker, time, seq)`, through a [`TraceSink`] threaded
+//! into both drivers.
+//!
+//! Because every message fate in this repo is a **pure function** of
+//! `(seed, worker, iter)` ([`crate::net::NetSpec::realize`]), the trace is
+//! deterministic — and therefore doubles as a cross-driver correctness
+//! oracle: under ideal networks the virtual and threaded drivers must
+//! produce byte-identical event sequences after timestamp normalization,
+//! and under lossy networks identical per-message *fate* sequences
+//! (`tests/parity_drivers.rs`).  Fate events (Dispatch / Drop / Duplicate /
+//! BlockFate) are emitted at dispatch/plan time by re-realizing the pure
+//! fate function — [`emit_roundtrip_fates`] is the single shared routine —
+//! so wall-clock jitter in the threaded driver cannot reorder them.
+//!
+//! Two sinks ship: [`NoopSink`] (the default — `enabled()` is `false`,
+//! every emission site is guarded, so the disabled hot path performs zero
+//! work and zero allocations; `tests/alloc_regression.rs` pins this) and
+//! [`JournalSink`], which buffers [`TraceRecord`]s and exports three ways:
+//! a JSONL journal ([`JournalSink::jsonl`]), a Chrome trace-event JSON for
+//! Perfetto ([`JournalSink::chrome_trace`], one lane per worker), and a
+//! run-level [`TraceSummary`] (per-worker latency histograms via
+//! [`crate::metrics::Histogram`]) surfaced as `RunReport::trace`.
+//!
+//! See `docs/OBSERVABILITY.md` for the event taxonomy and exporter formats.
+
+use std::fmt::Write as _;
+
+use crate::metrics::Histogram;
+use crate::net::NetSpec;
+
+/// Lane index used for coordinator-side events (`BarrierClose`,
+/// `RebalanceCut`): the master is worker `-1`.
+pub const MASTER: i64 = -1;
+
+/// One typed thing that happened.  Payloads carry only driver-agnostic
+/// data (pure realizations, barrier outcomes), never wall-clock-dependent
+/// state — that is what keeps the cross-driver parity oracle meaningful.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A `Work` roundtrip was planned for `(worker, iter)`.
+    Dispatch,
+    /// A `Grad` reply reached the coordinator.
+    Delivery { duplicate: bool },
+    /// The pure realization dropped the message (`down`: the `Work`
+    /// broadcast; otherwise the `Grad` reply, including below-threshold
+    /// block admission).
+    Drop { down: bool },
+    /// The pure realization duplicates the delivered reply.
+    Duplicate,
+    /// Block admission realized this delivered set for the reply
+    /// (primary, then — after a `Duplicate` — the duplicate copy's set).
+    BlockFate { delivered_mask: u64, n_blocks: u32 },
+    /// A stale arrival's unclaimed blocks were admitted via the ledger.
+    StaleAdmission { claimed_blocks: usize },
+    /// One BSP recovery attempt through the link model.
+    RetryAttempt { attempt: u64, backoff: f64, delivered: bool },
+    /// A shard-rebalance plan applied at a boundary; `owners[s]` is shard
+    /// `s`'s owner after the cut.
+    RebalanceCut { owners: Vec<usize> },
+    /// Scheduled elastic membership events at a boundary.
+    Join,
+    Leave,
+    /// A stochastic failure took the worker down mid-run.
+    Crash,
+    /// The iteration's barrier closed.
+    BarrierClose { gamma: usize, included: usize, abandoned: usize },
+}
+
+/// One emitted event with its full stamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Strictly increasing per sink — the journal's total order.
+    pub seq: u64,
+    pub iter: u64,
+    /// Worker index, or [`MASTER`] for coordinator-side events.
+    pub worker: i64,
+    /// Virtual seconds (virtual driver) or wall seconds since run start
+    /// (threaded driver).  Normalized away for parity comparison.
+    pub time: f64,
+    pub event: TraceEvent,
+}
+
+/// Where trace events go.  Every emission site in the drivers is guarded
+/// by `if sink.enabled()`, so a disabled sink costs one branch and nothing
+/// else — no formatting, no allocation, no RNG perturbation.
+pub trait TraceSink {
+    fn enabled(&self) -> bool;
+    fn emit(&mut self, iter: u64, worker: i64, time: f64, event: TraceEvent);
+    /// Run-level rollup for `RunReport::trace`; `None` when not recording.
+    fn summary(&self) -> Option<TraceSummary> {
+        None
+    }
+}
+
+/// The default sink: tracing off.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn emit(&mut self, _iter: u64, _worker: i64, _time: f64, _event: TraceEvent) {}
+}
+
+/// Per-worker rollup of a recorded run.
+#[derive(Clone, Debug)]
+pub struct WorkerLane {
+    pub worker: usize,
+    pub dispatches: u64,
+    pub deliveries: u64,
+    pub drops: u64,
+    pub duplicates: u64,
+    pub stale: u64,
+    /// Dispatch→delivery latency of primary replies.
+    pub latency: Histogram,
+}
+
+impl WorkerLane {
+    fn new(worker: usize) -> WorkerLane {
+        WorkerLane {
+            worker,
+            dispatches: 0,
+            deliveries: 0,
+            drops: 0,
+            duplicates: 0,
+            stale: 0,
+            latency: Histogram::latency(),
+        }
+    }
+}
+
+/// Run-level trace rollup, surfaced as `RunReport::trace`.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    /// Total events recorded.
+    pub events: u64,
+    /// Barrier windows closed.
+    pub barriers: u64,
+    pub per_worker: Vec<WorkerLane>,
+    /// Distribution of abandoned-result counts per closed barrier.
+    pub abandoned_per_barrier: Histogram,
+}
+
+impl TraceSummary {
+    /// Human-readable per-worker rollup (the CLI prints this after a
+    /// traced run).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "trace: {} events, {} barriers closed, mean abandoned/barrier {:.2}\n",
+            self.events,
+            self.barriers,
+            self.abandoned_per_barrier.mean()
+        );
+        for lane in &self.per_worker {
+            s.push_str(&format!(
+                "  worker {:3}: {} dispatched, {} delivered, {} dropped, {} dup, {} stale, \
+                 latency p50 {:.4}s p99 {:.4}s\n",
+                lane.worker,
+                lane.dispatches,
+                lane.deliveries,
+                lane.drops,
+                lane.duplicates,
+                lane.stale,
+                lane.latency.quantile(0.5),
+                lane.latency.quantile(0.99)
+            ));
+        }
+        s
+    }
+}
+
+/// A recording sink: buffers every event and exports JSONL, Chrome
+/// trace-event JSON, and a [`TraceSummary`].
+pub struct JournalSink {
+    records: Vec<TraceRecord>,
+    seq: u64,
+    lanes: Vec<WorkerLane>,
+    last_dispatch: Vec<Option<f64>>,
+    abandoned_hist: Histogram,
+    barriers: u64,
+}
+
+impl Default for JournalSink {
+    fn default() -> Self {
+        JournalSink::new()
+    }
+}
+
+impl JournalSink {
+    pub fn new() -> JournalSink {
+        JournalSink {
+            records: Vec::new(),
+            seq: 0,
+            lanes: Vec::new(),
+            last_dispatch: Vec::new(),
+            // Abandonment counts are small integers; 0 lands in the
+            // histogram's underflow bucket by design.
+            abandoned_hist: Histogram::new(0.5, 4096.0, 64),
+            barriers: 0,
+        }
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn lane(&mut self, worker: i64) -> Option<&mut WorkerLane> {
+        if worker < 0 {
+            return None;
+        }
+        let w = worker as usize;
+        while self.lanes.len() <= w {
+            let next = self.lanes.len();
+            self.lanes.push(WorkerLane::new(next));
+            self.last_dispatch.push(None);
+        }
+        Some(&mut self.lanes[w])
+    }
+
+    /// The JSONL journal: one event object per line, in `seq` order.
+    pub fn jsonl(&self) -> String {
+        self.render_jsonl(false)
+    }
+
+    /// The journal with every `time` zeroed — byte-identical across
+    /// drivers under ideal networks (the trace-parity oracle).
+    pub fn jsonl_normalized(&self) -> String {
+        self.render_jsonl(true)
+    }
+
+    fn render_jsonl(&self, normalized: bool) -> String {
+        let mut out = String::with_capacity(self.records.len() * 64);
+        for r in &self.records {
+            let t = if normalized { 0.0 } else { r.time };
+            let _ = write!(
+                out,
+                "{{\"seq\":{},\"iter\":{},\"worker\":{},\"time\":{},",
+                r.seq, r.iter, r.worker, t
+            );
+            event_fields(&r.event, &mut out);
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Only the pure per-message fate events (Dispatch / Drop / Duplicate /
+    /// BlockFate), rendered without `seq`/`time` — identical across drivers
+    /// under *lossy* networks, where arrival-side ordering may differ.
+    pub fn fate_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            if !is_fate(&r.event) {
+                continue;
+            }
+            let _ = write!(out, "{{\"iter\":{},\"worker\":{},", r.iter, r.worker);
+            event_fields(&r.event, &mut out);
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (the array form): load in Perfetto or
+    /// `chrome://tracing`.  One lane (`tid`) per worker plus a master lane;
+    /// dispatch→delivery roundtrips and barrier windows render as complete
+    /// spans, everything else as instants.  Timestamps are microseconds.
+    pub fn chrome_trace(&self) -> String {
+        let mut out = String::from("[\n");
+        let mut first = true;
+        let mut sep = |out: &mut String| {
+            if first {
+                first = false;
+            } else {
+                out.push_str(",\n");
+            }
+        };
+        sep(&mut out);
+        out.push_str(
+            "{\"ph\":\"M\",\"pid\":0,\"tid\":0,\"name\":\"thread_name\",\
+             \"args\":{\"name\":\"master\"}}",
+        );
+        for lane in &self.lanes {
+            sep(&mut out);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"worker {}\"}}}}",
+                lane.worker + 1,
+                lane.worker
+            );
+        }
+        let mut open_dispatch: Vec<Option<f64>> = vec![None; self.lanes.len()];
+        let mut window_start = 0.0f64;
+        for r in &self.records {
+            let tid = r.worker + 1; // master (-1) -> 0
+            let ts = r.time * 1e6;
+            match &r.event {
+                TraceEvent::Dispatch => {
+                    if r.worker >= 0 {
+                        if let Some(slot) = open_dispatch.get_mut(r.worker as usize) {
+                            *slot = Some(r.time);
+                        }
+                    }
+                }
+                TraceEvent::Delivery { duplicate } => {
+                    let start = open_dispatch
+                        .get(r.worker.max(0) as usize)
+                        .copied()
+                        .flatten()
+                        .unwrap_or(r.time);
+                    if !duplicate {
+                        sep(&mut out);
+                        let _ = write!(
+                            out,
+                            "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"ts\":{},\
+                             \"dur\":{},\"name\":\"roundtrip\",\
+                             \"args\":{{\"iter\":{}}}}}",
+                            start * 1e6,
+                            (r.time - start).max(0.0) * 1e6,
+                            r.iter
+                        );
+                    }
+                }
+                TraceEvent::BarrierClose { gamma, included, abandoned } => {
+                    sep(&mut out);
+                    let _ = write!(
+                        out,
+                        "{{\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":{},\"dur\":{},\
+                         \"name\":\"barrier\",\"args\":{{\"iter\":{},\"gamma\":{gamma},\
+                         \"included\":{included},\"abandoned\":{abandoned}}}}}",
+                        window_start * 1e6,
+                        (r.time - window_start).max(0.0) * 1e6,
+                        r.iter
+                    );
+                    window_start = r.time;
+                }
+                ev => {
+                    sep(&mut out);
+                    let _ = write!(
+                        out,
+                        "{{\"ph\":\"i\",\"pid\":0,\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\
+                         \"name\":\"{}\",\"args\":{{\"iter\":{}}}}}",
+                        event_name(ev),
+                        r.iter
+                    );
+                }
+            }
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Write the JSONL journal to `path`.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.jsonl())?;
+        Ok(())
+    }
+
+    /// Write the Chrome trace to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.chrome_trace())?;
+        Ok(())
+    }
+}
+
+impl TraceSink for JournalSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&mut self, iter: u64, worker: i64, time: f64, event: TraceEvent) {
+        match &event {
+            TraceEvent::Dispatch => {
+                if let Some(lane) = self.lane(worker) {
+                    lane.dispatches += 1;
+                }
+                if worker >= 0 {
+                    self.last_dispatch[worker as usize] = Some(time);
+                }
+            }
+            TraceEvent::Delivery { duplicate } => {
+                let dup = *duplicate;
+                let start = if worker >= 0 {
+                    self.last_dispatch.get(worker as usize).copied().flatten()
+                } else {
+                    None
+                };
+                if let Some(lane) = self.lane(worker) {
+                    lane.deliveries += 1;
+                    if !dup {
+                        if let Some(t0) = start {
+                            lane.latency.record((time - t0).max(0.0));
+                        }
+                    }
+                }
+            }
+            TraceEvent::Drop { .. } => {
+                if let Some(lane) = self.lane(worker) {
+                    lane.drops += 1;
+                }
+            }
+            TraceEvent::Duplicate => {
+                if let Some(lane) = self.lane(worker) {
+                    lane.duplicates += 1;
+                }
+            }
+            TraceEvent::StaleAdmission { .. } => {
+                if let Some(lane) = self.lane(worker) {
+                    lane.stale += 1;
+                }
+            }
+            TraceEvent::BarrierClose { abandoned, .. } => {
+                self.barriers += 1;
+                self.abandoned_hist.record(*abandoned as f64);
+            }
+            _ => {}
+        }
+        self.records.push(TraceRecord { seq: self.seq, iter, worker, time, event });
+        self.seq += 1;
+    }
+
+    fn summary(&self) -> Option<TraceSummary> {
+        Some(TraceSummary {
+            events: self.seq,
+            barriers: self.barriers,
+            per_worker: self.lanes.clone(),
+            abandoned_per_barrier: self.abandoned_hist.clone(),
+        })
+    }
+}
+
+fn event_name(ev: &TraceEvent) -> &'static str {
+    match ev {
+        TraceEvent::Dispatch => "dispatch",
+        TraceEvent::Delivery { .. } => "delivery",
+        TraceEvent::Drop { .. } => "drop",
+        TraceEvent::Duplicate => "duplicate",
+        TraceEvent::BlockFate { .. } => "block_fate",
+        TraceEvent::StaleAdmission { .. } => "stale_admission",
+        TraceEvent::RetryAttempt { .. } => "retry_attempt",
+        TraceEvent::RebalanceCut { .. } => "rebalance_cut",
+        TraceEvent::Join => "join",
+        TraceEvent::Leave => "leave",
+        TraceEvent::Crash => "crash",
+        TraceEvent::BarrierClose { .. } => "barrier_close",
+    }
+}
+
+fn event_fields(ev: &TraceEvent, out: &mut String) {
+    let _ = write!(out, "\"event\":\"{}\"", event_name(ev));
+    match ev {
+        TraceEvent::Delivery { duplicate } => {
+            let _ = write!(out, ",\"duplicate\":{duplicate}");
+        }
+        TraceEvent::Drop { down } => {
+            let _ = write!(out, ",\"down\":{down}");
+        }
+        TraceEvent::BlockFate { delivered_mask, n_blocks } => {
+            let _ = write!(out, ",\"delivered_mask\":{delivered_mask},\"n_blocks\":{n_blocks}");
+        }
+        TraceEvent::StaleAdmission { claimed_blocks } => {
+            let _ = write!(out, ",\"claimed_blocks\":{claimed_blocks}");
+        }
+        TraceEvent::RetryAttempt { attempt, backoff, delivered } => {
+            let _ = write!(out, ",\"attempt\":{attempt},\"backoff\":{backoff}");
+            let _ = write!(out, ",\"delivered\":{delivered}");
+        }
+        TraceEvent::RebalanceCut { owners } => {
+            out.push_str(",\"owners\":[");
+            for (i, o) in owners.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{o}");
+            }
+            out.push(']');
+        }
+        TraceEvent::BarrierClose { gamma, included, abandoned } => {
+            let _ = write!(out, ",\"gamma\":{gamma},\"included\":{included}");
+            let _ = write!(out, ",\"abandoned\":{abandoned}");
+        }
+        _ => {}
+    }
+}
+
+fn is_fate(ev: &TraceEvent) -> bool {
+    use TraceEvent::{BlockFate, Dispatch, Drop, Duplicate};
+    matches!(ev, Dispatch | Drop { .. } | Duplicate | BlockFate { .. })
+}
+
+/// Emit the pure fate events of `(worker, iter)`'s roundtrip: `Dispatch`,
+/// then whatever the network realization says happens to it.  Both drivers
+/// call this single routine at dispatch/plan time with the same
+/// `(net, seed, worker, iter, n_blocks)`, so their fate sequences are
+/// identical by construction — wall-clock arrival jitter cannot touch
+/// them.  Re-realizes via [`NetSpec::realize`] (pure), consuming no shared
+/// RNG stream; under an ideal spec only `Dispatch` is emitted.
+pub fn emit_roundtrip_fates(
+    sink: &mut dyn TraceSink,
+    net: &NetSpec,
+    seed: u64,
+    worker: usize,
+    iter: u64,
+    n_blocks: usize,
+    time: f64,
+) {
+    let w = worker as i64;
+    sink.emit(iter, w, time, TraceEvent::Dispatch);
+    if net.is_ideal() {
+        return;
+    }
+    let r = net.realize(seed, worker, iter);
+    if r.down_dropped {
+        sink.emit(iter, w, time, TraceEvent::Drop { down: true });
+        return;
+    }
+    if n_blocks > 1 {
+        let blocks = net.realize_blocks(seed, worker, iter, n_blocks, r.up_dropped, false);
+        let fate = TraceEvent::BlockFate {
+            delivered_mask: blocks.mask(),
+            n_blocks: blocks.len() as u32,
+        };
+        sink.emit(iter, w, time, fate);
+        if !net.admits(blocks) {
+            sink.emit(iter, w, time, TraceEvent::Drop { down: false });
+            return;
+        }
+        if r.up_duplicated {
+            sink.emit(iter, w, time, TraceEvent::Duplicate);
+            let dup = net.realize_blocks(seed, worker, iter, n_blocks, r.up_dropped, true);
+            let fate = TraceEvent::BlockFate {
+                delivered_mask: dup.mask(),
+                n_blocks: dup.len() as u32,
+            };
+            sink.emit(iter, w, time, fate);
+        }
+    } else if r.up_dropped {
+        sink.emit(iter, w, time, TraceEvent::Drop { down: false });
+    } else if r.up_duplicated {
+        sink.emit(iter, w, time, TraceEvent::Duplicate);
+    }
+}
+
+/// Emit the boundary-family events both drivers share: the scheduled
+/// elastic leave/join changes landing at `iter` (in schedule order), then —
+/// when the boundary re-planned shard ownership — a [`TraceEvent::RebalanceCut`]
+/// carrying the post-cut owner snapshot.  Call *after* the boundary handler
+/// ran, with the post-boundary ownership.
+pub fn emit_boundary(
+    sink: &mut dyn TraceSink,
+    schedule: &crate::cluster::ElasticSchedule,
+    iter: u64,
+    rebalanced: bool,
+    owners: &[usize],
+    time: f64,
+) {
+    for e in schedule.at(iter) {
+        let ev = match e.kind {
+            crate::cluster::ElasticKind::Leave => TraceEvent::Leave,
+            crate::cluster::ElasticKind::Join => TraceEvent::Join,
+        };
+        sink.emit(iter, e.worker as i64, time, ev);
+    }
+    if rebalanced {
+        let cut = TraceEvent::RebalanceCut { owners: owners.to_vec() };
+        sink.emit(iter, MASTER, time, cut);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_is_disabled_and_summaryless() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        s.emit(0, 0, 0.0, TraceEvent::Dispatch);
+        assert!(s.summary().is_none());
+    }
+
+    #[test]
+    fn journal_stamps_strictly_increasing_seq() {
+        let mut s = JournalSink::new();
+        s.emit(0, 0, 0.1, TraceEvent::Dispatch);
+        s.emit(0, 1, 0.2, TraceEvent::Dispatch);
+        s.emit(0, 0, 0.3, TraceEvent::Delivery { duplicate: false });
+        let seqs: Vec<u64> = s.records().iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn jsonl_normalization_zeroes_time_only() {
+        let run = |t0: f64| {
+            let mut s = JournalSink::new();
+            let close = TraceEvent::BarrierClose { gamma: 3, included: 3, abandoned: 1 };
+            s.emit(3, 1, t0, TraceEvent::Dispatch);
+            s.emit(3, 1, t0 + 0.5, TraceEvent::Delivery { duplicate: false });
+            s.emit(3, MASTER, t0 + 0.75, close);
+            s
+        };
+        let a = run(1.0);
+        let b = run(42.0);
+        assert_ne!(a.jsonl(), b.jsonl(), "raw journals differ by time");
+        assert_eq!(a.jsonl_normalized(), b.jsonl_normalized());
+        let line = a.jsonl_normalized();
+        assert!(line.starts_with("{\"seq\":0,\"iter\":3,\"worker\":1,\"time\":0,"), "{line}");
+        assert!(line.contains("\"gamma\":3,\"included\":3,\"abandoned\":1"), "{line}");
+        assert!(line.contains("\"event\":\"barrier_close\""));
+    }
+
+    #[test]
+    fn fate_filter_keeps_only_pure_fate_events() {
+        let mut s = JournalSink::new();
+        s.emit(0, 0, 0.0, TraceEvent::Dispatch);
+        s.emit(0, 0, 0.1, TraceEvent::Delivery { duplicate: false });
+        s.emit(0, 1, 0.0, TraceEvent::Drop { down: false });
+        s.emit(0, 2, 0.0, TraceEvent::Duplicate);
+        s.emit(0, 2, 0.0, TraceEvent::BlockFate { delivered_mask: 0b101, n_blocks: 3 });
+        s.emit(0, MASTER, 0.2, TraceEvent::BarrierClose { gamma: 2, included: 2, abandoned: 0 });
+        let fates = s.fate_jsonl();
+        assert_eq!(fates.lines().count(), 4);
+        assert!(!fates.contains("delivery"));
+        assert!(!fates.contains("barrier_close"));
+        assert!(!fates.contains("\"seq\""));
+        assert!(fates.contains("\"delivered_mask\":5,\"n_blocks\":3"));
+    }
+
+    #[test]
+    fn summary_rolls_up_lanes_and_latency() {
+        let mut s = JournalSink::new();
+        s.emit(0, 0, 1.0, TraceEvent::Dispatch);
+        s.emit(0, 0, 1.5, TraceEvent::Delivery { duplicate: false });
+        s.emit(0, 1, 1.0, TraceEvent::Dispatch);
+        s.emit(0, 1, 1.0, TraceEvent::Drop { down: false });
+        s.emit(1, 0, 2.0, TraceEvent::Dispatch);
+        s.emit(1, 0, 2.25, TraceEvent::Delivery { duplicate: false });
+        s.emit(1, 0, 2.3, TraceEvent::StaleAdmission { claimed_blocks: 2 });
+        s.emit(1, MASTER, 2.4, TraceEvent::BarrierClose { gamma: 1, included: 1, abandoned: 3 });
+        let sum = s.summary().unwrap();
+        assert_eq!(sum.events, 8);
+        assert_eq!(sum.barriers, 1);
+        assert_eq!(sum.per_worker.len(), 2);
+        let w0 = &sum.per_worker[0];
+        assert_eq!((w0.dispatches, w0.deliveries, w0.stale), (2, 2, 1));
+        assert_eq!(w0.latency.count(), 2);
+        assert!((w0.latency.mean() - 0.375).abs() < 1e-12);
+        assert_eq!(sum.per_worker[1].drops, 1);
+        assert_eq!(sum.abandoned_per_barrier.count(), 1);
+        assert!((sum.abandoned_per_barrier.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_has_lanes_spans_and_instants() {
+        let mut s = JournalSink::new();
+        s.emit(0, 0, 0.25, TraceEvent::Dispatch);
+        s.emit(0, 1, 0.25, TraceEvent::Dispatch);
+        s.emit(0, 1, 0.375, TraceEvent::Drop { down: false });
+        s.emit(0, 0, 0.5, TraceEvent::Delivery { duplicate: false });
+        s.emit(0, MASTER, 1.0, TraceEvent::BarrierClose { gamma: 1, included: 1, abandoned: 0 });
+        let out = s.chrome_trace();
+        assert!(out.starts_with("[\n"));
+        assert!(out.ends_with("]\n"));
+        assert!(out.contains("\"name\":\"worker 0\""));
+        assert!(out.contains("\"name\":\"worker 1\""));
+        assert!(out.contains("\"name\":\"master\""));
+        assert!(out.contains("\"ph\":\"X\"") && out.contains("\"name\":\"roundtrip\""));
+        assert!(out.contains("\"name\":\"barrier\""));
+        assert!(out.contains("\"ph\":\"i\"") && out.contains("\"name\":\"drop\""));
+        // Roundtrip span: 0.25s dispatch -> 0.5s delivery = 250000µs
+        // (times chosen exactly representable in binary).
+        assert!(out.contains("\"ts\":250000,\"dur\":250000"), "{out}");
+    }
+
+    #[test]
+    fn fates_match_transport_decisions() {
+        use crate::net::{Transport, VirtualTransport};
+        // Whatever the transport delivers must appear as a non-dropped
+        // fate, and vice versa — the emitter re-realizes the same purity.
+        let spec = NetSpec::lossy(0.4);
+        let seed = 17;
+        let mut sink = JournalSink::new();
+        let mut t = VirtualTransport::new(spec.clone(), seed);
+        for iter in 0..40u64 {
+            for w in 0..3usize {
+                emit_roundtrip_fates(&mut sink, &spec, seed, w, iter, 1, 0.0);
+                t.send_roundtrip(w, iter, 0.01);
+            }
+        }
+        let mut delivered = std::collections::HashSet::new();
+        while let Some(d) = t.poll() {
+            if !d.duplicate {
+                delivered.insert((d.worker, d.iter));
+            }
+        }
+        let mut traced_delivered = std::collections::HashSet::new();
+        let mut dropped = 0usize;
+        for r in sink.records() {
+            match r.event {
+                TraceEvent::Dispatch => {
+                    traced_delivered.insert((r.worker as usize, r.iter));
+                }
+                TraceEvent::Drop { .. } => {
+                    traced_delivered.remove(&(r.worker as usize, r.iter));
+                    dropped += 1;
+                }
+                _ => {}
+            }
+        }
+        assert!(dropped > 0, "40% loss produced no Drop fates");
+        assert_eq!(traced_delivered, delivered);
+    }
+
+    #[test]
+    fn ideal_fates_are_dispatch_only() {
+        let mut sink = JournalSink::new();
+        emit_roundtrip_fates(&mut sink, &NetSpec::ideal(), 9, 2, 7, 4, 1.5);
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink.records()[0].event, TraceEvent::Dispatch);
+        assert_eq!(sink.records()[0].worker, 2);
+        assert_eq!(sink.records()[0].iter, 7);
+    }
+}

@@ -58,6 +58,7 @@ use crate::math::vec_ops;
 use crate::metrics::{IterRow, Recorder};
 use crate::net::{BlockLedger, BlockSet, GradFate, NetShim, NetStats, ThetaLedger, WorkPlan};
 use crate::sim::EvalHooks;
+use crate::trace::{self, TraceEvent, TraceSink};
 use crate::{Error, Result};
 
 /// Worker-side gradient computation (built inside the worker thread).
@@ -140,11 +141,29 @@ fn apply_master_event(
 }
 
 /// Run an experiment on real threads, measuring wall-clock.
+///
+/// Tracing is disabled ([`crate::trace::NoopSink`]); use [`run_real_traced`]
+/// to attach a flight recorder.
 pub fn run_real(
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
+) -> Result<RunReport> {
+    run_real_traced(cluster, cfg, factory, hooks, &mut crate::trace::NoopSink)
+}
+
+/// [`run_real`] with a flight-recorder sink attached (see [`crate::trace`]).
+///
+/// Event timestamps are wall-clock seconds since driver start; the
+/// trace-parity oracles in `tests/parity_drivers.rs` compare this driver's
+/// journal against the virtual driver's after timestamp normalization.
+pub fn run_real_traced(
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    factory: &dyn ComputeFactory,
+    hooks: &dyn EvalHooks,
+    sink: &mut dyn TraceSink,
 ) -> Result<RunReport> {
     let m = factory.workers();
     if m != cluster.workers {
@@ -155,9 +174,9 @@ pub fn run_real(
     }
     crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
     if cfg.mode.is_async() {
-        return run_real_async(cluster, cfg, factory, hooks);
+        return run_real_async(cluster, cfg, factory, hooks, sink);
     }
-    run_real_sync(cluster, cfg, factory, hooks)
+    run_real_sync(cluster, cfg, factory, hooks, sink)
 }
 
 fn run_real_sync(
@@ -165,6 +184,7 @@ fn run_real_sync(
     cfg: &RunConfig,
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
+    sink: &mut dyn TraceSink,
 ) -> Result<RunReport> {
     let driver_start = Instant::now();
     let m = factory.workers();
@@ -257,6 +277,11 @@ fn run_real_sync(
             if rebalanced {
                 log::debug!("iter {iter}: shard ownership rebalanced");
             }
+            if sink.enabled() {
+                let t = driver_start.elapsed().as_secs_f64();
+                let owners = elastic.ownership.owners();
+                trace::emit_boundary(sink, &cluster.elastic, iter, rebalanced, owners, t);
+            }
 
             if blocking {
                 // Same straggler horizon the virtual driver uses.
@@ -266,6 +291,7 @@ fn run_real_sync(
             // One O(shards) pass instead of an O(shards) scan per worker.
             let mut assignment = elastic.ownership.grouped();
             let stats_iter_start = shim.stats();
+            let stale_blocks_iter_start = stale_blocks_total;
             let mut deliverable = 0usize;
             dispatched.fill(false);
             for w in 0..m {
@@ -280,6 +306,21 @@ fn run_real_sync(
                     // untouched.
                     if assignment[w].is_empty() {
                         continue;
+                    }
+                    // Fate events re-realize the roundtrip purely (same key
+                    // the shim uses), so they land even when the plan below
+                    // suppresses the send.
+                    if sink.enabled() {
+                        let t = driver_start.elapsed().as_secs_f64();
+                        trace::emit_roundtrip_fates(
+                            sink,
+                            &cluster.net,
+                            cluster.seed,
+                            w,
+                            iter,
+                            n_blocks,
+                            t,
+                        );
                     }
                     // Realize this worker's roundtrip.  A dropped downlink
                     // suppresses the send; otherwise the injected network
@@ -370,6 +411,14 @@ fn run_real_sync(
                         };
                         let mut shards = shards;
                         for copy in 0..(1 + duplicate as usize) {
+                            // One Delivery per delivering copy — the virtual
+                            // heap materializes the duplicate as its own
+                            // arrival, so the journals line up.
+                            if sink.enabled() {
+                                let t = driver_start.elapsed().as_secs_f64();
+                                let deliv = TraceEvent::Delivery { duplicate: copy == 1 };
+                                sink.emit(msg_iter, worker as i64, t, deliv);
+                            }
                             match barrier.offer(worker, msg_iter) {
                                 Admission::Included | Admission::IncludedAndClosed => {
                                     membership.record_contribution(worker);
@@ -404,6 +453,7 @@ fn run_real_sync(
                                     // virtual reorder path: surviving
                                     // blocks not already folded count as
                                     // stale-admitted.
+                                    let mut claimed = 0usize;
                                     if blocking {
                                         let fresh = ledger.claim(
                                             worker,
@@ -411,6 +461,13 @@ fn run_real_sync(
                                             shim.blocks_for(worker, msg_iter, copy == 1),
                                         );
                                         stale_blocks_total += fresh.delivered() as u64;
+                                        claimed = fresh.delivered() as usize;
+                                    }
+                                    if sink.enabled() {
+                                        let t = driver_start.elapsed().as_secs_f64();
+                                        let st =
+                                            TraceEvent::StaleAdmission { claimed_blocks: claimed };
+                                        sink.emit(msg_iter, worker as i64, t, st);
                                     }
                                 }
                             }
@@ -419,6 +476,10 @@ fn run_real_sync(
                     WorkerMsg::SimulatedCrash { worker, .. } => {
                         thread_crashed[worker] = true;
                         membership.mark_down(worker);
+                        if sink.enabled() {
+                            let t = driver_start.elapsed().as_secs_f64();
+                            sink.emit(iter, worker as i64, t, TraceEvent::Crash);
+                        }
                         match (&cfg.mode, cfg.bsp_recovery) {
                             (SyncMode::Bsp, BspRecovery::Stall) => {
                                 status = RunStatus::Stalled { iter };
@@ -455,6 +516,15 @@ fn run_real_sync(
                     }
                 }
             }
+            if sink.enabled() && !matches!(cfg.mode, SyncMode::Bsp) {
+                let t = driver_start.elapsed().as_secs_f64();
+                let close = TraceEvent::BarrierClose {
+                    gamma: g_target,
+                    included: barrier.included(),
+                    abandoned: iter_abandoned,
+                };
+                sink.emit(iter, trace::MASTER, t, close);
+            }
             if grads.is_empty() {
                 continue;
             }
@@ -474,18 +544,33 @@ fn run_real_sync(
                             if duplicate {
                                 membership.record_abandoned(worker);
                             }
+                            if sink.enabled() {
+                                let t = driver_start.elapsed().as_secs_f64();
+                                for copy in 0..copies {
+                                    let deliv = TraceEvent::Delivery { duplicate: copy == 1 };
+                                    sink.emit(msg_iter, worker as i64, t, deliv);
+                                }
+                            }
                             if msg_iter == iter {
                                 iter_abandoned += copies;
                             } else {
                                 iter_stale += copies;
-                                if blocking {
-                                    for copy in 0..copies {
+                                for copy in 0..copies {
+                                    let mut claimed = 0usize;
+                                    if blocking {
                                         let fresh = ledger.claim(
                                             worker,
                                             msg_iter,
                                             shim.blocks_for(worker, msg_iter, copy == 1),
                                         );
                                         stale_blocks_total += fresh.delivered() as u64;
+                                        claimed = fresh.delivered() as usize;
+                                    }
+                                    if sink.enabled() {
+                                        let t = driver_start.elapsed().as_secs_f64();
+                                        let st =
+                                            TraceEvent::StaleAdmission { claimed_blocks: claimed };
+                                        sink.emit(msg_iter, worker as i64, t, st);
                                     }
                                 }
                             }
@@ -494,6 +579,10 @@ fn run_real_sync(
                     WorkerMsg::SimulatedCrash { worker, .. } => {
                         thread_crashed[worker] = true;
                         membership.mark_down(worker);
+                        if sink.enabled() {
+                            let t = driver_start.elapsed().as_secs_f64();
+                            sink.emit(iter, worker as i64, t, TraceEvent::Crash);
+                        }
                     }
                     WorkerMsg::Fatal { worker, error } => {
                         return Err(Error::Cluster(format!("worker {worker} died: {error}")));
@@ -559,6 +648,7 @@ fn run_real_sync(
                     dropped: dnet.dropped as usize,
                     duplicated: dnet.duplicated as usize,
                     blocks: dnet.blocks_delivered as usize,
+                    stale_blocks: (stale_blocks_total - stale_blocks_iter_start) as usize,
                     alive: membership.alive(),
                     gamma,
                     grad_norm,
@@ -593,6 +683,7 @@ fn run_real_sync(
         stale_blocks: stale_blocks_total,
         mean_staleness: None,
         driver_secs: driver_start.elapsed().as_secs_f64(),
+        trace: sink.summary(),
     })
 }
 
@@ -607,6 +698,8 @@ fn run_real_sync(
 /// needed here — one physical reply exists per roundtrip.  With block
 /// admission active (`n_blocks > 1`) the reply's delivered set is realized
 /// alongside and written to `blocks_out[w]` for the fold to mask.
+/// Fate trace events key on the same version tag the realization uses, so
+/// they match the virtual async policy's journal message for message.
 #[allow(clippy::too_many_arguments)]
 fn plan_async_roundtrip(
     net: &crate::net::NetSpec,
@@ -618,8 +711,14 @@ fn plan_async_roundtrip(
     stats: &mut NetStats,
     n_blocks: usize,
     blocks_out: &mut [BlockSet],
+    sink: &mut dyn TraceSink,
+    driver_start: Instant,
 ) -> f64 {
     let tag = attempts[w];
+    if sink.enabled() {
+        let now = driver_start.elapsed().as_secs_f64();
+        trace::emit_roundtrip_fates(sink, net, seed, w, tag, n_blocks, now);
+    }
     let r = if net_ideal {
         crate::net::LinkRealization::ideal()
     } else {
@@ -648,6 +747,7 @@ fn run_real_async(
     cfg: &RunConfig,
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
+    sink: &mut dyn TraceSink,
 ) -> Result<RunReport> {
     let driver_start = Instant::now();
     let m = factory.workers();
@@ -707,7 +807,9 @@ fn run_real_async(
         // warm-up tick mirrors the virtual engine: its boundary handler
         // runs at update-count 0 only when events are due or rebalancing
         // is on.
-        if cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0 {
+        let boundary_due_0 =
+            cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0;
+        if boundary_due_0 {
             elastic.tick_warmup();
         }
         for ev in cluster.elastic.at(0) {
@@ -719,7 +821,14 @@ fn run_real_async(
                 }
             }
         }
-        elastic.maybe_rebalance(0, cluster.rebalance_every, &membership)?;
+        let rebalanced_0 = elastic.maybe_rebalance(0, cluster.rebalance_every, &membership)?;
+        if sink.enabled() && boundary_due_0 {
+            // Mirror the virtual engine, whose boundary handler runs at
+            // update-count 0 only when events are due or rebalancing is on.
+            let t = driver_start.elapsed().as_secs_f64();
+            let owners = elastic.ownership.owners();
+            trace::emit_boundary(sink, &cluster.elastic, 0, rebalanced_0, owners, t);
+        }
         let mut assignment = elastic.ownership.grouped();
         for w in 0..m {
             let (tx, rx) = mpsc::channel::<MasterMsg>();
@@ -735,6 +844,8 @@ fn run_real_async(
                     &mut net_stats,
                     n_blocks,
                     &mut blocks_out,
+                    sink,
+                    driver_start,
                 );
                 let snap = Arc::new(theta.clone());
                 theta_ledger.hold(w, &snap);
@@ -779,9 +890,15 @@ fn run_real_async(
                         }
                     }
                 }
-                if elastic.maybe_rebalance(b, cluster.rebalance_every, &membership)? {
+                let rebalanced = elastic.maybe_rebalance(b, cluster.rebalance_every, &membership)?;
+                if rebalanced {
                     elastic.ownership.grouped_into(&mut assignment);
                     log::debug!("async boundary {b}: shard ownership rebalanced");
+                }
+                if sink.enabled() {
+                    let t = driver_start.elapsed().as_secs_f64();
+                    let owners = elastic.ownership.owners();
+                    trace::emit_boundary(sink, &cluster.elastic, b, rebalanced, owners, t);
                 }
                 // Re-admitted workers get a fresh θ snapshot (staleness 0)
                 // and a new dispatch; a pre-leave reply still in flight is
@@ -806,6 +923,8 @@ fn run_real_async(
                         &mut net_stats,
                         n_blocks,
                         &mut blocks_out,
+                        sink,
+                        driver_start,
                     );
                     let snap = Arc::new(theta.clone());
                     theta_ledger.hold(w, &snap);
@@ -831,6 +950,14 @@ fn run_real_async(
             match msg {
                 WorkerMsg::Grad { worker, shards, .. } => {
                     in_flight[worker] = false;
+                    // One Delivery per delivering roundtrip, keyed on the
+                    // dispatch's version tag; a lost roundtrip (reply_ok
+                    // false) has none — matching the virtual async heap.
+                    if sink.enabled() && reply_ok[worker] {
+                        let t = driver_start.elapsed().as_secs_f64();
+                        let deliv = TraceEvent::Delivery { duplicate: false };
+                        sink.emit(attempts[worker] - 1, worker as i64, t, deliv);
+                    }
                     if evicted[worker] {
                         // Reply from before a scheduled leave: discard, do
                         // not reschedule (the worker idles until its join).
@@ -855,6 +982,8 @@ fn run_real_async(
                             &mut net_stats,
                             n_blocks,
                             &mut blocks_out,
+                            sink,
+                            driver_start,
                         );
                         version_given[worker] = version;
                         let snap = Arc::new(theta.clone());
@@ -888,6 +1017,8 @@ fn run_real_async(
                             &mut net_stats,
                             n_blocks,
                             &mut blocks_out,
+                            sink,
+                            driver_start,
                         );
                         let held = theta_ledger
                             .held(worker)
@@ -927,6 +1058,8 @@ fn run_real_async(
                             &mut net_stats,
                             n_blocks,
                             &mut blocks_out,
+                            sink,
+                            driver_start,
                         );
                         version_given[worker] = version;
                         let snap = Arc::new(theta.clone());
@@ -1001,6 +1134,8 @@ fn run_real_async(
                         &mut net_stats,
                         n_blocks,
                         &mut blocks_out,
+                        sink,
+                        driver_start,
                     );
                     let snap = Arc::new(theta.clone());
                     theta_ledger.hold(worker, &snap);
@@ -1039,6 +1174,7 @@ fn run_real_async(
                             dropped: dnet.dropped as usize,
                             duplicated: dnet.duplicated as usize,
                             blocks: dnet.blocks_delivered as usize,
+                            stale_blocks: 0,
                             alive: membership.alive(),
                             gamma: None,
                             grad_norm,
@@ -1053,6 +1189,10 @@ fn run_real_async(
                     thread_crashed[worker] = true;
                     in_flight[worker] = false;
                     membership.mark_down(worker);
+                    if sink.enabled() {
+                        let t = driver_start.elapsed().as_secs_f64();
+                        sink.emit(updates, worker as i64, t, TraceEvent::Crash);
+                    }
                     if membership.alive() == 0 {
                         status = RunStatus::ClusterDead { iter: updates };
                         break;
@@ -1089,5 +1229,6 @@ fn run_real_async(
             None
         },
         driver_secs: driver_start.elapsed().as_secs_f64(),
+        trace: sink.summary(),
     })
 }

@@ -2,9 +2,10 @@
 //! the counting `#[global_allocator]` must own the whole process).
 //!
 //! *Virtual driver*: after warmup, a steady-state iteration of
-//! `sim::run_virtual` must perform **zero** heap allocations — the
-//! `IterScratch` arena, the fused `grad_into` kernel, and the reusable
-//! barrier/transport buffers leave nothing to allocate.  Measured
+//! `sim::run_virtual_traced` with tracing disabled (`NoopSink`) must
+//! perform **zero** heap allocations — the `IterScratch` arena, the fused
+//! `grad_into` kernel, and the reusable barrier/transport buffers leave
+//! nothing to allocate, and the flight recorder's off switch adds nothing.  Measured
 //! differentially: two identical runs that differ only in iteration count
 //! must allocate exactly the same number of times (setup + warmup
 //! allocations cancel; any per-iteration allocation shows up multiplied by
@@ -24,6 +25,7 @@ use hybriditer::data::{KrrProblem, KrrProblemSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
 use hybriditer::straggler::DelayModel;
+use hybriditer::trace::{NoopSink, TraceSink};
 use hybriditer::worker::NativeKrrFactory;
 
 struct CountingAlloc;
@@ -74,7 +76,7 @@ fn problem() -> KrrProblem {
     KrrProblem::generate(&spec).unwrap()
 }
 
-fn virtual_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
+fn virtual_run_allocs(p: &KrrProblem, iters: u64, sink: &mut dyn TraceSink) -> u64 {
     let cluster = ClusterSpec {
         workers: 4,
         delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
@@ -94,7 +96,7 @@ fn virtual_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
     .with_iters(iters);
     let mut pool = p.native_pool();
     let before = allocs();
-    let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+    let rep = sim::run_virtual_traced(&mut pool, &cluster, &cfg, &NoEval, sink).unwrap();
     let after = allocs();
     assert!(rep.status.is_healthy(), "{:?}", rep.status);
     after - before
@@ -134,13 +136,16 @@ fn steady_state_allocation_budgets() {
 
     // --- virtual driver: zero allocations per steady-state iteration ---
     // Warm the arena's high-water marks once, then measure differentially.
-    let _ = virtual_run_allocs(&p, 50);
-    let short = virtual_run_allocs(&p, 100);
-    let long = virtual_run_allocs(&p, 400);
+    // The runs go through the *traced* entry point with tracing disabled
+    // (`NoopSink`): the flight recorder's off switch must keep the hot
+    // path allocation-free, not just "cheap".
+    let _ = virtual_run_allocs(&p, 50, &mut NoopSink);
+    let short = virtual_run_allocs(&p, 100, &mut NoopSink);
+    let long = virtual_run_allocs(&p, 400, &mut NoopSink);
     assert_eq!(
         long, short,
-        "virtual driver allocates per iteration: {} allocs over 300 extra \
-         iterations ({:.2}/iter)",
+        "virtual driver allocates per iteration with tracing disabled: {} \
+         allocs over 300 extra iterations ({:.2}/iter)",
         long - short,
         (long - short) as f64 / 300.0
     );

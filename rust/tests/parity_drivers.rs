@@ -23,6 +23,7 @@ use hybriditer::data::{KrrProblem, KrrProblemSpec};
 use hybriditer::net::{LinkModel, NetSpec};
 use hybriditer::optim::OptimizerKind;
 use hybriditer::sim::{self, NoEval};
+use hybriditer::trace::JournalSink;
 use hybriditer::worker::NativeKrrFactory;
 
 fn problem(machines: usize) -> KrrProblem {
@@ -807,4 +808,203 @@ fn golden_theta_trajectory_bit_identical_reference_vs_fused() {
         }
         assert_eq!(fused.total_abandoned, reference.total_abandoned, "scenario {i}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Trace-parity oracles: the flight recorder as a cross-driver invariant
+// ---------------------------------------------------------------------
+
+/// Run both drivers with a [`JournalSink`] attached and hand back the
+/// journals alongside the reports.
+fn run_both_traced(
+    p: &KrrProblem,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+) -> (RunReport, JournalSink, RunReport, JournalSink) {
+    let mut pool = p.native_pool();
+    let mut vsink = JournalSink::new();
+    let virt = sim::run_virtual_traced(&mut pool, cluster, cfg, &NoEval, &mut vsink).unwrap();
+    let coord = Coordinator::new(cluster.clone(), cfg.clone()).unwrap();
+    let factory = NativeKrrFactory::for_problem(p);
+    let mut rsink = JournalSink::new();
+    let real = coord.run_real_traced(&factory, &NoEval, &mut rsink).unwrap();
+    (virt, vsink, real, rsink)
+}
+
+/// Byte-identity with a readable failure: report the first diverging line
+/// instead of dumping two whole journals into the assertion message.
+fn assert_journals_identical(tag: &str, virt: &str, real: &str) {
+    for (i, (lv, lr)) in virt.lines().zip(real.lines()).enumerate() {
+        assert_eq!(lv, lr, "{tag}: journals diverge at line {i}");
+    }
+    assert_eq!(
+        virt.lines().count(),
+        real.lines().count(),
+        "{tag}: journal lengths differ"
+    );
+    assert_eq!(virt, real, "{tag}: journals not byte-identical");
+}
+
+#[test]
+fn trace_parity_ideal_elastic_byte_identical_journals() {
+    // Tentpole oracle: on an ideal network both drivers must write the
+    // *byte-identical* event journal once timestamps are normalized away —
+    // same events, same (iter, worker) stamps, same order.  The elastic
+    // trace exercises every taxonomy branch reachable without loss:
+    // dispatches, deliveries, leave/join boundaries, rebalance cuts, and
+    // barrier closes.  γ = M keeps every delivery inside its barrier, so
+    // wall-clock jitter cannot reorder events across iterations.
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 5,
+        ..ClusterSpec::default()
+    }
+    .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 3], 4, 8), 1);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: m },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(14);
+
+    let (virt, vsink, real, rsink) = run_both_traced(&p, &cluster, &cfg);
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    let vj = vsink.jsonl_normalized();
+    let rj = rsink.jsonl_normalized();
+    assert!(!vj.is_empty(), "virtual journal is empty");
+    for ev in ["dispatch", "delivery", "join", "leave", "rebalance_cut", "barrier_close"] {
+        assert!(vj.contains(ev), "virtual journal never recorded a {ev:?} event");
+    }
+    assert_journals_identical("ideal-elastic", &vj, &rj);
+
+    // The run-level rollups agree too (they fold over the same records).
+    let vt = virt.trace.expect("virtual run kept no trace summary");
+    let rt = real.trace.expect("real run kept no trace summary");
+    assert_eq!(vt.events, rt.events, "summary event counts diverged");
+    assert_eq!(vt.barriers, rt.barriers, "summary barrier counts diverged");
+    for (lv, lr) in vt.per_worker.iter().zip(&rt.per_worker) {
+        assert_eq!(lv.worker, lr.worker);
+        assert_eq!(lv.dispatches, lr.dispatches, "worker {}", lv.worker);
+        assert_eq!(lv.deliveries, lr.deliveries, "worker {}", lv.worker);
+    }
+
+    // Tracing is purely observational: attaching a sink cannot move θ.
+    let mut pool = p.native_pool();
+    let untraced = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+    assert_eq!(virt.theta, untraced.theta, "attaching a sink perturbed θ bits");
+}
+
+#[test]
+fn trace_parity_lossy_net_identical_fate_sequences() {
+    // Tentpole oracle, lossy half: wall-clock arrival order differs across
+    // drivers once the network drops and duplicates messages, but the
+    // per-message *fates* (dispatch / drop / duplicate per (worker, iter))
+    // are a pure function of the spec — both journals must agree on the
+    // fate subsequence exactly, event for event.
+    let m = 4;
+    let p = problem(m);
+    let net = NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            dup_lag: 0.0005,
+            ..LinkModel::ideal()
+        },
+        ..NetSpec::ideal()
+    };
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 21,
+        ..ClusterSpec::default()
+    }
+    .with_net(net);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(30);
+
+    let (virt, vsink, real, rsink) = run_both_traced(&p, &cluster, &cfg);
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    let vf = vsink.fate_jsonl();
+    let rf = rsink.fate_jsonl();
+    assert!(vf.contains("\"event\":\"drop\""), "lossy spec journaled no drops");
+    assert!(vf.contains("\"event\":\"duplicate\""), "lossy spec journaled no dups");
+    assert_journals_identical("lossy-fates", &vf, &rf);
+
+    // Fate events cross-check the run-level accounting: every dispatch
+    // sends its Work message, and each roundtrip surviving the down link
+    // sends a Grad reply too.
+    let dispatches = vf.matches("\"event\":\"dispatch\"").count() as u64;
+    let down_drops = vf.matches("\"down\":true").count() as u64;
+    assert_eq!(dispatches * 2 - down_drops, virt.net.sent, "fate events vs sent messages");
+}
+
+#[test]
+fn trace_parity_blocked_lossy_net_identical_block_fates() {
+    // Block admission: each reply is chunked into 4 blocks and the fate
+    // events carry the delivered-block mask.  Both drivers re-realize the
+    // same pure block fates, so the journals' fate subsequences — masks
+    // included — must match byte for byte.
+    let m = 4;
+    let p = problem(m);
+    let net = NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            dup_lag: 0.0005,
+            ..LinkModel::ideal()
+        },
+        block_size: 4,
+        min_block_frac: 0.0,
+        ..NetSpec::ideal()
+    };
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 21,
+        ..ClusterSpec::default()
+    }
+    .with_net(net);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: 2 },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(30);
+
+    let (virt, vsink, real, rsink) = run_both_traced(&p, &cluster, &cfg);
+    assert!(virt.status.is_healthy(), "virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "real: {:?}", real.status);
+
+    let vf = vsink.fate_jsonl();
+    let rf = rsink.fate_jsonl();
+    assert!(
+        vf.contains("\"event\":\"block_fate\""),
+        "blocking never journaled a block fate"
+    );
+    assert!(vf.contains("\"delivered_mask\""), "block fates carry no masks");
+    assert_journals_identical("blocked-fates", &vf, &rf);
+    assert_eq!(virt.stale_blocks, real.stale_blocks, "stale-block admission diverged");
 }

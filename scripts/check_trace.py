@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder JSONL journal (docs/OBSERVABILITY.md).
+
+Checks, per line:
+  * the line is a well-formed JSON object;
+  * the envelope fields are present and correctly typed
+    (seq/iter: non-negative ints, worker: int >= -1, time: finite number);
+  * the event name is a known member of the taxonomy.
+
+Checks, across the journal:
+  * `seq` starts at 0 and is strictly increasing by 1 (a gap means a sink
+    dropped or reordered an event);
+  * the journal is non-empty.
+
+Exit code 0 on success; 1 with a line-numbered error otherwise.
+
+Usage: scripts/check_trace.py <journal.jsonl>
+"""
+
+import json
+import math
+import sys
+
+KNOWN_EVENTS = {
+    "dispatch",
+    "delivery",
+    "drop",
+    "duplicate",
+    "block_fate",
+    "stale_admission",
+    "retry_attempt",
+    "rebalance_cut",
+    "join",
+    "leave",
+    "crash",
+    "barrier_close",
+}
+
+
+def fail(lineno, msg):
+    print(f"::error::trace journal line {lineno}: {msg}")
+    sys.exit(1)
+
+
+def main(path):
+    counts = {}
+    expected_seq = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            line = line.strip()
+            if not line:
+                fail(lineno, "blank line in journal")
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(lineno, f"not valid JSON: {e}")
+            if not isinstance(rec, dict):
+                fail(lineno, "record is not a JSON object")
+            for key in ("seq", "iter", "worker", "time", "event"):
+                if key not in rec:
+                    fail(lineno, f"missing field {key!r}")
+            if not isinstance(rec["seq"], int) or rec["seq"] < 0:
+                fail(lineno, f"bad seq {rec['seq']!r}")
+            if rec["seq"] != expected_seq:
+                fail(lineno, f"seq {rec['seq']} breaks the strict 0,1,2,... order")
+            expected_seq += 1
+            if not isinstance(rec["iter"], int) or rec["iter"] < 0:
+                fail(lineno, f"bad iter {rec['iter']!r}")
+            if not isinstance(rec["worker"], int) or rec["worker"] < -1:
+                fail(lineno, f"bad worker {rec['worker']!r} (master is -1)")
+            t = rec["time"]
+            if not isinstance(t, (int, float)) or isinstance(t, bool) or not math.isfinite(t):
+                fail(lineno, f"bad time {t!r}")
+            ev = rec["event"]
+            if ev not in KNOWN_EVENTS:
+                fail(lineno, f"unknown event {ev!r}")
+            counts[ev] = counts.get(ev, 0) + 1
+    if expected_seq == 0:
+        print(f"::error::trace journal {path} is empty")
+        sys.exit(1)
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"{path}: {expected_seq} events OK ({summary})")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    main(sys.argv[1])
