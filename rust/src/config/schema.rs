@@ -59,6 +59,10 @@
 //! [bench]
 //! threads = 0           # sweep worker pool size (0 = available parallelism)
 //!
+//! [recovery]
+//! policy = "abandon"    # abandon | rebalance | partial-recovery | checkpoint-restore
+//! checkpoint_every = 25 # snapshot cadence (checkpoint-restore only)
+//!
 //! [run]
 //! iters = 500
 //! eval_every = 10
@@ -314,7 +318,14 @@ impl ExperimentConfig {
             record_every: v.opt_u64("run.record_every", 1),
             init_theta: None,
             seed: v.opt_u64("run.seed", 1),
+            recovery: crate::recovery::RecoveryConfig {
+                policy: crate::recovery::RecoveryPolicy::parse(
+                    v.opt_str("recovery.policy", "abandon"),
+                )?,
+                checkpoint_every: v.opt_u64("recovery.checkpoint_every", 25),
+            },
         };
+        run.recovery.validate()?;
 
         let timing = match v.opt_str("run.timing", "virtual") {
             "virtual" => TimingMode::Virtual,
@@ -486,6 +497,26 @@ backend = "native"
         assert!(ExperimentConfig::from_toml("[optimizer]\nkind = \"qp\"").is_err());
         assert!(ExperimentConfig::from_toml("[run]\ntiming = \"half\"").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").is_err());
+        assert!(ExperimentConfig::from_toml("[recovery]\npolicy = \"wormhole\"").is_err());
+    }
+
+    #[test]
+    fn recovery_section_parses_and_defaults() {
+        use crate::recovery::RecoveryPolicy;
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[recovery]\npolicy = \"checkpoint-restore\"\ncheckpoint_every = 10",
+        )
+        .unwrap();
+        assert_eq!(cfg.run.recovery.policy, RecoveryPolicy::CheckpointRestore);
+        assert_eq!(cfg.run.recovery.checkpoint_every, 10);
+        let off = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert_eq!(off.run.recovery.policy, RecoveryPolicy::Abandon);
+        assert_eq!(off.run.recovery.checkpoint_every, 25);
+        // checkpoint-restore with a zero cadence cannot snapshot at all.
+        assert!(ExperimentConfig::from_toml(
+            "[recovery]\npolicy = \"checkpoint-restore\"\ncheckpoint_every = 0",
+        )
+        .is_err());
     }
 
     #[test]

@@ -140,6 +140,9 @@ pub struct RunConfig {
     pub init_theta: Option<Vec<f32>>,
     /// Adaptive-γ re-estimation window (iterations), for HybridAdaptive.
     pub seed: u64,
+    /// What the run does when a worker crashes or leaves
+    /// (`[recovery]` config section; see `docs/RECOVERY.md`).
+    pub recovery: crate::recovery::RecoveryConfig,
 }
 
 impl Default for RunConfig {
@@ -155,6 +158,7 @@ impl Default for RunConfig {
             record_every: 1,
             init_theta: None,
             seed: 1,
+            recovery: crate::recovery::RecoveryConfig::default(),
         }
     }
 }
@@ -203,6 +207,12 @@ pub struct RunReport {
     pub stale_blocks: u64,
     /// Async only: mean staleness of applied gradients.
     pub mean_staleness: Option<f64>,
+    /// Recovery-policy actions fired (restores, lost-partition
+    /// reconstructions, forced replans); 0 under the default
+    /// [`crate::recovery::RecoveryPolicy::Abandon`].
+    pub recoveries: u64,
+    /// Total iterations of progress rolled back by checkpoint restores.
+    pub rollback_iters: u64,
     /// Wall-clock of the driver itself (not virtual time), seconds.
     pub driver_secs: f64,
     /// Flight-recorder roll-up (per-worker lanes, latency/abandonment
@@ -262,6 +272,12 @@ impl RunReport {
                 self.net.blocks_delivered, self.net.blocks_sent, self.stale_blocks
             ));
         }
+        if self.recoveries > 0 {
+            s.push_str(&format!(
+                " recoveries={} rollback_iters={}",
+                self.recoveries, self.rollback_iters
+            ));
+        }
         s
     }
 }
@@ -281,6 +297,16 @@ impl Coordinator {
             return Err(Error::Cluster("cluster needs at least one worker".into()));
         }
         validate_elastic(&cluster, &cfg.mode)?;
+        cfg.recovery.validate()?;
+        if cfg.mode.is_async()
+            && !matches!(cfg.recovery.policy, crate::recovery::RecoveryPolicy::Abandon)
+        {
+            return Err(Error::Config(format!(
+                "recovery policy '{}' is not supported in async mode (async has \
+                 no crash/rejoin barrier to recover at); use 'abandon'",
+                cfg.recovery.policy.name()
+            )));
+        }
         if let SyncMode::Hybrid { gamma } = cfg.mode {
             if gamma == 0 || gamma > cluster.workers {
                 return Err(Error::Cluster(format!(
@@ -392,9 +418,24 @@ mod tests {
             net: crate::net::NetStats::default(),
             stale_blocks: 0,
             mean_staleness: None,
+            recoveries: 0,
+            rollback_iters: 0,
             driver_secs: 0.0,
             trace: None,
         };
         assert!((rep.abandon_rate() - 0.25).abs() < 1e-12);
+        assert!(!rep.summary().contains("recoveries="));
+    }
+
+    #[test]
+    fn coordinator_rejects_async_plus_recovery() {
+        use crate::recovery::{RecoveryConfig, RecoveryPolicy};
+        let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+        let mut cfg = RunConfig::default().with_mode(SyncMode::Async { damping: 0.0 });
+        cfg.recovery =
+            RecoveryConfig { policy: RecoveryPolicy::PartialRecovery, ..Default::default() };
+        assert!(Coordinator::new(cluster.clone(), cfg.clone()).is_err());
+        cfg.recovery = RecoveryConfig::default();
+        assert!(Coordinator::new(cluster, cfg).is_ok());
     }
 }

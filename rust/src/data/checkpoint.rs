@@ -90,12 +90,30 @@ impl Checkpoint {
     }
 
     /// Save to a file (creating parent dirs).
+    ///
+    /// The write is atomic: the bytes go to a temp file in the same
+    /// directory, which is renamed into place only after a successful
+    /// flush — a crash mid-save leaves any previous checkpoint intact
+    /// instead of a truncated, unloadable one.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        self.write_to(&mut f)
+        let mut file_name = path
+            .file_name()
+            .ok_or_else(|| Error::other("checkpoint path has no file name"))?
+            .to_os_string();
+        file_name.push(".tmp");
+        let tmp = path.with_file_name(file_name);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        let write = self.write_to(&mut f).and_then(|()| f.flush().map_err(Error::from));
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        Ok(())
     }
 
     /// Load from a file.
@@ -164,6 +182,47 @@ mod tests {
         buf.truncate(buf.len() - 10);
         let mut cur = std::io::Cursor::new(buf);
         assert!(Checkpoint::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn save_survives_truncation_of_a_previous_save() {
+        // A crash mid-save must not corrupt the checkpoint on disk.
+        // Simulate the old non-atomic failure mode by truncating the
+        // *temp* artifact a crashed writer would leave behind, then
+        // verify the real path still loads the earlier save intact.
+        let path = tmp("d.ckpt");
+        let first = Checkpoint::new(vec![1.0; 50], 1);
+        first.save(&path).unwrap();
+        // A later save that dies mid-write leaves only a stray temp
+        // file; the target is untouched until the atomic rename.
+        let second = Checkpoint::new(vec![2.0; 80], 2);
+        let mut buf = Vec::new();
+        second.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        let tmp_path = path.with_file_name("d.ckpt.tmp");
+        std::fs::write(&tmp_path, &buf).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, first);
+        // The interrupted temp file itself is rejected, not silently
+        // mistaken for a checkpoint.
+        assert!(Checkpoint::load(&tmp_path).is_err());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&tmp_path).unwrap();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_file_behind() {
+        let path = tmp("e.ckpt");
+        Checkpoint::new(vec![3.0; 10], 3).save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_file_name("e.ckpt.tmp").exists());
+        // Overwriting an existing checkpoint goes through the same
+        // rename and replaces it completely.
+        Checkpoint::new(vec![4.0; 20], 4).save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.iter, 4);
+        assert_eq!(back.theta.len(), 20);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

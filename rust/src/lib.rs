@@ -49,6 +49,7 @@ pub mod math;
 pub mod metrics;
 pub mod net;
 pub mod optim;
+pub mod recovery;
 pub mod runtime;
 pub mod sim;
 pub mod straggler;

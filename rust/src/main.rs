@@ -111,6 +111,17 @@ fn cmd_train(argv: &[String]) -> i32 {
             "sweep/worker pool size (default: [bench] threads, else available parallelism)",
         )
         .opt(
+            "recovery-policy",
+            "",
+            "crash recovery policy: abandon | rebalance | partial-recovery | \
+             checkpoint-restore (overrides config)",
+        )
+        .opt(
+            "checkpoint-every",
+            "",
+            "checkpoint-restore snapshot cadence in iterations (overrides config)",
+        )
+        .opt(
             "trace-out",
             "",
             "write the flight-recorder journal (JSONL) here (overrides config)",
@@ -207,6 +218,15 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
         cfg.cluster.net.min_block_frac = f;
     }
     cfg.cluster.net.validate(cfg.cluster.workers)?;
+    let recovery_policy = parsed.get("recovery-policy");
+    if !recovery_policy.is_empty() {
+        cfg.run.recovery.policy =
+            hybriditer::recovery::RecoveryPolicy::parse(recovery_policy)?;
+    }
+    if let Some(k) = parsed.get_opt_usize("checkpoint-every")? {
+        cfg.run.recovery.checkpoint_every = k as u64;
+    }
+    cfg.run.recovery.validate()?;
     // Pool-size resolution: --threads beats [bench] threads beats auto.
     let threads = match parsed.get_opt_usize("threads")? {
         Some(n) => n,

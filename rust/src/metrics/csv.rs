@@ -12,16 +12,17 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    // `blocks` and `stale_blocks` are appended last (in that order) so
-    // existing column-indexed readers keep working on older CSVs.
+    // New columns are appended last (`blocks`, `stale_blocks`, then
+    // `recoveries`, `rollback_iters`, in that order) so existing
+    // column-indexed readers keep working on older CSVs.
     writeln!(
         f,
-        "iter,time,loss,eval_loss,theta_err,included,abandoned,stale,dropped,duplicated,alive,gamma,grad_norm,blocks,stale_blocks"
+        "iter,time,loss,eval_loss,theta_err,included,abandoned,stale,dropped,duplicated,alive,gamma,grad_norm,blocks,stale_blocks,recoveries,rollback_iters"
     )?;
     for r in rec.rows() {
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.iter,
             r.time,
             r.loss,
@@ -36,7 +37,9 @@ pub fn write_recorder(rec: &Recorder, path: &Path) -> Result<()> {
             r.gamma.map(|g| g.to_string()).unwrap_or_default(),
             r.grad_norm,
             r.blocks,
-            r.stale_blocks
+            r.stale_blocks,
+            r.recoveries,
+            r.rollback_iters
         )?;
     }
     Ok(())
@@ -92,6 +95,8 @@ mod tests {
             alive: 4,
             gamma: Some(3),
             grad_norm: 0.7,
+            recoveries: 1,
+            rollback_iters: 4,
         });
         let path = std::env::temp_dir().join("hybriditer_csv_test/x.csv");
         write_recorder(&rec, &path).unwrap();
@@ -100,10 +105,10 @@ mod tests {
         let header = lines.next().unwrap();
         assert!(header.starts_with("iter,time,loss"));
         assert!(header.contains("stale,dropped,duplicated"));
-        assert!(header.ends_with(",blocks,stale_blocks"));
+        assert!(header.ends_with(",blocks,stale_blocks,recoveries,rollback_iters"));
         let row = lines.next().unwrap();
         assert!(row.starts_with("0,0.5,2,2.1,,3,1,2,5,1,4,3,0.7"));
-        assert!(row.ends_with(",6,2"));
+        assert!(row.ends_with(",6,2,1,4"));
         std::fs::remove_file(&path).unwrap();
     }
 

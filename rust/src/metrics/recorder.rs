@@ -41,6 +41,13 @@ pub struct IterRow {
     pub gamma: Option<usize>,
     /// L2 norm of the aggregated gradient.
     pub grad_norm: f64,
+    /// Recovery-policy actions fired this iteration (restores,
+    /// lost-partition reconstructions, forced replans); 0 under the
+    /// default abandon policy.  See `docs/RECOVERY.md`.
+    pub recoveries: usize,
+    /// Iterations of progress rolled back by checkpoint restores this
+    /// iteration (0 for the rollback-free policies).
+    pub rollback_iters: u64,
 }
 
 /// Collects [`IterRow`]s and computes run-level summaries.
@@ -161,6 +168,8 @@ mod tests {
             alive: 4,
             gamma: Some(4),
             grad_norm: 1.0,
+            recoveries: 0,
+            rollback_iters: 0,
         }
     }
 

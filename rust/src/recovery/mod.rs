@@ -1,0 +1,481 @@
+//! Self-healing recovery policies: what to do when a worker dies.
+//!
+//! The source paper's answer to failure is to *abandon* a dead worker's
+//! results; the repo additionally *rebalances* its shards at elastic
+//! boundaries.  This module adds the remaining two corners of the
+//! design space from Qiao et al. (*Fault Tolerance in
+//! Iterative-Convergent ML*): **partial recovery** — keep iterating
+//! through the crash and reconstruct only the lost partition's
+//! contribution, no global rollback — and **checkpoint-restore** —
+//! periodic θ snapshots with restore-on-crash and explicit rollback
+//! accounting.
+//!
+//! Both drivers (the virtual `sim/` engine and the threaded
+//! `coordinator`/`worker` runtime) consult one [`RecoveryState`] at the
+//! same crash/leave/join boundaries, so recovery decisions are pure
+//! functions of the scheduled trace and the failure RNG — like network
+//! fates — and the trace-parity oracles extend naturally: under
+//! scheduled elastic traces both drivers journal identical
+//! `RecoveryStart`/`RecoveryDone` sequences (see `docs/RECOVERY.md`).
+//!
+//! The policy taxonomy:
+//!
+//! * [`RecoveryPolicy::Abandon`] — the paper's baseline and the
+//!   default: lost contributions are simply abandoned.  This is the
+//!   exact pre-recovery behaviour, bit for bit, with zero additional
+//!   work on the hot path.
+//! * [`RecoveryPolicy::Rebalance`] — abandon the lost contribution but
+//!   force a shard replan whenever membership is perturbed, even when
+//!   periodic rebalancing (`[elastic] rebalance_every`) is off.
+//! * [`RecoveryPolicy::PartialRecovery`] — keep iterating; when the
+//!   worker respawns or its scheduled join lands, recompute its
+//!   partition's gradient at the *current* θ and fold it through the
+//!   staleness-damped aggregation path with staleness = downtime.
+//! * [`RecoveryPolicy::CheckpointRestore`] — snapshot θ every
+//!   `checkpoint_every` iterations (in memory, via the
+//!   [`crate::data::Checkpoint`] container); on a crash, restore θ from
+//!   the last snapshot and account the rolled-back iterations.
+
+use crate::data::Checkpoint;
+use crate::{Error, Result};
+
+/// What the run does when a worker crashes or leaves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Abandon the lost contribution (the paper's behaviour; default).
+    Abandon,
+    /// Abandon, but force a shard replan on every membership change.
+    Rebalance,
+    /// Keep iterating; reconstruct only the lost partition on rejoin.
+    PartialRecovery,
+    /// Periodic θ snapshots; restore-on-crash with rollback accounting.
+    CheckpointRestore,
+}
+
+impl RecoveryPolicy {
+    /// Parse a policy name as written in config / CLI.
+    pub fn parse(s: &str) -> Result<RecoveryPolicy> {
+        Ok(match s {
+            "abandon" => RecoveryPolicy::Abandon,
+            "rebalance" => RecoveryPolicy::Rebalance,
+            "partial-recovery" => RecoveryPolicy::PartialRecovery,
+            "checkpoint-restore" => RecoveryPolicy::CheckpointRestore,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown recovery policy '{other}' \
+                     (abandon|rebalance|partial-recovery|checkpoint-restore)"
+                )))
+            }
+        })
+    }
+
+    /// The canonical name (inverse of [`RecoveryPolicy::parse`]); also
+    /// the `policy` payload of `recovery_start`/`recovery_done` events.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryPolicy::Abandon => "abandon",
+            RecoveryPolicy::Rebalance => "rebalance",
+            RecoveryPolicy::PartialRecovery => "partial-recovery",
+            RecoveryPolicy::CheckpointRestore => "checkpoint-restore",
+        }
+    }
+
+    /// Does the supervisor auto-respawn stochastically crashed workers
+    /// at the next iteration boundary?  (Scheduled leaves are *never*
+    /// auto-respawned — a scripted departure is not a failure.)
+    pub fn respawns_crashed(self) -> bool {
+        matches!(
+            self,
+            RecoveryPolicy::PartialRecovery | RecoveryPolicy::CheckpointRestore
+        )
+    }
+
+    /// Does the policy force a shard replan when membership changes?
+    pub fn forces_rebalance(self) -> bool {
+        self == RecoveryPolicy::Rebalance
+    }
+
+    /// Does the policy take periodic θ snapshots?
+    pub fn checkpoints(self) -> bool {
+        self == RecoveryPolicy::CheckpointRestore
+    }
+
+    /// Does the policy queue a lost-partition catch-up on rejoin?
+    pub fn catches_up(self) -> bool {
+        self == RecoveryPolicy::PartialRecovery
+    }
+}
+
+/// `[recovery]` config section (+ `--recovery-policy` /
+/// `--checkpoint-every` CLI overrides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryConfig {
+    pub policy: RecoveryPolicy,
+    /// Snapshot cadence for [`RecoveryPolicy::CheckpointRestore`]
+    /// (iterations between in-memory θ checkpoints).
+    pub checkpoint_every: u64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> RecoveryConfig {
+        RecoveryConfig { policy: RecoveryPolicy::Abandon, checkpoint_every: 25 }
+    }
+}
+
+impl RecoveryConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.policy.checkpoints() && self.checkpoint_every == 0 {
+            return Err(Error::Config(
+                "recovery.checkpoint_every must be > 0 under checkpoint-restore".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A queued lost-partition reconstruction: recompute worker `worker`'s
+/// current shards at the live θ and fold them with `staleness` =
+/// iterations of downtime (the staleness-damped aggregator weights the
+/// catch-up by `rho^staleness`; the plain mean folds it unweighted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CatchUp {
+    pub worker: usize,
+    pub staleness: u64,
+}
+
+/// Per-run recovery state, shared verbatim by both drivers.
+///
+/// The drivers call the hooks at fixed points of the iteration:
+///
+/// 1. [`take_respawns`](RecoveryState::take_respawns) — top of the
+///    iteration, before the elastic boundary: workers that crashed
+///    stochastically last iteration respawn (ascending worker order).
+/// 2. [`maybe_snapshot`](RecoveryState::maybe_snapshot) — a due θ
+///    checkpoint is taken *before* boundary events and the failure
+///    sweep, so a same-iteration crash restores to this snapshot.
+/// 3. [`on_leave`](RecoveryState::on_leave) /
+///    [`on_join`](RecoveryState::on_join) — per scheduled elastic
+///    event, inside the boundary, in schedule order.
+/// 4. [`on_crash`](RecoveryState::on_crash) — when the stochastic
+///    failure model kills a worker (virtual failure sweep; threaded
+///    `SimulatedCrash` message).
+/// 5. [`take_catchups`](RecoveryState::take_catchups) — at gradient
+///    aggregation, appended after the fresh/carryover/stale chains.
+///
+/// A hook returning `Some(rollback)` means a recovery fired: the caller
+/// journals a `RecoveryStart`/`RecoveryDone` pair for that worker (see
+/// [`crate::trace::emit_recovery`]) and the state has already counted
+/// it in [`recoveries`](RecoveryState::recoveries) /
+/// [`rollback_iters`](RecoveryState::rollback_iters).
+#[derive(Debug)]
+pub struct RecoveryState {
+    cfg: RecoveryConfig,
+    /// Iteration at which each worker went down (`None` = up).
+    down_at: Vec<Option<u64>>,
+    /// Stochastically crashed workers awaiting supervisor respawn.
+    respawn_queue: Vec<usize>,
+    /// Lost-partition reconstructions awaiting the aggregation phase.
+    catchup_queue: Vec<CatchUp>,
+    /// Last θ snapshot (checkpoint-restore only).
+    snapshot: Option<Checkpoint>,
+    /// Membership was perturbed since the last boundary replan
+    /// (rebalance policy only).
+    force_replan: bool,
+    /// Total recoveries fired.
+    pub recoveries: u64,
+    /// Total iterations rolled back across all restores.
+    pub rollback_iters: u64,
+}
+
+impl RecoveryState {
+    pub fn new(cfg: RecoveryConfig, workers: usize) -> RecoveryState {
+        RecoveryState {
+            cfg,
+            down_at: vec![None; workers],
+            respawn_queue: Vec::new(),
+            catchup_queue: Vec::new(),
+            snapshot: None,
+            force_replan: false,
+            recoveries: 0,
+            rollback_iters: 0,
+        }
+    }
+
+    pub fn policy(&self) -> RecoveryPolicy {
+        self.cfg.policy
+    }
+
+    /// True for the default policy: every hook is a no-op and the
+    /// drivers keep their pre-recovery hot paths (zero allocations per
+    /// steady-state virtual iteration).
+    pub fn is_noop(&self) -> bool {
+        self.cfg.policy == RecoveryPolicy::Abandon
+    }
+
+    /// Take a θ snapshot if one is due this iteration.
+    pub fn maybe_snapshot(&mut self, iter: u64, theta: &[f32]) {
+        if self.cfg.policy.checkpoints() && iter % self.cfg.checkpoint_every == 0 {
+            match &mut self.snapshot {
+                // Reuse the buffer: snapshots are hot-loop work.
+                Some(ck) => {
+                    ck.theta.clear();
+                    ck.theta.extend_from_slice(theta);
+                    ck.iter = iter;
+                }
+                None => self.snapshot = Some(Checkpoint::new(theta.to_vec(), iter)),
+            }
+        }
+    }
+
+    /// Iteration of the last snapshot, if any.
+    pub fn snapshot_iter(&self) -> Option<u64> {
+        self.snapshot.as_ref().map(|c| c.iter)
+    }
+
+    /// Drain the supervisor respawn queue (ascending worker order) into
+    /// `out`.  The driver re-admits each worker
+    /// (`FailureState::force_rejoin` + `Membership::mark_alive`, or an
+    /// actual thread respawn) and then calls
+    /// [`on_join`](RecoveryState::on_join) for it.
+    pub fn take_respawns(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        out.append(&mut self.respawn_queue);
+        out.sort_unstable();
+    }
+
+    /// Drain queued lost-partition catch-ups into `out`.
+    pub fn take_catchups(&mut self, out: &mut Vec<CatchUp>) {
+        out.clear();
+        out.append(&mut self.catchup_queue);
+    }
+
+    /// Consume the forced-replan flag (rebalance policy).  The boundary
+    /// treats a set flag as "a rebalance is due now" regardless of the
+    /// periodic `rebalance_every` cadence.
+    pub fn take_force_replan(&mut self) -> bool {
+        std::mem::take(&mut self.force_replan)
+    }
+
+    /// The stochastic failure model killed worker `w` at `iter`.
+    /// Returns `Some(rollback)` when a recovery fired (journal it).
+    pub fn on_crash(&mut self, w: usize, iter: u64, theta: &mut [f32]) -> Option<u64> {
+        if self.cfg.policy.respawns_crashed() {
+            self.respawn_queue.push(w);
+        }
+        self.on_down(w, iter, theta)
+    }
+
+    /// A scheduled elastic leave removed worker `w` at `iter`.  Same
+    /// recovery semantics as a crash, but never queues a respawn — a
+    /// scripted departure is immune to the supervisor.
+    pub fn on_leave(&mut self, w: usize, iter: u64, theta: &mut [f32]) -> Option<u64> {
+        self.on_down(w, iter, theta)
+    }
+
+    fn on_down(&mut self, w: usize, iter: u64, theta: &mut [f32]) -> Option<u64> {
+        if self.down_at[w].is_none() {
+            self.down_at[w] = Some(iter);
+        }
+        match self.cfg.policy {
+            RecoveryPolicy::Abandon => None,
+            RecoveryPolicy::Rebalance => {
+                self.force_replan = true;
+                self.recoveries += 1;
+                Some(0)
+            }
+            // Partial recovery's work happens at rejoin; the downtime
+            // start is all that is recorded here.
+            RecoveryPolicy::PartialRecovery => None,
+            RecoveryPolicy::CheckpointRestore => {
+                let rollback = match &self.snapshot {
+                    Some(ck) => {
+                        theta.copy_from_slice(&ck.theta);
+                        iter - ck.iter
+                    }
+                    // No snapshot yet (crash before the first cadence
+                    // point): nothing to restore, zero rollback.
+                    None => 0,
+                };
+                self.recoveries += 1;
+                self.rollback_iters += rollback;
+                Some(rollback)
+            }
+        }
+    }
+
+    /// Worker `w` rejoined at `iter` — scheduled join or supervisor
+    /// respawn.  Returns `Some(rollback)` when a recovery fired.
+    pub fn on_join(&mut self, w: usize, iter: u64) -> Option<u64> {
+        let down_at = self.down_at[w].take();
+        match self.cfg.policy {
+            RecoveryPolicy::Abandon | RecoveryPolicy::CheckpointRestore => None,
+            RecoveryPolicy::Rebalance => {
+                self.force_replan = true;
+                self.recoveries += 1;
+                Some(0)
+            }
+            RecoveryPolicy::PartialRecovery => {
+                // A join with no recorded downtime (a brand-new worker)
+                // has no lost contribution to reconstruct.
+                let start = down_at?;
+                self.catchup_queue.push(CatchUp {
+                    worker: w,
+                    staleness: iter.saturating_sub(start),
+                });
+                self.recoveries += 1;
+                Some(0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for p in [
+            RecoveryPolicy::Abandon,
+            RecoveryPolicy::Rebalance,
+            RecoveryPolicy::PartialRecovery,
+            RecoveryPolicy::CheckpointRestore,
+        ] {
+            assert_eq!(RecoveryPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RecoveryPolicy::parse("wormhole").is_err());
+    }
+
+    #[test]
+    fn config_validates_checkpoint_cadence() {
+        let bad = RecoveryConfig {
+            policy: RecoveryPolicy::CheckpointRestore,
+            checkpoint_every: 0,
+        };
+        assert!(bad.validate().is_err());
+        // A zero cadence is fine when nothing checkpoints.
+        let ok = RecoveryConfig { policy: RecoveryPolicy::Abandon, checkpoint_every: 0 };
+        assert!(ok.validate().is_ok());
+        assert!(RecoveryConfig::default().validate().is_ok());
+        assert_eq!(RecoveryConfig::default().policy, RecoveryPolicy::Abandon);
+    }
+
+    #[test]
+    fn abandon_is_noop() {
+        let mut st = RecoveryState::new(RecoveryConfig::default(), 4);
+        assert!(st.is_noop());
+        let mut theta = vec![1.0f32; 4];
+        st.maybe_snapshot(0, &theta);
+        assert!(st.snapshot_iter().is_none());
+        assert_eq!(st.on_crash(1, 3, &mut theta), None);
+        assert_eq!(st.on_leave(2, 3, &mut theta), None);
+        assert_eq!(st.on_join(1, 5), None);
+        let mut out = Vec::new();
+        st.take_respawns(&mut out);
+        assert!(out.is_empty());
+        assert_eq!(st.recoveries, 0);
+        assert_eq!(st.rollback_iters, 0);
+        assert_eq!(theta, vec![1.0f32; 4]);
+    }
+
+    #[test]
+    fn rebalance_counts_and_forces_replan() {
+        let cfg = RecoveryConfig { policy: RecoveryPolicy::Rebalance, ..Default::default() };
+        let mut st = RecoveryState::new(cfg, 4);
+        let mut theta = vec![0.0f32; 2];
+        assert_eq!(st.on_leave(0, 2, &mut theta), Some(0));
+        assert!(st.take_force_replan());
+        assert!(!st.take_force_replan());
+        assert_eq!(st.on_join(0, 6), Some(0));
+        assert!(st.take_force_replan());
+        assert_eq!(st.recoveries, 2);
+        assert_eq!(st.rollback_iters, 0);
+        // Rebalance never respawns.
+        assert_eq!(st.on_crash(1, 7, &mut theta), Some(0));
+        let mut out = Vec::new();
+        st.take_respawns(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn partial_recovery_queues_catchup_with_downtime_staleness() {
+        let cfg =
+            RecoveryConfig { policy: RecoveryPolicy::PartialRecovery, ..Default::default() };
+        let mut st = RecoveryState::new(cfg, 4);
+        let mut theta = vec![0.0f32; 2];
+        // Crash queues a respawn but fires no recovery yet.
+        assert_eq!(st.on_crash(2, 3, &mut theta), None);
+        let mut spawns = Vec::new();
+        st.take_respawns(&mut spawns);
+        assert_eq!(spawns, vec![2]);
+        // The rejoin reconstructs 4 - 3 = 1 iteration of downtime.
+        assert_eq!(st.on_join(2, 4), Some(0));
+        let mut cs = Vec::new();
+        st.take_catchups(&mut cs);
+        assert_eq!(cs, vec![CatchUp { worker: 2, staleness: 1 }]);
+        assert_eq!(st.recoveries, 1);
+        // A brand-new joiner has nothing to reconstruct.
+        assert_eq!(st.on_join(3, 9), None);
+        st.take_catchups(&mut cs);
+        assert!(cs.is_empty());
+        assert_eq!(st.recoveries, 1);
+    }
+
+    #[test]
+    fn checkpoint_restore_rolls_back_to_last_snapshot() {
+        let cfg = RecoveryConfig {
+            policy: RecoveryPolicy::CheckpointRestore,
+            checkpoint_every: 5,
+        };
+        let mut st = RecoveryState::new(cfg, 4);
+        let mut theta = vec![1.0f32, 2.0];
+        st.maybe_snapshot(0, &theta);
+        assert_eq!(st.snapshot_iter(), Some(0));
+        // Off-cadence iterations do not snapshot.
+        theta = vec![3.0, 4.0];
+        st.maybe_snapshot(3, &theta);
+        assert_eq!(st.snapshot_iter(), Some(0));
+        st.maybe_snapshot(5, &theta);
+        assert_eq!(st.snapshot_iter(), Some(5));
+        // Crash at 8 restores the iter-5 snapshot: rollback 3.
+        theta = vec![9.0, 9.0];
+        assert_eq!(st.on_crash(1, 8, &mut theta), Some(3));
+        assert_eq!(theta, vec![3.0, 4.0]);
+        assert_eq!(st.recoveries, 1);
+        assert_eq!(st.rollback_iters, 3);
+        // The crashed worker respawns; the rejoin itself fires nothing.
+        let mut spawns = Vec::new();
+        st.take_respawns(&mut spawns);
+        assert_eq!(spawns, vec![1]);
+        assert_eq!(st.on_join(1, 9), None);
+        // Rollback never exceeds the snapshot cadence.
+        assert!(st.rollback_iters < 5);
+    }
+
+    #[test]
+    fn crash_before_first_snapshot_restores_nothing() {
+        let cfg = RecoveryConfig {
+            policy: RecoveryPolicy::CheckpointRestore,
+            checkpoint_every: 10,
+        };
+        let mut st = RecoveryState::new(cfg, 2);
+        let mut theta = vec![7.0f32];
+        assert_eq!(st.on_crash(0, 4, &mut theta), Some(0));
+        assert_eq!(theta, vec![7.0f32]);
+        assert_eq!(st.rollback_iters, 0);
+    }
+
+    #[test]
+    fn respawns_drain_in_ascending_worker_order() {
+        let cfg =
+            RecoveryConfig { policy: RecoveryPolicy::PartialRecovery, ..Default::default() };
+        let mut st = RecoveryState::new(cfg, 8);
+        let mut theta = vec![0.0f32];
+        st.on_crash(5, 1, &mut theta);
+        st.on_crash(2, 1, &mut theta);
+        st.on_crash(7, 1, &mut theta);
+        let mut out = Vec::new();
+        st.take_respawns(&mut out);
+        assert_eq!(out, vec![2, 5, 7]);
+    }
+}

@@ -208,11 +208,26 @@ pub(super) fn run_async(
     // elastic rebalancing).
     let mut grad_slot = GradResult::empty();
     let mut multi_slot = GradResult::empty();
+    // Async has no crash/rejoin barrier to recover at, so non-abandon
+    // recovery policies are rejected upstream (Coordinator::new and
+    // run_virtual_traced); the boundary handler gets a no-op state.
+    let mut recovery = crate::recovery::RecoveryState::new(
+        crate::recovery::RecoveryConfig::default(),
+        m,
+    );
     // The iteration-0 boundary precedes the opening dispatches (a leave@0
     // suppresses that worker's first roundtrip); joins at boundary 0 are
     // covered by the opening dispatches themselves.
     if cluster.elastic.at(0).next().is_some() || cluster.rebalance_every > 0 {
-        let rebalanced = core.boundary(0, &cluster.elastic, cluster.rebalance_every)?;
+        let rebalanced = core.boundary(
+            0,
+            &cluster.elastic,
+            cluster.rebalance_every,
+            &mut recovery,
+            &mut theta,
+            sink,
+            0.0,
+        )?;
         if rebalanced {
             core.elastic.ownership.grouped_into(&mut assignment);
         }
@@ -240,7 +255,15 @@ pub(super) fn run_async(
             if !had_events && cluster.rebalance_every == 0 {
                 continue;
             }
-            let rebalanced = core.boundary(b, &cluster.elastic, cluster.rebalance_every)?;
+            let rebalanced = core.boundary(
+                b,
+                &cluster.elastic,
+                cluster.rebalance_every,
+                &mut recovery,
+                &mut theta,
+                sink,
+                now,
+            )?;
             if rebalanced {
                 core.elastic.ownership.grouped_into(&mut assignment);
                 log::debug!("async boundary {b}: shard ownership rebalanced");
@@ -434,6 +457,8 @@ pub(super) fn run_async(
                 alive: core.membership.alive(),
                 gamma: None,
                 grad_norm,
+                recoveries: 0,
+                rollback_iters: 0,
             });
         }
         if let Some(s) = stop {
@@ -461,6 +486,8 @@ pub(super) fn run_async(
         dx.stats,
         0,
         mean_staleness,
+        0,
+        0,
         driver_start,
         sink.summary(),
     ))

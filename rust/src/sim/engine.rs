@@ -28,7 +28,9 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::cluster::{ElasticKind, ElasticRuntime, ElasticSchedule, Membership};
+use crate::recovery::RecoveryState;
 use crate::straggler::{FailureState, StragglerProfile};
+use crate::trace::TraceSink;
 use crate::util::rng::Pcg64;
 use crate::Result;
 
@@ -165,23 +167,38 @@ impl EngineCore {
     /// out alive), each updating the failure state, the eviction mask, and
     /// the membership view together — a join that re-admits a down worker
     /// also starts its warm-up ramp
-    /// ([`crate::cluster::ElasticRuntime::note_join`]); a due
-    /// shard-rebalance plan follows, seeing the post-event membership and
-    /// the ramped capacity weights.  Returns whether a non-empty plan was
-    /// applied.
+    /// ([`crate::cluster::ElasticRuntime::note_join`]).  The recovery
+    /// policy is consulted per event ([`RecoveryState::on_leave`] /
+    /// [`RecoveryState::on_join`] — a checkpoint restore rewrites `theta`
+    /// right here, and every fired recovery is journaled through `sink`);
+    /// a due shard-rebalance plan follows, seeing the post-event
+    /// membership and the ramped capacity weights (the rebalance policy's
+    /// forced replan makes a plan due regardless of the periodic
+    /// cadence).  Returns whether a non-empty plan was applied.
+    ///
+    /// The threaded master executes the same sequence inline at its
+    /// boundaries with the same [`RecoveryState`] hook order, so recovery
+    /// decisions and their journaled events cannot drift between drivers
+    /// (`docs/RECOVERY.md`).
+    #[allow(clippy::too_many_arguments)]
     pub fn boundary(
         &mut self,
         iter: u64,
         schedule: &ElasticSchedule,
         rebalance_every: u64,
+        recovery: &mut RecoveryState,
+        theta: &mut [f32],
+        sink: &mut dyn TraceSink,
+        time: f64,
     ) -> Result<bool> {
         self.elastic.tick_warmup();
         for ev in schedule.at(iter) {
-            match ev.kind {
+            let fired = match ev.kind {
                 ElasticKind::Leave => {
                     self.evicted[ev.worker] = true;
                     self.fstates[ev.worker].force_crash(iter);
                     self.membership.mark_down(ev.worker);
+                    recovery.on_leave(ev.worker, iter, theta)
                 }
                 ElasticKind::Join => {
                     if !self.membership.is_alive(ev.worker) {
@@ -190,10 +207,24 @@ impl EngineCore {
                     self.evicted[ev.worker] = false;
                     self.fstates[ev.worker].force_rejoin();
                     self.membership.mark_alive(ev.worker);
+                    recovery.on_join(ev.worker, iter)
+                }
+            };
+            if let Some(rollback) = fired {
+                if sink.enabled() {
+                    crate::trace::emit_recovery(
+                        sink,
+                        iter,
+                        ev.worker,
+                        time,
+                        recovery.policy().name(),
+                        rollback,
+                    );
                 }
             }
         }
-        self.elastic.maybe_rebalance(iter, rebalance_every, &self.membership)
+        let every = if recovery.take_force_replan() { 1 } else { rebalance_every };
+        self.elastic.maybe_rebalance(iter, every, &self.membership)
     }
 }
 
@@ -203,6 +234,20 @@ mod tests {
 
     fn ev(at: f64, worker: usize, iter: u64) -> Event {
         Event { at, worker, iter, duplicate: false, delivers: true }
+    }
+
+    /// Drive a boundary with the default (no-op) recovery policy.
+    fn boundary(
+        core: &mut EngineCore,
+        iter: u64,
+        schedule: &ElasticSchedule,
+        every: u64,
+    ) -> bool {
+        let workers = core.evicted.len();
+        let mut rec = RecoveryState::new(Default::default(), workers);
+        let mut theta: Vec<f32> = vec![];
+        core.boundary(iter, schedule, every, &mut rec, &mut theta, &mut crate::trace::NoopSink, 0.0)
+            .unwrap()
     }
 
     #[test]
@@ -255,19 +300,19 @@ mod tests {
         let mut core = EngineCore::new(&profiles, 7, 0x51D, 1000);
         let schedule = ElasticSchedule::crash_and_rejoin(&[3], 2, 5);
 
-        assert!(!core.boundary(0, &schedule, 1).unwrap());
+        assert!(!boundary(&mut core, 0, &schedule, 1));
         assert_eq!(core.membership.alive(), 4);
 
         // Leave fires: eviction mask + failure state + membership move
         // together, and the orphaned shard is adopted.
-        assert!(core.boundary(2, &schedule, 1).unwrap());
+        assert!(boundary(&mut core, 2, &schedule, 1));
         assert!(core.evicted[3]);
         assert!(core.fstates[3].is_down());
         assert_eq!(core.membership.alive(), 3);
         assert_eq!(core.elastic.ownership.load(3), 0);
 
         // Join fires: everything reverts and load levels back.
-        assert!(core.boundary(5, &schedule, 1).unwrap());
+        assert!(boundary(&mut core, 5, &schedule, 1));
         assert!(!core.evicted[3]);
         assert!(!core.fstates[3].is_down());
         assert_eq!(core.membership.alive(), 4);
@@ -284,21 +329,49 @@ mod tests {
         core.elastic.configure_capacity(vec![1.0; 4], 2, true);
         let schedule = ElasticSchedule::crash_and_rejoin(&[1], 1, 3);
 
-        core.boundary(0, &schedule, 1).unwrap();
+        boundary(&mut core, 0, &schedule, 1);
         assert_eq!(core.elastic.ramp(1), 1.0);
-        core.boundary(1, &schedule, 1).unwrap(); // leave
-        core.boundary(2, &schedule, 1).unwrap();
+        boundary(&mut core, 1, &schedule, 1); // leave
+        boundary(&mut core, 2, &schedule, 1);
         assert_eq!(core.elastic.ramp(1), 1.0, "eviction alone must not ramp");
 
         // The join boundary starts the ramp at 1/(k+1); each subsequent
         // boundary climbs one step until it saturates at 1.
-        core.boundary(3, &schedule, 1).unwrap();
+        boundary(&mut core, 3, &schedule, 1);
         assert!((core.elastic.ramp(1) - 1.0 / 3.0).abs() < 1e-12);
         assert!((core.elastic.latency_scale(1) - 3.0).abs() < 1e-12);
-        core.boundary(4, &schedule, 1).unwrap();
+        boundary(&mut core, 4, &schedule, 1);
         assert!((core.elastic.ramp(1) - 2.0 / 3.0).abs() < 1e-12);
-        core.boundary(5, &schedule, 1).unwrap();
+        boundary(&mut core, 5, &schedule, 1);
         assert_eq!(core.elastic.ramp(1), 1.0);
         assert_eq!(core.elastic.latency_scale(1), 1.0);
+    }
+
+    #[test]
+    fn boundary_forced_replan_overrides_disabled_cadence() {
+        use crate::cluster::ElasticSchedule;
+        use crate::recovery::{RecoveryConfig, RecoveryPolicy, RecoveryState};
+        let profiles: Vec<StragglerProfile> =
+            (0..4).map(|_| StragglerProfile::healthy(0.01)).collect();
+        let mut core = EngineCore::new(&profiles, 7, 0x51D, 1000);
+        let schedule = ElasticSchedule::parse("3:leave@2").unwrap();
+        let cfg = RecoveryConfig { policy: RecoveryPolicy::Rebalance, ..Default::default() };
+        let mut rec = RecoveryState::new(cfg, 4);
+        let mut theta: Vec<f32> = vec![];
+        let mut sink = crate::trace::NoopSink;
+        // rebalance_every = 0: the periodic cadence is off, but the
+        // rebalance policy forces a replan at the leave boundary.
+        assert!(!core
+            .boundary(0, &schedule, 0, &mut rec, &mut theta, &mut sink, 0.0)
+            .unwrap());
+        assert!(core
+            .boundary(2, &schedule, 0, &mut rec, &mut theta, &mut sink, 0.0)
+            .unwrap());
+        assert_eq!(core.elastic.ownership.load(3), 0);
+        assert_eq!(rec.recoveries, 1);
+        // Quiet boundaries stay replan-free.
+        assert!(!core
+            .boundary(3, &schedule, 0, &mut rec, &mut theta, &mut sink, 0.0)
+            .unwrap());
     }
 }

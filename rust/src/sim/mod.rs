@@ -136,7 +136,15 @@ pub fn run_virtual_traced(
         )));
     }
     crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
+    cfg.recovery.validate()?;
     if cfg.mode.is_async() {
+        if !matches!(cfg.recovery.policy, crate::recovery::RecoveryPolicy::Abandon) {
+            return Err(Error::Config(format!(
+                "recovery policy '{}' is not supported in async mode (async has \
+                 no crash/rejoin barrier to recover at); use 'abandon'",
+                cfg.recovery.policy.name()
+            )));
+        }
         return async_mode::run_async(pool, cluster, cfg, hooks, driver_start, sink);
     }
     sync::run_sync(pool, cluster, cfg, hooks, driver_start, sink)

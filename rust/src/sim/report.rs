@@ -25,6 +25,8 @@ pub(crate) fn assemble(
     net: NetStats,
     stale_blocks: u64,
     mean_staleness: Option<f64>,
+    recoveries: u64,
+    rollback_iters: u64,
     driver_start: std::time::Instant,
     trace: Option<crate::trace::TraceSummary>,
 ) -> RunReport {
@@ -43,6 +45,8 @@ pub(crate) fn assemble(
         net,
         stale_blocks,
         mean_staleness,
+        recoveries,
+        rollback_iters,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace,
     }

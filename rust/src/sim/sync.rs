@@ -123,6 +123,14 @@ struct IterScratch {
     stale_arena: GradArena,
     /// `(staleness, blocks)` per stale-arena slot.
     stale_meta: Vec<(u64, BlockSet)>,
+    /// Workers the recovery supervisor respawns this boundary.
+    respawns: Vec<usize>,
+    /// Lost-partition catch-ups drained for this aggregation.
+    catchups: Vec<crate::recovery::CatchUp>,
+    /// Gradients recomputed for lost-partition catch-ups.
+    catchup_arena: GradArena,
+    /// Staleness (= downtime) per catch-up-arena slot.
+    catchup_meta: Vec<u64>,
 }
 
 impl IterScratch {
@@ -146,6 +154,10 @@ impl IterScratch {
             stale_admits: Vec::with_capacity(m),
             stale_arena: GradArena::new(),
             stale_meta: Vec::with_capacity(m),
+            respawns: Vec::new(),
+            catchups: Vec::new(),
+            catchup_arena: GradArena::new(),
+            catchup_meta: Vec::new(),
         }
     }
 }
@@ -251,6 +263,12 @@ pub(super) fn run_sync(
     // Every per-iteration buffer lives in this arena and is reused across
     // iterations: zero steady-state allocations (tests/alloc_regression.rs).
     let mut scratch = IterScratch::new(m);
+    // Recovery policy state: consulted at every crash/rejoin boundary.
+    // Under the default `abandon` policy every hook is a no-op and the
+    // loop below skips all recovery work (`recovering == false`), so the
+    // zero-alloc steady state is untouched.  See `docs/RECOVERY.md`.
+    let mut recovery = crate::recovery::RecoveryState::new(cfg.recovery, m);
+    let recovering = !recovery.is_noop();
 
     'iters: for iter in 0..cfg.stop.max_iters {
         // Split the scratch into disjoint &mut locals so the loop body
@@ -274,15 +292,59 @@ pub(super) fn run_sync(
             stale_admits,
             stale_arena,
             stale_meta,
+            respawns,
+            catchups,
+            catchup_arena,
+            catchup_meta,
         } = &mut scratch;
         if blocking {
             ledger.prune_before(iter.saturating_sub(BLOCK_LEDGER_HORIZON));
         }
         stale_admits.clear();
+        // Recovery actions recorded in an IterRow are this iteration's
+        // delta, mirroring the per-iteration network-stat deltas.
+        let recov_iter_start = recovery.recoveries;
+        let rollback_iter_start = recovery.rollback_iters;
+        if recovering {
+            // --- 0a. supervisor respawns & θ snapshot ------------------
+            // Workers that crashed stochastically last sweep respawn at
+            // this iteration's top (ascending worker order), before the
+            // scheduled boundary events land.  Respawn is instant: no
+            // `note_join` warm-up ramp — the replacement inherits the old
+            // worker's shards untouched.
+            recovery.take_respawns(respawns);
+            for &w in respawns.iter() {
+                core.fstates[w].force_rejoin();
+                core.membership.mark_alive(w);
+                if let Some(rollback) = recovery.on_join(w, iter) {
+                    if sink.enabled() {
+                        trace::emit_recovery(
+                            sink,
+                            iter,
+                            w,
+                            now,
+                            recovery.policy().name(),
+                            rollback,
+                        );
+                    }
+                }
+            }
+            // Snapshot *before* boundary events and the failure sweep, so
+            // a same-iteration crash restores to this iteration's top.
+            recovery.maybe_snapshot(iter, &theta);
+        }
         // --- 0. boundary events: elastic membership & shard rebalancing --
         // Scheduled leave/join events land exactly at this boundary, in
         // schedule order (a leave@k followed by join@k nets out alive).
-        let rebalanced = core.boundary(iter, &cluster.elastic, cluster.rebalance_every)?;
+        let rebalanced = core.boundary(
+            iter,
+            &cluster.elastic,
+            cluster.rebalance_every,
+            &mut recovery,
+            &mut theta,
+            sink,
+            now,
+        )?;
         if rebalanced {
             log::debug!("iter {iter}: shard ownership rebalanced");
         }
@@ -303,8 +365,24 @@ pub(super) fn run_sync(
             let ev = core.fstates[w].step(iter, &mut core.fail_rngs[w]);
             core.membership.observe(w, ev);
             events[w] = ev;
-            if sink.enabled() && matches!(ev, FailureEvent::Crashed) {
-                sink.emit(iter, w as i64, now, TraceEvent::Crash);
+            if matches!(ev, FailureEvent::Crashed) {
+                if sink.enabled() {
+                    sink.emit(iter, w as i64, now, TraceEvent::Crash);
+                }
+                if recovering {
+                    if let Some(rollback) = recovery.on_crash(w, iter, &mut theta) {
+                        if sink.enabled() {
+                            trace::emit_recovery(
+                                sink,
+                                iter,
+                                w,
+                                now,
+                                recovery.policy().name(),
+                                rollback,
+                            );
+                        }
+                    }
+                }
             }
         }
         // Crash-during-rebalance repair: a crash observed this sweep (e.g.
@@ -312,10 +390,18 @@ pub(super) fn run_sync(
         // ownership immediately inside the barrier, so the orphaned shards
         // contribute this very iteration.  No-op when rebalancing is off
         // or every owner is alive — and in particular on every ideal-net
-        // trajectory the pre-refactor golden tests pin down.
+        // trajectory the pre-refactor golden tests pin down.  The
+        // `rebalance` recovery policy forces this gate open even when the
+        // periodic cadence is disabled.
+        let orphan_every = if recovery.policy().forces_rebalance() && cluster.rebalance_every == 0
+        {
+            1
+        } else {
+            cluster.rebalance_every
+        };
         if core
             .elastic
-            .replan_orphans(cluster.rebalance_every, &core.membership)?
+            .replan_orphans(orphan_every, &core.membership)?
         {
             log::debug!("iter {iter}: mid-barrier re-plan after owner crash");
             if sink.enabled() {
@@ -679,6 +765,22 @@ pub(super) fn run_sync(
                 stale_meta.push((stal, mask));
             }
         }
+        // Partial recovery: a respawned (or rejoined) worker's lost
+        // contribution is reconstructed by a fresh warm compute over its
+        // *current* partition at the *current* θ, folded through the
+        // staleness-damped path with staleness = its downtime.  Appended
+        // after the stale chain so every legacy f32 fold order survives.
+        catchup_arena.clear();
+        catchup_meta.clear();
+        if recovering {
+            recovery.take_catchups(catchups);
+            for c in catchups.iter() {
+                for &s in &assignment[c.worker] {
+                    pool.grad_into(s, &theta, iter, catchup_arena.next())?;
+                    catchup_meta.push(c.staleness);
+                }
+            }
+        }
         aggregate_iter(
             cfg.aggregator,
             grads
@@ -713,6 +815,18 @@ pub(super) fn run_sync(
                             examples: g.examples,
                             staleness: stal,
                             blocks: mask,
+                        }),
+                )
+                .chain(
+                    catchup_arena
+                        .results()
+                        .iter()
+                        .zip(catchup_meta.iter())
+                        .map(|(g, &stal)| Contribution {
+                            grad: &g.grad,
+                            examples: g.examples,
+                            staleness: stal,
+                            blocks: BlockSet::full(1),
                         }),
                 ),
             &mut agg,
@@ -811,6 +925,8 @@ pub(super) fn run_sync(
                 alive: core.membership.alive(),
                 gamma,
                 grad_norm,
+                recoveries: (recovery.recoveries - recov_iter_start) as usize,
+                rollback_iters: recovery.rollback_iters - rollback_iter_start,
             });
         }
         if let Some(s) = stop {
@@ -833,6 +949,8 @@ pub(super) fn run_sync(
         net.stats(),
         stale_blocks_total,
         None,
+        recovery.recoveries,
+        recovery.rollback_iters,
         driver_start,
         sink.summary(),
     ))

@@ -70,6 +70,12 @@ pub enum TraceEvent {
     Crash,
     /// The iteration's barrier closed.
     BarrierClose { gamma: usize, included: usize, abandoned: usize },
+    /// A recovery policy started acting on a worker's crash/leave/rejoin
+    /// (`policy` is [`crate::recovery::RecoveryPolicy::name`]).
+    RecoveryStart { policy: &'static str },
+    /// The recovery completed; `rollback` is the iterations of progress
+    /// a checkpoint restore rewound (0 for the rollback-free policies).
+    RecoveryDone { policy: &'static str, rollback: u64 },
 }
 
 /// One emitted event with its full stamp.
@@ -458,6 +464,8 @@ fn event_name(ev: &TraceEvent) -> &'static str {
         TraceEvent::Leave => "leave",
         TraceEvent::Crash => "crash",
         TraceEvent::BarrierClose { .. } => "barrier_close",
+        TraceEvent::RecoveryStart { .. } => "recovery_start",
+        TraceEvent::RecoveryDone { .. } => "recovery_done",
     }
 }
 
@@ -493,6 +501,12 @@ fn event_fields(ev: &TraceEvent, out: &mut String) {
         TraceEvent::BarrierClose { gamma, included, abandoned } => {
             let _ = write!(out, ",\"gamma\":{gamma},\"included\":{included}");
             let _ = write!(out, ",\"abandoned\":{abandoned}");
+        }
+        TraceEvent::RecoveryStart { policy } => {
+            let _ = write!(out, ",\"policy\":\"{policy}\"");
+        }
+        TraceEvent::RecoveryDone { policy, rollback } => {
+            let _ = write!(out, ",\"policy\":\"{policy}\",\"rollback\":{rollback}");
         }
         _ => {}
     }
@@ -580,6 +594,26 @@ pub fn emit_boundary(
         let cut = TraceEvent::RebalanceCut { owners: owners.to_vec() };
         sink.emit(iter, MASTER, time, cut);
     }
+}
+
+/// Journal one recovery action on worker `worker` at `iter`: a
+/// `RecoveryStart` immediately followed by its `RecoveryDone`.  Both
+/// drivers fire this single routine at the same decision points
+/// (scheduled leave/join hooks inside the boundary, stochastic crash
+/// detection, supervisor respawn), so under scheduled elastic traces the
+/// recovery subsequences are byte-identical across drivers by
+/// construction (`docs/RECOVERY.md`).
+pub fn emit_recovery(
+    sink: &mut dyn TraceSink,
+    iter: u64,
+    worker: usize,
+    time: f64,
+    policy: &'static str,
+    rollback: u64,
+) {
+    let w = worker as i64;
+    sink.emit(iter, w, time, TraceEvent::RecoveryStart { policy });
+    sink.emit(iter, w, time, TraceEvent::RecoveryDone { policy, rollback });
 }
 
 #[cfg(test)]
@@ -687,6 +721,25 @@ mod tests {
         // Roundtrip span: 0.25s dispatch -> 0.5s delivery = 250000µs
         // (times chosen exactly representable in binary).
         assert!(out.contains("\"ts\":250000,\"dur\":250000"), "{out}");
+    }
+
+    #[test]
+    fn recovery_events_render_policy_and_rollback() {
+        let mut s = JournalSink::new();
+        emit_recovery(&mut s, 7, 2, 1.5, "checkpoint-restore", 4);
+        emit_recovery(&mut s, 9, 0, 2.0, "partial-recovery", 0);
+        assert_eq!(s.len(), 4);
+        let out = s.jsonl_normalized();
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[0].contains("\"event\":\"recovery_start\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"policy\":\"checkpoint-restore\""));
+        assert!(lines[0].contains("\"iter\":7,\"worker\":2"));
+        assert!(lines[1].contains("\"event\":\"recovery_done\""));
+        assert!(lines[1].contains("\"policy\":\"checkpoint-restore\",\"rollback\":4"));
+        assert!(lines[3].contains("\"policy\":\"partial-recovery\",\"rollback\":0"));
+        // Recovery events are arrival-side, never part of the pure
+        // per-message fate subsequence.
+        assert!(s.fate_jsonl().is_empty());
     }
 
     #[test]

@@ -17,10 +17,18 @@
 //! simulator bit-for-bit on the fold order.  A scheduled leave is a
 //! master-side eviction — the slave thread survives, so a later scheduled
 //! join simply re-admits it.  Joining a worker that *stochastically*
-//! crashed is not supported — its thread has stopped serving — so the
-//! master tracks crashed threads and vetoes their scheduled joins instead
-//! of silently assigning shards to a ghost (supervisor-style respawn is a
-//! ROADMAP item).  The **async** master accepts elastic schedules too: a
+//! crashed requires a new thread — the old one has stopped serving — so
+//! the sync master acts as a supervisor: it spawns a replacement slave on
+//! a fresh channel (generation-salted RNG streams; see
+//! [`slave::worker_main`]) and re-admits it, exactly like the virtual
+//! engine's boundary handler revives a crashed worker on a scheduled
+//! join.  Recovery policies ([`crate::recovery`]) hook the same
+//! boundaries: `partial-recovery` / `checkpoint-restore` additionally
+//! respawn stochastically crashed threads at the next iteration top
+//! without waiting for a scheduled join (see `docs/RECOVERY.md`).  The
+//! async master still vetoes scheduled joins of crashed threads (async
+//! mode rejects non-abandon recovery policies).  The **async** master
+//! accepts elastic schedules too: a
 //! scheduled event at iteration `k` lands at the update-count boundary
 //! `k·M` (the sync-iteration equivalent the virtual engine uses), leaves
 //! evict master-side, joins hand the worker a fresh θ snapshot, and with
@@ -111,7 +119,9 @@ const STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 /// Apply one scheduled membership event master-side — the threaded
 /// counterpart of the virtual engine's boundary handler.  A join of a
 /// worker whose thread simulated a stochastic crash is vetoed (its thread
-/// stopped serving; re-admitting it would assign shards to a ghost).
+/// stopped serving; re-admitting it would assign shards to a ghost) —
+/// the sync master respawns the thread *before* calling this, so the veto
+/// only ever fires for the async master, which has no supervisor.
 /// Returns whether the event was applied, so callers can keep their own
 /// per-event state (the async master's eviction mask) in step.
 fn apply_master_event(
@@ -173,7 +183,15 @@ pub fn run_real_traced(
         )));
     }
     crate::coordinator::validate_elastic(cluster, &cfg.mode)?;
+    cfg.recovery.validate()?;
     if cfg.mode.is_async() {
+        if !matches!(cfg.recovery.policy, crate::recovery::RecoveryPolicy::Abandon) {
+            return Err(Error::Config(format!(
+                "recovery policy '{}' is not supported in async mode (async has \
+                 no crash/rejoin barrier to recover at); use 'abandon'",
+                cfg.recovery.policy.name()
+            )));
+        }
         return run_real_async(cluster, cfg, factory, hooks, sink);
     }
     run_real_sync(cluster, cfg, factory, hooks, sink)
@@ -225,8 +243,17 @@ fn run_real_sync(
     let mut ledger = BlockLedger::default();
     let mut stale_blocks_total = 0u64;
     // Threads that simulated a stochastic crash and stopped serving: a
-    // scheduled join must not re-admit them (ghost workers).
+    // scheduled join (or a respawning recovery policy) replaces them with
+    // a fresh generation; until then they must not be broadcast to.
     let mut thread_crashed = vec![false; m];
+    // Recovery policy state — the same hooks the virtual engine's boundary
+    // handler consults, so the drivers cannot drift on when a policy
+    // fires.  See `docs/RECOVERY.md`.
+    let mut recovery = crate::recovery::RecoveryState::new(cfg.recovery, m);
+    let recovering = !recovery.is_noop();
+    // Thread generation per worker: respawned slaves salt their RNG
+    // streams with it (generation 0 = the historical streams).
+    let mut generations = vec![0u64; m];
 
     std::thread::scope(|scope| -> Result<()> {
         // --- spawn slaves ------------------------------------------------
@@ -238,10 +265,19 @@ fn run_real_sync(
             let profile = profiles[w].clone();
             let seed = cluster.seed;
             scope.spawn(move || {
-                slave::worker_main(w, seed, profile, factory, rx, res_tx);
+                slave::worker_main(w, seed, profile, 0, factory, rx, res_tx);
             });
         }
+        // Supervisor handle: respawned slaves report over clones of this.
+        let respawn_tx = res_tx.clone();
         drop(res_tx);
+        let mut respawn_buf: Vec<usize> = Vec::new();
+        let mut catchups: Vec<crate::recovery::CatchUp> = Vec::new();
+        // Master-side compute for catch-up reconstruction, built lazily on
+        // the first partial-recovery rejoin (the master thread computes the
+        // recovered partition's contribution itself).
+        let mut master_compute: Option<Box<dyn WorkerCompute>> = None;
+        let mut catchup_grads: Vec<(GradResult, u64)> = Vec::new();
 
         // Gradient-buffer free-list: payload Vecs from admitted Grad
         // replies are reclaimed here and shipped back to the slaves inside
@@ -255,6 +291,48 @@ fn run_real_sync(
 
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
+            // Recovery actions recorded in an IterRow are this iteration's
+            // delta, mirroring the per-iteration network-stat deltas.
+            let recov_iter_start = recovery.recoveries;
+            let rollback_iter_start = recovery.rollback_iters;
+            if recovering {
+                // Supervisor respawns: workers that crashed stochastically
+                // last iteration come back at this iteration's top
+                // (ascending worker order, instant — no warm-up ramp),
+                // exactly like the virtual driver's respawn drain.
+                recovery.take_respawns(&mut respawn_buf);
+                for &w in respawn_buf.iter() {
+                    generations[w] += 1;
+                    let (tx, rx) = mpsc::channel::<MasterMsg>();
+                    work_txs[w] = tx;
+                    let res_tx = respawn_tx.clone();
+                    let profile = profiles[w].clone();
+                    let seed = cluster.seed;
+                    let generation = generations[w];
+                    scope.spawn(move || {
+                        slave::worker_main(w, seed, profile, generation, factory, rx, res_tx);
+                    });
+                    thread_crashed[w] = false;
+                    membership.mark_alive(w);
+                    if let Some(rollback) = recovery.on_join(w, iter) {
+                        if sink.enabled() {
+                            let t = driver_start.elapsed().as_secs_f64();
+                            trace::emit_recovery(
+                                sink,
+                                iter,
+                                w,
+                                t,
+                                recovery.policy().name(),
+                                rollback,
+                            );
+                        }
+                    }
+                }
+                // Snapshot *before* boundary events and the collect loop,
+                // so a same-iteration crash restores to this iteration's
+                // top — the virtual driver snapshots at the same point.
+                recovery.maybe_snapshot(iter, &theta);
+            }
             // Elastic membership events land at this boundary, in schedule
             // order, followed by any due rebalance plan — the same
             // primitives the virtual engine's boundary handler uses, so
@@ -265,15 +343,60 @@ fn run_real_sync(
             elastic.tick_warmup();
             for ev in cluster.elastic.at(iter) {
                 let was_down = !membership.is_alive(ev.worker);
+                // Supervisor-style respawn: a scheduled join of a worker
+                // whose thread simulated a stochastic crash spawns a
+                // replacement slave on a fresh channel (the virtual engine
+                // likewise revives the crashed failure state on a
+                // scheduled join), instead of the historical veto.
+                if ev.kind == ElasticKind::Join && thread_crashed[ev.worker] {
+                    let w = ev.worker;
+                    generations[w] += 1;
+                    let (tx, rx) = mpsc::channel::<MasterMsg>();
+                    work_txs[w] = tx;
+                    let res_tx = respawn_tx.clone();
+                    let profile = profiles[w].clone();
+                    let seed = cluster.seed;
+                    let generation = generations[w];
+                    scope.spawn(move || {
+                        slave::worker_main(w, seed, profile, generation, factory, rx, res_tx);
+                    });
+                    thread_crashed[w] = false;
+                }
                 if apply_master_event(ev, &mut membership, &thread_crashed, iter)
                     && ev.kind == ElasticKind::Join
                     && was_down
                 {
                     elastic.note_join(ev.worker);
                 }
+                if recovering {
+                    let fired = match ev.kind {
+                        ElasticKind::Leave => recovery.on_leave(ev.worker, iter, &mut theta),
+                        ElasticKind::Join => recovery.on_join(ev.worker, iter),
+                    };
+                    if let Some(rollback) = fired {
+                        if sink.enabled() {
+                            let t = driver_start.elapsed().as_secs_f64();
+                            trace::emit_recovery(
+                                sink,
+                                iter,
+                                ev.worker,
+                                t,
+                                recovery.policy().name(),
+                                rollback,
+                            );
+                        }
+                    }
+                }
             }
-            let rebalanced =
-                elastic.maybe_rebalance(iter, cluster.rebalance_every, &membership)?;
+            // The `rebalance` recovery policy forces a replan at any
+            // membership-perturbing boundary — consume the flag exactly
+            // like the virtual engine's boundary handler.
+            let every = if recovery.take_force_replan() {
+                1
+            } else {
+                cluster.rebalance_every
+            };
+            let rebalanced = elastic.maybe_rebalance(iter, every, &membership)?;
             if rebalanced {
                 log::debug!("iter {iter}: shard ownership rebalanced");
             }
@@ -480,6 +603,21 @@ fn run_real_sync(
                             let t = driver_start.elapsed().as_secs_f64();
                             sink.emit(iter, worker as i64, t, TraceEvent::Crash);
                         }
+                        if recovering {
+                            if let Some(rollback) = recovery.on_crash(worker, iter, &mut theta) {
+                                if sink.enabled() {
+                                    let t = driver_start.elapsed().as_secs_f64();
+                                    trace::emit_recovery(
+                                        sink,
+                                        iter,
+                                        worker,
+                                        t,
+                                        recovery.policy().name(),
+                                        rollback,
+                                    );
+                                }
+                            }
+                        }
                         match (&cfg.mode, cfg.bsp_recovery) {
                             (SyncMode::Bsp, BspRecovery::Stall) => {
                                 status = RunStatus::Stalled { iter };
@@ -583,6 +721,21 @@ fn run_real_sync(
                             let t = driver_start.elapsed().as_secs_f64();
                             sink.emit(iter, worker as i64, t, TraceEvent::Crash);
                         }
+                        if recovering {
+                            if let Some(rollback) = recovery.on_crash(worker, iter, &mut theta) {
+                                if sink.enabled() {
+                                    let t = driver_start.elapsed().as_secs_f64();
+                                    trace::emit_recovery(
+                                        sink,
+                                        iter,
+                                        worker,
+                                        t,
+                                        recovery.policy().name(),
+                                        rollback,
+                                    );
+                                }
+                            }
+                        }
                     }
                     WorkerMsg::Fatal { worker, error } => {
                         return Err(Error::Cluster(format!("worker {worker} died: {error}")));
@@ -590,10 +743,36 @@ fn run_real_sync(
                 }
             }
 
+            // Partial recovery: reconstruct a rejoined worker's lost
+            // contribution master-side — a fresh compute over its current
+            // partition at the current θ, folded with staleness = its
+            // downtime.  Appended after the sorted fresh chain, the same
+            // fold position the virtual driver uses.
+            catchup_grads.clear();
+            if recovering {
+                recovery.take_catchups(&mut catchups);
+                if !catchups.is_empty() {
+                    if master_compute.is_none() {
+                        master_compute = Some(factory.build(0)?);
+                    }
+                    let comp = master_compute.as_mut().expect("just built");
+                    for c in catchups.iter() {
+                        for s in 0..elastic.ownership.owners().len() {
+                            if elastic.ownership.owner(s) != c.worker {
+                                continue;
+                            }
+                            let mut out = GradResult::empty();
+                            comp.grad_shard_into(s, &theta, iter, &mut out)?;
+                            catchup_grads.push((out, c.staleness));
+                        }
+                    }
+                }
+            }
+
             // Aggregate in ascending shard order — the same fold order the
             // virtual simulator uses, so both drivers' f32 sums match.
             grads.sort_by_key(|g| g.0.shard);
-            let contribs: Vec<Contribution<'_>> = grads
+            let mut contribs: Vec<Contribution<'_>> = grads
                 .iter()
                 .map(|(g, mask)| Contribution {
                     grad: &g.grad,
@@ -602,6 +781,12 @@ fn run_real_sync(
                     blocks: *mask,
                 })
                 .collect();
+            contribs.extend(catchup_grads.iter().map(|(g, stal)| Contribution {
+                grad: &g.grad,
+                examples: g.examples,
+                staleness: *stal,
+                blocks: BlockSet::full(1),
+            }));
             aggregate(cfg.aggregator, &contribs, &mut agg);
             let grad_norm = vec_ops::norm2(&agg);
             let loss_sum: f64 = grads.iter().filter_map(|(g, _)| g.loss_sum).sum();
@@ -652,6 +837,8 @@ fn run_real_sync(
                     alive: membership.alive(),
                     gamma,
                     grad_norm,
+                    recoveries: (recovery.recoveries - recov_iter_start) as usize,
+                    rollback_iters: recovery.rollback_iters - rollback_iter_start,
                 });
             }
             if let Some(s) = stop {
@@ -682,6 +869,8 @@ fn run_real_sync(
         net: shim.stats(),
         stale_blocks: stale_blocks_total,
         mean_staleness: None,
+        recoveries: recovery.recoveries,
+        rollback_iters: recovery.rollback_iters,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace: sink.summary(),
     })
@@ -865,7 +1054,7 @@ fn run_real_async(
             let profile = profiles[w].clone();
             let seed = cluster.seed;
             scope.spawn(move || {
-                slave::worker_main(w, seed, profile, factory, rx, res_tx);
+                slave::worker_main(w, seed, profile, 0, factory, rx, res_tx);
             });
         }
         drop(res_tx);
@@ -1178,6 +1367,8 @@ fn run_real_async(
                             alive: membership.alive(),
                             gamma: None,
                             grad_norm,
+                            recoveries: 0,
+                            rollback_iters: 0,
                         });
                     }
                     if let Some(s) = stop {
@@ -1228,6 +1419,8 @@ fn run_real_async(
         } else {
             None
         },
+        recoveries: 0,
+        rollback_iters: 0,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace: sink.summary(),
     })

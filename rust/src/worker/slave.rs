@@ -16,10 +16,16 @@ use crate::worker::ComputeFactory;
 
 /// Worker thread entry point: build compute locally (PJRT engines are
 /// per-thread), then serve Work messages until Shutdown / simulated crash.
+///
+/// `generation` counts supervisor respawns of this worker slot: the RNG
+/// streams are salted with it so a replacement thread draws a fresh
+/// failure/delay sequence instead of replaying its predecessor's.
+/// Generation 0 leaves both streams bit-identical to the historical ones.
 pub fn worker_main(
     w: usize,
     cluster_seed: u64,
     profile: StragglerProfile,
+    generation: u64,
     factory: &dyn ComputeFactory,
     rx: mpsc::Receiver<MasterMsg>,
     tx: mpsc::Sender<WorkerMsg>,
@@ -34,8 +40,9 @@ pub fn worker_main(
             return;
         }
     };
-    let mut delay_rng = Pcg64::new(cluster_seed ^ 0xBEEF, w as u64);
-    let mut fail_rng = Pcg64::new(cluster_seed ^ 0xFA11, w as u64);
+    let gen_salt = generation.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut delay_rng = Pcg64::new(cluster_seed ^ 0xBEEF ^ gen_salt, w as u64);
+    let mut fail_rng = Pcg64::new(cluster_seed ^ 0xFA11 ^ gen_salt, w as u64);
     let mut fstate = FailureState::new(profile.failure.clone());
     // Recycled gradient buffers from the master's free-list; popped for
     // each reply payload so steady-state replies allocate nothing.

@@ -120,11 +120,13 @@ fn real_hybrid_survives_worker_crash() {
 }
 
 #[test]
-fn real_scheduled_join_skips_crashed_thread() {
-    // ROADMAP open item: a thread that simulated a stochastic crash stops
-    // serving, so a later *scheduled* join must not re-admit it — the
-    // master would otherwise assign shards to a ghost.  Worker 3 crashes
-    // with certainty at iteration 0; the schedule tries to join it at 6.
+fn real_scheduled_join_respawns_crashed_thread() {
+    // Supervisor-style respawn: a thread that simulated a stochastic crash
+    // stops serving, so a later *scheduled* join spawns a replacement slave
+    // on a fresh channel and re-admits the worker — the historical behavior
+    // was to veto the join.  Worker 3 crashes with certainty at iteration 0;
+    // the schedule joins it at 6, where the respawned thread (crash_prob
+    // still 1.0) promptly crashes again on its first Work.
     use hybriditer::cluster::ElasticSchedule;
     let p = problem(4);
     let cluster = ClusterSpec {
@@ -147,11 +149,14 @@ fn real_scheduled_join_skips_crashed_thread() {
     let factory = NativeKrrFactory::for_problem(&p);
     let rep = coord.run_real(&factory, &NoEval).unwrap();
     assert!(rep.status.is_healthy(), "{:?}", rep.status);
-    assert_eq!(rep.crashes, 1);
-    assert_eq!(rep.rejoins, 0, "ghost worker was re-admitted");
+    assert_eq!(rep.rejoins, 1, "scheduled join did not respawn the thread");
+    assert_eq!(rep.crashes, 2, "replacement thread should crash again");
+    // Default policy is abandon: the respawn is pure supervision, no
+    // recovery action fires.
+    assert_eq!(rep.recoveries, 0);
     for row in rep.recorder.rows() {
-        if row.iter >= 6 {
-            assert_eq!(row.alive, 3, "iter {}: ghost counted alive", row.iter);
+        if row.iter >= 7 {
+            assert_eq!(row.alive, 3, "iter {}: dead worker counted alive", row.iter);
         }
     }
 }

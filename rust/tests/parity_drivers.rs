@@ -1008,3 +1008,140 @@ fn trace_parity_blocked_lossy_net_identical_block_fates() {
     assert_journals_identical("blocked-fates", &vf, &rf);
     assert_eq!(virt.stale_blocks, real.stale_blocks, "stale-block admission diverged");
 }
+
+// ---------------------------------------------------------------------
+// Recovery-policy parity: both drivers fire the same recoveries
+// ---------------------------------------------------------------------
+
+/// The canonical scheduled elastic trace (workers 1 and 3 leave at 4,
+/// rejoin at 8) with a recovery policy installed.  Scheduled traces are
+/// the cross-driver oracle surface: stochastic crashes draw from
+/// driver-private RNG streams and cannot be compared.
+fn recovery_scenario(
+    m: usize,
+    p: &KrrProblem,
+    policy: hybriditer::recovery::RecoveryPolicy,
+    checkpoint_every: u64,
+) -> (ClusterSpec, RunConfig) {
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 5,
+        ..ClusterSpec::default()
+    }
+    .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 3], 4, 8), 1);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma: m },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        recovery: hybriditer::recovery::RecoveryConfig { policy, checkpoint_every },
+        ..RunConfig::default()
+    }
+    .with_iters(14);
+    (cluster, cfg)
+}
+
+/// Shared assertions for one policy: byte-identical normalized journals
+/// (recovery events included), equal recovery rollups, bitwise θ.  Hands
+/// the runs back for policy-specific follow-up assertions.
+fn assert_recovery_parity(
+    tag: &str,
+    p: &KrrProblem,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+) -> (RunReport, JournalSink, RunReport, JournalSink) {
+    let (virt, vsink, real, rsink) = run_both_traced(p, cluster, cfg);
+    assert!(virt.status.is_healthy(), "{tag} virtual: {:?}", virt.status);
+    assert!(real.status.is_healthy(), "{tag} real: {:?}", real.status);
+
+    let vj = vsink.jsonl_normalized();
+    let rj = rsink.jsonl_normalized();
+    assert!(
+        vj.contains("\"event\":\"recovery_start\""),
+        "{tag}: virtual journal recorded no recovery_start"
+    );
+    assert!(
+        vj.contains("\"event\":\"recovery_done\""),
+        "{tag}: virtual journal recorded no recovery_done"
+    );
+    assert!(
+        vj.contains(&format!("\"policy\":\"{}\"", cfg.recovery.policy.name())),
+        "{tag}: recovery events carry the wrong policy tag"
+    );
+    assert_journals_identical(tag, &vj, &rj);
+
+    assert!(virt.recoveries > 0, "{tag}: scheduled trace fired no recovery");
+    assert_eq!(virt.recoveries, real.recoveries, "{tag}: recovery counts diverged");
+    assert_eq!(
+        virt.rollback_iters, real.rollback_iters,
+        "{tag}: rollback accounting diverged"
+    );
+    assert_eq!(virt.theta, real.theta, "{tag}: θ bits diverged");
+    (virt, vsink, real, rsink)
+}
+
+#[test]
+fn trace_parity_recovery_rebalance() {
+    // Rebalance fires on every membership perturbation: 2 leaves + 2
+    // joins = 4 recoveries, zero rollback, and the forced replan keeps
+    // both drivers on the same shard plan.
+    let m = 4;
+    let p = problem(m);
+    let (cluster, cfg) =
+        recovery_scenario(m, &p, hybriditer::recovery::RecoveryPolicy::Rebalance, 25);
+    let (virt, _, real, _) = assert_recovery_parity("recovery-rebalance", &p, &cluster, &cfg);
+    assert_eq!(virt.recoveries, 4, "2 leaves + 2 joins must each fire");
+    assert_eq!(real.rollback_iters, 0, "rebalance never rolls back");
+}
+
+#[test]
+fn trace_parity_recovery_partial_catchup() {
+    // Partial recovery reconstructs the lost partitions at the rejoin:
+    // both drivers must queue the same catch-ups (staleness = 4
+    // iterations of downtime), compute them at the same θ over the same
+    // post-rebalance assignment, and fold them through the
+    // staleness-damped path identically.
+    let m = 4;
+    let p = problem(m);
+    let (cluster, mut cfg) =
+        recovery_scenario(m, &p, hybriditer::recovery::RecoveryPolicy::PartialRecovery, 25);
+    cfg.aggregator = hybriditer::coordinator::AggregatorKind::StalenessDamped { rho: 0.5 };
+    let (virt, _, real, _) = assert_recovery_parity("recovery-partial", &p, &cluster, &cfg);
+    assert_eq!(virt.recoveries, 2, "one catch-up per rejoining worker");
+    assert_eq!(virt.rollback_iters, 0, "partial recovery never rolls back");
+
+    // The catch-up fold is live: a policy that abandons the same trace
+    // lands on a different θ.
+    let mut abandon_cfg = cfg.clone();
+    abandon_cfg.recovery.policy = hybriditer::recovery::RecoveryPolicy::Abandon;
+    let mut pool = p.native_pool();
+    let abandoned = sim::run_virtual(&mut pool, &cluster, &abandon_cfg, &NoEval).unwrap();
+    assert_ne!(
+        real.theta, abandoned.theta,
+        "catch-up contributions never reached the aggregator"
+    );
+}
+
+#[test]
+fn trace_parity_recovery_checkpoint_restore() {
+    // Checkpoint-restore snapshots θ every 3 iterations; the two leaves
+    // at iteration 4 each restore the iteration-3 snapshot (rollback 1).
+    // Both drivers must take snapshots at the same cadence points and
+    // restore bit-identical θ.
+    let m = 4;
+    let p = problem(m);
+    let (cluster, cfg) =
+        recovery_scenario(m, &p, hybriditer::recovery::RecoveryPolicy::CheckpointRestore, 3);
+    let (virt, vsink, real, _) =
+        assert_recovery_parity("recovery-checkpoint", &p, &cluster, &cfg);
+    assert_eq!(virt.recoveries, 2, "each leave restores once");
+    assert_eq!(virt.rollback_iters, 2, "leave@4 restores the iter-3 snapshot");
+    assert_eq!(real.rollback_iters, 2);
+    assert!(
+        vsink.jsonl_normalized().contains("\"rollback\":1"),
+        "recovery_done events carry no rollback depth"
+    );
+}

@@ -1,0 +1,236 @@
+//! Recovery-policy properties (see `docs/RECOVERY.md`).
+//!
+//! The parity suite (`parity_drivers.rs`) pins both drivers to the same
+//! recovery decisions; this file pins the *semantics* of each policy:
+//!
+//! * crash-free runs are bit-identical across all four policies — a
+//!   policy may only act when something actually fails;
+//! * `partial-recovery` touches nothing until a rejoin lands: the
+//!   trajectory prefix before the first catch-up matches `abandon`
+//!   bit for bit;
+//! * `checkpoint-restore` never rolls back past the last snapshot:
+//!   every restore is bounded by the snapshot cadence;
+//! * policy auto-respawn keeps a chronically crashing worker
+//!   contributing (virtual and threaded supervisors);
+//! * async modes reject every non-abandon policy up front.
+
+use hybriditer::cluster::{ClusterSpec, ElasticSchedule};
+use hybriditer::coordinator::{AggregatorKind, Coordinator, LossForm, RunConfig, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::recovery::{RecoveryConfig, RecoveryPolicy};
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::FailureModel;
+use hybriditer::worker::NativeKrrFactory;
+
+const ALL_POLICIES: [RecoveryPolicy; 4] = [
+    RecoveryPolicy::Abandon,
+    RecoveryPolicy::Rebalance,
+    RecoveryPolicy::PartialRecovery,
+    RecoveryPolicy::CheckpointRestore,
+];
+
+fn problem(machines: usize) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "recovery".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 17,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn cfg(p: &KrrProblem, policy: RecoveryPolicy, checkpoint_every: u64) -> RunConfig {
+    RunConfig {
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        recovery: RecoveryConfig { policy, checkpoint_every },
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn crash_free_runs_bit_identical_across_policies() {
+    // With nothing failing, a recovery policy must be invisible: same θ
+    // bits, zero recoveries, zero rollback — for all four policies.
+    let p = problem(4);
+    let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+    let mut baseline: Option<Vec<f32>> = None;
+    for policy in ALL_POLICIES {
+        let c = cfg(&p, policy, 5).with_mode(SyncMode::Hybrid { gamma: 4 }).with_iters(40);
+        let mut pool = p.native_pool();
+        let rep = sim::run_virtual(&mut pool, &cluster, &c, &NoEval).unwrap();
+        assert!(rep.status.is_healthy(), "{policy:?}: {:?}", rep.status);
+        assert_eq!(rep.recoveries, 0, "{policy:?} fired without a failure");
+        assert_eq!(rep.rollback_iters, 0, "{policy:?} rolled back without a failure");
+        match &baseline {
+            None => baseline = Some(rep.theta),
+            Some(theta) => {
+                assert_eq!(&rep.theta, theta, "{policy:?} perturbed a crash-free run")
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_recovery_prefix_matches_abandon_then_diverges() {
+    // Workers 1 and 3 leave at 4 and rejoin at 8.  Partial recovery does
+    // all of its work at the rejoin, so every recorded iteration before
+    // it must match the abandon baseline bit for bit; the catch-up fold
+    // then moves θ off the baseline.
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec { workers: m, ..ClusterSpec::default() }
+        .with_elastic(ElasticSchedule::crash_and_rejoin(&[1, 3], 4, 8), 1);
+    let mk = |policy| {
+        let mut c = cfg(&p, policy, 25).with_mode(SyncMode::Hybrid { gamma: m }).with_iters(20);
+        c.aggregator = AggregatorKind::StalenessDamped { rho: 0.5 };
+        let mut pool = p.native_pool();
+        sim::run_virtual(&mut pool, &cluster, &c, &NoEval).unwrap()
+    };
+    let abandon = mk(RecoveryPolicy::Abandon);
+    let partial = mk(RecoveryPolicy::PartialRecovery);
+    assert!(partial.status.is_healthy(), "{:?}", partial.status);
+    assert_eq!(partial.recoveries, 2, "one catch-up per rejoiner");
+    assert_eq!(partial.rollback_iters, 0, "partial recovery never rolls back");
+
+    for (pa, pb) in abandon.recorder.rows().iter().zip(partial.recorder.rows()) {
+        assert_eq!(pa.iter, pb.iter);
+        if pa.iter < 8 {
+            assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "iter {} loss moved", pa.iter);
+            assert_eq!(pa.included, pb.included, "iter {}", pa.iter);
+            assert_eq!(pa.alive, pb.alive, "iter {}", pa.iter);
+            assert_eq!(pb.recoveries, 0, "iter {}: recovery before the rejoin", pa.iter);
+        }
+    }
+    let row_total: usize = partial.recorder.rows().iter().map(|r| r.recoveries).sum();
+    assert_eq!(row_total as u64, partial.recoveries, "per-row deltas don't sum to rollup");
+    assert_ne!(abandon.theta, partial.theta, "catch-up never reached the aggregator");
+}
+
+#[test]
+fn checkpoint_rollback_bounded_by_cadence() {
+    // Stochastic crashes under checkpoint-restore: every restore rewinds
+    // to the *latest* snapshot, so each recovery's rollback is at most
+    // checkpoint_every − 1 iterations, and the per-row deltas must sum
+    // to the run-level rollups exactly.
+    let every = 5u64;
+    let p = problem(6);
+    let cluster = ClusterSpec {
+        workers: 6,
+        failure: FailureModel { crash_prob: 0.03, transient_prob: 0.0, rejoin_after: None },
+        seed: 13,
+        rebalance_every: 1,
+        ..ClusterSpec::default()
+    };
+    let c = cfg(&p, RecoveryPolicy::CheckpointRestore, every)
+        .with_mode(SyncMode::Hybrid { gamma: 3 })
+        .with_iters(150);
+    let mut pool = p.native_pool();
+    let rep = sim::run_virtual(&mut pool, &cluster, &c, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(rep.crashes > 0, "no crash injected at 3% over 150 iterations");
+    assert!(rep.recoveries > 0, "crashes fired no restores");
+
+    let mut recov_sum = 0u64;
+    let mut rollback_sum = 0u64;
+    for row in rep.recorder.rows() {
+        // A row may aggregate several same-iteration restores; each one
+        // is individually bounded by the snapshot cadence.
+        assert!(
+            row.rollback_iters <= (every - 1) * row.recoveries as u64,
+            "iter {}: rolled back {} across {} recoveries (cadence {})",
+            row.iter,
+            row.rollback_iters,
+            row.recoveries,
+            every
+        );
+        recov_sum += row.recoveries as u64;
+        rollback_sum += row.rollback_iters;
+    }
+    assert_eq!(recov_sum, rep.recoveries, "per-row recovery deltas don't sum to rollup");
+    assert_eq!(rollback_sum, rep.rollback_iters, "per-row rollback deltas don't sum to rollup");
+}
+
+#[test]
+fn auto_respawn_keeps_crashy_worker_contributing() {
+    // Worker 2 crashes on every dispatch.  Under abandon it dies once
+    // and stays dead; under partial recovery the supervisor respawns it
+    // at every next boundary, so it keeps crashing — and every respawn's
+    // rejoin queues a catch-up for its lost shard.
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        failure: FailureModel { crash_prob: 1.0, transient_prob: 0.0, rejoin_after: None },
+        failure_only: vec![2],
+        ..ClusterSpec::default()
+    };
+    let mk = |policy| {
+        let c = cfg(&p, policy, 25).with_mode(SyncMode::Hybrid { gamma: 2 }).with_iters(12);
+        let mut pool = p.native_pool();
+        sim::run_virtual(&mut pool, &cluster, &c, &NoEval).unwrap()
+    };
+    let abandon = mk(RecoveryPolicy::Abandon);
+    let partial = mk(RecoveryPolicy::PartialRecovery);
+    assert!(abandon.status.is_healthy(), "{:?}", abandon.status);
+    assert!(partial.status.is_healthy(), "{:?}", partial.status);
+    assert_eq!(abandon.crashes, 1, "abandon: the worker dies exactly once");
+    assert!(partial.crashes >= 10, "supervisor stopped respawning: {}", partial.crashes);
+    assert!(partial.recoveries >= 10, "respawns queued no catch-ups: {}", partial.recoveries);
+}
+
+#[test]
+fn threaded_auto_respawn_under_partial_recovery() {
+    // Same supervisor loop on real threads: each respawn spawns a fresh
+    // slave (generation-salted RNG, new channel) which promptly crashes
+    // again on its first Work message.
+    let p = problem(4);
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.0,
+        failure: FailureModel { crash_prob: 1.0, transient_prob: 0.0, rejoin_after: None },
+        failure_only: vec![3],
+        ..ClusterSpec::default()
+    };
+    let c = cfg(&p, RecoveryPolicy::PartialRecovery, 25)
+        .with_mode(SyncMode::Hybrid { gamma: 2 })
+        .with_iters(10);
+    let coord = Coordinator::new(cluster, c).unwrap();
+    let factory = NativeKrrFactory::for_problem(&p);
+    let rep = coord.run_real(&factory, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "{:?}", rep.status);
+    assert!(rep.crashes >= 3, "threaded supervisor stopped respawning: {}", rep.crashes);
+    assert!(rep.recoveries >= 2, "respawns queued no catch-ups: {}", rep.recoveries);
+    assert_eq!(rep.rollback_iters, 0);
+}
+
+#[test]
+fn async_rejects_non_abandon_policies() {
+    // Async has no crash/rejoin barrier to recover at: both drivers must
+    // refuse every non-abandon policy at config time, before spawning
+    // anything.
+    let p = problem(4);
+    let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+    for policy in [
+        RecoveryPolicy::Rebalance,
+        RecoveryPolicy::PartialRecovery,
+        RecoveryPolicy::CheckpointRestore,
+    ] {
+        let c = cfg(&p, policy, 5).with_mode(SyncMode::Async { damping: 0.0 }).with_iters(50);
+        let mut pool = p.native_pool();
+        let virt = sim::run_virtual(&mut pool, &cluster, &c, &NoEval);
+        let msg = virt.expect_err("virtual async accepted a recovery policy").to_string();
+        assert!(msg.contains("not supported in async mode"), "{policy:?}: {msg}");
+        let real = Coordinator::new(cluster.clone(), c);
+        let msg = real.err().expect("threaded async accepted a recovery policy").to_string();
+        assert!(msg.contains("not supported in async mode"), "{policy:?}: {msg}");
+    }
+}

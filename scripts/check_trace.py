@@ -34,6 +34,8 @@ KNOWN_EVENTS = {
     "leave",
     "crash",
     "barrier_close",
+    "recovery_start",
+    "recovery_done",
 }
 
 
