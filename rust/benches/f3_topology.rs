@@ -1,0 +1,206 @@
+//! F3 (topology) — time-to-loss vs worker count for the three aggregation
+//! overlays (star / tree / ring) under identical hop costs.
+//!
+//! The cost model makes the trade explicit.  A star root folds one
+//! message per included reply, so its incast term grows linearly with γ
+//! (≈ ¾M here); a tree folds at interior relays and hands the root
+//! ≈ fan-in combined messages, paying instead with subtree-granularity
+//! admission (one straggler delays its whole combined message); a ring
+//! runs a collective over *all* delivered workers (γ cannot shed
+//! stragglers at all) but attaches to the root as a single message.
+//! Expected shape: star wins small clusters, tree overtakes once the
+//! incast term outgrows the subtree-max penalty — the crossover the
+//! headline reports — and ring pays the max-order statistic throughout.
+//!
+//! The lossy half re-runs three cluster sizes with 5% message loss:
+//! interior-edge drops kill whole folded subtrees (tree) or θ segments
+//! (ring), so delivered-contribution counts and final loss degrade in a
+//! topology-dependent way the JSON records.
+//!
+//! Emits `results/BENCH_f3_topology.json`; CI uploads it and gates on
+//! `tree_vs_star_ratio_at_1024` (scripts side, >20% regression fails).
+
+use hybriditer::agg::AggSpec;
+use hybriditer::bench_harness::sweep::SweepEngine;
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::KrrProblemSpec;
+use hybriditer::net::{LinkModel, NetSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::straggler::DelayModel;
+
+const ITERS: u64 = 40;
+const FOLD_COST: f64 = 2e-4;
+const XFER_COST: f64 = 1e-5;
+const DROP_PROB: f64 = 0.05;
+
+/// (total virtual seconds, final recorded train loss, leaf contributions
+/// lost to interior-edge drops).
+fn run_one(
+    problem: &hybriditer::data::KrrProblem,
+    m: usize,
+    agg: AggSpec,
+    net: NetSpec,
+) -> (f64, f64, u64) {
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.01,
+        delay: DelayModel::LogNormal { mu: -4.0, sigma: 0.5 },
+        seed: 11,
+        ..ClusterSpec::default()
+    }
+    .with_net(net)
+    .with_agg(agg);
+    let gamma = (m * 3 / 4).max(1);
+    let cfg = RunConfig {
+        mode: SyncMode::Hybrid { gamma },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(problem.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(ITERS);
+    let mut pool = problem.native_pool();
+    let rep = sim::run_virtual(&mut pool, &cluster, &cfg, &NoEval).unwrap();
+    assert!(rep.status.is_healthy(), "M={m} {}: {:?}", rep.mode_name, rep.status);
+    let loss = rep.recorder.rows().last().map(|r| r.loss).unwrap_or(f64::NAN);
+    (rep.total_time(), loss, rep.agg.lost_contributions)
+}
+
+fn spec_for(m: usize) -> KrrProblemSpec {
+    // Thousands of *virtual* workers: the problem only needs one shard
+    // per machine, so ζ scales with M while l stays small.
+    KrrProblemSpec {
+        machines: m,
+        zeta: (2 * m).max(256),
+        ..KrrProblemSpec::small()
+    }
+}
+
+fn main() {
+    let engine = SweepEngine::from_env();
+    println!(
+        "F3 topology: time-to-loss vs M for star/tree/ring \
+         (fold {FOLD_COST}, xfer {XFER_COST}, {ITERS} iters)"
+    );
+    println!("sweep pool: {} threads\n", engine.threads());
+    let costs = |spec: AggSpec| spec.with_costs(FOLD_COST, XFER_COST);
+
+    // --- ideal links: the pure cost-model crossover ----------------------
+    let ms = [8usize, 16, 32, 64, 256, 1024, 2048];
+    let ideal = engine.run(&ms, |cache, &m| {
+        let problem = cache.get(&spec_for(m));
+        let star = run_one(&problem, m, costs(AggSpec::star()), NetSpec::ideal());
+        let tree = run_one(&problem, m, costs(AggSpec::tree(8)), NetSpec::ideal());
+        let ring = run_one(&problem, m, costs(AggSpec::ring()), NetSpec::ideal());
+        (star, tree, ring)
+    });
+
+    let mut table = Table::new(
+        "F3 topology: total virtual time (s) for 40 iterations, ideal links",
+        &["M", "star_s", "tree_s", "ring_s", "tree/star", "ring/star"],
+    );
+    let mut crossover: Option<usize> = None;
+    let mut ratio_at_1024 = f64::NAN;
+    let mut ring_ratio_at_1024 = f64::NAN;
+    for (&m, ((star_s, _, _), (tree_s, _, _), (ring_s, _, _))) in ms.iter().zip(&ideal) {
+        let tree_ratio = tree_s / star_s;
+        let ring_ratio = ring_s / star_s;
+        if crossover.is_none() && tree_ratio < 1.0 {
+            crossover = Some(m);
+        }
+        if m == 1024 {
+            ratio_at_1024 = tree_ratio;
+            ring_ratio_at_1024 = ring_ratio;
+        }
+        table.row(vec![
+            m.to_string(),
+            f(*star_s, 3),
+            f(*tree_s, 3),
+            f(*ring_s, 3),
+            f(tree_ratio, 3),
+            f(ring_ratio, 3),
+        ]);
+    }
+    table.print();
+
+    // --- lossy links: interior drops cost contributions ------------------
+    let lossy_ms = [32usize, 128, 256];
+    let lossy_net = NetSpec {
+        default_link: LinkModel { drop_prob: DROP_PROB, ..LinkModel::ideal() },
+        ..NetSpec::ideal()
+    };
+    let lossy = engine.run(&lossy_ms, |cache, &m| {
+        let problem = cache.get(&spec_for(m));
+        let star = run_one(&problem, m, costs(AggSpec::star()), lossy_net.clone());
+        let tree = run_one(&problem, m, costs(AggSpec::tree(8)), lossy_net.clone());
+        let ring = run_one(&problem, m, costs(AggSpec::ring()), lossy_net.clone());
+        (star, tree, ring)
+    });
+    let mut ltable = Table::new(
+        "F3 topology: 5% loss — time (s), final loss, and killed contributions",
+        &["M", "star_s", "tree_s", "ring_s", "tree_killed", "ring_killed"],
+    );
+    for (&m, ((star_s, _, _), (tree_s, _, tk), (ring_s, _, rk))) in lossy_ms.iter().zip(&lossy) {
+        ltable.row(vec![
+            m.to_string(),
+            f(*star_s, 3),
+            f(*tree_s, 3),
+            f(*ring_s, 3),
+            tk.to_string(),
+            rk.to_string(),
+        ]);
+    }
+    ltable.print();
+
+    // --- machine-readable trajectory point -------------------------------
+    let ideal_rows: Vec<String> = ms
+        .iter()
+        .zip(&ideal)
+        .map(|(&m, ((ss, sl, _), (ts, tl, _), (rs, rl, _)))| {
+            format!(
+                "    {{\"m\": {m}, \"gamma\": {}, \"star_s\": {ss:.6}, \"tree_s\": {ts:.6}, \
+                 \"ring_s\": {rs:.6}, \"star_loss\": {sl:.6e}, \"tree_loss\": {tl:.6e}, \
+                 \"ring_loss\": {rl:.6e}}}",
+                (m * 3 / 4).max(1)
+            )
+        })
+        .collect();
+    let lossy_rows: Vec<String> = lossy_ms
+        .iter()
+        .zip(&lossy)
+        .map(|(&m, ((ss, sl, _), (ts, tl, tk), (rs, rl, rk)))| {
+            format!(
+                "    {{\"m\": {m}, \"drop_prob\": {DROP_PROB}, \"star_s\": {ss:.6}, \
+                 \"tree_s\": {ts:.6}, \"ring_s\": {rs:.6}, \"star_loss\": {sl:.6e}, \
+                 \"tree_loss\": {tl:.6e}, \"ring_loss\": {rl:.6e}, \
+                 \"tree_killed\": {tk}, \"ring_killed\": {rk}}}"
+            )
+        })
+        .collect();
+    let crossover_json =
+        crossover.map(|m| m.to_string()).unwrap_or_else(|| "null".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"f3_topology\",\n  \"iters\": {ITERS},\n  \
+         \"fold_cost\": {FOLD_COST},\n  \"xfer_cost\": {XFER_COST},\n  \"headline\": {{\n    \
+         \"max_workers\": {},\n    \"crossover_workers\": {crossover_json},\n    \
+         \"tree_vs_star_ratio_at_1024\": {ratio_at_1024:.4},\n    \
+         \"ring_vs_star_ratio_at_1024\": {ring_ratio_at_1024:.4}\n  }},\n  \
+         \"ideal\": [\n{}\n  ],\n  \"lossy\": [\n{}\n  ]\n}}\n",
+        ms.iter().max().unwrap(),
+        ideal_rows.join(",\n"),
+        lossy_rows.join(",\n")
+    );
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/BENCH_f3_topology.json", json).unwrap();
+    match crossover {
+        Some(m) => println!(
+            "\nheadline: tree overtakes star at M = {m}; tree/star at M=1024 = {ratio_at_1024:.3}"
+        ),
+        None => println!("\nheadline: no tree/star crossover up to M = 2048"),
+    }
+    println!("trajectory point -> results/BENCH_f3_topology.json");
+}

@@ -41,6 +41,8 @@ fn main() {
     let mut stages: Vec<BenchResult> = Vec::new();
     let mut fused_default_mean = f64::NAN;
     let mut reference_default_mean = f64::NAN;
+    let mut blocked_wide_mean = f64::NAN;
+    let mut reference_wide_mean = f64::NAN;
 
     // --- shard gradient: fused vs reference vs XLA, three configs --------
     for (cfg_name, spec) in [
@@ -66,6 +68,12 @@ fn main() {
         if cfg_name.starts_with("default") {
             fused_default_mean = fused.mean;
             reference_default_mean = refr.mean;
+        }
+        // l = 256 sits at WIDE_L_THRESHOLD, so the native pool runs the
+        // column-blocked kernel here — this cell is the blocked headline.
+        if cfg_name.starts_with("wide") {
+            blocked_wide_mean = fused.mean;
+            reference_wide_mean = refr.mean;
         }
         stages.push(fused);
         stages.push(refr);
@@ -98,7 +106,7 @@ fn main() {
             .collect();
         let contribs: Vec<Contribution<'_>> = grads
             .iter()
-            .map(|g| Contribution { grad: g, examples: 256, staleness: 0 })
+            .map(|g| Contribution::whole(g, 256, 0))
             .collect();
         let mut out = vec![0.0f32; dim];
         stages.push(Bench::new(format!("aggregate/mean/k={k},dim={dim}")).run(|| {
@@ -152,12 +160,16 @@ fn main() {
 
     // --- machine-readable trajectory point --------------------------------
     let fused_speedup = reference_default_mean / fused_default_mean;
+    let blocked_speedup = reference_wide_mean / blocked_wide_mean;
     let rows: Vec<String> = stages.iter().map(json_stage).collect();
     let json = format!(
         "{{\n  \"bench\": \"micro_hotpath\",\n  \"headline\": {{\n    \
          \"grad_native_default_mean_s\": {fused_default_mean:.9e},\n    \
          \"grad_native_default_reference_mean_s\": {reference_default_mean:.9e},\n    \
-         \"fused_speedup\": {fused_speedup:.3}\n  }},\n  \"stages\": [\n{}\n  ]\n}}\n",
+         \"fused_speedup\": {fused_speedup:.3},\n    \
+         \"grad_native_wide_blocked_mean_s\": {blocked_wide_mean:.9e},\n    \
+         \"grad_native_wide_reference_mean_s\": {reference_wide_mean:.9e},\n    \
+         \"wide_blocked_speedup\": {blocked_speedup:.3}\n  }},\n  \"stages\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
     std::fs::create_dir_all("results").unwrap();
@@ -167,6 +179,12 @@ fn main() {
         fused_default_mean * 1e6,
         reference_default_mean * 1e6,
         fused_speedup
+    );
+    println!(
+        "headline: grad/native wide config blocked {:.2}us vs reference {:.2}us (x{:.2})",
+        blocked_wide_mean * 1e6,
+        reference_wide_mean * 1e6,
+        blocked_speedup
     );
     println!("trajectory point -> results/BENCH_micro_hotpath.json");
 }

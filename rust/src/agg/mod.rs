@@ -1,0 +1,782 @@
+//! Pluggable aggregation topologies: how gradient replies travel from the
+//! workers to the coordinator's fold.
+//!
+//! The seed system (and ROADMAP item 2's complaint about it) funnels every
+//! reply straight into one coordinator — a *star*.  This module makes that
+//! choice a policy: `star` keeps the legacy path bit for bit, `tree`
+//! routes replies through interior relay nodes that fold their children's
+//! partials before forwarding one combined message, and `ring` runs a
+//! reduce-scatter + allgather collective over θ segments (Agarwal et al.,
+//! *A Reliable Effective Terascale Linear Learning System*; Yu et al.,
+//! *Distributed Learning over Unreliable Networks* — see PAPERS.md).
+//!
+//! Every interior edge routes through the sending node's link model via
+//! [`NetSpec::realize_edge`], so per-hop drops, partitions, and per-worker
+//! link overrides compose with the topology — and every hop's fate is
+//! **pure** in `(seed, node, iter, round)`.  [`plan`] computes fates (who
+//! is lost, which θ segments survive, per-node edge counts, the
+//! `agg_fold`/`forward` trace events) from the delivered/dispatched sets
+//! alone, never from arrival times, so the virtual and threaded drivers
+//! realize identical fates by construction.  Arrival times only shape the
+//! *timing* outputs (`at`), which the virtual driver uses and the
+//! threaded driver ignores.  See `docs/AGGREGATION.md`.
+
+use crate::net::{BlockSet, NetSpec, MAX_BLOCKS};
+use crate::trace::{self, TraceEvent, TraceSink};
+use crate::{Error, Result};
+
+/// Which overlay the gradient replies travel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Every reply goes straight to the coordinator — the legacy path,
+    /// preserved bit for bit.
+    #[default]
+    Star,
+    /// Interior nodes fold up to `fan_in` children's partials and forward
+    /// one combined message toward the root.
+    Tree,
+    /// Reduce-scatter + allgather over θ segments among the delivered
+    /// workers; the reduced vector attaches to the coordinator once.
+    Ring,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Star => "star",
+            TopologyKind::Tree => "tree",
+            TopologyKind::Ring => "ring",
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<TopologyKind> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "star" => Ok(TopologyKind::Star),
+            "tree" => Ok(TopologyKind::Tree),
+            "ring" => Ok(TopologyKind::Ring),
+            other => Err(Error::Config(format!(
+                "unknown aggregation topology '{other}' (want star|tree|ring)"
+            ))),
+        }
+    }
+}
+
+/// The aggregation-topology policy: which overlay, its shape, and the
+/// per-hop cost model.  The default (`star`, zero costs) reproduces the
+/// pre-topology system bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggSpec {
+    pub topology: TopologyKind,
+    /// Children per interior node (tree only).
+    pub fan_in: usize,
+    /// Seconds an interior node spends folding **one** full gradient
+    /// vector (the bandwidth/β term); the root pays it per message too.
+    pub fold_cost: f64,
+    /// Fixed per-hop forwarding latency (the α term).
+    pub xfer_cost: f64,
+}
+
+impl Default for AggSpec {
+    fn default() -> Self {
+        AggSpec { topology: TopologyKind::Star, fan_in: 8, fold_cost: 0.0, xfer_cost: 0.0 }
+    }
+}
+
+impl AggSpec {
+    pub fn star() -> AggSpec {
+        AggSpec::default()
+    }
+
+    pub fn tree(fan_in: usize) -> AggSpec {
+        AggSpec { topology: TopologyKind::Tree, fan_in, ..AggSpec::default() }
+    }
+
+    pub fn ring() -> AggSpec {
+        AggSpec { topology: TopologyKind::Ring, ..AggSpec::default() }
+    }
+
+    /// Builder: set the per-hop cost model.
+    pub fn with_costs(mut self, fold_cost: f64, xfer_cost: f64) -> AggSpec {
+        self.fold_cost = fold_cost;
+        self.xfer_cost = xfer_cost;
+        self
+    }
+
+    pub fn is_star(&self) -> bool {
+        self.topology == TopologyKind::Star
+    }
+
+    /// Root-side post-processing cost per message the coordinator folds.
+    /// Zero by default, so the star path's arithmetic is untouched.
+    pub fn root_cost(&self) -> f64 {
+        self.fold_cost + self.xfer_cost
+    }
+
+    pub fn validate(&self, workers: usize, block_size: usize) -> Result<()> {
+        if !(self.fold_cost.is_finite() && self.fold_cost >= 0.0)
+            || !(self.xfer_cost.is_finite() && self.xfer_cost >= 0.0)
+        {
+            return Err(Error::Config(format!(
+                "agg costs must be finite and >= 0 (fold {}, xfer {})",
+                self.fold_cost, self.xfer_cost
+            )));
+        }
+        match self.topology {
+            TopologyKind::Star => Ok(()),
+            TopologyKind::Tree => {
+                if self.fan_in < 2 {
+                    return Err(Error::Config(format!(
+                        "tree aggregation needs fan_in >= 2, got {}",
+                        self.fan_in
+                    )));
+                }
+                if workers == 0 {
+                    return Err(Error::Cluster("tree aggregation needs workers".into()));
+                }
+                Ok(())
+            }
+            TopologyKind::Ring => {
+                if block_size > 0 {
+                    return Err(Error::Config(
+                        "ring aggregation already segments θ itself; \
+                         it composes with [net] block_size = 0 only"
+                            .into(),
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Per-node interior-edge accounting lane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeLane {
+    pub node: usize,
+    pub sent: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+}
+
+/// Run-level aggregation-overlay accounting, surfaced as `RunReport::agg`.
+/// `delivered + dropped == sent` holds per lane by construction — the
+/// cross-driver conservation oracle in `tests/property_topology.rs` pins
+/// it down.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggStats {
+    pub topology: &'static str,
+    /// Interior (overlay) edges realized — leaf roundtrips are counted by
+    /// `NetStats`, not here.
+    pub edge_sent: u64,
+    pub edge_delivered: u64,
+    pub edge_dropped: u64,
+    /// Fold operations performed at interior nodes (one per combined tree
+    /// message; one per ring collective).
+    pub folds: u64,
+    /// Delivered leaf contributions lost to an interior-edge drop.
+    pub lost_contributions: u64,
+    pub per_node: Vec<EdgeLane>,
+}
+
+impl Default for AggStats {
+    fn default() -> Self {
+        AggStats {
+            topology: "star",
+            edge_sent: 0,
+            edge_delivered: 0,
+            edge_dropped: 0,
+            folds: 0,
+            lost_contributions: 0,
+            per_node: Vec::new(),
+        }
+    }
+}
+
+impl AggStats {
+    fn lane(&mut self, node: usize) -> &mut EdgeLane {
+        match self.per_node.iter().position(|l| l.node == node) {
+            Some(i) => &mut self.per_node[i],
+            None => {
+                self.per_node.push(EdgeLane { node, ..EdgeLane::default() });
+                // Keep lanes sorted so both drivers report identical
+                // vectors regardless of first-touch order.
+                self.per_node.sort_unstable_by_key(|l| l.node);
+                let i = self.per_node.iter().position(|l| l.node == node).unwrap();
+                &mut self.per_node[i]
+            }
+        }
+    }
+
+    fn count(&mut self, node: usize, delivered: bool) {
+        self.edge_sent += 1;
+        if delivered {
+            self.edge_delivered += 1;
+        } else {
+            self.edge_dropped += 1;
+        }
+        let lane = self.lane(node);
+        lane.sent += 1;
+        if delivered {
+            lane.delivered += 1;
+        } else {
+            lane.dropped += 1;
+        }
+    }
+}
+
+/// Reusable per-iteration state for [`plan`] — the same zero-steady-state
+/// -allocation discipline as the sync driver's `IterScratch`.
+#[derive(Debug, Default)]
+pub struct AggScratch {
+    /// Input: `(worker, arrival)` of this iteration's delivered primary
+    /// replies, any order (sorted in place by worker).
+    pub arrivals: Vec<(usize, f64)>,
+    /// Output: delivered leaves killed by an interior-edge drop.
+    pub killed: Vec<bool>,
+    /// Output: adjusted root-arrival time per surviving leaf (virtual
+    /// driver only — the threaded driver keeps physical time).
+    pub at: Vec<f64>,
+    /// Output (ring): surviving θ-segment mask per participant.
+    pub masks: Vec<BlockSet>,
+    /// Output: number of killed leaves this iteration.
+    pub killed_count: usize,
+    /// Output: distinct messages the root folds this iteration (drives
+    /// the post-hoc root cost).
+    pub root_msgs: u32,
+    // Tree internals: per-node input lists as intrusive linked lists so
+    // relay merges are O(1) and nothing allocates in steady state.
+    dispatched: Vec<bool>,
+    relay: Vec<bool>,
+    head: Vec<i64>,
+    tail: Vec<i64>,
+    next: Vec<i64>,
+    in_max: Vec<f64>,
+    in_cnt: Vec<u32>,
+}
+
+impl AggScratch {
+    pub fn new() -> AggScratch {
+        AggScratch::default()
+    }
+
+    fn reset(&mut self, workers: usize) {
+        self.arrivals.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        self.killed.clear();
+        self.killed.resize(workers, false);
+        self.at.clear();
+        self.at.resize(workers, 0.0);
+        self.masks.clear();
+        self.masks.resize(workers, BlockSet::full(1));
+        self.killed_count = 0;
+        self.root_msgs = 0;
+        self.dispatched.clear();
+        self.dispatched.resize(workers, false);
+        self.relay.clear();
+        self.relay.resize(workers, false);
+        self.head.clear();
+        self.head.resize(workers, -1);
+        self.tail.clear();
+        self.tail.resize(workers, -1);
+        self.next.clear();
+        self.next.resize(workers, -1);
+        self.in_max.clear();
+        self.in_max.resize(workers, 0.0);
+        self.in_cnt.clear();
+        self.in_cnt.resize(workers, 0);
+    }
+}
+
+/// Tree parent of worker `w`: the first `fan_in` workers hang off the
+/// coordinator, node `p`'s children are `(p+1)*fan_in..(p+2)*fan_in`.
+/// `parent(w) < w` always, so a single descending-index pass folds every
+/// child before its parent.
+fn parent(w: usize, fan_in: usize) -> i64 {
+    if w < fan_in {
+        trace::MASTER
+    } else {
+        (w / fan_in) as i64 - 1
+    }
+}
+
+/// Nearest dispatched relay at or above `from` (itself a `parent()`
+/// value), or [`trace::MASTER`]: non-dispatched interior nodes are
+/// adopted past, exactly the "dead node ⇒ route around it" rule.
+fn climb(mut from: i64, fan_in: usize, relay: &[bool]) -> i64 {
+    while from >= 0 {
+        if relay[from as usize] {
+            return from;
+        }
+        from = parent(from as usize, fan_in);
+    }
+    trace::MASTER
+}
+
+/// The θ blocks ring chunk `c` owns when `n_p` participants share
+/// `n_seg` segments (empty when positions outnumber segments).
+fn chunk_blocks(c: usize, n_p: usize, n_seg: usize) -> BlockSet {
+    let lo = c * n_seg / n_p;
+    let hi = (c + 1) * n_seg / n_p;
+    let mut set = BlockSet::empty(n_seg);
+    for b in lo..hi {
+        set = set.with(b);
+    }
+    set
+}
+
+/// Plan one iteration of the aggregation overlay.
+///
+/// Inputs: the dispatched set (`responders`) and the delivered primary
+/// replies (`scratch.arrivals`, `(worker, arrival-time)`; the threaded
+/// driver passes `0.0` times).  On return the scratch holds, per worker,
+/// whether an interior drop killed its contribution, its adjusted root
+/// arrival, and (ring) its surviving segment mask; `stats` accumulates
+/// edge accounting and `sink` receives the `agg_fold`/`forward` fate
+/// events.  Fates depend only on `(seed, iter)`, the two sets, and the
+/// spec — never on times — which is the cross-driver parity contract.
+#[allow(clippy::too_many_arguments)]
+pub fn plan(
+    spec: &AggSpec,
+    net: &NetSpec,
+    seed: u64,
+    iter: u64,
+    workers: usize,
+    responders: &[usize],
+    scratch: &mut AggScratch,
+    stats: &mut AggStats,
+    sink: &mut dyn TraceSink,
+    now: f64,
+) {
+    stats.topology = spec.topology.name();
+    scratch.reset(workers);
+    match spec.topology {
+        TopologyKind::Star => {
+            // The star plan is the identity: every delivered leaf is a
+            // root message at its own arrival time.
+            for &(w, t) in scratch.arrivals.iter() {
+                scratch.at[w] = t;
+                scratch.root_msgs += 1;
+            }
+        }
+        TopologyKind::Tree => {
+            plan_tree(spec, net, seed, iter, workers, responders, scratch, stats, sink, now)
+        }
+        TopologyKind::Ring => plan_ring(spec, net, seed, iter, scratch, stats, sink, now),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_tree(
+    spec: &AggSpec,
+    net: &NetSpec,
+    seed: u64,
+    iter: u64,
+    workers: usize,
+    responders: &[usize],
+    scratch: &mut AggScratch,
+    stats: &mut AggStats,
+    sink: &mut dyn TraceSink,
+    now: f64,
+) {
+    let fan_in = spec.fan_in;
+    for &w in responders {
+        scratch.dispatched[w] = true;
+    }
+    // A node relays iff it was dispatched this iteration and owns at
+    // least one in-range child — pure in the dispatched set.
+    for w in 0..workers {
+        scratch.relay[w] = scratch.dispatched[w] && (w + 1) * fan_in < workers;
+    }
+    // Route every delivered leaf to its first relay (itself if it is
+    // one), or straight to the root when no ancestor relays.
+    for &(w, t) in scratch.arrivals.iter() {
+        let target = if scratch.relay[w] {
+            w as i64
+        } else {
+            climb(parent(w, fan_in), fan_in, &scratch.relay)
+        };
+        if target < 0 {
+            scratch.at[w] = t;
+            scratch.root_msgs += 1;
+            continue;
+        }
+        let a = target as usize;
+        if scratch.head[a] < 0 {
+            scratch.head[a] = w as i64;
+        } else {
+            scratch.next[scratch.tail[a] as usize] = w as i64;
+        }
+        scratch.tail[a] = w as i64;
+        scratch.next[w] = -1;
+        scratch.in_max[a] = scratch.in_max[a].max(t);
+        scratch.in_cnt[a] += 1;
+    }
+    // Descending pass: every child (leaf or relay) has already fed its
+    // parent's inputs by the time the parent sends.  One combined
+    // message per active relay per iteration ⇒ round key 0.
+    for a in (0..workers).rev() {
+        if !scratch.relay[a] || scratch.in_cnt[a] == 0 {
+            continue;
+        }
+        let dest = climb(parent(a, fan_in), fan_in, &scratch.relay);
+        let depart = scratch.in_max[a] + spec.fold_cost * scratch.in_cnt[a] as f64;
+        let e = net.realize_edge(seed, a, iter, 0);
+        let delivered = !e.up_dropped;
+        stats.folds += 1;
+        stats.count(a, delivered);
+        if sink.enabled() {
+            let fold = TraceEvent::AggFold { children: scratch.in_cnt[a] };
+            sink.emit(iter, a as i64, now + depart, fold);
+            let fwd = TraceEvent::Forward { to: dest, delivered };
+            sink.emit(iter, a as i64, now + depart, fwd);
+        }
+        if !delivered {
+            // The whole folded subtree dies on this edge.
+            let mut n = scratch.head[a];
+            while n >= 0 {
+                scratch.killed[n as usize] = true;
+                scratch.killed_count += 1;
+                stats.lost_contributions += 1;
+                n = scratch.next[n as usize];
+            }
+            continue;
+        }
+        let arrival = depart + spec.xfer_cost + e.up_delay;
+        if dest < 0 {
+            // Combined message lands at the root: every folded leaf
+            // arrives, as one message, at the combined arrival time.
+            let mut n = scratch.head[a];
+            while n >= 0 {
+                scratch.at[n as usize] = arrival;
+                n = scratch.next[n as usize];
+            }
+            scratch.root_msgs += 1;
+        } else {
+            // Merge this subtree's leaf list into the parent relay.
+            let b = dest as usize;
+            if scratch.head[b] < 0 {
+                scratch.head[b] = scratch.head[a];
+            } else {
+                scratch.next[scratch.tail[b] as usize] = scratch.head[a];
+            }
+            scratch.tail[b] = scratch.tail[a];
+            scratch.in_max[b] = scratch.in_max[b].max(arrival);
+            scratch.in_cnt[b] += 1;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_ring(
+    spec: &AggSpec,
+    net: &NetSpec,
+    seed: u64,
+    iter: u64,
+    scratch: &mut AggScratch,
+    stats: &mut AggStats,
+    sink: &mut dyn TraceSink,
+    now: f64,
+) {
+    // Participants are the delivered workers, in worker order — already
+    // sorted by `reset()`.  θ splits into one segment per participant
+    // (capped at the block-mask width).
+    let n_p = scratch.arrivals.len();
+    if n_p == 0 {
+        return;
+    }
+    let n_seg = n_p.min(MAX_BLOCKS);
+    let mut t_max = 0.0f64;
+    for &(w, t) in scratch.arrivals.iter() {
+        scratch.masks[w] = BlockSet::full(n_seg);
+        t_max = t_max.max(t);
+    }
+    // Lossy interior edges: reduce-scatter then allgather, hop fates
+    // pure in (seed, sender, iter, round).  Ideal nets skip the O(n_p²)
+    // realization entirely — nothing can drop.
+    if !net.is_ideal() {
+        // Reduce-scatter round r: position p forwards the partial sum of
+        // chunk (p+n_p-r) mod n_p — contributions of positions p-r..=p —
+        // to its successor.  A drop loses exactly that partial: those
+        // positions' segments clear, later positions keep accumulating
+        // (Yu et al.'s partial-sum loss model).
+        for r in 0..n_p.saturating_sub(1) {
+            for p in 0..n_p {
+                let sender = scratch.arrivals[p].0;
+                let e = net.realize_edge(seed, sender, iter, r as u64 + 1);
+                let delivered = !e.up_dropped;
+                stats.count(sender, delivered);
+                if delivered {
+                    continue;
+                }
+                let chunk = (p + n_p - r) % n_p;
+                let lost = chunk_blocks(chunk, n_p, n_seg);
+                for k in 0..=r {
+                    let q = (p + n_p - k) % n_p;
+                    let w = scratch.arrivals[q].0;
+                    scratch.masks[w] = scratch.masks[w].minus(lost);
+                }
+                if sink.enabled() {
+                    let to = scratch.arrivals[(p + 1) % n_p].0 as i64;
+                    let fwd = TraceEvent::Forward { to, delivered: false };
+                    sink.emit(iter, sender as i64, now, fwd);
+                }
+            }
+        }
+        // Allgather: chunk c completes at position (c+n_p-1) mod n_p and
+        // walks to position 0, where the reduced vector attaches to the
+        // coordinator.  A dropped hop loses the chunk for everyone.
+        for c in 0..n_p {
+            let o = (c + n_p - 1) % n_p;
+            let hops = (n_p - o) % n_p;
+            for h in 0..hops {
+                let q = (o + h) % n_p;
+                let sender = scratch.arrivals[q].0;
+                let round = n_p as u64 + (c as u64) * n_p as u64 + h as u64;
+                let e = net.realize_edge(seed, sender, iter, round);
+                let delivered = !e.up_dropped;
+                stats.count(sender, delivered);
+                if delivered {
+                    continue;
+                }
+                let lost = chunk_blocks(c, n_p, n_seg);
+                for &(w, _) in scratch.arrivals.iter() {
+                    scratch.masks[w] = scratch.masks[w].minus(lost);
+                }
+                if sink.enabled() {
+                    let to = scratch.arrivals[(q + 1) % n_p].0 as i64;
+                    let fwd = TraceEvent::Forward { to, delivered: false };
+                    sink.emit(iter, sender as i64, now, fwd);
+                }
+                break;
+            }
+        }
+    }
+    // The collective cannot start before the last participant finishes:
+    // 2(n_p-1) pipelined hops, each moving 1/n_p of θ.  Realized hop
+    // delays model *fates* only; latency rides the α/β cost terms
+    // (docs/AGGREGATION.md documents the scope).
+    let t_root = t_max + 2.0 * (n_p as f64 - 1.0) * (spec.xfer_cost + spec.fold_cost / n_p as f64);
+    stats.folds += 1;
+    scratch.root_msgs = 1;
+    for &(w, _) in scratch.arrivals.iter() {
+        if scratch.masks[w].is_empty() {
+            scratch.killed[w] = true;
+            scratch.killed_count += 1;
+            stats.lost_contributions += 1;
+        } else {
+            scratch.at[w] = t_root;
+        }
+    }
+    if sink.enabled() {
+        let fold = TraceEvent::AggFold { children: n_p as u32 };
+        sink.emit(iter, trace::MASTER, now + t_root, fold);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{JournalSink, NoopSink};
+
+    fn all(m: usize) -> Vec<usize> {
+        (0..m).collect()
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        assert_eq!(TopologyKind::parse("TREE").unwrap(), TopologyKind::Tree);
+        assert!(TopologyKind::parse("mesh").is_err());
+        assert!(AggSpec::tree(8).validate(16, 0).is_ok());
+        assert!(AggSpec::tree(1).validate(16, 0).is_err());
+        assert!(AggSpec::ring().validate(16, 4).is_err(), "ring must reject block admission");
+        assert!(AggSpec::star().validate(16, 4).is_ok());
+        assert!(AggSpec::star().with_costs(-1.0, 0.0).validate(4, 0).is_err());
+    }
+
+    #[test]
+    fn tree_parent_is_always_smaller() {
+        for fan_in in [2usize, 3, 8] {
+            for w in 0..200usize {
+                let p = parent(w, fan_in);
+                assert!(p < w as i64, "parent({w}, {fan_in}) = {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_ideal_routes_everyone_at_subtree_maxima() {
+        let spec = AggSpec::tree(2);
+        let net = NetSpec::ideal();
+        let m = 7usize;
+        let mut scratch = AggScratch::new();
+        let mut stats = AggStats::default();
+        scratch.arrivals = (0..m).map(|w| (w, 0.01 * (w + 1) as f64)).collect();
+        plan(&spec, &net, 1, 0, m, &all(m), &mut scratch, &mut stats, &mut NoopSink, 0.0);
+        assert_eq!(scratch.killed_count, 0);
+        // With zero costs and ideal links, each leaf lands at the max of
+        // the subtree it folded into, never later than the global max.
+        let global = 0.07;
+        for w in 0..m {
+            assert!(!scratch.killed[w]);
+            assert!(scratch.at[w] <= global + 1e-12, "at[{w}] = {}", scratch.at[w]);
+            assert!(scratch.at[w] >= 0.01 * (w + 1) as f64 - 1e-12);
+        }
+        // Nodes 0 and 1 relay (children 2,3 / 4,5); node 2 relays (6).
+        assert_eq!(stats.folds, 3);
+        assert_eq!(stats.edge_sent, 3);
+        assert_eq!(stats.edge_dropped, 0);
+        // Everything ultimately funnels through relays 0 and 1.
+        assert_eq!(scratch.root_msgs, 2);
+    }
+
+    #[test]
+    fn tree_adopts_past_non_dispatched_relays() {
+        let spec = AggSpec::tree(2);
+        let net = NetSpec::ideal();
+        let m = 7usize;
+        // Node 2 (relay for 6) is not dispatched: 6 must climb to 0.
+        let responders: Vec<usize> = (0..m).filter(|&w| w != 2).collect();
+        let mut scratch = AggScratch::new();
+        let mut stats = AggStats::default();
+        scratch.arrivals = responders.iter().map(|&w| (w, 0.01)).collect();
+        plan(&spec, &net, 1, 0, m, &responders, &mut scratch, &mut stats, &mut NoopSink, 0.0);
+        assert_eq!(scratch.killed_count, 0);
+        assert_eq!(stats.folds, 2, "only relays 0 and 1 fold");
+        assert!(!scratch.killed[6]);
+    }
+
+    #[test]
+    fn tree_interior_drop_kills_the_subtree_purely() {
+        let spec = AggSpec::tree(2);
+        let net = NetSpec::lossy(0.5);
+        let m = 15usize;
+        let run = || {
+            let mut scratch = AggScratch::new();
+            let mut stats = AggStats::default();
+            let mut killed = Vec::new();
+            for iter in 0..50u64 {
+                scratch.arrivals = (0..m).map(|w| (w, 0.01)).collect();
+                let sink = &mut NoopSink;
+                plan(&spec, &net, 9, iter, m, &all(m), &mut scratch, &mut stats, sink, 0.0);
+                killed.push(scratch.killed.clone());
+            }
+            (killed, stats)
+        };
+        let (k1, s1) = run();
+        let (k2, s2) = run();
+        assert_eq!(k1, k2, "interior fates must be pure");
+        assert_eq!(s1, s2);
+        assert!(s1.edge_dropped > 0, "50% loss never dropped an interior edge");
+        assert_eq!(s1.edge_sent, s1.edge_delivered + s1.edge_dropped);
+        assert_eq!(
+            s1.lost_contributions,
+            k1.iter().map(|k| k.iter().filter(|&&x| x).count() as u64).sum::<u64>()
+        );
+        for lane in &s1.per_node {
+            assert_eq!(lane.sent, lane.delivered + lane.dropped);
+        }
+    }
+
+    #[test]
+    fn tree_fates_ignore_arrival_times() {
+        // The threaded driver passes zero times; fates must not care.
+        let spec = AggSpec::tree(4);
+        let net = NetSpec::lossy(0.3);
+        let m = 20usize;
+        let run = |times: bool| {
+            let mut scratch = AggScratch::new();
+            let mut stats = AggStats::default();
+            let mut sink = JournalSink::new();
+            for iter in 0..30u64 {
+                scratch.arrivals = (0..m)
+                    .map(|w| (w, if times { 0.01 * (w + 1) as f64 } else { 0.0 }))
+                    .collect();
+                plan(&spec, &net, 5, iter, m, &all(m), &mut scratch, &mut stats, &mut sink, 0.0);
+            }
+            (stats, sink.fate_jsonl())
+        };
+        let (s1, f1) = run(true);
+        let (s2, f2) = run(false);
+        assert_eq!(s1, s2);
+        assert_eq!(f1, f2, "fate journal must be time-independent");
+    }
+
+    #[test]
+    fn ring_ideal_is_full_and_synchronous() {
+        let spec = AggSpec::ring().with_costs(0.0, 0.0);
+        let net = NetSpec::ideal();
+        let m = 5usize;
+        let mut scratch = AggScratch::new();
+        let mut stats = AggStats::default();
+        scratch.arrivals = (0..m).map(|w| (w, 0.01 * (w + 1) as f64)).collect();
+        plan(&spec, &net, 1, 0, m, &all(m), &mut scratch, &mut stats, &mut NoopSink, 0.0);
+        for w in 0..m {
+            assert!(!scratch.killed[w]);
+            assert!(scratch.masks[w].is_full());
+            assert!((scratch.at[w] - 0.05).abs() < 1e-12, "all land at the global max");
+        }
+        assert_eq!(scratch.root_msgs, 1);
+        assert_eq!(stats.edge_sent, 0, "ideal rings realize no edges");
+    }
+
+    #[test]
+    fn ring_costs_scale_with_participants() {
+        let spec = AggSpec::ring().with_costs(0.0, 1e-3);
+        let net = NetSpec::ideal();
+        let m = 9usize;
+        let mut scratch = AggScratch::new();
+        let mut stats = AggStats::default();
+        scratch.arrivals = (0..m).map(|w| (w, 0.0)).collect();
+        plan(&spec, &net, 1, 0, m, &all(m), &mut scratch, &mut stats, &mut NoopSink, 0.0);
+        let want = 2.0 * 8.0 * 1e-3;
+        assert!((scratch.at[0] - want).abs() < 1e-12, "at = {}", scratch.at[0]);
+    }
+
+    #[test]
+    fn ring_drops_clear_segments_conservatively() {
+        let spec = AggSpec::ring();
+        let net = NetSpec::lossy(0.2);
+        let m = 8usize;
+        let run = || {
+            let mut scratch = AggScratch::new();
+            let mut stats = AggStats::default();
+            let mut partial = 0usize;
+            for iter in 0..40u64 {
+                scratch.arrivals = (0..m).map(|w| (w, 0.01)).collect();
+                let sink = &mut NoopSink;
+                plan(&spec, &net, 3, iter, m, &all(m), &mut scratch, &mut stats, sink, 0.0);
+                for w in 0..m {
+                    if !scratch.killed[w] && !scratch.masks[w].is_full() {
+                        partial += 1;
+                    }
+                }
+            }
+            (partial, stats)
+        };
+        let (p1, s1) = run();
+        let (p2, s2) = run();
+        assert_eq!(s1, s2, "ring fates must be pure");
+        assert_eq!(p1, p2);
+        assert!(p1 > 0, "20% loss never produced a partial mask");
+        assert!(s1.edge_dropped > 0);
+        assert_eq!(s1.edge_sent, s1.edge_delivered + s1.edge_dropped);
+        for lane in &s1.per_node {
+            assert_eq!(lane.sent, lane.delivered + lane.dropped);
+        }
+    }
+
+    #[test]
+    fn star_plan_is_identity() {
+        let spec = AggSpec::star();
+        let net = NetSpec::lossy(0.5);
+        let m = 4usize;
+        let mut scratch = AggScratch::new();
+        let mut stats = AggStats::default();
+        scratch.arrivals = vec![(2, 0.02), (0, 0.03)];
+        plan(&spec, &net, 1, 7, m, &all(m), &mut scratch, &mut stats, &mut NoopSink, 0.0);
+        assert_eq!(scratch.killed_count, 0);
+        assert_eq!(scratch.at[2], 0.02);
+        assert_eq!(scratch.at[0], 0.03);
+        assert_eq!(scratch.root_msgs, 2);
+        assert_eq!(stats.edge_sent, 0);
+    }
+}

@@ -405,6 +405,10 @@ pub struct ClusterSpec {
     /// scripted partitions).  [`crate::net::NetSpec::ideal`] — the default
     /// — reproduces pre-transport behaviour bit for bit.
     pub net: crate::net::NetSpec,
+    /// Aggregation topology (star/tree/ring) the gradient replies travel
+    /// ([`crate::agg`]).  [`crate::agg::AggSpec::star`] — the default —
+    /// is the legacy single-coordinator fold, bit for bit.
+    pub agg: crate::agg::AggSpec,
     /// RNG seed for all injected randomness (delays, failures, and the
     /// per-message network realizations).
     pub seed: u64,
@@ -426,6 +430,7 @@ impl Default for ClusterSpec {
             elastic: ElasticSchedule::default(),
             rebalance_every: 0,
             net: crate::net::NetSpec::ideal(),
+            agg: crate::agg::AggSpec::star(),
             seed: 0x5eed,
         }
     }
@@ -531,6 +536,12 @@ impl ClusterSpec {
     /// Convenience: attach a network model.
     pub fn with_net(mut self, net: crate::net::NetSpec) -> Self {
         self.net = net;
+        self
+    }
+
+    /// Convenience: attach an aggregation topology.
+    pub fn with_agg(mut self, agg: crate::agg::AggSpec) -> Self {
+        self.agg = agg;
         self
     }
 }

@@ -51,6 +51,12 @@
 //! block_size = 0        # gradient block size in f32s (0 = whole-reply)
 //! min_block_frac = 0.0  # drop replies delivering below this block fraction
 //!
+//! [agg]
+//! topology = "star"     # star | tree | ring (aggregation overlay)
+//! fan_in = 8            # children per interior tree node
+//! fold_cost = 0.0       # seconds to fold one full gradient vector
+//! xfer_cost = 0.0       # fixed per-hop forwarding latency, seconds
+//!
 //! [optimizer]
 //! kind = "sgd"          # sgd | momentum | nesterov | adam | lbfgs | cg
 //! eta = 0.5
@@ -76,6 +82,7 @@
 //! chrome = "run.trace.chrome.json" # Chrome trace-event export (Perfetto)
 //! ```
 
+use crate::agg::{AggSpec, TopologyKind};
 use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
 use crate::coordinator::{AggregatorKind, LossForm, RunConfig, StopRule, SyncMode};
 use crate::data::KrrProblemSpec;
@@ -263,6 +270,15 @@ impl ExperimentConfig {
         };
         net.validate(machines)?;
 
+        // --- [agg] -------------------------------------------------------
+        let agg = AggSpec {
+            topology: TopologyKind::parse(v.opt_str("agg.topology", "star"))?,
+            fan_in: v.opt_usize("agg.fan_in", 8),
+            fold_cost: v.opt_f64("agg.fold_cost", 0.0),
+            xfer_cost: v.opt_f64("agg.xfer_cost", 0.0),
+        };
+        agg.validate(machines, net.block_size)?;
+
         let cluster = ClusterSpec {
             workers: machines,
             base_compute: v.opt_f64("straggler.base_compute", 0.01),
@@ -281,6 +297,7 @@ impl ExperimentConfig {
             elastic,
             rebalance_every,
             net,
+            agg,
             seed: v.opt_u64("straggler.seed", 0x5eed),
         }
         .with_slow_tail(slow_n.min(machines), slow_factor);
@@ -498,6 +515,32 @@ backend = "native"
         assert!(ExperimentConfig::from_toml("[run]\ntiming = \"half\"").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").is_err());
         assert!(ExperimentConfig::from_toml("[recovery]\npolicy = \"wormhole\"").is_err());
+        assert!(ExperimentConfig::from_toml("[agg]\ntopology = \"mesh\"").is_err());
+    }
+
+    #[test]
+    fn agg_section_parses_and_defaults() {
+        use crate::agg::TopologyKind;
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 16\n\n[agg]\ntopology = \"tree\"\nfan_in = 4\nfold_cost = 0.0002\nxfer_cost = 0.00001",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.agg.topology, TopologyKind::Tree);
+        assert_eq!(cfg.cluster.agg.fan_in, 4);
+        assert_eq!(cfg.cluster.agg.fold_cost, 0.0002);
+        assert_eq!(cfg.cluster.agg.xfer_cost, 0.00001);
+        let off = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert!(off.cluster.agg.is_star());
+        assert_eq!(off.cluster.agg.fan_in, 8);
+        // A tree must fan in at least two children per interior node.
+        assert!(
+            ExperimentConfig::from_toml("[agg]\ntopology = \"tree\"\nfan_in = 1").is_err()
+        );
+        // Ring segments the gradient itself; block admission is incompatible.
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[net]\nblock_size = 32\n\n[agg]\ntopology = \"ring\"",
+        )
+        .is_err());
     }
 
     #[test]

@@ -46,6 +46,20 @@ use crate::{Error, Result};
 pub fn validate_elastic(cluster: &ClusterSpec, mode: &SyncMode) -> Result<()> {
     cluster.elastic.validate(cluster.workers)?;
     cluster.net.validate(cluster.workers)?;
+    cluster.agg.validate(cluster.workers, cluster.net.block_size)?;
+    let hybrid_family = matches!(
+        mode,
+        SyncMode::Hybrid { .. } | SyncMode::HybridAuto { .. } | SyncMode::HybridAdaptive { .. }
+    );
+    if !cluster.agg.is_star() && !hybrid_family {
+        return Err(Error::Config(format!(
+            "aggregation topology '{}' requires a hybrid-family mode (BSP folds \
+             every reply and async applies each gradient as it lands — neither \
+             routes through interior aggregators); got '{}'",
+            cluster.agg.topology.name(),
+            mode.name()
+        )));
+    }
     for &(w, c) in &cluster.capacities {
         if w >= cluster.workers {
             return Err(Error::Cluster(format!(
@@ -199,6 +213,10 @@ pub struct RunReport {
     /// Network-level message accounting.  `dropped`/`duplicated` are zero
     /// under an ideal net; `sent`/`delivered` still count the traffic.
     pub net: crate::net::NetStats,
+    /// Aggregation-overlay accounting (interior folds, per-edge hop fates).
+    /// All-zero under the default star topology, which has no interior
+    /// edges (see [`crate::agg::AggStats`]).
+    pub agg: crate::agg::AggStats,
     /// Gradient blocks admitted *stale* — surviving blocks of a straggling
     /// reply that landed in a later window and was folded (or at least
     /// accounted) via the cross-iteration reordering path.  Zero unless
@@ -276,6 +294,16 @@ impl RunReport {
             s.push_str(&format!(
                 " recoveries={} rollback_iters={}",
                 self.recoveries, self.rollback_iters
+            ));
+        }
+        if self.agg.edge_sent > 0 {
+            s.push_str(&format!(
+                " agg={} folds={} edges={}/{} lost={}",
+                self.agg.topology,
+                self.agg.folds,
+                self.agg.edge_delivered,
+                self.agg.edge_sent,
+                self.agg.lost_contributions
             ));
         }
         s
@@ -416,6 +444,7 @@ mod tests {
             rebalances: 0,
             shard_owners: vec![],
             net: crate::net::NetStats::default(),
+            agg: crate::agg::AggStats::default(),
             stale_blocks: 0,
             mean_staleness: None,
             recoveries: 0,

@@ -28,15 +28,37 @@ fn finish_grad(grad: &mut [f32], theta: &[f32], lambda: f32, rows: usize) {
     }
 }
 
-/// One shard's KRR gradient/loss via the fused kernel, written into a
-/// caller-owned [`GradResult`] (`g = Φᵀ(Φθ−y)/ζ + λθ`).  Shared by the
-/// native pool, the threaded runtime's per-worker compute, and (through
+/// Gradient width at and above which [`krr_shard_grad_into`] switches
+/// from the fused single-pass kernel to the column-blocked two-pass one
+/// ([`kernels::blocked_resid_grad`]): past this point the fused kernel's
+/// per-row Φᵀr update re-streams an `l`-wide gradient that no longer
+/// stays cache-resident, and the blocked stripes win (the `wide` config,
+/// l = 256, sits exactly at the threshold).  All three kernels are
+/// bit-identical, so the switch can never move a θ trajectory.
+pub const WIDE_L_THRESHOLD: usize = 256;
+
+/// One shard's KRR gradient/loss, written into a caller-owned
+/// [`GradResult`] (`g = Φᵀ(Φθ−y)/ζ + λθ`).  Shared by the native pool,
+/// the threaded runtime's per-worker compute, and (through
 /// [`ComputePool::grad_into`]) the virtual driver's scratch arena.
-pub fn krr_shard_grad_into(s: &Shard, lambda: f32, theta: &[f32], out: &mut GradResult) {
+/// Narrow shards run the fused single-pass kernel; shards at or past
+/// [`WIDE_L_THRESHOLD`] run the column-blocked kernel, whose residual
+/// pass borrows `resid` (grown once, reused across calls).
+pub fn krr_shard_grad_into(
+    s: &Shard,
+    lambda: f32,
+    theta: &[f32],
+    resid: &mut Vec<f32>,
+    out: &mut GradResult,
+) {
     let (rows, l) = (s.rows, s.l);
     debug_assert_eq!(theta.len(), l);
     out.grad.resize(l, 0.0);
-    let ss = kernels::fused_resid_grad(&s.phi, rows, l, theta, &s.y, &mut out.grad);
+    let ss = if l >= WIDE_L_THRESHOLD {
+        kernels::blocked_resid_grad(&s.phi, rows, l, theta, &s.y, resid, &mut out.grad)
+    } else {
+        kernels::fused_resid_grad(&s.phi, rows, l, theta, &s.y, &mut out.grad)
+    };
     finish_grad(&mut out.grad, theta, lambda, rows);
     out.loss_sum = Some(ss);
     out.examples = rows;
@@ -67,7 +89,7 @@ pub struct NativeKrrPool {
     /// Run the two-pass reference kernel instead of the fused one (golden
     /// equivalence tests only).
     reference: bool,
-    /// Scratch residual buffer for the reference path.
+    /// Scratch residual buffer for the reference and column-blocked paths.
     resid: Vec<f32>,
 }
 
@@ -119,7 +141,7 @@ impl ComputePool for NativeKrrPool {
         if self.reference {
             krr_shard_grad_reference(s, self.lambda, theta, &mut self.resid, out);
         } else {
-            krr_shard_grad_into(s, self.lambda, theta, out);
+            krr_shard_grad_into(s, self.lambda, theta, &mut self.resid, out);
         }
         Ok(())
     }

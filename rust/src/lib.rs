@@ -38,6 +38,7 @@
 //! println!("final loss = {}", report.final_loss());
 //! ```
 
+pub mod agg;
 pub mod bench_harness;
 pub mod cli;
 pub mod cluster;
@@ -116,6 +117,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::agg::{AggSpec, TopologyKind};
     pub use crate::cluster::{ClusterSpec, TimingMode};
     pub use crate::coordinator::estimator::{estimate_gamma, EstimatorParams};
     pub use crate::coordinator::modes::SyncMode;

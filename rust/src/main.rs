@@ -106,6 +106,26 @@ fn cmd_train(argv: &[String]) -> i32 {
             "admission threshold: drop replies below this block fraction (overrides config)",
         )
         .opt(
+            "agg-topology",
+            "",
+            "aggregation topology: star | tree | ring (overrides config)",
+        )
+        .opt(
+            "agg-fan-in",
+            "",
+            "children per interior tree node (overrides config)",
+        )
+        .opt(
+            "agg-fold-cost",
+            "",
+            "seconds to fold one full gradient vector at an interior node (overrides config)",
+        )
+        .opt(
+            "agg-xfer-cost",
+            "",
+            "fixed per-hop forwarding latency in seconds (overrides config)",
+        )
+        .opt(
             "threads",
             "",
             "sweep/worker pool size (default: [bench] threads, else available parallelism)",
@@ -218,6 +238,20 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
         cfg.cluster.net.min_block_frac = f;
     }
     cfg.cluster.net.validate(cfg.cluster.workers)?;
+    let agg_topology = parsed.get("agg-topology");
+    if !agg_topology.is_empty() {
+        cfg.cluster.agg.topology = hybriditer::agg::TopologyKind::parse(agg_topology)?;
+    }
+    if let Some(f) = parsed.get_opt_usize("agg-fan-in")? {
+        cfg.cluster.agg.fan_in = f;
+    }
+    if let Some(c) = parsed.get_opt_f64("agg-fold-cost")? {
+        cfg.cluster.agg.fold_cost = c;
+    }
+    if let Some(c) = parsed.get_opt_f64("agg-xfer-cost")? {
+        cfg.cluster.agg.xfer_cost = c;
+    }
+    cfg.cluster.agg.validate(cfg.cluster.workers, cfg.cluster.net.block_size)?;
     let recovery_policy = parsed.get("recovery-policy");
     if !recovery_policy.is_empty() {
         cfg.run.recovery.policy =

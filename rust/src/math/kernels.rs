@@ -122,6 +122,59 @@ pub fn fused_resid_grad(
     ss
 }
 
+/// Column-block width of [`blocked_resid_grad`]'s second pass: 64 f32
+/// (four cache lines) of gradient accumulator stay L1-resident while
+/// every row streams past once.
+pub const COL_BLOCK: usize = 64;
+
+/// Two-pass, column-blocked kernel for wide gradients — the shapes where
+/// `l` outgrows what the fused kernel's per-row Φᵀr update keeps
+/// cache-resident (each row re-touches the whole `l`-wide gradient).
+///
+/// Pass 1 computes residuals and the loss sum exactly as
+/// [`reference_resid_grad`] does.  Pass 2 walks Φᵀr one
+/// [`COL_BLOCK`]-wide column stripe at a time: the stripe's accumulator
+/// stays hot in L1 while all rows stream past.  Per gradient coordinate
+/// the f32 adds still visit rows in ascending order — the same fold as
+/// [`vec_ops::matvec_t`] and the fused kernel — so the result is
+/// **bit-identical** to both (`blocked_is_bit_identical_to_reference`).
+/// `resid` is a caller scratch buffer grown as needed.
+pub fn blocked_resid_grad(
+    phi: &[f32],
+    rows: usize,
+    l: usize,
+    theta: &[f32],
+    y: &[f32],
+    resid: &mut Vec<f32>,
+    grad: &mut [f32],
+) -> f64 {
+    assert_eq!(phi.len(), rows * l);
+    assert_eq!(theta.len(), l);
+    assert_eq!(y.len(), rows);
+    assert_eq!(grad.len(), l);
+    if resid.len() < rows {
+        resid.resize(rows, 0.0);
+    }
+    let resid = &mut resid[..rows];
+    vec_ops::matvec(phi, rows, l, theta, resid);
+    let mut ss = 0.0f64;
+    for (r, &yi) in resid.iter_mut().zip(y.iter()) {
+        *r -= yi;
+        ss += (*r as f64) * (*r as f64);
+    }
+    grad.fill(0.0);
+    let mut j0 = 0;
+    while j0 < l {
+        let j1 = (j0 + COL_BLOCK).min(l);
+        let stripe = &mut grad[j0..j1];
+        for (i, &ri) in resid.iter().enumerate() {
+            vec_ops::axpy(ri, &phi[i * l + j0..i * l + j1], stripe);
+        }
+        j0 = j1;
+    }
+    ss
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +203,22 @@ mod tests {
             let ss_fused = fused_resid_grad(&phi, rows, l, &theta, &y, &mut g_fused);
             assert_eq!(g_ref, g_fused, "grad bits diverged at rows={rows} l={l}");
             assert_eq!(ss_ref.to_bits(), ss_fused.to_bits(), "loss bits diverged");
+        }
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_reference() {
+        // Stripe-width multiples, ragged tails, narrow and wide shapes.
+        for &(rows, l) in &[(32usize, 8usize), (37, 16), (8, 1), (5, 4), (256, 64), (64, 300)] {
+            let (phi, y, theta) = random_problem(rows, l, 13 + l as u64);
+            let mut resid = Vec::new();
+            let mut g_ref = vec![0.0f32; l];
+            let ss_ref = reference_resid_grad(&phi, rows, l, &theta, &y, &mut resid, &mut g_ref);
+            let mut resid_b = Vec::new();
+            let mut g_blk = vec![0.0f32; l];
+            let ss_blk = blocked_resid_grad(&phi, rows, l, &theta, &y, &mut resid_b, &mut g_blk);
+            assert_eq!(g_ref, g_blk, "grad bits diverged at rows={rows} l={l}");
+            assert_eq!(ss_ref.to_bits(), ss_blk.to_bits(), "loss bits diverged");
         }
     }
 

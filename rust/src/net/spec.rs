@@ -21,6 +21,9 @@ const BLOCK_SALT: u64 = 0xB10C_FA7E_0000_0001;
 const BLOCK_DUP_SALT: u64 = 0xB10C_D0B1_0000_0002;
 /// Salt for BSP retry attempts, keyed additionally by the attempt index.
 const RETRY_SALT: u64 = 0x8E72_4A11_0000_0003;
+/// Salt for interior aggregation-topology edges (tree forwards, ring
+/// hops), keyed additionally by a per-topology round index.
+const EDGE_SALT: u64 = 0xED6E_F01D_0000_0004;
 
 /// A scripted partition: the named workers are unreachable — both
 /// directions dropped — for iterations `from..until` (half-open, like the
@@ -272,6 +275,32 @@ impl NetSpec {
         self.link_for(worker).realize(&mut rng)
     }
 
+    /// Realize one interior aggregation-topology edge: node `node`'s
+    /// round-`round` forward along the overlay (a tree relay's combined
+    /// uplink, or one ring hop).  Pure in `(seed, node, iter, round)` and
+    /// drawn from an independently-salted stream, so routing aggregation
+    /// through the link model cannot perturb any leaf realization — the
+    /// star path keeps reproducing bit for bit.  The edge inherits the
+    /// sending node's [`LinkModel`] (per-worker overrides shape the
+    /// overlay edges rooted at that worker).
+    pub fn realize_edge(&self, seed: u64, node: usize, iter: u64, round: u64) -> LinkRealization {
+        if self.is_ideal() {
+            return LinkRealization::ideal();
+        }
+        if self.partitioned(node, iter) {
+            return LinkRealization::partitioned();
+        }
+        let stream = (node as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ iter.wrapping_mul(0xD1B5_4A32_D192_ED03)
+            ^ round.wrapping_add(1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        let mut rng = Pcg64::new(
+            seed ^ self.salt.wrapping_mul(0xA076_1D64_78BD_642F) ^ EDGE_SALT,
+            stream,
+        );
+        self.link_for(node).realize(&mut rng)
+    }
+
     /// Parse the partition script syntax: `;`-separated windows
     /// `<workers>@<from>..<until>`, where `<workers>` is a comma-separated
     /// mix of indices and inclusive `a-b` ranges.  Example:
@@ -465,6 +494,25 @@ mod tests {
         assert_eq!(NetSpec::ideal().realize_attempt(7, 2, 13, 5), LinkRealization::ideal());
         let part = NetSpec::ideal().with_partition(&[2], 10, 20);
         assert_eq!(part.realize_attempt(7, 2, 13, 5), LinkRealization::partitioned());
+    }
+
+    #[test]
+    fn edge_rounds_realize_independently() {
+        let spec = NetSpec::lossy(0.4);
+        let e0 = spec.realize_edge(7, 2, 13, 0);
+        assert_eq!(e0, spec.realize_edge(7, 2, 13, 0), "edge fates must be pure");
+        let varies = (1..32u64).any(|k| spec.realize_edge(7, 2, 13, k) != e0);
+        assert!(varies, "edge rounds never varied");
+        // The edge stream is independent of the leaf / retry streams: it
+        // must not be forced equal to either for every message key.
+        let decoupled = (0..64u64).any(|i| {
+            spec.realize_edge(7, 2, i, 0) != spec.realize(7, 2, i)
+                || spec.realize_edge(7, 2, i, 0) != spec.realize_attempt(7, 2, i, 0)
+        });
+        assert!(decoupled, "edge stream coupled to an existing stream");
+        assert_eq!(NetSpec::ideal().realize_edge(7, 2, 13, 5), LinkRealization::ideal());
+        let part = NetSpec::ideal().with_partition(&[2], 10, 20);
+        assert_eq!(part.realize_edge(7, 2, 13, 5), LinkRealization::partitioned());
     }
 
     #[test]

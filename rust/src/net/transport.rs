@@ -117,6 +117,16 @@ impl VirtualTransport {
         self.ideal
     }
 
+    /// The spec this transport realizes from — aggregation topologies
+    /// ([`crate::agg`]) re-realize interior-edge fates purely from it.
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     /// The delivered block set of `(worker, iter, duplicate)`'s reply —
     /// pure re-realization, so drivers that queue deliveries as bare
     /// events can recover the mask at admission time.

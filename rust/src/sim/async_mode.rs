@@ -484,6 +484,7 @@ pub(super) fn run_async(
         "async",
         &core,
         dx.stats,
+        crate::agg::AggStats::default(),
         0,
         mean_staleness,
         0,

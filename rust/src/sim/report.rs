@@ -23,6 +23,7 @@ pub(crate) fn assemble(
     mode_name: &'static str,
     core: &EngineCore,
     net: NetStats,
+    agg: crate::agg::AggStats,
     stale_blocks: u64,
     mean_staleness: Option<f64>,
     recoveries: u64,
@@ -43,6 +44,7 @@ pub(crate) fn assemble(
         rebalances: core.elastic.rebalances(),
         shard_owners: core.elastic.ownership.owners().to_vec(),
         net,
+        agg,
         stale_blocks,
         mean_staleness,
         recoveries,

@@ -260,6 +260,12 @@ pub(super) fn run_sync(
         cfg.aggregator,
         crate::coordinator::AggregatorKind::StalenessDamped { .. }
     );
+    // Aggregation overlay (star = the legacy identity, never planned):
+    // per-iteration plan scratch and run-level interior-edge accounting.
+    let topo = !cluster.agg.is_star();
+    let topo_ring = cluster.agg.topology == crate::agg::TopologyKind::Ring;
+    let mut topo_scratch = crate::agg::AggScratch::new();
+    let mut topo_stats = crate::agg::AggStats::default();
     // Every per-iteration buffer lives in this arena and is reused across
     // iterations: zero steady-state allocations (tests/alloc_regression.rs).
     let mut scratch = IterScratch::new(m);
@@ -478,15 +484,60 @@ pub(super) fn run_sync(
         }
         // Fresh primaries this window — captured before the drain (the
         // barrier can only close on this iteration's deliveries).
-        let fresh = net.deliverable();
-        while let Some(d) = net.poll() {
-            core.heap.push(Event {
-                at: d.at,
-                worker: d.worker,
-                iter: d.iter,
-                duplicate: d.duplicate,
-                delivers: true,
-            });
+        let mut fresh = net.deliverable();
+        if topo {
+            // Non-star overlay: the drain routes through the aggregation
+            // plan before anything reaches the heap.  Relays deduplicate —
+            // a duplicated reply meets its primary's fold at the first
+            // relay and dies there — and an interior-edge drop kills the
+            // whole folded subtree (or clears ring segments).  Fates are
+            // pure in (seed, iter) and the dispatched/delivered sets, so
+            // the threaded driver realizes the identical plan
+            // (docs/AGGREGATION.md).
+            topo_scratch.arrivals.clear();
+            while let Some(d) = net.poll() {
+                if d.duplicate {
+                    core.membership.record_abandoned(d.worker);
+                    continue;
+                }
+                topo_scratch.arrivals.push((d.worker, d.at));
+            }
+            crate::agg::plan(
+                &cluster.agg,
+                net.spec(),
+                net.seed(),
+                iter,
+                m,
+                responders,
+                &mut topo_scratch,
+                &mut topo_stats,
+                sink,
+                now,
+            );
+            for &(w, _) in topo_scratch.arrivals.iter() {
+                if topo_scratch.killed[w] {
+                    core.membership.record_abandoned(w);
+                    continue;
+                }
+                core.heap.push(Event {
+                    at: topo_scratch.at[w],
+                    worker: w,
+                    iter,
+                    duplicate: false,
+                    delivers: true,
+                });
+            }
+            fresh -= topo_scratch.killed_count;
+        } else {
+            while let Some(d) = net.poll() {
+                core.heap.push(Event {
+                    at: d.at,
+                    worker: d.worker,
+                    iter: d.iter,
+                    duplicate: d.duplicate,
+                    delivers: true,
+                });
+            }
         }
         included_shards.clear();
         included_workers.clear();
@@ -621,7 +672,11 @@ pub(super) fn run_sync(
                     now += len;
                     continue;
                 }
-                let g_eff = g.min(fresh);
+                // Ring is a collective: every surviving participant is part
+                // of the one reduced vector and they all land together, so
+                // the barrier admits them all — γ shapes nothing inside a
+                // ring window (docs/AGGREGATION.md).
+                let g_eff = if topo_ring { fresh } else { g.min(fresh) };
                 barrier.reset(iter, g_eff);
                 let mut close_time = 0.0f64;
                 loop {
@@ -657,6 +712,11 @@ pub(super) fn run_sync(
                             let mask = if blocking {
                                 let mk = net.blocks_for(ev.worker, ev.iter, ev.duplicate);
                                 ledger.claim(ev.worker, ev.iter, mk)
+                            } else if topo_ring {
+                                // The segments of this participant that
+                                // survived the collective (full(n_p) under
+                                // ideal links — the whole-vector fold).
+                                topo_scratch.masks[ev.worker]
                             } else {
                                 BlockSet::full(1)
                             };
@@ -728,6 +788,22 @@ pub(super) fn run_sync(
                 core.membership.record_contribution(w);
             }
         }
+        // Interior-node cost model: the root pays fold+xfer per message it
+        // folds.  Under a star every included reply is its own root
+        // message — the incast term hierarchical overlays exist to beat —
+        // while tree/ring arrive pre-combined (`root_msgs` from the
+        // plan).  Zero-cost specs (the default) skip the arithmetic
+        // entirely, so the legacy closing path stays bit-for-bit.
+        let iter_latency = if cluster.agg.root_cost() != 0.0 {
+            let root_msgs = if topo {
+                f64::from(topo_scratch.root_msgs)
+            } else {
+                included_workers.len() as f64
+            };
+            iter_latency + cluster.agg.root_cost() * root_msgs
+        } else {
+            iter_latency
+        };
         // Close the window: whatever is still in flight re-enters the next
         // window's time frame (no-op under an ideal spec — the heap is
         // empty — so the lockstep arithmetic stays untouched).
@@ -947,6 +1023,7 @@ pub(super) fn run_sync(
         cfg.mode.name(),
         &core,
         net.stats(),
+        topo_stats,
         stale_blocks_total,
         None,
         recovery.recoveries,

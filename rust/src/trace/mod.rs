@@ -76,6 +76,14 @@ pub enum TraceEvent {
     /// The recovery completed; `rollback` is the iterations of progress
     /// a checkpoint restore rewound (0 for the rollback-free policies).
     RecoveryDone { policy: &'static str, rollback: u64 },
+    /// An interior aggregation node folded `children` partial gradients
+    /// into one combined message ([`crate::agg`]); for ring topologies a
+    /// single master-lane fold summarizes the whole collective.
+    AggFold { children: u32 },
+    /// An interior aggregation node forwarded its combined message to
+    /// `to` (a worker index, or [`MASTER`]); `delivered` is the pure
+    /// edge-fate of that hop.
+    Forward { to: i64, delivered: bool },
 }
 
 /// One emitted event with its full stamp.
@@ -466,6 +474,8 @@ fn event_name(ev: &TraceEvent) -> &'static str {
         TraceEvent::BarrierClose { .. } => "barrier_close",
         TraceEvent::RecoveryStart { .. } => "recovery_start",
         TraceEvent::RecoveryDone { .. } => "recovery_done",
+        TraceEvent::AggFold { .. } => "agg_fold",
+        TraceEvent::Forward { .. } => "forward",
     }
 }
 
@@ -508,13 +518,22 @@ fn event_fields(ev: &TraceEvent, out: &mut String) {
         TraceEvent::RecoveryDone { policy, rollback } => {
             let _ = write!(out, ",\"policy\":\"{policy}\",\"rollback\":{rollback}");
         }
+        TraceEvent::AggFold { children } => {
+            let _ = write!(out, ",\"children\":{children}");
+        }
+        TraceEvent::Forward { to, delivered } => {
+            let _ = write!(out, ",\"to\":{to},\"delivered\":{delivered}");
+        }
         _ => {}
     }
 }
 
 fn is_fate(ev: &TraceEvent) -> bool {
-    use TraceEvent::{BlockFate, Dispatch, Drop, Duplicate};
-    matches!(ev, Dispatch | Drop { .. } | Duplicate | BlockFate { .. })
+    use TraceEvent::{AggFold, BlockFate, Dispatch, Drop, Duplicate, Forward};
+    matches!(
+        ev,
+        Dispatch | Drop { .. } | Duplicate | BlockFate { .. } | AggFold { .. } | Forward { .. }
+    )
 }
 
 /// Emit the pure fate events of `(worker, iter)`'s roundtrip: `Dispatch`,
@@ -638,6 +657,18 @@ mod tests {
         assert_eq!(seqs, vec![0, 1, 2]);
         assert_eq!(s.len(), 3);
         assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn agg_events_render_and_join_the_fate_oracle() {
+        let mut s = JournalSink::new();
+        s.emit(2, 3, 0.1, TraceEvent::AggFold { children: 4 });
+        s.emit(2, 3, 0.1, TraceEvent::Forward { to: MASTER, delivered: false });
+        let jsonl = s.jsonl();
+        assert!(jsonl.contains("\"event\":\"agg_fold\",\"children\":4"), "{jsonl}");
+        assert!(jsonl.contains("\"event\":\"forward\",\"to\":-1,\"delivered\":false"), "{jsonl}");
+        let fates = s.fate_jsonl();
+        assert_eq!(fates.lines().count(), 2, "agg events must join the fate oracle:\n{fates}");
     }
 
     #[test]

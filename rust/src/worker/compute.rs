@@ -163,6 +163,8 @@ impl NativeKrrFactory {
 struct NativeWorker {
     shards: Arc<Vec<Shard>>,
     lam: f32,
+    /// Residual scratch for the column-blocked wide kernel, grown once.
+    resid: Vec<f32>,
 }
 
 impl WorkerCompute for NativeWorker {
@@ -180,7 +182,7 @@ impl WorkerCompute for NativeWorker {
         let s = self.shards.get(shard).ok_or_else(|| {
             Error::Cluster(format!("assigned unknown shard {shard}"))
         })?;
-        krr_shard_grad_into(s, self.lam, theta, out);
+        krr_shard_grad_into(s, self.lam, theta, &mut self.resid, out);
         Ok(())
     }
 }
@@ -202,6 +204,7 @@ impl ComputeFactory for NativeKrrFactory {
         Ok(Box::new(NativeWorker {
             shards: Arc::clone(&self.shards),
             lam: self.lam,
+            resid: Vec::new(),
         }))
     }
 }

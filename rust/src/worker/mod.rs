@@ -116,6 +116,43 @@ pub trait ComputeFactory: Sync {
 /// Master receive timeout before declaring a stall (real mode only).
 const STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 
+/// How many iterations an interior-kill fate entry outlives its window
+/// before it is pruned — the same straggler horizon the block ledger uses.
+const KILL_FATE_HORIZON: u64 = 64;
+
+/// Recycling pool for θ broadcast snapshots.
+///
+/// The master ships θ to the slaves behind an `Arc`; historically every
+/// broadcast cloned the full vector.  The pool instead keeps the shipped
+/// buffers and reuses the first one all receivers have dropped
+/// (`Arc::get_mut` proves sole ownership), so a steady-state broadcast is
+/// a `copy_from_slice`, not an allocation.  Slots only grow while every
+/// previous snapshot is still in flight: the sync driver settles on a
+/// double buffer (this iteration's broadcast plus stragglers holding last
+/// iteration's), the async driver near one per worker plus the θ-ledger's
+/// holds.  `tests/alloc_regression.rs` pins the budgets.
+struct ThetaPool {
+    slots: Vec<Arc<Vec<f32>>>,
+}
+
+impl ThetaPool {
+    fn new() -> ThetaPool {
+        ThetaPool { slots: Vec::new() }
+    }
+
+    fn snapshot(&mut self, theta: &[f32]) -> Arc<Vec<f32>> {
+        for slot in self.slots.iter_mut() {
+            if let Some(buf) = Arc::get_mut(slot) {
+                buf.copy_from_slice(theta);
+                return Arc::clone(slot);
+            }
+        }
+        let fresh = Arc::new(theta.to_vec());
+        self.slots.push(Arc::clone(&fresh));
+        fresh
+    }
+}
+
 /// Apply one scheduled membership event master-side — the threaded
 /// counterpart of the virtual engine's boundary handler.  A join of a
 /// worker whose thread simulated a stochastic crash is vetoed (its thread
@@ -254,6 +291,26 @@ fn run_real_sync(
     // Thread generation per worker: respawned slaves salt their RNG
     // streams with it (generation 0 = the historical streams).
     let mut generations = vec![0u64; m];
+    // Aggregation overlay (star = the legacy identity, never planned).
+    // The overlay is planned at dispatch time from the same pure fate
+    // realizations the virtual driver draws from — who relays (the
+    // dispatched set), whose reply the network delivers, which interior
+    // edges drop — so both drivers kill and deduplicate the identical
+    // replies; physical arrival times feed the plan as zeros because
+    // fates are time-independent (docs/AGGREGATION.md).
+    let topo = !cluster.agg.is_star();
+    let topo_ring = cluster.agg.topology == crate::agg::TopologyKind::Ring;
+    let mut topo_scratch = crate::agg::AggScratch::new();
+    let mut topo_stats = crate::agg::AggStats::default();
+    let mut topo_responders: Vec<usize> = Vec::with_capacity(m);
+    // Interior-kill fates per worker for replies still physically in
+    // flight: a straggling arrival must realize the fate its own window
+    // planned.
+    let mut killed_hist: Vec<Vec<u64>> = vec![Vec::new(); m];
+    // θ broadcast snapshots recycle through this pool — the same
+    // zero-steady-state-allocation discipline the virtual driver's
+    // arenas follow.
+    let mut theta_pool = ThetaPool::new();
 
     std::thread::scope(|scope| -> Result<()> {
         // --- spawn slaves ------------------------------------------------
@@ -288,6 +345,11 @@ fn run_real_sync(
         // skipped entirely, so a crash notice from it must not shrink the
         // deliverable count it never joined.
         let mut dispatched = vec![false; m];
+        // Per-worker shard lists behind `Arc`s, rebuilt only when a
+        // rebalance actually changes ownership — the dispatch hot path
+        // clones the handle, not the list.
+        let mut shard_arcs: Vec<Arc<Vec<usize>>> =
+            elastic.ownership.grouped().into_iter().map(Arc::new).collect();
 
         // --- master loop ---------------------------------------------
         'iters: for iter in 0..cfg.stop.max_iters {
@@ -410,13 +472,18 @@ fn run_real_sync(
                 // Same straggler horizon the virtual driver uses.
                 ledger.prune_before(iter.saturating_sub(64));
             }
-            let theta_arc = Arc::new(theta.clone());
-            // One O(shards) pass instead of an O(shards) scan per worker.
-            let mut assignment = elastic.ownership.grouped();
+            let theta_arc = theta_pool.snapshot(&theta);
+            if rebalanced {
+                for (w, shards) in elastic.ownership.grouped().into_iter().enumerate() {
+                    shard_arcs[w] = Arc::new(shards);
+                }
+            }
             let stats_iter_start = shim.stats();
             let stale_blocks_iter_start = stale_blocks_total;
             let mut deliverable = 0usize;
             dispatched.fill(false);
+            topo_responders.clear();
+            topo_scratch.arrivals.clear();
             for w in 0..m {
                 if membership.is_alive(w) {
                     // A shard-less worker (stripped by capacity-weighted
@@ -427,8 +494,14 @@ fn run_real_sync(
                     // alive worker is ever shard-less, so the legacy
                     // broadcast (and shim realization) sequence is
                     // untouched.
-                    if assignment[w].is_empty() {
+                    if shard_arcs[w].is_empty() {
                         continue;
+                    }
+                    if topo {
+                        // The overlay's dispatched set: every worker a Work
+                        // goes out to, downlink fate notwithstanding — the
+                        // virtual driver's responder set.
+                        topo_responders.push(w);
                     }
                     // Fate events re-realize the roundtrip purely (same key
                     // the shim uses), so they land even when the plan below
@@ -454,7 +527,7 @@ fn run_real_sync(
                         WorkPlan::Dropped => continue,
                         WorkPlan::Deliver { net_delay } => net_delay,
                     };
-                    let shards_w = Arc::new(std::mem::take(&mut assignment[w]));
+                    let shards_w = Arc::clone(&shard_arcs[w]);
                     // Hand back as many recycled buffers as this worker
                     // will need for its per-shard reply payloads.
                     let take = shards_w.len().min(free.len());
@@ -473,6 +546,9 @@ fn run_real_sync(
                         dispatched[w] = true;
                         if reply_delivered {
                             deliverable += 1;
+                            if topo {
+                                topo_scratch.arrivals.push((w, 0.0));
+                            }
                         }
                     } else {
                         membership.mark_down(w);
@@ -482,6 +558,37 @@ fn run_real_sync(
             if membership.alive() == 0 {
                 status = RunStatus::ClusterDead { iter };
                 break;
+            }
+            if topo {
+                // Plan the overlay exactly as the virtual driver does —
+                // shared code over the same pure inputs, so fold/forward
+                // fates, edge accounting, and the trace events match
+                // message for message.
+                let t = driver_start.elapsed().as_secs_f64();
+                crate::agg::plan(
+                    &cluster.agg,
+                    &cluster.net,
+                    cluster.seed,
+                    iter,
+                    m,
+                    &topo_responders,
+                    &mut topo_scratch,
+                    &mut topo_stats,
+                    sink,
+                    t,
+                );
+                // A killed contribution died on an interior edge: account
+                // it now (the virtual driver abandons it at drain time) and
+                // remember the fate — the physical reply still arrives
+                // later and is discarded on receipt.
+                for w in 0..m {
+                    killed_hist[w].retain(|&k| k + KILL_FATE_HORIZON > iter);
+                    if topo_scratch.killed[w] {
+                        membership.record_abandoned(w);
+                        killed_hist[w].push(iter);
+                    }
+                }
+                deliverable -= topo_scratch.killed_count;
             }
             if deliverable == 0 {
                 // Every reply is destined to drop (lossy links or a
@@ -495,6 +602,10 @@ fn run_real_sync(
                 // whatever replies can still arrive (the virtual driver
                 // models Hadoop-style retry instead; see docs/NETWORK.md).
                 (SyncMode::Bsp, _) => deliverable,
+                // Ring is a collective: every surviving participant is
+                // part of the one reduced vector and they all land
+                // together — γ shapes nothing inside a ring window.
+                (_, Some(_)) if topo_ring => deliverable,
                 (_, Some(g)) => g.min(deliverable),
                 (mode, None) => {
                     return Err(Error::Config(format!(
@@ -532,8 +643,22 @@ fn run_real_sync(
                             GradFate::Dropped => continue, // lost in flight
                             GradFate::Deliver { duplicate } => duplicate,
                         };
+                        if topo {
+                            // Relays deduplicate: the duplicated copy dies
+                            // folding into its primary at the first relay
+                            // (the virtual drain discards it the same way).
+                            if duplicate {
+                                membership.record_abandoned(worker);
+                            }
+                            // Killed at plan time (and accounted there):
+                            // discard the physical reply.
+                            if killed_hist[worker].contains(&msg_iter) {
+                                continue;
+                            }
+                        }
                         let mut shards = shards;
-                        for copy in 0..(1 + duplicate as usize) {
+                        let copies = if topo { 1 } else { 1 + duplicate as usize };
+                        for copy in 0..copies {
                             // One Delivery per delivering copy — the virtual
                             // heap materializes the duplicate as its own
                             // arrival, so the journals line up.
@@ -556,6 +681,12 @@ fn run_real_sync(
                                             msg_iter,
                                             shim.blocks_for(worker, msg_iter, copy == 1),
                                         )
+                                    } else if topo_ring {
+                                        // The θ segments this participant
+                                        // kept through the collective (full
+                                        // under ideal links — the legacy
+                                        // whole-vector fold, bit for bit).
+                                        topo_scratch.masks[worker]
                                     } else {
                                         BlockSet::full(1)
                                     };
@@ -632,11 +763,17 @@ fn run_real_sync(
                                 // (whether it died on this broadcast or an
                                 // older one); if it was counted
                                 // deliverable, close on one fewer arrival.
-                                if dispatched[worker] && shim.reply_expected(worker, iter) {
+                                // Under an overlay a killed worker was
+                                // already subtracted at plan time.
+                                if dispatched[worker]
+                                    && shim.reply_expected(worker, iter)
+                                    && !(topo && topo_scratch.killed[worker])
+                                {
                                     deliverable = deliverable.saturating_sub(1);
                                 }
                                 let new_target = match (&cfg.mode, gamma) {
                                     (SyncMode::Bsp, _) => deliverable,
+                                    (_, Some(_)) if topo_ring => deliverable,
                                     (_, Some(g)) => g.min(deliverable),
                                     _ => unreachable!(),
                                 };
@@ -677,9 +814,21 @@ fn run_real_sync(
                     WorkerMsg::Grad { worker, iter: msg_iter, .. } => {
                         if let GradFate::Deliver { duplicate } = shim.grad_fate(worker, msg_iter)
                         {
-                            let copies = 1 + duplicate as usize;
+                            if topo {
+                                // Same dedup/kill discipline as the collect
+                                // loop: the duplicate dies at its first
+                                // relay, a killed reply was accounted at
+                                // plan time.
+                                if duplicate {
+                                    membership.record_abandoned(worker);
+                                }
+                                if killed_hist[worker].contains(&msg_iter) {
+                                    continue;
+                                }
+                            }
+                            let copies = if topo { 1 } else { 1 + duplicate as usize };
                             membership.record_abandoned(worker);
-                            if duplicate {
+                            if duplicate && !topo {
                                 membership.record_abandoned(worker);
                             }
                             if sink.enabled() {
@@ -867,6 +1016,7 @@ fn run_real_sync(
         rebalances: elastic.rebalances(),
         shard_owners: elastic.ownership.owners().to_vec(),
         net: shim.stats(),
+        agg: topo_stats,
         stale_blocks: stale_blocks_total,
         mean_staleness: None,
         recoveries: recovery.recoveries,
@@ -973,6 +1123,9 @@ fn run_real_async(
     // snapshot (the virtual driver's worker retries from the θ it already
     // has), never a fresh one.
     let mut theta_ledger = ThetaLedger::new(m);
+    // Fresh snapshots recycle through the pool once their slave and the
+    // ledger both release them — no per-dispatch θ clone in steady state.
+    let mut theta_pool = ThetaPool::new();
     // Elastic membership: ownership + rebalance state shared with the
     // virtual engine; scheduled events land at update-count boundaries
     // (iteration k ≈ update k·M, the sync-iteration equivalent).
@@ -1018,7 +1171,10 @@ fn run_real_async(
             let owners = elastic.ownership.owners();
             trace::emit_boundary(sink, &cluster.elastic, 0, rebalanced_0, owners, t);
         }
-        let mut assignment = elastic.ownership.grouped();
+        // Per-worker shard lists behind `Arc`s, rebuilt only on rebalance —
+        // each dispatch clones the handle, not the list.
+        let mut shard_arcs: Vec<Arc<Vec<usize>>> =
+            elastic.ownership.grouped().into_iter().map(Arc::new).collect();
         for w in 0..m {
             let (tx, rx) = mpsc::channel::<MasterMsg>();
             if !evicted[w] {
@@ -1036,12 +1192,12 @@ fn run_real_async(
                     sink,
                     driver_start,
                 );
-                let snap = Arc::new(theta.clone());
+                let snap = theta_pool.snapshot(&theta);
                 theta_ledger.hold(w, &snap);
                 tx.send(MasterMsg::Work {
                     iter: 0,
                     theta: snap,
-                    shards: Arc::new(assignment[w].clone()),
+                    shards: Arc::clone(&shard_arcs[w]),
                     net_delay,
                     compute_scale: elastic.latency_scale(w),
                     recycle: Vec::new(),
@@ -1081,7 +1237,9 @@ fn run_real_async(
                 }
                 let rebalanced = elastic.maybe_rebalance(b, cluster.rebalance_every, &membership)?;
                 if rebalanced {
-                    elastic.ownership.grouped_into(&mut assignment);
+                    for (w, shards) in elastic.ownership.grouped().into_iter().enumerate() {
+                        shard_arcs[w] = Arc::new(shards);
+                    }
                     log::debug!("async boundary {b}: shard ownership rebalanced");
                 }
                 if sink.enabled() {
@@ -1115,12 +1273,12 @@ fn run_real_async(
                         sink,
                         driver_start,
                     );
-                    let snap = Arc::new(theta.clone());
+                    let snap = theta_pool.snapshot(&theta);
                     theta_ledger.hold(w, &snap);
                     let _ = work_txs[w].send(MasterMsg::Work {
                         iter: updates,
                         theta: snap,
-                        shards: Arc::new(assignment[w].clone()),
+                        shards: Arc::clone(&shard_arcs[w]),
                         net_delay,
                         compute_scale: elastic.latency_scale(w),
                         recycle: Vec::new(),
@@ -1175,12 +1333,12 @@ fn run_real_async(
                             driver_start,
                         );
                         version_given[worker] = version;
-                        let snap = Arc::new(theta.clone());
+                        let snap = theta_pool.snapshot(&theta);
                         theta_ledger.hold(worker, &snap);
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
                             theta: snap,
-                            shards: Arc::new(assignment[worker].clone()),
+                            shards: Arc::clone(&shard_arcs[worker]),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
                             recycle: shards.into_iter().map(|sg| sg.grad).collect(),
@@ -1209,13 +1367,14 @@ fn run_real_async(
                             sink,
                             driver_start,
                         );
-                        let held = theta_ledger
-                            .held(worker)
-                            .unwrap_or_else(|| Arc::new(theta.clone()));
+                        let held = match theta_ledger.held(worker) {
+                            Some(held) => held,
+                            None => theta_pool.snapshot(&theta),
+                        };
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
                             theta: held,
-                            shards: Arc::new(assignment[worker].clone()),
+                            shards: Arc::clone(&shard_arcs[worker]),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
                             recycle: shards.into_iter().map(|sg| sg.grad).collect(),
@@ -1251,12 +1410,12 @@ fn run_real_async(
                             driver_start,
                         );
                         version_given[worker] = version;
-                        let snap = Arc::new(theta.clone());
+                        let snap = theta_pool.snapshot(&theta);
                         theta_ledger.hold(worker, &snap);
                         let _ = work_txs[worker].send(MasterMsg::Work {
                             iter: updates,
                             theta: snap,
-                            shards: Arc::new(assignment[worker].clone()),
+                            shards: Arc::clone(&shard_arcs[worker]),
                             net_delay,
                             compute_scale: elastic.latency_scale(worker),
                             recycle: Vec::new(),
@@ -1326,12 +1485,12 @@ fn run_real_async(
                         sink,
                         driver_start,
                     );
-                    let snap = Arc::new(theta.clone());
+                    let snap = theta_pool.snapshot(&theta);
                     theta_ledger.hold(worker, &snap);
                     let _ = work_txs[worker].send(MasterMsg::Work {
                         iter: updates,
                         theta: snap,
-                        shards: Arc::new(assignment[worker].clone()),
+                        shards: Arc::clone(&shard_arcs[worker]),
                         net_delay,
                         compute_scale: elastic.latency_scale(worker),
                         recycle,
@@ -1413,6 +1572,7 @@ fn run_real_async(
         rebalances: elastic.rebalances(),
         shard_owners: elastic.ownership.owners().to_vec(),
         net: net_stats,
+        agg: crate::agg::AggStats::default(),
         stale_blocks: 0,
         mean_staleness: if updates > 0 {
             Some(staleness_sum / updates as f64)

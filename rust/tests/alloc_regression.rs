@@ -76,7 +76,7 @@ fn problem() -> KrrProblem {
     KrrProblem::generate(&spec).unwrap()
 }
 
-fn virtual_run_allocs(p: &KrrProblem, iters: u64, sink: &mut dyn TraceSink) -> u64 {
+fn virtual_run_allocs(p: &KrrProblem, mode: SyncMode, iters: u64, sink: &mut dyn TraceSink) -> u64 {
     let cluster = ClusterSpec {
         workers: 4,
         delay: DelayModel::LogNormal { mu: -5.0, sigma: 1.0 },
@@ -86,7 +86,7 @@ fn virtual_run_allocs(p: &KrrProblem, iters: u64, sink: &mut dyn TraceSink) -> u
     // record_every/eval_every = 0: recording rows is the one legitimate
     // (caller-requested) allocation a steady-state iteration may make.
     let cfg = RunConfig {
-        mode: SyncMode::Hybrid { gamma: 3 },
+        mode,
         optimizer: OptimizerKind::sgd(0.8),
         loss_form: LossForm::krr(p.spec.lambda),
         eval_every: 0,
@@ -102,7 +102,7 @@ fn virtual_run_allocs(p: &KrrProblem, iters: u64, sink: &mut dyn TraceSink) -> u
     after - before
 }
 
-fn real_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
+fn real_run_allocs(p: &KrrProblem, mode: SyncMode, iters: u64) -> u64 {
     let cluster = ClusterSpec {
         workers: 4,
         base_compute: 0.0,
@@ -111,7 +111,7 @@ fn real_run_allocs(p: &KrrProblem, iters: u64) -> u64 {
         ..ClusterSpec::default()
     };
     let cfg = RunConfig {
-        mode: SyncMode::Hybrid { gamma: 4 },
+        mode,
         optimizer: OptimizerKind::sgd(0.8),
         loss_form: LossForm::krr(p.spec.lambda),
         eval_every: 0,
@@ -139,9 +139,10 @@ fn steady_state_allocation_budgets() {
     // The runs go through the *traced* entry point with tracing disabled
     // (`NoopSink`): the flight recorder's off switch must keep the hot
     // path allocation-free, not just "cheap".
-    let _ = virtual_run_allocs(&p, 50, &mut NoopSink);
-    let short = virtual_run_allocs(&p, 100, &mut NoopSink);
-    let long = virtual_run_allocs(&p, 400, &mut NoopSink);
+    let hybrid = SyncMode::Hybrid { gamma: 3 };
+    let _ = virtual_run_allocs(&p, hybrid.clone(), 50, &mut NoopSink);
+    let short = virtual_run_allocs(&p, hybrid.clone(), 100, &mut NoopSink);
+    let long = virtual_run_allocs(&p, hybrid, 400, &mut NoopSink);
     assert_eq!(
         long, short,
         "virtual driver allocates per iteration with tracing disabled: {} \
@@ -150,16 +151,48 @@ fn steady_state_allocation_budgets() {
         (long - short) as f64 / 300.0
     );
 
+    // --- virtual async: near-zero per-update budget --------------------
+    // The reschedule path reuses every buffer (`shards_given` capacity,
+    // the gradient slots, the damping scratch), so the only steady-state
+    // allocations left are the recorder's amortized row-Vec growth (async
+    // records every m updates even at record_every = 0) and heap
+    // resizing — a handful over thousands of updates, not one per update.
+    let a = SyncMode::Async { damping: 0.0 };
+    let _ = virtual_run_allocs(&p, a.clone(), 200, &mut NoopSink);
+    let short = virtual_run_allocs(&p, a.clone(), 400, &mut NoopSink);
+    let long = virtual_run_allocs(&p, a.clone(), 1600, &mut NoopSink);
+    let per_update = (long.saturating_sub(short)) as f64 / 1200.0;
+    assert!(
+        per_update < 0.1,
+        "virtual async reschedule path allocates per update: {per_update:.3}/update"
+    );
+
     // --- threaded runtime: small, flat per-iteration budget ------------
-    // Channels/Arcs allocate per message by construction; the free-list
-    // must keep the payload Vecs out, so the budget is tight: well under
-    // 40 allocations per worker-iteration for m = 4.
-    let _ = real_run_allocs(&p, 20);
-    let short = real_run_allocs(&p, 40);
-    let long = real_run_allocs(&p, 120);
+    // Channels/Arcs allocate per message by construction; the θ snapshot
+    // pool and per-worker shard-list Arcs take the per-broadcast clones
+    // out, and the free-list keeps reply payloads out, so the budget is
+    // tight: well under 35 allocations per worker-iteration for m = 4.
+    let hybrid = SyncMode::Hybrid { gamma: 4 };
+    let _ = real_run_allocs(&p, hybrid.clone(), 20);
+    let short = real_run_allocs(&p, hybrid.clone(), 40);
+    let long = real_run_allocs(&p, hybrid, 120);
     let per_iter = (long.saturating_sub(short)) as f64 / 80.0;
     assert!(
-        per_iter < 160.0,
+        per_iter < 140.0,
         "threaded runtime allocation budget blown: {per_iter:.1} allocs/iter"
+    );
+
+    // --- threaded async: per-update budget ------------------------------
+    // One update = one reply in + one dispatch out; the snapshot pool's
+    // slots settle near one per worker (the ledger holds one each), after
+    // which rescheduling recycles Arcs instead of cloning θ.
+    let a = SyncMode::Async { damping: 0.0 };
+    let _ = real_run_allocs(&p, a.clone(), 80);
+    let short = real_run_allocs(&p, a.clone(), 160);
+    let long = real_run_allocs(&p, a, 480);
+    let per_update = (long.saturating_sub(short)) as f64 / 320.0;
+    assert!(
+        per_update < 60.0,
+        "threaded async allocation budget blown: {per_update:.1} allocs/update"
     );
 }

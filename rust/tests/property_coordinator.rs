@@ -89,7 +89,7 @@ fn prop_mean_aggregation_bounded_by_extremes() {
             .collect();
         let contribs: Vec<Contribution<'_>> = grads
             .iter()
-            .map(|g| Contribution { grad: g, examples: 1, staleness: 0 })
+            .map(|g| Contribution::whole(g, 1, 0))
             .collect();
         let mut out = vec![0.0f32; dim];
         aggregate(AggregatorKind::Mean, &contribs, &mut out);
@@ -114,7 +114,7 @@ fn prop_weighted_equals_mean_for_equal_weights() {
             .collect();
         let contribs: Vec<Contribution<'_>> = grads
             .iter()
-            .map(|g| Contribution { grad: g, examples: 64, staleness: 0 })
+            .map(|g| Contribution::whole(g, 64, 0))
             .collect();
         let mut a = vec![0.0f32; dim];
         let mut b = vec![0.0f32; dim];

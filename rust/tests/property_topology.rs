@@ -1,0 +1,251 @@
+//! Aggregation-topology invariants (tree / ring overlays vs the star
+//! baseline).
+//!
+//! Two oracle families:
+//!
+//! * **Ideal-link θ identity** — with no interior loss and γ = M, an
+//!   overlay only *reorders* the fold's transport: every delivered leaf
+//!   still reaches the root, the coordinator folds the same contribution
+//!   set in the same ascending-worker order, and θ must be **bit
+//!   identical** to the star run.  With zero hop costs the timing
+//!   arithmetic is untouched too, so whole recorded rows match bitwise;
+//!   with nonzero costs only the clock moves.
+//! * **Lossy-link conservation** — interior-edge fates are pure in
+//!   `(seed, node, iter, round)`, so the virtual simulator and the
+//!   threaded runtime must realize the *same* overlay: identical
+//!   [`hybriditer::agg::AggStats`] (folds, edges, kills, per-node lanes),
+//!   per-lane `delivered + dropped == sent`, and matching θ.  Parity
+//!   scope: scheduled traces only (no stochastic crashes) and γ = M —
+//!   below M the drivers admit subtrees in different orders (documented
+//!   in docs/AGGREGATION.md).
+
+use hybriditer::agg::AggSpec;
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{Coordinator, LossForm, RunConfig, RunReport, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::net::{LinkModel, NetSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::sim::{self, NoEval};
+use hybriditer::worker::NativeKrrFactory;
+
+fn problem(machines: usize) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "topology".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 17,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn cfg(m: usize, iters: u64) -> RunConfig {
+    RunConfig {
+        mode: SyncMode::Hybrid { gamma: m },
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(0.01),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters)
+}
+
+fn run_virtual(p: &KrrProblem, cluster: &ClusterSpec, cfg: &RunConfig) -> RunReport {
+    let mut pool = p.native_pool();
+    sim::run_virtual(&mut pool, cluster, cfg, &NoEval).unwrap()
+}
+
+fn run_real(p: &KrrProblem, cluster: &ClusterSpec, cfg: &RunConfig) -> RunReport {
+    let coord = Coordinator::new(cluster.clone(), cfg.clone()).unwrap();
+    let factory = NativeKrrFactory::for_problem(p);
+    coord.run_real(&factory, &NoEval).unwrap()
+}
+
+fn max_theta_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn tree_and_ring_ideal_links_theta_bit_identical_to_star() {
+    // Zero hop costs: the overlay is pure transport reshuffling, so every
+    // recorded row — loss bits, virtual clock bits, inclusion counts —
+    // must reproduce the star run exactly, per fan-in and topology.
+    let m = 9;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: (1..m).map(|w| (w, 1.0 + w as f64 * 0.5)).collect(),
+        seed: 5,
+        ..ClusterSpec::default()
+    };
+    let cfg = cfg(m, 25);
+    let star = run_virtual(&p, &cluster, &cfg);
+    assert!(star.status.is_healthy(), "star: {:?}", star.status);
+    assert_eq!(star.agg.edge_sent, 0, "star realized interior edges");
+
+    for agg in [AggSpec::tree(2), AggSpec::tree(3), AggSpec::tree(8), AggSpec::ring()] {
+        let name = format!("{}/fan_in={}", agg.topology.name(), agg.fan_in);
+        let over = run_virtual(&p, &cluster.clone().with_agg(agg), &cfg);
+        assert!(over.status.is_healthy(), "{name}: {:?}", over.status);
+        assert_eq!(star.theta, over.theta, "{name}: θ bits diverged from star");
+        assert_eq!(over.agg.edge_dropped, 0, "{name}: ideal links dropped an edge");
+        assert_eq!(over.agg.lost_contributions, 0, "{name}: ideal links killed a leaf");
+        assert_eq!(star.recorder.len(), over.recorder.len(), "{name}");
+        for (rs, ro) in star.recorder.rows().iter().zip(over.recorder.rows()) {
+            assert_eq!(rs.iter, ro.iter, "{name}");
+            assert_eq!(rs.included, ro.included, "{name} iter {}", rs.iter);
+            assert_eq!(
+                rs.loss.to_bits(),
+                ro.loss.to_bits(),
+                "{name} iter {}: loss bits diverged",
+                rs.iter
+            );
+            assert_eq!(
+                rs.time.to_bits(),
+                ro.time.to_bits(),
+                "{name} iter {}: zero-cost overlay moved the clock",
+                rs.iter
+            );
+        }
+    }
+}
+
+#[test]
+fn tree_and_ring_hop_costs_move_the_clock_but_not_theta() {
+    // Nonzero fold/xfer costs dilate iteration latency (interior folds
+    // and the root's per-message shadow) without touching which
+    // contributions fold or in what order — θ stays bit identical.
+    let m = 9;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: (1..m).map(|w| (w, 1.0 + w as f64 * 0.5)).collect(),
+        seed: 5,
+        ..ClusterSpec::default()
+    };
+    let cfg = cfg(m, 25);
+    let star = run_virtual(&p, &cluster, &cfg);
+    let star_t = star.recorder.rows().last().unwrap().time;
+
+    for agg in [
+        AggSpec::tree(3).with_costs(2e-4, 1e-4),
+        AggSpec::ring().with_costs(2e-4, 1e-4),
+    ] {
+        let name = agg.topology.name();
+        let over = run_virtual(&p, &cluster.clone().with_agg(agg), &cfg);
+        assert!(over.status.is_healthy(), "{name}: {:?}", over.status);
+        assert_eq!(star.theta, over.theta, "{name}: hop costs moved θ bits");
+        let over_t = over.recorder.rows().last().unwrap().time;
+        assert!(
+            over_t > star_t,
+            "{name}: hop costs did not dilate the clock ({over_t} <= {star_t})"
+        );
+        assert!(over.agg.folds > 0, "{name}: overlay never folded");
+    }
+}
+
+#[test]
+fn lossy_interior_edges_conserve_messages_across_drivers() {
+    // Cross-driver conservation: both drivers realize the same pure edge
+    // fates, so the whole AggStats rollup — per-node lanes included —
+    // must agree, every lane must conserve (delivered + dropped == sent),
+    // and the fold must land on the same θ.
+    let m = 8;
+    let p = problem(m);
+    let net = NetSpec {
+        default_link: LinkModel {
+            drop_prob: 0.2,
+            dup_prob: 0.2,
+            dup_lag: 0.0005,
+            ..LinkModel::ideal()
+        },
+        ..NetSpec::ideal()
+    };
+    let mk_cluster = |agg: AggSpec| {
+        ClusterSpec {
+            workers: m,
+            base_compute: 0.005,
+            slow_nodes: (1..m).map(|w| (w, 1.0 + w as f64 * 0.5)).collect(),
+            seed: 21,
+            ..ClusterSpec::default()
+        }
+        .with_net(net.clone())
+        .with_agg(agg)
+    };
+    let cfg = cfg(m, 30);
+
+    for agg in [AggSpec::tree(2), AggSpec::ring()] {
+        let name = agg.topology.name();
+        let cluster = mk_cluster(agg);
+        let virt = run_virtual(&p, &cluster, &cfg);
+        let real = run_real(&p, &cluster, &cfg);
+        assert!(virt.status.is_healthy(), "{name} virtual: {:?}", virt.status);
+        assert!(real.status.is_healthy(), "{name} real: {:?}", real.status);
+
+        // Leaf roundtrips and interior edges each realize the same pure
+        // fates in both drivers.
+        assert_eq!(virt.net, real.net, "{name}: leaf accounting diverged");
+        assert_eq!(virt.agg, real.agg, "{name}: overlay accounting diverged");
+        assert_eq!(virt.agg.topology, name);
+        assert!(virt.agg.edge_sent > 0, "{name}: overlay realized no edges");
+        assert!(virt.agg.edge_dropped > 0, "{name}: lossy spec dropped no edges");
+
+        // Conservation, in total and per interior node.
+        assert_eq!(
+            virt.agg.edge_sent,
+            virt.agg.edge_delivered + virt.agg.edge_dropped,
+            "{name}: edge totals do not conserve"
+        );
+        for lane in &virt.agg.per_node {
+            assert_eq!(
+                lane.sent,
+                lane.delivered + lane.dropped,
+                "{name}: node {} lane does not conserve",
+                lane.node
+            );
+            assert!(lane.node < m, "{name}: lane for out-of-range node {}", lane.node);
+        }
+        let lane_sent: u64 = virt.agg.per_node.iter().map(|l| l.sent).sum();
+        assert_eq!(lane_sent, virt.agg.edge_sent, "{name}: lanes do not tile the total");
+
+        // An interior drop must actually kill contributions (tree) or
+        // clear segments; either way both drivers agree on the decisions
+        // and the resulting trajectory.
+        if name == "tree" {
+            assert!(virt.agg.lost_contributions > 0, "tree: drops never killed a leaf");
+            assert_eq!(
+                virt.total_abandoned, real.total_abandoned,
+                "tree: abandonment accounting diverged"
+            );
+        }
+        assert_eq!(virt.recorder.len(), real.recorder.len(), "{name}");
+        for (rv, rr) in virt.recorder.rows().iter().zip(real.recorder.rows()) {
+            assert_eq!(rv.iter, rr.iter, "{name}: row iteration mismatch");
+            assert_eq!(rv.included, rr.included, "{name} iter {}", rv.iter);
+        }
+        let diff = max_theta_diff(&virt.theta, &real.theta);
+        assert!(diff < 1e-5, "{name}: θ diverged across drivers: max diff {diff}");
+    }
+}
+
+#[test]
+fn non_hybrid_modes_reject_overlay_topologies() {
+    // The overlay is validated up front: BSP and async coordinators must
+    // refuse tree/ring rather than silently running star.
+    let m = 4;
+    let cluster = ClusterSpec { workers: m, ..ClusterSpec::default() }
+        .with_agg(AggSpec::tree(2));
+    let bsp = RunConfig { mode: SyncMode::Bsp, ..RunConfig::default() }.with_iters(4);
+    assert!(Coordinator::new(cluster.clone(), bsp).is_err(), "BSP accepted a tree overlay");
+    let asy = RunConfig { mode: SyncMode::Async { damping: 0.0 }, ..RunConfig::default() }
+        .with_iters(4);
+    assert!(Coordinator::new(cluster, asy).is_err(), "async accepted a tree overlay");
+}

@@ -36,6 +36,8 @@ KNOWN_EVENTS = {
     "barrier_close",
     "recovery_start",
     "recovery_done",
+    "agg_fold",
+    "forward",
 }
 
 
