@@ -1,0 +1,169 @@
+//! F5 (serving) — online serving under offered load: staleness and read
+//! latency vs load multiplier, and the saturation knee.
+//!
+//! The serve queue model is deterministic (docs/SERVING.md): each
+//! completed iteration closes one `window_ms` serve-clock window in
+//! which `servers` drain `window_ms` of read work each.  At the default
+//! spec (2 servers, 1 ms cold / 0.2 ms cache-hot service, Zipf-skewed
+//! keys) the read capacity is ~20 ms of service per 10 ms window, so an
+//! open-admission sweep over load multipliers crosses saturation
+//! between 2x and 3x the 1600 req/s base rate — read backlog then grows
+//! without bound and p99 blows through the 50 ms SLO.  The **knee** is
+//! the first load whose open-admission read p99 exceeds the SLO; the
+//! shed half re-runs the same loads with SLO-aware admission and shows
+//! p99 staying bounded while the shed fraction absorbs the overload.
+//!
+//! Emits `results/BENCH_f5_serving.json`; CI uploads it and gates on
+//! `saturation_knee_load` (>20% regression fails).
+
+use hybriditer::bench_harness::sweep::SweepEngine;
+use hybriditer::bench_harness::{f, Table};
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{LossForm, RunConfig, SyncMode};
+use hybriditer::data::KrrProblemSpec;
+use hybriditer::optim::OptimizerKind;
+use hybriditer::prelude::{AdmissionPolicy, Driver, Runner, ServeSpec, ServeStats};
+
+const ITERS: u64 = 300;
+const BASE_RATE: f64 = 1600.0;
+const LOADS: [f64; 8] = [0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+fn run_one(
+    problem: &hybriditer::data::KrrProblem,
+    load: f64,
+    admission: AdmissionPolicy,
+) -> ServeStats {
+    let cluster = ClusterSpec {
+        workers: 4,
+        base_compute: 0.01,
+        seed: 11,
+        ..ClusterSpec::default()
+    };
+    let cfg = RunConfig {
+        mode: SyncMode::Bsp,
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(problem.spec.lambda),
+        eval_every: 0,
+        ..RunConfig::default()
+    }
+    .with_iters(ITERS);
+    let spec = ServeSpec {
+        arrival_rate: BASE_RATE * load,
+        admission,
+        ..ServeSpec::default()
+    };
+    let mut pool = problem.native_pool();
+    let rep = Runner::new(&cluster, &cfg)
+        .driver(Driver::Virtual)
+        .pool(&mut pool)
+        .serve(spec)
+        .run()
+        .unwrap();
+    assert!(rep.status.is_healthy(), "load={load}: {:?}", rep.status);
+    rep.serve.expect("serving run must carry ServeStats")
+}
+
+fn main() {
+    let engine = SweepEngine::from_env();
+    println!(
+        "F5 serving: read p99 and staleness vs offered load \
+         (base {BASE_RATE} req/s, {ITERS} windows)"
+    );
+    println!("sweep pool: {} threads\n", engine.threads());
+    let spec = KrrProblemSpec { machines: 4, ..KrrProblemSpec::small() };
+
+    let swept = engine.run(&LOADS, |cache, &load| {
+        let problem = cache.get(&spec);
+        let open = run_one(&problem, load, AdmissionPolicy::Open);
+        let shed = run_one(&problem, load, AdmissionPolicy::Shed);
+        (open, shed)
+    });
+
+    let slo = ServeSpec::default().read_slo_ms;
+    let mut table = Table::new(
+        "F5 serving: open vs shed admission per load multiplier",
+        &["load", "offered", "open_p99_ms", "open_stale_p99", "shed_pct", "shed_p99_ms"],
+    );
+    let mut knee: Option<f64> = None;
+    let mut p99_at_knee = f64::NAN;
+    for (&load, (open, shed)) in LOADS.iter().zip(&swept) {
+        if knee.is_none() && open.read_p99_ms > slo {
+            knee = Some(load);
+            p99_at_knee = open.read_p99_ms;
+        }
+        table.row(vec![
+            f(load, 2),
+            open.offered.to_string(),
+            f(open.read_p99_ms, 2),
+            f(open.staleness_p99, 2),
+            f(100.0 * shed.shed_rate(), 1),
+            f(shed.read_p99_ms, 2),
+        ]);
+    }
+    table.print();
+
+    let (open_max, shed_max) = swept.last().expect("non-empty sweep");
+    let open_rows: Vec<String> = LOADS
+        .iter()
+        .zip(&swept)
+        .map(|(&load, (o, _))| {
+            format!(
+                "    {{\"load\": {load}, \"offered\": {}, \"admitted\": {}, \
+                 \"read_p50_ms\": {:.4}, \"read_p99_ms\": {:.4}, \"update_p99_ms\": {:.4}, \
+                 \"staleness_mean\": {:.4}, \"staleness_p99\": {:.4}, \"digest\": {}}}",
+                o.offered,
+                o.admitted,
+                o.read_p50_ms,
+                o.read_p99_ms,
+                o.update_p99_ms,
+                o.staleness_mean,
+                o.staleness_p99,
+                o.seq_digest
+            )
+        })
+        .collect();
+    let shed_rows: Vec<String> = LOADS
+        .iter()
+        .zip(&swept)
+        .map(|(&load, (_, s))| {
+            format!(
+                "    {{\"load\": {load}, \"offered\": {}, \"shed_pct\": {:.3}, \
+                 \"read_p99_ms\": {:.4}, \"staleness_p99\": {:.4}}}",
+                s.offered,
+                100.0 * s.shed_rate(),
+                s.read_p99_ms,
+                s.staleness_p99
+            )
+        })
+        .collect();
+    let knee_json = knee.map(|l| l.to_string()).unwrap_or_else(|| "null".to_string());
+    let p99_at_knee_json = if p99_at_knee.is_finite() {
+        format!("{p99_at_knee:.4}")
+    } else {
+        "null".to_string()
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"f5_serving\",\n  \"iters\": {ITERS},\n  \
+         \"base_rate\": {BASE_RATE},\n  \"read_slo_ms\": {slo},\n  \"headline\": {{\n    \
+         \"saturation_knee_load\": {knee_json},\n    \
+         \"read_p99_at_knee_ms\": {p99_at_knee_json},\n    \
+         \"staleness_p99_at_max_load\": {:.4},\n    \
+         \"shed_pct_at_max_load\": {:.3}\n  }},\n  \
+         \"open\": [\n{}\n  ],\n  \"shed\": [\n{}\n  ]\n}}\n",
+        open_max.staleness_p99,
+        100.0 * shed_max.shed_rate(),
+        open_rows.join(",\n"),
+        shed_rows.join(",\n")
+    );
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/BENCH_f5_serving.json", json).unwrap();
+    match knee {
+        Some(l) => println!(
+            "\nheadline: open-admission read p99 breaks the {slo} ms SLO at load {l} \
+             (p99 {p99_at_knee:.1} ms); shed at max load keeps p99 {:.1} ms",
+            shed_max.read_p99_ms
+        ),
+        None => println!("\nheadline: no saturation knee up to load {}", LOADS[LOADS.len() - 1]),
+    }
+    println!("trajectory point -> results/BENCH_f5_serving.json");
+}

@@ -80,7 +80,31 @@
 //! [trace]
 //! out = "run.trace.jsonl"          # flight-recorder journal (JSONL)
 //! chrome = "run.trace.chrome.json" # Chrome trace-event export (Perfetto)
+//!
+//! [serve]
+//! arrival_rate = 800.0  # offered requests per serve-clock second
+//! window_ms = 10.0      # serve-clock ms per completed iteration
+//! read_slo_ms = 50.0    # p99 SLO for theta reads
+//! update_slo_ms = 500.0 # p99 SLO for update requests
+//! admission = "shed"    # open | shed | queue
+//! queue_slack = 8.0     # "queue" sheds beyond slack x SLO
+//! servers = 2           # parallel read servers
+//! service_ms = 1.0      # base read service time
+//! hot_service_ms = 0.2  # cache-hot key service time
+//! update_frac = 0.2     # fraction of arrivals that are updates
+//! batch_size = 32       # update requests folded per iteration
+//! n_keys = 64           # Zipf key-space size
+//! hot_keys = 4          # most-popular keys served from cache
+//! zipf_s = 1.1          # Zipf exponent
+//! diurnal_amplitude = 0.0             # rate x (1 + A sin(2 pi t/period))
+//! diurnal_period_s = 60.0
+//! bursts = "4@2..3;2@10..12"          # factor@start..end, serve seconds
+//! seed = 7              # serve RNG family seed
 //! ```
+//!
+//! The `[serve]` section enables online serving mode (`docs/SERVING.md`);
+//! it only takes effect through [`crate::runner::Runner`] — the legacy
+//! entry points ignore it by construction.
 
 use crate::agg::{AggSpec, TopologyKind};
 use crate::cluster::{ClusterSpec, ElasticSchedule, TimingMode};
@@ -129,6 +153,10 @@ pub struct ExperimentConfig {
     /// (0 = auto: available parallelism).  Applied process-wide via
     /// [`crate::util::pool::set_default_threads`].
     pub bench_threads: usize,
+    /// `[serve]`: online serving mode (see `docs/SERVING.md`).  `None`
+    /// when the section is absent; only honoured when the run goes
+    /// through [`crate::runner::Runner`].
+    pub serve: Option<crate::serve::ServeSpec>,
 }
 
 impl ExperimentConfig {
@@ -366,6 +394,11 @@ impl ExperimentConfig {
             trace_out: v.get("trace.out").and_then(Value::as_str).map(String::from),
             trace_chrome: v.get("trace.chrome").and_then(Value::as_str).map(String::from),
             bench_threads: v.opt_usize("bench.threads", 0),
+            serve: if v.get("serve").is_some() {
+                Some(crate::serve::ServeSpec::from_value(v)?)
+            } else {
+                None
+            },
         })
     }
 }
@@ -506,6 +539,28 @@ backend = "native"
         assert_eq!(cfg.trace_chrome.as_deref(), Some("t.chrome.json"));
         let off = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
         assert!(off.trace_out.is_none() && off.trace_chrome.is_none());
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        use crate::serve::AdmissionPolicy;
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\nmachines = 4\n\n[serve]\narrival_rate = 1200\nadmission = \"queue\"\nbursts = \"4@2..3\"",
+        )
+        .unwrap();
+        let sv = cfg.serve.expect("serve section present");
+        assert_eq!(sv.arrival_rate, 1200.0);
+        assert_eq!(sv.admission, AdmissionPolicy::Queue);
+        assert_eq!(sv.bursts.len(), 1);
+        assert_eq!(sv.bursts[0].factor, 4.0);
+        // Unset keys fall back to the ServeSpec defaults.
+        let d = crate::serve::ServeSpec::default();
+        assert_eq!(sv.window_ms, d.window_ms);
+        assert_eq!(sv.batch_size, d.batch_size);
+        let off = ExperimentConfig::from_toml("[problem]\nmachines = 4").unwrap();
+        assert!(off.serve.is_none());
+        assert!(ExperimentConfig::from_toml("[serve]\nadmission = \"coinflip\"").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nupdate_frac = 1.5").is_err());
     }
 
     #[test]

@@ -237,6 +237,10 @@ pub struct RunReport {
     /// histograms) when the run was traced through a
     /// [`crate::trace::JournalSink`]; `None` with the default `NoopSink`.
     pub trace: Option<crate::trace::TraceSummary>,
+    /// Serving-side rollup (offered/admitted/shed, read/update latency
+    /// quantiles, θ staleness at read) when the run served traffic
+    /// through [`crate::runner::Runner::serve`]; `None` otherwise.
+    pub serve: Option<crate::serve::ServeStats>,
 }
 
 impl RunReport {
@@ -260,6 +264,41 @@ impl RunReport {
         } else {
             self.total_abandoned as f64 / total as f64
         }
+    }
+
+    // --- uniform sub-stat accessors ------------------------------------
+    //
+    // Every subsystem rollup is reachable as `Option<&T>` — `Some` iff
+    // the subsystem was actually exercised this run — so callers probe
+    // them all the same way regardless of whether the underlying field
+    // is optional (`trace`, `serve`) or always-present accounting
+    // (`net`, `agg`, recovery counters).  The raw fields stay public for
+    // the oracles that want zeros explicitly.
+
+    /// Network accounting, when any message was sent.
+    pub fn net_stats(&self) -> Option<&crate::net::NetStats> {
+        (self.net.sent > 0).then_some(&self.net)
+    }
+
+    /// Aggregation-overlay accounting, when a non-trivial overlay ran
+    /// (interior edges or folds happened).
+    pub fn agg_stats(&self) -> Option<&crate::agg::AggStats> {
+        (self.agg.edge_sent > 0 || self.agg.folds > 0).then_some(&self.agg)
+    }
+
+    /// Flight-recorder roll-up, when the run was journaled.
+    pub fn trace_summary(&self) -> Option<&crate::trace::TraceSummary> {
+        self.trace.as_ref()
+    }
+
+    /// `(recoveries, rollback_iters)`, when a recovery policy fired.
+    pub fn recovery_stats(&self) -> Option<(u64, u64)> {
+        (self.recoveries > 0).then_some((self.recoveries, self.rollback_iters))
+    }
+
+    /// Serving rollup, when the run served traffic (Runner::serve).
+    pub fn serve_stats(&self) -> Option<&crate::serve::ServeStats> {
+        self.serve.as_ref()
     }
 
     /// One-line human summary.
@@ -306,6 +345,15 @@ impl RunReport {
                 self.agg.lost_contributions
             ));
         }
+        if let Some(sv) = self.serve_stats() {
+            s.push_str(&format!(
+                " serve_offered={} shed={:.1}% read_p99={:.2}ms stale_p99={:.2}",
+                sv.offered,
+                sv.shed_rate() * 100.0,
+                sv.read_p99_ms,
+                sv.staleness_p99
+            ));
+        }
         s
     }
 }
@@ -348,6 +396,11 @@ impl Coordinator {
 
     /// Run with real worker threads; implementation lives in
     /// [`crate::worker::run_real`].
+    ///
+    /// Deprecated entry point: prefer [`crate::runner::Runner`] with
+    /// [`crate::runner::Driver::Threaded`]. This thin wrapper is kept so
+    /// existing parity/golden call sites stay byte-stable; serving mode
+    /// is only exposed through `Runner`.
     pub fn run_real(
         &self,
         factory: &dyn crate::worker::ComputeFactory,
@@ -358,6 +411,10 @@ impl Coordinator {
 
     /// [`Coordinator::run_real`] with a flight-recorder sink attached; see
     /// `docs/OBSERVABILITY.md`.
+    ///
+    /// Deprecated entry point: prefer [`crate::runner::Runner`] with
+    /// [`crate::runner::Runner::trace`] attached; see
+    /// [`Coordinator::run_real`].
     pub fn run_real_traced(
         &self,
         factory: &dyn crate::worker::ComputeFactory,
@@ -451,6 +508,7 @@ mod tests {
             rollback_iters: 0,
             driver_secs: 0.0,
             trace: None,
+            serve: None,
         };
         assert!((rep.abandon_rate() - 0.25).abs() < 1e-12);
         assert!(!rep.summary().contains("recoveries="));

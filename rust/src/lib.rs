@@ -51,7 +51,9 @@ pub mod metrics;
 pub mod net;
 pub mod optim;
 pub mod recovery;
+pub mod runner;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod straggler;
 pub mod trace;
@@ -126,7 +128,9 @@ pub mod prelude {
     pub use crate::metrics::Recorder;
     pub use crate::net::{LinkModel, NetSpec, NetStats};
     pub use crate::optim::OptimizerKind;
+    pub use crate::runner::{Driver, Runner};
     pub use crate::runtime::{ArtifactSet, Engine};
+    pub use crate::serve::{AdmissionPolicy, ServeSpec, ServeStats};
     pub use crate::sim;
     pub use crate::straggler::{DelayModel, FailureModel, StragglerProfile};
     pub use crate::util::rng::Pcg64;

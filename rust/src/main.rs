@@ -8,6 +8,7 @@
 //! Examples live in `examples/` (cargo run --example ...).
 
 use hybriditer::cli::ArgSpec;
+use hybriditer::cluster::TimingMode;
 use hybriditer::config::schema::{Backend, ExperimentConfig, ProblemKind};
 use hybriditer::coordinator::estimator::{estimate_gamma, estimate_sample_size, EstimatorParams};
 use hybriditer::data::KrrProblem;
@@ -16,7 +17,6 @@ use hybriditer::prelude::*;
 use hybriditer::runtime::{ArtifactSet, Engine};
 use hybriditer::util::logger;
 use hybriditer::worker::{NativeKrrFactory, XlaKrrFactory};
-use hybriditer::{cluster::TimingMode, sim::NoEval};
 
 fn main() {
     logger::init();
@@ -150,6 +150,21 @@ fn cmd_train(argv: &[String]) -> i32 {
             "trace-chrome",
             "",
             "write the Chrome trace-event export here (overrides config)",
+        )
+        .opt(
+            "arrival-rate",
+            "",
+            "serving offered load in requests/s; creates a [serve] section if absent",
+        )
+        .opt(
+            "slo-p99-ms",
+            "",
+            "serving read p99 SLO in milliseconds (overrides config)",
+        )
+        .opt(
+            "admission",
+            "",
+            "serving admission policy: open | shed | queue (overrides config)",
         );
     let parsed = match spec.parse(argv) {
         Ok(p) => p,
@@ -261,6 +276,24 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
         cfg.run.recovery.checkpoint_every = k as u64;
     }
     cfg.run.recovery.validate()?;
+    // Serving overrides: any --serve flag creates the [serve] section
+    // when the config omits it, so serving can be switched on from the
+    // CLI alone.  Serving only takes effect through Runner below.
+    let mut serve = cfg.serve.clone();
+    if let Some(r) = parsed.get_opt_f64("arrival-rate")? {
+        serve.get_or_insert_with(ServeSpec::default).arrival_rate = r;
+    }
+    if let Some(s) = parsed.get_opt_f64("slo-p99-ms")? {
+        serve.get_or_insert_with(ServeSpec::default).read_slo_ms = s;
+    }
+    let admission = parsed.get("admission");
+    if !admission.is_empty() {
+        serve.get_or_insert_with(ServeSpec::default).admission =
+            AdmissionPolicy::parse(admission)?;
+    }
+    if let Some(sv) = &serve {
+        sv.validate()?;
+    }
     // Pool-size resolution: --threads beats [bench] threads beats auto.
     let threads = match parsed.get_opt_usize("threads")? {
         Some(n) => n,
@@ -297,13 +330,27 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
     let sink: &mut dyn hybriditer::trace::TraceSink =
         if tracing { &mut journal } else { &mut noop };
 
+    // Every path below funnels through the unified Runner; a serve spec
+    // (config or CLI) rides along regardless of driver or backend.
+    fn with_serve<'a>(r: Runner<'a>, serve: &Option<ServeSpec>) -> Runner<'a> {
+        match serve {
+            Some(sv) => r.serve(sv.clone()),
+            None => r,
+        }
+    }
+
     let report = match (&cfg.problem_kind, cfg.timing) {
         (ProblemKind::Krr, TimingMode::Virtual) => {
             let problem = KrrProblem::generate(&cfg.krr)?;
             match cfg.backend {
                 Backend::Native => {
                     let mut pool = problem.native_pool();
-                    sim::run_virtual_traced(&mut pool, &cfg.cluster, &cfg.run, &problem, sink)?
+                    let r = Runner::new(&cfg.cluster, &cfg.run)
+                        .driver(Driver::Virtual)
+                        .pool(&mut pool)
+                        .hooks(&problem)
+                        .trace(sink);
+                    with_serve(r, &serve).run()?
                 }
                 Backend::Xla => {
                     let artifacts = ArtifactSet::discover()?;
@@ -315,17 +362,26 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
                         &problem.shards,
                         problem.spec.lambda as f32,
                     )?;
-                    sim::run_virtual_traced(&mut pool, &cfg.cluster, &cfg.run, &problem, sink)?
+                    let r = Runner::new(&cfg.cluster, &cfg.run)
+                        .driver(Driver::Virtual)
+                        .pool(&mut pool)
+                        .hooks(&problem)
+                        .trace(sink);
+                    with_serve(r, &serve).run()?
                 }
             }
         }
         (ProblemKind::Krr, TimingMode::Real) => {
             let problem = KrrProblem::generate(&cfg.krr)?;
-            let coord = Coordinator::new(cfg.cluster.clone(), cfg.run.clone())?;
             match cfg.backend {
                 Backend::Native => {
                     let factory = NativeKrrFactory::for_problem(&problem);
-                    coord.run_real_traced(&factory, &problem, sink)?
+                    let r = Runner::new(&cfg.cluster, &cfg.run)
+                        .driver(Driver::Threaded)
+                        .factory(&factory)
+                        .hooks(&problem)
+                        .trace(sink);
+                    with_serve(r, &serve).run()?
                 }
                 Backend::Xla => {
                     let artifacts = ArtifactSet::discover()?;
@@ -335,7 +391,12 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
                         problem.shards.clone(),
                         problem.spec.lambda as f32,
                     )?;
-                    coord.run_real_traced(&factory, &problem, sink)?
+                    let r = Runner::new(&cfg.cluster, &cfg.run)
+                        .driver(Driver::Threaded)
+                        .factory(&factory)
+                        .hooks(&problem)
+                        .trace(sink);
+                    with_serve(r, &serve).run()?
                 }
             }
         }
@@ -353,7 +414,11 @@ fn run_train(parsed: &hybriditer::cli::Parsed) -> hybriditer::Result<()> {
             )?;
             let mut run = cfg.run.clone();
             run.init_theta = Some(hybriditer::lm::init::init_params(pool.task(), cfg.krr.seed));
-            sim::run_virtual_traced(&mut pool, &cfg.cluster, &run, &NoEval, sink)?
+            let r = Runner::new(&cfg.cluster, &run)
+                .driver(Driver::Virtual)
+                .pool(&mut pool)
+                .trace(sink);
+            with_serve(r, &serve).run()?
         }
     };
 

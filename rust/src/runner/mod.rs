@@ -1,0 +1,320 @@
+//! The unified run entry point: one builder over both drivers.
+//!
+//! Historically each driver grew its own pair of entry points —
+//! `sim::run_virtual` / `run_virtual_traced` for virtual time and
+//! `worker::run_real` / `Coordinator::run_real_traced` for real threads.
+//! [`Runner`] collapses the four into one builder:
+//!
+//! ```no_run
+//! # use hybriditer::prelude::*;
+//! # use hybriditer::data::{KrrProblem, KrrProblemSpec};
+//! # fn demo(problem: &KrrProblem, cluster: &ClusterSpec, cfg: &RunConfig)
+//! #     -> hybriditer::Result<()> {
+//! let mut pool = problem.native_pool();
+//! let report = Runner::new(cluster, cfg)
+//!     .driver(Driver::Virtual)
+//!     .pool(&mut pool)
+//!     .hooks(problem)
+//!     .run()?;
+//! # Ok(()) }
+//! ```
+//!
+//! The old functions survive as thin wrappers (so parity/golden suites
+//! stay byte-stable), but new capabilities land here first: **online
+//! serving mode** ([`crate::serve`]) is only reachable through
+//! [`Runner::serve`] — none of the legacy signatures accept a
+//! [`ServeSpec`], which is what guarantees their behaviour cannot drift.
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::{RunConfig, RunReport};
+use crate::data::ComputePool;
+use crate::serve::ServeSpec;
+use crate::sim::EvalHooks;
+use crate::trace::{NoopSink, TraceSink};
+use crate::worker::ComputeFactory;
+use crate::{Error, Result};
+
+/// Which execution engine realizes the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Driver {
+    /// Discrete-event simulation in virtual time (`rust/src/sim/`):
+    /// needs a [`ComputePool`] via [`Runner::pool`].
+    Virtual,
+    /// Real worker threads measuring wall-clock (`rust/src/worker/`):
+    /// needs a [`ComputeFactory`] via [`Runner::factory`].
+    Threaded,
+}
+
+enum Compute<'a> {
+    Unset,
+    Pool(&'a mut dyn ComputePool),
+    Factory(&'a dyn ComputeFactory),
+}
+
+/// Builder-style configuration of a single run. See the module docs.
+pub struct Runner<'a> {
+    cluster: &'a ClusterSpec,
+    cfg: &'a RunConfig,
+    driver: Driver,
+    compute: Compute<'a>,
+    hooks: Option<&'a dyn EvalHooks>,
+    sink: Option<&'a mut dyn TraceSink>,
+    serve: Option<ServeSpec>,
+}
+
+impl<'a> Runner<'a> {
+    /// A runner for `(cluster, cfg)`, defaulting to the virtual driver,
+    /// no tracing, no eval hooks, and no serving.
+    pub fn new(cluster: &'a ClusterSpec, cfg: &'a RunConfig) -> Self {
+        Runner {
+            cluster,
+            cfg,
+            driver: Driver::Virtual,
+            compute: Compute::Unset,
+            hooks: None,
+            sink: None,
+            serve: None,
+        }
+    }
+
+    /// Select the execution engine.
+    pub fn driver(mut self, driver: Driver) -> Self {
+        self.driver = driver;
+        self
+    }
+
+    /// Attach the compute pool the virtual driver dispatches onto.
+    pub fn pool(mut self, pool: &'a mut dyn ComputePool) -> Self {
+        self.compute = Compute::Pool(pool);
+        self
+    }
+
+    /// Attach the factory the threaded driver builds per-worker compute
+    /// from.
+    pub fn factory(mut self, factory: &'a dyn ComputeFactory) -> Self {
+        self.compute = Compute::Factory(factory);
+        self
+    }
+
+    /// Attach evaluation hooks (loss/θ-error probes). Defaults to
+    /// [`crate::sim::NoEval`].
+    pub fn hooks(mut self, hooks: &'a dyn EvalHooks) -> Self {
+        self.hooks = Some(hooks);
+        self
+    }
+
+    /// Attach a flight-recorder sink ([`crate::trace`]). Defaults to
+    /// [`NoopSink`], which keeps every emission site free.
+    pub fn trace(mut self, sink: &'a mut dyn TraceSink) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Enable online serving mode ([`crate::serve`]): the run steps an
+    /// open-loop arrival process at every barrier close and publishes θ
+    /// through a [`crate::serve::ThetaCell`]; the report carries
+    /// [`crate::serve::ServeStats`]. Serving is *only* exposed here.
+    pub fn serve(mut self, spec: ServeSpec) -> Self {
+        self.serve = Some(spec);
+        self
+    }
+
+    /// Execute the run. Fails fast on a driver/compute mismatch or an
+    /// invalid [`ServeSpec`]; everything else is the wrapped driver's
+    /// own validation, unchanged.
+    pub fn run(self) -> Result<RunReport> {
+        if let Some(spec) = &self.serve {
+            spec.validate()?;
+        }
+        let hooks = self.hooks.unwrap_or(&crate::sim::NoEval);
+        let mut noop = NoopSink;
+        let sink: &mut dyn TraceSink = match self.sink {
+            Some(s) => s,
+            None => &mut noop,
+        };
+        match (self.driver, self.compute) {
+            (Driver::Virtual, Compute::Pool(pool)) => {
+                crate::sim::run_virtual_serving(
+                    pool,
+                    self.cluster,
+                    self.cfg,
+                    hooks,
+                    sink,
+                    self.serve.as_ref(),
+                )
+            }
+            (Driver::Threaded, Compute::Factory(factory)) => crate::worker::run_real_serving(
+                self.cluster,
+                self.cfg,
+                factory,
+                hooks,
+                sink,
+                self.serve.as_ref(),
+            ),
+            (Driver::Virtual, _) => Err(Error::Config(
+                "the virtual driver dispatches onto a compute pool; \
+                 attach one with Runner::pool(..)"
+                    .to_string(),
+            )),
+            (Driver::Threaded, _) => Err(Error::Config(
+                "the threaded driver builds workers from a compute factory; \
+                 attach one with Runner::factory(..)"
+                    .to_string(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SyncMode;
+    use crate::data::{KrrProblem, KrrProblemSpec};
+    use crate::optim::OptimizerKind;
+    use crate::serve::AdmissionPolicy;
+    use crate::worker::NativeKrrFactory;
+
+    fn tiny_problem(machines: usize) -> KrrProblem {
+        let spec = KrrProblemSpec {
+            config: "runner-test".into(),
+            d: 4,
+            l: 16,
+            zeta: 64,
+            machines,
+            noise: 0.05,
+            lambda: 0.01,
+            bandwidth: 1.0,
+            eval_rows: 64,
+            seed: 23,
+        };
+        KrrProblem::generate(&spec).unwrap()
+    }
+
+    fn cfg(problem: &KrrProblem, iters: u64) -> RunConfig {
+        RunConfig {
+            optimizer: OptimizerKind::sgd(1.0),
+            loss_form: crate::coordinator::LossForm::krr(problem.spec.lambda),
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+        .with_mode(SyncMode::Bsp)
+        .with_iters(iters)
+    }
+
+    #[test]
+    fn virtual_runner_matches_legacy_entry_point() {
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+        let cfg = cfg(&p, 40);
+
+        let mut pool = p.native_pool();
+        let legacy = crate::sim::run_virtual(&mut pool, &cluster, &cfg, &p).unwrap();
+
+        let mut pool = p.native_pool();
+        let built = Runner::new(&cluster, &cfg)
+            .driver(Driver::Virtual)
+            .pool(&mut pool)
+            .hooks(&p)
+            .run()
+            .unwrap();
+
+        assert_eq!(legacy.theta, built.theta);
+        assert_eq!(legacy.total_contributions, built.total_contributions);
+        assert!(built.serve.is_none());
+    }
+
+    #[test]
+    fn threaded_runner_matches_legacy_entry_point() {
+        let p = tiny_problem(2);
+        let cluster = ClusterSpec { workers: 2, ..ClusterSpec::default() };
+        let cfg = cfg(&p, 10);
+        let factory = NativeKrrFactory::for_problem(&p);
+
+        let legacy = crate::worker::run_real(&cluster, &cfg, &factory, &p).unwrap();
+        let built = Runner::new(&cluster, &cfg)
+            .driver(Driver::Threaded)
+            .factory(&factory)
+            .hooks(&p)
+            .run()
+            .unwrap();
+
+        assert_eq!(legacy.theta, built.theta);
+        assert!(built.serve.is_none());
+    }
+
+    #[test]
+    fn driver_compute_mismatch_is_rejected() {
+        let p = tiny_problem(2);
+        let cluster = ClusterSpec { workers: 2, ..ClusterSpec::default() };
+        let cfg = cfg(&p, 5);
+        let factory = NativeKrrFactory::for_problem(&p);
+        let mut pool = p.native_pool();
+
+        let err = Runner::new(&cluster, &cfg)
+            .driver(Driver::Virtual)
+            .factory(&factory)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("pool"), "{err}");
+
+        let err = Runner::new(&cluster, &cfg)
+            .driver(Driver::Threaded)
+            .pool(&mut pool)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("factory"), "{err}");
+    }
+
+    #[test]
+    fn serving_run_reports_serve_stats() {
+        let p = tiny_problem(4);
+        let cluster = ClusterSpec { workers: 4, ..ClusterSpec::default() };
+        let cfg = cfg(&p, 60);
+        let spec = crate::serve::ServeSpec {
+            arrival_rate: 2_000.0,
+            admission: AdmissionPolicy::Shed,
+            ..crate::serve::ServeSpec::default()
+        };
+
+        let mut pool = p.native_pool();
+        let rep = Runner::new(&cluster, &cfg)
+            .driver(Driver::Virtual)
+            .pool(&mut pool)
+            .hooks(&p)
+            .serve(spec)
+            .run()
+            .unwrap();
+
+        let sv = rep.serve.as_ref().expect("serving run must carry ServeStats");
+        assert_eq!(sv.windows, 60);
+        assert!(sv.offered > 0);
+        assert_eq!(sv.theta_epochs, 60);
+
+        // Serving must not perturb training: the same run without a
+        // serve spec produces bit-identical θ.
+        let mut pool = p.native_pool();
+        let plain = Runner::new(&cluster, &cfg)
+            .driver(Driver::Virtual)
+            .pool(&mut pool)
+            .hooks(&p)
+            .run()
+            .unwrap();
+        assert_eq!(plain.theta, rep.theta);
+    }
+
+    #[test]
+    fn invalid_serve_spec_fails_fast() {
+        let p = tiny_problem(2);
+        let cluster = ClusterSpec { workers: 2, ..ClusterSpec::default() };
+        let cfg = cfg(&p, 5);
+        let mut pool = p.native_pool();
+        let spec =
+            crate::serve::ServeSpec { update_frac: 2.0, ..crate::serve::ServeSpec::default() };
+        assert!(Runner::new(&cluster, &cfg)
+            .driver(Driver::Virtual)
+            .pool(&mut pool)
+            .serve(spec)
+            .run()
+            .is_err());
+    }
+}

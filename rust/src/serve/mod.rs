@@ -1,0 +1,841 @@
+//! Online serving mode: an open-loop request stream driving mini-batch
+//! updates while readers consume θ under p99 latency SLOs.
+//!
+//! Three pieces (see `docs/SERVING.md`):
+//!
+//! * an **arrival process** on the serve clock — diurnal rate curve,
+//!   hot-key Zipf skew, scripted bursts — where every arrival's fate is a
+//!   pure function of `(seed, tick)`: each window draws from a fresh
+//!   [`Pcg64`] streamed by its tick, so neither driver's RNGs are
+//!   perturbed and both realize bit-identical sequences;
+//! * an **admission controller** that sheds or queues requests per class
+//!   against the read/update p99 SLOs, over a deterministic backlog-work
+//!   queue model;
+//! * a **read path** over double-buffered θ snapshots ([`ThetaCell`]):
+//!   the training loop publishes at barrier close, readers get
+//!   epoch-tagged `Arc` views, and steady-state reads are zero-alloc
+//!   (`tests/alloc_regression.rs`).
+//!
+//! The engine is stepped once per *completed* training iteration
+//! ([`ServeEngine::on_barrier_close`]), keyed on the iteration index —
+//! never on driver time — so the virtual and threaded drivers realize the
+//! same serving history for the same `(seed, schedule)`
+//! (`tests/property_serve.rs`). Serving is only reachable through
+//! [`crate::runner::Runner`]; with no `[serve]` config every legacy entry
+//! point is bit-for-bit unchanged.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::config::value::Value;
+use crate::metrics::histogram::Histogram;
+use crate::trace::{TraceEvent, TraceSink, MASTER};
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Stream salt separating the serve clock's RNG family from every other
+/// consumer of the cluster seed.
+const SERVE_STREAM: u64 = 0x5E21;
+
+/// FNV-1a offset basis / prime for the window-sequence digest.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// What the admission controller does when a request's predicted latency
+/// would bust its class SLO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything; latencies grow without bound past saturation.
+    /// This is the policy the f5 bench uses to locate the knee.
+    Open,
+    /// Shed any request whose *predicted* latency exceeds its class SLO.
+    Shed,
+    /// Allow queueing up to `queue_slack` × the class SLO, then shed.
+    Queue,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "open" | "none" => Ok(AdmissionPolicy::Open),
+            "shed" => Ok(AdmissionPolicy::Shed),
+            "queue" => Ok(AdmissionPolicy::Queue),
+            other => Err(Error::Config(format!(
+                "unknown admission policy '{other}' (expected open|shed|queue)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "open",
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Queue => "queue",
+        }
+    }
+}
+
+/// A scripted burst: offered rate is multiplied by `factor` while the
+/// serve clock is in `[start_s, end_s)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Burst {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub factor: f64,
+}
+
+/// Full description of a serving workload. Parsed from the `[serve]`
+/// config section; only [`crate::runner::Runner`] accepts one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// Mean offered request rate (requests per serve-clock second).
+    pub arrival_rate: f64,
+    /// Serve-clock milliseconds that elapse per completed training
+    /// iteration. The serve clock is *counted*, never measured: it
+    /// advances exactly one window per barrier close in both drivers.
+    pub window_ms: f64,
+    /// p99 SLO for θ reads, milliseconds.
+    pub read_slo_ms: f64,
+    /// p99 SLO for update (training-example) requests, milliseconds.
+    pub update_slo_ms: f64,
+    pub admission: AdmissionPolicy,
+    /// `Queue` sheds beyond `queue_slack` × the class SLO.
+    pub queue_slack: f64,
+    /// Parallel read servers draining the read queue.
+    pub servers: usize,
+    /// Base read service time, milliseconds.
+    pub service_ms: f64,
+    /// Service time for cache-hot keys, milliseconds.
+    pub hot_service_ms: f64,
+    /// Fraction of arrivals that are update requests (the rest read θ).
+    pub update_frac: f64,
+    /// Update requests folded into one mini-batch per iteration.
+    pub batch_size: usize,
+    /// Key-space size for the Zipf popularity draw.
+    pub n_keys: usize,
+    /// The `hot_keys` most popular keys are served from cache.
+    pub hot_keys: usize,
+    /// Zipf exponent (popularity of rank k ∝ 1/k^s).
+    pub zipf_s: f64,
+    /// Diurnal modulation amplitude in `[0, 1)`: rate is scaled by
+    /// `1 + A·sin(2πt/period)`.
+    pub diurnal_amplitude: f64,
+    pub diurnal_period_s: f64,
+    pub bursts: Vec<Burst>,
+    /// Seed of the serve RNG family (independent of the cluster seed).
+    pub seed: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            arrival_rate: 800.0,
+            window_ms: 10.0,
+            read_slo_ms: 50.0,
+            update_slo_ms: 500.0,
+            admission: AdmissionPolicy::Shed,
+            queue_slack: 8.0,
+            servers: 2,
+            service_ms: 1.0,
+            hot_service_ms: 0.2,
+            update_frac: 0.2,
+            batch_size: 32,
+            n_keys: 64,
+            hot_keys: 4,
+            zipf_s: 1.1,
+            diurnal_amplitude: 0.0,
+            diurnal_period_s: 60.0,
+            bursts: Vec::new(),
+            seed: 7,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Parse the `[serve]` section of an experiment config. Keys default
+    /// to [`ServeSpec::default`]; `bursts` is a `;`-separated script of
+    /// `factor@start..end` entries in serve-clock seconds.
+    pub fn from_value(v: &Value) -> Result<ServeSpec> {
+        let d = ServeSpec::default();
+        let spec = ServeSpec {
+            arrival_rate: v.opt_f64("serve.arrival_rate", d.arrival_rate),
+            window_ms: v.opt_f64("serve.window_ms", d.window_ms),
+            read_slo_ms: v.opt_f64("serve.read_slo_ms", d.read_slo_ms),
+            update_slo_ms: v.opt_f64("serve.update_slo_ms", d.update_slo_ms),
+            admission: AdmissionPolicy::parse(v.opt_str("serve.admission", d.admission.name()))?,
+            queue_slack: v.opt_f64("serve.queue_slack", d.queue_slack),
+            servers: v.opt_usize("serve.servers", d.servers),
+            service_ms: v.opt_f64("serve.service_ms", d.service_ms),
+            hot_service_ms: v.opt_f64("serve.hot_service_ms", d.hot_service_ms),
+            update_frac: v.opt_f64("serve.update_frac", d.update_frac),
+            batch_size: v.opt_usize("serve.batch_size", d.batch_size),
+            n_keys: v.opt_usize("serve.n_keys", d.n_keys),
+            hot_keys: v.opt_usize("serve.hot_keys", d.hot_keys),
+            zipf_s: v.opt_f64("serve.zipf_s", d.zipf_s),
+            diurnal_amplitude: v.opt_f64("serve.diurnal_amplitude", d.diurnal_amplitude),
+            diurnal_period_s: v.opt_f64("serve.diurnal_period_s", d.diurnal_period_s),
+            bursts: parse_bursts(v.opt_str("serve.bursts", ""))?,
+            seed: v.opt_u64("serve.seed", d.seed),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Err(Error::Config(format!("[serve] {msg}")));
+        let pos = |x: f64| x.is_finite() && x > 0.0;
+        if !self.arrival_rate.is_finite() || self.arrival_rate < 0.0 {
+            return bad(format!("arrival_rate {} must be finite and >= 0", self.arrival_rate));
+        }
+        if !pos(self.window_ms) {
+            return bad(format!("window_ms {} must be > 0", self.window_ms));
+        }
+        if !pos(self.read_slo_ms) || !pos(self.update_slo_ms) {
+            return bad("read_slo_ms and update_slo_ms must be > 0".to_string());
+        }
+        if !self.queue_slack.is_finite() || self.queue_slack < 1.0 {
+            return bad(format!("queue_slack {} must be >= 1", self.queue_slack));
+        }
+        if self.servers == 0 {
+            return bad("servers must be >= 1".to_string());
+        }
+        if !pos(self.service_ms) || !pos(self.hot_service_ms) {
+            return bad("service_ms and hot_service_ms must be > 0".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.update_frac) {
+            return bad(format!("update_frac {} must be in [0, 1]", self.update_frac));
+        }
+        if self.batch_size == 0 {
+            return bad("batch_size must be >= 1".to_string());
+        }
+        if self.n_keys == 0 || self.hot_keys > self.n_keys {
+            return bad(format!(
+                "need 1 <= hot_keys ({}) <= n_keys ({})",
+                self.hot_keys, self.n_keys
+            ));
+        }
+        if !pos(self.zipf_s) {
+            return bad(format!("zipf_s {} must be > 0", self.zipf_s));
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            return bad(format!(
+                "diurnal_amplitude {} must be in [0, 1)",
+                self.diurnal_amplitude
+            ));
+        }
+        if !pos(self.diurnal_period_s) {
+            return bad(format!("diurnal_period_s {} must be > 0", self.diurnal_period_s));
+        }
+        for b in &self.bursts {
+            if b.end_s <= b.start_s || !pos(b.factor) {
+                return bad(format!(
+                    "burst {}@{}..{} needs start < end and factor > 0",
+                    b.factor, b.start_s, b.end_s
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a burst script: `;`-separated `factor@start..end` entries, e.g.
+/// `"4@2..3;2.5@10..12"`. Empty input is an empty script.
+pub fn parse_bursts(s: &str) -> Result<Vec<Burst>> {
+    let mut out = Vec::new();
+    for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+        let err = || Error::Config(format!("bad burst '{part}' (expected factor@start..end)"));
+        let (factor, span) = part.split_once('@').ok_or_else(err)?;
+        let (start, end) = span.split_once("..").ok_or_else(err)?;
+        out.push(Burst {
+            factor: factor.trim().parse().map_err(|_| err())?,
+            start_s: start.trim().parse().map_err(|_| err())?,
+            end_s: end.trim().parse().map_err(|_| err())?,
+        });
+    }
+    Ok(out)
+}
+
+/// Double-buffered θ snapshot cell: the serving read path.
+///
+/// Writers publish at barrier close into the *inactive* slot and flip;
+/// readers clone an `Arc` of the active slot under a short lock. The
+/// contract (`docs/SERVING.md`):
+///
+/// * **never torn** — a slot is rewritten in place only when
+///   `Arc::get_mut` proves no reader holds it; otherwise a fresh buffer
+///   is swapped in and the held snapshot stays intact;
+/// * **at most one epoch stale** — `read()` returns the latest published
+///   epoch; a snapshot held across a concurrent publish is exactly one
+///   epoch behind until re-read;
+/// * **zero-alloc steady state** — once readers drop their views between
+///   publishes, both `read` and `publish` touch no allocator
+///   (`tests/alloc_regression.rs`).
+pub struct ThetaCell {
+    inner: Mutex<CellInner>,
+}
+
+struct CellInner {
+    slots: [Arc<Vec<f32>>; 2],
+    active: usize,
+    epoch: u64,
+}
+
+impl ThetaCell {
+    /// A cell holding zeroed snapshots of `dim` coefficients at epoch 0.
+    pub fn new(dim: usize) -> Self {
+        ThetaCell {
+            inner: Mutex::new(CellInner {
+                slots: [Arc::new(vec![0.0; dim]), Arc::new(vec![0.0; dim])],
+                active: 0,
+                epoch: 0,
+            }),
+        }
+    }
+
+    /// Publish a new snapshot tagged `epoch`, flipping the active slot.
+    pub fn publish(&self, theta: &[f32], epoch: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let next = g.active ^ 1;
+        match Arc::get_mut(&mut g.slots[next]) {
+            Some(buf) if buf.len() == theta.len() => buf.copy_from_slice(theta),
+            _ => g.slots[next] = Arc::new(theta.to_vec()),
+        }
+        g.active = next;
+        g.epoch = epoch;
+    }
+
+    /// The latest published snapshot and its epoch tag. The returned
+    /// `Arc` keeps the snapshot alive and immutable for as long as the
+    /// reader holds it.
+    pub fn read(&self) -> (u64, Arc<Vec<f32>>) {
+        let g = self.inner.lock().unwrap();
+        (g.epoch, Arc::clone(&g.slots[g.active]))
+    }
+
+    /// The latest published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+}
+
+/// Serving-side rollup carried in [`crate::coordinator::RunReport`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Serve windows stepped (= completed training iterations).
+    pub windows: u64,
+    /// Total arrivals offered by the open-loop process.
+    pub offered: u64,
+    /// Read requests admitted and served.
+    pub admitted: u64,
+    /// Requests shed by admission control (both classes).
+    pub shed: u64,
+    /// Update requests admitted into the batch queue.
+    pub update_requests: u64,
+    /// Mini-batches folded into training iterations.
+    pub batches: u64,
+    /// Update requests consumed by those batches.
+    pub batched_updates: u64,
+    /// Update requests still queued when the run ended.
+    pub queue_final: u64,
+    pub read_p50_ms: f64,
+    pub read_p99_ms: f64,
+    pub update_p50_ms: f64,
+    pub update_p99_ms: f64,
+    /// θ staleness observed by admitted reads, in iteration-windows:
+    /// epoch lag of the snapshot plus the unfolded update backlog.
+    pub staleness_mean: f64,
+    pub staleness_p99: f64,
+    /// Snapshots published through the [`ThetaCell`].
+    pub theta_epochs: u64,
+    /// FNV-1a digest of the per-window `(offered, admitted, shed,
+    /// enqueued, drained)` sequence — the cross-driver bit-identity
+    /// witness used by `tests/property_serve.rs`.
+    pub seq_digest: u64,
+}
+
+impl ServeStats {
+    /// Fraction of offered arrivals shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+}
+
+/// The serving engine: arrival process + admission controller + queue
+/// model + [`ThetaCell`] publisher, stepped once per completed training
+/// iteration by whichever driver owns the run.
+pub struct ServeEngine {
+    spec: ServeSpec,
+    /// Cumulative Zipf popularity over key ranks (last entry 1.0).
+    zipf_cdf: Vec<f64>,
+    cell: ThetaCell,
+    tick: u64,
+    /// Outstanding read work across all servers, serve-milliseconds.
+    read_backlog_ms: f64,
+    /// Queued update requests as `(arrival_tick, count)` runs.
+    update_queue: VecDeque<(u64, u64)>,
+    queued_updates: u64,
+    read_hist: Histogram,
+    update_hist: Histogram,
+    stale_hist: Histogram,
+    stale_sum: f64,
+    stale_n: u64,
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    update_requests: u64,
+    batches: u64,
+    batched_updates: u64,
+    digest: u64,
+}
+
+impl ServeEngine {
+    pub fn new(spec: &ServeSpec) -> Self {
+        let mut zipf_cdf = Vec::with_capacity(spec.n_keys);
+        let mut acc = 0.0;
+        for k in 1..=spec.n_keys {
+            acc += 1.0 / (k as f64).powf(spec.zipf_s);
+            zipf_cdf.push(acc);
+        }
+        let total = acc;
+        for w in &mut zipf_cdf {
+            *w /= total;
+        }
+        ServeEngine {
+            spec: spec.clone(),
+            zipf_cdf,
+            cell: ThetaCell::new(0),
+            tick: 0,
+            read_backlog_ms: 0.0,
+            update_queue: VecDeque::new(),
+            queued_updates: 0,
+            read_hist: Histogram::new(1e-2, 1e7, 200),
+            update_hist: Histogram::new(1e-2, 1e7, 200),
+            stale_hist: Histogram::new(1e-3, 1e5, 160),
+            stale_sum: 0.0,
+            stale_n: 0,
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            update_requests: 0,
+            batches: 0,
+            batched_updates: 0,
+            digest: FNV_OFFSET,
+        }
+    }
+
+    /// The serving read path, exposed for tests and embedders.
+    pub fn cell(&self) -> &ThetaCell {
+        &self.cell
+    }
+
+    /// Offered rate at serve-clock second `t`: diurnal sinusoid times
+    /// any active scripted burst.
+    fn rate_at(&self, t_s: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t_s / self.spec.diurnal_period_s;
+        let mut rate = self.spec.arrival_rate * (1.0 + self.spec.diurnal_amplitude * phase.sin());
+        for b in &self.spec.bursts {
+            if t_s >= b.start_s && t_s < b.end_s {
+                rate *= b.factor;
+            }
+        }
+        rate.max(0.0)
+    }
+
+    /// Zipf key rank in `0..n_keys` (rank 0 most popular).
+    fn draw_key(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        self.zipf_cdf.partition_point(|&c| c < u)
+    }
+
+    fn mix(&mut self, x: u64) {
+        self.digest = (self.digest ^ x).wrapping_mul(FNV_PRIME);
+    }
+
+    /// Step one serve window at the close of training iteration `iter`.
+    ///
+    /// Everything in here is keyed on `(spec.seed, tick)` and the
+    /// iteration index; `now` is the driver clock and is used **only**
+    /// for trace timestamps, so the realized sequence is identical in
+    /// virtual and wall time. Burned windows (no barrier close) never
+    /// step the engine — the serve clock advances with *completed*
+    /// iterations, which is what makes the sequence comparable across
+    /// drivers.
+    pub fn on_barrier_close(
+        &mut self,
+        iter: u64,
+        theta: &[f32],
+        sink: &mut dyn TraceSink,
+        now: f64,
+    ) {
+        let tick = self.tick;
+        self.tick += 1;
+        let spec = &self.spec;
+        let window_s = spec.window_ms / 1000.0;
+        let servers = spec.servers as f64;
+
+        // One window of read service capacity drains first.
+        self.read_backlog_ms = (self.read_backlog_ms - spec.window_ms * servers).max(0.0);
+
+        // Every fate this window is pure in (seed, tick): a fresh RNG
+        // streamed by the tick, no shared state consumed.
+        let mut rng = Pcg64::new(spec.seed ^ SERVE_STREAM, tick);
+        let lambda = self.rate_at(tick as f64 * window_s) * window_s;
+        let n = poisson(&mut rng, lambda);
+
+        let mut w_admitted = 0u64;
+        let mut w_shed = 0u64;
+        let mut w_enqueued = 0u64;
+        for _ in 0..n {
+            let is_update = rng.next_f64() < spec.update_frac;
+            let key = self.draw_key(&mut rng);
+            if is_update {
+                // Predicted wait: backlog windows ahead of this request,
+                // plus the window that folds it.
+                let predicted =
+                    (self.queued_updates as f64 / spec.batch_size as f64 + 1.0) * spec.window_ms;
+                if admit(spec.admission, predicted, spec.update_slo_ms, spec.queue_slack) {
+                    match self.update_queue.back_mut() {
+                        Some((t, c)) if *t == tick => *c += 1,
+                        _ => self.update_queue.push_back((tick, 1)),
+                    }
+                    self.queued_updates += 1;
+                    w_enqueued += 1;
+                } else {
+                    w_shed += 1;
+                }
+            } else {
+                let service = if key < spec.hot_keys {
+                    spec.hot_service_ms
+                } else {
+                    spec.service_ms
+                };
+                let predicted = self.read_backlog_ms / servers + service;
+                if admit(spec.admission, predicted, spec.read_slo_ms, spec.queue_slack) {
+                    // The actual read path: an epoch-tagged snapshot view.
+                    let (epoch, snap) = self.cell.read();
+                    debug_assert!(tick == 0 || !snap.is_empty());
+                    drop(snap);
+                    let lag = iter.saturating_sub(epoch) as f64;
+                    let stale = lag + self.queued_updates as f64 / spec.batch_size as f64;
+                    self.stale_hist.record(stale);
+                    self.stale_sum += stale;
+                    self.stale_n += 1;
+                    self.read_hist.record(predicted);
+                    self.read_backlog_ms += service;
+                    w_admitted += 1;
+                } else {
+                    w_shed += 1;
+                }
+            }
+        }
+
+        // One mini-batch of queued update requests folds per iteration.
+        let mut drained = 0u64;
+        while drained < spec.batch_size as u64 {
+            let Some((arrived, count)) = self.update_queue.front_mut() else {
+                break;
+            };
+            let take = (*count).min(spec.batch_size as u64 - drained);
+            let wait_ms = (tick - *arrived + 1) as f64 * spec.window_ms;
+            for _ in 0..take {
+                self.update_hist.record(wait_ms);
+            }
+            *count -= take;
+            drained += take;
+            if *count == 0 {
+                self.update_queue.pop_front();
+            }
+        }
+        self.queued_updates -= drained;
+        if drained > 0 {
+            self.batches += 1;
+            self.batched_updates += drained;
+        }
+
+        self.offered += n;
+        self.admitted += w_admitted;
+        self.shed += w_shed;
+        self.update_requests += w_enqueued;
+
+        // θ published after the window's reads: readers of window t see
+        // the epoch closed at t-1, exactly one barrier behind.
+        self.cell.publish(theta, iter + 1);
+
+        self.mix(tick);
+        self.mix(n);
+        self.mix(w_admitted);
+        self.mix(w_shed);
+        self.mix(w_enqueued);
+        self.mix(drained);
+
+        if sink.enabled() {
+            sink.emit(
+                iter,
+                MASTER,
+                now,
+                TraceEvent::ServeWindow {
+                    offered: n,
+                    admitted: w_admitted,
+                    shed: w_shed,
+                    queue: self.queued_updates,
+                },
+            );
+            sink.emit(iter, MASTER, now, TraceEvent::ThetaPublish { epoch: iter + 1 });
+        }
+    }
+
+    /// Fold the engine into its report rollup.
+    pub fn finish(self) -> ServeStats {
+        let q = |h: &Histogram, p: f64| if h.count() == 0 { 0.0 } else { h.quantile(p) };
+        ServeStats {
+            windows: self.tick,
+            offered: self.offered,
+            admitted: self.admitted,
+            shed: self.shed,
+            update_requests: self.update_requests,
+            batches: self.batches,
+            batched_updates: self.batched_updates,
+            queue_final: self.queued_updates,
+            read_p50_ms: q(&self.read_hist, 0.5),
+            read_p99_ms: q(&self.read_hist, 0.99),
+            update_p50_ms: q(&self.update_hist, 0.5),
+            update_p99_ms: q(&self.update_hist, 0.99),
+            staleness_mean: if self.stale_n == 0 {
+                0.0
+            } else {
+                self.stale_sum / self.stale_n as f64
+            },
+            staleness_p99: q(&self.stale_hist, 0.99),
+            theta_epochs: self.tick,
+            seq_digest: self.digest,
+        }
+    }
+}
+
+fn admit(policy: AdmissionPolicy, predicted_ms: f64, slo_ms: f64, slack: f64) -> bool {
+    match policy {
+        AdmissionPolicy::Open => true,
+        AdmissionPolicy::Shed => predicted_ms <= slo_ms,
+        AdmissionPolicy::Queue => predicted_ms <= slo_ms * slack,
+    }
+}
+
+/// Deterministic Poisson draw: Knuth inversion for small λ, a rounded
+/// normal approximation past it (both consume `rng` deterministically).
+fn poisson(rng: &mut Pcg64, lambda: f64) -> u64 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda < 64.0 {
+        let limit = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    let draw = lambda + lambda.sqrt() * rng.normal();
+    draw.round().max(0.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NoopSink;
+
+    fn step_all(mut engine: ServeEngine, iters: u64, dim: usize) -> ServeStats {
+        let theta = vec![0.5f32; dim];
+        let mut sink = NoopSink;
+        for iter in 0..iters {
+            engine.on_barrier_close(iter, &theta, &mut sink, iter as f64);
+        }
+        engine.finish()
+    }
+
+    #[test]
+    fn default_spec_validates() {
+        ServeSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let d = ServeSpec::default();
+        let bad = [
+            ServeSpec { update_frac: 1.5, ..d.clone() },
+            ServeSpec { hot_keys: d.n_keys + 1, ..d.clone() },
+            ServeSpec { queue_slack: 0.5, ..d.clone() },
+            ServeSpec { window_ms: 0.0, ..d.clone() },
+            ServeSpec { bursts: vec![Burst { start_s: 3.0, end_s: 2.0, factor: 2.0 }], ..d },
+        ];
+        for spec in bad {
+            assert!(spec.validate().is_err(), "{spec:?} should fail validation");
+        }
+    }
+
+    #[test]
+    fn admission_parse_roundtrip() {
+        for p in [AdmissionPolicy::Open, AdmissionPolicy::Shed, AdmissionPolicy::Queue] {
+            assert_eq!(AdmissionPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(AdmissionPolicy::parse("none").unwrap(), AdmissionPolicy::Open);
+        assert!(AdmissionPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn burst_script_parses() {
+        let bs = parse_bursts("4@2..3; 2.5@10..12.5").unwrap();
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0], Burst { start_s: 2.0, end_s: 3.0, factor: 4.0 });
+        assert_eq!(bs[1], Burst { start_s: 10.0, end_s: 12.5, factor: 2.5 });
+        assert!(parse_bursts("").unwrap().is_empty());
+        assert!(parse_bursts("x@1..2").is_err());
+        assert!(parse_bursts("2@1").is_err());
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_normalized() {
+        let engine = ServeEngine::new(&ServeSpec::default());
+        let cdf = &engine.zipf_cdf;
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        assert!((cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        // Rank 0 is the most popular single key.
+        assert!(cdf[0] > 1.0 / cdf.len() as f64);
+    }
+
+    #[test]
+    fn sequence_is_pure_in_seed_and_tick() {
+        let spec = ServeSpec {
+            diurnal_amplitude: 0.4,
+            bursts: parse_bursts("3@0.1..0.2").unwrap(),
+            ..ServeSpec::default()
+        };
+        let mut a = ServeEngine::new(&spec);
+        let mut b = ServeEngine::new(&spec);
+        let sa = step_all(a, 50, 8);
+        let sb = step_all(b, 50, 8);
+        assert_eq!(sa, sb);
+        assert!(sa.offered > 0);
+
+        let mut c = ServeEngine::new(&ServeSpec { seed: 8, ..spec });
+        let sc = step_all(c, 50, 8);
+        assert_ne!(sa.seq_digest, sc.seq_digest);
+    }
+
+    #[test]
+    fn burst_raises_offered_load() {
+        let quiet = ServeSpec { admission: AdmissionPolicy::Open, ..ServeSpec::default() };
+        let bursty = ServeSpec {
+            bursts: parse_bursts("5@0..1000").unwrap(),
+            ..quiet.clone()
+        };
+        let so = step_all(ServeEngine::new(&quiet), 40, 4);
+        let sb = step_all(ServeEngine::new(&bursty), 40, 4);
+        assert!(sb.offered > so.offered * 3);
+    }
+
+    #[test]
+    fn shed_policy_keeps_read_p99_at_slo() {
+        // 10× overload: open admission busts the SLO, shed holds it.
+        let open = ServeSpec {
+            arrival_rate: 20_000.0,
+            admission: AdmissionPolicy::Open,
+            ..ServeSpec::default()
+        };
+        let shed = ServeSpec { admission: AdmissionPolicy::Shed, ..open.clone() };
+        let so = step_all(ServeEngine::new(&open), 60, 4);
+        let ss = step_all(ServeEngine::new(&shed), 60, 4);
+        assert!(so.read_p99_ms > open.read_slo_ms);
+        // Quantile reports a log-bucket upper edge; allow one bucket.
+        assert!(ss.read_p99_ms <= shed.read_slo_ms * 1.2);
+        assert!(ss.shed > 0);
+        assert_eq!(so.shed, 0);
+    }
+
+    #[test]
+    fn updates_batch_and_drain_fifo() {
+        let spec = ServeSpec {
+            arrival_rate: 3_000.0,
+            update_frac: 1.0,
+            admission: AdmissionPolicy::Open,
+            ..ServeSpec::default()
+        };
+        let stats = step_all(ServeEngine::new(&spec), 30, 4);
+        assert!(stats.update_requests > 0);
+        assert_eq!(stats.batched_updates + stats.queue_final, stats.update_requests);
+        // ~30 arrivals/window vs batch_size 32: some windows still drain
+        // a full batch, and queue growth shows up as update latency.
+        assert!(stats.batches > 0);
+        assert!(stats.update_p99_ms >= spec.window_ms);
+    }
+
+    #[test]
+    fn staleness_grows_with_update_backlog() {
+        let light = ServeSpec {
+            arrival_rate: 400.0,
+            admission: AdmissionPolicy::Open,
+            ..ServeSpec::default()
+        };
+        let heavy = ServeSpec { arrival_rate: 40_000.0, ..light.clone() };
+        let sl = step_all(ServeEngine::new(&light), 60, 4);
+        let sh = step_all(ServeEngine::new(&heavy), 60, 4);
+        assert!(sh.staleness_p99 > sl.staleness_p99);
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_sane() {
+        let mut a = Pcg64::new(1, 2);
+        let mut b = Pcg64::new(1, 2);
+        for lambda in [0.0, 0.5, 5.0, 200.0] {
+            assert_eq!(poisson(&mut a, lambda), poisson(&mut b, lambda));
+        }
+        let mut r = Pcg64::new(3, 4);
+        let mean = (0..2000).map(|_| poisson(&mut r, 20.0) as f64).sum::<f64>() / 2000.0;
+        assert!((mean - 20.0).abs() < 1.0, "poisson mean {mean}");
+        let mut r = Pcg64::new(5, 6);
+        let mean = (0..2000).map(|_| poisson(&mut r, 500.0) as f64).sum::<f64>() / 2000.0;
+        assert!((mean - 500.0).abs() < 5.0, "normal-approx mean {mean}");
+    }
+
+    #[test]
+    fn theta_cell_publish_read_roundtrip() {
+        let cell = ThetaCell::new(3);
+        let (e0, s0) = cell.read();
+        assert_eq!(e0, 0);
+        assert_eq!(s0.as_slice(), &[0.0, 0.0, 0.0]);
+        cell.publish(&[1.0, 2.0, 3.0], 1);
+        let (e1, s1) = cell.read();
+        assert_eq!(e1, 1);
+        assert_eq!(s1.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn theta_cell_held_snapshot_survives_two_publishes() {
+        let cell = ThetaCell::new(2);
+        cell.publish(&[1.0, 1.0], 1);
+        let (e, held) = cell.read();
+        assert_eq!(e, 1);
+        // Two publishes cycle back onto the held slot; the reader's view
+        // must stay intact (the writer swaps in a fresh buffer instead).
+        cell.publish(&[2.0, 2.0], 2);
+        cell.publish(&[3.0, 3.0], 3);
+        assert_eq!(held.as_slice(), &[1.0, 1.0]);
+        let (e3, s3) = cell.read();
+        assert_eq!(e3, 3);
+        assert_eq!(s3.as_slice(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn serve_stats_shed_rate() {
+        let stats = ServeStats { offered: 200, shed: 50, ..ServeStats::default() };
+        assert!((stats.shed_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(ServeStats::default().shed_rate(), 0.0);
+    }
+}

@@ -155,6 +155,7 @@ pub(super) fn run_async(
     hooks: &dyn EvalHooks,
     driver_start: std::time::Instant,
     sink: &mut dyn TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let damping = match cfg.mode {
         SyncMode::Async { damping } => damping,
@@ -162,6 +163,11 @@ pub(super) fn run_async(
     };
     let m = pool.n_workers();
     let dim = pool.dim();
+    // Serving engine (None without a [serve] config).  Async has no
+    // barrier, so the serve clock advances every m-th applied update —
+    // the update-count equivalent of a sync iteration, the same keying
+    // the elastic boundaries use (docs/SERVING.md).
+    let mut serving = serve.map(crate::serve::ServeEngine::new);
     let profiles = cluster.profiles();
 
     let mut theta = cfg.init_theta.clone().unwrap_or_else(|| vec![0.0f32; dim]);
@@ -408,6 +414,11 @@ pub(super) fn run_async(
         opt.step(&mut theta, &scaled, updates);
         version += 1;
         updates += 1;
+        if updates % m as u64 == 0 {
+            if let Some(sv) = serving.as_mut() {
+                sv.on_barrier_close(updates / m as u64 - 1, &theta, sink, now);
+            }
+        }
 
         // Hand the worker fresh parameters; schedule its next arrival over
         // its *current* assignment.
@@ -491,5 +502,6 @@ pub(super) fn run_async(
         0,
         driver_start,
         sink.summary(),
+        serving.map(crate::serve::ServeEngine::finish),
     ))
 }

@@ -104,13 +104,18 @@ impl EvalHooks for crate::data::KrrProblem {
 /// Tracing is disabled ([`crate::trace::NoopSink`]): every emission site is
 /// guarded behind `sink.enabled()`, so this path allocates nothing for
 /// observability and θ is bit-identical to pre-tracer builds.
+///
+/// Deprecated entry point: prefer [`crate::runner::Runner`] with
+/// [`crate::runner::Driver::Virtual`]. This thin wrapper is kept so the
+/// parity/golden suites stay byte-stable; it can never serve traffic
+/// (serving mode is only exposed through `Runner`).
 pub fn run_virtual(
     pool: &mut dyn ComputePool,
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     hooks: &dyn EvalHooks,
 ) -> Result<RunReport> {
-    run_virtual_traced(pool, cluster, cfg, hooks, &mut crate::trace::NoopSink)
+    run_virtual_serving(pool, cluster, cfg, hooks, &mut crate::trace::NoopSink, None)
 }
 
 /// Run a full experiment in virtual time, recording structured trace events
@@ -120,12 +125,31 @@ pub fn run_virtual(
 /// runs on — so a [`crate::trace::JournalSink`] journal from this driver can
 /// be compared against the threaded runtime's after timestamp normalization
 /// (`tests/parity_drivers.rs` does exactly that).
+///
+/// Deprecated entry point: prefer [`crate::runner::Runner`] with
+/// [`crate::runner::Runner::trace`] attached; see [`run_virtual`].
 pub fn run_virtual_traced(
     pool: &mut dyn ComputePool,
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     hooks: &dyn EvalHooks,
     sink: &mut dyn crate::trace::TraceSink,
+) -> Result<RunReport> {
+    run_virtual_serving(pool, cluster, cfg, hooks, sink, None)
+}
+
+/// The one real virtual entry point: [`run_virtual_traced`] plus an
+/// optional serving workload ([`crate::serve`]), reachable only through
+/// [`crate::runner::Runner`]. `serve = None` is bit-for-bit the legacy
+/// behaviour — the spec is threaded as an `Option` end to end, so no
+/// serving code runs, allocates, or draws randomness without one.
+pub(crate) fn run_virtual_serving(
+    pool: &mut dyn ComputePool,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    hooks: &dyn EvalHooks,
+    sink: &mut dyn crate::trace::TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let driver_start = std::time::Instant::now();
     let m = pool.n_workers();
@@ -145,9 +169,9 @@ pub fn run_virtual_traced(
                 cfg.recovery.policy.name()
             )));
         }
-        return async_mode::run_async(pool, cluster, cfg, hooks, driver_start, sink);
+        return async_mode::run_async(pool, cluster, cfg, hooks, driver_start, sink, serve);
     }
-    sync::run_sync(pool, cluster, cfg, hooks, driver_start, sink)
+    sync::run_sync(pool, cluster, cfg, hooks, driver_start, sink, serve)
 }
 
 #[cfg(test)]

@@ -30,6 +30,7 @@ pub(crate) fn assemble(
     rollback_iters: u64,
     driver_start: std::time::Instant,
     trace: Option<crate::trace::TraceSummary>,
+    serve: Option<crate::serve::ServeStats>,
 ) -> RunReport {
     RunReport {
         recorder,
@@ -51,5 +52,6 @@ pub(crate) fn assemble(
         rollback_iters,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace,
+        serve,
     }
 }

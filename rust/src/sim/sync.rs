@@ -192,9 +192,14 @@ pub(super) fn run_sync(
     hooks: &dyn EvalHooks,
     driver_start: std::time::Instant,
     sink: &mut dyn TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let m = pool.n_workers();
     let dim = pool.dim();
+    // Serving engine (None without a [serve] config): stepped once per
+    // completed iteration at barrier close, keyed on the iteration index
+    // — burned windows never advance the serve clock (docs/SERVING.md).
+    let mut serving = serve.map(crate::serve::ServeEngine::new);
     let profiles = cluster.profiles();
     let n_total: usize = (0..m).map(|w| pool.shard_examples(w)).sum();
     let zeta = pool.shard_examples(0);
@@ -973,6 +978,9 @@ pub(super) fn run_sync(
         }
         opt.step(&mut theta, &agg, iter);
         now += iter_latency + cluster.master_overhead;
+        if let Some(sv) = serving.as_mut() {
+            sv.on_barrier_close(iter, &theta, sink, now);
+        }
 
         // --- 5. record / evaluate / stop --------------------------------
         let do_eval = cfg.eval_every > 0 && iter % cfg.eval_every == 0;
@@ -1030,5 +1038,6 @@ pub(super) fn run_sync(
         recovery.rollback_iters,
         driver_start,
         sink.summary(),
+        serving.map(crate::serve::ServeEngine::finish),
     ))
 }

@@ -84,6 +84,16 @@ pub enum TraceEvent {
     /// `to` (a worker index, or [`MASTER`]); `delivered` is the pure
     /// edge-fate of that hop.
     Forward { to: i64, delivered: bool },
+    /// One serving window closed at a barrier ([`crate::serve`]): the
+    /// open-loop process offered `offered` arrivals, `admitted` reads
+    /// were served, `shed` requests were rejected by admission control,
+    /// and `queue` update requests remain batched but unfolded.  Pure in
+    /// `(serve seed, tick)`, so it joins the cross-driver fate oracles.
+    ServeWindow { offered: u64, admitted: u64, shed: u64, queue: u64 },
+    /// A new θ snapshot was published to the serving read path
+    /// ([`crate::serve::ThetaCell`]); `epoch` tags the snapshot readers
+    /// observe from here on.
+    ThetaPublish { epoch: u64 },
 }
 
 /// One emitted event with its full stamp.
@@ -476,6 +486,8 @@ fn event_name(ev: &TraceEvent) -> &'static str {
         TraceEvent::RecoveryDone { .. } => "recovery_done",
         TraceEvent::AggFold { .. } => "agg_fold",
         TraceEvent::Forward { .. } => "forward",
+        TraceEvent::ServeWindow { .. } => "serve_window",
+        TraceEvent::ThetaPublish { .. } => "theta_publish",
     }
 }
 
@@ -524,15 +536,28 @@ fn event_fields(ev: &TraceEvent, out: &mut String) {
         TraceEvent::Forward { to, delivered } => {
             let _ = write!(out, ",\"to\":{to},\"delivered\":{delivered}");
         }
+        TraceEvent::ServeWindow { offered, admitted, shed, queue } => {
+            let _ = write!(out, ",\"offered\":{offered},\"admitted\":{admitted}");
+            let _ = write!(out, ",\"shed\":{shed},\"queue\":{queue}");
+        }
+        TraceEvent::ThetaPublish { epoch } => {
+            let _ = write!(out, ",\"epoch\":{epoch}");
+        }
         _ => {}
     }
 }
 
 fn is_fate(ev: &TraceEvent) -> bool {
-    use TraceEvent::{AggFold, BlockFate, Dispatch, Drop, Duplicate, Forward};
+    use TraceEvent::{AggFold, BlockFate, Dispatch, Drop, Duplicate, Forward, ServeWindow};
     matches!(
         ev,
-        Dispatch | Drop { .. } | Duplicate | BlockFate { .. } | AggFold { .. } | Forward { .. }
+        Dispatch
+            | Drop { .. }
+            | Duplicate
+            | BlockFate { .. }
+            | AggFold { .. }
+            | Forward { .. }
+            | ServeWindow { .. }
     )
 }
 

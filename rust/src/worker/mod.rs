@@ -191,13 +191,18 @@ fn apply_master_event(
 ///
 /// Tracing is disabled ([`crate::trace::NoopSink`]); use [`run_real_traced`]
 /// to attach a flight recorder.
+///
+/// Deprecated entry point: prefer [`crate::runner::Runner`] with
+/// [`crate::runner::Driver::Threaded`]. This thin wrapper is kept so the
+/// parity/golden suites stay byte-stable; it can never serve traffic
+/// (serving mode is only exposed through `Runner`).
 pub fn run_real(
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
 ) -> Result<RunReport> {
-    run_real_traced(cluster, cfg, factory, hooks, &mut crate::trace::NoopSink)
+    run_real_serving(cluster, cfg, factory, hooks, &mut crate::trace::NoopSink, None)
 }
 
 /// [`run_real`] with a flight-recorder sink attached (see [`crate::trace`]).
@@ -205,12 +210,31 @@ pub fn run_real(
 /// Event timestamps are wall-clock seconds since driver start; the
 /// trace-parity oracles in `tests/parity_drivers.rs` compare this driver's
 /// journal against the virtual driver's after timestamp normalization.
+///
+/// Deprecated entry point: prefer [`crate::runner::Runner`] with
+/// [`crate::runner::Runner::trace`] attached; see [`run_real`].
 pub fn run_real_traced(
     cluster: &ClusterSpec,
     cfg: &RunConfig,
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
     sink: &mut dyn TraceSink,
+) -> Result<RunReport> {
+    run_real_serving(cluster, cfg, factory, hooks, sink, None)
+}
+
+/// The one real threaded entry point: [`run_real_traced`] plus an optional
+/// serving workload ([`crate::serve`]), reachable only through
+/// [`crate::runner::Runner`]. `serve = None` is bit-for-bit the legacy
+/// behaviour — the spec rides as an `Option` end to end, so no serving
+/// code runs, allocates, or draws randomness without one.
+pub(crate) fn run_real_serving(
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    factory: &dyn ComputeFactory,
+    hooks: &dyn EvalHooks,
+    sink: &mut dyn TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let m = factory.workers();
     if m != cluster.workers {
@@ -229,9 +253,9 @@ pub fn run_real_traced(
                 cfg.recovery.policy.name()
             )));
         }
-        return run_real_async(cluster, cfg, factory, hooks, sink);
+        return run_real_async(cluster, cfg, factory, hooks, sink, serve);
     }
-    run_real_sync(cluster, cfg, factory, hooks, sink)
+    run_real_sync(cluster, cfg, factory, hooks, sink, serve)
 }
 
 fn run_real_sync(
@@ -240,10 +264,16 @@ fn run_real_sync(
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
     sink: &mut dyn TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let driver_start = Instant::now();
     let m = factory.workers();
     let dim = factory.dim();
+    // Serving engine (None without a [serve] config): stepped at barrier
+    // close keyed on the iteration index — never wall-clock — so the
+    // realized arrival/shed/batch sequence is bit-identical to the
+    // virtual driver's for the same `(seed, schedule)` (docs/SERVING.md).
+    let mut serving = serve.map(crate::serve::ServeEngine::new);
     let n_total: usize = (0..m).map(|w| factory.shard_examples(w)).sum();
     let zeta = factory.shard_examples(0);
     let gamma = cfg.mode.initial_gamma(n_total, zeta, m)?;
@@ -957,6 +987,9 @@ fn run_real_sync(
 
             opt.step(&mut theta, &agg, iter);
             let now = driver_start.elapsed().as_secs_f64();
+            if let Some(sv) = serving.as_mut() {
+                sv.on_barrier_close(iter, &theta, sink, now);
+            }
 
             let do_eval = cfg.eval_every > 0 && iter % cfg.eval_every == 0;
             let stop = tracker.observe(iter, loss, grad_norm);
@@ -1023,6 +1056,7 @@ fn run_real_sync(
         rollback_iters: recovery.rollback_iters,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace: sink.summary(),
+        serve: serving.map(crate::serve::ServeEngine::finish),
     })
 }
 
@@ -1087,10 +1121,16 @@ fn run_real_async(
     factory: &dyn ComputeFactory,
     hooks: &dyn EvalHooks,
     sink: &mut dyn TraceSink,
+    serve: Option<&crate::serve::ServeSpec>,
 ) -> Result<RunReport> {
     let driver_start = Instant::now();
     let m = factory.workers();
     let dim = factory.dim();
+    // Serving engine (None without a [serve] config): the serve clock
+    // advances every m-th applied update, the same update-count keying
+    // the virtual async policy uses, so both drivers realize one serving
+    // history for the same `(seed, schedule)` (docs/SERVING.md).
+    let mut serving = serve.map(crate::serve::ServeEngine::new);
     let damping = match cfg.mode {
         SyncMode::Async { damping } => damping,
         _ => unreachable!(),
@@ -1468,6 +1508,12 @@ fn run_real_async(
                     opt.step(&mut theta, &scaled, updates);
                     version += 1;
                     updates += 1;
+                    if updates % m as u64 == 0 {
+                        if let Some(sv) = serving.as_mut() {
+                            let now = driver_start.elapsed().as_secs_f64();
+                            sv.on_barrier_close(updates / m as u64 - 1, &theta, sink, now);
+                        }
+                    }
                     version_given[worker] = version;
                     // Recycle the reply's payload buffers with the next Work.
                     let recycle: Vec<Vec<f32>> =
@@ -1583,5 +1629,6 @@ fn run_real_async(
         rollback_iters: 0,
         driver_secs: driver_start.elapsed().as_secs_f64(),
         trace: sink.summary(),
+        serve: serving.map(crate::serve::ServeEngine::finish),
     })
 }

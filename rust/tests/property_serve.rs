@@ -1,0 +1,301 @@
+//! Serving-mode properties (docs/SERVING.md).
+//!
+//! The serve engine's per-window fate sequence — offered / admitted /
+//! shed / enqueued / drained — is a pure function of `(serve seed,
+//! window index)` and the deterministic queue model; it never reads
+//! driver time or driver RNG streams.  So unlike θ parity (which needs
+//! deterministic timing), the serve sequence must be **bit-identical
+//! across drivers** whenever both complete the same number of
+//! iterations, and `ServeStats::seq_digest` is the witness.
+//!
+//! The [`ThetaCell`] half checks the snapshot contract under real
+//! contention: readers are never torn, never lag a completed publish,
+//! and a held snapshot survives later publishes untouched.
+
+use hybriditer::cluster::ClusterSpec;
+use hybriditer::coordinator::{LossForm, RunConfig, RunReport, SyncMode};
+use hybriditer::data::{KrrProblem, KrrProblemSpec};
+use hybriditer::optim::OptimizerKind;
+use hybriditer::prelude::{AdmissionPolicy, Driver, Runner, ServeSpec};
+use hybriditer::serve::{Burst, ThetaCell};
+use hybriditer::trace::JournalSink;
+use hybriditer::worker::NativeKrrFactory;
+
+fn problem(machines: usize) -> KrrProblem {
+    let spec = KrrProblemSpec {
+        config: "serve-prop".into(),
+        d: 4,
+        l: 16,
+        zeta: 64,
+        machines,
+        noise: 0.05,
+        lambda: 0.01,
+        bandwidth: 1.0,
+        eval_rows: 64,
+        seed: 17,
+    };
+    KrrProblem::generate(&spec).unwrap()
+}
+
+fn base_cfg(p: &KrrProblem, mode: SyncMode, iters: u64) -> RunConfig {
+    RunConfig {
+        mode,
+        optimizer: OptimizerKind::sgd(0.8),
+        loss_form: LossForm::krr(p.spec.lambda),
+        eval_every: 0,
+        record_every: 1,
+        ..RunConfig::default()
+    }
+    .with_iters(iters)
+}
+
+/// A spec that exercises the whole arrival model: diurnal swing, a
+/// scripted burst, hot-key skew, and SLO-aware admission.
+fn busy_spec(admission: AdmissionPolicy) -> ServeSpec {
+    ServeSpec {
+        arrival_rate: 2_500.0,
+        admission,
+        diurnal_amplitude: 0.5,
+        diurnal_period_s: 0.2,
+        bursts: vec![Burst { start_s: 0.05, end_s: 0.15, factor: 4.0 }],
+        ..ServeSpec::default()
+    }
+}
+
+fn run_serving(
+    p: &KrrProblem,
+    cluster: &ClusterSpec,
+    cfg: &RunConfig,
+    spec: &ServeSpec,
+    driver: Driver,
+) -> RunReport {
+    match driver {
+        Driver::Virtual => {
+            let mut pool = p.native_pool();
+            Runner::new(cluster, cfg)
+                .driver(Driver::Virtual)
+                .pool(&mut pool)
+                .serve(spec.clone())
+                .run()
+                .unwrap()
+        }
+        Driver::Threaded => {
+            let factory = NativeKrrFactory::for_problem(p);
+            Runner::new(cluster, cfg)
+                .driver(Driver::Threaded)
+                .factory(&factory)
+                .serve(spec.clone())
+                .run()
+                .unwrap()
+        }
+    }
+}
+
+#[test]
+fn serve_sequence_bit_identical_across_drivers_sync() {
+    // Hybrid γ = 3 of 4 with a chronic straggler: every iteration closes
+    // a barrier in both drivers, so both step the same 40 serve windows
+    // — and the entire ServeStats must agree field for field, digest
+    // included, even though the two drivers run on different clocks.
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 12.0)],
+        seed: 9,
+        ..ClusterSpec::default()
+    };
+    let cfg = base_cfg(&p, SyncMode::Hybrid { gamma: 3 }, 40);
+    let spec = busy_spec(AdmissionPolicy::Shed);
+
+    let virt = run_serving(&p, &cluster, &cfg, &spec, Driver::Virtual);
+    let real = run_serving(&p, &cluster, &cfg, &spec, Driver::Threaded);
+
+    let vs = virt.serve.expect("virtual serving run kept no ServeStats");
+    let rs = real.serve.expect("threaded serving run kept no ServeStats");
+    assert_eq!(vs.windows, 40);
+    assert!(vs.offered > 0, "arrival process generated nothing");
+    assert!(vs.shed > 0, "burst at 4x base rate never tripped admission");
+    assert_eq!(vs, rs, "serve fate sequence diverged across drivers");
+}
+
+#[test]
+fn serve_sequence_bit_identical_across_drivers_async() {
+    // Async mode steps the serve clock every M-th applied update, keyed
+    // on the update count — not on which worker's gradient landed — so
+    // the sequence survives the threaded driver's arbitrary interleaving.
+    let m = 2;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0)],
+        seed: 11,
+        ..ClusterSpec::default()
+    };
+    let cfg = base_cfg(&p, SyncMode::Async { damping: 0.5 }, 24);
+    let spec = busy_spec(AdmissionPolicy::Queue);
+
+    let virt = run_serving(&p, &cluster, &cfg, &spec, Driver::Virtual);
+    let real = run_serving(&p, &cluster, &cfg, &spec, Driver::Threaded);
+
+    let vs = virt.serve.expect("virtual async serving run kept no ServeStats");
+    let rs = real.serve.expect("threaded async serving run kept no ServeStats");
+    // 24 applied updates over 2 workers = 12 completed serve windows.
+    assert_eq!(vs.windows, 12);
+    assert!(vs.offered > 0);
+    assert_eq!(vs, rs, "async serve fate sequence diverged across drivers");
+}
+
+#[test]
+fn serve_digest_pure_in_seed_and_schedule() {
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec { workers: m, ..ClusterSpec::default() };
+    let cfg = base_cfg(&p, SyncMode::Bsp, 30);
+    let spec = busy_spec(AdmissionPolicy::Shed);
+
+    // Same (seed, schedule) twice → the same digest, bit for bit.
+    let a = run_serving(&p, &cluster, &cfg, &spec, Driver::Virtual).serve.unwrap();
+    let b = run_serving(&p, &cluster, &cfg, &spec, Driver::Virtual).serve.unwrap();
+    assert_eq!(a, b, "serve engine is not replay-deterministic");
+
+    // A different serve seed → a different arrival realization.
+    let reseeded = ServeSpec { seed: spec.seed + 1, ..spec.clone() };
+    let c = run_serving(&p, &cluster, &cfg, &reseeded, Driver::Virtual).serve.unwrap();
+    assert_ne!(a.seq_digest, c.seq_digest, "digest ignored the serve seed");
+
+    // A different burst schedule → a different offered-load sequence.
+    let rescheduled = ServeSpec { bursts: Vec::new(), ..spec };
+    let d = run_serving(&p, &cluster, &cfg, &rescheduled, Driver::Virtual).serve.unwrap();
+    assert_ne!(a.seq_digest, d.seq_digest, "digest ignored the burst schedule");
+    assert!(a.offered > d.offered, "bursts did not raise offered load");
+}
+
+#[test]
+fn serving_is_inert_when_absent_and_journaled_when_present() {
+    // Without a spec, a traced Runner run must write the byte-identical
+    // journal (and θ) the legacy traced entry point writes: the serving
+    // hook compiles to a skipped `if let` on None.  With a spec, the
+    // same run additionally journals serve_window/theta_publish events.
+    let m = 4;
+    let p = problem(m);
+    let cluster = ClusterSpec {
+        workers: m,
+        base_compute: 0.005,
+        slow_nodes: vec![(1, 2.0), (2, 3.0), (3, 4.0)],
+        seed: 5,
+        ..ClusterSpec::default()
+    };
+    let cfg = base_cfg(&p, SyncMode::Hybrid { gamma: m }, 14);
+
+    let mut pool = p.native_pool();
+    let mut legacy_sink = JournalSink::new();
+    let legacy = hybriditer::sim::run_virtual_traced(
+        &mut pool,
+        &cluster,
+        &cfg,
+        &hybriditer::sim::NoEval,
+        &mut legacy_sink,
+    )
+    .unwrap();
+
+    let mut pool = p.native_pool();
+    let mut runner_sink = JournalSink::new();
+    let plain = Runner::new(&cluster, &cfg)
+        .driver(Driver::Virtual)
+        .pool(&mut pool)
+        .trace(&mut runner_sink)
+        .run()
+        .unwrap();
+    assert!(plain.serve.is_none());
+    assert_eq!(legacy.theta, plain.theta, "Runner wrapper moved θ bits");
+    assert_eq!(
+        legacy_sink.jsonl_normalized(),
+        runner_sink.jsonl_normalized(),
+        "Runner wrapper changed the journal"
+    );
+
+    let mut pool = p.native_pool();
+    let mut serve_sink = JournalSink::new();
+    let served = Runner::new(&cluster, &cfg)
+        .driver(Driver::Virtual)
+        .pool(&mut pool)
+        .trace(&mut serve_sink)
+        .serve(busy_spec(AdmissionPolicy::Shed))
+        .run()
+        .unwrap();
+    assert_eq!(legacy.theta, served.theta, "serving perturbed training θ");
+    let journal = serve_sink.jsonl_normalized();
+    assert!(
+        journal.contains("\"event\":\"serve_window\""),
+        "serving run journaled no serve_window events"
+    );
+    assert!(
+        journal.contains("\"event\":\"theta_publish\""),
+        "serving run journaled no theta_publish events"
+    );
+}
+
+#[test]
+fn theta_cell_readers_never_torn_and_never_lag_a_publish() {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    let dim = 256;
+    let cell = Arc::new(ThetaCell::new(dim));
+    // Epoch floor: stored *after* each publish completes, so any read
+    // that starts later must observe at least this epoch.
+    let published = Arc::new(AtomicU64::new(0));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let cell = Arc::clone(&cell);
+            let published = Arc::clone(&published);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                let mut reads = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let floor = published.load(Ordering::Acquire);
+                    let (epoch, snap) = cell.read();
+                    // Never torn: the writer fills every slot with the
+                    // epoch tag, so a mixed-epoch view is a torn read.
+                    assert!(
+                        snap.iter().all(|&x| x == epoch as f32),
+                        "torn read at epoch {epoch}"
+                    );
+                    assert!(epoch >= last, "epoch went backwards: {last} -> {epoch}");
+                    assert!(
+                        epoch >= floor,
+                        "read returned epoch {epoch} after publish {floor} completed"
+                    );
+                    last = epoch;
+                    reads += 1;
+                }
+                reads
+            })
+        })
+        .collect();
+
+    // A held snapshot must stay frozen while later publishes land in
+    // the other slot (and in a fresh allocation once both are pinned).
+    let (held_epoch, held) = cell.read();
+    for epoch in 1..=2_000u64 {
+        cell.publish(&vec![epoch as f32; dim], epoch);
+        published.store(epoch, Ordering::Release);
+    }
+    assert!(
+        held.iter().all(|&x| x == held_epoch as f32),
+        "held snapshot mutated under later publishes"
+    );
+
+    done.store(true, Ordering::Release);
+    for r in readers {
+        let reads = r.join().expect("reader panicked — contract violated");
+        assert!(reads > 0, "reader never completed a read");
+    }
+    assert_eq!(cell.epoch(), 2_000);
+}

@@ -38,6 +38,8 @@ KNOWN_EVENTS = {
     "recovery_done",
     "agg_fold",
     "forward",
+    "serve_window",
+    "theta_publish",
 }
 
 
